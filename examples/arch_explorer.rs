@@ -1,0 +1,63 @@
+//! Architecture design-space explorer (paper Sec. IV-B).
+//!
+//! Sweeps C_mem, sensor resolution and event rate through the circuit and
+//! architecture models; prints the power/area/delay frontier and where the
+//! paper's design point (20 fF, QVGA, 100 Meps) sits.
+//! Run: `cargo run --release --example arch_explorer`
+
+use tsisc::arch::arch3d::Workload;
+use tsisc::arch::{arch2d, arch3d, ArchReport, ArrayGeometry};
+use tsisc::circuit::cell::{CellSim, LeakageMacro, V_FLOOR};
+use tsisc::events::Resolution;
+
+fn main() {
+    // --- C_mem sweep: memory window vs area ---------------------------
+    println!("C_mem sweep (LL switch):");
+    println!("{:>8} {:>14} {:>12} {:>10}", "C (fF)", "window (ms)", "cell (µm²)", ">=24 ms");
+    let leak = LeakageMacro::ll_calibrated();
+    for c_ff in [5.0, 10.0, 15.0, 20.0, 30.0, 40.0] {
+        let w = CellSim::new(c_ff * 1e-15, leak).memory_window(V_FLOOR, 0.5);
+        // MOMCAP density fixes the area/capacitance trade (Fig. 4f).
+        let area = c_ff * 1e-15 / tsisc::circuit::params::MOMCAP_DENSITY_F_PER_UM2;
+        println!(
+            "{:>8.0} {:>14.1} {:>12.1} {:>10}",
+            c_ff,
+            w * 1e3,
+            area,
+            if w >= 24e-3 { "yes" } else { "no" }
+        );
+    }
+
+    // --- resolution sweep: 2D/3D ratios hold across geometries ---------
+    println!("\nresolution sweep (100 Meps, 20 fF):");
+    println!(
+        "{:>12} {:>12} {:>12} {:>12}",
+        "resolution", "P ratio", "A ratio", "D ratio"
+    );
+    for (name, res) in [
+        ("128x128", Resolution::new(128, 128)),
+        ("QVGA", Resolution::QVGA),
+        ("DAVIS346", Resolution::DAVIS346),
+        ("VGA", Resolution::new(640, 480)),
+    ] {
+        let g = ArrayGeometry::new(res);
+        let w = Workload::default();
+        let (p, a, d) = ArchReport::ratios(&arch2d::report(&g, &w), &arch3d::report(&g, &w));
+        println!("{name:>12} {p:>11.1}x {a:>11.2}x {d:>11.2}x");
+    }
+
+    // --- event-rate sweep: where static power takes over ---------------
+    println!("\nevent-rate sweep (QVGA, 3D):");
+    println!("{:>12} {:>14} {:>16}", "rate (Meps)", "power (µW)", "static share (%)");
+    let g = ArrayGeometry::new(Resolution::QVGA);
+    for rate in [1.0, 10.0, 50.0, 100.0, 300.0] {
+        let w = Workload { event_rate: rate * 1e6, frame_rate: 20.0 };
+        let r = arch3d::report(&g, &w);
+        println!(
+            "{rate:>12.0} {:>14.3} {:>16.2}",
+            r.power.total() * 1e6,
+            r.power.share_percent("isc-array static")
+        );
+    }
+    println!("\npaper design point: 20 fF, QVGA, 100 Meps -> 69x / 1.9x / 2.2x vs 2D");
+}

@@ -1,0 +1,50 @@
+//! Quickstart: the smallest possible tour of the 3DS-ISC API.
+//!
+//! Generates a moving-scene event stream, feeds it through the simulated
+//! analog ISC array, and prints time-surface statistics plus an ASCII
+//! rendering. Run: `cargo run --release --example quickstart`
+
+use tsisc::events::scene::BlobScene;
+use tsisc::events::v2e::{convert, DvsParams};
+use tsisc::events::Resolution;
+use tsisc::isc::{IscArray, IscConfig};
+
+fn main() {
+    // 1. A synthetic scene: two wandering blobs over a 64x64 sensor.
+    let res = Resolution::new(64, 64);
+    let scene = BlobScene::new(64, 64, 2, 1.0, 42);
+
+    // 2. DVS conversion: temporal-contrast events (v2e-style).
+    let events = convert(&scene, res, DvsParams::default(), 1.0);
+    println!("generated {} events over 1 s", events.len());
+
+    // 3. The ISC analog array: one 6T-1C eDRAM cell per pixel, with
+    //    Monte-Carlo cell-to-cell variability (paper Sec. IV-A).
+    let mut array = IscArray::new(res, IscConfig::default());
+    for le in &events {
+        array.write(&le.ev); // per-pixel Cu-Cu write: O(1), no half-select
+    }
+
+    // 4. Read the self-normalized time surface at the end of the stream.
+    let t_end = 1_000_000;
+    let frame = array.frame_merged(t_end);
+    let bright = frame.as_slice().iter().filter(|&&v| v > 0.5).count();
+    let written = frame.as_slice().iter().filter(|&&v| v > 0.0).count();
+    println!(
+        "time surface: {written}/{} pixels written, {bright} recent (V > 0.5*Vdd)",
+        res.pixels()
+    );
+
+    // 5. ASCII view (bright = recent events).
+    let ramp = b" .:-=+*#%@";
+    for y in (0..64).step_by(2) {
+        let row: String = (0..64)
+            .map(|x| {
+                let v = *frame.get(x, y);
+                ramp[((v * (ramp.len() - 1) as f64) as usize).min(ramp.len() - 1)] as char
+            })
+            .collect();
+        println!("{row}");
+    }
+    println!("done — see examples/denoise_demo.rs and examples/classify_e2e.rs next");
+}

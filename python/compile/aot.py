@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas graphs → HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (written to --out-dir, default ../artifacts):
+
+  ts_update.hlo.txt       (v1,v2,mask,a1,a2,tau1,tau2,dt) -> (v1',v2')   [QVGA 240x320]
+  ts_frame.hlo.txt        (v1,v2) -> (frame,)                            [QVGA]
+  stcf_count.hlo.txt      (v,v_tw) -> (counts,)  r=3                     [QVGA]
+  classifier_fwd.hlo.txt  (p0..p25, x[B,1,32,32]) -> (logits,)           [B=64]
+  classifier_train.hlo.txt(p0..p25, m0..m25, x, y[B] i32, lr) -> (p'.., m'.., loss)
+  recon_fwd.hlo.txt       (p0..p13, x[B,1,64,64]) -> (yhat,)             [B=8]
+  recon_train.hlo.txt     (p.., m.., x, y, lr) -> (p'.., m'.., loss)
+  classifier_params.npz / recon_params.npz   initial params (p000, p001, ...)
+  manifest.txt            shapes + argument order for every artifact
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+QVGA = (240, 320)
+
+
+def to_hlo_text(jitted, *example_args) -> str:
+    """Lower a jitted function and convert StableHLO -> XLA HLO text."""
+    lowered = jitted.lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def pred(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bool_)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = []
+
+    def emit(name: str, jitted, *args):
+        text = to_hlo_text(jitted, *args)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = [f"{a.dtype}{list(a.shape)}" for a in args]
+        manifest.append(f"{name}: args={shapes}")
+        print(f"  wrote {name} ({len(text) / 1024:.0f} KiB)")
+
+    # --- time-surface pipeline (QVGA) -----------------------------------
+    plane = f32(QVGA)
+    emit(
+        "ts_update.hlo.txt",
+        model.ts_update_entry,
+        plane, plane, pred(QVGA), plane, plane, plane, plane, f32(()),
+    )
+    emit("ts_frame.hlo.txt", model.ts_frame_entry, plane, plane)
+    emit("stcf_count.hlo.txt", model.stcf_count_entry, plane, f32(()))
+
+    # --- classifier ------------------------------------------------------
+    cls_shapes = model.classifier_param_shapes()
+    cls_params = [f32(s) for s in cls_shapes]
+    x_cls = f32((model.CLS_BATCH, 1, model.CLS_INPUT, model.CLS_INPUT))
+    emit("classifier_fwd.hlo.txt", model.classifier_fwd_entry, *cls_params, x_cls)
+    emit(
+        "classifier_train.hlo.txt",
+        model.classifier_train_entry,
+        *cls_params, *cls_params, x_cls, i32((model.CLS_BATCH,)), f32(()),
+    )
+
+    # --- reconstruction --------------------------------------------------
+    rec_shapes = model.recon_param_shapes()
+    rec_params = [f32(s) for s in rec_shapes]
+    x_rec = f32((model.REC_BATCH, 1, model.REC_INPUT, model.REC_INPUT))
+    emit("recon_fwd.hlo.txt", model.recon_fwd_entry, *rec_params, x_rec)
+    emit(
+        "recon_train.hlo.txt",
+        model.recon_train_entry,
+        *rec_params, *rec_params, x_rec, x_rec, f32(()),
+    )
+
+    # --- initial parameters ----------------------------------------------
+    for tag, init in (("classifier", model.classifier_init),
+                      ("recon", model.recon_init)):
+        params = init(seed=0)
+        npz = {f"p{i:03d}": np.asarray(p) for i, p in enumerate(params)}
+        path = os.path.join(out_dir, f"{tag}_params.npz")
+        np.savez(path, **npz)
+        manifest.append(f"{tag}_params.npz: {len(params)} arrays")
+        print(f"  wrote {tag}_params.npz ({len(params)} arrays)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return {"artifacts": manifest}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default: <repo>/artifacts)")
+    # Back-compat with the scaffold Makefile's `--out path/to/model.hlo.txt`.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if out_dir is None and args.out is not None:
+        out_dir = os.path.dirname(os.path.abspath(args.out))
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    print(f"lowering artifacts to {out_dir}")
+    build_artifacts(out_dir)
+    # Marker file used by `make -q artifacts` freshness checks.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

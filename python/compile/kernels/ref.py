@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact jnp twin here; pytest
+(`python/tests/test_kernels.py`) sweeps shapes/dtypes with hypothesis and
+asserts allclose between the two. The oracles are also what the L2 model
+uses under `use_pallas=False` for A/B fusion testing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ts_update_ref(v1, v2, mask, a1, a2, tau1, tau2, dt):
+    """Double-exponential time-surface state update.
+
+    The analog cell's double-exp decay is memoryless in the 2-component
+    state (v1, v2): each component decays with its own time constant and an
+    event write resets the components to their fitted amplitudes (A1, A2).
+    The observable surface is v1 + v2.
+
+    Args:
+      v1, v2: (H, W) f32 component planes.
+      mask:   (H, W) bool - pixels written by events in this microbatch.
+      a1, a2: (H, W) f32 per-pixel fitted amplitudes (mismatch map).
+      tau1, tau2: (H, W) f32 per-pixel time constants, seconds.
+      dt: scalar f32 - elapsed time since the previous update, seconds.
+
+    Returns:
+      (v1', v2') updated planes.
+    """
+    d1 = jnp.exp(-dt / tau1)
+    d2 = jnp.exp(-dt / tau2)
+    v1n = jnp.where(mask, a1, v1 * d1)
+    v2n = jnp.where(mask, a2, v2 * d2)
+    return v1n, v2n
+
+
+def patch_count_ref(v, v_tw, radius):
+    """STCF support count: per pixel, the number of cells in the
+    (2r+1)^2 patch (center excluded) whose surface value is >= v_tw.
+
+    Args:
+      v: (H, W) f32 surface (v1 + v2).
+      v_tw: scalar comparator threshold (volts).
+      radius: static int patch radius.
+
+    Returns:
+      (H, W) f32 counts.
+    """
+    hot = (v >= v_tw).astype(jnp.float32)
+    padded = jnp.pad(hot, radius, mode="constant")
+    h, w = v.shape
+    total = jnp.zeros_like(v)
+    for dy in range(2 * radius + 1):
+        for dx in range(2 * radius + 1):
+            if dy == radius and dx == radius:
+                continue
+            total = total + padded[dy : dy + h, dx : dx + w]
+    return total
+
+
+def ts_frame_ref(v1, v2, vdd):
+    """Readout: normalized [0,1] time-surface frame from component planes."""
+    return jnp.clip((v1 + v2) / vdd, 0.0, 1.0)

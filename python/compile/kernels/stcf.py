@@ -1,0 +1,48 @@
+"""Pallas kernel for the STCF support count (L1).
+
+Stencil mapping: the (2r+1)^2 patch count is a classic halo pattern. The L2
+wrapper pads the comparator bitmap by `radius`; the kernel receives a
+(bh + 2r, bw + 2r) haloed tile and accumulates the (2r+1)^2 static shifts
+on the VPU. On real TPU the halo tile sits in VMEM and the shifts are
+cheap lane rotations; on CPU we run interpret=True.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _patch_count_kernel(hot_ref, o_ref, *, radius, bh, bw):
+    """Accumulate the (2r+1)^2 - 1 shifted views of the haloed hot map."""
+    hot = hot_ref[...]  # (bh + 2r, bw + 2r)
+    acc = jnp.zeros((bh, bw), jnp.float32)
+    for dy in range(2 * radius + 1):
+        for dx in range(2 * radius + 1):
+            if dy == radius and dx == radius:
+                continue
+            acc = acc + jax.lax.dynamic_slice(hot, (dy, dx), (bh, bw))
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("radius",))
+def patch_count(v, v_tw, radius=3):
+    """Pallas STCF support count; see `ref.patch_count_ref`.
+
+    Single whole-array block with an explicit halo pad: at QVGA the haloed
+    bitmap is (246, 326) f32 ≈ 314 KiB — VMEM-resident. For larger arrays
+    the natural extension is a row-block grid with overlapping halo
+    BlockSpecs; evaluation resolutions here do not need it.
+    """
+    h, w = v.shape
+    hot = (v >= v_tw).astype(jnp.float32)
+    padded = jnp.pad(hot, radius, mode="constant")
+    kernel = functools.partial(_patch_count_kernel, radius=radius, bh=h, bw=w)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(padded)

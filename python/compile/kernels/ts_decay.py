@@ -1,0 +1,87 @@
+"""Pallas kernels for the time-surface state update (L1).
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): the eDRAM plane maps to
+VMEM tiles — a (bh, bw) tile *is* an eDRAM subarray resident in VMEM. The
+decay is a pure VPU elementwise pass over the tile; the event write is a
+masked select, which is the faithful analog of the paper's per-pixel Cu-Cu
+write (no row/column addressing, hence no half-select). All kernels run
+with interpret=True on CPU (real-TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot execute; see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape: 256×256 f32 = 256 KiB per plane; with 8 operand planes the
+# working set is ~2 MiB — comfortably VMEM-resident on any TPU generation.
+BLOCK_H = 256
+BLOCK_W = 256
+
+
+def _ts_update_kernel(v1_ref, v2_ref, mask_ref, a1_ref, a2_ref, d1_ref, d2_ref,
+                      o1_ref, o2_ref):
+    """Elementwise: o_i = where(mask, A_i, v_i * d_i) for both components."""
+    mask = mask_ref[...]
+    o1_ref[...] = jnp.where(mask, a1_ref[...], v1_ref[...] * d1_ref[...])
+    o2_ref[...] = jnp.where(mask, a2_ref[...], v2_ref[...] * d2_ref[...])
+
+
+def _grid_spec(shape):
+    h, w = shape
+    bh, bw = min(BLOCK_H, h), min(BLOCK_W, w)
+    if h % bh or w % bw:
+        # Fall back to a single whole-array block for ragged sizes: at the
+        # QVGA scales used here that is still well within VMEM.
+        bh, bw = h, w
+    grid = (h // bh, w // bw)
+    spec = pl.BlockSpec((bh, bw), lambda i, j: (i, j))
+    return grid, spec
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ts_update(v1, v2, mask, a1, a2, tau1, tau2, dt):
+    """Pallas time-surface update; see `ref.ts_update_ref` for semantics.
+
+    The exp(-dt/τ) factors are computed outside the kernel (they fuse into
+    the surrounding HLO); the kernel itself is the masked multiply-select
+    over VMEM tiles.
+    """
+    d1 = jnp.exp(-dt / tau1).astype(jnp.float32)
+    d2 = jnp.exp(-dt / tau2).astype(jnp.float32)
+    grid, spec = _grid_spec(v1.shape)
+    out_shape = [
+        jax.ShapeDtypeStruct(v1.shape, jnp.float32),
+        jax.ShapeDtypeStruct(v2.shape, jnp.float32),
+    ]
+    return pl.pallas_call(
+        _ts_update_kernel,
+        grid=grid,
+        in_specs=[spec] * 7,
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,
+    )(v1, v2, mask, a1, a2, d1, d2)
+
+
+def _frame_kernel(v1_ref, v2_ref, o_ref, *, inv_vdd):
+    """Readout: normalized [0,1] frame from the component planes."""
+    o_ref[...] = jnp.clip((v1_ref[...] + v2_ref[...]) * inv_vdd, 0.0, 1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("vdd",))
+def ts_frame(v1, v2, vdd=1.2):
+    """Pallas frame readout; see `ref.ts_frame_ref`."""
+    grid, spec = _grid_spec(v1.shape)
+    return pl.pallas_call(
+        functools.partial(_frame_kernel, inv_vdd=1.0 / vdd),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(v1.shape, jnp.float32),
+        interpret=True,
+    )(v1, v2)

@@ -1,0 +1,303 @@
+"""L2: JAX compute graphs — the time-surface pipeline (calling the L1
+Pallas kernels), an inception-lite CNN classifier (the GoogLeNet stand-in
+of Sec. IV-D) and a UNet-lite reconstruction model (Sec. IV-E), each with
+full fwd/bwd train steps.
+
+Everything here is build-time only: `aot.py` lowers these functions once to
+HLO text and the Rust coordinator executes the artifacts via PJRT. Params
+travel as *ordered flat lists* of arrays; the order is defined by the
+`*_param_shapes()` functions and mirrored on the Rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import stcf as stcf_kernel
+from compile.kernels import ts_decay as ts_kernel
+from compile.kernels import ref
+
+VDD = 1.2
+
+# ---------------------------------------------------------------------
+# Time-surface pipeline (L1 kernels composed at L2)
+# ---------------------------------------------------------------------
+
+
+def ts_update(v1, v2, mask, a1, a2, tau1, tau2, dt, use_pallas=True):
+    """One microbatch step of the analog-plane state (see kernels/ref.py)."""
+    if use_pallas:
+        return ts_kernel.ts_update(v1, v2, mask, a1, a2, tau1, tau2, dt)
+    return ref.ts_update_ref(v1, v2, mask, a1, a2, tau1, tau2, dt)
+
+
+def ts_frame(v1, v2, use_pallas=True):
+    """Normalized [0,1] readout frame."""
+    if use_pallas:
+        return ts_kernel.ts_frame(v1, v2, VDD)
+    return ref.ts_frame_ref(v1, v2, VDD)
+
+
+def stcf_count(v, v_tw, radius=3, use_pallas=True):
+    """STCF support-count map over the surface."""
+    if use_pallas:
+        return stcf_kernel.patch_count(v, v_tw, radius)
+    return ref.patch_count_ref(v, v_tw, radius)
+
+
+# ---------------------------------------------------------------------
+# Shared NN building blocks (NCHW)
+# ---------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _maxpool(x, k=2):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, k, k), "VALID"
+    )
+
+
+def _upsample2(x):
+    """Nearest-neighbour 2x upsample."""
+    n, c, h, w = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :, None], (n, c, h, 2, w, 2))
+    return x.reshape(n, c, 2 * h, 2 * w)
+
+
+def _relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def _he(key, shape):
+    fan_in = shape[1] * shape[2] * shape[3] if len(shape) == 4 else shape[0]
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+# ---------------------------------------------------------------------
+# Inception-lite classifier (GoogLeNet stand-in), input (B, 1, 32, 32)
+# ---------------------------------------------------------------------
+
+N_CLASSES = 10
+CLS_INPUT = 32
+
+
+def _inception_shapes(cin, c1, c3r, c3, c5r, c5, cp):
+    """Parameter shapes of one inception block (conv W + bias pairs)."""
+    return [
+        ((c1, cin, 1, 1), (c1,)),          # branch 1: 1x1
+        ((c3r, cin, 1, 1), (c3r,)),        # branch 2: 1x1 reduce
+        ((c3, c3r, 3, 3), (c3,)),          #           3x3
+        ((c5r, cin, 1, 1), (c5r,)),        # branch 3: 1x1 reduce
+        ((c5, c5r, 5, 5), (c5,)),          #           5x5
+        ((cp, cin, 1, 1), (cp,)),          # branch 4: pool proj
+    ]
+
+
+# (stem) + inception1(16 -> 40) + inception2(40 -> 64) + head
+_CLS_STRUCTURE = (
+    [((16, 1, 3, 3), (16,))]
+    + _inception_shapes(16, 8, 8, 16, 4, 8, 8)     # -> 8+16+8+8 = 40 ch
+    + _inception_shapes(40, 16, 8, 24, 6, 12, 12)  # -> 16+24+12+12 = 64 ch
+    + [((N_CLASSES, 64), (N_CLASSES,))]            # dense head
+)
+
+
+def classifier_param_shapes():
+    """Ordered flat list of parameter shapes (W, b interleaved)."""
+    out = []
+    for w, b in _CLS_STRUCTURE:
+        out.append(w)
+        out.append(b)
+    return out
+
+
+def classifier_init(seed=0):
+    """Ordered flat list of initialized parameters."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in classifier_param_shapes():
+        if len(shape) >= 2:
+            key, sub = jax.random.split(key)
+            params.append(_he(sub, shape))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def _inception_apply(x, p, i):
+    """Apply one inception block; returns (output, next param index)."""
+    b1 = _relu(_conv(x, p[i], p[i + 1]))
+    b2 = _relu(_conv(x, p[i + 2], p[i + 3]))
+    b2 = _relu(_conv(b2, p[i + 4], p[i + 5]))
+    b3 = _relu(_conv(x, p[i + 6], p[i + 7]))
+    b3 = _relu(_conv(b3, p[i + 8], p[i + 9]))
+    pooled = jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 1, 3, 3), (1, 1, 1, 1), "SAME"
+    )
+    b4 = _relu(_conv(pooled, p[i + 10], p[i + 11]))
+    return jnp.concatenate([b1, b2, b3, b4], axis=1), i + 12
+
+
+def classifier_fwd(params, x):
+    """Logits for a batch of TS frames x: (B, 1, 32, 32) -> (B, 10)."""
+    p = list(params)
+    h = _relu(_conv(x, p[0], p[1]))
+    h = _maxpool(h)                      # 16x16
+    h, i = _inception_apply(h, p, 2)
+    h = _maxpool(h)                      # 8x8
+    h, i = _inception_apply(h, p, i)
+    gap = jnp.mean(h, axis=(2, 3))       # (B, 64)
+    return gap @ p[i].T + p[i + 1]
+
+
+def _softmax_ce(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def classifier_loss(params, x, y):
+    return _softmax_ce(classifier_fwd(params, x), y)
+
+
+def sgd_momentum_step(loss_fn, params, moms, lr, mu=0.9):
+    """Generic SGD+momentum step over flat param lists."""
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_moms = [mu * m + g for m, g in zip(moms, grads)]
+    new_params = [p - lr * m for p, m in zip(params, new_moms)]
+    return new_params, new_moms, loss
+
+
+def classifier_train_step(params, moms, x, y, lr):
+    """(params, moms, batch, labels, lr) -> (params', moms', loss)."""
+    return sgd_momentum_step(lambda p: classifier_loss(p, x, y), params, moms, lr)
+
+
+# ---------------------------------------------------------------------
+# UNet-lite reconstruction model, input (B, 1, 64, 64)
+# ---------------------------------------------------------------------
+
+REC_INPUT = 64
+
+_REC_STRUCTURE = [
+    ((8, 1, 3, 3), (8,)),     # e1a
+    ((8, 8, 3, 3), (8,)),     # e1b
+    ((16, 8, 3, 3), (16,)),   # e2
+    ((32, 16, 3, 3), (32,)),  # bottleneck
+    ((16, 48, 3, 3), (16,)),  # d2 (cat: up(32) + e2(16))
+    ((8, 24, 3, 3), (8,)),    # d1 (cat: up(16) + e1(8))
+    ((1, 8, 1, 1), (1,)),     # head
+]
+
+
+def recon_param_shapes():
+    out = []
+    for w, b in _REC_STRUCTURE:
+        out.append(w)
+        out.append(b)
+    return out
+
+
+def recon_init(seed=0):
+    key = jax.random.PRNGKey(seed + 1000)
+    params = []
+    for shape in recon_param_shapes():
+        if len(shape) >= 2:
+            key, sub = jax.random.split(key)
+            params.append(_he(sub, shape))
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def recon_fwd(params, x):
+    """Reconstructed frame for TS input x: (B, 1, 64, 64) -> same shape."""
+    p = list(params)
+    e1 = _relu(_conv(x, p[0], p[1]))
+    e1 = _relu(_conv(e1, p[2], p[3]))
+    h = _maxpool(e1)                       # 32
+    e2 = _relu(_conv(h, p[4], p[5]))
+    h = _maxpool(e2)                       # 16
+    h = _relu(_conv(h, p[6], p[7]))        # bottleneck 32ch
+    h = _upsample2(h)                      # 32
+    h = jnp.concatenate([h, e2], axis=1)   # 48
+    h = _relu(_conv(h, p[8], p[9]))
+    h = _upsample2(h)                      # 64
+    h = jnp.concatenate([h, e1], axis=1)   # 24
+    h = _relu(_conv(h, p[10], p[11]))
+    return jax.nn.sigmoid(_conv(h, p[12], p[13]))
+
+
+def recon_loss(params, x, y):
+    return jnp.mean((recon_fwd(params, x) - y) ** 2)
+
+
+def recon_train_step(params, moms, x, y, lr):
+    return sgd_momentum_step(lambda p: recon_loss(p, x, y), params, moms, lr)
+
+
+# ---------------------------------------------------------------------
+# Jitted entry points for AOT lowering (fixed shapes)
+# ---------------------------------------------------------------------
+
+CLS_BATCH = 64
+REC_BATCH = 8
+
+
+@jax.jit
+def ts_update_entry(v1, v2, mask, a1, a2, tau1, tau2, dt):
+    return ts_update(v1, v2, mask, a1, a2, tau1, tau2, dt, use_pallas=True)
+
+
+@jax.jit
+def ts_frame_entry(v1, v2):
+    return (ts_frame(v1, v2, use_pallas=True),)
+
+
+@functools.partial(jax.jit, static_argnums=())
+def stcf_count_entry(v, v_tw):
+    return (stcf_count(v, v_tw, radius=3, use_pallas=True),)
+
+
+@jax.jit
+def classifier_fwd_entry(*args):
+    params = list(args[:-1])
+    return (classifier_fwd(params, args[-1]),)
+
+
+@jax.jit
+def classifier_train_entry(*args):
+    n = len(classifier_param_shapes())
+    params = list(args[:n])
+    moms = list(args[n : 2 * n])
+    x, y, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+    new_p, new_m, loss = classifier_train_step(params, moms, x, y, lr)
+    return tuple(new_p) + tuple(new_m) + (loss,)
+
+
+@jax.jit
+def recon_fwd_entry(*args):
+    params = list(args[:-1])
+    return (recon_fwd(params, args[-1]),)
+
+
+@jax.jit
+def recon_train_entry(*args):
+    n = len(recon_param_shapes())
+    params = list(args[:n])
+    moms = list(args[n : 2 * n])
+    x, y, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+    new_p, new_m, loss = recon_train_step(params, moms, x, y, lr)
+    return tuple(new_p) + tuple(new_m) + (loss,)

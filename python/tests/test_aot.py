@@ -1,0 +1,42 @@
+"""AOT emission checks: artifacts lower, parse as HLO text, and carry the
+documented argument counts."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import aot, model
+
+
+def test_build_artifacts_and_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        aot.build_artifacts(d)
+        names = set(os.listdir(d))
+        expected = {
+            "ts_update.hlo.txt", "ts_frame.hlo.txt", "stcf_count.hlo.txt",
+            "classifier_fwd.hlo.txt", "classifier_train.hlo.txt",
+            "recon_fwd.hlo.txt", "recon_train.hlo.txt",
+            "classifier_params.npz", "recon_params.npz", "manifest.txt",
+        }
+        assert expected <= names, expected - names
+        # HLO text sanity: module header and an ENTRY computation.
+        for f in [n for n in expected if n.endswith(".hlo.txt")]:
+            text = open(os.path.join(d, f)).read()
+            assert text.startswith("HloModule"), f
+            assert "ENTRY" in text, f
+        # Param archives round-trip with the documented count and order.
+        cls = np.load(os.path.join(d, "classifier_params.npz"))
+        assert len(cls.files) == len(model.classifier_param_shapes())
+        assert sorted(cls.files) == cls.files  # p000.. ordering is sortable
+        for i, s in enumerate(model.classifier_param_shapes()):
+            assert cls[f"p{i:03d}"].shape == s
+
+
+def test_train_artifact_param_counts():
+    # classifier_train: 2P + 3 inputs, 2P + 1 outputs (documented contract
+    # the Rust runtime relies on).
+    p = len(model.classifier_param_shapes())
+    assert p == 28
+    r = len(model.recon_param_shapes())
+    assert r == 14

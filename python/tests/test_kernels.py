@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes and value ranges; assert_allclose everywhere.
+This is the core correctness signal for the compile path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import stcf as stcf_kernel
+from compile.kernels import ts_decay as ts_kernel
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _planes(rng, h, w):
+    v1 = rng.uniform(0.0, 0.2, (h, w)).astype(np.float32)
+    v2 = rng.uniform(0.0, 1.1, (h, w)).astype(np.float32)
+    mask = rng.uniform(size=(h, w)) < 0.1
+    a1 = rng.uniform(0.10, 0.20, (h, w)).astype(np.float32)
+    a2 = rng.uniform(0.95, 1.10, (h, w)).astype(np.float32)
+    tau1 = rng.uniform(4e-3, 8e-3, (h, w)).astype(np.float32)
+    tau2 = rng.uniform(20e-3, 28e-3, (h, w)).astype(np.float32)
+    return v1, v2, mask, a1, a2, tau1, tau2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(2, 48),
+    w=st.integers(2, 48),
+    dt_ms=st.floats(0.01, 50.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ts_update_matches_ref(h, w, dt_ms, seed):
+    rng = np.random.default_rng(seed)
+    v1, v2, mask, a1, a2, tau1, tau2 = _planes(rng, h, w)
+    dt = np.float32(dt_ms * 1e-3)
+    got1, got2 = ts_kernel.ts_update(v1, v2, mask, a1, a2, tau1, tau2, dt)
+    want1, want2 = ref.ts_update_ref(v1, v2, mask, a1, a2, tau1, tau2, dt)
+    np.testing.assert_allclose(got1, want1, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(got2, want2, rtol=1e-6, atol=1e-7)
+
+
+def test_ts_update_qvga_block_path():
+    # Exercise the tiled (256,256)-block path with a power-of-two friendly
+    # shape and the exact QVGA fallback shape.
+    for (h, w) in [(256, 512), (240, 320)]:
+        rng = np.random.default_rng(7)
+        v1, v2, mask, a1, a2, tau1, tau2 = _planes(rng, h, w)
+        dt = np.float32(1e-3)
+        got1, got2 = ts_kernel.ts_update(v1, v2, mask, a1, a2, tau1, tau2, dt)
+        want1, want2 = ref.ts_update_ref(v1, v2, mask, a1, a2, tau1, tau2, dt)
+        np.testing.assert_allclose(got1, want1, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(got2, want2, rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(8, 40),
+    w=st.integers(8, 40),
+    radius=st.integers(1, 4),
+    v_tw=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_patch_count_matches_ref(h, w, radius, v_tw, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(0.0, 1.2, (h, w)).astype(np.float32)
+    got = stcf_kernel.patch_count(v, np.float32(v_tw), radius)
+    want = ref.patch_count_ref(v, np.float32(v_tw), radius)
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_patch_count_hand_case():
+    # Single hot pixel in the middle: every cell within r gets count 1,
+    # except the hot pixel itself (center excluded).
+    v = np.zeros((9, 9), np.float32)
+    v[4, 4] = 1.0
+    out = np.asarray(stcf_kernel.patch_count(v, np.float32(0.5), 2))
+    assert out[4, 4] == 0.0
+    assert out[3, 4] == 1.0
+    assert out[6, 6] == 1.0
+    assert out[0, 0] == 0.0
+    assert out.sum() == 24.0  # 5x5 patch minus center
+
+
+@settings(max_examples=10, deadline=None)
+@given(h=st.integers(2, 32), w=st.integers(2, 32), seed=st.integers(0, 2**31 - 1))
+def test_ts_frame_matches_ref(h, w, seed):
+    rng = np.random.default_rng(seed)
+    v1 = rng.uniform(0.0, 0.3, (h, w)).astype(np.float32)
+    v2 = rng.uniform(0.0, 1.2, (h, w)).astype(np.float32)
+    got = ts_kernel.ts_frame(v1, v2, 1.2)
+    want = ref.ts_frame_ref(v1, v2, 1.2)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+    assert np.all(np.asarray(got) <= 1.0)
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+def test_ts_update_write_sets_amplitudes():
+    # A masked write must reset to (A1, A2) exactly, regardless of decay.
+    v1 = np.full((4, 4), 0.01, np.float32)
+    v2 = np.full((4, 4), 0.02, np.float32)
+    mask = np.zeros((4, 4), bool); mask[1, 2] = True
+    a1 = np.full((4, 4), 0.153, np.float32)
+    a2 = np.full((4, 4), 1.047, np.float32)
+    tau = np.full((4, 4), 0.02, np.float32)
+    o1, o2 = ts_kernel.ts_update(v1, v2, mask, a1, a2, tau, tau, np.float32(1.0))
+    assert np.isclose(o1[1, 2], 0.153)
+    assert np.isclose(o2[1, 2], 1.047)
+    # Unwritten pixels decayed by e^{-50} ~ 0.
+    assert o1[0, 0] < 1e-8
+
+
+def test_decay_sequence_matches_double_exp():
+    # Stepping the state N times with dt must equal the closed-form
+    # double exponential at N*dt (memorylessness of the 2-component state).
+    h = w = 4
+    a1 = np.full((h, w), 0.153, np.float32)
+    a2 = np.full((h, w), 1.047, np.float32)
+    tau1 = np.full((h, w), 6.14e-3, np.float32)
+    tau2 = np.full((h, w), 23.9e-3, np.float32)
+    mask_on = np.ones((h, w), bool)
+    mask_off = np.zeros((h, w), bool)
+    v1, v2 = ts_kernel.ts_update(a1 * 0, a2 * 0, mask_on, a1, a2, tau1, tau2,
+                                 np.float32(0.0))
+    dt = np.float32(2e-3)
+    for _ in range(10):
+        v1, v2 = ts_kernel.ts_update(v1, v2, mask_off, a1, a2, tau1, tau2, dt)
+    t = 10 * 2e-3
+    expect = 0.153 * np.exp(-t / 6.14e-3) + 1.047 * np.exp(-t / 23.9e-3)
+    np.testing.assert_allclose(np.asarray(v1 + v2), expect, rtol=1e-4)

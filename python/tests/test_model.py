@@ -1,0 +1,99 @@
+"""L2 model checks: shapes, gradient flow, and that a few train steps
+reduce the loss on a tiny synthetic problem."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_classifier_shapes():
+    params = model.classifier_init(seed=0)
+    assert len(params) == len(model.classifier_param_shapes())
+    for p, s in zip(params, model.classifier_param_shapes()):
+        assert p.shape == s
+    x = jnp.zeros((4, 1, 32, 32), jnp.float32)
+    logits = model.classifier_fwd(params, x)
+    assert logits.shape == (4, model.N_CLASSES)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_classifier_learns_tiny_problem():
+    # Two trivially separable "classes": bright left half vs bright right
+    # half. A few SGD steps must reduce CE and reach high train accuracy.
+    rng = np.random.default_rng(0)
+    n = 64
+    x = np.zeros((n, 1, 32, 32), np.float32)
+    y = np.zeros((n,), np.int32)
+    for i in range(n):
+        c = i % 2
+        y[i] = c
+        if c == 0:
+            x[i, 0, :, :16] = 1.0
+        else:
+            x[i, 0, :, 16:] = 1.0
+        x[i] += rng.normal(0, 0.05, (1, 32, 32))
+    params = model.classifier_init(seed=1)
+    moms = [jnp.zeros_like(p) for p in params]
+    loss0 = float(model.classifier_loss(params, x, y))
+    step = jax.jit(model.classifier_train_step)
+    loss = None
+    for _ in range(30):
+        params, moms, loss = step(params, moms, x, y, jnp.float32(0.05))
+    assert float(loss) < loss0 * 0.5, f"loss {loss0} -> {float(loss)}"
+    preds = np.argmax(np.asarray(model.classifier_fwd(params, x)), -1)
+    acc = (preds == y).mean()
+    assert acc > 0.9, f"train acc {acc}"
+
+
+def test_recon_shapes_and_range():
+    params = model.recon_init(seed=0)
+    x = jnp.zeros((2, 1, 64, 64), jnp.float32)
+    yhat = model.recon_fwd(params, x)
+    assert yhat.shape == (2, 1, 64, 64)
+    v = np.asarray(yhat)
+    assert np.all((v >= 0.0) & (v <= 1.0)), "sigmoid output must be in [0,1]"
+
+
+def test_recon_learns_identity_ish():
+    # Reconstruct a smooth target from a correlated input: loss must drop.
+    rng = np.random.default_rng(3)
+    xs, ys = [], []
+    for i in range(8):
+        gx, gy = np.meshgrid(np.arange(64), np.arange(64))
+        img = 0.5 + 0.4 * np.sin(gx / (4.0 + i) + i) * np.cos(gy / 5.0)
+        ys.append(img.astype(np.float32)[None])
+        xs.append((img + rng.normal(0, 0.1, img.shape)).astype(np.float32)[None])
+    x = np.stack(xs); y = np.stack(ys)
+    params = model.recon_init(seed=2)
+    moms = [jnp.zeros_like(p) for p in params]
+    loss0 = float(model.recon_loss(params, x, y))
+    step = jax.jit(model.recon_train_step)
+    loss = None
+    for _ in range(40):
+        params, moms, loss = step(params, moms, x, y, jnp.float32(0.2))
+    assert float(loss) < loss0 * 0.6, f"loss {loss0} -> {float(loss)}"
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_init_is_deterministic(seed):
+    a = model.classifier_init(seed)
+    b = model.classifier_init(seed)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+def test_gradients_nonzero_everywhere():
+    # Every parameter must receive gradient (no dead branches).
+    params = model.classifier_init(seed=4)
+    x = jnp.asarray(np.random.default_rng(1).uniform(0, 1, (8, 1, 32, 32)),
+                    jnp.float32)
+    y = jnp.asarray(np.arange(8) % model.N_CLASSES, jnp.int32)
+    grads = jax.grad(lambda p: model.classifier_loss(p, x, y))(params)
+    nonzero = [float(jnp.abs(g).max()) > 0 for g in grads]
+    assert all(nonzero), f"dead params at {[i for i, z in enumerate(nonzero) if not z]}"

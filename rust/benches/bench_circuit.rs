@@ -1,0 +1,45 @@
+//! Circuit-layer benchmarks: transient simulation, Monte-Carlo sampling
+//! and double-exponential fitting (the Table I / Fig. 5 / Fig. 9 engines).
+
+use tsisc::circuit::cell::CellSim;
+use tsisc::circuit::montecarlo::{sample_cell, FittedBank, MismatchParams};
+use tsisc::circuit::params::VDD;
+use tsisc::circuit::LeakageMacro;
+use tsisc::util::bench::{bench, header};
+use tsisc::util::fit::fit_double_exp;
+use tsisc::util::rng::Pcg64;
+
+fn main() {
+    header("bench_circuit — SPICE-substitute engines");
+    let cell = CellSim::ll_nominal();
+
+    let r = bench("v_at(30 ms) RK4 transient", 1.0, 100, 600, || {
+        std::hint::black_box(cell.v_at(VDD, 30e-3));
+    });
+    println!("{}", r.report());
+
+    let r = bench("64-sample transient (60 ms)", 64.0, 100, 600, || {
+        std::hint::black_box(cell.transient(VDD, 60e-3, 64));
+    });
+    println!("{}", r.report());
+
+    let nominal = LeakageMacro::ll_calibrated();
+    let mm = MismatchParams::default();
+    let mut rng = Pcg64::new(1);
+    let r = bench("MC cell sample + probe", 1.0, 100, 600, || {
+        let c = sample_cell(20e-15, &nominal, &mm, &mut rng);
+        std::hint::black_box(c.v_at(VDD, 20e-3));
+    });
+    println!("{}", r.report());
+
+    let (ts, vs) = cell.transient(VDD, 60e-3, 64);
+    let r = bench("double-exp LM fit (64 pts)", 1.0, 100, 600, || {
+        std::hint::black_box(fit_double_exp(&ts, &vs));
+    });
+    println!("{}", r.report());
+
+    let r = bench("FittedBank::build(32)", 32.0, 200, 1_000, || {
+        std::hint::black_box(FittedBank::build(20e-15, &mm, 32, 3));
+    });
+    println!("{}", r.report());
+}

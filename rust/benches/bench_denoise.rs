@@ -1,0 +1,41 @@
+//! STCF throughput: decisions/s on ideal vs ISC backends — the per-event
+//! hot path of the denoise application (Fig. 10 workloads).
+
+use tsisc::denoise::{run_stcf, StcfBackend, StcfParams};
+use tsisc::events::noise::contaminate;
+use tsisc::events::scene::EdgeScene;
+use tsisc::events::v2e::{convert, DvsParams};
+use tsisc::events::Resolution;
+use tsisc::isc::IscConfig;
+use tsisc::util::bench::{bench, header};
+
+fn main() {
+    header("bench_denoise — STCF decision throughput");
+    let res = Resolution::new(128, 96);
+    let scene = EdgeScene::new(90.0, 21);
+    let signal = convert(&scene, res, DvsParams::default(), 0.3);
+    let events = contaminate(&signal, res, 5.0, 0.3, 17);
+    println!("workload: {} events at 128x96", events.len());
+
+    for r_patch in [1u16, 2, 3] {
+        let prm = StcfParams { radius: r_patch, ..StcfParams::default() };
+        let mut b = StcfBackend::ideal(res);
+        let r = bench(
+            &format!("ideal backend, r={r_patch}"),
+            events.len() as f64,
+            100,
+            700,
+            || {
+                std::hint::black_box(run_stcf(&mut b, &events, &prm));
+            },
+        );
+        println!("{}", r.report());
+    }
+    // Backend constructed once (bank build is setup, not hot path).
+    let prm = StcfParams::default();
+    let mut b = StcfBackend::isc(res, IscConfig::default(), prm.tau_tw_us);
+    let r = bench("ISC backend (mismatched), r=3", events.len() as f64, 100, 700, || {
+        std::hint::black_box(run_stcf(&mut b, &events, &prm));
+    });
+    println!("{}", r.report());
+}

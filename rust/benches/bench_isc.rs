@@ -1,0 +1,77 @@
+//! ISC analog-array hot-path benchmarks: event write, comparator read,
+//! patch query and full-frame readout (the L3 serving primitives).
+//! Relates to Fig. 7/8 (per-event costs) and the §Perf targets.
+
+use tsisc::events::{Event, Polarity, Resolution};
+use tsisc::isc::{IscArray, IscConfig};
+use tsisc::util::bench::{bench, header};
+use tsisc::util::rng::Pcg64;
+
+fn main() {
+    header("bench_isc — analog array primitives (QVGA)");
+    let res = Resolution::QVGA;
+    let mut array = IscArray::new(res, IscConfig::default());
+    let mut rng = Pcg64::new(1);
+
+    // Pre-generate a batch of events.
+    let n = 10_000usize;
+    let events: Vec<Event> = (0..n)
+        .map(|k| {
+            Event::new(
+                1 + k as u64 * 10,
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                Polarity::On,
+            )
+        })
+        .collect();
+
+    let mut t = 1u64;
+    let r = bench("write 10k events", n as f64, 100, 700, || {
+        for e in &events {
+            let mut e2 = *e;
+            e2.t = t;
+            array.write(&e2);
+            t += 10;
+        }
+    });
+    println!("{}", r.report());
+
+    let coords: Vec<(u16, u16)> = (0..n)
+        .map(|_| (rng.below(res.width as u64) as u16, rng.below(res.height as u64) as u16))
+        .collect();
+    let r = bench("comparator read 10k cells", n as f64, 100, 700, || {
+        let mut hits = 0u32;
+        for &(x, y) in &coords {
+            hits += array.compare(x, y, Polarity::On, t, 0.383) as u32;
+        }
+        std::hint::black_box(hits);
+    });
+    println!("{}", r.report());
+
+    let cmp = array.comparator(0.383);
+    let r = bench("compiled comparator 10k cells", n as f64, 100, 700, || {
+        let mut hits = 0u32;
+        for &(x, y) in &coords {
+            hits += array.compare_with(&cmp, x, y, Polarity::On, t) as u32;
+        }
+        std::hint::black_box(hits);
+    });
+    println!("{}", r.report());
+
+    let r = bench("7x7 patch read", 49.0, 100, 700, || {
+        let mut s = 0.0;
+        for dy in 0..7u16 {
+            for dx in 0..7u16 {
+                s += array.read(100 + dx, 100 + dy, Polarity::On, t);
+            }
+        }
+        std::hint::black_box(s);
+    });
+    println!("{}", r.report());
+
+    let r = bench("full QVGA frame readout", res.pixels() as f64, 100, 900, || {
+        std::hint::black_box(array.frame_merged(t));
+    });
+    println!("{}", r.report());
+}

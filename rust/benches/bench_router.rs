@@ -1,0 +1,46 @@
+//! Coordinator benchmarks: sharded-router throughput vs shard count and
+//! end-to-end pipeline events/s (the paper's "throughput limited by data
+//! transmission" argument, Sec. III-B, measured on the software twin).
+
+use tsisc::coordinator::{run_pipeline, PipelineConfig, Router, RouterConfig};
+use tsisc::events::{noise::ba_noise, Event, Polarity, Resolution};
+use tsisc::util::bench::{bench, header};
+use tsisc::util::rng::Pcg64;
+
+fn main() {
+    header("bench_router — event routing and pipeline throughput");
+    let res = Resolution::QVGA;
+    let mut rng = Pcg64::new(3);
+    let n = 20_000usize;
+    let events: Vec<Event> = (0..n)
+        .map(|k| {
+            Event::new(
+                1 + k as u64,
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                Polarity::On,
+            )
+        })
+        .collect();
+
+    for shards in [1usize, 2, 4, 8] {
+        let mut router = Router::new(
+            res,
+            RouterConfig { n_shards: shards, queue_depth: 8192, ..RouterConfig::default() },
+        );
+        let r = bench(&format!("route 20k events, {shards} shards"), n as f64, 100, 600, || {
+            for e in &events {
+                router.route(*e);
+            }
+        });
+        println!("{}", r.report());
+        router.shutdown();
+    }
+
+    // End-to-end pipeline (incl. frame scheduling) on a noise workload.
+    let stream = ba_noise(res, 10.0, 0.2, 5);
+    let r = bench("pipeline 0.2s @10Hz/px noise", stream.len() as f64, 200, 1_000, || {
+        std::hint::black_box(run_pipeline(&stream, res, 200_000, &PipelineConfig::default()));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,48 @@
+//! PJRT artifact execution latency: the L1/L2 kernels and the train step
+//! as seen from the Rust hot path. Skips when artifacts are absent.
+
+use tsisc::events::{Event, Polarity};
+use tsisc::runtime::{artifacts_available, default_artifact_dir, KernelTs, Runtime};
+use tsisc::util::bench::{bench, header};
+
+fn main() {
+    header("bench_runtime — AOT artifact execution (PJRT CPU)");
+    if !artifacts_available() {
+        println!("SKIP: artifacts missing — run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::new(default_artifact_dir()).expect("runtime");
+    let mut plane = KernelTs::new(20e-15, None, 1);
+    plane.write(&Event::new(1, 10, 10, Polarity::On)).unwrap();
+    let mut t = 1u64;
+    plane.advance(&mut rt, t).unwrap();
+
+    let r = bench("ts_update microbatch (QVGA)", 240.0 * 320.0, 300, 1_500, || {
+        t += 1_000;
+        plane.advance(&mut rt, t).unwrap();
+    });
+    println!("{}", r.report());
+
+    let r = bench("ts_frame readout (QVGA)", 240.0 * 320.0, 300, 1_500, || {
+        std::hint::black_box(plane.frame(&mut rt).unwrap());
+    });
+    println!("{}", r.report());
+
+    let r = bench("stcf_count r=3 (QVGA)", 240.0 * 320.0, 300, 1_500, || {
+        std::hint::black_box(plane.stcf_counts(&mut rt, 0.383).unwrap());
+    });
+    println!("{}", r.report());
+
+    // Train step latency (B=64) — the e2e driver's inner loop.
+    use tsisc::train::driver::{train_classifier, TrainConfig, BATCH, SIDE};
+    use tsisc::train::frames::{Frame, FrameSet};
+    let frames: Vec<Frame> = (0..BATCH)
+        .map(|i| Frame { pixels: vec![0.1; SIDE * SIDE], label: i % 10, sample_id: i })
+        .collect();
+    let set = FrameSet { frames, n_classes: 10, n_samples: BATCH };
+    let r = bench("classifier_train step (B=64)", BATCH as f64, 500, 3_000, || {
+        let cfg = TrainConfig { steps: 1, lr: 0.01, seed: 1, log_every: 0 };
+        std::hint::black_box(train_classifier(&mut rt, &set, &set, &cfg).unwrap());
+    });
+    println!("{}", r.report());
+}

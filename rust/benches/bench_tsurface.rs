@@ -1,0 +1,43 @@
+//! Representation update-throughput comparison (Sec. II-B): the memory
+//! write amplification of SITS/TOS shows up directly as update cost.
+
+use tsisc::events::{Event, Polarity, Resolution};
+use tsisc::tsurface::*;
+use tsisc::util::bench::{bench, header};
+use tsisc::util::rng::Pcg64;
+
+fn main() {
+    header("bench_tsurface — representation update throughput");
+    let res = Resolution::QVGA;
+    let mut rng = Pcg64::new(7);
+    let n = 10_000usize;
+    let events: Vec<Event> = (0..n)
+        .map(|k| {
+            Event::new(
+                1 + k as u64 * 3,
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                if rng.bool(0.5) { Polarity::On } else { Polarity::Off },
+            )
+        })
+        .collect();
+
+    fn run_rep(name: &str, mut rep: Box<dyn Representation>, events: &[Event]) {
+        let r = bench(name, events.len() as f64, 100, 600, || {
+            for e in events {
+                rep.update(e);
+            }
+        });
+        println!("{}  (writes/event {:.2})", r.report(), rep.writes_per_event());
+    }
+
+    run_rep("SAE", Box::new(Sae::new(res)), &events);
+    run_rep("ideal TS", Box::new(IdealTs::new(res, 24_000.0)), &events);
+    run_rep("quantized SAE (16b)", Box::new(QuantizedSae::new(res, 16, 24_000.0)), &events);
+    run_rep("EBBI", Box::new(Ebbi::new(res)), &events);
+    run_rep("event count (4b)", Box::new(EventCount::new(res, 4)), &events);
+    run_rep("SITS (r=3)", Box::new(Sits::new(res, 3)), &events);
+    run_rep("TOS (r=3)", Box::new(Tos::new(res, 3)), &events);
+    run_rep("TORE (k=3)", Box::new(Tore::new(res, 3, 100.0, 1e6)), &events);
+    run_rep("3DS-ISC", Box::new(IscTs::with_defaults(res)), &events);
+}

@@ -1,0 +1,67 @@
+//! Array geometry: wire lengths, loads and block counts for the
+//! architecture-level energy/area/delay models.
+
+use crate::circuit::params::{CELL_HEIGHT_UM, CELL_WIDTH_UM};
+use crate::events::Resolution;
+
+/// Physical geometry of an ISC array at a given sensor resolution.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrayGeometry {
+    pub res: Resolution,
+    /// Cell pitch (µm).
+    pub cell_w_um: f64,
+    pub cell_h_um: f64,
+}
+
+impl ArrayGeometry {
+    pub fn new(res: Resolution) -> Self {
+        Self { res, cell_w_um: CELL_WIDTH_UM, cell_h_um: CELL_HEIGHT_UM }
+    }
+
+    /// Number of cells.
+    pub fn cells(&self) -> usize {
+        self.res.pixels()
+    }
+
+    /// Array core area in µm².
+    pub fn core_area_um2(&self) -> f64 {
+        self.cells() as f64 * self.cell_w_um * self.cell_h_um
+    }
+
+    /// Length of one write word line (runs across a row; µm).
+    pub fn wwl_length_um(&self) -> f64 {
+        self.res.width as f64 * self.cell_w_um
+    }
+
+    /// Length of one write bit line (runs down a column; µm).
+    pub fn wbl_length_um(&self) -> f64 {
+        self.res.height as f64 * self.cell_h_um
+    }
+
+    /// Row/column address bits the 2D periphery must decode.
+    pub fn row_addr_bits(&self) -> u32 {
+        (usize::BITS - (self.res.height as usize - 1).leading_zeros()).max(1)
+    }
+
+    pub fn col_addr_bits(&self) -> u32 {
+        (usize::BITS - (self.res.width as usize - 1).leading_zeros()).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qvga_geometry() {
+        let g = ArrayGeometry::new(Resolution::QVGA);
+        assert_eq!(g.cells(), 76_800);
+        // 320 × 4.8 µm = 1 536 µm WWL; 240 × 3.9 = 936 µm WBL.
+        assert!((g.wwl_length_um() - 1536.0).abs() < 1e-9);
+        assert!((g.wbl_length_um() - 936.0).abs() < 1e-9);
+        // ≈1.44 mm² core.
+        assert!((g.core_area_um2() * 1e-6 - 1.438).abs() < 0.01);
+        assert_eq!(g.row_addr_bits(), 8);
+        assert_eq!(g.col_addr_bits(), 9);
+    }
+}

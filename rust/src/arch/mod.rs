@@ -1,0 +1,15 @@
+//! Architecture-level models: the 2D-vs-3D comparison (Fig. 7), the
+//! half-select analysis (Fig. 4) and the SRAM baselines (Fig. 8).
+//!
+//! All numbers derive from the constants in [`crate::circuit::params`]
+//! (quoted from the paper and its references) plus standard 65 nm wire and
+//! gate figures — see each module for the component derivations.
+
+pub mod arch2d;
+pub mod arch3d;
+pub mod geometry;
+pub mod report;
+pub mod sram;
+
+pub use geometry::ArrayGeometry;
+pub use report::{ArchReport, Breakdown};

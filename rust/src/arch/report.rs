@@ -1,0 +1,116 @@
+//! Component-resolved power/area/delay reports (the Fig. 7 data structure).
+
+/// One named component contribution.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub name: &'static str,
+    pub value: f64,
+}
+
+/// A breakdown of a metric into components (power in W, area in µm²,
+/// delay in s — the unit is the report's business).
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    pub parts: Vec<Component>,
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self { parts: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &'static str, value: f64) -> &mut Self {
+        assert!(value >= 0.0, "negative component {name}: {value}");
+        self.parts.push(Component { name, value });
+        self
+    }
+
+    pub fn total(&self) -> f64 {
+        self.parts.iter().map(|c| c.value).sum()
+    }
+
+    /// Percentage share of component `name` (0 if absent).
+    pub fn share_percent(&self, name: &str) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            return 0.0;
+        }
+        100.0 * self.parts.iter().filter(|c| c.name == name).map(|c| c.value).sum::<f64>() / t
+    }
+
+    /// Render as an aligned text table with values scaled by `unit` and
+    /// suffixed `unit_name` (e.g. 1e6, "µW").
+    pub fn to_table(&self, unit: f64, unit_name: &str) -> String {
+        let mut s = String::new();
+        let width = self.parts.iter().map(|c| c.name.len()).max().unwrap_or(8).max(8);
+        for c in &self.parts {
+            s.push_str(&format!(
+                "  {:<width$}  {:>12.4} {}  ({:5.1} %)\n",
+                c.name,
+                c.value * unit,
+                unit_name,
+                self.share_percent(c.name),
+                width = width
+            ));
+        }
+        s.push_str(&format!(
+            "  {:<width$}  {:>12.4} {}\n",
+            "TOTAL",
+            self.total() * unit,
+            unit_name,
+            width = width
+        ));
+        s
+    }
+}
+
+/// Full architecture report: the three Fig. 7 metrics with breakdowns.
+#[derive(Clone, Debug)]
+pub struct ArchReport {
+    pub name: &'static str,
+    pub power: Breakdown,
+    pub area: Breakdown,
+    pub delay: Breakdown,
+}
+
+impl ArchReport {
+    /// Ratios (other/self) for the three metrics — the paper's headline
+    /// "69× / 1.9× / 2.2×" comparison is `ratios(&arch2d, &arch3d)`.
+    pub fn ratios(a: &ArchReport, b: &ArchReport) -> (f64, f64, f64) {
+        (
+            a.power.total() / b.power.total(),
+            a.area.total() / b.area.total(),
+            a.delay.total() / b.delay.total(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_totals_and_shares() {
+        let mut b = Breakdown::new();
+        b.add("x", 3.0).add("y", 1.0);
+        assert_eq!(b.total(), 4.0);
+        assert_eq!(b.share_percent("x"), 75.0);
+        assert_eq!(b.share_percent("missing"), 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut b = Breakdown::new();
+        b.add("component", 2e-6);
+        let t = b.to_table(1e6, "µW");
+        assert!(t.contains("component"));
+        assert!(t.contains("TOTAL"));
+        assert!(t.contains("2.0000 µW"));
+    }
+
+    #[test]
+    #[should_panic(expected = "negative component")]
+    fn rejects_negative() {
+        Breakdown::new().add("bad", -1.0);
+    }
+}

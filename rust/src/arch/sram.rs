@@ -1,0 +1,158 @@
+//! SRAM timestamp-storage baselines (paper Fig. 8, Sec. II-C.2, IV-B).
+//!
+//! Two published designs store the SAE as 16-bit digital timestamps in
+//! SRAM; the paper compares its ISC analog array against both, storage
+//! array only:
+//!
+//! * **[53]** Bose et al., in-memory binary image filtering: 5.1 pJ/bit
+//!   write, 350 pA/bit static at 1 V.
+//! * **[26]** Rios-Navarro et al., within-camera MLP denoising: 35 mW
+//!   static for a 346×260×18 b array, 2.4 nJ per 7×7-pixel access,
+//!   write ≈ 1.5× read.
+
+use super::arch3d::Workload;
+use super::geometry::ArrayGeometry;
+use super::report::Breakdown;
+use crate::circuit::params::*;
+
+/// Which published SRAM design to model.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SramDesign {
+    /// Bose et al. [53].
+    Bose53,
+    /// Rios-Navarro et al. [26].
+    Rios26,
+}
+
+impl SramDesign {
+    pub fn name(self) -> &'static str {
+        match self {
+            SramDesign::Bose53 => "16b SRAM [53]",
+            SramDesign::Rios26 => "16b SRAM [26]",
+        }
+    }
+}
+
+/// Storage-array power breakdown for a design holding `TIMESTAMP_BITS`-bit
+/// timestamps at geometry `g` under workload `w`.
+pub fn power(design: SramDesign, g: &ArrayGeometry, w: &Workload) -> Breakdown {
+    let bits = g.cells() as f64 * TIMESTAMP_BITS as f64;
+    let mut b = Breakdown::new();
+    match design {
+        SramDesign::Bose53 => {
+            // Dynamic: every event writes one 16-bit word.
+            b.add(
+                "write dynamic",
+                TIMESTAMP_BITS as f64 * SRAM53_WRITE_E_PER_BIT * w.event_rate,
+            );
+            b.add("static leakage", bits * SRAM53_LEAK_A_PER_BIT * SRAM53_VDD);
+        }
+        SramDesign::Rios26 => {
+            // Static scales with bit count from the published 346×260×18 array.
+            b.add("static leakage", SRAM26_STATIC_W * bits / SRAM26_ARRAY_BITS);
+            // Dynamic: one 16-bit word written per event; derived from the
+            // published 7×7-patch access energy (49 pixels, 18 b each) with
+            // the 1.5× write/read factor. ≈ 0.072 nJ/event, the figure the
+            // paper quotes.
+            let e_per_bit = SRAM26_ACCESS_7X7_E / (49.0 * 18.0);
+            let e_write = e_per_bit * SRAM26_WRITE_READ_RATIO * TIMESTAMP_BITS as f64;
+            b.add("write dynamic", e_write * w.event_rate);
+        }
+    }
+    b
+}
+
+/// Storage-array area (µm²) for the design at geometry `g`.
+pub fn area(design: SramDesign, g: &ArrayGeometry) -> f64 {
+    let per_bit = match design {
+        SramDesign::Bose53 => SRAM53_AREA_PER_BIT_UM2,
+        SramDesign::Rios26 => SRAM26_AREA_PER_BIT_UM2,
+    };
+    g.cells() as f64 * TIMESTAMP_BITS as f64 * per_bit
+}
+
+/// ISC analog array, storage only (for the Fig. 8 comparison): write energy
+/// + bond + cell leakage; no periphery.
+pub fn isc_array_power(g: &ArrayGeometry, w: &Workload) -> Breakdown {
+    let mut b = Breakdown::new();
+    let e_write =
+        C_MEM_NOMINAL * VDD * VDD + super::arch3d::IN_PIXEL_WRITE_E + CUCU_CAP * VDD * VDD;
+    b.add("write dynamic", e_write * w.event_rate);
+    b.add("static leakage", g.cells() as f64 * super::arch3d::cell_static_power());
+    b
+}
+
+/// ISC array area (µm²).
+pub fn isc_array_area(g: &ArrayGeometry) -> f64 {
+    g.core_area_um2()
+}
+
+/// The timestamp-overflow hazard (paper Sec. II-B / IV-B): a `bits`-wide
+/// µs counter wraps after 2^bits µs. Returns the wrap period in seconds —
+/// SRAM designs hit this; the analog array's self-normalization does not.
+pub fn timestamp_wrap_period_s(bits: u32, tick_us: f64) -> f64 {
+    (2f64.powi(bits as i32) * tick_us) * 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Resolution;
+
+    fn qvga() -> ArrayGeometry {
+        ArrayGeometry::new(Resolution::QVGA)
+    }
+
+    #[test]
+    fn fig8_power_ratios() {
+        // Paper: ISC vs [53] = 1600×, vs [26] = 6761× ("three orders of
+        // magnitude"). Shape requirement: both ≥ 1000×, [26] > [53].
+        let w = Workload::default();
+        let p_isc = isc_array_power(&qvga(), &w).total();
+        let p53 = power(SramDesign::Bose53, &qvga(), &w).total();
+        let p26 = power(SramDesign::Rios26, &qvga(), &w).total();
+        let r53 = p53 / p_isc;
+        let r26 = p26 / p_isc;
+        assert!((1000.0..2500.0).contains(&r53), "[53] ratio {r53}");
+        assert!((4000.0..9000.0).contains(&r26), "[26] ratio {r26}");
+        assert!(r26 > r53);
+    }
+
+    #[test]
+    fn fig8_area_ratios() {
+        // Paper: [53] 3.1×, [26] 2.2× the ISC array area.
+        let a_isc = isc_array_area(&qvga());
+        let r53 = area(SramDesign::Bose53, &qvga()) / a_isc;
+        let r26 = area(SramDesign::Rios26, &qvga()) / a_isc;
+        assert!((2.7..3.5).contains(&r53), "[53] area ratio {r53}");
+        assert!((1.9..2.5).contains(&r26), "[26] area ratio {r26}");
+    }
+
+    #[test]
+    fn rios_write_energy_matches_quoted() {
+        // The paper quotes 0.072 nJ/event write for [26]; our derivation
+        // from the published access numbers should reproduce it.
+        let e_per_bit = SRAM26_ACCESS_7X7_E / (49.0 * 18.0);
+        let e_write = e_per_bit * SRAM26_WRITE_READ_RATIO * TIMESTAMP_BITS as f64;
+        assert!(
+            (e_write - 0.072e-9).abs() < 0.01e-9,
+            "write energy {e_write:.3e} J/event"
+        );
+    }
+
+    #[test]
+    fn sram26_static_large() {
+        // [26]'s dominant cost is the 35 mW-class static leakage.
+        let p = power(SramDesign::Rios26, &qvga(), &Workload::default());
+        assert!(p.share_percent("static leakage") > 70.0);
+        assert!(p.total() > 20e-3);
+    }
+
+    #[test]
+    fn overflow_period_finite_for_sram() {
+        // 16-bit µs timestamps wrap every 65.5 ms — mid-recording for any
+        // real sequence (the hazard the analog array avoids by design).
+        let wrap = timestamp_wrap_period_s(16, 1.0);
+        assert!((0.06..0.07).contains(&wrap));
+    }
+}

@@ -1,0 +1,177 @@
+//! Transistor off-state leakage components (paper Sec. III-A / Fig. 2c).
+//!
+//! The paper classifies leakage into channel (I_c: subthreshold + DIBL),
+//! body (I_b: junction + GIDL), and gate (I_g: tunneling) components and
+//! argues the stacked-PMOS LL switch wins because stacking halves V_ds,
+//! which suppresses I_c exponentially through DIBL, while the floating well
+//! kills the M-node body path and thick oxide removes I_g. This module
+//! implements those equations so the claim is *derived*, not asserted; the
+//! cell simulator consumes the resulting I(V) curves.
+
+use super::params::{VDD, VT_THERMAL};
+
+/// Off-state leakage model of a single PMOS pass device.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceParams {
+    /// Subthreshold slope factor n (typ. 1.3–1.5 at 65 nm).
+    pub n: f64,
+    /// DIBL coefficient η in volts of V_th shift per volt of V_ds.
+    pub dibl: f64,
+    /// Extrapolated subthreshold current at V_gs = V_th, V_ds = V_dd (A).
+    pub i0: f64,
+    /// |V_gs| - |V_th| margin in off state (negative = safely off).
+    pub vgs_minus_vth: f64,
+    /// Reverse junction saturation current of drain/source diodes (A).
+    pub i_junction: f64,
+    /// GIDL prefactor (A) — field-assisted tunnel leakage at the drain edge.
+    pub i_gidl0: f64,
+    /// Gate tunneling current density prefactor (A). ~0 for thick oxide.
+    pub i_gate0: f64,
+}
+
+impl DeviceParams {
+    /// Thin-oxide core PMOS used in a conventional transmission gate.
+    pub fn tg_pmos() -> Self {
+        Self {
+            n: 1.4,
+            dibl: 0.12,
+            i0: 4e-12,
+            vgs_minus_vth: -0.35,
+            i_junction: 8e-16,
+            i_gidl0: 3e-15,
+            i_gate0: 5e-14, // thin oxide tunnels
+        }
+    }
+
+    /// Thick-oxide PMOS used in the LL switch (I/O device: higher V_th,
+    /// negligible gate tunneling).
+    pub fn ll_pmos() -> Self {
+        Self {
+            n: 1.45,
+            dibl: 0.09,
+            i0: 1.2e-12,
+            vgs_minus_vth: -0.55,
+            i_junction: 2e-16,
+            i_gidl0: 4e-16,
+            i_gate0: 0.0,
+        }
+    }
+
+    /// Channel (subthreshold) leakage at drain-source voltage `vds` ≥ 0.
+    /// I_c = I0 · e^{(V_gs − V_th + η·V_ds)/(n·V_T)} · (1 − e^{−V_ds/V_T})
+    pub fn i_channel(&self, vds: f64) -> f64 {
+        let vds = vds.max(0.0);
+        let exp_arg = (self.vgs_minus_vth + self.dibl * vds) / (self.n * VT_THERMAL);
+        self.i0 * exp_arg.exp() * (1.0 - (-vds / VT_THERMAL).exp())
+    }
+
+    /// Body leakage: reverse junction + GIDL (grows with drain-body bias).
+    pub fn i_body(&self, vdb: f64) -> f64 {
+        let vdb = vdb.max(0.0);
+        self.i_junction * (1.0 - (-vdb / VT_THERMAL).exp())
+            + self.i_gidl0 * ((vdb / VDD).powi(2))
+    }
+
+    /// Gate leakage (tunneling), proportional to gate overdrive area term.
+    pub fn i_gate(&self, vgb: f64) -> f64 {
+        self.i_gate0 * (vgb.abs() / VDD).powi(2)
+    }
+
+    /// Total off-state leakage seen by the storage node at voltage `v`
+    /// for a single device holding off `vds = v` (TG case).
+    pub fn i_off_total(&self, vds: f64) -> f64 {
+        self.i_channel(vds) + self.i_body(vds) + self.i_gate(vds)
+    }
+}
+
+/// Leakage of the stacked two-PMOS LL switch holding off a storage node at
+/// `v` against a bit line at 0 V. The stack splits the drop: device A sees
+/// η_split·v, device B sees (1−η_split)·v; steady state is where the two
+/// series currents match — we solve it by bisection on the mid-node.
+pub fn ll_stack_leakage(dev: &DeviceParams, v: f64) -> f64 {
+    if v <= 0.0 {
+        return 0.0;
+    }
+    // Find mid-node voltage m ∈ [0, v] with i(dev, v−m) = i(dev, m).
+    let (mut lo, mut hi) = (0.0f64, v);
+    for _ in 0..60 {
+        let m = 0.5 * (lo + hi);
+        let i_top = dev.i_channel(v - m); // storage → mid
+        let i_bot = dev.i_channel(m); // mid → bit line
+        if i_top > i_bot {
+            lo = m;
+        } else {
+            hi = m;
+        }
+    }
+    let m = 0.5 * (lo + hi);
+    // Series current + the storage-side body/gate components (the floating
+    // well suppresses the body path — keep the residual junction term).
+    dev.i_channel(v - m) + 0.1 * dev.i_body(v - m) + dev.i_gate(v - m)
+}
+
+/// Leakage of a conventional transmission gate holding off the same node
+/// (full v_ds across one device pair; body tied to rails so the full body
+/// path is active).
+pub fn tg_leakage(dev: &DeviceParams, v: f64) -> f64 {
+    if v <= 0.0 {
+        return 0.0;
+    }
+    dev.i_off_total(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn channel_leak_increases_with_vds() {
+        let d = DeviceParams::tg_pmos();
+        assert!(d.i_channel(1.2) > d.i_channel(0.6));
+        assert!(d.i_channel(0.6) > d.i_channel(0.1));
+        assert_eq!(d.i_channel(0.0), 0.0);
+    }
+
+    #[test]
+    fn stacking_reduces_leakage() {
+        // The paper's core circuit claim (Fig. 2c/d): the stacked LL switch
+        // leaks far less than a TG at the same stored voltage.
+        let tg = DeviceParams::tg_pmos();
+        let ll = DeviceParams::ll_pmos();
+        for &v in &[0.3, 0.6, 0.9, 1.2] {
+            let i_tg = tg_leakage(&tg, v);
+            let i_ll = ll_stack_leakage(&ll, v);
+            assert!(
+                i_ll < i_tg / 5.0,
+                "v={v}: LL {i_ll:.3e} not ≪ TG {i_tg:.3e}"
+            );
+        }
+    }
+
+    #[test]
+    fn stack_beats_single_device_of_same_kind() {
+        // Isolate the stacking effect itself: same device, stacked vs single.
+        let ll = DeviceParams::ll_pmos();
+        for &v in &[0.6, 1.2] {
+            assert!(ll_stack_leakage(&ll, v) < ll.i_off_total(v));
+        }
+    }
+
+    #[test]
+    fn thick_oxide_kills_gate_leak() {
+        let ll = DeviceParams::ll_pmos();
+        assert_eq!(ll.i_gate(1.2), 0.0);
+        let tg = DeviceParams::tg_pmos();
+        assert!(tg.i_gate(1.2) > 0.0);
+    }
+
+    #[test]
+    fn leakage_positive_and_finite() {
+        let d = DeviceParams::ll_pmos();
+        for k in 0..=24 {
+            let v = k as f64 * 0.05;
+            let i = ll_stack_leakage(&d, v);
+            assert!(i.is_finite() && i >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! SPICE-substitute circuit layer.
+//!
+//! The paper's circuit evidence comes from Cadence/SPICE transient and
+//! Monte Carlo simulation of a TSMC-65nm 6T-1C eDRAM cell. Offline we
+//! rebuild that stack analytically:
+//!
+//! * [`device`] — transistor off-state leakage components (I_c/I_b/I_g) and
+//!   the stacked-PMOS vs transmission-gate comparison (Fig. 2c),
+//! * [`cell`] — RC transient simulation of the storage node, calibrated to
+//!   the paper's measured decay points (Fig. 2d, Fig. 5a, Fig. 9),
+//! * [`montecarlo`] — mismatch sampling, CV analysis (Fig. 5b) and the
+//!   double-exponential fitted bank that drives the array model (Sec. IV-C),
+//! * [`table1`] — the bitcell-family comparison (Table I).
+
+pub mod cell;
+pub mod device;
+pub mod montecarlo;
+pub mod params;
+pub mod table1;
+pub mod temperature;
+
+pub use cell::{CellSim, LeakageMacro, V_FLOOR};
+pub use montecarlo::{FittedBank, MismatchParams};

@@ -1,0 +1,242 @@
+//! Monte Carlo mismatch analysis (paper Fig. 5b) and the bridge from
+//! circuit simulation to the array-level software model (paper Sec. IV-C).
+//!
+//! The paper runs 8 000 SPICE MC transients, fits each to the
+//! double-exponential f(t) = A1·e^{−t/τ1} + A2·e^{−t/τ2} + b, and assigns
+//! fitted parameter tuples to pixels of the software model. We do exactly
+//! that: sample mismatched [`LeakageMacro`]s, simulate, fit with
+//! [`crate::util::fit`], and hand the tuples to `isc::IscArray`.
+
+use super::cell::{CellSim, LeakageMacro};
+use super::params::VDD;
+use crate::util::fit::{fit_double_exp, DoubleExp};
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+
+/// Mismatch magnitudes (σ of ln for lognormal factors). Calibrated so the
+/// simulated CV of V_mem at Δt = 10/20/30 ms lands in the paper's band
+/// (0.10 % / 0.39 % / 1.28 %, all < 2 %): the junction-floor path carries
+/// the large area mismatch, which is what makes CV grow superlinearly.
+#[derive(Clone, Copy, Debug)]
+pub struct MismatchParams {
+    /// σ_ln of the subthreshold conductance.
+    pub sigma_g_slow: f64,
+    /// σ_ln of the DIBL path.
+    pub sigma_g_fast: f64,
+    /// σ_ln of the junction floor (largest: area-dominated).
+    pub sigma_i_j: f64,
+    /// Relative σ of C_mem (MOMCAP matching, ~0.3 % at 20 fF).
+    pub sigma_c: f64,
+}
+
+impl Default for MismatchParams {
+    fn default() -> Self {
+        Self { sigma_g_slow: 0.004, sigma_g_fast: 0.01, sigma_i_j: 0.5, sigma_c: 0.002 }
+    }
+}
+
+/// One Monte Carlo instance of the cell.
+pub fn sample_cell(
+    c_nominal: f64,
+    nominal: &LeakageMacro,
+    mm: &MismatchParams,
+    rng: &mut Pcg64,
+) -> CellSim {
+    let leak = nominal.scaled(
+        rng.lognormal(1.0, mm.sigma_g_slow),
+        rng.lognormal(1.0, mm.sigma_g_fast),
+        rng.lognormal(1.0, mm.sigma_i_j),
+    );
+    let c = c_nominal * rng.normal_ms(1.0, mm.sigma_c).max(0.5);
+    CellSim::new(c, leak)
+}
+
+/// Result of the Fig. 5b experiment: distribution of V_mem at a probe time.
+#[derive(Clone, Debug)]
+pub struct VmemDistribution {
+    pub dt_s: f64,
+    pub mean: f64,
+    pub cv_percent: f64,
+    pub samples: Vec<f64>,
+}
+
+/// Run `n` MC transients of a `c_nominal` LL cell and probe V_mem at each
+/// `probe_times` (seconds after write). Mirrors Fig. 5b.
+pub fn vmem_distributions(
+    c_nominal: f64,
+    mm: &MismatchParams,
+    probe_times: &[f64],
+    n: usize,
+    seed: u64,
+) -> Vec<VmemDistribution> {
+    let nominal = LeakageMacro::ll_calibrated();
+    let mut rng = Pcg64::with_stream(seed, 0x5b);
+    let mut per_probe: Vec<Vec<f64>> = vec![Vec::with_capacity(n); probe_times.len()];
+    for _ in 0..n {
+        let cell = sample_cell(c_nominal, &nominal, mm, &mut rng);
+        for (k, &t) in probe_times.iter().enumerate() {
+            per_probe[k].push(cell.v_at(VDD, t));
+        }
+    }
+    probe_times
+        .iter()
+        .zip(per_probe)
+        .map(|(&dt_s, samples)| VmemDistribution {
+            dt_s,
+            mean: stats::mean(&samples),
+            cv_percent: stats::cv_percent(&samples),
+            samples,
+        })
+        .collect()
+}
+
+/// A bank of double-exponential fits of MC transients — the "8 000 fitted
+/// MC runs" of the paper's software model. The ISC array samples pixel
+/// parameters from this bank.
+#[derive(Clone, Debug)]
+pub struct FittedBank {
+    pub fits: Vec<DoubleExp>,
+    pub mean_fit_mse: f64,
+}
+
+impl FittedBank {
+    /// Build a bank of `n` fitted mismatched cells at `c_nominal`.
+    pub fn build(c_nominal: f64, mm: &MismatchParams, n: usize, seed: u64) -> Self {
+        let nominal = LeakageMacro::ll_calibrated();
+        let mut rng = Pcg64::with_stream(seed, 0xf1);
+        let mut fits = Vec::with_capacity(n);
+        let mut mses = Vec::with_capacity(n);
+        // Fit horizon: past the memory window so the tail is constrained.
+        let t_end = 60e-3 * (c_nominal / 20e-15);
+        for _ in 0..n {
+            let cell = sample_cell(c_nominal, &nominal, mm, &mut rng);
+            let (ts, vs) = cell.transient(VDD, t_end, 64);
+            let fit = fit_double_exp(&ts, &vs);
+            // The array model requires a physical (monotone) discharge; the
+            // unconstrained LM fit occasionally flips an amplitude sign to
+            // shave residual. Fall back to a constrained single-τ tail fit.
+            let params = if fit.params.is_monotone_decay() {
+                fit.params
+            } else {
+                constrained_fallback(&ts, &vs)
+            };
+            fits.push(params);
+            mses.push(fit.mse);
+        }
+        Self { fits, mean_fit_mse: stats::mean(&mses) }
+    }
+
+    /// Draw one pixel's parameters (uniform over the bank).
+    pub fn draw(&self, rng: &mut Pcg64) -> DoubleExp {
+        self.fits[rng.below(self.fits.len() as u64) as usize]
+    }
+
+    /// The nominal (mismatch-free) fit — used for "ideal hardware" ablations
+    /// and for deriving comparator thresholds (Fig. 10b).
+    pub fn nominal(c: f64) -> DoubleExp {
+        let cell = CellSim::new(c, LeakageMacro::ll_calibrated());
+        let t_end = 60e-3 * (c / 20e-15);
+        let (ts, vs) = cell.transient(VDD, t_end, 96);
+        let fit = fit_double_exp(&ts, &vs);
+        if fit.params.is_monotone_decay() {
+            fit.params
+        } else {
+            constrained_fallback(&ts, &vs)
+        }
+    }
+}
+
+/// Constrained fallback when the free fit is non-monotone: a two-point
+/// double exponential with both amplitudes clamped non-negative, matched
+/// to the head and tail of the transient.
+fn constrained_fallback(ts: &[f64], vs: &[f64]) -> DoubleExp {
+    let n = ts.len();
+    let v0 = vs[0];
+    // Tail τ from the last third (log-slope).
+    let third = n - n / 3;
+    let mut tau2 = 20e-3;
+    let pts: Vec<(f64, f64)> = ts[third..]
+        .iter()
+        .zip(&vs[third..])
+        .filter(|(_, &v)| v > 1e-9)
+        .map(|(&t, &v)| (t, v.ln()))
+        .collect();
+    if pts.len() >= 2 {
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (_, slope, _) = crate::util::stats::linreg(&xs, &ys);
+        if slope < 0.0 {
+            tau2 = -1.0 / slope;
+        }
+    }
+    // Amplitude of the slow part from a mid sample, the rest goes fast.
+    let mid = n / 3;
+    let a2 = (vs[mid] / (-ts[mid] / tau2).exp()).clamp(0.0, v0);
+    let a1 = (v0 - a2).max(0.0);
+    DoubleExp { a1, tau1: tau2 / 5.0, a2, tau2, b: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cv_band_matches_paper() {
+        // Paper Fig. 5b: CV = 0.10 / 0.39 / 1.28 % at 10/20/30 ms, < 2 %.
+        // Bands are generous (our mismatch model is a substitute), but the
+        // ordering and <2 % bound are hard requirements.
+        let d = vmem_distributions(
+            20e-15,
+            &MismatchParams::default(),
+            &[10e-3, 20e-3, 30e-3],
+            400,
+            42,
+        );
+        assert!(d[0].cv_percent < d[1].cv_percent);
+        assert!(d[1].cv_percent < d[2].cv_percent);
+        for x in &d {
+            assert!(x.cv_percent < 2.0, "CV at {} ms = {}", x.dt_s * 1e3, x.cv_percent);
+        }
+        // Means track the nominal calibration.
+        assert!((d[0].mean - 0.72).abs() < 0.03);
+        assert!((d[1].mean - 0.46).abs() < 0.03);
+        assert!((d[2].mean - 0.30).abs() < 0.03);
+    }
+
+    #[test]
+    fn fitted_bank_reconstructs_decay() {
+        let bank = FittedBank::build(20e-15, &MismatchParams::default(), 32, 7);
+        assert_eq!(bank.fits.len(), 32);
+        // Fits should be excellent (paper Fig. 9: "very good fit").
+        assert!(bank.mean_fit_mse < 1e-4, "mse={}", bank.mean_fit_mse);
+        for f in &bank.fits {
+            // v(0) ≈ VDD, and decayed values near nominal.
+            assert!((f.v0() - VDD).abs() < 0.05, "v0={}", f.v0());
+            assert!((f.eval(20e-3) - 0.46).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn nominal_fit_matches_cell() {
+        let f = FittedBank::nominal(20e-15);
+        let cell = CellSim::ll_nominal();
+        for &t in &[5e-3, 15e-3, 25e-3, 40e-3] {
+            assert!(
+                (f.eval(t) - cell.v_at(VDD, t)).abs() < 5e-3,
+                "t={t}: fit {} cell {}",
+                f.eval(t),
+                cell.v_at(VDD, t)
+            );
+        }
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed() {
+        let bank = FittedBank::build(20e-15, &MismatchParams::default(), 16, 3);
+        let mut r1 = Pcg64::new(9);
+        let mut r2 = Pcg64::new(9);
+        for _ in 0..10 {
+            assert_eq!(bank.draw(&mut r1), bank.draw(&mut r2));
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Temperature dependence of the eDRAM retention — the classic DRAM
+//! non-ideality the paper's "non-ideal characteristics" analysis implies:
+//! subthreshold and junction leakage grow exponentially with temperature
+//! (roughly 2× per 8–10 °C), so the memory window shrinks and the
+//! effective TS time constant drifts. This module extends the calibrated
+//! cell model across temperature and quantifies the impact on the STCF
+//! operating point (an ablation beyond the paper's room-temperature
+//! results; see EXPERIMENTS.md §Ablations).
+
+use super::cell::{CellSim, LeakageMacro, V_FLOOR};
+use super::params::VDD;
+
+/// Reference temperature of the calibration (°C).
+pub const T_REF_C: f64 = 27.0;
+
+/// Leakage doubling interval for the subthreshold path (°C). 65 nm
+/// subthreshold slope ≈ 85–100 mV/dec and V_th temperature coefficient
+/// ≈ −1 mV/°C give ≈8–10 °C per doubling; we use 9.
+pub const SUBVT_DOUBLING_C: f64 = 9.0;
+
+/// Junction/GIDL leakage doubling interval (°C): steeper, ≈7 °C.
+pub const JUNCTION_DOUBLING_C: f64 = 7.0;
+
+/// Scale the calibrated leakage model to temperature `t_c` (°C).
+pub fn leakage_at(t_c: f64) -> LeakageMacro {
+    let base = LeakageMacro::ll_calibrated();
+    let dt = t_c - T_REF_C;
+    let f_sub = 2f64.powf(dt / SUBVT_DOUBLING_C);
+    let f_jun = 2f64.powf(dt / JUNCTION_DOUBLING_C);
+    base.scaled(f_sub, f_sub, f_jun)
+}
+
+/// Cell at temperature.
+pub fn cell_at(c_mem: f64, t_c: f64) -> CellSim {
+    CellSim::new(c_mem, leakage_at(t_c))
+}
+
+/// Memory window at temperature (seconds).
+pub fn memory_window_at(c_mem: f64, t_c: f64) -> f64 {
+    cell_at(c_mem, t_c).memory_window(V_FLOOR, 0.5)
+}
+
+/// The comparator threshold V_tw that realizes a τ_tw window at
+/// temperature `t_c` — how a temperature-compensated bias generator would
+/// retune the STCF operating point (Fig. 10b at other corners).
+pub fn vtw_for_window(c_mem: f64, tau_s: f64, t_c: f64) -> f64 {
+    cell_at(c_mem, t_c).v_at(VDD, tau_s)
+}
+
+/// Effective time-constant drift: the time to decay to V(τ_ref @ 27 °C)
+/// at temperature `t_c`, relative to τ_ref. 1.0 = no drift.
+pub fn window_shrink_factor(c_mem: f64, tau_ref_s: f64, t_c: f64) -> f64 {
+    let v_target = cell_at(c_mem, T_REF_C).v_at(VDD, tau_ref_s);
+    let cell = cell_at(c_mem, t_c);
+    // Bisection: time for the hot cell to reach the same voltage.
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    if cell.v_at(VDD, hi) > v_target {
+        return 1.0; // colder than reference beyond horizon
+    }
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        if cell.v_at(VDD, mid) > v_target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi) / tau_ref_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_shrinks_with_temperature() {
+        let w27 = memory_window_at(20e-15, 27.0);
+        let w55 = memory_window_at(20e-15, 55.0);
+        let w85 = memory_window_at(20e-15, 85.0);
+        assert!(w27 > w55 && w55 > w85, "{w27} {w55} {w85}");
+        // ~2x leakage per ~9 °C ⇒ roughly 8x shorter window at +27 °C.
+        let ratio = w27 / w55;
+        assert!((4.0..20.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn cold_cell_retains_longer() {
+        assert!(memory_window_at(20e-15, 0.0) > memory_window_at(20e-15, 27.0));
+    }
+
+    #[test]
+    fn reference_temperature_matches_calibration() {
+        let cell = cell_at(20e-15, T_REF_C);
+        assert!((cell.v_at(VDD, 10e-3) - 0.72).abs() < 0.02);
+    }
+
+    #[test]
+    fn vtw_retuning_compensates() {
+        // At 55 °C the 24 ms window needs a lower comparator threshold.
+        let v27 = vtw_for_window(20e-15, 24e-3, 27.0);
+        let v55 = vtw_for_window(20e-15, 24e-3, 55.0);
+        assert!(v55 < v27, "hot V_tw {v55} should be below {v27}");
+        assert!(v55 > 0.0);
+    }
+
+    #[test]
+    fn shrink_factor_monotone() {
+        let f40 = window_shrink_factor(20e-15, 24e-3, 40.0);
+        let f70 = window_shrink_factor(20e-15, 24e-3, 70.0);
+        assert!(f40 < 1.0);
+        assert!(f70 < f40);
+    }
+}

@@ -1,0 +1,91 @@
+//! Minimal command-line parsing (offline substitute for `clap`).
+//!
+//! Supports `program <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, Option<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key value` unless the next token is another flag/end.
+                let value = match iter.peek() {
+                    Some(v) if !v.starts_with("--") => Some(iter.next().unwrap()),
+                    _ => None,
+                };
+                out.flags.insert(name.to_string(), value);
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// From std::env.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    /// String value of `--name value`.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.as_deref())
+    }
+
+    /// Typed value with default.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("exp fig7 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig7", "extra"]);
+    }
+
+    #[test]
+    fn flags_with_and_without_values() {
+        let a = parse("run --full --steps 200 --name foo");
+        assert!(a.flag("full"));
+        assert_eq!(a.get("steps"), Some("200"));
+        assert_eq!(a.get_parsed("steps", 0usize), 200);
+        assert_eq!(a.get("name"), Some("foo"));
+        assert!(!a.flag("absent"));
+        assert_eq!(a.get_parsed("absent", 7u32), 7);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_has_no_value() {
+        let a = parse("x --a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("a"), None);
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

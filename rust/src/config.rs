@@ -1,0 +1,129 @@
+//! Run-configuration files: a TOML-subset parser (offline substitute for
+//! `serde` + `toml`) supporting `[sections]`, `key = value` with string,
+//! number and boolean values, and `#` comments. Used by the CLI's
+//! `--config` option so experiment sweeps are reproducible from files.
+
+use std::collections::HashMap;
+
+/// Parsed configuration: section → key → raw value string.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+/// Parse error with line information.
+#[derive(Debug, PartialEq, Eq)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or(ParseError {
+                    line: i + 1,
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let mut val = v.trim().to_string();
+                // Strip matching quotes.
+                if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                if key.is_empty() {
+                    return Err(ParseError { line: i + 1, message: "empty key".into() });
+                }
+                cfg.sections.entry(section.clone()).or_default().insert(key, val);
+            } else {
+                return Err(ParseError {
+                    line: i + 1,
+                    message: format!("expected `key = value`, got '{line}'"),
+                });
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Self, Box<dyn std::error::Error>> {
+        Ok(Self::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    /// Raw string lookup: `section.key` (empty section = top level).
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_parsed<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> T {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            "top = 1\n\
+             [train]\n\
+             steps = 200     # comment\n\
+             lr = 0.03\n\
+             name = \"nmnist\"\n\
+             full = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("", "top"), Some("1"));
+        assert_eq!(cfg.get_parsed("train", "steps", 0usize), 200);
+        assert!((cfg.get_parsed("train", "lr", 0.0f64) - 0.03).abs() < 1e-12);
+        assert_eq!(cfg.get("train", "name"), Some("nmnist"));
+        assert!(cfg.get_parsed("train", "full", false));
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get("x", "y"), None);
+        assert_eq!(cfg.get_parsed("x", "y", 9u32), 9);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("not a kv").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        let e = Config::parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = Config::parse("# header\n\n  # indented\nk = v\n").unwrap();
+        assert_eq!(cfg.get("", "k"), Some("v"));
+    }
+}

@@ -1,0 +1,10 @@
+//! L3 coordination: microbatching, the sharded event router with
+//! backpressure, and the end-to-end event→frame pipeline.
+
+pub mod batcher;
+pub mod pipeline;
+pub mod router;
+
+pub use batcher::{MicroBatch, MicroBatcher};
+pub use pipeline::{run as run_pipeline, PipelineConfig, PipelineRun, PipelineStats};
+pub use router::{Router, RouterConfig, RouterStats};

@@ -1,0 +1,7 @@
+//! Event-stream denoising: the STCF (paper Sec. IV-C) over ideal and
+//! ISC-analog backends, plus the BAF baseline.
+
+pub mod baf;
+pub mod stcf;
+
+pub use stcf::{run as run_stcf, StcfBackend, StcfParams, StcfRun};

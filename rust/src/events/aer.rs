@@ -1,0 +1,189 @@
+//! Address-Event-Representation (AER) wire format.
+//!
+//! In the paper's 2D baseline every event leaves the sensor die through an
+//! AER encoder, crosses a bus, and is decoded on the memory die (Fig. 3a).
+//! This module implements that interchange: a compact binary encoding with
+//! timestamp delta compression (the standard AER-DAT style trick), used by
+//! the coordinator's transport layer and by the architecture model to count
+//! toggled wire bits for the energy estimate.
+
+use super::event::{Event, Polarity, Resolution};
+
+/// Errors produced when decoding a corrupt AER byte stream.
+#[derive(Debug, PartialEq, Eq)]
+pub enum AerError {
+    /// Stream ended inside a record.
+    Truncated,
+    /// Coordinate outside the declared geometry.
+    OutOfRange { x: u16, y: u16 },
+    /// Timestamp delta overflowed the accumulator.
+    TimestampOverflow,
+}
+
+impl std::fmt::Display for AerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AerError::Truncated => write!(f, "AER stream truncated mid-record"),
+            AerError::OutOfRange { x, y } => write!(f, "AER coordinate ({x},{y}) out of range"),
+            AerError::TimestampOverflow => write!(f, "AER timestamp accumulator overflow"),
+        }
+    }
+}
+
+impl std::error::Error for AerError {}
+
+/// Encode events (must be time-sorted) into the wire format:
+/// per record: varint Δt (µs) | u16 x | u16 y | u8 polarity.
+pub fn encode(events: &[Event]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(events.len() * 6);
+    let mut last_t = 0u64;
+    for e in events {
+        debug_assert!(e.t >= last_t, "events must be sorted for AER encoding");
+        write_varint(&mut out, e.t - last_t);
+        out.extend_from_slice(&e.x.to_le_bytes());
+        out.extend_from_slice(&e.y.to_le_bytes());
+        out.push(match e.p {
+            Polarity::On => 1,
+            Polarity::Off => 0,
+        });
+        last_t = e.t;
+    }
+    out
+}
+
+/// Decode a byte stream produced by [`encode`], validating geometry.
+pub fn decode(bytes: &[u8], res: Resolution) -> Result<Vec<Event>, AerError> {
+    let mut events = Vec::new();
+    let mut pos = 0usize;
+    let mut t = 0u64;
+    while pos < bytes.len() {
+        let (dt, used) = read_varint(&bytes[pos..]).ok_or(AerError::Truncated)?;
+        pos += used;
+        t = t.checked_add(dt).ok_or(AerError::TimestampOverflow)?;
+        if pos + 5 > bytes.len() {
+            return Err(AerError::Truncated);
+        }
+        let x = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]);
+        let y = u16::from_le_bytes([bytes[pos + 2], bytes[pos + 3]]);
+        let p = if bytes[pos + 4] != 0 { Polarity::On } else { Polarity::Off };
+        pos += 5;
+        if !res.contains(x, y) {
+            return Err(AerError::OutOfRange { x, y });
+        }
+        events.push(Event { t, x, y, p });
+    }
+    Ok(events)
+}
+
+/// Number of address bits for one AER word at the given geometry — what the
+/// 2D architecture's encoder must produce per event (row + column + polarity).
+pub fn address_bits(res: Resolution) -> u32 {
+    bits_for(res.width as u32 - 1) + bits_for(res.height as u32 - 1) + 1
+}
+
+fn bits_for(max_value: u32) -> u32 {
+    32 - max_value.leading_zeros()
+}
+
+fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+fn read_varint(bytes: &[u8]) -> Option<(u64, usize)> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &b) in bytes.iter().enumerate() {
+        if shift >= 64 {
+            return None;
+        }
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Some((v, i + 1));
+        }
+        shift += 7;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    #[test]
+    fn roundtrip_simple() {
+        let evs = vec![
+            Event::new(0, 0, 0, Polarity::On),
+            Event::new(10, 5, 7, Polarity::Off),
+            Event::new(1_000_000, 319, 239, Polarity::On),
+        ];
+        let bytes = encode(&evs);
+        let back = decode(&bytes, Resolution::QVGA).unwrap();
+        assert_eq!(evs, back);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range() {
+        let evs = vec![Event::new(0, 500, 0, Polarity::On)];
+        let bytes = encode(&evs);
+        assert_eq!(
+            decode(&bytes, Resolution::QVGA),
+            Err(AerError::OutOfRange { x: 500, y: 0 })
+        );
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let evs = vec![Event::new(12345, 1, 2, Polarity::On)];
+        let mut bytes = encode(&evs);
+        bytes.pop();
+        assert_eq!(decode(&bytes, Resolution::QVGA), Err(AerError::Truncated));
+    }
+
+    #[test]
+    fn address_bits_qvga() {
+        // 9 bits column (0..319) + 8 bits row (0..239) + 1 polarity = 18.
+        assert_eq!(address_bits(Resolution::QVGA), 18);
+        assert_eq!(address_bits(Resolution::NMNIST), 13); // 6+6+1
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX / 2] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let (back, used) = read_varint(&buf).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(used, buf.len());
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_random_streams() {
+        check("aer roundtrip", 200, |g| {
+            let n = g.usize(0, 200);
+            let mut t = 0u64;
+            let evs: Vec<Event> = (0..n)
+                .map(|_| {
+                    t += g.u64(0, 10_000);
+                    Event::new(
+                        t,
+                        g.u64(0, 319) as u16,
+                        g.u64(0, 239) as u16,
+                        if g.bool(0.5) { Polarity::On } else { Polarity::Off },
+                    )
+                })
+                .collect();
+            let back = decode(&encode(&evs), Resolution::QVGA).unwrap();
+            assert_eq!(evs, back);
+        });
+    }
+}

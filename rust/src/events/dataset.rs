@@ -1,0 +1,341 @@
+//! Synthetic event-camera classification datasets.
+//!
+//! Offline substitutes for the four Table-II datasets. Each sample is an
+//! event stream produced by the same v2e converter used everywhere else, so
+//! the temporal statistics (saccade-locked bursts, polarity structure,
+//! motion-dependent rates) are genuine even though the imagery is synthetic:
+//!
+//! * `SynNMnist`   — 10 digit glyphs under tri-saccade motion (N-MNIST rig).
+//! * `SynShapes`   — 8 shape classes with scale/rotation jitter
+//!                   (N-Caltech101 stand-in).
+//! * `SynCifarDvs` — shapes over moving textured background (harder,
+//!                   CIFAR10-DVS stand-in).
+//! * `SynGesture`  — 6 global-motion classes (DVS128-Gesture stand-in).
+
+use super::event::{LabeledEvent, Resolution};
+use super::raster::{digit_glyph, shape_glyph, ShapeClass};
+use super::scene::{GlyphScene, Scene, TextureMotion, TextureScene};
+use super::v2e::{convert, DvsParams};
+use crate::util::grid::Grid;
+use crate::util::rng::Pcg64;
+
+/// One classification sample: an event stream plus its class label.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub events: Vec<LabeledEvent>,
+    pub label: usize,
+    /// Stream duration in µs (frames are cut from [0, duration_us]).
+    pub duration_us: u64,
+}
+
+/// A complete train/test split.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub res: Resolution,
+    pub n_classes: usize,
+    pub train: Vec<Sample>,
+    pub test: Vec<Sample>,
+}
+
+/// Dataset family selector (the Table II columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    NMnist,
+    Shapes,
+    CifarDvs,
+    Gesture,
+}
+
+impl Family {
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::NMnist => "syn-nmnist",
+            Family::Shapes => "syn-shapes",
+            Family::CifarDvs => "syn-cifardvs",
+            Family::Gesture => "syn-gesture",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "syn-nmnist" | "nmnist" => Some(Family::NMnist),
+            "syn-shapes" | "shapes" => Some(Family::Shapes),
+            "syn-cifardvs" | "cifardvs" => Some(Family::CifarDvs),
+            "syn-gesture" | "gesture" => Some(Family::Gesture),
+            _ => None,
+        }
+    }
+}
+
+/// Generation options. Defaults are sized for the 1-core CI budget; the
+/// e2e example scales them up.
+#[derive(Clone, Copy, Debug)]
+pub struct GenOptions {
+    pub train_per_class: usize,
+    pub test_per_class: usize,
+    /// Stream duration per sample, seconds.
+    pub duration_s: f64,
+    /// BA noise rate folded into every sample (events are still labeled).
+    pub noise_hz: f64,
+    pub seed: u64,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        Self { train_per_class: 24, test_per_class: 8, duration_s: 0.15, noise_hz: 1.0, seed: 7 }
+    }
+}
+
+/// Generate a dataset of the given family.
+pub fn generate(family: Family, opts: GenOptions) -> Dataset {
+    match family {
+        Family::NMnist => gen_nmnist(opts),
+        Family::Shapes => gen_shapes(opts),
+        Family::CifarDvs => gen_cifardvs(opts),
+        Family::Gesture => gen_gesture(opts),
+    }
+}
+
+fn make_sample(
+    scene: &dyn Scene,
+    res: Resolution,
+    label: usize,
+    opts: &GenOptions,
+    seed: u64,
+) -> Sample {
+    let params = DvsParams::default();
+    let signal = convert(scene, res, params, opts.duration_s);
+    let events = if opts.noise_hz > 0.0 {
+        super::noise::contaminate(&signal, res, opts.noise_hz, opts.duration_s, seed)
+    } else {
+        signal
+    };
+    Sample { events, label, duration_us: (opts.duration_s * 1e6) as u64 }
+}
+
+fn gen_nmnist(opts: GenOptions) -> Dataset {
+    let res = Resolution::NMNIST;
+    let mut rng = Pcg64::with_stream(opts.seed, 0x01);
+    let mut gen_split = |per_class: usize, salt: u64| -> Vec<Sample> {
+        let mut out = Vec::new();
+        for d in 0..10u8 {
+            for k in 0..per_class {
+                // Jitter: glyph size and saccade amplitude vary per sample.
+                let size = rng.range_u64(20, 26) as usize;
+                let amp = rng.range_f64(3.0, 6.0);
+                let mut glyph = digit_glyph(d, size);
+                jitter_translate(&mut glyph, &mut rng, res);
+                let scene = GlyphScene::new(glyph, opts.duration_s, amp);
+                out.push(make_sample(
+                    &scene,
+                    res,
+                    d as usize,
+                    &opts,
+                    opts.seed ^ salt ^ (d as u64) << 8 ^ k as u64,
+                ));
+            }
+        }
+        out
+    };
+    let train = gen_split(opts.train_per_class, 0x1111);
+    let test = gen_split(opts.test_per_class, 0x2222);
+    Dataset { name: Family::NMnist.name(), res, n_classes: 10, train, test }
+}
+
+fn gen_shapes(opts: GenOptions) -> Dataset {
+    let res = Resolution::new(48, 48);
+    let mut rng = Pcg64::with_stream(opts.seed, 0x02);
+    let mut gen_split = |per_class: usize, salt: u64| -> Vec<Sample> {
+        let mut out = Vec::new();
+        for class in ShapeClass::ALL {
+            for k in 0..per_class {
+                let rot = rng.range_f64(0.0, std::f64::consts::TAU);
+                let scale = rng.range_f64(0.7, 1.0);
+                let mut glyph = shape_glyph(class, 36, rot, scale);
+                jitter_translate(&mut glyph, &mut rng, res);
+                let amp = rng.range_f64(3.0, 7.0);
+                let scene = GlyphScene::new(glyph, opts.duration_s, amp);
+                out.push(make_sample(
+                    &scene,
+                    res,
+                    class.label(),
+                    &opts,
+                    opts.seed ^ salt ^ (class.label() as u64) << 8 ^ k as u64,
+                ));
+            }
+        }
+        out
+    };
+    let train = gen_split(opts.train_per_class, 0x3333);
+    let test = gen_split(opts.test_per_class, 0x4444);
+    Dataset { name: Family::Shapes.name(), res, n_classes: 8, train, test }
+}
+
+/// CIFAR10-DVS stand-in: shapes over a moving texture → clutter makes it
+/// the hardest family, mirroring the accuracy ordering in Table II.
+fn gen_cifardvs(opts: GenOptions) -> Dataset {
+    let res = Resolution::new(48, 48);
+    let mut rng = Pcg64::with_stream(opts.seed, 0x03);
+    // Use 6 of the shape classes over cluttered background.
+    let classes = &ShapeClass::ALL[..6];
+    let mut gen_split = |per_class: usize, salt: u64| -> Vec<Sample> {
+        let mut out = Vec::new();
+        for (li, &class) in classes.iter().enumerate() {
+            for k in 0..per_class {
+                let rot = rng.range_f64(0.0, std::f64::consts::TAU);
+                let glyph = shape_glyph(class, 32, rot, rng.range_f64(0.75, 1.0));
+                let scene = ClutteredScene {
+                    glyph: GlyphScene::new(glyph, opts.duration_s, rng.range_f64(4.0, 7.0)),
+                    texture: TextureScene::new(
+                        res.width,
+                        res.height,
+                        TextureMotion::Translate {
+                            vx: rng.range_f64(-25.0, 25.0),
+                            vy: rng.range_f64(-8.0, 8.0),
+                        },
+                        opts.seed ^ salt ^ k as u64,
+                    ),
+                };
+                out.push(make_sample(
+                    &scene,
+                    res,
+                    li,
+                    &opts,
+                    opts.seed ^ salt ^ (li as u64) << 8 ^ k as u64,
+                ));
+            }
+        }
+        out
+    };
+    let train = gen_split(opts.train_per_class, 0x5555);
+    let test = gen_split(opts.test_per_class, 0x6666);
+    Dataset { name: Family::CifarDvs.name(), res, n_classes: 6, train, test }
+}
+
+/// Gesture stand-in: 6 global-motion classes over a textured field.
+fn gen_gesture(opts: GenOptions) -> Dataset {
+    let res = Resolution::new(48, 48);
+    let mut rng = Pcg64::with_stream(opts.seed, 0x04);
+    let motions: [fn(&mut Pcg64) -> TextureMotion; 6] = [
+        |r| TextureMotion::Translate { vx: r.range_f64(40.0, 70.0), vy: 0.0 },
+        |r| TextureMotion::Translate { vx: -r.range_f64(40.0, 70.0), vy: 0.0 },
+        |r| TextureMotion::Translate { vx: 0.0, vy: r.range_f64(40.0, 70.0) },
+        |r| TextureMotion::Translate { vx: 0.0, vy: -r.range_f64(40.0, 70.0) },
+        |r| TextureMotion::Rotate { omega: r.range_f64(2.0, 4.0) },
+        |r| TextureMotion::Rotate { omega: -r.range_f64(2.0, 4.0) },
+    ];
+    let mut gen_split = |per_class: usize, salt: u64| -> Vec<Sample> {
+        let mut out = Vec::new();
+        for (li, mk) in motions.iter().enumerate() {
+            for k in 0..per_class {
+                let motion = mk(&mut rng);
+                let scene = TextureScene::new(
+                    res.width,
+                    res.height,
+                    motion,
+                    opts.seed ^ salt ^ (li as u64) << 16 ^ k as u64,
+                );
+                out.push(make_sample(
+                    &scene,
+                    res,
+                    li,
+                    &opts,
+                    opts.seed ^ salt ^ (li as u64) << 8 ^ k as u64,
+                ));
+            }
+        }
+        out
+    };
+    let train = gen_split(opts.train_per_class, 0x7777);
+    let test = gen_split(opts.test_per_class, 0x8888);
+    Dataset { name: Family::Gesture.name(), res, n_classes: 6, train, test }
+}
+
+/// Glyph over moving texture (CIFAR10-DVS-style clutter).
+struct ClutteredScene {
+    glyph: GlyphScene,
+    texture: TextureScene,
+}
+
+impl Scene for ClutteredScene {
+    fn intensity(&self, x: f64, y: f64, t: f64) -> f64 {
+        0.6 * self.glyph.intensity(x, y, t) + 0.4 * self.texture.intensity(x, y, t)
+    }
+    fn name(&self) -> &'static str {
+        "cluttered-glyph"
+    }
+}
+
+/// Re-center a glyph raster inside the sensor with random translation so
+/// samples of a class are not pixel-aligned.
+fn jitter_translate(glyph: &mut Grid<f64>, rng: &mut Pcg64, res: Resolution) {
+    let max_dx = (res.width as usize).saturating_sub(glyph.width());
+    let max_dy = (res.height as usize).saturating_sub(glyph.height());
+    let dx = if max_dx > 0 { rng.below(max_dx as u64 + 1) as usize } else { 0 };
+    let dy = if max_dy > 0 { rng.below(max_dy as u64 + 1) as usize } else { 0 };
+    let mut out = Grid::new(res.width as usize, res.height as usize, 0.0);
+    for (x, y, &v) in glyph.iter_coords() {
+        if v > 0.0 {
+            out.set(x + dx, y + dy, v);
+        }
+    }
+    *glyph = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> GenOptions {
+        GenOptions { train_per_class: 2, test_per_class: 1, duration_s: 0.08, noise_hz: 1.0, seed: 5 }
+    }
+
+    #[test]
+    fn nmnist_shape_and_labels() {
+        let ds = generate(Family::NMnist, tiny_opts());
+        assert_eq!(ds.n_classes, 10);
+        assert_eq!(ds.train.len(), 20);
+        assert_eq!(ds.test.len(), 10);
+        for s in ds.train.iter().chain(&ds.test) {
+            assert!(s.label < 10);
+            assert!(!s.events.is_empty(), "sample has no events");
+            assert!(s.events.windows(2).all(|w| w[0].ev.t <= w[1].ev.t));
+        }
+    }
+
+    #[test]
+    fn all_families_generate() {
+        for fam in [Family::Shapes, Family::CifarDvs, Family::Gesture] {
+            let ds = generate(fam, tiny_opts());
+            assert!(!ds.train.is_empty());
+            assert!(ds.train.iter().all(|s| !s.events.is_empty()), "{}", ds.name);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(Family::NMnist, tiny_opts());
+        let b = generate(Family::NMnist, tiny_opts());
+        assert_eq!(a.train[0].events.len(), b.train[0].events.len());
+        assert_eq!(a.train[0].events.first(), b.train[0].events.first());
+    }
+
+    #[test]
+    fn family_name_roundtrip() {
+        for fam in [Family::NMnist, Family::Shapes, Family::CifarDvs, Family::Gesture] {
+            assert_eq!(Family::from_name(fam.name()), Some(fam));
+        }
+        assert_eq!(Family::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn events_within_sensor_bounds() {
+        let ds = generate(Family::Gesture, tiny_opts());
+        for s in &ds.train {
+            for e in &s.events {
+                assert!(ds.res.contains(e.ev.x, e.ev.y));
+            }
+        }
+    }
+}

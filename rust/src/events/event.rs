@@ -1,0 +1,178 @@
+//! Core event-camera data types.
+//!
+//! A DVS event is the tuple (x, y, t, p) of Eq. (1) in the paper: pixel
+//! coordinates, a microsecond timestamp, and the polarity of the brightness
+//! change. The simulator additionally tracks per-event ground truth
+//! (signal vs injected noise) so denoising ROC curves (Fig. 10d) can be
+//! computed exactly.
+
+/// Polarity of the temporal-contrast change that triggered the event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Polarity {
+    /// Brightness increase (ON event).
+    On,
+    /// Brightness decrease (OFF event).
+    Off,
+}
+
+impl Polarity {
+    /// Index form used for per-polarity storage planes (ON=1, OFF=0).
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Polarity::Off => 0,
+            Polarity::On => 1,
+        }
+    }
+
+    #[inline]
+    pub fn from_index(i: usize) -> Self {
+        if i == 0 { Polarity::Off } else { Polarity::On }
+    }
+
+    /// Signed value (+1 / -1) for accumulation representations.
+    #[inline]
+    pub fn sign(self) -> i8 {
+        match self {
+            Polarity::Off => -1,
+            Polarity::On => 1,
+        }
+    }
+}
+
+/// One Address-Event-Representation event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Timestamp in microseconds since stream start (DVS convention).
+    pub t: u64,
+    /// Column, 0-based.
+    pub x: u16,
+    /// Row, 0-based.
+    pub y: u16,
+    /// Contrast polarity.
+    pub p: Polarity,
+}
+
+impl Event {
+    pub fn new(t: u64, x: u16, y: u16, p: Polarity) -> Self {
+        Self { t, x, y, p }
+    }
+
+    /// Timestamp in seconds.
+    #[inline]
+    pub fn t_sec(&self) -> f64 {
+        self.t as f64 * 1e-6
+    }
+}
+
+/// An event plus its ground-truth provenance label. The label never reaches
+/// any algorithm under test — it is used only by the metrics layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LabeledEvent {
+    pub ev: Event,
+    /// True if this event came from the scene (signal), false if it was
+    /// injected background-activity noise.
+    pub is_signal: bool,
+}
+
+/// Sensor geometry. QVGA (320×240) is the paper's evaluation resolution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resolution {
+    pub width: u16,
+    pub height: u16,
+}
+
+impl Resolution {
+    pub const QVGA: Resolution = Resolution { width: 320, height: 240 };
+    /// DAVIS240C, used by the image-reconstruction task.
+    pub const DAVIS240: Resolution = Resolution { width: 240, height: 180 };
+    /// DAVIS346, used by the DND21 denoise recordings.
+    pub const DAVIS346: Resolution = Resolution { width: 346, height: 260 };
+    /// N-MNIST native sensor window.
+    pub const NMNIST: Resolution = Resolution { width: 34, height: 34 };
+
+    pub fn new(width: u16, height: u16) -> Self {
+        assert!(width > 0 && height > 0);
+        Self { width, height }
+    }
+
+    #[inline]
+    pub fn pixels(&self) -> usize {
+        self.width as usize * self.height as usize
+    }
+
+    #[inline]
+    pub fn contains(&self, x: u16, y: u16) -> bool {
+        x < self.width && y < self.height
+    }
+
+    /// Flat row-major pixel index.
+    #[inline]
+    pub fn index(&self, x: u16, y: u16) -> usize {
+        debug_assert!(self.contains(x, y));
+        y as usize * self.width as usize + x as usize
+    }
+}
+
+/// Sort events by timestamp, stably (ties keep generation order, which
+/// matches the AER arbiter's fairness in hardware).
+pub fn sort_events(events: &mut [Event]) {
+    events.sort_by_key(|e| e.t);
+}
+
+/// Merge two already-sorted event streams into one sorted stream.
+pub fn merge_sorted(a: &[LabeledEvent], b: &[LabeledEvent]) -> Vec<LabeledEvent> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        if a[i].ev.t <= b[j].ev.t {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out.extend_from_slice(&a[i..]);
+    out.extend_from_slice(&b[j..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polarity_roundtrip() {
+        assert_eq!(Polarity::from_index(Polarity::On.index()), Polarity::On);
+        assert_eq!(Polarity::from_index(Polarity::Off.index()), Polarity::Off);
+        assert_eq!(Polarity::On.sign(), 1);
+        assert_eq!(Polarity::Off.sign(), -1);
+    }
+
+    #[test]
+    fn resolution_indexing() {
+        let r = Resolution::QVGA;
+        assert_eq!(r.pixels(), 76_800);
+        assert_eq!(r.index(0, 0), 0);
+        assert_eq!(r.index(319, 239), 76_799);
+        assert!(r.contains(319, 239));
+        assert!(!r.contains(320, 0));
+    }
+
+    #[test]
+    fn merge_sorted_interleaves() {
+        let mk = |t| LabeledEvent { ev: Event::new(t, 0, 0, Polarity::On), is_signal: true };
+        let a = vec![mk(1), mk(5), mk(9)];
+        let b = vec![mk(2), mk(5), mk(10)];
+        let m = merge_sorted(&a, &b);
+        let ts: Vec<u64> = m.iter().map(|e| e.ev.t).collect();
+        assert_eq!(ts, vec![1, 2, 5, 5, 9, 10]);
+    }
+
+    #[test]
+    fn t_sec_scaling() {
+        let e = Event::new(1_500_000, 1, 2, Polarity::Off);
+        assert!((e.t_sec() - 1.5).abs() < 1e-12);
+    }
+}

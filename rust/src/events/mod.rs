@@ -1,0 +1,19 @@
+//! Event-camera data layer: core AER types, the v2e-style converter,
+//! synthetic scenes/datasets, noise injection and stream windowing.
+//!
+//! Everything downstream (ISC array, denoiser, classifier pipeline,
+//! architecture models) consumes the [`event::Event`] /
+//! [`event::LabeledEvent`] types defined here.
+
+pub mod aer;
+pub mod dataset;
+pub mod davis;
+pub mod event;
+pub mod noise;
+pub mod raster;
+pub mod replay;
+pub mod scene;
+pub mod stream;
+pub mod v2e;
+
+pub use event::{Event, LabeledEvent, Polarity, Resolution};

@@ -1,0 +1,152 @@
+//! Background-activity (BA) noise injection.
+//!
+//! The DND21 denoise benchmark [51] adds shot/leak noise at a fixed
+//! per-pixel rate (the paper uses 5 Hz/pixel) to a clean recording; the
+//! denoiser is then scored against the known signal/noise labels. This
+//! module reproduces that protocol: homogeneous Poisson noise per pixel,
+//! uniform polarity, merged into the labeled signal stream.
+
+use super::event::{merge_sorted, Event, LabeledEvent, Polarity, Resolution};
+use crate::util::rng::Pcg64;
+
+/// Generate BA noise events at `rate_hz` per pixel over [0, duration_s],
+/// labeled `is_signal = false`, sorted by timestamp.
+pub fn ba_noise(
+    res: Resolution,
+    rate_hz: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<LabeledEvent> {
+    assert!(rate_hz >= 0.0);
+    let mut rng = Pcg64::with_stream(seed, 0x0153);
+    let mut out = Vec::new();
+    if rate_hz == 0.0 {
+        return out;
+    }
+    // Superposition of per-pixel Poisson processes == one Poisson process at
+    // aggregate rate with uniformly random pixel assignment. O(total events)
+    // instead of O(pixels) bookkeeping.
+    let total_rate = rate_hz * res.pixels() as f64;
+    let mut t = 0.0f64;
+    loop {
+        t += rng.exponential(total_rate);
+        if t >= duration_s {
+            break;
+        }
+        let x = rng.below(res.width as u64) as u16;
+        let y = rng.below(res.height as u64) as u16;
+        let p = if rng.bool(0.5) { Polarity::On } else { Polarity::Off };
+        out.push(LabeledEvent {
+            ev: Event::new((t * 1e6) as u64 + 1, x, y, p),
+            is_signal: false,
+        });
+    }
+    out
+}
+
+/// Mix a clean signal stream with BA noise at `rate_hz`/pixel (DND21
+/// protocol). Both inputs must be sorted; the output is sorted.
+pub fn contaminate(
+    signal: &[LabeledEvent],
+    res: Resolution,
+    rate_hz: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<LabeledEvent> {
+    let noise = ba_noise(res, rate_hz, duration_s, seed);
+    merge_sorted(signal, &noise)
+}
+
+/// Hot-pixel noise: a handful of pixels firing at an elevated rate — a
+/// failure mode the STCF must also reject (used by robustness tests).
+pub fn hot_pixels(
+    res: Resolution,
+    n_hot: usize,
+    rate_hz: f64,
+    duration_s: f64,
+    seed: u64,
+) -> Vec<LabeledEvent> {
+    let mut rng = Pcg64::with_stream(seed, 0x4077);
+    let mut out = Vec::new();
+    let mut events: Vec<LabeledEvent> = Vec::new();
+    for _ in 0..n_hot {
+        let x = rng.below(res.width as u64) as u16;
+        let y = rng.below(res.height as u64) as u16;
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exponential(rate_hz);
+            if t >= duration_s {
+                break;
+            }
+            events.push(LabeledEvent {
+                ev: Event::new((t * 1e6) as u64 + 1, x, y, Polarity::On),
+                is_signal: false,
+            });
+        }
+    }
+    events.sort_by_key(|e| e.ev.t);
+    out.extend(events);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noise_rate_matches_lambda() {
+        let res = Resolution::new(64, 48);
+        let evs = ba_noise(res, 5.0, 2.0, 42);
+        let expected = 5.0 * res.pixels() as f64 * 2.0;
+        let got = evs.len() as f64;
+        assert!(
+            (got - expected).abs() < 4.0 * expected.sqrt(),
+            "expected≈{expected} got={got}"
+        );
+    }
+
+    #[test]
+    fn noise_sorted_and_labeled() {
+        let evs = ba_noise(Resolution::new(16, 16), 20.0, 1.0, 7);
+        assert!(evs.windows(2).all(|w| w[0].ev.t <= w[1].ev.t));
+        assert!(evs.iter().all(|e| !e.is_signal));
+    }
+
+    #[test]
+    fn zero_rate_is_empty() {
+        assert!(ba_noise(Resolution::QVGA, 0.0, 1.0, 1).is_empty());
+    }
+
+    #[test]
+    fn contaminate_preserves_both_populations() {
+        let res = Resolution::new(8, 8);
+        let signal = vec![
+            LabeledEvent { ev: Event::new(100, 1, 1, Polarity::On), is_signal: true },
+            LabeledEvent { ev: Event::new(500_000, 2, 2, Polarity::Off), is_signal: true },
+        ];
+        let mixed = contaminate(&signal, res, 10.0, 1.0, 3);
+        let n_sig = mixed.iter().filter(|e| e.is_signal).count();
+        let n_noise = mixed.iter().filter(|e| !e.is_signal).count();
+        assert_eq!(n_sig, 2);
+        assert!(n_noise > 0);
+        assert!(mixed.windows(2).all(|w| w[0].ev.t <= w[1].ev.t));
+    }
+
+    #[test]
+    fn polarity_roughly_balanced() {
+        let evs = ba_noise(Resolution::new(32, 32), 50.0, 1.0, 9);
+        let on = evs.iter().filter(|e| e.ev.p == Polarity::On).count() as f64;
+        let frac = on / evs.len() as f64;
+        assert!((frac - 0.5).abs() < 0.05, "ON fraction {frac}");
+    }
+
+    #[test]
+    fn hot_pixels_concentrated() {
+        let evs = hot_pixels(Resolution::new(32, 32), 3, 1000.0, 0.5, 11);
+        let mut coords: Vec<(u16, u16)> = evs.iter().map(|e| (e.ev.x, e.ev.y)).collect();
+        coords.sort_unstable();
+        coords.dedup();
+        assert!(coords.len() <= 3);
+        assert!(evs.len() > 1000);
+    }
+}

@@ -1,0 +1,300 @@
+//! Tiny software rasterizer used to procedurally draw dataset glyphs
+//! (digits, shapes) — the offline substitute for downloading N-MNIST /
+//! N-Caltech101 / CIFAR10-DVS source images.
+
+use crate::util::grid::Grid;
+
+/// Anti-aliased-ish line segment: stamps a disc of radius `w` along the way.
+pub fn draw_line(g: &mut Grid<f64>, x0: f64, y0: f64, x1: f64, y1: f64, w: f64, v: f64) {
+    let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt().max(1e-9);
+    let steps = (len * 2.0).ceil() as usize + 1;
+    for s in 0..=steps {
+        let f = s as f64 / steps as f64;
+        stamp_disc(g, x0 + f * (x1 - x0), y0 + f * (y1 - y0), w, v);
+    }
+}
+
+/// Circle outline.
+pub fn draw_circle(g: &mut Grid<f64>, cx: f64, cy: f64, r: f64, w: f64, v: f64) {
+    let steps = (std::f64::consts::TAU * r * 2.0).ceil() as usize + 8;
+    for s in 0..steps {
+        let a = std::f64::consts::TAU * s as f64 / steps as f64;
+        stamp_disc(g, cx + r * a.cos(), cy + r * a.sin(), w, v);
+    }
+}
+
+/// Filled disc.
+pub fn fill_disc(g: &mut Grid<f64>, cx: f64, cy: f64, r: f64, v: f64) {
+    let (w, h) = (g.width() as i64, g.height() as i64);
+    for y in ((cy - r).floor() as i64).max(0)..=((cy + r).ceil() as i64).min(h - 1) {
+        for x in ((cx - r).floor() as i64).max(0)..=((cx + r).ceil() as i64).min(w - 1) {
+            let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+            if d2 <= r * r {
+                let cur = *g.get(x as usize, y as usize);
+                g.set(x as usize, y as usize, cur.max(v));
+            }
+        }
+    }
+}
+
+/// Axis-aligned rectangle outline.
+pub fn draw_rect(g: &mut Grid<f64>, x0: f64, y0: f64, x1: f64, y1: f64, w: f64, v: f64) {
+    draw_line(g, x0, y0, x1, y0, w, v);
+    draw_line(g, x1, y0, x1, y1, w, v);
+    draw_line(g, x1, y1, x0, y1, w, v);
+    draw_line(g, x0, y1, x0, y0, w, v);
+}
+
+fn stamp_disc(g: &mut Grid<f64>, cx: f64, cy: f64, r: f64, v: f64) {
+    let (w, h) = (g.width() as i64, g.height() as i64);
+    let rr = r.max(0.5);
+    for y in ((cy - rr).floor() as i64).max(0)..=((cy + rr).ceil() as i64).min(h - 1) {
+        for x in ((cx - rr).floor() as i64).max(0)..=((cx + rr).ceil() as i64).min(w - 1) {
+            let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+            if d2 <= rr * rr {
+                let cur = *g.get(x as usize, y as usize);
+                g.set(x as usize, y as usize, cur.max(v));
+            }
+        }
+    }
+}
+
+/// Draw digit `d` (0–9) into a fresh `size`×`size` raster. Strokes follow a
+/// 7-segment-plus-diagonals skeleton, normalized to the raster size.
+pub fn digit_glyph(d: u8, size: usize) -> Grid<f64> {
+    assert!(d <= 9);
+    let mut g = Grid::new(size, size, 0.0);
+    let s = size as f64;
+    // Canonical segment endpoints in a unit box with margins.
+    let (l, r_, t, m, b) = (0.25 * s, 0.75 * s, 0.15 * s, 0.5 * s, 0.85 * s);
+    let w = (s * 0.06).max(0.8);
+    let mut seg = |x0: f64, y0: f64, x1: f64, y1: f64| draw_line(&mut g, x0, y0, x1, y1, w, 1.0);
+    match d {
+        0 => {
+            seg(l, t, r_, t);
+            seg(r_, t, r_, b);
+            seg(r_, b, l, b);
+            seg(l, b, l, t);
+            seg(l, b, r_, t); // slash distinguishes from 'O'
+        }
+        1 => {
+            seg((l + r_) / 2.0, t, (l + r_) / 2.0, b);
+            seg(l, b, r_, b);
+            seg((l + r_) / 2.0, t, l, t + 0.15 * s);
+        }
+        2 => {
+            seg(l, t, r_, t);
+            seg(r_, t, r_, m);
+            seg(r_, m, l, b);
+            seg(l, b, r_, b);
+        }
+        3 => {
+            seg(l, t, r_, t);
+            seg(r_, t, r_, b);
+            seg(l, m, r_, m);
+            seg(l, b, r_, b);
+        }
+        4 => {
+            seg(l, t, l, m);
+            seg(l, m, r_, m);
+            seg(r_, t, r_, b);
+        }
+        5 => {
+            seg(r_, t, l, t);
+            seg(l, t, l, m);
+            seg(l, m, r_, m);
+            seg(r_, m, r_, b);
+            seg(r_, b, l, b);
+        }
+        6 => {
+            seg(r_, t, l, m);
+            seg(l, m, l, b);
+            seg(l, b, r_, b);
+            seg(r_, b, r_, m);
+            seg(r_, m, l, m);
+        }
+        7 => {
+            seg(l, t, r_, t);
+            seg(r_, t, (l + r_) / 2.0, b);
+        }
+        8 => {
+            seg(l, t, r_, t);
+            seg(l, t, l, b);
+            seg(r_, t, r_, b);
+            seg(l, m, r_, m);
+            seg(l, b, r_, b);
+        }
+        9 => {
+            seg(r_, m, l, m);
+            seg(l, m, l, t);
+            seg(l, t, r_, t);
+            seg(r_, t, r_, b);
+            seg(r_, b, l, b);
+        }
+        _ => unreachable!(),
+    }
+    g
+}
+
+/// Shape classes for the Caltech-like synthetic dataset.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShapeClass {
+    Circle,
+    Square,
+    Triangle,
+    Cross,
+    Star,
+    Ring,
+    HBars,
+    VBars,
+}
+
+impl ShapeClass {
+    pub const ALL: [ShapeClass; 8] = [
+        ShapeClass::Circle,
+        ShapeClass::Square,
+        ShapeClass::Triangle,
+        ShapeClass::Cross,
+        ShapeClass::Star,
+        ShapeClass::Ring,
+        ShapeClass::HBars,
+        ShapeClass::VBars,
+    ];
+
+    pub fn label(self) -> usize {
+        Self::ALL.iter().position(|&s| s == self).unwrap()
+    }
+}
+
+/// Draw a shape glyph with scale/rotation jitter (`rot` radians,
+/// `scale` ∈ (0, 1] of the raster).
+pub fn shape_glyph(class: ShapeClass, size: usize, rot: f64, scale: f64) -> Grid<f64> {
+    let mut g = Grid::new(size, size, 0.0);
+    let c = size as f64 / 2.0;
+    let r = c * 0.7 * scale;
+    let w = (size as f64 * 0.05).max(0.8);
+    let pt = |a: f64, rad: f64| (c + rad * (a + rot).cos(), c + rad * (a + rot).sin());
+    match class {
+        ShapeClass::Circle => draw_circle(&mut g, c, c, r, w, 1.0),
+        ShapeClass::Ring => {
+            draw_circle(&mut g, c, c, r, w, 1.0);
+            draw_circle(&mut g, c, c, r * 0.5, w, 1.0);
+        }
+        ShapeClass::Square => {
+            let pts: Vec<(f64, f64)> =
+                (0..4).map(|k| pt(std::f64::consts::FRAC_PI_4 + k as f64 * std::f64::consts::FRAC_PI_2, r)).collect();
+            for k in 0..4 {
+                let (x0, y0) = pts[k];
+                let (x1, y1) = pts[(k + 1) % 4];
+                draw_line(&mut g, x0, y0, x1, y1, w, 1.0);
+            }
+        }
+        ShapeClass::Triangle => {
+            let pts: Vec<(f64, f64)> =
+                (0..3).map(|k| pt(-std::f64::consts::FRAC_PI_2 + k as f64 * std::f64::consts::TAU / 3.0, r)).collect();
+            for k in 0..3 {
+                let (x0, y0) = pts[k];
+                let (x1, y1) = pts[(k + 1) % 3];
+                draw_line(&mut g, x0, y0, x1, y1, w, 1.0);
+            }
+        }
+        ShapeClass::Cross => {
+            let (x0, y0) = pt(0.0, r);
+            let (x1, y1) = pt(std::f64::consts::PI, r);
+            draw_line(&mut g, x0, y0, x1, y1, w, 1.0);
+            let (x0, y0) = pt(std::f64::consts::FRAC_PI_2, r);
+            let (x1, y1) = pt(-std::f64::consts::FRAC_PI_2, r);
+            draw_line(&mut g, x0, y0, x1, y1, w, 1.0);
+        }
+        ShapeClass::Star => {
+            for k in 0..5 {
+                let a0 = -std::f64::consts::FRAC_PI_2 + k as f64 * std::f64::consts::TAU / 5.0;
+                let a1 = -std::f64::consts::FRAC_PI_2 + ((k + 2) % 5) as f64 * std::f64::consts::TAU / 5.0;
+                let (x0, y0) = pt(a0, r);
+                let (x1, y1) = pt(a1, r);
+                draw_line(&mut g, x0, y0, x1, y1, w, 1.0);
+            }
+        }
+        ShapeClass::HBars => {
+            for k in 0..3 {
+                let y = c - r + k as f64 * r;
+                draw_line(&mut g, c - r, y, c + r, y, w, 1.0);
+            }
+        }
+        ShapeClass::VBars => {
+            for k in 0..3 {
+                let x = c - r + k as f64 * r;
+                draw_line(&mut g, x, c - r, x, c + r, w, 1.0);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ink(g: &Grid<f64>) -> f64 {
+        g.as_slice().iter().sum()
+    }
+
+    #[test]
+    fn all_digits_draw_something() {
+        for d in 0..=9u8 {
+            let g = digit_glyph(d, 24);
+            assert!(ink(&g) > 5.0, "digit {d} nearly empty");
+        }
+    }
+
+    #[test]
+    fn digits_are_distinct() {
+        let gs: Vec<Grid<f64>> = (0..=9u8).map(|d| digit_glyph(d, 24)).collect();
+        for i in 0..10 {
+            for j in i + 1..10 {
+                let diff: f64 = gs[i]
+                    .as_slice()
+                    .iter()
+                    .zip(gs[j].as_slice())
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                assert!(diff > 3.0, "digits {i} and {j} too similar (diff={diff})");
+            }
+        }
+    }
+
+    #[test]
+    fn shapes_draw_and_differ() {
+        let gs: Vec<Grid<f64>> =
+            ShapeClass::ALL.iter().map(|&c| shape_glyph(c, 32, 0.0, 1.0)).collect();
+        for (k, g) in gs.iter().enumerate() {
+            assert!(ink(g) > 5.0, "shape {k} nearly empty");
+        }
+        for i in 0..gs.len() {
+            for j in i + 1..gs.len() {
+                let diff: f64 = gs[i]
+                    .as_slice()
+                    .iter()
+                    .zip(gs[j].as_slice())
+                    .map(|(a, b)| (a - b).abs())
+                    .sum();
+                assert!(diff > 3.0, "shapes {i}/{j} too similar");
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_moves_ink() {
+        let a = shape_glyph(ShapeClass::Triangle, 32, 0.0, 1.0);
+        let b = shape_glyph(ShapeClass::Triangle, 32, 1.0, 1.0);
+        let diff: f64 =
+            a.as_slice().iter().zip(b.as_slice()).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 1.0);
+    }
+
+    #[test]
+    fn values_bounded() {
+        let g = digit_glyph(8, 24);
+        assert!(g.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+}

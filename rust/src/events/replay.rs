@@ -1,0 +1,241 @@
+//! Event-stream persistence: save/load labeled recordings so experiment
+//! workloads can be frozen, shared and replayed byte-identically.
+//!
+//! Two formats:
+//! * binary `.aer` — the [`super::aer`] wire format plus a label bitmap
+//!   and a small header (geometry, duration);
+//! * text `.csv` — `t,x,y,p,label` rows for quick inspection/plotting.
+
+use super::aer;
+use super::event::{Event, LabeledEvent, Polarity, Resolution};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"TSISCAER";
+const VERSION: u8 = 1;
+
+/// A saved recording.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Recording {
+    pub res: Resolution,
+    pub duration_us: u64,
+    pub events: Vec<LabeledEvent>,
+}
+
+/// Serialize to the binary container.
+pub fn to_bytes(rec: &Recording) -> Vec<u8> {
+    let events: Vec<Event> = rec.events.iter().map(|l| l.ev).collect();
+    let payload = aer::encode(&events);
+    let mut out = Vec::with_capacity(payload.len() + rec.events.len() / 8 + 64);
+    out.extend_from_slice(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&rec.res.width.to_le_bytes());
+    out.extend_from_slice(&rec.res.height.to_le_bytes());
+    out.extend_from_slice(&rec.duration_us.to_le_bytes());
+    out.extend_from_slice(&(rec.events.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    // Label bitmap (1 = signal).
+    let mut bitmap = vec![0u8; rec.events.len().div_ceil(8)];
+    for (i, le) in rec.events.iter().enumerate() {
+        if le.is_signal {
+            bitmap[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out.extend_from_slice(&bitmap);
+    out
+}
+
+/// Deserialize from the binary container.
+pub fn from_bytes(bytes: &[u8]) -> Result<Recording, String> {
+    let need = |n: usize, pos: usize| -> Result<(), String> {
+        if pos + n > bytes.len() {
+            Err(format!("truncated at offset {pos}"))
+        } else {
+            Ok(())
+        }
+    };
+    need(MAGIC.len() + 1, 0)?;
+    if &bytes[..8] != MAGIC {
+        return Err("bad magic".into());
+    }
+    if bytes[8] != VERSION {
+        return Err(format!("unsupported version {}", bytes[8]));
+    }
+    let mut pos = 9;
+    let rd_u16 = |pos: &mut usize| -> u16 {
+        let v = u16::from_le_bytes([bytes[*pos], bytes[*pos + 1]]);
+        *pos += 2;
+        v
+    };
+    need(2 + 2 + 8 + 8 + 8, pos)?;
+    let w = rd_u16(&mut pos);
+    let h = rd_u16(&mut pos);
+    let rd_u64 = |pos: &mut usize| -> u64 {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&bytes[*pos..*pos + 8]);
+        *pos += 8;
+        u64::from_le_bytes(b)
+    };
+    let duration_us = rd_u64(&mut pos);
+    let n_events = rd_u64(&mut pos) as usize;
+    let payload_len = rd_u64(&mut pos) as usize;
+    need(payload_len, pos)?;
+    let res = Resolution::new(w, h);
+    let events = aer::decode(&bytes[pos..pos + payload_len], res)
+        .map_err(|e| format!("payload: {e}"))?;
+    pos += payload_len;
+    if events.len() != n_events {
+        return Err(format!("event count mismatch: {} vs {}", events.len(), n_events));
+    }
+    let bm_len = n_events.div_ceil(8);
+    need(bm_len, pos)?;
+    let bitmap = &bytes[pos..pos + bm_len];
+    let labeled = events
+        .into_iter()
+        .enumerate()
+        .map(|(i, ev)| LabeledEvent { ev, is_signal: bitmap[i / 8] & (1 << (i % 8)) != 0 })
+        .collect();
+    Ok(Recording { res, duration_us, events: labeled })
+}
+
+/// Save to a file (binary container).
+pub fn save(rec: &Recording, path: impl AsRef<Path>) -> std::io::Result<()> {
+    std::fs::File::create(path)?.write_all(&to_bytes(rec))
+}
+
+/// Load from a file.
+pub fn load(path: impl AsRef<Path>) -> Result<Recording, String> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .map_err(|e| e.to_string())?
+        .read_to_end(&mut bytes)
+        .map_err(|e| e.to_string())?;
+    from_bytes(&bytes)
+}
+
+/// Export as CSV (`t_us,x,y,polarity,is_signal`).
+pub fn to_csv(rec: &Recording) -> String {
+    let mut s = String::from("t_us,x,y,polarity,is_signal\n");
+    for le in &rec.events {
+        s.push_str(&format!(
+            "{},{},{},{},{}\n",
+            le.ev.t,
+            le.ev.x,
+            le.ev.y,
+            match le.ev.p {
+                Polarity::On => 1,
+                Polarity::Off => 0,
+            },
+            le.is_signal as u8
+        ));
+    }
+    s
+}
+
+/// Parse the CSV form back.
+pub fn from_csv(text: &str, res: Resolution, duration_us: u64) -> Result<Recording, String> {
+    let mut events = Vec::new();
+    for (i, line) in text.lines().enumerate().skip(1) {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split(',').collect();
+        if cols.len() != 5 {
+            return Err(format!("line {}: expected 5 columns", i + 1));
+        }
+        let parse = |s: &str| s.trim().parse::<u64>().map_err(|e| format!("line {}: {e}", i + 1));
+        let t = parse(cols[0])?;
+        let x = parse(cols[1])? as u16;
+        let y = parse(cols[2])? as u16;
+        if !res.contains(x, y) {
+            return Err(format!("line {}: ({x},{y}) out of range", i + 1));
+        }
+        let p = if parse(cols[3])? != 0 { Polarity::On } else { Polarity::Off };
+        let is_signal = parse(cols[4])? != 0;
+        events.push(LabeledEvent { ev: Event::new(t, x, y, p), is_signal });
+    }
+    Ok(Recording { res, duration_us, events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn sample_rec() -> Recording {
+        Recording {
+            res: Resolution::new(32, 24),
+            duration_us: 100_000,
+            events: vec![
+                LabeledEvent { ev: Event::new(10, 1, 2, Polarity::On), is_signal: true },
+                LabeledEvent { ev: Event::new(500, 31, 23, Polarity::Off), is_signal: false },
+                LabeledEvent { ev: Event::new(99_999, 0, 0, Polarity::On), is_signal: true },
+            ],
+        }
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let rec = sample_rec();
+        let back = from_bytes(&to_bytes(&rec)).unwrap();
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let rec = sample_rec();
+        let back = from_csv(&to_csv(&rec), rec.res, rec.duration_us).unwrap();
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let mut b = to_bytes(&sample_rec());
+        b[0] = b'X';
+        assert!(from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let b = to_bytes(&sample_rec());
+        for cut in [4usize, 12, b.len() - 1] {
+            assert!(from_bytes(&b[..cut]).is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let rec = sample_rec();
+        let path = std::env::temp_dir().join("tsisc_replay_test.aer");
+        save(&rec, &path).unwrap();
+        let back = load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(rec, back);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_recordings() {
+        check("replay roundtrip", 60, |g| {
+            let res = Resolution::new(16, 16);
+            let n = g.usize(0, 100);
+            let mut t = 0u64;
+            let events: Vec<LabeledEvent> = (0..n)
+                .map(|_| {
+                    t += g.u64(0, 5_000);
+                    LabeledEvent {
+                        ev: Event::new(
+                            t,
+                            g.u64(0, 15) as u16,
+                            g.u64(0, 15) as u16,
+                            if g.bool(0.5) { Polarity::On } else { Polarity::Off },
+                        ),
+                        is_signal: g.bool(0.5),
+                    }
+                })
+                .collect();
+            let rec = Recording { res, duration_us: t + 1, events };
+            assert_eq!(from_bytes(&to_bytes(&rec)).unwrap(), rec);
+        });
+    }
+}

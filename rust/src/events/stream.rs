@@ -1,0 +1,124 @@
+//! Event-stream slicing and windowing helpers.
+//!
+//! The classification pipeline cuts streams into fixed 50 ms windows
+//! (paper Sec. IV-D); the reconstruction pipeline cuts at APS frame
+//! timestamps (Sec. IV-E). Both are implemented here over sorted slices.
+
+use super::event::LabeledEvent;
+
+/// Iterator of consecutive fixed-duration windows over a sorted stream.
+/// Each item is (window_start_us, window_end_us, &[events in window)).
+pub struct Windows<'a> {
+    events: &'a [LabeledEvent],
+    window_us: u64,
+    end_us: u64,
+    cursor: usize,
+    t: u64,
+}
+
+/// Cut `events` (sorted) into `window_us` windows covering [0, end_us).
+pub fn windows(events: &[LabeledEvent], window_us: u64, end_us: u64) -> Windows<'_> {
+    assert!(window_us > 0);
+    Windows { events, window_us, end_us, cursor: 0, t: 0 }
+}
+
+impl<'a> Iterator for Windows<'a> {
+    type Item = (u64, u64, &'a [LabeledEvent]);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.t >= self.end_us {
+            return None;
+        }
+        let start = self.t;
+        let end = (self.t + self.window_us).min(self.end_us);
+        let lo = self.cursor;
+        let mut hi = lo;
+        while hi < self.events.len() && self.events[hi].ev.t < end {
+            hi += 1;
+        }
+        self.cursor = hi;
+        self.t = end;
+        Some((start, end, &self.events[lo..hi]))
+    }
+}
+
+/// Slice events into intervals ending at each cut timestamp: for cuts
+/// `[t1, t2, ...]` yields the events in [prev, t_i). Used for APS-aligned
+/// segmentation in the reconstruction task.
+pub fn slices_at<'a>(
+    events: &'a [LabeledEvent],
+    cuts: &[u64],
+) -> Vec<(u64, &'a [LabeledEvent])> {
+    let mut out = Vec::with_capacity(cuts.len());
+    let mut lo = 0usize;
+    let mut _prev = 0u64;
+    for &c in cuts {
+        let mut hi = lo;
+        while hi < events.len() && events[hi].ev.t < c {
+            hi += 1;
+        }
+        out.push((c, &events[lo..hi]));
+        lo = hi;
+        _prev = c;
+    }
+    out
+}
+
+/// Event-rate series: events per second in consecutive bins (diagnostics
+/// and the architecture model's activity input).
+pub fn rate_series(events: &[LabeledEvent], bin_us: u64, end_us: u64) -> Vec<f64> {
+    let mut out = Vec::new();
+    for (_s, _e, w) in windows(events, bin_us, end_us) {
+        out.push(w.len() as f64 / (bin_us as f64 * 1e-6));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::event::{Event, Polarity};
+
+    fn ev(t: u64) -> LabeledEvent {
+        LabeledEvent { ev: Event::new(t, 0, 0, Polarity::On), is_signal: true }
+    }
+
+    #[test]
+    fn windows_partition_exactly() {
+        let evs: Vec<LabeledEvent> = [5, 10, 49_999, 50_000, 99_999, 150_000].iter()
+            .map(|&t| ev(t)).collect();
+        let ws: Vec<_> = windows(&evs, 50_000, 200_000).collect();
+        assert_eq!(ws.len(), 4);
+        assert_eq!(ws[0].2.len(), 3); // 5, 10, 49999
+        assert_eq!(ws[1].2.len(), 2); // 50000, 99999
+        assert_eq!(ws[2].2.len(), 0);
+        assert_eq!(ws[3].2.len(), 1); // 150000
+        let total: usize = ws.iter().map(|w| w.2.len()).sum();
+        assert_eq!(total, evs.len());
+    }
+
+    #[test]
+    fn windows_cover_range_without_events() {
+        let ws: Vec<_> = windows(&[], 10_000, 35_000).collect();
+        assert_eq!(ws.len(), 4);
+        assert_eq!(ws[3].0, 30_000);
+        assert_eq!(ws[3].1, 35_000);
+    }
+
+    #[test]
+    fn slices_at_cuts() {
+        let evs: Vec<LabeledEvent> = [10, 20, 30, 40].iter().map(|&t| ev(t)).collect();
+        let s = slices_at(&evs, &[25, 45]);
+        assert_eq!(s[0].1.len(), 2);
+        assert_eq!(s[1].1.len(), 2);
+    }
+
+    #[test]
+    fn rate_series_counts() {
+        let evs: Vec<LabeledEvent> = (0..100).map(|k| ev(k * 1_000)).collect();
+        let r = rate_series(&evs, 50_000, 100_000);
+        assert_eq!(r.len(), 2);
+        assert!((r[0] - 1_000.0).abs() < 1e-9); // 50 events / 50 ms
+        assert!((r[1] - 1_000.0).abs() < 1e-9);
+    }
+}

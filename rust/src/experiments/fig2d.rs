@@ -1,0 +1,44 @@
+//! Fig. 2(d): V_mem decay of the LL switch vs a conventional transmission
+//! gate at C_mem = 20 fF.
+
+use super::Effort;
+use crate::circuit::cell::{CellSim, LeakageMacro, V_FLOOR};
+use crate::circuit::params::{C_MEM_NOMINAL, VDD};
+
+pub fn run(effort: Effort) -> String {
+    let n = effort.scale(9, 25);
+    let mut s = super::banner("Fig. 2d — LL switch vs transmission gate decay (20 fF)");
+    let ll = CellSim::new(C_MEM_NOMINAL, LeakageMacro::ll_calibrated());
+    let tg = CellSim::new(C_MEM_NOMINAL, LeakageMacro::tg());
+    let (t_ll, v_ll) = ll.transient(VDD, 60e-3, n);
+    let (_, v_tg) = tg.transient(VDD, 60e-3, n);
+    s.push_str(&format!("{:>9} {:>10} {:>10}\n", "t (ms)", "LL (V)", "TG (V)"));
+    for i in 0..n {
+        s.push_str(&format!(
+            "{:>9.1} {:>10.3} {:>10.3}\n",
+            t_ll[i] * 1e3,
+            v_ll[i],
+            v_tg[i]
+        ));
+    }
+    let w_ll = ll.memory_window(V_FLOOR, 0.2);
+    let w_tg = tg.memory_window(V_FLOOR, 0.2);
+    s.push_str(&format!(
+        "\nmemory window (V > {V_FLOOR} V): LL = {:.1} ms, TG = {:.1} ms\n\
+         paper: LL extends the effective retention to >50 ms; the TG\n\
+         charge is completely dissipated in ~10 ms.\n",
+        w_ll * 1e3,
+        w_tg * 1e3
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_shows_windows() {
+        let r = super::run(super::Effort::Quick);
+        assert!(r.contains("memory window"));
+        assert!(r.contains("LL (V)"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Fig. 4: the half-select hazard in a 2D crossbar — ΔV vs Δt scatter
+//! (4c) and the distribution of first half-select times on hotel-bar-like
+//! and driving-like streams (4d).
+
+use super::Effort;
+use crate::arch::arch2d::{hs_discharge_factor, simulate_half_select, wbl_coupling_bump};
+use crate::circuit::montecarlo::FittedBank;
+use crate::events::scene::{BlobScene, EdgeScene};
+use crate::events::v2e::{convert, DvsParams};
+use crate::events::Resolution;
+use crate::util::stats::{histogram, mean, percentile};
+
+pub fn run(effort: Effort) -> String {
+    let mut s = super::banner("Fig. 4 — half-select analysis (2D crossbar)");
+    s.push_str(&format!(
+        "row-discharge survival factor per half-select pulse: {:.2e}\n\
+         WBL coupling bump (blue case): {:.1} mV (non-cumulative)\n\n",
+        hs_discharge_factor(),
+        wbl_coupling_bump() * 1e3
+    ));
+
+    let side = effort.scale(48, 96) as u16;
+    let dur = effort.scale_f(0.3, 1.0);
+    let res = Resolution::new(side, side);
+    let decay = FittedBank::nominal(20e-15);
+
+    for (name, events) in [
+        (
+            "hotel-bar",
+            convert(&BlobScene::new(side, side, 3, dur, 7), res, DvsParams::default(), dur),
+        ),
+        ("driving", convert(&EdgeScene::new(90.0, 21), res, DvsParams::default(), dur)),
+    ] {
+        let stats = simulate_half_select(&events, res, &decay, 5);
+        s.push_str(&format!(
+            "--- {name}: {} events, {} half-select hits ---\n",
+            events.len(),
+            stats.dv_vs_dt.len()
+        ));
+
+        // Fig 4c: ΔV binned by Δt.
+        s.push_str("  ΔV vs Δt (Fig. 4c):\n");
+        for (lo, hi) in [(0.0, 2e-3), (2e-3, 8e-3), (8e-3, 20e-3), (20e-3, 60e-3)] {
+            let vals: Vec<f64> = stats
+                .dv_vs_dt
+                .iter()
+                .filter(|(dt, _)| *dt >= lo && *dt < hi)
+                .map(|(_, dv)| *dv)
+                .collect();
+            if !vals.is_empty() {
+                s.push_str(&format!(
+                    "    Δt ∈ [{:>4.0}, {:>4.0}) ms: mean ΔV = {:.3} V  (n={})\n",
+                    lo * 1e3,
+                    hi * 1e3,
+                    mean(&vals),
+                    vals.len()
+                ));
+            }
+        }
+
+        // Fig 4d: first half-select time distribution.
+        if !stats.first_hs_times.is_empty() {
+            let med = percentile(&stats.first_hs_times, 50.0);
+            let p90 = percentile(&stats.first_hs_times, 90.0);
+            let h = histogram(&stats.first_hs_times, 0.0, 20e-3, 10);
+            s.push_str(&format!(
+                "  first half-select after write (Fig. 4d): median {:.2} ms, p90 {:.2} ms\n \
+                  histogram 0-20 ms (2 ms bins): {:?}\n",
+                med * 1e3,
+                p90 * 1e3,
+                h
+            ));
+        }
+        s.push_str(&format!(
+            "  end-of-stream TS RMSE vs ideal: {:.3} V; disturbed cells: {:.1} %\n\n",
+            stats.ts_rmse,
+            stats.disturbed_fraction * 100.0
+        ));
+    }
+    s.push_str(
+        "paper: earlier half-selects cause larger ΔV; first half-selects\n\
+         occur within ms on both datasets, corrupting the stored TS — the\n\
+         3D per-pixel (Cu-Cu) organization eliminates the hazard entirely.\n",
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_covers_both_scenes() {
+        let r = super::run(super::Effort::Quick);
+        assert!(r.contains("hotel-bar"));
+        assert!(r.contains("driving"));
+        assert!(r.contains("Fig. 4c"));
+    }
+
+    #[test]
+    fn dv_decreases_with_dt_in_report() {
+        // Parse the binned means for the driving scene and check ordering.
+        let r = super::run(super::Effort::Quick);
+        let means: Vec<f64> = r
+            .lines()
+            .filter(|l| l.contains("mean ΔV"))
+            .map(|l| {
+                l.split("mean ΔV = ").nth(1).unwrap().split(' ').next().unwrap()
+                    .parse::<f64>().unwrap()
+            })
+            .collect();
+        assert!(!means.is_empty());
+        // First bin (earliest) should exceed the last bin in each scene.
+        // (means come in scene order; just check global max is an early bin)
+        let max_idx = means
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!(max_idx <= means.len() / 2, "largest ΔV should be an early bin");
+    }
+}

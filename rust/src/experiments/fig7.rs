@@ -1,0 +1,50 @@
+//! Fig. 7: 3D vs 2D architecture comparison at QVGA/100 Meps — power,
+//! area, delay with component breakdowns. Paper headline: 69× power,
+//! 1.9× area, 2.2× delay.
+
+use super::Effort;
+use crate::arch::arch3d::Workload;
+use crate::arch::{arch2d, arch3d, ArchReport, ArrayGeometry};
+use crate::events::Resolution;
+
+pub fn run(_effort: Effort) -> String {
+    let g = ArrayGeometry::new(Resolution::QVGA);
+    let w = Workload::default();
+    let r2 = arch2d::report(&g, &w);
+    let r3 = arch3d::report(&g, &w);
+
+    let mut s = super::banner("Fig. 7 — 3D vs 2D architecture (QVGA, 100 Meps)");
+    s.push_str("--- 2D baseline power ---\n");
+    s.push_str(&r2.power.to_table(1e6, "µW"));
+    s.push_str("--- 3DS-ISC power ---\n");
+    s.push_str(&r3.power.to_table(1e6, "µW"));
+    s.push_str("--- 2D baseline area ---\n");
+    s.push_str(&r2.area.to_table(1e-6, "mm²"));
+    s.push_str("--- 3DS-ISC area ---\n");
+    s.push_str(&r3.area.to_table(1e-6, "mm²"));
+    s.push_str("--- 2D baseline delay ---\n");
+    s.push_str(&r2.delay.to_table(1e9, "ns"));
+    s.push_str("--- 3DS-ISC delay ---\n");
+    s.push_str(&r3.delay.to_table(1e9, "ns"));
+
+    let (p, a, d) = ArchReport::ratios(&r2, &r3);
+    s.push_str(&format!(
+        "\nheadline ratios (2D / 3D):   power {p:.1}x   area {a:.2}x   delay {d:.2}x\n\
+         paper:                       power 69x     area 1.9x    delay 2.2x\n\
+         2D power breakdown: encoder/decoder {:.1} % (paper 53.8 %), \
+         buffers {:.1} % (paper 45.5 %)\n",
+        r2.power.share_percent("encoder/decoder"),
+        r2.power.share_percent("line buffers"),
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_prints_ratios() {
+        let r = super::run(super::Effort::Quick);
+        assert!(r.contains("headline ratios"));
+        assert!(r.contains("encoder/decoder"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Fig. 8: ISC analog array vs 16-bit SRAM timestamp storage ([53], [26])
+//! — storage array only. Paper: 1600× / 6761× power, 3.1× / 2.2× area,
+//! plus the timestamp-overflow hazard the analog array avoids.
+
+use super::Effort;
+use crate::arch::arch3d::Workload;
+use crate::arch::sram::{self, SramDesign};
+use crate::arch::ArrayGeometry;
+use crate::events::Resolution;
+
+pub fn run(_effort: Effort) -> String {
+    let g = ArrayGeometry::new(Resolution::QVGA);
+    let w = Workload::default();
+    let p_isc = sram::isc_array_power(&g, &w);
+    let a_isc = sram::isc_array_area(&g);
+
+    let mut s = super::banner("Fig. 8 — ISC analog array vs SRAM timestamp storage");
+    s.push_str("--- ISC analog array (storage only) ---\n");
+    s.push_str(&p_isc.to_table(1e6, "µW"));
+    s.push_str(&format!("  area: {:.3} mm²\n\n", a_isc * 1e-6));
+
+    for (design, paper_p, paper_a) in [
+        (SramDesign::Bose53, 1600.0, 3.1),
+        (SramDesign::Rios26, 6761.0, 2.2),
+    ] {
+        let p = sram::power(design, &g, &w);
+        let a = sram::area(design, &g);
+        s.push_str(&format!("--- {} ---\n", design.name()));
+        s.push_str(&p.to_table(1e3, "mW"));
+        s.push_str(&format!(
+            "  area: {:.3} mm²\n  power ratio vs ISC: {:.0}x (paper {paper_p:.0}x)\n  \
+             area ratio vs ISC:  {:.2}x (paper {paper_a}x)\n\n",
+            a * 1e-6,
+            p.total() / p_isc.total(),
+            a / a_isc,
+        ));
+    }
+    s.push_str(&format!(
+        "timestamp overflow: a 16-bit µs counter wraps every {:.1} ms —\n\
+         the analog array self-normalizes and never wraps.\n",
+        sram::timestamp_wrap_period_s(16, 1.0) * 1e3
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_covers_both_designs() {
+        let r = super::run(super::Effort::Quick);
+        assert!(r.contains("[53]"));
+        assert!(r.contains("[26]"));
+        assert!(r.contains("power ratio"));
+    }
+}

@@ -1,0 +1,93 @@
+//! Experiment harnesses — one module per table/figure in the paper's
+//! evaluation (see DESIGN.md §3 for the index). Each harness regenerates
+//! the rows/series the paper reports and prints paper-vs-measured.
+//!
+//! Run via the CLI: `tsisc exp <id>` where `<id>` ∈
+//! {table1, fig2d, fig4, fig5, fig6, fig7, fig8, fig9, fig10, fig12,
+//!  table2, table3, sec2b, all}.
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig2d;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod sec2b;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+/// Effort level: `Quick` shrinks workloads for smoke tests/CI; `Full`
+/// reproduces at the scales recorded in EXPERIMENTS.md.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Effort {
+    Quick,
+    Full,
+}
+
+impl Effort {
+    pub fn scale(self, quick: usize, full: usize) -> usize {
+        match self {
+            Effort::Quick => quick,
+            Effort::Full => full,
+        }
+    }
+
+    pub fn scale_f(self, quick: f64, full: f64) -> f64 {
+        match self {
+            Effort::Quick => quick,
+            Effort::Full => full,
+        }
+    }
+}
+
+/// Registry of all experiments.
+pub const ALL: &[(&str, fn(Effort) -> String)] = &[
+    ("table1", table1::run),
+    ("fig2d", fig2d::run),
+    ("fig4", fig4::run),
+    ("fig5", fig5::run),
+    ("fig6", fig6::run),
+    ("fig7", fig7::run),
+    ("fig8", fig8::run),
+    ("fig9", fig9::run),
+    ("fig10", fig10::run),
+    ("fig12", fig10::run_fig12),
+    ("sec2b", sec2b::run),
+    ("ablations", ablations::run),
+    ("table2", table2::run),
+    ("table3", table3::run),
+];
+
+/// Look up an experiment by id.
+pub fn find(id: &str) -> Option<fn(Effort) -> String> {
+    ALL.iter().find(|(n, _)| *n == id).map(|(_, f)| *f)
+}
+
+/// Render a header banner for a report.
+pub fn banner(title: &str) -> String {
+    format!("\n=== {title} ===\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_unique() {
+        let mut names: Vec<&str> = ALL.iter().map(|(n, _)| *n).collect();
+        let len = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), len);
+    }
+
+    #[test]
+    fn find_known_and_unknown() {
+        assert!(find("fig7").is_some());
+        assert!(find("nope").is_none());
+    }
+}

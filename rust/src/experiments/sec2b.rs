@@ -1,0 +1,79 @@
+//! Sec. II-B: representation resource comparison — memory footprint and
+//! memory-writes-per-event across all implemented 2D representations
+//! (the argument for why SAE/TS-class surfaces suit low-energy hardware
+//! while SITS/TOS do not).
+
+use super::Effort;
+use crate::events::scene::EdgeScene;
+use crate::events::v2e::{convert, DvsParams};
+use crate::events::Resolution;
+use crate::tsurface::*;
+
+pub fn run(effort: Effort) -> String {
+    let side = effort.scale(48, 96) as u16;
+    let dur = effort.scale_f(0.3, 1.0);
+    let res = Resolution::new(side, side);
+    let events = convert(&EdgeScene::new(120.0, 5), res, DvsParams::default(), dur);
+
+    let mut reps: Vec<Box<dyn Representation>> = vec![
+        Box::new(Ebbi::new(res)),
+        Box::new(EventCount::new(res, 4)),
+        Box::new(Sae::new(res)),
+        Box::new(IdealTs::new(res, 24_000.0)),
+        Box::new(QuantizedSae::new(res, 16, 24_000.0)),
+        Box::new(Sits::new(res, 3)),
+        Box::new(Tos::new(res, 3)),
+        Box::new(Tore::new(res, 3, 100.0, 1e6)),
+        Box::new(IscTs::with_defaults(res)),
+    ];
+    for rep in reps.iter_mut() {
+        for le in &events {
+            rep.update(&le.ev);
+        }
+    }
+
+    let mut s = super::banner("Sec. II-B — representation resource comparison");
+    s.push_str(&format!(
+        "({} events, {side}x{side})\n{:<16} {:>14} {:>16}\n",
+        events.len(),
+        "representation",
+        "bits/pixel",
+        "writes/event"
+    ));
+    for rep in &reps {
+        s.push_str(&format!(
+            "{:<16} {:>14.1} {:>16.2}\n",
+            rep.name(),
+            rep.memory_bits() as f64 / res.pixels() as f64,
+            rep.writes_per_event()
+        ));
+    }
+    s.push_str(
+        "\npaper: SAE-class surfaces need 1 write/event; SITS/TOS need\n\
+         ~25-50x more, making them hostile to low-energy hardware. TORE\n\
+         needs ≥96 b/pixel (≈16x the ISC cell's effective storage).\n",
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn write_amplification_ordering() {
+        let r = super::run(super::Effort::Quick);
+        assert!(r.contains("SITS"));
+        assert!(r.contains("3DS-ISC"));
+        // SITS writes/event must exceed SAE's.
+        let get = |name: &str| -> f64 {
+            r.lines()
+                .find(|l| l.starts_with(name))
+                .unwrap()
+                .split_whitespace()
+                .last()
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        assert!(get("SITS") > 5.0 * get("SAE"));
+    }
+}

@@ -1,0 +1,7 @@
+//! The in-sensor-computing analog array simulator: the software twin of the
+//! paper's 3D-stacked 6T-1C eDRAM plane, driven by the Monte-Carlo fitted
+//! cell bank from [`crate::circuit`].
+
+pub mod array;
+
+pub use array::{IscArray, IscConfig};

@@ -1,0 +1,32 @@
+//! # tsisc — 3D Stack In-Sensor-Computing for Time-Surface Construction
+//!
+//! Full-system reproduction of "3D Stack In-Sensor-Computing (3DS-ISC):
+//! Accelerating Time-Surface Construction for Neuromorphic Event Cameras"
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Rust (this crate)** — event streaming, the SPICE-substitute circuit
+//!   simulator, 2D/3D architecture models, the ISC analog-array simulator,
+//!   time-surface representations, the STCF denoiser, the event-pipeline
+//!   coordinator and the PJRT runtime executing AOT-compiled JAX/Pallas
+//!   artifacts on the hot path.
+//! * **JAX/Pallas (build time)** — time-surface kernels and the CNN/UNet
+//!   models, lowered once to `artifacts/*.hlo.txt` by `make artifacts`.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod arch;
+pub mod circuit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod denoise;
+pub mod events;
+pub mod experiments;
+pub mod isc;
+pub mod metrics;
+pub mod recon;
+pub mod runtime;
+pub mod train;
+pub mod tsurface;
+pub mod util;

@@ -1,0 +1,181 @@
+//! `tsisc` — the 3DS-ISC coordinator binary.
+//!
+//! Subcommands:
+//!   exp <id|all> [--full]     regenerate a paper table/figure (DESIGN.md §3)
+//!   pipeline [--events N]     run the event→frame serving pipeline and
+//!                             print throughput/latency stats
+//!   train [--family F]        train the classifier on a synthetic dataset
+//!                             through the AOT artifacts (needs `make artifacts`)
+//!   info                      runtime/platform diagnostics
+
+use tsisc::cli::Args;
+use tsisc::experiments::{self, Effort};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("pipeline") => cmd_pipeline(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprint!("{}", USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+tsisc — 3D Stack In-Sensor-Computing reproduction
+
+USAGE:
+  tsisc exp <id|all> [--full]    regenerate a paper table/figure
+                                 ids: table1 fig2d fig4 fig5 fig6 fig7 fig8
+                                      fig9 fig10 fig12 sec2b table2 table3
+  tsisc pipeline [--duration S] [--stcf] [--shards K]
+  tsisc train [--family nmnist|shapes|cifardvs|gesture] [--steps N]
+              [--surface isc|ideal|count|ebbi] [--per-class N]
+  tsisc info
+";
+
+fn effort(args: &Args) -> Effort {
+    if args.flag("full") {
+        Effort::Full
+    } else {
+        Effort::Quick
+    }
+}
+
+fn cmd_exp(args: &Args) -> i32 {
+    let Some(id) = args.positional.first() else {
+        eprintln!("exp: missing id (or 'all')");
+        return 2;
+    };
+    let eff = effort(args);
+    if id == "all" {
+        for (name, f) in experiments::ALL {
+            eprintln!("[running {name}...]");
+            print!("{}", f(eff));
+        }
+        return 0;
+    }
+    match experiments::find(id) {
+        Some(f) => {
+            print!("{}", f(eff));
+            0
+        }
+        None => {
+            eprintln!("unknown experiment '{id}'");
+            2
+        }
+    }
+}
+
+fn cmd_pipeline(args: &Args) -> i32 {
+    use tsisc::coordinator::{run_pipeline, PipelineConfig, RouterConfig};
+    use tsisc::denoise::StcfParams;
+    use tsisc::events::{noise::contaminate, scene::EdgeScene, v2e, Resolution};
+
+    let res = Resolution::QVGA;
+    let dur = args.get_parsed("duration", 0.5f64);
+    let shards = args.get_parsed("shards", 4usize);
+    eprintln!("generating driving-like stream at QVGA for {dur} s ...");
+    let scene = EdgeScene::new(120.0, 21);
+    let signal = v2e::convert(&scene, res, v2e::DvsParams::default(), dur);
+    let events = contaminate(&signal, res, 5.0, dur, 17);
+    eprintln!("{} events ({} signal)", events.len(), signal.len());
+
+    let cfg = PipelineConfig {
+        stcf: if args.flag("stcf") { Some(StcfParams::default()) } else { None },
+        router: RouterConfig { n_shards: shards, ..RouterConfig::default() },
+        ..PipelineConfig::default()
+    };
+    let run = run_pipeline(&events, res, (dur * 1e6) as u64, &cfg);
+    let st = &run.stats;
+    println!(
+        "pipeline: {} events in, {} written, {} dropped by STCF\n\
+         frames: {} ({} ms windows)\n\
+         wall: {:.3} s  throughput: {:.2} Meps  shards: {:?}",
+        st.events_in,
+        st.events_written,
+        st.events_dropped_by_stcf,
+        st.frames_emitted,
+        cfg.window_us / 1000,
+        st.wall_seconds,
+        st.events_per_second / 1e6,
+        st.router.per_shard,
+    );
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    use tsisc::events::dataset::{generate, Family, GenOptions};
+    use tsisc::isc::IscConfig;
+    use tsisc::runtime::{artifacts_available, default_artifact_dir, Runtime};
+    use tsisc::train::driver::{train_classifier, TrainConfig};
+    use tsisc::train::frames::{dataset_frames, SurfaceKind};
+
+    if !artifacts_available() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return 1;
+    }
+    let family = Family::from_name(args.get("family").unwrap_or("nmnist"))
+        .unwrap_or(Family::NMnist);
+    let surface = match args.get("surface").unwrap_or("isc") {
+        "ideal" => SurfaceKind::Ideal { tau_us: 24_000.0 },
+        "count" => SurfaceKind::Count { bits: 4 },
+        "ebbi" => SurfaceKind::Binary,
+        _ => SurfaceKind::Isc(IscConfig::default()),
+    };
+    let opts = GenOptions {
+        train_per_class: args.get_parsed("per-class", 24usize),
+        test_per_class: args.get_parsed("test-per-class", 8usize),
+        duration_s: 0.15,
+        noise_hz: 1.0,
+        seed: args.get_parsed("seed", 7u64),
+    };
+    eprintln!("generating {} dataset ...", family.name());
+    let ds = generate(family, opts);
+    eprintln!("building {} frames ...", surface.name());
+    let (train, test) = dataset_frames(&ds, &surface, 50_000, 32);
+    eprintln!("train frames: {}  test frames: {}", train.frames.len(), test.frames.len());
+
+    let mut rt = Runtime::new(default_artifact_dir()).expect("runtime");
+    let cfg = TrainConfig {
+        steps: args.get_parsed("steps", 150usize),
+        lr: args.get_parsed("lr", 0.03f32),
+        seed: 42,
+        log_every: args.get_parsed("log-every", 10usize),
+    };
+    match train_classifier(&mut rt, &train, &test, &cfg) {
+        Ok(r) => {
+            for (step, loss) in &r.loss_curve {
+                println!("step {step:>5}  loss {loss:.4}");
+            }
+            println!(
+                "final loss {:.4}  frame acc {:.3}  video acc {:.3}",
+                r.final_loss, r.frame_accuracy, r.video_accuracy
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("train failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    use tsisc::runtime::{artifacts_available, default_artifact_dir, Runtime};
+    println!("tsisc {} — 3DS-ISC reproduction", env!("CARGO_PKG_VERSION"));
+    println!("artifact dir: {:?}", default_artifact_dir());
+    println!("artifacts present: {}", artifacts_available());
+    if artifacts_available() {
+        match Runtime::new(default_artifact_dir()) {
+            Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+            Err(e) => println!("PJRT init failed: {e:#}"),
+        }
+    }
+    0
+}

@@ -1,0 +1,150 @@
+//! Classification metrics: frame accuracy, majority-vote video accuracy
+//! (paper Sec. IV-D, [35], [57]) and confusion matrices.
+
+/// Confusion matrix over `n` classes.
+#[derive(Clone, Debug)]
+pub struct Confusion {
+    n: usize,
+    /// counts[true][pred]
+    counts: Vec<u64>,
+}
+
+impl Confusion {
+    pub fn new(n_classes: usize) -> Self {
+        assert!(n_classes > 0);
+        Self { n: n_classes, counts: vec![0; n_classes * n_classes] }
+    }
+
+    pub fn record(&mut self, truth: usize, pred: usize) {
+        assert!(truth < self.n && pred < self.n);
+        self.counts[truth * self.n + pred] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn correct(&self) -> u64 {
+        (0..self.n).map(|k| self.counts[k * self.n + k]).sum()
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        self.correct() as f64 / t as f64
+    }
+
+    pub fn count(&self, truth: usize, pred: usize) -> u64 {
+        self.counts[truth * self.n + pred]
+    }
+
+    /// Per-class recall.
+    pub fn recall(&self, class: usize) -> f64 {
+        let row: u64 = (0..self.n).map(|p| self.count(class, p)).sum();
+        if row == 0 {
+            return 0.0;
+        }
+        self.count(class, class) as f64 / row as f64
+    }
+
+    /// Render as a small text table.
+    pub fn to_table(&self) -> String {
+        let mut s = String::from("true\\pred");
+        for p in 0..self.n {
+            s.push_str(&format!("{p:>7}"));
+        }
+        s.push('\n');
+        for t in 0..self.n {
+            s.push_str(&format!("{t:>9}"));
+            for p in 0..self.n {
+                s.push_str(&format!("{:>7}", self.count(t, p)));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Majority vote over per-frame predictions (video accuracy). Ties break
+/// toward the smallest class index (deterministic).
+pub fn majority_vote(frame_preds: &[usize], n_classes: usize) -> usize {
+    assert!(!frame_preds.is_empty());
+    let mut counts = vec![0u64; n_classes];
+    for &p in frame_preds {
+        counts[p] += 1;
+    }
+    counts
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+        .unwrap()
+        .0
+}
+
+/// Frame + video accuracy from per-sample frame predictions.
+/// `samples`: (true label, predictions for each frame of the sample).
+pub fn frame_and_video_accuracy(
+    samples: &[(usize, Vec<usize>)],
+    n_classes: usize,
+) -> (f64, f64) {
+    let mut frame_conf = Confusion::new(n_classes);
+    let mut video_conf = Confusion::new(n_classes);
+    for (truth, preds) in samples {
+        for &p in preds {
+            frame_conf.record(*truth, p);
+        }
+        if !preds.is_empty() {
+            video_conf.record(*truth, majority_vote(preds, n_classes));
+        }
+    }
+    (frame_conf.accuracy(), video_conf.accuracy())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_accuracy() {
+        let mut c = Confusion::new(3);
+        c.record(0, 0);
+        c.record(1, 1);
+        c.record(2, 0);
+        c.record(2, 2);
+        assert_eq!(c.total(), 4);
+        assert_eq!(c.correct(), 3);
+        assert!((c.accuracy() - 0.75).abs() < 1e-12);
+        assert!((c.recall(2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn majority_vote_basic() {
+        assert_eq!(majority_vote(&[1, 1, 2], 3), 1);
+        assert_eq!(majority_vote(&[0], 3), 0);
+    }
+
+    #[test]
+    fn majority_vote_tie_breaks_low() {
+        assert_eq!(majority_vote(&[2, 1, 1, 2], 3), 1);
+    }
+
+    #[test]
+    fn video_accuracy_exceeds_frame_when_votes_fix_errors() {
+        // Sample of class 0 with frames [0,0,1]: frame acc 2/3, video 1/1.
+        let samples = vec![(0usize, vec![0, 0, 1]), (1usize, vec![1, 1, 0])];
+        let (fa, va) = frame_and_video_accuracy(&samples, 2);
+        assert!((fa - 4.0 / 6.0).abs() < 1e-12);
+        assert!((va - 1.0).abs() < 1e-12);
+        assert!(va > fa);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut c = Confusion::new(2);
+        c.record(0, 1);
+        let t = c.to_table();
+        assert!(t.contains("true\\pred"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Evaluation metrics: ROC/AUC for denoising (Fig. 10d/12), SSIM for
+//! reconstruction (Table III), and frame/video accuracy for classification
+//! (Table II).
+
+pub mod accuracy;
+pub mod roc;
+pub mod ssim;
+
+pub use accuracy::{frame_and_video_accuracy, majority_vote, Confusion};
+pub use roc::{roc, BinaryStats, Roc, RocPoint, Scored};
+pub use ssim::{frame_mse, psnr, ssim};

@@ -1,0 +1,181 @@
+//! ROC / AUC for the denoise evaluation (paper Fig. 10d, Fig. 12).
+//!
+//! The STCF produces an integer support count per event; sweeping the
+//! decision threshold over the count yields the ROC. Positives = signal
+//! events kept, negatives = noise events kept.
+
+/// One scored decision: the classifier score (higher = more signal-like)
+/// and the ground-truth label.
+#[derive(Clone, Copy, Debug)]
+pub struct Scored {
+    pub score: f64,
+    pub is_signal: bool,
+}
+
+/// A single ROC operating point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RocPoint {
+    /// False-positive rate: noise passed / total noise.
+    pub fpr: f64,
+    /// True-positive rate: signal passed / total signal.
+    pub tpr: f64,
+    /// Threshold that produced this point (score ≥ threshold ⇒ keep).
+    pub threshold: f64,
+}
+
+/// Full ROC curve (sorted by ascending FPR) plus its AUC.
+#[derive(Clone, Debug)]
+pub struct Roc {
+    pub points: Vec<RocPoint>,
+    pub auc: f64,
+}
+
+/// Build the ROC by sweeping a threshold over all distinct scores.
+pub fn roc(scored: &[Scored]) -> Roc {
+    let n_pos = scored.iter().filter(|s| s.is_signal).count() as f64;
+    let n_neg = scored.len() as f64 - n_pos;
+    assert!(n_pos > 0.0 && n_neg > 0.0, "ROC needs both classes");
+
+    // Sort descending by score; walk thresholds at each distinct score.
+    let mut sorted: Vec<&Scored> = scored.iter().collect();
+    sorted.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+
+    let mut points = vec![RocPoint { fpr: 0.0, tpr: 0.0, threshold: f64::INFINITY }];
+    let (mut tp, mut fp) = (0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < sorted.len() {
+        let s = sorted[i].score;
+        // Consume the tie group.
+        while i < sorted.len() && sorted[i].score == s {
+            if sorted[i].is_signal {
+                tp += 1.0;
+            } else {
+                fp += 1.0;
+            }
+            i += 1;
+        }
+        points.push(RocPoint { fpr: fp / n_neg, tpr: tp / n_pos, threshold: s });
+    }
+    // Trapezoidal AUC.
+    let mut auc = 0.0;
+    for w in points.windows(2) {
+        auc += (w[1].fpr - w[0].fpr) * 0.5 * (w[0].tpr + w[1].tpr);
+    }
+    Roc { points, auc }
+}
+
+/// Accuracy-style summary at a fixed threshold.
+#[derive(Clone, Copy, Debug)]
+pub struct BinaryStats {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl BinaryStats {
+    pub fn from_scored(scored: &[Scored], threshold: f64) -> Self {
+        let mut s = BinaryStats { tp: 0, fp: 0, tn: 0, fn_: 0 };
+        for x in scored {
+            match (x.score >= threshold, x.is_signal) {
+                (true, true) => s.tp += 1,
+                (true, false) => s.fp += 1,
+                (false, false) => s.tn += 1,
+                (false, true) => s.fn_ += 1,
+            }
+        }
+        s
+    }
+
+    pub fn tpr(&self) -> f64 {
+        self.tp as f64 / (self.tp + self.fn_).max(1) as f64
+    }
+
+    pub fn fpr(&self) -> f64 {
+        self.fp as f64 / (self.fp + self.tn).max(1) as f64
+    }
+
+    pub fn precision(&self) -> f64 {
+        self.tp as f64 / (self.tp + self.fp).max(1) as f64
+    }
+
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.tpr();
+        if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_classifier_auc_one() {
+        let mut s = Vec::new();
+        for k in 0..50 {
+            s.push(Scored { score: 10.0 + k as f64, is_signal: true });
+            s.push(Scored { score: -(k as f64), is_signal: false });
+        }
+        let r = roc(&s);
+        assert!((r.auc - 1.0).abs() < 1e-12, "auc={}", r.auc);
+    }
+
+    #[test]
+    fn random_classifier_auc_half() {
+        let mut rng = crate::util::rng::Pcg64::new(3);
+        let s: Vec<Scored> = (0..20_000)
+            .map(|_| Scored { score: rng.f64(), is_signal: rng.bool(0.5) })
+            .collect();
+        let r = roc(&s);
+        assert!((r.auc - 0.5).abs() < 0.02, "auc={}", r.auc);
+    }
+
+    #[test]
+    fn inverted_classifier_auc_zero() {
+        let s = vec![
+            Scored { score: 0.0, is_signal: true },
+            Scored { score: 1.0, is_signal: false },
+        ];
+        assert!(roc(&s).auc < 1e-12);
+    }
+
+    #[test]
+    fn roc_endpoints() {
+        let s = vec![
+            Scored { score: 0.9, is_signal: true },
+            Scored { score: 0.1, is_signal: false },
+        ];
+        let r = roc(&s);
+        assert_eq!(r.points.first().unwrap().tpr, 0.0);
+        assert_eq!(r.points.last().unwrap().tpr, 1.0);
+        assert_eq!(r.points.last().unwrap().fpr, 1.0);
+    }
+
+    #[test]
+    fn ties_handled_as_one_group() {
+        // All same score: single diagonal step → AUC 0.5.
+        let s = vec![
+            Scored { score: 1.0, is_signal: true },
+            Scored { score: 1.0, is_signal: false },
+            Scored { score: 1.0, is_signal: true },
+            Scored { score: 1.0, is_signal: false },
+        ];
+        let r = roc(&s);
+        assert!((r.auc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_stats_counts() {
+        let s = vec![
+            Scored { score: 1.0, is_signal: true },  // tp
+            Scored { score: 1.0, is_signal: false }, // fp
+            Scored { score: 0.0, is_signal: true },  // fn
+            Scored { score: 0.0, is_signal: false }, // tn
+        ];
+        let b = BinaryStats::from_scored(&s, 0.5);
+        assert_eq!((b.tp, b.fp, b.tn, b.fn_), (1, 1, 1, 1));
+        assert_eq!(b.tpr(), 0.5);
+        assert_eq!(b.fpr(), 0.5);
+    }
+}

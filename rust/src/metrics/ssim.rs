@@ -1,0 +1,136 @@
+//! Structural Similarity (SSIM) for the image-reconstruction evaluation
+//! (paper Table III) plus PSNR/MSE helpers.
+//!
+//! Standard Wang et al. SSIM: 8×8 sliding window, C1=(0.01·L)², C2=(0.03·L)²
+//! with dynamic range L = 1 (frames are normalized to [0, 1]).
+
+use crate::util::grid::Grid;
+
+const C1: f64 = 0.01 * 0.01;
+const C2: f64 = 0.03 * 0.03;
+const WIN: usize = 8;
+
+/// Mean SSIM over all valid 8×8 windows (stride 1).
+pub fn ssim(a: &Grid<f64>, b: &Grid<f64>) -> f64 {
+    assert_eq!(a.width(), b.width());
+    assert_eq!(a.height(), b.height());
+    let (w, h) = (a.width(), a.height());
+    assert!(w >= WIN && h >= WIN, "image smaller than SSIM window");
+
+    // Integral images of x, y, x², y², xy for O(1) window sums.
+    let ii = |f: &dyn Fn(usize, usize) -> f64| -> Vec<f64> {
+        let mut s = vec![0.0; (w + 1) * (h + 1)];
+        for y in 0..h {
+            for x in 0..w {
+                s[(y + 1) * (w + 1) + (x + 1)] = f(x, y)
+                    + s[y * (w + 1) + (x + 1)]
+                    + s[(y + 1) * (w + 1) + x]
+                    - s[y * (w + 1) + x];
+            }
+        }
+        s
+    };
+    let sx = ii(&|x, y| *a.get(x, y));
+    let sy = ii(&|x, y| *b.get(x, y));
+    let sxx = ii(&|x, y| a.get(x, y) * a.get(x, y));
+    let syy = ii(&|x, y| b.get(x, y) * b.get(x, y));
+    let sxy = ii(&|x, y| a.get(x, y) * b.get(x, y));
+    let rect = |s: &[f64], x0: usize, y0: usize| -> f64 {
+        let (x1, y1) = (x0 + WIN, y0 + WIN);
+        s[y1 * (w + 1) + x1] - s[y0 * (w + 1) + x1] - s[y1 * (w + 1) + x0] + s[y0 * (w + 1) + x0]
+    };
+
+    let n = (WIN * WIN) as f64;
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for y0 in 0..=(h - WIN) {
+        for x0 in 0..=(w - WIN) {
+            let mx = rect(&sx, x0, y0) / n;
+            let my = rect(&sy, x0, y0) / n;
+            let vx = (rect(&sxx, x0, y0) / n - mx * mx).max(0.0);
+            let vy = (rect(&syy, x0, y0) / n - my * my).max(0.0);
+            let cov = rect(&sxy, x0, y0) / n - mx * my;
+            let s = ((2.0 * mx * my + C1) * (2.0 * cov + C2))
+                / ((mx * mx + my * my + C1) * (vx + vy + C2));
+            total += s;
+            count += 1;
+        }
+    }
+    total / count as f64
+}
+
+/// Mean squared error between frames.
+pub fn frame_mse(a: &Grid<f64>, b: &Grid<f64>) -> f64 {
+    crate::util::stats::mse(a.as_slice(), b.as_slice())
+}
+
+/// PSNR (dB) for [0,1] frames.
+pub fn psnr(a: &Grid<f64>, b: &Grid<f64>) -> f64 {
+    let m = frame_mse(a, b);
+    if m == 0.0 {
+        f64::INFINITY
+    } else {
+        -10.0 * m.log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn noise_grid(w: usize, h: usize, seed: u64) -> Grid<f64> {
+        let mut r = Pcg64::new(seed);
+        Grid::from_fn(w, h, |_, _| r.f64())
+    }
+
+    #[test]
+    fn identical_images_ssim_one() {
+        let g = noise_grid(16, 16, 1);
+        assert!((ssim(&g, &g) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_noise_ssim_low() {
+        let a = noise_grid(32, 32, 1);
+        let b = noise_grid(32, 32, 2);
+        let s = ssim(&a, &b);
+        assert!(s < 0.2, "ssim={s}");
+    }
+
+    #[test]
+    fn mild_noise_beats_heavy_noise() {
+        let base = noise_grid(32, 32, 3);
+        let perturb = |seed: u64, amp: f64| {
+            let mut r = Pcg64::new(seed);
+            let noise: Vec<f64> = (0..32 * 32).map(|_| r.normal()).collect();
+            Grid::from_fn(32, 32, |x, y| {
+                (base.get(x, y) + amp * noise[y * 32 + x]).clamp(0.0, 1.0)
+            })
+        };
+        let mild = perturb(4, 0.05);
+        let heavy = perturb(5, 0.4);
+        assert!(ssim(&base, &mild) > ssim(&base, &heavy));
+    }
+
+    #[test]
+    fn ssim_symmetric() {
+        let a = noise_grid(16, 16, 7);
+        let b = noise_grid(16, 16, 8);
+        assert!((ssim(&a, &b) - ssim(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psnr_infinite_for_identical() {
+        let g = noise_grid(8, 8, 9);
+        assert!(psnr(&g, &g).is_infinite());
+    }
+
+    #[test]
+    fn constant_offset_reduces_ssim_luminance() {
+        let a = Grid::new(16, 16, 0.2);
+        let b = Grid::new(16, 16, 0.8);
+        let s = ssim(&a, &b);
+        assert!(s < 0.9, "ssim={s}");
+    }
+}

@@ -1,0 +1,194 @@
+//! Image-reconstruction driver (paper Sec. IV-E / Table III).
+//!
+//! Synthetic DAVIS recordings provide paired (events, APS frame)
+//! supervision. For each representation under comparison, TS frames at
+//! APS timestamps become UNet-lite inputs; the Rust driver runs the AOT
+//! `recon_train` artifact and scores held-out frames with SSIM.
+//!
+//! Comparator note (DESIGN.md §1): E2VID's pretrained recurrent network is
+//! unavailable offline; the paper's three-way comparison structure is kept
+//! by training the *same* decoder on three inputs — the 3DS-ISC analog TS,
+//! TORE volumes, and event-count frames (the E2VID-slot baseline).
+
+use crate::events::davis::Recording;
+use crate::metrics::ssim;
+use crate::runtime::pjrt::{lit_f32, lit_scalar, to_vec_f32, Runtime};
+use crate::train::frames::SurfaceKind;
+use crate::tsurface::Representation;
+use crate::util::grid::Grid;
+use crate::util::image::resize_bilinear;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Result};
+
+/// Fixed by the lowered artifact.
+pub const BATCH: usize = 8;
+pub const SIDE: usize = 64;
+
+/// One paired training example.
+#[derive(Clone, Debug)]
+pub struct Pair {
+    pub input: Vec<f32>,  // SIDE×SIDE TS frame
+    pub target: Vec<f32>, // SIDE×SIDE APS frame
+}
+
+/// Build (TS frame, APS frame) pairs from a recording using `kind`.
+pub fn build_pairs(rec: &Recording, kind: &SurfaceKind) -> Vec<Pair> {
+    let mut rep = build_rep(kind, rec.res);
+    let mut pairs = Vec::with_capacity(rec.frames.len());
+    let mut ev_i = 0usize;
+    for (t_frame, aps) in &rec.frames {
+        while ev_i < rec.events.len() && rec.events[ev_i].ev.t <= *t_frame {
+            rep.update(&rec.events[ev_i].ev);
+            ev_i += 1;
+        }
+        let ts = resize_bilinear(&rep.frame(*t_frame), SIDE, SIDE);
+        let target = resize_bilinear(aps, SIDE, SIDE);
+        pairs.push(Pair {
+            input: ts.as_slice().iter().map(|&v| v as f32).collect(),
+            target: target.as_slice().iter().map(|&v| v as f32).collect(),
+        });
+        rep.reset_window();
+    }
+    pairs
+}
+
+fn build_rep(kind: &SurfaceKind, res: crate::events::Resolution) -> Box<dyn Representation> {
+    use crate::tsurface::*;
+    match kind {
+        SurfaceKind::Isc(cfg) => Box::new(IscTs::new(res, cfg.clone())),
+        SurfaceKind::Ideal { tau_us } => Box::new(IdealTs::new(res, *tau_us)),
+        SurfaceKind::Quantized { bits, tau_us } => Box::new(QuantizedSae::new(res, *bits, *tau_us)),
+        SurfaceKind::Count { bits } => Box::new(EventCount::new(res, *bits)),
+        SurfaceKind::Binary => Box::new(Ebbi::new(res)),
+        SurfaceKind::Tore { k } => Box::new(Tore::new(res, *k, 100.0, 1e6)),
+    }
+}
+
+/// Training options.
+#[derive(Clone, Debug)]
+pub struct ReconConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Hold out every k-th pair for evaluation.
+    pub holdout_every: usize,
+}
+
+impl Default for ReconConfig {
+    fn default() -> Self {
+        Self { steps: 120, lr: 0.15, seed: 7, holdout_every: 4 }
+    }
+}
+
+/// Result: loss curve and SSIM on held-out frames.
+#[derive(Clone, Debug)]
+pub struct ReconResult {
+    pub loss_curve: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub mean_ssim: f64,
+    pub n_eval: usize,
+}
+
+/// Train UNet-lite on pairs and evaluate SSIM on the holdout.
+pub fn train_recon(rt: &mut Runtime, pairs: &[Pair], cfg: &ReconConfig) -> Result<ReconResult> {
+    if pairs.len() < 2 {
+        return Err(anyhow!("need at least 2 pairs"));
+    }
+    let k = cfg.holdout_every.max(2);
+    let (train, eval): (Vec<&Pair>, Vec<&Pair>) = {
+        let mut tr = Vec::new();
+        let mut ev = Vec::new();
+        for (i, p) in pairs.iter().enumerate() {
+            if i % k == k - 1 {
+                ev.push(p);
+            } else {
+                tr.push(p);
+            }
+        }
+        (tr, ev)
+    };
+    let mut params = rt.load_params("recon_params")?;
+    let n_params = params.len();
+    let mut moms: Vec<xla::Literal> = params
+        .iter()
+        .map(|p| {
+            let shape = p.array_shape()?;
+            let n: usize = shape.dims().iter().map(|&d| d as usize).product();
+            lit_f32(&vec![0.0; n], shape.dims())
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x43c);
+    let mut loss_curve = Vec::new();
+    let mut final_loss = f32::NAN;
+    let dims = [BATCH as i64, 1, SIDE as i64, SIDE as i64];
+    for step in 0..cfg.steps {
+        let mut xs = Vec::with_capacity(BATCH * SIDE * SIDE);
+        let mut ys = Vec::with_capacity(BATCH * SIDE * SIDE);
+        for _ in 0..BATCH {
+            let p = train[rng.below(train.len() as u64) as usize];
+            xs.extend_from_slice(&p.input);
+            ys.extend_from_slice(&p.target);
+        }
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * n_params + 3);
+        inputs.append(&mut params);
+        inputs.append(&mut moms);
+        inputs.push(lit_f32(&xs, &dims)?);
+        inputs.push(lit_f32(&ys, &dims)?);
+        inputs.push(lit_scalar(cfg.lr));
+        let exe = rt.load("recon_train")?;
+        let mut out = exe.run(&inputs)?;
+        let loss_lit = out.pop().unwrap();
+        final_loss = loss_lit.get_first_element::<f32>()?;
+        moms = out.split_off(n_params);
+        params = out;
+        if step % 20 == 0 || step + 1 == cfg.steps {
+            loss_curve.push((step, final_loss));
+        }
+    }
+
+    // Evaluation: reconstruct holdout frames and score SSIM.
+    let mut ssims = Vec::new();
+    let mut i = 0;
+    while i < eval.len() {
+        let mut xs = Vec::with_capacity(BATCH * SIDE * SIDE);
+        let n_real = (eval.len() - i).min(BATCH);
+        for kk in 0..BATCH {
+            xs.extend_from_slice(&eval[(i + kk).min(eval.len() - 1)].input);
+        }
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .map(|p| {
+                let shape = p.array_shape()?;
+                lit_f32(&p.to_vec::<f32>()?, shape.dims())
+            })
+            .collect::<Result<Vec<_>>>()?;
+        inputs.push(lit_f32(&xs, &dims)?);
+        let exe = rt.load("recon_fwd")?;
+        let out = exe.run(&inputs)?;
+        let yhat = to_vec_f32(&out[0])?;
+        for kk in 0..n_real {
+            let rec_frame = Grid::from_vec(
+                SIDE,
+                SIDE,
+                yhat[kk * SIDE * SIDE..(kk + 1) * SIDE * SIDE]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect(),
+            );
+            let target = Grid::from_vec(
+                SIDE,
+                SIDE,
+                eval[i + kk].target.iter().map(|&v| v as f64).collect(),
+            );
+            ssims.push(ssim(&rec_frame, &target));
+        }
+        i += n_real;
+    }
+    Ok(ReconResult {
+        loss_curve,
+        final_loss,
+        mean_ssim: crate::util::stats::mean(&ssims),
+        n_eval: ssims.len(),
+    })
+}

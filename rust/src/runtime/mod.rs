@@ -1,0 +1,29 @@
+//! The PJRT runtime layer: artifact loading/execution ([`pjrt`]) and the
+//! kernel-backed time-surface state machine ([`surfaces`]). Python never
+//! runs here — artifacts were lowered once by `make artifacts`.
+
+pub mod pjrt;
+pub mod surfaces;
+
+pub use pjrt::{Executable, Runtime};
+pub use surfaces::KernelTs;
+
+/// Default artifact directory, resolvable from the repo root or target/.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    // Prefer $TSISC_ARTIFACTS, then ./artifacts relative to cwd, then the
+    // crate manifest dir (useful under `cargo test`).
+    if let Ok(d) = std::env::var("TSISC_ARTIFACTS") {
+        return d.into();
+    }
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.is_dir() {
+        return cwd;
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when the AOT artifacts exist (tests use this to skip gracefully
+/// with a loud message instead of failing when `make artifacts` hasn't run).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.txt").is_file()
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from Rust.
+//!
+//! This is the only place the `xla` crate is touched. Pattern (see
+//! /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. All artifacts
+//! were lowered with `return_tuple=True`, so every execution returns one
+//! tuple literal which we decompose.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled artifact.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact '{}'", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of '{}'", self.name))?;
+        Ok(out.to_tuple()?)
+    }
+
+    /// Execute with device-resident buffers (hot loop path: params never
+    /// leave the device between steps); returns output buffers, still
+    /// device-resident, after splitting the tuple.
+    pub fn run_b(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(inputs)
+            .with_context(|| format!("executing artifact '{}' (buffers)", self.name))?;
+        let mut row = result.into_iter().next().ok_or_else(|| anyhow!("no replica output"))?;
+        if row.len() == 1 {
+            // Single tuple output: fetch as literal and re-upload parts is
+            // wasteful; the CPU plugin untuples automatically when the
+            // root is a tuple, so row.len()>1 is the common case. Fall
+            // back to literal decomposition when it doesn't.
+            let lit = row.remove(0).to_literal_sync()?;
+            return Err(anyhow!(
+                "artifact '{}' returned a packed tuple ({} elements) in buffer mode; \
+                 use run() instead",
+                self.name,
+                lit.to_tuple()?.len()
+            ));
+        }
+        Ok(row)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The runtime: one PJRT CPU client plus a registry of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (usually `artifacts/`).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(anyhow!(
+                "artifact directory {:?} missing — run `make artifacts` first",
+                dir
+            ));
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, dir, cache: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact by file stem (e.g. "classifier_train"),
+    /// memoized for the life of the runtime.
+    pub fn load(&mut self, stem: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(stem) {
+            let path = self.dir.join(format!("{stem}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{stem}'"))?;
+            self.cache.insert(stem.to_string(), Executable { name: stem.to_string(), exe });
+        }
+        Ok(&self.cache[stem])
+    }
+
+    /// Load an `.npz` parameter archive as ordered literals (keys p000…).
+    pub fn load_params(&self, stem: &str) -> Result<Vec<xla::Literal>> {
+        use xla::FromRawBytes;
+        let path = self.dir.join(format!("{stem}.npz"));
+        let mut named = xla::Literal::read_npz(&path, &())
+            .with_context(|| format!("reading {:?}", path))?;
+        named.sort_by(|a, b| a.0.cmp(&b.0));
+        Ok(named.into_iter().map(|(_, l)| l).collect())
+    }
+
+    /// Upload a literal to the device.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Literal construction helpers (f32 host bridges)
+// ---------------------------------------------------------------------
+
+/// Row-major f32 literal of the given dims.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    if n as usize != data.len() {
+        return Err(anyhow!("lit_f32: {} elements for dims {:?}", data.len(), dims));
+    }
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Boolean (PRED) literal.
+pub fn lit_pred(data: &[bool], dims: &[i64]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = data.iter().map(|&b| b as u8).collect();
+    let lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::Pred,
+        &dims.iter().map(|&d| d as usize).collect::<Vec<_>>(),
+        &bytes,
+    )?;
+    Ok(lit)
+}
+
+/// i32 literal.
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract f32 data from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,139 @@
+//! Device-side time-surface state machine over the AOT kernels.
+//!
+//! `KernelTs` drives the L1 Pallas artifacts (`ts_update`, `ts_frame`,
+//! `stcf_count`) from the Rust hot path: the analog plane state (v1, v2)
+//! plus the per-pixel mismatch maps live as host mirrors, each microbatch
+//! becomes one `ts_update` execution, frame readouts one `ts_frame`, and
+//! STCF support maps one `stcf_count`. This is the artifact-backed twin of
+//! the native `isc::IscArray` (used for A/B verification and for feeding
+//! the CNN pipeline from the exact kernels that would run on TPU).
+
+use super::pjrt::{lit_f32, lit_pred, lit_scalar, to_vec_f32, Runtime};
+use crate::circuit::montecarlo::FittedBank;
+use crate::circuit::MismatchParams;
+use crate::events::{Event, Resolution};
+use crate::util::grid::Grid;
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Result};
+
+/// Geometry the artifacts were lowered at (see python/compile/aot.py).
+pub const KERNEL_H: usize = 240;
+pub const KERNEL_W: usize = 320;
+
+/// Kernel-backed analog plane at the fixed artifact geometry.
+pub struct KernelTs {
+    v1: Vec<f32>,
+    v2: Vec<f32>,
+    a1: Vec<f32>,
+    a2: Vec<f32>,
+    tau1: Vec<f32>,
+    tau2: Vec<f32>,
+    /// Events accumulated since the last advance (mask plane).
+    pending: Vec<bool>,
+    /// Plane time in µs (state is valid as of this instant).
+    t_us: u64,
+    res: Resolution,
+}
+
+impl KernelTs {
+    /// Build with per-pixel parameters sampled from the Monte-Carlo fitted
+    /// bank (same procedure as `IscArray`).
+    pub fn new(c_mem: f64, mismatch: Option<MismatchParams>, seed: u64) -> Self {
+        let n = KERNEL_H * KERNEL_W;
+        let bank = match mismatch {
+            Some(mm) => FittedBank::build(c_mem, &mm, 512, seed).fits,
+            None => vec![FittedBank::nominal(c_mem)],
+        };
+        let mut rng = Pcg64::with_stream(seed, 0x6e);
+        let mut a1 = Vec::with_capacity(n);
+        let mut a2 = Vec::with_capacity(n);
+        let mut t1 = Vec::with_capacity(n);
+        let mut t2 = Vec::with_capacity(n);
+        for _ in 0..n {
+            let f = bank[rng.below(bank.len() as u64) as usize];
+            a1.push(f.a1 as f32);
+            a2.push((f.a2 + f.b) as f32); // fold the (small) offset into A2
+            t1.push(f.tau1 as f32);
+            t2.push(f.tau2 as f32);
+        }
+        Self {
+            v1: vec![0.0; n],
+            v2: vec![0.0; n],
+            a1,
+            a2,
+            tau1: t1,
+            tau2: t2,
+            pending: vec![false; n],
+            t_us: 0,
+            res: Resolution::new(KERNEL_W as u16, KERNEL_H as u16),
+        }
+    }
+
+    pub fn resolution(&self) -> Resolution {
+        self.res
+    }
+
+    pub fn time_us(&self) -> u64 {
+        self.t_us
+    }
+
+    /// Queue an event write (applied by the next [`advance`]).
+    pub fn write(&mut self, e: &Event) -> Result<()> {
+        if !self.res.contains(e.x, e.y) {
+            return Err(anyhow!("event ({}, {}) outside kernel geometry", e.x, e.y));
+        }
+        self.pending[e.y as usize * KERNEL_W + e.x as usize] = true;
+        Ok(())
+    }
+
+    /// Advance the plane to `t_us` via one `ts_update` execution: decay all
+    /// cells by Δt then apply the pending write mask.
+    pub fn advance(&mut self, rt: &mut Runtime, t_us: u64) -> Result<()> {
+        let dt = (t_us.saturating_sub(self.t_us)) as f32 * 1e-6;
+        let dims = [KERNEL_H as i64, KERNEL_W as i64];
+        let exe = rt.load("ts_update")?;
+        let out = exe.run(&[
+            lit_f32(&self.v1, &dims)?,
+            lit_f32(&self.v2, &dims)?,
+            lit_pred(&self.pending, &dims)?,
+            lit_f32(&self.a1, &dims)?,
+            lit_f32(&self.a2, &dims)?,
+            lit_f32(&self.tau1, &dims)?,
+            lit_f32(&self.tau2, &dims)?,
+            lit_scalar(dt),
+        ])?;
+        if out.len() != 2 {
+            return Err(anyhow!("ts_update returned {} outputs", out.len()));
+        }
+        self.v1 = to_vec_f32(&out[0])?;
+        self.v2 = to_vec_f32(&out[1])?;
+        self.pending.iter_mut().for_each(|m| *m = false);
+        self.t_us = t_us;
+        Ok(())
+    }
+
+    /// Normalized [0,1] frame via the `ts_frame` artifact.
+    pub fn frame(&self, rt: &mut Runtime) -> Result<Grid<f64>> {
+        let dims = [KERNEL_H as i64, KERNEL_W as i64];
+        let exe = rt.load("ts_frame")?;
+        let out = exe.run(&[lit_f32(&self.v1, &dims)?, lit_f32(&self.v2, &dims)?])?;
+        let data = to_vec_f32(&out[0])?;
+        Ok(Grid::from_vec(KERNEL_W, KERNEL_H, data.into_iter().map(|v| v as f64).collect()))
+    }
+
+    /// STCF support counts via the `stcf_count` artifact (r = 3 baked).
+    pub fn stcf_counts(&self, rt: &mut Runtime, v_tw: f32) -> Result<Grid<f64>> {
+        let dims = [KERNEL_H as i64, KERNEL_W as i64];
+        let v: Vec<f32> = self.v1.iter().zip(&self.v2).map(|(a, b)| a + b).collect();
+        let exe = rt.load("stcf_count")?;
+        let out = exe.run(&[lit_f32(&v, &dims)?, lit_scalar(v_tw)])?;
+        let data = to_vec_f32(&out[0])?;
+        Ok(Grid::from_vec(KERNEL_W, KERNEL_H, data.into_iter().map(|v| v as f64).collect()))
+    }
+
+    /// Direct surface read (host mirror), volts.
+    pub fn read(&self, x: u16, y: u16) -> f64 {
+        let i = y as usize * KERNEL_W + x as usize;
+        (self.v1[i] + self.v2[i]) as f64
+    }
+}

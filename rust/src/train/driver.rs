@@ -1,0 +1,192 @@
+//! The classifier training loop over the AOT `classifier_train` artifact.
+//!
+//! The driver shuffles frames into fixed-size batches, executes the
+//! train-step artifact (params and momenta round-trip as literals; only
+//! the scalar loss is inspected per step), logs the loss curve, and
+//! evaluates frame + majority-vote video accuracy with `classifier_fwd`.
+
+use super::frames::FrameSet;
+use crate::metrics::frame_and_video_accuracy;
+use crate::runtime::pjrt::{lit_f32, lit_i32, lit_scalar, to_vec_f32, Runtime};
+use crate::util::rng::Pcg64;
+use anyhow::{anyhow, Result};
+
+/// Fixed by the lowered artifact (python/compile/model.py).
+pub const BATCH: usize = 64;
+pub const SIDE: usize = 32;
+pub const N_CLASSES: usize = 10;
+
+/// Training options.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Print a loss line every `log_every` steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 150, lr: 0.03, seed: 42, log_every: 25 }
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    /// (step, loss) — the logged loss curve.
+    pub loss_curve: Vec<(usize, f32)>,
+    pub final_loss: f32,
+    pub frame_accuracy: f64,
+    pub video_accuracy: f64,
+    pub steps: usize,
+}
+
+/// Train the classifier on `train` frames, evaluate on `test` frames.
+pub fn train_classifier(
+    rt: &mut Runtime,
+    train: &FrameSet,
+    test: &FrameSet,
+    cfg: &TrainConfig,
+) -> Result<TrainResult> {
+    if train.frames.is_empty() {
+        return Err(anyhow!("no training frames"));
+    }
+    let mut params = rt.load_params("classifier_params")?;
+    let n_params = params.len();
+    let mut moms: Vec<xla::Literal> = params
+        .iter()
+        .map(|p| zeros_like(p))
+        .collect::<Result<Vec<_>>>()?;
+
+    let mut rng = Pcg64::with_stream(cfg.seed, 0x7a41);
+    let mut order: Vec<usize> = (0..train.frames.len()).collect();
+    let mut cursor = order.len(); // force shuffle on first use
+    let mut loss_curve = Vec::new();
+    let mut final_loss = f32::NAN;
+
+    for step in 0..cfg.steps {
+        // Assemble the next batch (reshuffle each epoch).
+        let mut xs = Vec::with_capacity(BATCH * SIDE * SIDE);
+        let mut ys = Vec::with_capacity(BATCH);
+        for _ in 0..BATCH {
+            if cursor >= order.len() {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let f = &train.frames[order[cursor]];
+            cursor += 1;
+            xs.extend_from_slice(&f.pixels);
+            ys.push(f.label as i32);
+        }
+        let x = lit_f32(&xs, &[BATCH as i64, 1, SIDE as i64, SIDE as i64])?;
+        let y = lit_i32(&ys, &[BATCH as i64])?;
+        // Cosine decay with a short linear warmup: SGD+momentum at a fixed
+        // lr is unstable on some dataset/surface combinations; the schedule
+        // is driver-side state (lr is an input of the AOT train step).
+        let warmup = (cfg.steps / 20).max(1);
+        let lr_now = if step < warmup {
+            cfg.lr * (step + 1) as f32 / warmup as f32
+        } else {
+            let f = (step - warmup) as f32 / (cfg.steps - warmup).max(1) as f32;
+            let cos = 0.5 * (1.0 + (std::f32::consts::PI * f).cos());
+            cfg.lr * (0.1 + 0.9 * cos)
+        };
+
+        // One artifact execution: (p.., m.., x, y, lr) -> (p'.., m'.., loss).
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(2 * n_params + 3);
+        inputs.append(&mut params);
+        inputs.append(&mut moms);
+        inputs.push(x);
+        inputs.push(y);
+        inputs.push(lit_scalar(lr_now));
+        let exe = rt.load("classifier_train")?;
+        let mut out = exe.run(&inputs)?;
+        if out.len() != 2 * n_params + 1 {
+            return Err(anyhow!("train artifact returned {} outputs", out.len()));
+        }
+        let loss_lit = out.pop().unwrap();
+        final_loss = loss_lit.get_first_element::<f32>()?;
+        moms = out.split_off(n_params);
+        params = out;
+
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            loss_curve.push((step, final_loss));
+        }
+    }
+
+    // ---- evaluation ------------------------------------------------------
+    let (frame_accuracy, video_accuracy) = evaluate(rt, &params, test)?;
+    Ok(TrainResult {
+        loss_curve,
+        final_loss,
+        frame_accuracy,
+        video_accuracy,
+        steps: cfg.steps,
+    })
+}
+
+/// Frame + video accuracy of `params` on a frame set.
+pub fn evaluate(
+    rt: &mut Runtime,
+    params: &[xla::Literal],
+    test: &FrameSet,
+) -> Result<(f64, f64)> {
+    if test.frames.is_empty() {
+        return Ok((0.0, 0.0));
+    }
+    let mut preds = vec![0usize; test.frames.len()];
+    let mut i = 0;
+    while i < test.frames.len() {
+        let mut xs = Vec::with_capacity(BATCH * SIDE * SIDE);
+        let n_real = (test.frames.len() - i).min(BATCH);
+        for k in 0..BATCH {
+            let f = &test.frames[(i + k).min(test.frames.len() - 1)];
+            xs.extend_from_slice(&f.pixels);
+        }
+        let x = lit_f32(&xs, &[BATCH as i64, 1, SIDE as i64, SIDE as i64])?;
+        let mut inputs: Vec<xla::Literal> = params
+            .iter()
+            .map(clone_literal)
+            .collect::<Result<Vec<_>>>()?;
+        inputs.push(x);
+        let exe = rt.load("classifier_fwd")?;
+        let out = exe.run(&inputs)?;
+        let logits = to_vec_f32(&out[0])?;
+        for k in 0..n_real {
+            let row = &logits[k * N_CLASSES..(k + 1) * N_CLASSES];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            preds[i + k] = arg;
+        }
+        i += n_real;
+    }
+    // Group by sample for video accuracy.
+    let mut by_sample: Vec<(usize, Vec<usize>)> = Vec::new();
+    for _ in 0..test.n_samples {
+        by_sample.push((usize::MAX, Vec::new()));
+    }
+    for (f, &p) in test.frames.iter().zip(&preds) {
+        by_sample[f.sample_id].0 = f.label;
+        by_sample[f.sample_id].1.push(p);
+    }
+    by_sample.retain(|(l, v)| *l != usize::MAX && !v.is_empty());
+    Ok(frame_and_video_accuracy(&by_sample, N_CLASSES))
+}
+
+fn zeros_like(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let n: usize = shape.dims().iter().map(|&d| d as usize).product();
+    lit_f32(&vec![0.0; n], shape.dims())
+}
+
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.array_shape()?;
+    let data = l.to_vec::<f32>()?;
+    lit_f32(&data, shape.dims())
+}

@@ -1,0 +1,12 @@
+//! Classification training driver (paper Sec. IV-D / Table II).
+//!
+//! Dataset event streams → time-surface frames (from a configurable
+//! representation: the ISC analog array, the ideal TS, quantized SAE,
+//! event count, TORE…) → 32×32 inputs → the AOT `classifier_train`
+//! artifact executed in a loop by this Rust driver. Python never runs.
+
+pub mod driver;
+pub mod frames;
+
+pub use driver::{train_classifier, TrainConfig, TrainResult};
+pub use frames::{build_frames, FrameSet, SurfaceKind};

@@ -1,0 +1,338 @@
+//! Write-heavy / multi-word representations: SITS [41], TOS [42] and
+//! TORE [65].
+//!
+//! SITS and TOS touch an entire neighbourhood per event (≈25–50 memory
+//! writes/event — the paper's Sec. II-B argument for why they are hostile
+//! to low-energy hardware). TORE keeps a per-pixel FIFO of the K most
+//! recent timestamps per polarity (≥96 b/pixel — the paper's Sec. IV-D
+//! area argument: ≥16× the ISC cell).
+
+use super::traits::Representation;
+use crate::events::{Event, Resolution};
+use crate::util::grid::Grid;
+
+/// Speed-Invariant Time Surface: on each event, neighbours with values
+/// above the incoming cell's are decremented and the cell is set to the
+/// maximum ordinal (2r+1)².
+pub struct Sits {
+    res: Resolution,
+    r: usize,
+    vals: Vec<u16>,
+    events: u64,
+    writes: u64,
+}
+
+impl Sits {
+    pub fn new(res: Resolution, r: usize) -> Self {
+        assert!(r >= 1);
+        Self { res, r, vals: vec![0; res.pixels()], events: 0, writes: 0 }
+    }
+
+    pub fn max_val(&self) -> u16 {
+        ((2 * self.r + 1) * (2 * self.r + 1)) as u16
+    }
+
+    pub fn value(&self, x: u16, y: u16) -> u16 {
+        self.vals[self.res.index(x, y)]
+    }
+}
+
+impl Representation for Sits {
+    fn update(&mut self, e: &Event) {
+        let (w, h) = (self.res.width as i64, self.res.height as i64);
+        let (ex, ey) = (e.x as i64, e.y as i64);
+        let center = self.res.index(e.x, e.y);
+        let v_center = self.vals[center];
+        let r = self.r as i64;
+        for dy in -r..=r {
+            for dx in -r..=r {
+                let (x, y) = (ex + dx, ey + dy);
+                if x < 0 || y < 0 || x >= w || y >= h || (dx == 0 && dy == 0) {
+                    continue;
+                }
+                let i = (y * w + x) as usize;
+                if self.vals[i] > v_center {
+                    self.vals[i] -= 1;
+                    self.writes += 1;
+                }
+            }
+        }
+        self.vals[center] = self.max_val();
+        self.writes += 1;
+        self.events += 1;
+    }
+
+    fn frame(&self, _t_us: u64) -> Grid<f64> {
+        let m = self.max_val() as f64;
+        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
+            self.vals[y * self.res.width as usize + x] as f64 / m
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "SITS"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // Ordinal values up to (2r+1)²: 8 bits suffice for r ≤ 7.
+        self.res.pixels() as u64 * 8
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+}
+
+/// Time Ordinal Surface (luvHarris): event sets its cell to 255; every
+/// other cell in the (2r+1)² patch decays by 1 (clamped at 0).
+pub struct Tos {
+    res: Resolution,
+    r: usize,
+    vals: Vec<u8>,
+    events: u64,
+    writes: u64,
+}
+
+impl Tos {
+    pub fn new(res: Resolution, r: usize) -> Self {
+        Self { res, r, vals: vec![0; res.pixels()], events: 0, writes: 0 }
+    }
+
+    pub fn value(&self, x: u16, y: u16) -> u8 {
+        self.vals[self.res.index(x, y)]
+    }
+}
+
+impl Representation for Tos {
+    fn update(&mut self, e: &Event) {
+        let (w, h) = (self.res.width as i64, self.res.height as i64);
+        let (ex, ey) = (e.x as i64, e.y as i64);
+        let r = self.r as i64;
+        for dy in -r..=r {
+            for dx in -r..=r {
+                let (x, y) = (ex + dx, ey + dy);
+                if x < 0 || y < 0 || x >= w || y >= h || (dx == 0 && dy == 0) {
+                    continue;
+                }
+                let i = (y * w + x) as usize;
+                if self.vals[i] > 0 {
+                    self.vals[i] -= 1;
+                    self.writes += 1;
+                }
+            }
+        }
+        let c = self.res.index(e.x, e.y);
+        self.vals[c] = 255;
+        self.writes += 1;
+        self.events += 1;
+    }
+
+    fn frame(&self, _t_us: u64) -> Grid<f64> {
+        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
+            self.vals[y * self.res.width as usize + x] as f64 / 255.0
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "TOS"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64 * 8
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+}
+
+/// Time-Ordered Recent Events: per-pixel, per-polarity FIFO of the K most
+/// recent event times. Frame value maps each FIFO entry's age through a
+/// clipped log kernel and averages (TORE volume collapsed to one channel).
+pub struct Tore {
+    res: Resolution,
+    k: usize,
+    /// FIFOs: [pixel][polarity] → ring of timestamps (µs, 0 = empty).
+    fifo: Vec<[Vec<u64>; 2]>,
+    /// Log-kernel clip range (µs).
+    pub t_min_us: f64,
+    pub t_max_us: f64,
+    events: u64,
+    writes: u64,
+}
+
+impl Tore {
+    pub fn new(res: Resolution, k: usize, t_min_us: f64, t_max_us: f64) -> Self {
+        assert!(k >= 1 && t_max_us > t_min_us && t_min_us > 0.0);
+        Self {
+            res,
+            k,
+            fifo: vec![[Vec::new(), Vec::new()]; res.pixels()],
+            t_min_us,
+            t_max_us,
+            events: 0,
+            writes: 0,
+        }
+    }
+
+    /// Collapsed TORE value at a pixel: mean over both polarities' FIFOs of
+    /// 1 − clamp(log(Δt/t_min)/log(t_max/t_min)).
+    pub fn value(&self, x: u16, y: u16, t_us: u64) -> f64 {
+        let cell = &self.fifo[self.res.index(x, y)];
+        let denom = (self.t_max_us / self.t_min_us).ln();
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for plane in cell {
+            for &tw in plane {
+                if tw == 0 || t_us < tw {
+                    continue;
+                }
+                let dt = ((t_us - tw) as f64).max(self.t_min_us);
+                let v = 1.0 - ((dt / self.t_min_us).ln() / denom).clamp(0.0, 1.0);
+                sum += v;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            // Normalize by total FIFO capacity so the value stays in [0, 1].
+            sum / (2.0 * self.k as f64)
+        }
+    }
+}
+
+impl Representation for Tore {
+    fn update(&mut self, e: &Event) {
+        let cell = &mut self.fifo[self.res.index(e.x, e.y)];
+        let q = &mut cell[e.p.index()];
+        q.push(e.t.max(1));
+        if q.len() > self.k {
+            q.remove(0);
+        }
+        self.events += 1;
+        self.writes += 1;
+    }
+
+    fn frame(&self, t_us: u64) -> Grid<f64> {
+        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
+            self.value(x as u16, y as u16, t_us)
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "TORE"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // K stamps × 2 polarities × 32-bit floats minimum (paper: ≥96 b).
+        self.res.pixels() as u64 * self.k as u64 * 2 * 32
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    fn ev(t: u64, x: u16, y: u16) -> Event {
+        Event::new(t, x, y, Polarity::On)
+    }
+
+    #[test]
+    fn sits_write_amplification() {
+        // Paper Sec. II-B: SITS needs ~25–50× the writes of SAE. With r=3
+        // on a busy patch the per-event write count approaches (2r+1)²=49.
+        let mut s = Sits::new(Resolution::new(32, 32), 3);
+        // Saturate a neighbourhood so most cells hold high ordinals.
+        for k in 0..2_000u64 {
+            s.update(&ev(k, (10 + k % 8) as u16, (10 + (k / 8) % 8) as u16));
+        }
+        let wpe = s.writes_per_event();
+        assert!(wpe > 10.0, "SITS writes/event {wpe}");
+        assert!(wpe <= 49.0);
+    }
+
+    #[test]
+    fn tos_write_amplification() {
+        let mut t = Tos::new(Resolution::new(32, 32), 3);
+        for k in 0..2_000u64 {
+            t.update(&ev(k, (10 + k % 8) as u16, (10 + (k / 8) % 8) as u16));
+        }
+        assert!(t.writes_per_event() > 10.0);
+    }
+
+    #[test]
+    fn sae_class_single_write() {
+        let mut s = super::super::sae::Sae::new(Resolution::new(32, 32));
+        for k in 0..100u64 {
+            s.update(&ev(k, 5, 5));
+        }
+        assert_eq!(s.writes_per_event(), 1.0);
+    }
+
+    #[test]
+    fn sits_center_maximal_after_event() {
+        let mut s = Sits::new(Resolution::new(8, 8), 2);
+        s.update(&ev(1, 4, 4));
+        assert_eq!(s.value(4, 4), s.max_val());
+    }
+
+    #[test]
+    fn tore_fifo_depth_bounded() {
+        let mut t = Tore::new(Resolution::new(4, 4), 3, 100.0, 1e6);
+        for k in 0..10u64 {
+            t.update(&ev(1 + k * 1_000, 1, 1));
+        }
+        // Value bounded and newer events dominate.
+        let v_now = t.value(1, 1, 9_001);
+        let v_later = t.value(1, 1, 2_000_000);
+        assert!(v_now > v_later);
+        assert!((0.0..=1.0).contains(&v_now));
+    }
+
+    #[test]
+    fn tore_memory_exceeds_isc_16x() {
+        // Paper Sec. IV-D: TORE ≥96 b/pixel vs the single analog cell.
+        let t = Tore::new(Resolution::QVGA, 3, 100.0, 1e6);
+        let bits_per_pixel = t.memory_bits() / Resolution::QVGA.pixels() as u64;
+        assert!(bits_per_pixel >= 96, "TORE bits/pixel {bits_per_pixel}");
+    }
+
+    #[test]
+    fn tore_polarity_separated() {
+        let mut t = Tore::new(Resolution::new(2, 2), 2, 100.0, 1e6);
+        t.update(&Event::new(1_000, 0, 0, Polarity::On));
+        t.update(&Event::new(2_000, 0, 0, Polarity::Off));
+        assert_eq!(t.fifo[0][Polarity::On.index()].len(), 1);
+        assert_eq!(t.fifo[0][Polarity::Off.index()].len(), 1);
+    }
+}

@@ -1,0 +1,197 @@
+//! Count-based representations (paper Sec. II-B): event-count images and
+//! the event-based binary image (EBBI). Cheap to store but they discard
+//! the fine temporal structure the TS keeps.
+
+use super::traits::Representation;
+use crate::events::{Event, Resolution};
+use crate::util::grid::Grid;
+
+/// Event-count image: per-pixel saturating n_C-bit counter over the
+/// current frame window (reset externally per frame).
+pub struct EventCount {
+    res: Resolution,
+    bits: u32,
+    counts: Vec<u16>,
+    events: u64,
+    writes: u64,
+}
+
+impl EventCount {
+    pub fn new(res: Resolution, bits: u32) -> Self {
+        assert!((1..=16).contains(&bits));
+        Self { res, bits, counts: vec![0; res.pixels()], events: 0, writes: 0 }
+    }
+
+    pub fn max_count(&self) -> u16 {
+        ((1u32 << self.bits) - 1) as u16
+    }
+
+    /// Start a new frame window.
+    pub fn reset_window(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+    }
+
+    pub fn count(&self, x: u16, y: u16) -> u16 {
+        self.counts[self.res.index(x, y)]
+    }
+}
+
+impl Representation for EventCount {
+    fn update(&mut self, e: &Event) {
+        let i = self.res.index(e.x, e.y);
+        if self.counts[i] < self.max_count() {
+            self.counts[i] += 1;
+            self.writes += 1;
+        }
+        self.events += 1;
+    }
+
+    fn frame(&self, _t_us: u64) -> Grid<f64> {
+        let m = self.max_count() as f64;
+        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
+            self.counts[y * self.res.width as usize + x] as f64 / m
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "event-count"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64 * self.bits as u64
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn reset_window(&mut self) {
+        EventCount::reset_window(self);
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+}
+
+/// Event-based binary image: 1 bit per pixel per window [34], [35].
+pub struct Ebbi {
+    res: Resolution,
+    bits: Vec<bool>,
+    events: u64,
+    writes: u64,
+}
+
+impl Ebbi {
+    pub fn new(res: Resolution) -> Self {
+        Self { res, bits: vec![false; res.pixels()], events: 0, writes: 0 }
+    }
+
+    pub fn reset_window(&mut self) {
+        self.bits.iter_mut().for_each(|b| *b = false);
+    }
+
+    pub fn get(&self, x: u16, y: u16) -> bool {
+        self.bits[self.res.index(x, y)]
+    }
+}
+
+impl Representation for Ebbi {
+    fn update(&mut self, e: &Event) {
+        let i = self.res.index(e.x, e.y);
+        if !self.bits[i] {
+            self.bits[i] = true;
+            self.writes += 1;
+        }
+        self.events += 1;
+    }
+
+    fn frame(&self, _t_us: u64) -> Grid<f64> {
+        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
+            if self.bits[y * self.res.width as usize + x] { 1.0 } else { 0.0 }
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "EBBI"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn reset_window(&mut self) {
+        Ebbi::reset_window(self);
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    fn ev(t: u64, x: u16, y: u16) -> Event {
+        Event::new(t, x, y, Polarity::On)
+    }
+
+    #[test]
+    fn count_saturates() {
+        let mut c = EventCount::new(Resolution::new(2, 2), 2);
+        for k in 0..10 {
+            c.update(&ev(k, 0, 0));
+        }
+        assert_eq!(c.count(0, 0), 3); // 2-bit max
+        assert_eq!(c.events_seen(), 10);
+        assert_eq!(c.memory_writes(), 3); // saturated writes skipped
+    }
+
+    #[test]
+    fn ebbi_single_write_per_pixel() {
+        let mut b = Ebbi::new(Resolution::new(2, 2));
+        for k in 0..5 {
+            b.update(&ev(k, 1, 1));
+        }
+        assert!(b.get(1, 1));
+        assert_eq!(b.memory_writes(), 1);
+        assert!(b.writes_per_event() < 1.0);
+    }
+
+    #[test]
+    fn memory_ordering_matches_paper() {
+        // Sec. II-B: EBBI (H·W) < count (H·W·n_C) < SAE (H·W·n_T).
+        let res = Resolution::QVGA;
+        let e = Ebbi::new(res);
+        let c = EventCount::new(res, 4);
+        let s = super::super::sae::Sae::new(res);
+        assert!(e.memory_bits() < c.memory_bits());
+        assert!(c.memory_bits() < s.memory_bits());
+    }
+
+    #[test]
+    fn reset_window_clears() {
+        let mut c = EventCount::new(Resolution::new(2, 2), 4);
+        c.update(&ev(1, 0, 0));
+        c.reset_window();
+        assert_eq!(c.count(0, 0), 0);
+        let mut b = Ebbi::new(Resolution::new(2, 2));
+        b.update(&ev(1, 0, 0));
+        b.reset_window();
+        assert!(!b.get(0, 0));
+    }
+}

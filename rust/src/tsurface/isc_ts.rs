@@ -1,0 +1,129 @@
+//! The ISC-backed time-surface: the [`Representation`] view of the analog
+//! array, so the hardware TS drops into every pipeline slot where the
+//! ideal/digital surfaces go (classification, reconstruction, denoising
+//! comparisons all use this adapter).
+
+use super::traits::Representation;
+use crate::events::{Event, Resolution};
+use crate::isc::{IscArray, IscConfig};
+use crate::util::grid::Grid;
+
+/// Time-surface produced by the simulated ISC analog array.
+pub struct IscTs {
+    array: IscArray,
+}
+
+impl IscTs {
+    pub fn new(res: Resolution, cfg: IscConfig) -> Self {
+        Self { array: IscArray::new(res, cfg) }
+    }
+
+    pub fn with_defaults(res: Resolution) -> Self {
+        Self::new(res, IscConfig::default())
+    }
+
+    pub fn array(&self) -> &IscArray {
+        &self.array
+    }
+
+    pub fn array_mut(&mut self) -> &mut IscArray {
+        &mut self.array
+    }
+}
+
+impl Representation for IscTs {
+    fn update(&mut self, e: &Event) {
+        self.array.write(e);
+    }
+
+    fn frame(&self, t_us: u64) -> Grid<f64> {
+        self.array.frame_merged(t_us)
+    }
+
+    fn name(&self) -> &'static str {
+        "3DS-ISC"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // One analog cell per pixel (per polarity plane): the hardware
+        // equivalent of a single stored value. We count the effective
+        // analog precision (~6 b usable given <2 % CV) per plane.
+        let planes = if self.array.config().polarity_sensitive { 2 } else { 1 };
+        self.array.resolution().pixels() as u64 * 6 * planes
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.array.write_count()
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.array.write_count()
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.array.resolution()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    #[test]
+    fn adapter_tracks_array() {
+        let mut ts = IscTs::with_defaults(Resolution::new(8, 8));
+        ts.update(&Event::new(1_000, 2, 2, Polarity::On));
+        assert_eq!(ts.events_seen(), 1);
+        assert_eq!(ts.writes_per_event(), 1.0);
+        let f = ts.frame(1_000);
+        assert!(*f.get(2, 2) > 0.9);
+    }
+
+    #[test]
+    fn memory_far_below_sram_sae() {
+        let isc = IscTs::with_defaults(Resolution::QVGA);
+        let sae_bits = Resolution::QVGA.pixels() as u64 * 16;
+        assert!(isc.memory_bits() < sae_bits);
+    }
+
+    #[test]
+    fn hardware_ts_close_to_ideal_ts() {
+        // The paper's central algorithmic claim: the analog TS ≈ the ideal
+        // exponential TS. Compare frames after a short stream.
+        use super::super::sae::IdealTs;
+        let res = Resolution::new(16, 16);
+        let mut hw = IscTs::with_defaults(res);
+        // τ chosen to match the analog decay's effective window.
+        let mut ideal = IdealTs::new(res, 24_000.0);
+        let mut t = 1_000u64;
+        for k in 0..64u64 {
+            let e = Event::new(t, (k % 16) as u16, ((k / 16) * 3 % 16) as u16, Polarity::On);
+            hw.update(&e);
+            ideal.update(&e);
+            t += 700;
+        }
+        let fh = hw.frame(t);
+        let fi = ideal.frame(t);
+        // Rank agreement: most-recent pixel should be brightest in both.
+        let argmax = |g: &Grid<f64>| {
+            g.as_slice()
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmax(&fh), argmax(&fi));
+        // Values correlated: Pearson r over written pixels > 0.9.
+        let (hs, is): (Vec<f64>, Vec<f64>) = fh
+            .as_slice()
+            .iter()
+            .zip(fi.as_slice())
+            .filter(|(a, b)| **a > 0.0 || **b > 0.0)
+            .map(|(a, b)| (*a, *b))
+            .unzip();
+        let (_, _, r2) = crate::util::stats::linreg(&hs, &is);
+        assert!(r2 > 0.8, "hardware vs ideal TS r² = {r2}");
+    }
+}

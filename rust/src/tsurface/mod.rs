@@ -1,0 +1,16 @@
+//! 2D event-data representations (paper Sec. II-B) behind one trait:
+//! SAE, ideal/quantized time-surfaces, count/binary images, the
+//! write-heavy SITS/TOS, the FIFO-based TORE, and the ISC-backed analog
+//! time-surface that is this paper's contribution.
+
+pub mod advanced;
+pub mod binary;
+pub mod isc_ts;
+pub mod sae;
+pub mod traits;
+
+pub use advanced::{Sits, Tore, Tos};
+pub use binary::{Ebbi, EventCount};
+pub use isc_ts::IscTs;
+pub use sae::{IdealTs, QuantizedSae, Sae};
+pub use traits::Representation;

@@ -1,0 +1,281 @@
+//! Timestamp-based representations: SAE (Eq. 2), the ideal exponential
+//! time-surface (Eq. 3/5), and the finite-width "digital SRAM" variant
+//! exhibiting the timestamp-overflow hazard the paper's analog array avoids.
+
+use super::traits::Representation;
+use crate::events::{Event, Resolution};
+use crate::util::grid::Grid;
+
+/// Surface of Active Events: per-pixel latest timestamp (full precision).
+pub struct Sae {
+    res: Resolution,
+    /// Last event time per pixel (µs; 0 = never).
+    t: Vec<u64>,
+    events: u64,
+    writes: u64,
+}
+
+impl Sae {
+    pub fn new(res: Resolution) -> Self {
+        Self { res, t: vec![0; res.pixels()], events: 0, writes: 0 }
+    }
+
+    /// Raw timestamp read (the SAE value).
+    #[inline]
+    pub fn last(&self, x: u16, y: u16) -> u64 {
+        self.t[self.res.index(x, y)]
+    }
+
+    /// Ideal TS value at query time: e^{−(t−SAE)/τ} (Eq. 5), 0 if unwritten.
+    #[inline]
+    pub fn ts_value(&self, x: u16, y: u16, t_us: u64, tau_us: f64) -> f64 {
+        let tw = self.last(x, y);
+        if tw == 0 || t_us < tw {
+            0.0
+        } else {
+            (-((t_us - tw) as f64) / tau_us).exp()
+        }
+    }
+}
+
+impl Representation for Sae {
+    fn update(&mut self, e: &Event) {
+        let i = self.res.index(e.x, e.y);
+        self.t[i] = e.t.max(1);
+        self.events += 1;
+        self.writes += 1;
+    }
+
+    /// Frame = timestamps min-max normalized (the Fig. 6a view).
+    fn frame(&self, _t_us: u64) -> Grid<f64> {
+        let max = *self.t.iter().max().unwrap_or(&1);
+        let min_written = self.t.iter().copied().filter(|&t| t > 0).min().unwrap_or(0);
+        let span = (max - min_written).max(1) as f64;
+        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
+            let t = self.t[y * self.res.width as usize + x];
+            if t == 0 {
+                0.0
+            } else {
+                (t - min_written) as f64 / span
+            }
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "SAE"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // Unbounded in theory; a practical system stores ≥ n_T-bit stamps.
+        self.res.pixels() as u64 * 64
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+}
+
+/// Ideal exponential time-surface built on a full-precision SAE.
+pub struct IdealTs {
+    sae: Sae,
+    pub tau_us: f64,
+}
+
+impl IdealTs {
+    pub fn new(res: Resolution, tau_us: f64) -> Self {
+        assert!(tau_us > 0.0);
+        Self { sae: Sae::new(res), tau_us }
+    }
+
+    #[inline]
+    pub fn value(&self, x: u16, y: u16, t_us: u64) -> f64 {
+        self.sae.ts_value(x, y, t_us, self.tau_us)
+    }
+
+    pub fn sae(&self) -> &Sae {
+        &self.sae
+    }
+}
+
+impl Representation for IdealTs {
+    fn update(&mut self, e: &Event) {
+        self.sae.update(e);
+    }
+
+    fn frame(&self, t_us: u64) -> Grid<f64> {
+        Grid::from_fn(self.sae.res.width as usize, self.sae.res.height as usize, |x, y| {
+            self.value(x as u16, y as u16, t_us)
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "ideal-TS"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.sae.memory_bits()
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.sae.memory_writes()
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.sae.events_seen()
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.sae.res
+    }
+}
+
+/// SAE stored in `bits`-wide µs counters — the digital SRAM implementation
+/// [26]. The counter wraps, so after 2^bits µs old pixels suddenly look
+/// *recent*: the overflow artifact of Sec. II-B / IV-B.
+pub struct QuantizedSae {
+    res: Resolution,
+    bits: u32,
+    t: Vec<u64>, // stored wrapped value; u64 for convenience
+    written: Vec<bool>,
+    pub tau_us: f64,
+    events: u64,
+    writes: u64,
+}
+
+impl QuantizedSae {
+    pub fn new(res: Resolution, bits: u32, tau_us: f64) -> Self {
+        assert!((1..=32).contains(&bits));
+        Self {
+            res,
+            bits,
+            t: vec![0; res.pixels()],
+            written: vec![false; res.pixels()],
+            tau_us,
+            events: 0,
+            writes: 0,
+        }
+    }
+
+    #[inline]
+    fn mask(&self) -> u64 {
+        (1u64 << self.bits) - 1
+    }
+
+    /// TS value computed from wrapped stamps — exhibits overflow errors.
+    pub fn value(&self, x: u16, y: u16, t_us: u64) -> f64 {
+        let i = self.res.index(x, y);
+        if !self.written[i] {
+            return 0.0;
+        }
+        let now = t_us & self.mask();
+        let then = self.t[i];
+        // Hardware subtracts modulo 2^bits: an old stamp aliases as recent.
+        let dt = now.wrapping_sub(then) & self.mask();
+        (-(dt as f64) / self.tau_us).exp()
+    }
+}
+
+impl Representation for QuantizedSae {
+    fn update(&mut self, e: &Event) {
+        let i = self.res.index(e.x, e.y);
+        self.t[i] = e.t & self.mask();
+        self.written[i] = true;
+        self.events += 1;
+        self.writes += 1;
+    }
+
+    fn frame(&self, t_us: u64) -> Grid<f64> {
+        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
+            self.value(x as u16, y as u16, t_us)
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "quantized-SAE"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64 * self.bits as u64
+    }
+
+    fn memory_writes(&self) -> u64 {
+        self.writes
+    }
+
+    fn events_seen(&self) -> u64 {
+        self.events
+    }
+
+    fn resolution(&self) -> Resolution {
+        self.res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    fn ev(t: u64, x: u16, y: u16) -> Event {
+        Event::new(t, x, y, Polarity::On)
+    }
+
+    #[test]
+    fn sae_keeps_latest() {
+        let mut s = Sae::new(Resolution::new(4, 4));
+        s.update(&ev(100, 1, 1));
+        s.update(&ev(500, 1, 1));
+        assert_eq!(s.last(1, 1), 500);
+        assert_eq!(s.writes_per_event(), 1.0);
+    }
+
+    #[test]
+    fn ideal_ts_decays_exponentially() {
+        let mut ts = IdealTs::new(Resolution::new(4, 4), 10_000.0);
+        ts.update(&ev(1_000, 2, 2));
+        let v0 = ts.value(2, 2, 1_000);
+        let v1 = ts.value(2, 2, 11_000); // one τ later
+        assert!((v0 - 1.0).abs() < 1e-12);
+        assert!((v1 - (-1.0f64).exp()).abs() < 1e-9);
+        // Normalized ≤ 1 always (the paper's bounded-representation point).
+        assert!(ts.frame(50_000).as_slice().iter().all(|&v| v <= 1.0));
+    }
+
+    #[test]
+    fn quantized_sae_overflow_artifact() {
+        // 10-bit µs counter wraps every 1 024 µs: a pixel written at t=1
+        // and read at t=1025+1 looks *fresh* again.
+        let mut q = QuantizedSae::new(Resolution::new(2, 2), 10, 200.0);
+        q.update(&ev(1, 0, 0));
+        let correct = q.value(0, 0, 900); // Δt=899: ~e^{-4.5}
+        let aliased = q.value(0, 0, 1 + 1024 + 10); // wraps: Δt aliases to 10
+        assert!(correct < 0.02);
+        assert!(aliased > 0.9, "overflow alias expected, got {aliased}");
+    }
+
+    #[test]
+    fn full_precision_has_no_alias() {
+        let mut ts = IdealTs::new(Resolution::new(2, 2), 200.0);
+        ts.update(&ev(1, 0, 0));
+        assert!(ts.value(0, 0, 1 + 1024 + 10) < 0.01);
+    }
+
+    #[test]
+    fn unwritten_pixels_zero_in_all() {
+        let res = Resolution::new(3, 3);
+        let s = Sae::new(res);
+        let ts = IdealTs::new(res, 1e4);
+        let q = QuantizedSae::new(res, 16, 1e4);
+        assert_eq!(s.frame(100).as_slice().iter().sum::<f64>(), 0.0);
+        assert_eq!(ts.frame(100).as_slice().iter().sum::<f64>(), 0.0);
+        assert_eq!(q.frame(100).as_slice().iter().sum::<f64>(), 0.0);
+    }
+}

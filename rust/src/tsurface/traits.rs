@@ -1,0 +1,91 @@
+//! Common interface + resource accounting for 2D event representations
+//! (paper Sec. II-B).
+//!
+//! Every representation ingests events one at a time and can render a
+//! frame at any query time. The accounting methods expose the paper's
+//! comparison axes: memory footprint (bits) and memory writes per event
+//! (SITS/TOS need 25–50× writes, which is why they are hostile to
+//! low-energy hardware).
+
+use crate::events::{Event, Resolution};
+use crate::util::grid::Grid;
+
+/// A 2D event-stream representation.
+pub trait Representation {
+    /// Ingest one event (stream order).
+    fn update(&mut self, e: &Event);
+
+    /// Render the representation as a [0, 1] frame at query time `t_us`.
+    fn frame(&self, t_us: u64) -> Grid<f64>;
+
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// Storage footprint in bits for the whole array.
+    fn memory_bits(&self) -> u64;
+
+    /// Total memory write operations performed so far (cells touched).
+    fn memory_writes(&self) -> u64;
+
+    /// Events ingested so far.
+    fn events_seen(&self) -> u64;
+
+    /// Memory writes per event — the paper's key hardware-cost metric.
+    fn writes_per_event(&self) -> f64 {
+        if self.events_seen() == 0 {
+            0.0
+        } else {
+            self.memory_writes() as f64 / self.events_seen() as f64
+        }
+    }
+
+    /// Start a new accumulation window. Decay-based surfaces carry state
+    /// across windows (like the hardware) — default no-op; per-window
+    /// accumulators (count/binary images) clear themselves here.
+    fn reset_window(&mut self) {}
+
+    fn resolution(&self) -> Resolution;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    struct Dummy {
+        res: Resolution,
+        n: u64,
+    }
+    impl Representation for Dummy {
+        fn update(&mut self, _e: &Event) {
+            self.n += 1;
+        }
+        fn frame(&self, _t: u64) -> Grid<f64> {
+            Grid::new(1, 1, 0.0)
+        }
+        fn name(&self) -> &'static str {
+            "dummy"
+        }
+        fn memory_bits(&self) -> u64 {
+            8
+        }
+        fn memory_writes(&self) -> u64 {
+            3 * self.n
+        }
+        fn events_seen(&self) -> u64 {
+            self.n
+        }
+        fn resolution(&self) -> Resolution {
+            self.res
+        }
+    }
+
+    #[test]
+    fn writes_per_event_ratio() {
+        let mut d = Dummy { res: Resolution::new(2, 2), n: 0 };
+        assert_eq!(d.writes_per_event(), 0.0);
+        d.update(&Event::new(1, 0, 0, Polarity::On));
+        d.update(&Event::new(2, 0, 0, Polarity::On));
+        assert_eq!(d.writes_per_event(), 3.0);
+    }
+}

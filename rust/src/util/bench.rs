@@ -1,0 +1,98 @@
+//! Minimal benchmarking harness (offline substitute for `criterion`).
+//!
+//! `cargo bench` runs the `rust/benches/*.rs` binaries (harness = false);
+//! each uses this helper: warmup, fixed-duration measurement, mean/σ/min
+//! reporting, and a throughput variant for events/s-style numbers.
+
+use super::stats::Running;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    /// Items processed per iteration (for throughput reporting).
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            return 0.0;
+        }
+        self.items_per_iter * 1e9 / self.mean_ns
+    }
+
+    pub fn report(&self) -> String {
+        let tp = if self.items_per_iter > 1.0 {
+            format!("  [{:.3} Mitems/s]", self.throughput_per_sec() / 1e6)
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<44} {:>12.3} µs/iter ±{:>8.3} (min {:>10.3}, n={}){tp}",
+            self.name,
+            self.mean_ns / 1e3,
+            self.stddev_ns / 1e3,
+            self.min_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark `f` for ~`measure_ms` after ~`warmup_ms` of warmup.
+/// `items` is the number of logical items one call of `f` processes.
+pub fn bench(name: &str, items: f64, warmup_ms: u64, measure_ms: u64, mut f: impl FnMut()) -> BenchResult {
+    // Warmup.
+    let warm_until = Instant::now() + Duration::from_millis(warmup_ms);
+    while Instant::now() < warm_until {
+        f();
+    }
+    // Measure.
+    let mut stats = Running::new();
+    let measure_until = Instant::now() + Duration::from_millis(measure_ms);
+    let mut iters = 0u64;
+    while Instant::now() < measure_until {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_nanos() as f64);
+        iters += 1;
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats.mean(),
+        stddev_ns: stats.stddev(),
+        min_ns: stats.min(),
+        items_per_iter: items,
+    }
+}
+
+/// Print a standard bench header.
+pub fn header(title: &str) {
+    println!("\n## {title}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 100.0, 5, 25, || {
+            let mut s = 0u64;
+            for i in 0..1_000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            std::hint::black_box(s);
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.throughput_per_sec() > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+}

@@ -1,0 +1,305 @@
+//! Nonlinear least-squares fitting of the double-exponential decay model.
+//!
+//! The paper (Sec. IV-C, Fig. 9) models the SPICE-simulated storage-node
+//! voltage as
+//!
+//! ```text
+//! f(t) = A1·exp(-t/τ1) + A2·exp(-t/τ2) + b
+//! ```
+//!
+//! and maps 8 000 Monte-Carlo transients to per-pixel parameter tuples. We do
+//! the same: the circuit simulator (`circuit::cell`) produces V(t) samples,
+//! and this module extracts (A1, τ1, A2, τ2, b) with a small
+//! Levenberg–Marquardt implementation (no external solver available offline).
+
+use super::stats::mse;
+
+/// Parameters of the double-exponential decay model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DoubleExp {
+    pub a1: f64,
+    pub tau1: f64,
+    pub a2: f64,
+    pub tau2: f64,
+    pub b: f64,
+}
+
+impl DoubleExp {
+    /// Evaluate the model at time `t` (seconds).
+    #[inline]
+    pub fn eval(&self, t: f64) -> f64 {
+        self.a1 * (-t / self.tau1).exp() + self.a2 * (-t / self.tau2).exp() + self.b
+    }
+
+    /// Inverse: smallest t ≥ 0 with eval(t) ≤ v, found by bisection on the
+    /// monotone decay (returns None if v is above the initial value or the
+    /// model never decays to v within `t_max`).
+    pub fn time_to_reach(&self, v: f64, t_max: f64) -> Option<f64> {
+        if self.eval(0.0) <= v {
+            return Some(0.0);
+        }
+        if self.eval(t_max) > v {
+            return None;
+        }
+        let (mut lo, mut hi) = (0.0, t_max);
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if self.eval(mid) > v {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(0.5 * (lo + hi))
+    }
+
+    /// Total initial amplitude A1 + A2 + b.
+    pub fn v0(&self) -> f64 {
+        self.a1 + self.a2 + self.b
+    }
+
+    /// True iff the model is a guaranteed monotone decay (both amplitudes
+    /// non-negative). The LM fit is unconstrained, so callers that need a
+    /// physical discharge curve (e.g. the ISC array) check this and fall
+    /// back to a constrained fit.
+    pub fn is_monotone_decay(&self) -> bool {
+        self.a1 >= 0.0 && self.a2 >= 0.0 && self.tau1 > 0.0 && self.tau2 > 0.0
+    }
+}
+
+/// Result of a fit: parameters plus goodness-of-fit.
+#[derive(Clone, Copy, Debug)]
+pub struct FitResult {
+    pub params: DoubleExp,
+    pub mse: f64,
+    pub iterations: usize,
+}
+
+/// Fit a double exponential to samples (t, v) with Levenberg–Marquardt.
+///
+/// `t` in seconds, `v` in volts. The initial guess is derived from the data:
+/// the slow τ from the log-slope of the tail, the fast component from the
+/// early residual. Parameters are optimized in log-space for the τs to keep
+/// them positive.
+pub fn fit_double_exp(t: &[f64], v: &[f64]) -> FitResult {
+    assert_eq!(t.len(), v.len());
+    assert!(t.len() >= 5, "need at least 5 samples");
+    let n = t.len();
+
+    // ---- initial guess ------------------------------------------------
+    let v0 = v[0];
+    let b0 = v[n - 1].min(0.0).max(-0.5 * v0.abs()); // decay targets ~0
+    // Tail slope: use the last third of the samples.
+    let third = n - n / 3;
+    let mut tau_slow = estimate_tau(&t[third..], &v[third..]).unwrap_or(t[n - 1] / 2.0);
+    if !(tau_slow.is_finite() && tau_slow > 0.0) {
+        tau_slow = t[n - 1] / 2.0;
+    }
+    let tau_fast = (tau_slow / 5.0).max(t[1].max(1e-9));
+    let a2 = (0.8 * v0).max(1e-6);
+    let a1 = (v0 - a2).max(1e-6);
+    let mut p = [a1, tau_fast.ln(), a2, tau_slow.ln(), b0];
+
+    // ---- Levenberg–Marquardt ------------------------------------------
+    let model = |p: &[f64; 5], ti: f64| -> f64 {
+        p[0] * (-ti / p[1].exp()).exp() + p[2] * (-ti / p[3].exp()).exp() + p[4]
+    };
+    let mut lambda = 1e-3;
+    let mut last_sse = sse(&p, t, v, &model);
+    let mut iters = 0;
+    for _ in 0..200 {
+        iters += 1;
+        // Jacobian (n × 5), finite differences are avoided: analytic.
+        let mut jtj = [[0.0f64; 5]; 5];
+        let mut jtr = [0.0f64; 5];
+        for i in 0..n {
+            let e1 = (-t[i] / p[1].exp()).exp();
+            let e2 = (-t[i] / p[3].exp()).exp();
+            let r = v[i] - (p[0] * e1 + p[2] * e2 + p[4]);
+            // d/d a1, d/d ln τ1 (chain rule: ∂f/∂lnτ = f·t/τ · a e^{-t/τ}),
+            // d/d a2, d/d ln τ2, d/d b
+            let j = [
+                e1,
+                p[0] * e1 * t[i] / p[1].exp(),
+                e2,
+                p[2] * e2 * t[i] / p[3].exp(),
+                1.0,
+            ];
+            for r_ in 0..5 {
+                jtr[r_] += j[r_] * r;
+                for c in 0..5 {
+                    jtj[r_][c] += j[r_] * j[c];
+                }
+            }
+        }
+        // Damped normal equations: (JᵀJ + λ·diag) δ = Jᵀr
+        let mut a = jtj;
+        for d in 0..5 {
+            a[d][d] += lambda * (jtj[d][d].max(1e-12));
+        }
+        let delta = match solve5(a, jtr) {
+            Some(d) => d,
+            None => break,
+        };
+        let mut p_new = p;
+        for k in 0..5 {
+            p_new[k] += delta[k];
+        }
+        // Clamp log-taus to sane bounds to avoid overflow.
+        p_new[1] = p_new[1].clamp(-25.0, 10.0);
+        p_new[3] = p_new[3].clamp(-25.0, 10.0);
+        let new_sse = sse(&p_new, t, v, &model);
+        if new_sse < last_sse {
+            let improve = (last_sse - new_sse) / last_sse.max(1e-300);
+            p = p_new;
+            last_sse = new_sse;
+            lambda = (lambda * 0.5).max(1e-12);
+            if improve < 1e-12 {
+                break;
+            }
+        } else {
+            lambda *= 4.0;
+            if lambda > 1e10 {
+                break;
+            }
+        }
+    }
+
+    // Canonicalize: τ1 ≤ τ2 (fast first).
+    let (mut a1, mut tau1) = (p[0], p[1].exp());
+    let (mut a2, mut tau2) = (p[2], p[3].exp());
+    if tau1 > tau2 {
+        std::mem::swap(&mut a1, &mut a2);
+        std::mem::swap(&mut tau1, &mut tau2);
+    }
+    let params = DoubleExp { a1, tau1, a2, tau2, b: p[4] };
+    let fitted: Vec<f64> = t.iter().map(|&ti| params.eval(ti)).collect();
+    FitResult { params, mse: mse(&fitted, v), iterations: iters }
+}
+
+fn sse(p: &[f64; 5], t: &[f64], v: &[f64], model: &dyn Fn(&[f64; 5], f64) -> f64) -> f64 {
+    t.iter().zip(v).map(|(&ti, &vi)| {
+        let r = vi - model(p, ti);
+        r * r
+    }).sum()
+}
+
+/// Estimate a single τ from ln(v) slope (v must be positive).
+fn estimate_tau(t: &[f64], v: &[f64]) -> Option<f64> {
+    let pts: Vec<(f64, f64)> = t
+        .iter()
+        .zip(v)
+        .filter(|(_, &vi)| vi > 1e-9)
+        .map(|(&ti, &vi)| (ti, vi.ln()))
+        .collect();
+    if pts.len() < 2 {
+        return None;
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (_, slope, _) = super::stats::linreg(&xs, &ys);
+    if slope >= 0.0 {
+        None
+    } else {
+        Some(-1.0 / slope)
+    }
+}
+
+/// Solve a 5×5 linear system by Gaussian elimination with partial pivoting.
+fn solve5(mut a: [[f64; 5]; 5], mut b: [f64; 5]) -> Option<[f64; 5]> {
+    for col in 0..5 {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..5 {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-300 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        for r in col + 1..5 {
+            let f = a[r][col] / d;
+            for c in col..5 {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 5];
+    for r in (0..5).rev() {
+        let mut s = b[r];
+        for c in r + 1..5 {
+            s -= a[r][c] * x[c];
+        }
+        x[r] = s / a[r][r];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(params: &DoubleExp, n: usize, t_max: f64) -> (Vec<f64>, Vec<f64>) {
+        let t: Vec<f64> = (0..n).map(|i| t_max * i as f64 / (n - 1) as f64).collect();
+        let v: Vec<f64> = t.iter().map(|&ti| params.eval(ti)).collect();
+        (t, v)
+    }
+
+    #[test]
+    fn recovers_known_double_exp() {
+        let truth = DoubleExp { a1: 0.153, tau1: 6.14e-3, a2: 1.047, tau2: 23.9e-3, b: 0.0 };
+        let (t, v) = sample(&truth, 200, 0.06);
+        let fit = fit_double_exp(&t, &v);
+        assert!(fit.mse < 1e-8, "mse={}", fit.mse);
+        // The reconstruction matters more than exact parameter identity
+        // (double exponentials are weakly identifiable), but for clean data
+        // these should land close.
+        for &probe in &[0.0, 5e-3, 10e-3, 20e-3, 30e-3, 50e-3] {
+            assert!(
+                (fit.params.eval(probe) - truth.eval(probe)).abs() < 1e-3,
+                "probe={probe} fit={} truth={}",
+                fit.params.eval(probe),
+                truth.eval(probe)
+            );
+        }
+    }
+
+    #[test]
+    fn recovers_single_exp_as_degenerate() {
+        let truth = DoubleExp { a1: 0.0, tau1: 1e-3, a2: 1.2, tau2: 2e-3, b: 0.0 };
+        let (t, v) = sample(&truth, 120, 0.012);
+        let fit = fit_double_exp(&t, &v);
+        assert!(fit.mse < 1e-7, "mse={}", fit.mse);
+    }
+
+    #[test]
+    fn fit_with_offset() {
+        let truth = DoubleExp { a1: 0.3, tau1: 2e-3, a2: 0.8, tau2: 15e-3, b: 0.05 };
+        let (t, v) = sample(&truth, 200, 0.08);
+        let fit = fit_double_exp(&t, &v);
+        assert!(fit.mse < 1e-7, "mse={}", fit.mse);
+    }
+
+    #[test]
+    fn time_to_reach_bisects() {
+        let p = DoubleExp { a1: 0.0, tau1: 1.0, a2: 1.0, tau2: 10e-3, b: 0.0 };
+        // v(t)=e^{-t/10ms}; reaches 0.5 at t = 10ms·ln2
+        let t = p.time_to_reach(0.5, 1.0).unwrap();
+        assert!((t - 10e-3 * std::f64::consts::LN_2).abs() < 1e-7);
+        assert_eq!(p.time_to_reach(2.0, 1.0), Some(0.0));
+        assert_eq!(p.time_to_reach(-0.1, 1.0), None);
+    }
+
+    #[test]
+    fn canonical_order_fast_first() {
+        let truth = DoubleExp { a1: 0.5, tau1: 20e-3, a2: 0.7, tau2: 1e-3, b: 0.0 };
+        let (t, v) = sample(&truth, 150, 0.06);
+        let fit = fit_double_exp(&t, &v);
+        assert!(fit.params.tau1 <= fit.params.tau2);
+    }
+}

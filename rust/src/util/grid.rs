@@ -1,0 +1,167 @@
+//! A small row-major 2D grid used for intensity fields, voltage planes and
+//! time-surface frames throughout the simulator.
+
+/// Row-major 2D array of `T` with (width, height) addressing `(x, y)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grid<T> {
+    width: usize,
+    height: usize,
+    data: Vec<T>,
+}
+
+impl<T: Clone> Grid<T> {
+    /// Grid filled with `fill`.
+    pub fn new(width: usize, height: usize, fill: T) -> Self {
+        assert!(width > 0 && height > 0, "empty grid");
+        Self { width, height, data: vec![fill; width * height] }
+    }
+
+    /// Build from a closure of (x, y).
+    pub fn from_fn(width: usize, height: usize, mut f: impl FnMut(usize, usize) -> T) -> Self {
+        let mut data = Vec::with_capacity(width * height);
+        for y in 0..height {
+            for x in 0..width {
+                data.push(f(x, y));
+            }
+        }
+        Self { width, height, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(width: usize, height: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), width * height);
+        Self { width, height, data }
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+    #[inline]
+    pub fn height(&self) -> usize {
+        self.height
+    }
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn idx(&self, x: usize, y: usize) -> usize {
+        debug_assert!(x < self.width && y < self.height);
+        y * self.width + x
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> &T {
+        &self.data[self.idx(x, y)]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, x: usize, y: usize) -> &mut T {
+        let i = self.idx(x, y);
+        &mut self.data[i]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: T) {
+        let i = self.idx(x, y);
+        self.data[i] = v;
+    }
+
+    /// Checked accessor returning None out of bounds (patch iteration).
+    #[inline]
+    pub fn get_checked(&self, x: i64, y: i64) -> Option<&T> {
+        if x < 0 || y < 0 || x as usize >= self.width || y as usize >= self.height {
+            None
+        } else {
+            Some(&self.data[y as usize * self.width + x as usize])
+        }
+    }
+
+    /// Raw row-major slice.
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Map into a new grid.
+    pub fn map<U: Clone>(&self, f: impl Fn(&T) -> U) -> Grid<U> {
+        Grid { width: self.width, height: self.height, data: self.data.iter().map(f).collect() }
+    }
+
+    /// Iterate (x, y, &value).
+    pub fn iter_coords(&self) -> impl Iterator<Item = (usize, usize, &T)> {
+        let w = self.width;
+        self.data.iter().enumerate().map(move |(i, v)| (i % w, i / w, v))
+    }
+}
+
+impl Grid<f64> {
+    /// Write as a binary-free ASCII PGM (P2) for quick visual inspection.
+    /// Values are min-max scaled to 0..255.
+    pub fn to_pgm(&self) -> String {
+        let (lo, hi) = crate::util::stats::min_max(self.as_slice());
+        let scale = if hi > lo { 255.0 / (hi - lo) } else { 0.0 };
+        let mut s = format!("P2\n{} {}\n255\n", self.width, self.height);
+        for y in 0..self.height {
+            let row: Vec<String> = (0..self.width)
+                .map(|x| format!("{}", ((self.get(x, y) - lo) * scale).round() as u8))
+                .collect();
+            s.push_str(&row.join(" "));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_set_get() {
+        let mut g = Grid::new(4, 3, 0i32);
+        g.set(2, 1, 7);
+        assert_eq!(*g.get(2, 1), 7);
+        assert_eq!(*g.get(0, 0), 0);
+        assert_eq!(g.idx(3, 2), 11);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let g = Grid::from_fn(3, 2, |x, y| (x, y));
+        assert_eq!(*g.get(2, 1), (2, 1));
+        assert_eq!(g.as_slice()[5], (2, 1)); // row-major
+    }
+
+    #[test]
+    fn checked_bounds() {
+        let g = Grid::new(2, 2, 1u8);
+        assert!(g.get_checked(-1, 0).is_none());
+        assert!(g.get_checked(0, 2).is_none());
+        assert_eq!(g.get_checked(1, 1), Some(&1));
+    }
+
+    #[test]
+    fn pgm_header() {
+        let g = Grid::new(2, 2, 0.5f64);
+        let s = g.to_pgm();
+        assert!(s.starts_with("P2\n2 2\n255\n"));
+    }
+
+    #[test]
+    fn map_preserves_shape() {
+        let g = Grid::from_fn(3, 3, |x, y| (x + y) as f64);
+        let m = g.map(|v| v * 2.0);
+        assert_eq!(m.width(), 3);
+        assert_eq!(*m.get(2, 2), 8.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Frame resampling helpers (the "interpolation to 224×224" step of the
+//! paper's Sec. IV-D, at our 32×32/64×64 model geometries).
+
+use super::grid::Grid;
+
+/// Bilinear resize to (new_w, new_h).
+pub fn resize_bilinear(src: &Grid<f64>, new_w: usize, new_h: usize) -> Grid<f64> {
+    assert!(new_w > 0 && new_h > 0);
+    let (w, h) = (src.width(), src.height());
+    if w == new_w && h == new_h {
+        return src.clone();
+    }
+    Grid::from_fn(new_w, new_h, |x, y| {
+        // Map output pixel centers into source coordinates.
+        let sx = (x as f64 + 0.5) * w as f64 / new_w as f64 - 0.5;
+        let sy = (y as f64 + 0.5) * h as f64 / new_h as f64 - 0.5;
+        let x0 = sx.floor().clamp(0.0, (w - 1) as f64) as usize;
+        let y0 = sy.floor().clamp(0.0, (h - 1) as f64) as usize;
+        let x1 = (x0 + 1).min(w - 1);
+        let y1 = (y0 + 1).min(h - 1);
+        let fx = (sx - x0 as f64).clamp(0.0, 1.0);
+        let fy = (sy - y0 as f64).clamp(0.0, 1.0);
+        src.get(x0, y0) * (1.0 - fx) * (1.0 - fy)
+            + src.get(x1, y0) * fx * (1.0 - fy)
+            + src.get(x0, y1) * (1.0 - fx) * fy
+            + src.get(x1, y1) * fx * fy
+    })
+}
+
+/// Center-crop (or zero-pad) to (new_w, new_h) without rescaling.
+pub fn center_fit(src: &Grid<f64>, new_w: usize, new_h: usize) -> Grid<f64> {
+    let (w, h) = (src.width(), src.height());
+    let ox = (new_w as i64 - w as i64) / 2;
+    let oy = (new_h as i64 - h as i64) / 2;
+    Grid::from_fn(new_w, new_h, |x, y| {
+        let sx = x as i64 - ox;
+        let sy = y as i64 - oy;
+        src.get_checked(sx, sy).copied().unwrap_or(0.0)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_resize_is_noop() {
+        let g = Grid::from_fn(5, 4, |x, y| (x * y) as f64);
+        assert_eq!(resize_bilinear(&g, 5, 4), g);
+    }
+
+    #[test]
+    fn constant_image_stays_constant() {
+        let g = Grid::new(7, 9, 0.37);
+        let r = resize_bilinear(&g, 13, 5);
+        for &v in r.as_slice() {
+            assert!((v - 0.37).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn upsample_preserves_gradient_direction() {
+        let g = Grid::from_fn(4, 4, |x, _| x as f64);
+        let r = resize_bilinear(&g, 8, 8);
+        for y in 0..8 {
+            for x in 1..8 {
+                assert!(r.get(x, y) >= r.get(x - 1, y));
+            }
+        }
+    }
+
+    #[test]
+    fn range_preserved() {
+        let g = Grid::from_fn(10, 10, |x, y| ((x + y) % 2) as f64);
+        let r = resize_bilinear(&g, 3, 3);
+        for &v in r.as_slice() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn center_fit_pads_and_crops() {
+        let g = Grid::new(2, 2, 1.0);
+        let padded = center_fit(&g, 4, 4);
+        assert_eq!(*padded.get(0, 0), 0.0);
+        assert_eq!(*padded.get(1, 1), 1.0);
+        let cropped = center_fit(&padded, 2, 2);
+        for &v in cropped.as_slice() {
+            assert_eq!(v, 1.0);
+        }
+    }
+}

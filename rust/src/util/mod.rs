@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, statistics, curve fitting, and the
+//! in-repo property-testing harness (offline substitutes for `rand`,
+//! `statrs`, and `proptest`).
+
+pub mod bench;
+pub mod check;
+pub mod fit;
+pub mod grid;
+pub mod image;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,304 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The crates.io `rand` family is unavailable in this offline build, so the
+//! repository carries its own small, well-tested generator: PCG64 (XSL-RR
+//! 128/64), the same algorithm used by `rand_pcg::Pcg64`. Every stochastic
+//! component in the simulator (Monte Carlo mismatch, Poisson noise, scene
+//! motion, dataset shuffling) takes an explicit seed so that experiments are
+//! exactly reproducible run-to-run.
+
+/// PCG64 XSL-RR 128/64 generator.
+///
+/// 128-bit LCG state advanced with the standard PCG multiplier, output via
+/// xor-shift-low + random rotate. Passes practrand at the sizes used here.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream constant fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator with an explicit stream selector; distinct streams
+    /// are statistically independent even for equal seeds.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        // SplitMix64 expansion of the seed into 128 bits of state, matching
+        // the common practice for seeding wide-state generators.
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let inc = (((stream as u128) << 64 | sm.next_u64() as u128) << 1) | 1;
+        let mut rng = Self { state: (s0 << 64) | s1, inc };
+        // Standard PCG warm-up.
+        rng.state = rng.state.wrapping_add(rng.inc);
+        let _ = rng.next_u64();
+        rng
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let state = self.state;
+        self.state = state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        // XSL-RR output function.
+        let xored = ((state >> 64) as u64) ^ (state as u64);
+        let rot = (state >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform double in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        // 53 random bits into the mantissa.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform double in [lo, hi).
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    #[inline]
+    pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller (polar form avoided to stay branchless
+    /// enough for the MC loops; trig form is fine at our call rates).
+    pub fn normal(&mut self) -> f64 {
+        // Guard u1 away from 0 so ln() is finite.
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal with mean/σ.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, sd: f64) -> f64 {
+        mean + sd * self.normal()
+    }
+
+    /// Log-normal such that the *median* is `median` and σ of ln is `sigma_ln`.
+    /// Used for leakage-current mismatch, which is lognormal to first order
+    /// (exponential dependence on threshold-voltage mismatch).
+    #[inline]
+    pub fn lognormal(&mut self, median: f64, sigma_ln: f64) -> f64 {
+        median * (sigma_ln * self.normal()).exp()
+    }
+
+    /// Poisson draw (Knuth for small λ, normal approximation for large λ).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        if lambda < 30.0 {
+            let l = (-lambda).exp();
+            let mut k = 0u64;
+            let mut p = 1.0;
+            loop {
+                p *= self.f64();
+                if p <= l {
+                    return k;
+                }
+                k += 1;
+            }
+        } else {
+            let v = self.normal_ms(lambda, lambda.sqrt()).round();
+            if v < 0.0 { 0 } else { v as u64 }
+        }
+    }
+
+    /// Exponential inter-arrival draw with rate λ (events per unit time).
+    #[inline]
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.f64().max(1e-300).ln() / rate
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+/// SplitMix64 — used only for seed expansion.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close() {
+        let mut r = Pcg64::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Pcg64::new(3);
+        let mut counts = [0u32; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(5);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda() {
+        let mut r = Pcg64::new(9);
+        for &lambda in &[0.5, 5.0, 80.0] {
+            let n = 20_000;
+            let mean: f64 =
+                (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lambda).abs() < 0.1 * lambda.max(1.0),
+                "lambda={lambda} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(13);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::new(17);
+        let s = r.sample_indices(100, 20);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 20);
+    }
+
+    #[test]
+    fn lognormal_median() {
+        let mut r = Pcg64::new(19);
+        let n = 50_001;
+        let mut xs: Vec<f64> = (0..n).map(|_| r.lognormal(3.0, 0.5)).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = xs[n / 2];
+        assert!((med - 3.0).abs() < 0.1, "median={med}");
+    }
+
+    #[test]
+    fn streams_are_independent() {
+        let mut a = Pcg64::with_stream(42, 1);
+        let mut b = Pcg64::with_stream(42, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

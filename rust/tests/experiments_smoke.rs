@@ -1,0 +1,40 @@
+//! Every experiment harness must run to completion at Quick effort and
+//! produce a non-trivial report (table2/table3 need artifacts and are
+//! exercised when present).
+
+use tsisc::experiments::{find, Effort, ALL};
+use tsisc::runtime::artifacts_available;
+
+#[test]
+fn all_cheap_experiments_produce_reports() {
+    for (name, f) in ALL {
+        if matches!(*name, "table2" | "table3") {
+            continue; // covered below (artifact-gated, slower)
+        }
+        let report = f(Effort::Quick);
+        assert!(report.len() > 100, "{name} report too short:\n{report}");
+        assert!(report.contains("==="), "{name} missing banner");
+    }
+}
+
+#[test]
+fn table2_runs_when_artifacts_present() {
+    if !artifacts_available() {
+        eprintln!("SKIP table2: artifacts missing");
+        return;
+    }
+    let report = find("table2").unwrap()(Effort::Quick);
+    assert!(report.contains("syn-nmnist"), "{report}");
+    assert!(report.contains("3DS-ISC"));
+}
+
+#[test]
+fn table3_runs_when_artifacts_present() {
+    if !artifacts_available() {
+        eprintln!("SKIP table3: artifacts missing");
+        return;
+    }
+    let report = find("table3").unwrap()(Effort::Quick);
+    assert!(report.contains("mean"), "{report}");
+    assert!(report.contains("3D-ISC"));
+}

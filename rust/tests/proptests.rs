@@ -1,0 +1,203 @@
+//! Cross-module property tests on coordinator and system invariants
+//! (in-repo `util::check` harness — the offline proptest substitute).
+
+use tsisc::coordinator::{MicroBatcher, Router, RouterConfig};
+use tsisc::events::aer;
+use tsisc::events::event::{merge_sorted, Event, LabeledEvent, Polarity, Resolution};
+use tsisc::isc::{IscArray, IscConfig};
+use tsisc::metrics::{roc, Scored};
+use tsisc::tsurface::{IdealTs, Representation, Sae};
+use tsisc::util::check::{check, Gen};
+use tsisc::util::grid::Grid;
+use tsisc::util::image::resize_bilinear;
+use tsisc::metrics::ssim;
+
+fn random_events(g: &mut Gen, res: Resolution, max_n: usize) -> Vec<LabeledEvent> {
+    let n = g.usize(0, max_n);
+    let mut t = 0u64;
+    (0..n)
+        .map(|_| {
+            t += g.u64(1, 2_000);
+            LabeledEvent {
+                ev: Event::new(
+                    t,
+                    g.u64(0, res.width as u64 - 1) as u16,
+                    g.u64(0, res.height as u64 - 1) as u16,
+                    if g.bool(0.5) { Polarity::On } else { Polarity::Off },
+                ),
+                is_signal: g.bool(0.7),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_aer_roundtrip_any_stream() {
+    check("aer roundtrip integration", 100, |g| {
+        let res = Resolution::new(64, 64);
+        let evs: Vec<Event> = random_events(g, res, 150).iter().map(|l| l.ev).collect();
+        let back = aer::decode(&aer::encode(&evs), res).expect("decode");
+        assert_eq!(evs, back);
+    });
+}
+
+#[test]
+fn prop_merge_sorted_is_sorted_and_complete() {
+    check("merge sorted", 100, |g| {
+        let res = Resolution::new(16, 16);
+        let a = random_events(g, res, 60);
+        let b = random_events(g, res, 60);
+        let m = merge_sorted(&a, &b);
+        assert_eq!(m.len(), a.len() + b.len());
+        assert!(m.windows(2).all(|w| w[0].ev.t <= w[1].ev.t));
+    });
+}
+
+#[test]
+fn prop_sae_equals_replay_max() {
+    // SAE(x,y) must equal the max timestamp of events at (x,y).
+    check("sae is last-event", 60, |g| {
+        let res = Resolution::new(8, 8);
+        let evs = random_events(g, res, 100);
+        let mut sae = Sae::new(res);
+        for le in &evs {
+            sae.update(&le.ev);
+        }
+        for x in 0..8u16 {
+            for y in 0..8u16 {
+                let expect = evs
+                    .iter()
+                    .filter(|l| l.ev.x == x && l.ev.y == y)
+                    .map(|l| l.ev.t.max(1))
+                    .max()
+                    .unwrap_or(0);
+                assert_eq!(sae.last(x, y), expect);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ideal_ts_bounded_and_monotone_between_writes() {
+    check("ideal ts bounds", 60, |g| {
+        let res = Resolution::new(8, 8);
+        let evs = random_events(g, res, 50);
+        let mut ts = IdealTs::new(res, g.f64(1_000.0, 100_000.0));
+        for le in &evs {
+            ts.update(&le.ev);
+        }
+        let t_end = evs.last().map(|e| e.ev.t).unwrap_or(0) + g.u64(0, 50_000);
+        let f = ts.frame(t_end);
+        assert!(f.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    });
+}
+
+#[test]
+fn prop_isc_frame_bounded_any_stream() {
+    check("isc frame bounded", 30, |g| {
+        let res = Resolution::new(12, 12);
+        let evs = random_events(g, res, 80);
+        let mut arr = IscArray::new(
+            res,
+            IscConfig { seed: g.u64(0, u64::MAX / 2), ..IscConfig::default() },
+        );
+        for le in &evs {
+            arr.write(&le.ev);
+        }
+        let t_end = evs.last().map(|e| e.ev.t).unwrap_or(1) + g.u64(0, 100_000);
+        let f = arr.frame_merged(t_end);
+        assert!(f.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    });
+}
+
+#[test]
+fn prop_batcher_then_router_conserves() {
+    check("batcher+router conservation", 30, |g| {
+        let res = Resolution::new(16, 16);
+        let evs = random_events(g, res, 120);
+        let mut batcher = MicroBatcher::new(g.u64(100, 5_000));
+        let mut router = Router::new(
+            res,
+            RouterConfig { n_shards: g.usize(1, 4), queue_depth: 64, ..RouterConfig::default() },
+        );
+        let mut batches = Vec::new();
+        for le in &evs {
+            batches.extend(batcher.push(*le));
+        }
+        batches.extend(batcher.flush(evs.last().map(|e| e.ev.t).unwrap_or(0) + 10_000));
+        for b in &batches {
+            for le in &b.events {
+                router.route(le.ev);
+            }
+        }
+        let stats = router.shutdown();
+        assert_eq!(stats.events_routed, evs.len() as u64);
+    });
+}
+
+#[test]
+fn prop_roc_auc_in_unit_interval_and_flip_symmetric() {
+    check("roc auc bounds", 100, |g| {
+        let n = g.usize(2, 300);
+        let mut scored: Vec<Scored> = (0..n)
+            .map(|_| Scored { score: g.f64(-5.0, 5.0), is_signal: g.bool(0.5) })
+            .collect();
+        // Ensure both classes present.
+        scored[0].is_signal = true;
+        scored.push(Scored { score: g.f64(-5.0, 5.0), is_signal: false });
+        let auc = roc(&scored).auc;
+        assert!((0.0..=1.0).contains(&auc), "auc={auc}");
+        // Flipping all scores mirrors the AUC.
+        let flipped: Vec<Scored> =
+            scored.iter().map(|s| Scored { score: -s.score, ..*s }).collect();
+        let auc_f = roc(&flipped).auc;
+        assert!((auc + auc_f - 1.0).abs() < 1e-9, "auc={auc} flipped={auc_f}");
+    });
+}
+
+#[test]
+fn prop_ssim_identity_and_bounds() {
+    check("ssim identity", 40, |g| {
+        let w = g.usize(8, 24);
+        let h = g.usize(8, 24);
+        let vals: Vec<f64> = (0..w * h).map(|_| g.f64(0.0, 1.0)).collect();
+        let a = Grid::from_vec(w, h, vals);
+        assert!((ssim(&a, &a) - 1.0).abs() < 1e-9);
+        let b = a.map(|v| (v * 0.5 + 0.25).clamp(0.0, 1.0));
+        let s = ssim(&a, &b);
+        assert!((-1.0..=1.0).contains(&s));
+    });
+}
+
+#[test]
+fn prop_resize_preserves_bounds() {
+    check("resize bounds", 60, |g| {
+        let w = g.usize(2, 40);
+        let h = g.usize(2, 40);
+        let vals: Vec<f64> = (0..w * h).map(|_| g.f64(0.0, 1.0)).collect();
+        let src = Grid::from_vec(w, h, vals);
+        let dst = resize_bilinear(&src, g.usize(1, 50), g.usize(1, 50));
+        let (lo, hi) = tsisc::util::stats::min_max(src.as_slice());
+        for &v in dst.as_slice() {
+            assert!(v >= lo - 1e-12 && v <= hi + 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_event_order_within_pixel_preserved_by_representation() {
+    // Re-writing a pixel must never make it look older.
+    check("rewrite freshens", 60, |g| {
+        let res = Resolution::new(4, 4);
+        let mut ts = IdealTs::new(res, 24_000.0);
+        let x = g.u64(0, 3) as u16;
+        let y = g.u64(0, 3) as u16;
+        let t1 = g.u64(1, 1_000_000);
+        let t2 = t1 + g.u64(1, 1_000_000);
+        ts.update(&Event::new(t1, x, y, Polarity::On));
+        let v1 = ts.value(x, y, t2);
+        ts.update(&Event::new(t2, x, y, Polarity::On));
+        let v2 = ts.value(x, y, t2);
+        assert!(v2 >= v1);
+    });
+}

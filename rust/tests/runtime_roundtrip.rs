@@ -1,0 +1,131 @@
+//! Integration: the AOT artifacts round-trip numerically through the PJRT
+//! runtime — kernel outputs match the native Rust simulation, and the
+//! train artifacts step without degenerating.
+//!
+//! Requires `make artifacts`; tests skip loudly when artifacts are absent.
+
+use tsisc::events::{Event, Polarity};
+use tsisc::runtime::{artifacts_available, default_artifact_dir, KernelTs, Runtime};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(default_artifact_dir()).expect("runtime"))
+}
+
+#[test]
+fn ts_update_matches_native_isc_decay() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Nominal (mismatch-free) kernel plane vs the calibrated cell decay.
+    let mut plane = KernelTs::new(20e-15, None, 1);
+    plane.write(&Event::new(1_000, 10, 20, Polarity::On)).unwrap();
+    plane.advance(&mut rt, 1_000).unwrap();
+    let v0 = plane.read(10, 20);
+    assert!((v0 - 1.2).abs() < 0.05, "fresh write ≈ V_dd, got {v0}");
+
+    // Advance 10 ms in 10 microbatches; compare against the paper's point.
+    for k in 1..=10u64 {
+        plane.advance(&mut rt, 1_000 + k * 1_000).unwrap();
+    }
+    let v10 = plane.read(10, 20);
+    assert!((v10 - 0.72).abs() < 0.04, "V(10 ms) ≈ 0.72 V, got {v10}");
+
+    // Untouched pixel stays at 0.
+    assert_eq!(plane.read(0, 0), 0.0);
+}
+
+#[test]
+fn ts_frame_normalized_and_consistent() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut plane = KernelTs::new(20e-15, None, 2);
+    plane.write(&Event::new(500, 5, 5, Polarity::On)).unwrap();
+    plane.write(&Event::new(500, 100, 200, Polarity::On)).unwrap();
+    plane.advance(&mut rt, 500).unwrap();
+    plane.advance(&mut rt, 20_500).unwrap();
+    let f = plane.frame(&mut rt).unwrap();
+    assert!(f.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    // Frame = read/Vdd at every pixel.
+    let direct = plane.read(5, 5) / 1.2;
+    assert!((f.get(5, 5) - direct).abs() < 1e-5);
+}
+
+#[test]
+fn stcf_count_artifact_matches_definition() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let mut plane = KernelTs::new(20e-15, None, 3);
+    // Cluster of 3 fresh writes.
+    for &(x, y) in &[(50u16, 50u16), (51, 50), (50, 51)] {
+        plane.write(&Event::new(100, x, y, Polarity::On)).unwrap();
+    }
+    plane.advance(&mut rt, 100).unwrap();
+    let counts = plane.stcf_counts(&mut rt, 0.383).unwrap();
+    // Each cluster member sees the other two (r=3 patch, center excluded).
+    assert_eq!(*counts.get(50, 50), 2.0);
+    assert_eq!(*counts.get(51, 50), 2.0);
+    // A neighbour inside the patch sees all three.
+    assert_eq!(*counts.get(52, 51), 3.0);
+    // Far away: zero.
+    assert_eq!(*counts.get(200, 100), 0.0);
+}
+
+#[test]
+fn classifier_train_step_reduces_loss_on_fixed_batch() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    use tsisc::train::driver::{train_classifier, TrainConfig, BATCH, SIDE};
+    use tsisc::train::frames::{Frame, FrameSet};
+
+    // Trivially separable two-class frames.
+    let mut frames = Vec::new();
+    for i in 0..BATCH * 2 {
+        let c = i % 2;
+        let mut px = vec![0.0f32; SIDE * SIDE];
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                if (c == 0) == (x < SIDE / 2) {
+                    px[y * SIDE + x] = 1.0;
+                }
+            }
+        }
+        frames.push(Frame { pixels: px, label: c, sample_id: i });
+    }
+    let set = FrameSet { frames, n_classes: 10, n_samples: BATCH * 2 };
+    let cfg = TrainConfig { steps: 12, lr: 0.05, seed: 1, log_every: 1 };
+    let res = train_classifier(&mut rt, &set, &set, &cfg).expect("train");
+    let first = res.loss_curve.first().unwrap().1;
+    assert!(
+        res.final_loss < first * 0.8,
+        "loss should drop: {first} -> {}",
+        res.final_loss
+    );
+    assert!(res.frame_accuracy > 0.9, "separable task acc {}", res.frame_accuracy);
+}
+
+#[test]
+fn recon_train_step_runs_and_improves() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    use tsisc::recon::{train_recon, Pair, ReconConfig, SIDE};
+
+    // Smooth target, noisy input.
+    let mut pairs = Vec::new();
+    for i in 0..12 {
+        let mut input = vec![0.0f32; SIDE * SIDE];
+        let mut target = vec![0.0f32; SIDE * SIDE];
+        for y in 0..SIDE {
+            for x in 0..SIDE {
+                let v = 0.5 + 0.4 * ((x as f32) / (4.0 + i as f32)).sin()
+                    * ((y as f32) / 5.0).cos();
+                target[y * SIDE + x] = v;
+                input[y * SIDE + x] = v + 0.1 * ((x * 31 + y * 17 + i) % 7) as f32 / 7.0;
+            }
+        }
+        pairs.push(Pair { input, target });
+    }
+    let cfg = ReconConfig { steps: 15, lr: 0.2, seed: 3, holdout_every: 4 };
+    let res = train_recon(&mut rt, &pairs, &cfg).expect("recon train");
+    let first = res.loss_curve.first().unwrap().1;
+    assert!(res.final_loss < first, "loss {first} -> {}", res.final_loss);
+    assert!(res.mean_ssim > 0.2, "ssim {}", res.mean_ssim);
+    assert!(res.n_eval > 0);
+}
