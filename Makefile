@@ -1,0 +1,36 @@
+# Build / test / bench entry points. `make ci` is the tier-1 gate plus a
+# quick bench snapshot (BENCH_tsurface.json) so every PR leaves a perf
+# trajectory behind.
+
+RUST_DIR := rust
+PYTHON := python3
+
+.PHONY: ci build test bench artifacts clean
+
+ci:
+	./ci.sh
+
+build:
+	cd $(RUST_DIR) && cargo build --release
+
+test:
+	cd $(RUST_DIR) && cargo test -q
+
+# Bench binaries use the in-repo harness (util::bench); bench_tsurface
+# additionally dumps BENCH_tsurface.json next to the manifest.
+bench:
+	cd $(RUST_DIR) && cargo bench -- --quick
+	@if [ -f $(RUST_DIR)/BENCH_tsurface.json ]; then \
+		cp $(RUST_DIR)/BENCH_tsurface.json BENCH_tsurface.json; \
+		echo "snapshot: BENCH_tsurface.json"; \
+	fi
+
+# AOT-lower the JAX/Pallas kernels + models to HLO text artifacts for the
+# Rust PJRT runtime (no-op for pure-Rust development; the runtime tests
+# skip gracefully when artifacts are absent).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(RUST_DIR)/artifacts
+
+clean:
+	cd $(RUST_DIR) && cargo clean
+	rm -f BENCH_tsurface.json $(RUST_DIR)/BENCH_tsurface.json

@@ -20,9 +20,14 @@ fn main() {
 
     // 3. The ISC analog array: one 6T-1C eDRAM cell per pixel, with
     //    Monte-Carlo cell-to-cell variability (paper Sec. IV-A).
+    //    Ingestion is batch-first: write_batch absorbs bounded bursts of
+    //    events (per-pixel Cu-Cu writes: O(1) each, no half-select).
     let mut array = IscArray::new(res, IscConfig::default());
-    for le in &events {
-        array.write(&le.ev); // per-pixel Cu-Cu write: O(1), no half-select
+    let mut staged = Vec::with_capacity(4_096.min(events.len()));
+    for part in events.chunks(4_096) {
+        staged.clear();
+        staged.extend(part.iter().map(|le| le.ev));
+        array.write_batch(&staged);
     }
 
     // 4. Read the self-normalized time surface at the end of the stream.

@@ -1,6 +1,7 @@
 //! Coordinator benchmarks: sharded-router throughput vs shard count and
-//! end-to-end pipeline events/s (the paper's "throughput limited by data
-//! transmission" argument, Sec. III-B, measured on the software twin).
+//! batch size, plus end-to-end pipeline events/s (the paper's "throughput
+//! limited by data transmission" argument, Sec. III-B, measured on the
+//! software twin).
 
 use tsisc::coordinator::{run_pipeline, PipelineConfig, Router, RouterConfig};
 use tsisc::events::{noise::ba_noise, Event, Polarity, Resolution};
@@ -23,10 +24,11 @@ fn main() {
         })
         .collect();
 
+    // Single-event route() (staged internally) vs explicit route_batch().
     for shards in [1usize, 2, 4, 8] {
         let mut router = Router::new(
             res,
-            RouterConfig { n_shards: shards, queue_depth: 8192, ..RouterConfig::default() },
+            RouterConfig { n_shards: shards, ..RouterConfig::default() },
         );
         let r = bench(&format!("route 20k events, {shards} shards"), n as f64, 100, 600, || {
             for e in &events {
@@ -37,10 +39,30 @@ fn main() {
         router.shutdown();
     }
 
-    // End-to-end pipeline (incl. frame scheduling) on a noise workload.
+    println!();
+    for &bs in &[1usize, 64, 4_096] {
+        let mut router = Router::new(res, RouterConfig { n_shards: 4, ..RouterConfig::default() });
+        let r = bench(&format!("route_batch 20k events, 4 shards, bs={bs}"), n as f64, 100, 600,
+                      || {
+            for chunk in events.chunks(bs) {
+                router.route_batch(chunk);
+            }
+        });
+        println!("{}", r.report());
+        router.shutdown();
+    }
+
+    // End-to-end pipeline (incl. frame scheduling) on a noise workload,
+    // consumed as a stream (no slice copy anywhere in the pipeline).
+    println!();
     let stream = ba_noise(res, 10.0, 0.2, 5);
     let r = bench("pipeline 0.2s @10Hz/px noise", stream.len() as f64, 200, 1_000, || {
-        std::hint::black_box(run_pipeline(&stream, res, 200_000, &PipelineConfig::default()));
+        std::hint::black_box(run_pipeline(
+            stream.iter().copied(),
+            res,
+            200_000,
+            &PipelineConfig::default(),
+        ));
     });
     println!("{}", r.report());
 }

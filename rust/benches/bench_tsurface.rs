@@ -1,13 +1,42 @@
-//! Representation update-throughput comparison (Sec. II-B): the memory
+//! Representation ingest-throughput comparison (Sec. II-B): the memory
 //! write amplification of SITS/TOS shows up directly as update cost.
+//!
+//! Also sweeps the ingest batch size (1 / 64 / 4096) on the SAE-class and
+//! ISC representations to quantify the batch-first API win, benchmarks
+//! the allocation-free `frame_into` readout, and dumps the measurements
+//! to `BENCH_tsurface.json` so CI can track the perf trajectory.
 
 use tsisc::events::{Event, Polarity, Resolution};
 use tsisc::tsurface::*;
-use tsisc::util::bench::{bench, header};
+use tsisc::util::bench::{bench, header, BenchResult};
+use tsisc::util::grid::Grid;
 use tsisc::util::rng::Pcg64;
 
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn dump_json(results: &[BenchResult], path: &str) {
+    let mut s = String::from("{\n  \"benchmarks\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"meps\": {:.4}}}{}\n",
+            json_escape(&r.name),
+            r.mean_ns,
+            r.throughput_per_sec() / 1e6,
+            if i + 1 < results.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("(could not write {path}: {e})");
+    } else {
+        println!("wrote {path}");
+    }
+}
+
 fn main() {
-    header("bench_tsurface — representation update throughput");
+    header("bench_tsurface — representation ingest throughput");
     let res = Resolution::QVGA;
     let mut rng = Pcg64::new(7);
     let n = 10_000usize;
@@ -21,23 +50,69 @@ fn main() {
             )
         })
         .collect();
+    let mut results: Vec<BenchResult> = Vec::new();
 
-    fn run_rep(name: &str, mut rep: Box<dyn Representation>, events: &[Event]) {
-        let r = bench(name, events.len() as f64, 100, 600, || {
-            for e in events {
-                rep.update(e);
-            }
-        });
-        println!("{}  (writes/event {:.2})", r.report(), rep.writes_per_event());
+    // --- Per-event ingest across every representation -------------------
+    {
+        let mut run_rep = |name: &str, mut rep: Box<dyn Representation>| {
+            let r = bench(name, events.len() as f64, 100, 600, || {
+                for e in &events {
+                    rep.ingest(e);
+                }
+            });
+            println!("{}  (writes/event {:.2})", r.report(), rep.writes_per_event());
+            results.push(r);
+        };
+        run_rep("SAE", Box::new(Sae::new(res)));
+        run_rep("ideal TS", Box::new(IdealTs::new(res, 24_000.0)));
+        run_rep("quantized SAE (16b)", Box::new(QuantizedSae::new(res, 16, 24_000.0)));
+        run_rep("EBBI", Box::new(Ebbi::new(res)));
+        run_rep("event count (4b)", Box::new(EventCount::new(res, 4)));
+        run_rep("SITS (r=3)", Box::new(Sits::new(res, 3)));
+        run_rep("TOS (r=3)", Box::new(Tos::new(res, 3)));
+        run_rep("TORE (k=3)", Box::new(Tore::new(res, 3, 100.0, 1e6)));
+        run_rep("3DS-ISC", Box::new(IscTs::with_defaults(res)));
     }
 
-    run_rep("SAE", Box::new(Sae::new(res)), &events);
-    run_rep("ideal TS", Box::new(IdealTs::new(res, 24_000.0)), &events);
-    run_rep("quantized SAE (16b)", Box::new(QuantizedSae::new(res, 16, 24_000.0)), &events);
-    run_rep("EBBI", Box::new(Ebbi::new(res)), &events);
-    run_rep("event count (4b)", Box::new(EventCount::new(res, 4)), &events);
-    run_rep("SITS (r=3)", Box::new(Sits::new(res, 3)), &events);
-    run_rep("TOS (r=3)", Box::new(Tos::new(res, 3)), &events);
-    run_rep("TORE (k=3)", Box::new(Tore::new(res, 3, 100.0, 1e6)), &events);
-    run_rep("3DS-ISC", Box::new(IscTs::with_defaults(res)), &events);
+    // --- Batch-size sweep: the batch-first API win -----------------------
+    println!();
+    for &bs in &[1usize, 64, 4_096] {
+        let mut run_batched = |name: &str, mut rep: Box<dyn Representation>| {
+            let r = bench(
+                &format!("{name} ingest_batch bs={bs}"),
+                events.len() as f64,
+                100,
+                600,
+                || {
+                    for chunk in events.chunks(bs) {
+                        rep.ingest_batch(chunk);
+                    }
+                },
+            );
+            println!("{}", r.report());
+            results.push(r);
+        };
+        run_batched("SAE", Box::new(Sae::new(res)));
+        run_batched("3DS-ISC", Box::new(IscTs::with_defaults(res)));
+    }
+
+    // --- Zero-allocation frame readout -----------------------------------
+    println!();
+    {
+        let mut rep = IscTs::with_defaults(res);
+        rep.ingest_batch(&events);
+        let mut buf = Grid::new(1, 1, 0.0f64);
+        rep.frame_into(&mut buf, 40_000); // warmup reshape
+        let mut t = 40_000u64;
+        let r = bench("3DS-ISC frame_into (QVGA, reused buffer)",
+                      res.pixels() as f64, 100, 600, || {
+            t += 1_000;
+            rep.frame_into(&mut buf, t);
+            std::hint::black_box(buf.as_slice());
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    dump_json(&results, "BENCH_tsurface.json");
 }

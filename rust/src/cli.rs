@@ -12,6 +12,23 @@ pub struct Args {
     flags: HashMap<String, Option<String>>,
 }
 
+/// Is `s` a flag token (as opposed to a value)? `--anything` is a flag;
+/// a single-dash token is a flag unless it is a negative number
+/// (`-0.5`, `-12`, `-5e3`, `-inf`), so `--bias -0.5` parses as
+/// key/value while `--a -v` leaves `a` valueless.
+fn is_flag_token(s: &str) -> bool {
+    if s.starts_with("--") {
+        return true;
+    }
+    match s.strip_prefix('-') {
+        // Bare "-" is a conventional stdin placeholder, not a flag.
+        Some("") | None => false,
+        // f64 parsing accepts every numeric form we hand out via
+        // `get_parsed` (ints, floats, exponents, ±inf/NaN).
+        Some(_) => s.parse::<f64>().is_err(),
+    }
+}
+
 impl Args {
     /// Parse from an iterator of argument strings (excluding argv[0]).
     pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Self {
@@ -21,7 +38,7 @@ impl Args {
             if let Some(name) = a.strip_prefix("--") {
                 // `--key value` unless the next token is another flag/end.
                 let value = match iter.peek() {
-                    Some(v) if !v.starts_with("--") => Some(iter.next().unwrap()),
+                    Some(v) if !is_flag_token(v) => Some(iter.next().unwrap()),
                     _ => None,
                 };
                 out.flags.insert(name.to_string(), value);
@@ -87,5 +104,36 @@ mod tests {
         assert!(a.flag("a"));
         assert_eq!(a.get("a"), None);
         assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse("run --bias -0.5 --offset -12 --frac -.25");
+        assert_eq!(a.get("bias"), Some("-0.5"));
+        assert_eq!(a.get_parsed("bias", 0.0f64), -0.5);
+        assert_eq!(a.get_parsed("offset", 0i64), -12);
+        assert_eq!(a.get_parsed("frac", 0.0f64), -0.25);
+    }
+
+    #[test]
+    fn exponent_and_special_float_values_bind() {
+        let a = parse("run --rate -5e3 --floor -inf");
+        assert_eq!(a.get_parsed("rate", 0.0f64), -5e3);
+        assert_eq!(a.get_parsed("floor", 0.0f64), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn short_flag_like_token_is_not_swallowed_as_value() {
+        // "-v" is not a number, so "--a -v" must not bind it to a; it is
+        // parsed as a (future) short flag would be — i.e. a is valueless.
+        let a = parse("x --a -v");
+        assert!(a.flag("a"));
+        assert_eq!(a.get("a"), None);
+    }
+
+    #[test]
+    fn bare_dash_is_a_value() {
+        let a = parse("x --input -");
+        assert_eq!(a.get("input"), Some("-"));
     }
 }

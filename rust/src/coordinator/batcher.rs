@@ -76,6 +76,55 @@ impl MicroBatcher {
     }
 }
 
+/// Streaming adapter: turn any sorted labeled-event source into an
+/// iterator of closed microbatches covering (0, t_end_us]. Only one open
+/// batch is buffered at a time, so an arbitrarily long replay/generator
+/// stream is batched in O(batch) memory.
+pub struct Batches<I: Iterator<Item = LabeledEvent>> {
+    inner: I,
+    batcher: MicroBatcher,
+    t_end_us: u64,
+    ready: std::collections::VecDeque<MicroBatch>,
+    flushed: bool,
+}
+
+/// Batch `events` (sorted) into `dt_us` microbatches covering
+/// (0, t_end_us]; see [`Batches`].
+pub fn batches<I>(events: I, dt_us: u64, t_end_us: u64) -> Batches<I::IntoIter>
+where
+    I: IntoIterator<Item = LabeledEvent>,
+{
+    Batches {
+        inner: events.into_iter(),
+        batcher: MicroBatcher::new(dt_us),
+        t_end_us,
+        ready: std::collections::VecDeque::new(),
+        flushed: false,
+    }
+}
+
+impl<I: Iterator<Item = LabeledEvent>> Iterator for Batches<I> {
+    type Item = MicroBatch;
+
+    fn next(&mut self) -> Option<MicroBatch> {
+        loop {
+            if let Some(b) = self.ready.pop_front() {
+                return Some(b);
+            }
+            if self.flushed {
+                return None;
+            }
+            match self.inner.next() {
+                Some(le) => self.ready.extend(self.batcher.push(le)),
+                None => {
+                    self.ready.extend(self.batcher.flush(self.t_end_us));
+                    self.flushed = true;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +172,36 @@ mod tests {
         let all = b.flush(1_000);
         assert_eq!(all.len(), 1);
         assert_eq!(all[0].events.len(), 1);
+    }
+
+    #[test]
+    fn streaming_batches_match_push_flush() {
+        let times = [100u64, 900, 1_500, 4_200];
+        let evs: Vec<LabeledEvent> = times.iter().map(|&t| le(t)).collect();
+        let streamed: Vec<MicroBatch> = batches(evs.iter().copied(), 1_000, 5_000).collect();
+        let mut b = MicroBatcher::new(1_000);
+        let mut pushed = Vec::new();
+        for &t in &times {
+            pushed.extend(b.push(le(t)));
+        }
+        pushed.extend(b.flush(5_000));
+        assert_eq!(streamed.len(), pushed.len());
+        for (s, p) in streamed.iter().zip(&pushed) {
+            assert_eq!(s.t_start_us, p.t_start_us);
+            assert_eq!(s.t_end_us, p.t_end_us);
+            assert_eq!(s.events.len(), p.events.len());
+        }
+    }
+
+    #[test]
+    fn streaming_batches_from_generator() {
+        // A lazy source: no Vec behind the iterator.
+        let n = 50u64;
+        let out: Vec<MicroBatch> =
+            batches((0..n).map(|k| le(1 + k * 100)), 1_000, 5_000).collect();
+        let total: usize = out.iter().map(|b| b.events.len()).sum();
+        assert_eq!(total, n as usize);
+        assert!(out.windows(2).all(|w| w[0].t_end_us == w[1].t_start_us));
     }
 
     #[test]

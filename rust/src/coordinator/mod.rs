@@ -1,10 +1,28 @@
-//! L3 coordination: microbatching, the sharded event router with
-//! backpressure, and the end-to-end event→frame pipeline.
+//! L3 coordination: the batch-first serving layer between event sources
+//! and the sharded ISC plane.
+//!
+//! * [`batcher`] — groups a sorted stream into fixed-Δt microbatches;
+//!   [`batcher::batches`] does it lazily over any event iterator.
+//! * [`router`] — partitions the plane into horizontal bands owned by
+//!   worker threads, routes **batches** of writes (per-shard staging +
+//!   sort-free run coalescing), applies backpressure through bounded
+//!   queues, and scatter-gathers frame snapshots into reused buffers.
+//! * [`pipeline`] — the end-to-end loop: an
+//!   `IntoIterator<Item = LabeledEvent>` source → optional inline STCF →
+//!   batched shard writes → windowed `frame_into` readout. Streaming by
+//!   construction: the full event stream is never materialized or
+//!   cloned; buffering is bounded by `PipelineConfig::batch_size`.
+//!
+//! **Migration note** (old → new API): `pipeline::run(&[LabeledEvent],…)`
+//! → `pipeline::run(events.iter().copied(), …)` (or any lazy source);
+//! `Router::route` still exists for single events but stages internally —
+//! bulk producers should call `Router::route_batch`; `Router::frame`
+//! gained an allocation-free `Router::frame_into` sibling.
 
 pub mod batcher;
 pub mod pipeline;
 pub mod router;
 
-pub use batcher::{MicroBatch, MicroBatcher};
+pub use batcher::{batches, Batches, MicroBatch, MicroBatcher};
 pub use pipeline::{run as run_pipeline, PipelineConfig, PipelineRun, PipelineStats};
 pub use router::{Router, RouterConfig, RouterStats};

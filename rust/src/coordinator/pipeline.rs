@@ -4,13 +4,21 @@
 //! This is the serving loop of the system: events stream in, the analog
 //! plane absorbs them, and every `window_us` a time-surface frame is
 //! snapshotted for the downstream CV consumer (classifier / reconstructor
-//! running on the PJRT artifacts). Stages communicate over bounded
-//! channels, so a slow consumer backpressures the source instead of
-//! buffering unboundedly.
+//! running on the PJRT artifacts).
+//!
+//! The pipeline is **streaming and batch-first**: it consumes any
+//! `IntoIterator<Item = LabeledEvent>` (a replayed recording, a lazy
+//! generator, `events.iter().copied()` over a slice) and never
+//! materializes the stream — the only buffering is a bounded staging
+//! batch of at most `batch_size` events between router flushes, and the
+//! STCF (causal and cheap relative to everything downstream) filters
+//! events inline as they pass. Stages communicate over bounded channels,
+//! so a slow consumer backpressures the source instead of buffering
+//! unboundedly.
 
 use super::router::{Router, RouterConfig, RouterStats};
-use crate::denoise::{run_stcf, StcfBackend, StcfParams};
-use crate::events::{LabeledEvent, Resolution};
+use crate::denoise::{support_count, StcfBackend, StcfParams};
+use crate::events::{Event, LabeledEvent, Resolution};
 use crate::util::grid::Grid;
 use std::time::Instant;
 
@@ -21,12 +29,15 @@ pub struct PipelineConfig {
     pub window_us: u64,
     /// Run the STCF in front of the array (None = raw stream).
     pub stcf: Option<StcfParams>,
+    /// Events staged between router flushes — the ingest batch size and
+    /// the pipeline's only stream buffering.
+    pub batch_size: usize,
     pub router: RouterConfig,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { window_us: 50_000, stcf: None, router: RouterConfig::default() }
+        Self { window_us: 50_000, stcf: None, batch_size: 4_096, router: RouterConfig::default() }
     }
 }
 
@@ -43,45 +54,69 @@ pub struct PipelineStats {
     pub events_written: u64,
     pub events_dropped_by_stcf: u64,
     pub frames_emitted: u64,
+    /// High-water mark of the staging batch — bounded by `batch_size`,
+    /// which is the pipeline's no-full-stream-copy guarantee.
+    pub peak_batch_len: usize,
     pub wall_seconds: f64,
     pub router: RouterStats,
     /// Throughput in events/second of wall time.
     pub events_per_second: f64,
 }
 
-/// Run the pipeline over a sorted labeled stream covering [0, t_end_us).
-pub fn run(
-    events: &[LabeledEvent],
-    res: Resolution,
-    t_end_us: u64,
-    cfg: &PipelineConfig,
-) -> PipelineRun {
+/// Run the pipeline over a sorted labeled event source covering
+/// [0, t_end_us). Slice holders pass `events.iter().copied()`; anything
+/// streaming (replay readers, generators) is consumed without a copy.
+pub fn run<I>(events: I, res: Resolution, t_end_us: u64, cfg: &PipelineConfig) -> PipelineRun
+where
+    I: IntoIterator<Item = LabeledEvent>,
+{
     let start = Instant::now();
-    let events_in = events.len() as u64;
+    let batch_size = cfg.batch_size.max(1);
 
-    // Stage 1: denoise (optional). The STCF is causal and cheap relative to
-    // everything downstream, so it runs inline ahead of the router.
-    let (kept, dropped): (Vec<LabeledEvent>, u64) = match &cfg.stcf {
-        Some(prm) => {
-            let mut backend = StcfBackend::isc(res, cfg.router.isc.clone(), prm.tau_tw_us);
-            let r = run_stcf(&mut backend, events, prm);
-            let d = events.len() as u64 - r.kept.len() as u64;
-            (r.kept, d)
-        }
-        None => (events.to_vec(), 0),
-    };
+    // Optional STCF stage, applied inline per event (score against the
+    // current surface, then write — the filter is causal by construction).
+    let mut stcf: Option<(StcfBackend, StcfParams)> = cfg.stcf.as_ref().map(|prm| {
+        (StcfBackend::isc(res, cfg.router.isc.clone(), prm.tau_tw_us), *prm)
+    });
 
-    // Stage 2+3: route writes, snapshot frames at window boundaries.
     let mut router = Router::new(res, cfg.router.clone());
-    let mut frames = Vec::new();
+    let mut frames: Vec<(u64, Grid<f64>)> = Vec::new();
+    let mut batch: Vec<Event> = Vec::with_capacity(batch_size);
     let mut next_frame = cfg.window_us;
-    for le in &kept {
+    let mut events_in = 0u64;
+    let mut dropped = 0u64;
+    let mut peak_batch_len = 0usize;
+
+    for le in events {
+        events_in += 1;
+        // Snapshot every window boundary the stream has passed; staged
+        // writes are flushed by `Router::frame` so each frame observes
+        // exactly the events that precede it.
         while le.ev.t > next_frame && next_frame <= t_end_us {
+            peak_batch_len = peak_batch_len.max(batch.len());
+            router.route_batch(&batch);
+            batch.clear();
             frames.push((next_frame, router.frame(next_frame)));
             next_frame += cfg.window_us;
         }
-        router.route(le.ev);
+        if let Some((backend, prm)) = stcf.as_mut() {
+            let s = support_count(backend, &le.ev, prm);
+            backend.ingest(&le.ev, prm);
+            if s < prm.threshold {
+                dropped += 1;
+                continue;
+            }
+        }
+        batch.push(le.ev);
+        if batch.len() >= batch_size {
+            peak_batch_len = peak_batch_len.max(batch.len());
+            router.route_batch(&batch);
+            batch.clear();
+        }
     }
+    peak_batch_len = peak_batch_len.max(batch.len());
+    router.route_batch(&batch);
+    batch.clear();
     while next_frame <= t_end_us {
         frames.push((next_frame, router.frame(next_frame)));
         next_frame += cfg.window_us;
@@ -90,18 +125,17 @@ pub fn run(
     let events_written = router.events_routed();
     let router_stats = router.shutdown();
     let wall = start.elapsed().as_secs_f64();
-    PipelineRun {
-        frames: frames.clone(),
-        stats: PipelineStats {
-            events_in,
-            events_written,
-            events_dropped_by_stcf: dropped,
-            frames_emitted: frames.len() as u64,
-            wall_seconds: wall,
-            events_per_second: if wall > 0.0 { events_in as f64 / wall } else { 0.0 },
-            router: router_stats,
-        },
-    }
+    let stats = PipelineStats {
+        events_in,
+        events_written,
+        events_dropped_by_stcf: dropped,
+        frames_emitted: frames.len() as u64,
+        peak_batch_len,
+        wall_seconds: wall,
+        events_per_second: if wall > 0.0 { events_in as f64 / wall } else { 0.0 },
+        router: router_stats,
+    };
+    PipelineRun { frames, stats }
 }
 
 #[cfg(test)]
@@ -127,11 +161,34 @@ mod tests {
     fn emits_expected_frame_count() {
         let res = Resolution::new(16, 16);
         let evs = stream(100, res); // covers 0..100ms
-        let run = run(&evs, res, 100_000, &PipelineConfig::default());
+        let run = run(evs.iter().copied(), res, 100_000, &PipelineConfig::default());
         assert_eq!(run.frames.len(), 2); // 50ms windows
         assert_eq!(run.stats.frames_emitted, 2);
         assert_eq!(run.stats.events_in, 100);
         assert_eq!(run.stats.events_written, 100);
+    }
+
+    #[test]
+    fn consumes_lazy_iterator_without_materializing() {
+        // The source here is a pure generator: no backing Vec exists, so
+        // the old `events.to_vec()` copy is impossible by construction.
+        // Buffering is bounded by batch_size (asserted via the high-water
+        // mark).
+        let res = Resolution::new(16, 16);
+        let n = 10_000u64;
+        let cfg = PipelineConfig { batch_size: 256, ..PipelineConfig::default() };
+        let source = (0..n).map(|k| LabeledEvent {
+            ev: Event::new(1 + k * 10, (k % 16) as u16, (k % 16) as u16, Polarity::On),
+            is_signal: true,
+        });
+        let run = run(source, res, 100_000, &cfg);
+        assert_eq!(run.stats.events_in, n);
+        assert_eq!(run.stats.events_written, n);
+        assert!(
+            run.stats.peak_batch_len <= 256,
+            "staging exceeded batch_size: {}",
+            run.stats.peak_batch_len
+        );
     }
 
     #[test]
@@ -149,7 +206,7 @@ mod tests {
             stcf: Some(StcfParams { threshold: 2, ..StcfParams::default() }),
             ..PipelineConfig::default()
         };
-        let run = run(&evs, res, 50_000, &cfg);
+        let run = run(evs.iter().copied(), res, 50_000, &cfg);
         assert!(run.stats.events_dropped_by_stcf > 10,
                 "dropped {}", run.stats.events_dropped_by_stcf);
     }
@@ -161,7 +218,7 @@ mod tests {
             ev: Event::new(49_000, 4, 4, Polarity::On),
             is_signal: true,
         }];
-        let run = run(&evs, res, 50_000, &PipelineConfig::default());
+        let run = run(evs.iter().copied(), res, 50_000, &PipelineConfig::default());
         assert_eq!(run.frames.len(), 1);
         let f = &run.frames[0].1;
         assert!(*f.get(4, 4) > 0.9, "fresh write should be bright");
@@ -171,8 +228,21 @@ mod tests {
     #[test]
     fn empty_stream_still_emits_frames() {
         let res = Resolution::new(8, 8);
-        let run = run(&[], res, 150_000, &PipelineConfig::default());
+        let run = run(std::iter::empty(), res, 150_000, &PipelineConfig::default());
         assert_eq!(run.frames.len(), 3);
         assert!(run.frames.iter().all(|(_, f)| f.as_slice().iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn batch_size_does_not_change_frames() {
+        let res = Resolution::new(16, 16);
+        let evs = stream(400, res);
+        let mut all = Vec::new();
+        for bs in [1usize, 64, 4_096] {
+            let cfg = PipelineConfig { batch_size: bs, ..PipelineConfig::default() };
+            all.push(run(evs.iter().copied(), res, 400_000, &cfg).frames);
+        }
+        assert_eq!(all[0], all[1]);
+        assert_eq!(all[1], all[2]);
     }
 }

@@ -3,10 +3,21 @@
 //! The ISC plane is partitioned into horizontal bands, each owned by a
 //! worker thread with its own analog-array state (mirroring how a tiled
 //! hardware readout partitions the sensor). The router dispatches writes
-//! by row, applies backpressure through bounded queues, and performs
-//! scatter-gather frame snapshots. std::thread + sync_channel (tokio is
-//! not available offline; bounded mpsc gives the same backpressure
-//! semantics deterministically).
+//! by row **in batches**: incoming events are staged per shard and
+//! shipped as one `WriteBatch` message when a batch fills (or before any
+//! snapshot/shutdown), so a 100 Meps-class stream costs one channel
+//! round-trip per few thousand events instead of one per event.
+//! [`Router::route_batch`] additionally coalesces sort-free runs of
+//! consecutive events that land in the same band, so shard-local cells
+//! are staged with one contiguous `extend_from_slice` per run.
+//!
+//! Backpressure still propagates through bounded queues (`queue_depth`
+//! counts in-flight *batches* per shard), and scatter-gather frame
+//! snapshots recycle their band buffers: each `Snapshot` request carries
+//! a buffer the shard fills and returns, so a steady-state serving loop
+//! performs zero per-frame allocations (see [`Router::frame_into`]).
+//! std::thread + sync_channel (tokio is not available offline; bounded
+//! mpsc gives the same backpressure semantics deterministically).
 
 use crate::events::{Event, Resolution};
 use crate::isc::{IscArray, IscConfig};
@@ -19,21 +30,26 @@ use std::thread::JoinHandle;
 pub struct RouterConfig {
     /// Worker shards (horizontal bands).
     pub n_shards: usize,
-    /// Bounded queue depth per shard — the backpressure knob.
+    /// Bounded queue depth per shard (in batches) — the backpressure knob.
     pub queue_depth: usize,
+    /// Events staged per shard before a batch is shipped.
+    pub batch_size: usize,
     /// Array config cloned per shard (seeds are derived per shard).
     pub isc: IscConfig,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        Self { n_shards: 4, queue_depth: 4_096, isc: IscConfig::default() }
+        Self { n_shards: 4, queue_depth: 64, batch_size: 4_096, isc: IscConfig::default() }
     }
 }
 
 enum ShardMsg {
-    Write(Event),
-    Snapshot { at_us: u64, reply: SyncSender<(usize, Vec<f64>)> },
+    /// A staged batch of writes; `y` is still in sensor coordinates.
+    WriteBatch(Vec<Event>),
+    /// Render the band's merged frame at `at_us` directly into `buf` and
+    /// send it back (the buffer cycles shard → router → shard).
+    Snapshot { at_us: u64, buf: Grid<f64>, reply: SyncSender<(usize, Grid<f64>)> },
     Stop,
 }
 
@@ -42,6 +58,9 @@ enum ShardMsg {
 pub struct RouterStats {
     pub events_routed: u64,
     pub per_shard: Vec<u64>,
+    /// Batch messages shipped across all shards (events_routed / batches
+    /// is the effective coalescing factor).
+    pub batches_shipped: u64,
 }
 
 /// The sharded router.
@@ -50,7 +69,13 @@ pub struct Router {
     handles: Vec<JoinHandle<u64>>,
     res: Resolution,
     band_h: usize,
+    batch_size: usize,
+    /// Per-shard staging buffers awaiting a full batch.
+    staging: Vec<Vec<Event>>,
+    /// Recycled band buffers for frame snapshots (shard → router → shard).
+    snap_bufs: Vec<Grid<f64>>,
     events_routed: u64,
+    batches_shipped: u64,
 }
 
 impl Router {
@@ -64,7 +89,7 @@ impl Router {
         let mut handles = Vec::with_capacity(n);
         for shard in 0..n {
             let (tx, rx): (SyncSender<ShardMsg>, Receiver<ShardMsg>) =
-                sync_channel(cfg.queue_depth);
+                sync_channel(cfg.queue_depth.max(1));
             let rows = band_h.min(res.height as usize - shard * band_h);
             let band_res = Resolution::new(res.width, rows as u16);
             let mut isc_cfg = cfg.isc.clone();
@@ -75,14 +100,16 @@ impl Router {
                 let mut processed = 0u64;
                 for msg in rx {
                     match msg {
-                        ShardMsg::Write(mut e) => {
-                            e.y -= y0;
-                            array.write(&e);
-                            processed += 1;
+                        ShardMsg::WriteBatch(mut batch) => {
+                            for e in &mut batch {
+                                e.y -= y0;
+                            }
+                            array.write_batch(&batch);
+                            processed += batch.len() as u64;
                         }
-                        ShardMsg::Snapshot { at_us, reply } => {
-                            let frame = array.frame_merged(at_us);
-                            let _ = reply.send((y0 as usize, frame.as_slice().to_vec()));
+                        ShardMsg::Snapshot { at_us, mut buf, reply } => {
+                            array.frame_merged_into(&mut buf, at_us);
+                            let _ = reply.send((y0 as usize, buf));
                         }
                         ShardMsg::Stop => break,
                     }
@@ -91,7 +118,17 @@ impl Router {
             }));
             senders.push(tx);
         }
-        Self { senders, handles, res, band_h, events_routed: 0 }
+        Self {
+            staging: (0..n).map(|_| Vec::with_capacity(cfg.batch_size.max(1))).collect(),
+            snap_bufs: vec![Grid::new(1, 1, 0.0); n],
+            senders,
+            handles,
+            res,
+            band_h,
+            batch_size: cfg.batch_size.max(1),
+            events_routed: 0,
+            batches_shipped: 0,
+        }
     }
 
     #[inline]
@@ -99,31 +136,89 @@ impl Router {
         (y as usize / self.band_h).min(self.senders.len() - 1)
     }
 
-    /// Route one event write. Blocks when the target shard's queue is full
-    /// (backpressure propagates to the producer).
+    /// Route one event write. The event is staged; a full batch blocks on
+    /// the target shard's bounded queue (backpressure propagates to the
+    /// producer). Staged events become visible to snapshots at the next
+    /// [`Router::flush`] / [`Router::frame`] / [`Router::shutdown`].
     pub fn route(&mut self, e: Event) {
         debug_assert!(self.res.contains(e.x, e.y));
         let s = self.shard_for(e.y);
-        self.senders[s].send(ShardMsg::Write(e)).expect("shard died");
+        self.staging[s].push(e);
+        if self.staging[s].len() >= self.batch_size {
+            self.flush_shard(s);
+        }
         self.events_routed += 1;
     }
 
-    /// Scatter-gather a full frame snapshot at `at_us`.
-    pub fn frame(&self, at_us: u64) -> Grid<f64> {
+    /// Route a time-sorted batch. Consecutive events falling in the same
+    /// band are coalesced into one contiguous staging append (sort-free
+    /// run coalescing) — event streams are spatially coherent, so runs
+    /// are long and the per-event shard lookup mostly disappears.
+    pub fn route_batch(&mut self, events: &[Event]) {
+        let mut i = 0usize;
+        while i < events.len() {
+            debug_assert!(self.res.contains(events[i].x, events[i].y));
+            let s = self.shard_for(events[i].y);
+            let mut j = i + 1;
+            while j < events.len() && self.shard_for(events[j].y) == s {
+                debug_assert!(self.res.contains(events[j].x, events[j].y));
+                j += 1;
+            }
+            self.staging[s].extend_from_slice(&events[i..j]);
+            if self.staging[s].len() >= self.batch_size {
+                self.flush_shard(s);
+            }
+            i = j;
+        }
+        self.events_routed += events.len() as u64;
+    }
+
+    fn flush_shard(&mut self, s: usize) {
+        if self.staging[s].is_empty() {
+            return;
+        }
+        let replacement = Vec::with_capacity(self.batch_size);
+        let batch = std::mem::replace(&mut self.staging[s], replacement);
+        self.senders[s].send(ShardMsg::WriteBatch(batch)).expect("shard died");
+        self.batches_shipped += 1;
+    }
+
+    /// Ship all staged events to their shards.
+    pub fn flush(&mut self) {
+        for s in 0..self.senders.len() {
+            self.flush_shard(s);
+        }
+    }
+
+    /// Scatter-gather a full frame snapshot at `at_us` (allocating
+    /// convenience wrapper around [`Router::frame_into`]).
+    pub fn frame(&mut self, at_us: u64) -> Grid<f64> {
+        let mut g = Grid::new(self.res.width as usize, self.res.height as usize, 0.0);
+        self.frame_into(&mut g, at_us);
+        g
+    }
+
+    /// Scatter-gather a frame snapshot into a caller-owned grid. Staged
+    /// writes are flushed first so the snapshot observes every routed
+    /// event. Band buffers are recycled between calls: after the first
+    /// frame, the readout path performs zero heap allocations.
+    pub fn frame_into(&mut self, out: &mut Grid<f64>, at_us: u64) {
+        self.flush();
+        let w = self.res.width as usize;
+        out.ensure_shape(w, self.res.height as usize, 0.0);
         let (tx, rx) = sync_channel(self.senders.len());
         for s in &self.senders {
-            s.send(ShardMsg::Snapshot { at_us, reply: tx.clone() })
+            let buf = self.snap_bufs.pop().unwrap_or_else(|| Grid::new(1, 1, 0.0));
+            s.send(ShardMsg::Snapshot { at_us, buf, reply: tx.clone() })
                 .expect("shard died");
         }
         drop(tx);
-        let w = self.res.width as usize;
-        let h = self.res.height as usize;
-        let mut out = vec![0.0f64; w * h];
+        let slice = out.as_mut_slice();
         for (y0, band) in rx.iter().take(self.senders.len()) {
-            let rows = band.len() / w;
-            out[y0 * w..(y0 + rows) * w].copy_from_slice(&band);
+            let rows = band.height();
+            slice[y0 * w..(y0 + rows) * w].copy_from_slice(band.as_slice());
+            self.snap_bufs.push(band);
         }
-        Grid::from_vec(w, h, out)
     }
 
     pub fn events_routed(&self) -> u64 {
@@ -135,13 +230,18 @@ impl Router {
     }
 
     /// Stop all shards and collect statistics.
-    pub fn shutdown(self) -> RouterStats {
+    pub fn shutdown(mut self) -> RouterStats {
+        self.flush();
         for s in &self.senders {
             let _ = s.send(ShardMsg::Stop);
         }
         let per_shard: Vec<u64> =
-            self.handles.into_iter().map(|h| h.join().expect("join")).collect();
-        RouterStats { events_routed: self.events_routed, per_shard }
+            self.handles.drain(..).map(|h| h.join().expect("join")).collect();
+        RouterStats {
+            events_routed: self.events_routed,
+            per_shard,
+            batches_shipped: self.batches_shipped,
+        }
     }
 }
 
@@ -166,21 +266,59 @@ mod tests {
     }
 
     #[test]
+    fn batch_routing_coalesces_messages() {
+        let res = Resolution::new(8, 8);
+        let mut r = Router::new(
+            res,
+            RouterConfig { n_shards: 2, batch_size: 4_096, ..RouterConfig::default() },
+        );
+        // 100 events in two spatially coherent runs → far fewer batches.
+        let events: Vec<Event> = (0..100u64)
+            .map(|k| Event::new(1 + k, (k % 8) as u16, if k < 50 { 1 } else { 6 }, Polarity::On))
+            .collect();
+        r.route_batch(&events);
+        let stats = r.shutdown();
+        assert_eq!(stats.events_routed, 100);
+        assert_eq!(stats.per_shard, vec![50, 50]);
+        assert!(stats.batches_shipped <= 2, "batches {}", stats.batches_shipped);
+    }
+
+    #[test]
+    fn route_batch_equals_single_routes() {
+        let res = Resolution::new(12, 12);
+        let cfg = RouterConfig { n_shards: 3, queue_depth: 16, ..RouterConfig::default() };
+        let events: Vec<Event> = (0..60u64)
+            .map(|k| Event::new(1_000 + k * 250, (k % 12) as u16, ((k * 5) % 12) as u16,
+                                Polarity::On))
+            .collect();
+        let mut single = Router::new(res, cfg.clone());
+        for e in &events {
+            single.route(*e);
+        }
+        let mut batched = Router::new(res, cfg);
+        batched.route_batch(&events);
+        let fa = single.frame(20_000);
+        let fb = batched.frame(20_000);
+        assert_eq!(fa, fb);
+        single.shutdown();
+        batched.shutdown();
+    }
+
+    #[test]
     fn frame_matches_unsharded_array() {
         let res = Resolution::new(12, 12);
         let cfg = IscConfig::default();
         let mut router = Router::new(
             res,
-            RouterConfig { n_shards: 3, queue_depth: 64, isc: cfg.clone() },
+            RouterConfig { n_shards: 3, queue_depth: 64, isc: cfg.clone(),
+                           ..RouterConfig::default() },
         );
         let mut single = IscArray::new(res, cfg);
         let events: Vec<Event> = (0..40)
             .map(|k| Event::new(1_000 + k * 500, (k % 12) as u16, (k % 12) as u16, Polarity::On))
             .collect();
-        for e in &events {
-            router.route(*e);
-            single.write(e);
-        }
+        router.route_batch(&events);
+        single.write_batch(&events);
         let fr = router.frame(25_000);
         let fs = single.frame_merged(25_000);
         // Same write pattern, same nominal bank ⇒ same brightness ordering;
@@ -212,13 +350,31 @@ mod tests {
     }
 
     #[test]
+    fn frame_into_reuses_buffers() {
+        let res = Resolution::new(8, 8);
+        let mut r = Router::new(res, RouterConfig { n_shards: 2, ..RouterConfig::default() });
+        let mut out = Grid::new(1, 1, 0.0);
+        r.frame_into(&mut out, 1_000); // warmup: reshapes + first band bufs
+        let ptr = out.as_slice().as_ptr();
+        for k in 0..5u64 {
+            r.route(Event::new(2_000 + k, (k % 8) as u16, (k % 8) as u16, Polarity::On));
+            r.frame_into(&mut out, 3_000 + k);
+            assert_eq!(out.as_slice().as_ptr(), ptr, "warm frame_into must not reallocate");
+        }
+        assert!(out.as_slice().iter().any(|&v| v > 0.0));
+        r.shutdown();
+    }
+
+    #[test]
     fn prop_router_preserves_event_count() {
         check("router count conservation", 20, |g| {
             let res = Resolution::new(8, 8);
             let n_shards = g.usize(1, 6);
+            let batch_size = g.usize(1, 32);
             let mut r = Router::new(
                 res,
-                RouterConfig { n_shards, queue_depth: 16, ..RouterConfig::default() },
+                RouterConfig { n_shards, queue_depth: 16, batch_size,
+                               ..RouterConfig::default() },
             );
             let n = g.usize(0, 100);
             let mut t = 0u64;

@@ -6,7 +6,7 @@
 use crate::events::{LabeledEvent, Resolution};
 use crate::metrics::Scored;
 use crate::tsurface::sae::Sae;
-use crate::tsurface::Representation;
+use crate::tsurface::EventSink;
 
 /// BAF parameters.
 #[derive(Clone, Copy, Debug)]
@@ -52,7 +52,7 @@ pub fn run(events: &[LabeledEvent], res: Resolution, prm: &BafParams) -> Vec<Sco
             0.0
         };
         out.push(Scored { score, is_signal: le.is_signal });
-        sae.update(&e);
+        sae.ingest(&e);
     }
     out
 }

@@ -15,7 +15,7 @@ use crate::isc::array::Comparator;
 use crate::isc::{IscArray, IscConfig};
 use crate::metrics::Scored;
 use crate::tsurface::sae::Sae;
-use crate::tsurface::Representation;
+use crate::tsurface::EventSink;
 
 /// STCF parameters.
 #[derive(Clone, Copy, Debug)]
@@ -100,12 +100,16 @@ impl StcfBackend {
         }
     }
 
+    /// Record an event on the backing surface (after scoring it — the
+    /// filter is causal). Public so streaming consumers (the coordinator
+    /// pipeline) can interleave scoring and ingestion without
+    /// materializing a kept-event vector.
     #[inline]
-    fn write(&mut self, e: &Event, prm: &StcfParams) {
+    pub fn ingest(&mut self, e: &Event, prm: &StcfParams) {
         match self {
             StcfBackend::Ideal { sae } => {
                 let plane = if prm.polarity_sensitive { e.p.index() } else { 0 };
-                sae[plane].update(e);
+                sae[plane].ingest(e);
             }
             StcfBackend::Isc { array, .. } => array.write(e),
         }
@@ -145,7 +149,9 @@ pub struct StcfRun {
 }
 
 /// Run the STCF over a sorted labeled stream: score every event against
-/// the *current* surface, then write it.
+/// the *current* surface, then write it. For streaming consumption
+/// without materializing `kept`, interleave [`support_count`] and
+/// [`StcfBackend::ingest`] directly (see `coordinator::pipeline`).
 pub fn run(backend: &mut StcfBackend, events: &[LabeledEvent], prm: &StcfParams) -> StcfRun {
     let mut scored = Vec::with_capacity(events.len());
     let mut kept = Vec::new();
@@ -155,7 +161,7 @@ pub fn run(backend: &mut StcfBackend, events: &[LabeledEvent], prm: &StcfParams)
         if s >= prm.threshold {
             kept.push(*le);
         }
-        backend.write(&le.ev, prm);
+        backend.ingest(&le.ev, prm);
     }
     StcfRun { scored, kept }
 }

@@ -22,7 +22,7 @@ use crate::events::v2e::{convert, DvsParams};
 use crate::events::{LabeledEvent, Resolution};
 use crate::isc::IscConfig;
 use crate::metrics::roc;
-use crate::tsurface::{QuantizedSae, Representation};
+use crate::tsurface::{ingest_labeled, FrameSource, QuantizedSae};
 
 fn stream(res: Resolution, dur: f64) -> Vec<LabeledEvent> {
     let scene = BlobScene::new(res.width, res.height, 3, dur, 7);
@@ -98,10 +98,8 @@ pub fn run(effort: Effort) -> String {
     for bits in [12u32, 16, 20, 24] {
         let mut q = QuantizedSae::new(res, bits, 24_000.0);
         let mut ideal = crate::tsurface::IdealTs::new(res, 24_000.0);
-        for le in &events {
-            q.update(&le.ev);
-            ideal.update(&le.ev);
-        }
+        ingest_labeled(&mut q, &events, 4_096);
+        ingest_labeled(&mut ideal, &events, 4_096);
         let fq = q.frame(horizon_us);
         let fi = ideal.frame(horizon_us);
         let err = crate::metrics::frame_mse(&fq, &fi).sqrt();

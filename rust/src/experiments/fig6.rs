@@ -7,7 +7,7 @@ use crate::events::scene::BlobScene;
 use crate::events::v2e::{convert, DvsParams};
 use crate::events::Resolution;
 use crate::isc::{IscArray, IscConfig};
-use crate::tsurface::{Representation, Sae};
+use crate::tsurface::{EventSink, FrameSource, Sae};
 
 fn ascii(g: &crate::util::grid::Grid<f64>) -> String {
     let ramp = b" .:-=+*#%@";
@@ -37,9 +37,14 @@ pub fn run(effort: Effort) -> String {
 
     let mut sae = Sae::new(res);
     let mut isc = IscArray::new(res, IscConfig::default());
-    for le in &events {
-        sae.update(&le.ev);
-        isc.write(&le.ev);
+    // Bounded staging: both sinks share one ≤4096-event raw-event buffer
+    // instead of duplicating the whole stream.
+    let mut staged = Vec::with_capacity(4_096.min(events.len()));
+    for part in events.chunks(4_096) {
+        staged.clear();
+        staged.extend(part.iter().map(|le| le.ev));
+        sae.ingest_batch(&staged);
+        isc.write_batch(&staged);
     }
 
     let mut s = super::banner("Fig. 6 — SAE timestamps vs analog V_mem TS");

@@ -27,9 +27,7 @@ pub fn run(effort: Effort) -> String {
         Box::new(IscTs::with_defaults(res)),
     ];
     for rep in reps.iter_mut() {
-        for le in &events {
-            rep.update(&le.ev);
-        }
+        ingest_labeled(rep.as_mut(), &events, 4_096);
     }
 
     let mut s = super::banner("Sec. II-B — representation resource comparison");

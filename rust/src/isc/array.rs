@@ -144,6 +144,36 @@ impl IscArray {
         self.writes += 1;
     }
 
+    /// Batched event write — semantically identical to calling
+    /// [`IscArray::write`] per event, but with plane selection and stride
+    /// hoisted out of the inner loop. This is the software analogue of the
+    /// plane absorbing an event burst in place, and the hot path of the
+    /// sharded router.
+    pub fn write_batch(&mut self, events: &[Event]) {
+        let w = self.res.width as usize;
+        if self.cfg.polarity_sensitive {
+            let [off, on] = match &mut self.planes[..] {
+                [a, b] => [a, b],
+                _ => unreachable!("polarity-sensitive array has two planes"),
+            };
+            for e in events {
+                debug_assert!(self.res.contains(e.x, e.y));
+                let i = e.y as usize * w + e.x as usize;
+                match e.p {
+                    Polarity::Off => off.t_write[i] = e.t.max(1),
+                    Polarity::On => on.t_write[i] = e.t.max(1),
+                }
+            }
+        } else {
+            let t_write = &mut self.planes[0].t_write;
+            for e in events {
+                debug_assert!(self.res.contains(e.x, e.y));
+                t_write[e.y as usize * w + e.x as usize] = e.t.max(1);
+            }
+        }
+        self.writes += events.len() as u64;
+    }
+
     /// Analog readout of one cell at time `t_us`: the decayed V_mem in
     /// volts (0 if the cell was never written or `t` precedes the write).
     #[inline]
@@ -202,30 +232,56 @@ impl IscArray {
     /// quantized-decay LUT (§Perf iteration 1) instead of 2×exp per pixel;
     /// quantization error ≤3.4 mV, below the cell mismatch CV.
     pub fn frame(&self, p: Polarity, t_us: u64) -> Grid<f64> {
-        let plane = &self.planes[self.plane_for(p)];
-        let w = self.res.width as usize;
-        let mut g = Grid::new(w, self.res.height as usize, 0.0f64);
-        let out = g.as_mut_slice();
-        for i in 0..out.len() {
-            let tw = plane.t_write[i];
-            if tw != 0 && t_us >= tw {
-                let bin = (((t_us - tw) / LUT_STEP_US) as usize).min(LUT_N - 1);
-                out[i] = self.frame_lut[plane.param_idx[i] as usize * LUT_N + bin] as f64;
-            }
-        }
-        let _ = w;
+        let mut g = Grid::new(self.res.width as usize, self.res.height as usize, 0.0f64);
+        self.frame_into(p, &mut g, t_us);
         g
+    }
+
+    /// Zero-copy variant of [`IscArray::frame`]: renders into a
+    /// caller-owned buffer (reshaped on first use, never reallocated on a
+    /// warm buffer). This is the serving loop's per-window readout path.
+    pub fn frame_into(&self, p: Polarity, out: &mut Grid<f64>, t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let plane = &self.planes[self.plane_for(p)];
+        let s = out.as_mut_slice();
+        for i in 0..s.len() {
+            let tw = plane.t_write[i];
+            s[i] = if tw != 0 && t_us >= tw {
+                let bin = (((t_us - tw) / LUT_STEP_US) as usize).min(LUT_N - 1);
+                self.frame_lut[plane.param_idx[i] as usize * LUT_N + bin] as f64
+            } else {
+                0.0
+            };
+        }
     }
 
     /// Merged frame over both polarities (max of planes) when polarity-
     /// sensitive; identical to `frame` otherwise.
     pub fn frame_merged(&self, t_us: u64) -> Grid<f64> {
+        let mut g = Grid::new(self.res.width as usize, self.res.height as usize, 0.0f64);
+        self.frame_merged_into(&mut g, t_us);
+        g
+    }
+
+    /// Zero-copy variant of [`IscArray::frame_merged`]: the OFF plane is
+    /// max-merged directly into `out` without a scratch grid.
+    pub fn frame_merged_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        self.frame_into(Polarity::On, out, t_us);
         if !self.cfg.polarity_sensitive {
-            return self.frame(Polarity::On, t_us);
+            return;
         }
-        let on = self.frame(Polarity::On, t_us);
-        let off = self.frame(Polarity::Off, t_us);
-        Grid::from_fn(on.width(), on.height(), |x, y| on.get(x, y).max(*off.get(x, y)))
+        let plane = &self.planes[Polarity::Off.index()];
+        let s = out.as_mut_slice();
+        for i in 0..s.len() {
+            let tw = plane.t_write[i];
+            if tw != 0 && t_us >= tw {
+                let bin = (((t_us - tw) / LUT_STEP_US) as usize).min(LUT_N - 1);
+                let v = self.frame_lut[plane.param_idx[i] as usize * LUT_N + bin] as f64;
+                if v > s[i] {
+                    s[i] = v;
+                }
+            }
+        }
     }
 
     /// Reset all cells (power-on state).
@@ -347,6 +403,63 @@ mod tests {
                 prev = v;
             }
         });
+    }
+
+    #[test]
+    fn write_batch_equals_single_writes() {
+        for polarity_sensitive in [false, true] {
+            let cfg = IscConfig { polarity_sensitive, ..IscConfig::default() };
+            let mut a = IscArray::new(Resolution::new(16, 12), cfg.clone());
+            let mut b = IscArray::new(Resolution::new(16, 12), cfg);
+            let events: Vec<Event> = (0..200u64)
+                .map(|k| {
+                    Event::new(
+                        1 + k * 97,
+                        (k % 16) as u16,
+                        (k % 12) as u16,
+                        if k % 3 == 0 { Polarity::Off } else { Polarity::On },
+                    )
+                })
+                .collect();
+            for e in &events {
+                a.write(e);
+            }
+            b.write_batch(&events);
+            assert_eq!(a.write_count(), b.write_count());
+            assert_eq!(a.frame_merged(30_000), b.frame_merged(30_000));
+        }
+    }
+
+    #[test]
+    fn frame_into_reuses_buffer() {
+        let mut a = small();
+        a.write(&Event::new(1_000, 3, 3, Polarity::On));
+        let mut buf = Grid::new(1, 1, 0.0);
+        a.frame_merged_into(&mut buf, 2_000); // warmup: reshapes once
+        let ptr = buf.as_slice().as_ptr();
+        for dt in 1..10u64 {
+            a.frame_merged_into(&mut buf, 2_000 + dt * 5_000);
+            assert_eq!(buf.as_slice().as_ptr(), ptr, "warm frame_into must not reallocate");
+        }
+        assert_eq!(buf, a.frame_merged(2_000 + 9 * 5_000));
+    }
+
+    #[test]
+    fn merged_into_matches_two_plane_max() {
+        let mut a = IscArray::new(
+            Resolution::new(8, 8),
+            IscConfig { polarity_sensitive: true, ..IscConfig::default() },
+        );
+        a.write(&Event::new(1_000, 1, 1, Polarity::On));
+        a.write(&Event::new(9_000, 1, 1, Polarity::Off));
+        a.write(&Event::new(5_000, 6, 2, Polarity::On));
+        let t = 20_000;
+        let merged = a.frame_merged(t);
+        let on = a.frame(Polarity::On, t);
+        let off = a.frame(Polarity::Off, t);
+        for (x, y, &v) in merged.iter_coords() {
+            assert_eq!(v, on.get(x, y).max(*off.get(x, y)));
+        }
     }
 
     #[test]

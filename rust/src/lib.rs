@@ -14,6 +14,26 @@
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! ## Migration: `Representation` → `EventSink` + `FrameSource`
+//!
+//! The ingestion/readout API is batch-first as of the streaming-API
+//! redesign. The monolithic `Representation::update(&Event)` /
+//! `frame(t) -> Grid` trait was split into two layered traits (see
+//! [`tsurface::traits`]):
+//!
+//! | old                          | new                                           |
+//! |------------------------------|-----------------------------------------------|
+//! | `rep.update(&e)`             | [`tsurface::EventSink::ingest`]`(&e)`         |
+//! | per-event loops              | [`tsurface::EventSink::ingest_batch`]`(&[Event])` |
+//! | `rep.frame(t)` (allocating)  | unchanged, or [`tsurface::FrameSource::frame_into`] with a reused buffer |
+//! | `pipeline::run(&[..], …)`    | `pipeline::run(events.iter().copied(), …)` — any `IntoIterator<Item = LabeledEvent>` |
+//!
+//! `tsurface::Representation` still exists as the combined object-safe
+//! trait (`EventSink + FrameSource` plus `name`/`memory_bits`) for
+//! heterogeneous comparison tables. Bulk producers should batch:
+//! `Router::route_batch`, `IscArray::write_batch` and the coordinator
+//! pipeline all move events in batches end to end.
 
 pub mod arch;
 pub mod circuit;

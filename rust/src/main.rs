@@ -33,7 +33,7 @@ USAGE:
   tsisc exp <id|all> [--full]    regenerate a paper table/figure
                                  ids: table1 fig2d fig4 fig5 fig6 fig7 fig8
                                       fig9 fig10 fig12 sec2b table2 table3
-  tsisc pipeline [--duration S] [--stcf] [--shards K]
+  tsisc pipeline [--duration S] [--stcf] [--shards K] [--batch-size N]
   tsisc train [--family nmnist|shapes|cifardvs|gesture] [--steps N]
               [--surface isc|ideal|count|ebbi] [--per-class N]
   tsisc info
@@ -88,10 +88,11 @@ fn cmd_pipeline(args: &Args) -> i32 {
 
     let cfg = PipelineConfig {
         stcf: if args.flag("stcf") { Some(StcfParams::default()) } else { None },
+        batch_size: args.get_parsed("batch-size", 4_096usize),
         router: RouterConfig { n_shards: shards, ..RouterConfig::default() },
         ..PipelineConfig::default()
     };
-    let run = run_pipeline(&events, res, (dur * 1e6) as u64, &cfg);
+    let run = run_pipeline(events.iter().copied(), res, (dur * 1e6) as u64, &cfg);
     let st = &run.stats;
     println!(
         "pipeline: {} events in, {} written, {} dropped by STCF\n\

@@ -11,10 +11,11 @@
 //! TORE volumes, and event-count frames (the E2VID-slot baseline).
 
 use crate::events::davis::Recording;
+use crate::events::Event;
 use crate::metrics::ssim;
 use crate::runtime::pjrt::{lit_f32, lit_scalar, to_vec_f32, Runtime};
 use crate::train::frames::SurfaceKind;
-use crate::tsurface::Representation;
+use crate::tsurface::{EventSink, FrameSource};
 use crate::util::grid::Grid;
 use crate::util::image::resize_bilinear;
 use crate::util::rng::Pcg64;
@@ -31,17 +32,24 @@ pub struct Pair {
     pub target: Vec<f32>, // SIDE×SIDE APS frame
 }
 
-/// Build (TS frame, APS frame) pairs from a recording using `kind`.
+/// Build (TS frame, APS frame) pairs from a recording using `kind`: the
+/// events between consecutive APS timestamps are ingested as one batch,
+/// and the TS frame is rendered into a reused buffer (`frame_into`).
 pub fn build_pairs(rec: &Recording, kind: &SurfaceKind) -> Vec<Pair> {
-    let mut rep = build_rep(kind, rec.res);
+    let mut rep = kind.build(rec.res);
     let mut pairs = Vec::with_capacity(rec.frames.len());
+    let mut staged: Vec<Event> = Vec::new();
+    let mut ts_buf = Grid::new(1, 1, 0.0f64);
     let mut ev_i = 0usize;
     for (t_frame, aps) in &rec.frames {
+        staged.clear();
         while ev_i < rec.events.len() && rec.events[ev_i].ev.t <= *t_frame {
-            rep.update(&rec.events[ev_i].ev);
+            staged.push(rec.events[ev_i].ev);
             ev_i += 1;
         }
-        let ts = resize_bilinear(&rep.frame(*t_frame), SIDE, SIDE);
+        rep.ingest_batch(&staged);
+        rep.frame_into(&mut ts_buf, *t_frame);
+        let ts = resize_bilinear(&ts_buf, SIDE, SIDE);
         let target = resize_bilinear(aps, SIDE, SIDE);
         pairs.push(Pair {
             input: ts.as_slice().iter().map(|&v| v as f32).collect(),
@@ -50,18 +58,6 @@ pub fn build_pairs(rec: &Recording, kind: &SurfaceKind) -> Vec<Pair> {
         rep.reset_window();
     }
     pairs
-}
-
-fn build_rep(kind: &SurfaceKind, res: crate::events::Resolution) -> Box<dyn Representation> {
-    use crate::tsurface::*;
-    match kind {
-        SurfaceKind::Isc(cfg) => Box::new(IscTs::new(res, cfg.clone())),
-        SurfaceKind::Ideal { tau_us } => Box::new(IdealTs::new(res, *tau_us)),
-        SurfaceKind::Quantized { bits, tau_us } => Box::new(QuantizedSae::new(res, *bits, *tau_us)),
-        SurfaceKind::Count { bits } => Box::new(EventCount::new(res, *bits)),
-        SurfaceKind::Binary => Box::new(Ebbi::new(res)),
-        SurfaceKind::Tore { k } => Box::new(Tore::new(res, *k, 100.0, 1e6)),
-    }
 }
 
 /// Training options.

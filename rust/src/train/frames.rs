@@ -1,9 +1,12 @@
 //! Dataset → time-surface frame conversion for the classifier pipeline.
 
 use crate::events::dataset::{Dataset, Sample};
+use crate::events::Event;
 use crate::isc::IscConfig;
-use crate::tsurface::{Ebbi, EventCount, IdealTs, IscTs, QuantizedSae, Representation, Tore};
-
+use crate::tsurface::{
+    Ebbi, EventCount, EventSink, FrameSource, IdealTs, IscTs, QuantizedSae, Representation, Tore,
+};
+use crate::util::grid::Grid;
 use crate::util::image::resize_bilinear;
 
 /// Which representation produces the CNN input frames — the Table II
@@ -37,7 +40,9 @@ impl SurfaceKind {
         }
     }
 
-    fn build(&self, res: crate::events::Resolution) -> Box<dyn Representation> {
+    /// Instantiate the representation behind this kind (also used by the
+    /// reconstruction driver — one registry for every frame consumer).
+    pub fn build(&self, res: crate::events::Resolution) -> Box<dyn Representation> {
         match self {
             SurfaceKind::Isc(cfg) => Box::new(IscTs::new(res, cfg.clone())),
             SurfaceKind::Ideal { tau_us } => Box::new(IdealTs::new(res, *tau_us)),
@@ -80,29 +85,41 @@ pub fn build_frames(
     side: usize,
 ) -> FrameSet {
     let mut out = FrameSet { frames: Vec::new(), n_classes, n_samples: samples.len() };
+    // Reused across samples/windows: the staged event batch and the
+    // full-resolution frame buffer (zero steady-state allocations on the
+    // ingest/readout path).
+    let mut staged: Vec<Event> = Vec::new();
+    let mut frame_buf = Grid::new(1, 1, 0.0f64);
     for (sid, s) in samples.iter().enumerate() {
         let mut rep = kind.build(res);
         let mut t_next = window_us;
-        let mut push_frame = |rep: &dyn Representation, t: u64| {
-            let g = rep.frame(t);
-            let small = resize_bilinear(&g, side, side);
-            out.frames.push(Frame {
+        let mut emit = |rep: &mut Box<dyn Representation>,
+                        staged: &mut Vec<Event>,
+                        frame_buf: &mut Grid<f64>,
+                        t: u64,
+                        frames: &mut Vec<Frame>| {
+            rep.ingest_batch(staged);
+            staged.clear();
+            rep.frame_into(frame_buf, t);
+            let small = resize_bilinear(frame_buf, side, side);
+            frames.push(Frame {
                 pixels: small.as_slice().iter().map(|&v| v as f32).collect(),
                 label: s.label,
                 sample_id: sid,
             });
+            rep.reset_window();
         };
         for le in &s.events {
             while le.ev.t > t_next && t_next <= s.duration_us {
-                push_frame(rep.as_ref(), t_next);
-                rep.reset_window();
+                emit(&mut rep, &mut staged, &mut frame_buf, t_next, &mut out.frames);
                 t_next += window_us;
             }
-            rep.update(&le.ev);
+            staged.push(le.ev);
         }
+        rep.ingest_batch(&staged);
+        staged.clear();
         while t_next <= s.duration_us {
-            push_frame(rep.as_ref(), t_next);
-            rep.reset_window();
+            emit(&mut rep, &mut staged, &mut frame_buf, t_next, &mut out.frames);
             t_next += window_us;
         }
     }

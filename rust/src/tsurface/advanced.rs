@@ -6,8 +6,12 @@
 //! to low-energy hardware). TORE keeps a per-pixel FIFO of the K most
 //! recent timestamps per polarity (≥96 b/pixel — the paper's Sec. IV-D
 //! area argument: ≥16× the ISC cell).
+//!
+//! The neighbourhood updates are order-dependent, so these sinks keep the
+//! provided per-event batch loop ([`EventSink::ingest_batch`] default) —
+//! their write amplification *is* the point being measured.
 
-use super::traits::Representation;
+use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
 use crate::util::grid::Grid;
 
@@ -37,8 +41,8 @@ impl Sits {
     }
 }
 
-impl Representation for Sits {
-    fn update(&mut self, e: &Event) {
+impl EventSink for Sits {
+    fn ingest(&mut self, e: &Event) {
         let (w, h) = (self.res.width as i64, self.res.height as i64);
         let (ex, ey) = (e.x as i64, e.y as i64);
         let center = self.res.index(e.x, e.y);
@@ -62,22 +66,6 @@ impl Representation for Sits {
         self.events += 1;
     }
 
-    fn frame(&self, _t_us: u64) -> Grid<f64> {
-        let m = self.max_val() as f64;
-        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
-            self.vals[y * self.res.width as usize + x] as f64 / m
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "SITS"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        // Ordinal values up to (2r+1)²: 8 bits suffice for r ≤ 7.
-        self.res.pixels() as u64 * 8
-    }
-
     fn memory_writes(&self) -> u64 {
         self.writes
     }
@@ -88,6 +76,28 @@ impl Representation for Sits {
 
     fn resolution(&self) -> Resolution {
         self.res
+    }
+}
+
+impl FrameSource for Sits {
+    fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let m = self.max_val() as f64;
+        let s = out.as_mut_slice();
+        for (o, &v) in s.iter_mut().zip(&self.vals) {
+            *o = v as f64 / m;
+        }
+    }
+}
+
+impl Representation for Sits {
+    fn name(&self) -> &'static str {
+        "SITS"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // Ordinal values up to (2r+1)²: 8 bits suffice for r ≤ 7.
+        self.res.pixels() as u64 * 8
     }
 }
 
@@ -111,8 +121,8 @@ impl Tos {
     }
 }
 
-impl Representation for Tos {
-    fn update(&mut self, e: &Event) {
+impl EventSink for Tos {
+    fn ingest(&mut self, e: &Event) {
         let (w, h) = (self.res.width as i64, self.res.height as i64);
         let (ex, ey) = (e.x as i64, e.y as i64);
         let r = self.r as i64;
@@ -135,20 +145,6 @@ impl Representation for Tos {
         self.events += 1;
     }
 
-    fn frame(&self, _t_us: u64) -> Grid<f64> {
-        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
-            self.vals[y * self.res.width as usize + x] as f64 / 255.0
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "TOS"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        self.res.pixels() as u64 * 8
-    }
-
     fn memory_writes(&self) -> u64 {
         self.writes
     }
@@ -159,6 +155,26 @@ impl Representation for Tos {
 
     fn resolution(&self) -> Resolution {
         self.res
+    }
+}
+
+impl FrameSource for Tos {
+    fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let s = out.as_mut_slice();
+        for (o, &v) in s.iter_mut().zip(&self.vals) {
+            *o = v as f64 / 255.0;
+        }
+    }
+}
+
+impl Representation for Tos {
+    fn name(&self) -> &'static str {
+        "TOS"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64 * 8
     }
 }
 
@@ -194,7 +210,10 @@ impl Tore {
     /// Collapsed TORE value at a pixel: mean over both polarities' FIFOs of
     /// 1 − clamp(log(Δt/t_min)/log(t_max/t_min)).
     pub fn value(&self, x: u16, y: u16, t_us: u64) -> f64 {
-        let cell = &self.fifo[self.res.index(x, y)];
+        self.cell_value(&self.fifo[self.res.index(x, y)], t_us)
+    }
+
+    fn cell_value(&self, cell: &[Vec<u64>; 2], t_us: u64) -> f64 {
         let denom = (self.t_max_us / self.t_min_us).ln();
         let mut sum = 0.0;
         let mut n = 0usize;
@@ -218,8 +237,8 @@ impl Tore {
     }
 }
 
-impl Representation for Tore {
-    fn update(&mut self, e: &Event) {
+impl EventSink for Tore {
+    fn ingest(&mut self, e: &Event) {
         let cell = &mut self.fifo[self.res.index(e.x, e.y)];
         let q = &mut cell[e.p.index()];
         q.push(e.t.max(1));
@@ -228,21 +247,6 @@ impl Representation for Tore {
         }
         self.events += 1;
         self.writes += 1;
-    }
-
-    fn frame(&self, t_us: u64) -> Grid<f64> {
-        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
-            self.value(x as u16, y as u16, t_us)
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "TORE"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        // K stamps × 2 polarities × 32-bit floats minimum (paper: ≥96 b).
-        self.res.pixels() as u64 * self.k as u64 * 2 * 32
     }
 
     fn memory_writes(&self) -> u64 {
@@ -255,6 +259,27 @@ impl Representation for Tore {
 
     fn resolution(&self) -> Resolution {
         self.res
+    }
+}
+
+impl FrameSource for Tore {
+    fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let s = out.as_mut_slice();
+        for (o, cell) in s.iter_mut().zip(&self.fifo) {
+            *o = self.cell_value(cell, t_us);
+        }
+    }
+}
+
+impl Representation for Tore {
+    fn name(&self) -> &'static str {
+        "TORE"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // K stamps × 2 polarities × 32-bit floats minimum (paper: ≥96 b).
+        self.res.pixels() as u64 * self.k as u64 * 2 * 32
     }
 }
 
@@ -274,7 +299,7 @@ mod tests {
         let mut s = Sits::new(Resolution::new(32, 32), 3);
         // Saturate a neighbourhood so most cells hold high ordinals.
         for k in 0..2_000u64 {
-            s.update(&ev(k, (10 + k % 8) as u16, (10 + (k / 8) % 8) as u16));
+            s.ingest(&ev(k, (10 + k % 8) as u16, (10 + (k / 8) % 8) as u16));
         }
         let wpe = s.writes_per_event();
         assert!(wpe > 10.0, "SITS writes/event {wpe}");
@@ -285,7 +310,7 @@ mod tests {
     fn tos_write_amplification() {
         let mut t = Tos::new(Resolution::new(32, 32), 3);
         for k in 0..2_000u64 {
-            t.update(&ev(k, (10 + k % 8) as u16, (10 + (k / 8) % 8) as u16));
+            t.ingest(&ev(k, (10 + k % 8) as u16, (10 + (k / 8) % 8) as u16));
         }
         assert!(t.writes_per_event() > 10.0);
     }
@@ -294,7 +319,7 @@ mod tests {
     fn sae_class_single_write() {
         let mut s = super::super::sae::Sae::new(Resolution::new(32, 32));
         for k in 0..100u64 {
-            s.update(&ev(k, 5, 5));
+            s.ingest(&ev(k, 5, 5));
         }
         assert_eq!(s.writes_per_event(), 1.0);
     }
@@ -302,15 +327,31 @@ mod tests {
     #[test]
     fn sits_center_maximal_after_event() {
         let mut s = Sits::new(Resolution::new(8, 8), 2);
-        s.update(&ev(1, 4, 4));
+        s.ingest(&ev(1, 4, 4));
         assert_eq!(s.value(4, 4), s.max_val());
+    }
+
+    #[test]
+    fn sits_batch_matches_sequential() {
+        // Order-dependent neighbourhood updates: the provided batch loop
+        // must reproduce event-at-a-time semantics exactly.
+        let evs: Vec<Event> =
+            (0..300u64).map(|k| ev(k, (3 + k % 9) as u16, (3 + (k / 9) % 9) as u16)).collect();
+        let mut a = Sits::new(Resolution::new(16, 16), 2);
+        let mut b = Sits::new(Resolution::new(16, 16), 2);
+        for e in &evs {
+            a.ingest(e);
+        }
+        b.ingest_batch(&evs);
+        assert_eq!(a.frame(300), b.frame(300));
+        assert_eq!(a.memory_writes(), b.memory_writes());
     }
 
     #[test]
     fn tore_fifo_depth_bounded() {
         let mut t = Tore::new(Resolution::new(4, 4), 3, 100.0, 1e6);
         for k in 0..10u64 {
-            t.update(&ev(1 + k * 1_000, 1, 1));
+            t.ingest(&ev(1 + k * 1_000, 1, 1));
         }
         // Value bounded and newer events dominate.
         let v_now = t.value(1, 1, 9_001);
@@ -330,8 +371,8 @@ mod tests {
     #[test]
     fn tore_polarity_separated() {
         let mut t = Tore::new(Resolution::new(2, 2), 2, 100.0, 1e6);
-        t.update(&Event::new(1_000, 0, 0, Polarity::On));
-        t.update(&Event::new(2_000, 0, 0, Polarity::Off));
+        t.ingest(&Event::new(1_000, 0, 0, Polarity::On));
+        t.ingest(&Event::new(2_000, 0, 0, Polarity::Off));
         assert_eq!(t.fifo[0][Polarity::On.index()].len(), 1);
         assert_eq!(t.fifo[0][Polarity::Off.index()].len(), 1);
     }

@@ -2,7 +2,7 @@
 //! the event-based binary image (EBBI). Cheap to store but they discard
 //! the fine temporal structure the TS keeps.
 
-use super::traits::Representation;
+use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
 use crate::util::grid::Grid;
 
@@ -36,8 +36,8 @@ impl EventCount {
     }
 }
 
-impl Representation for EventCount {
-    fn update(&mut self, e: &Event) {
+impl EventSink for EventCount {
+    fn ingest(&mut self, e: &Event) {
         let i = self.res.index(e.x, e.y);
         if self.counts[i] < self.max_count() {
             self.counts[i] += 1;
@@ -46,19 +46,18 @@ impl Representation for EventCount {
         self.events += 1;
     }
 
-    fn frame(&self, _t_us: u64) -> Grid<f64> {
-        let m = self.max_count() as f64;
-        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
-            self.counts[y * self.res.width as usize + x] as f64 / m
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "event-count"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        self.res.pixels() as u64 * self.bits as u64
+    fn ingest_batch(&mut self, events: &[Event]) {
+        let w = self.res.width as usize;
+        let max = self.max_count();
+        for e in events {
+            debug_assert!(self.res.contains(e.x, e.y));
+            let i = e.y as usize * w + e.x as usize;
+            if self.counts[i] < max {
+                self.counts[i] += 1;
+                self.writes += 1;
+            }
+        }
+        self.events += events.len() as u64;
     }
 
     fn memory_writes(&self) -> u64 {
@@ -75,6 +74,27 @@ impl Representation for EventCount {
 
     fn resolution(&self) -> Resolution {
         self.res
+    }
+}
+
+impl FrameSource for EventCount {
+    fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let m = self.max_count() as f64;
+        let s = out.as_mut_slice();
+        for (o, &c) in s.iter_mut().zip(&self.counts) {
+            *o = c as f64 / m;
+        }
+    }
+}
+
+impl Representation for EventCount {
+    fn name(&self) -> &'static str {
+        "event-count"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64 * self.bits as u64
     }
 }
 
@@ -100,8 +120,8 @@ impl Ebbi {
     }
 }
 
-impl Representation for Ebbi {
-    fn update(&mut self, e: &Event) {
+impl EventSink for Ebbi {
+    fn ingest(&mut self, e: &Event) {
         let i = self.res.index(e.x, e.y);
         if !self.bits[i] {
             self.bits[i] = true;
@@ -110,18 +130,17 @@ impl Representation for Ebbi {
         self.events += 1;
     }
 
-    fn frame(&self, _t_us: u64) -> Grid<f64> {
-        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
-            if self.bits[y * self.res.width as usize + x] { 1.0 } else { 0.0 }
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "EBBI"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        self.res.pixels() as u64
+    fn ingest_batch(&mut self, events: &[Event]) {
+        let w = self.res.width as usize;
+        for e in events {
+            debug_assert!(self.res.contains(e.x, e.y));
+            let i = e.y as usize * w + e.x as usize;
+            if !self.bits[i] {
+                self.bits[i] = true;
+                self.writes += 1;
+            }
+        }
+        self.events += events.len() as u64;
     }
 
     fn memory_writes(&self) -> u64 {
@@ -141,6 +160,26 @@ impl Representation for Ebbi {
     }
 }
 
+impl FrameSource for Ebbi {
+    fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let s = out.as_mut_slice();
+        for (o, &b) in s.iter_mut().zip(&self.bits) {
+            *o = if b { 1.0 } else { 0.0 };
+        }
+    }
+}
+
+impl Representation for Ebbi {
+    fn name(&self) -> &'static str {
+        "EBBI"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,7 +193,7 @@ mod tests {
     fn count_saturates() {
         let mut c = EventCount::new(Resolution::new(2, 2), 2);
         for k in 0..10 {
-            c.update(&ev(k, 0, 0));
+            c.ingest(&ev(k, 0, 0));
         }
         assert_eq!(c.count(0, 0), 3); // 2-bit max
         assert_eq!(c.events_seen(), 10);
@@ -162,10 +201,20 @@ mod tests {
     }
 
     #[test]
+    fn count_batch_preserves_saturation_accounting() {
+        let evs: Vec<Event> = (0..10).map(|k| ev(k, 0, 0)).collect();
+        let mut c = EventCount::new(Resolution::new(2, 2), 2);
+        c.ingest_batch(&evs);
+        assert_eq!(c.count(0, 0), 3);
+        assert_eq!(c.events_seen(), 10);
+        assert_eq!(c.memory_writes(), 3);
+    }
+
+    #[test]
     fn ebbi_single_write_per_pixel() {
         let mut b = Ebbi::new(Resolution::new(2, 2));
         for k in 0..5 {
-            b.update(&ev(k, 1, 1));
+            b.ingest(&ev(k, 1, 1));
         }
         assert!(b.get(1, 1));
         assert_eq!(b.memory_writes(), 1);
@@ -186,11 +235,11 @@ mod tests {
     #[test]
     fn reset_window_clears() {
         let mut c = EventCount::new(Resolution::new(2, 2), 4);
-        c.update(&ev(1, 0, 0));
+        c.ingest(&ev(1, 0, 0));
         c.reset_window();
         assert_eq!(c.count(0, 0), 0);
         let mut b = Ebbi::new(Resolution::new(2, 2));
-        b.update(&ev(1, 0, 0));
+        b.ingest(&ev(1, 0, 0));
         b.reset_window();
         assert!(!b.get(0, 0));
     }

@@ -3,7 +3,7 @@
 //! ideal/digital surfaces go (classification, reconstruction, denoising
 //! comparisons all use this adapter).
 
-use super::traits::Representation;
+use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
 use crate::isc::{IscArray, IscConfig};
 use crate::util::grid::Grid;
@@ -31,25 +31,13 @@ impl IscTs {
     }
 }
 
-impl Representation for IscTs {
-    fn update(&mut self, e: &Event) {
+impl EventSink for IscTs {
+    fn ingest(&mut self, e: &Event) {
         self.array.write(e);
     }
 
-    fn frame(&self, t_us: u64) -> Grid<f64> {
-        self.array.frame_merged(t_us)
-    }
-
-    fn name(&self) -> &'static str {
-        "3DS-ISC"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        // One analog cell per pixel (per polarity plane): the hardware
-        // equivalent of a single stored value. We count the effective
-        // analog precision (~6 b usable given <2 % CV) per plane.
-        let planes = if self.array.config().polarity_sensitive { 2 } else { 1 };
-        self.array.resolution().pixels() as u64 * 6 * planes
+    fn ingest_batch(&mut self, events: &[Event]) {
+        self.array.write_batch(events);
     }
 
     fn memory_writes(&self) -> u64 {
@@ -65,6 +53,26 @@ impl Representation for IscTs {
     }
 }
 
+impl FrameSource for IscTs {
+    fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        self.array.frame_merged_into(out, t_us);
+    }
+}
+
+impl Representation for IscTs {
+    fn name(&self) -> &'static str {
+        "3DS-ISC"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // One analog cell per pixel (per polarity plane): the hardware
+        // equivalent of a single stored value. We count the effective
+        // analog precision (~6 b usable given <2 % CV) per plane.
+        let planes = if self.array.config().polarity_sensitive { 2 } else { 1 };
+        self.array.resolution().pixels() as u64 * 6 * planes
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,11 +81,25 @@ mod tests {
     #[test]
     fn adapter_tracks_array() {
         let mut ts = IscTs::with_defaults(Resolution::new(8, 8));
-        ts.update(&Event::new(1_000, 2, 2, Polarity::On));
+        ts.ingest(&Event::new(1_000, 2, 2, Polarity::On));
         assert_eq!(ts.events_seen(), 1);
         assert_eq!(ts.writes_per_event(), 1.0);
         let f = ts.frame(1_000);
         assert!(*f.get(2, 2) > 0.9);
+    }
+
+    #[test]
+    fn batch_ingest_matches_array_batch_write() {
+        let res = Resolution::new(8, 8);
+        let events: Vec<Event> =
+            (0..30u64).map(|k| Event::new(1 + k * 500, (k % 8) as u16, (k / 8 % 8) as u16,
+                                          Polarity::On)).collect();
+        let mut ts = IscTs::with_defaults(res);
+        ts.ingest_batch(&events);
+        let mut arr = IscArray::new(res, IscConfig::default());
+        arr.write_batch(&events);
+        assert_eq!(ts.frame(20_000), arr.frame_merged(20_000));
+        assert_eq!(ts.events_seen(), 30);
     }
 
     #[test]
@@ -99,8 +121,8 @@ mod tests {
         let mut t = 1_000u64;
         for k in 0..64u64 {
             let e = Event::new(t, (k % 16) as u16, ((k / 16) * 3 % 16) as u16, Polarity::On);
-            hw.update(&e);
-            ideal.update(&e);
+            hw.ingest(&e);
+            ideal.ingest(&e);
             t += 700;
         }
         let fh = hw.frame(t);

@@ -1,7 +1,26 @@
-//! 2D event-data representations (paper Sec. II-B) behind one trait:
-//! SAE, ideal/quantized time-surfaces, count/binary images, the
-//! write-heavy SITS/TOS, the FIFO-based TORE, and the ISC-backed analog
-//! time-surface that is this paper's contribution.
+//! 2D event-data representations (paper Sec. II-B) behind a layered,
+//! batch-first API: SAE, ideal/quantized time-surfaces, count/binary
+//! images, the write-heavy SITS/TOS, the FIFO-based TORE, and the
+//! ISC-backed analog time-surface that is this paper's contribution.
+//!
+//! The API is split along the two hardware data paths:
+//!
+//! * [`EventSink`] — ingestion. `ingest_batch(&[Event])` is the primary
+//!   entry point (per-event `ingest` is provided for simple callers);
+//!   batches let each representation run a tight, dispatch-free inner
+//!   loop, the software analogue of the ISC plane absorbing events in
+//!   place.
+//! * [`FrameSource`] — readout. `frame_into(&mut Grid<f64>, t_us)`
+//!   renders into a caller-owned buffer (zero allocations per frame
+//!   after warmup); `frame(t_us)` is the allocating convenience wrapper.
+//! * [`Representation`] — the combined trait for heterogeneous
+//!   comparison tables (`Box<dyn Representation>`), adding `name`,
+//!   `memory_bits` and the writes-per-event accounting.
+//!
+//! **Migration note** (old → new API): `Representation::update(&e)` →
+//! [`EventSink::ingest`] / [`EventSink::ingest_batch`]; `frame(t)` is
+//! unchanged for one-shot reads, hot loops should switch to
+//! [`FrameSource::frame_into`] with a reused buffer.
 
 pub mod advanced;
 pub mod binary;
@@ -13,4 +32,4 @@ pub use advanced::{Sits, Tore, Tos};
 pub use binary::{Ebbi, EventCount};
 pub use isc_ts::IscTs;
 pub use sae::{IdealTs, QuantizedSae, Sae};
-pub use traits::Representation;
+pub use traits::{ingest_labeled, EventSink, FrameSource, Representation};

@@ -2,7 +2,7 @@
 //! time-surface (Eq. 3/5), and the finite-width "digital SRAM" variant
 //! exhibiting the timestamp-overflow hazard the paper's analog array avoids.
 
-use super::traits::Representation;
+use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
 use crate::util::grid::Grid;
 
@@ -38,36 +38,24 @@ impl Sae {
     }
 }
 
-impl Representation for Sae {
-    fn update(&mut self, e: &Event) {
+impl EventSink for Sae {
+    fn ingest(&mut self, e: &Event) {
         let i = self.res.index(e.x, e.y);
         self.t[i] = e.t.max(1);
         self.events += 1;
         self.writes += 1;
     }
 
-    /// Frame = timestamps min-max normalized (the Fig. 6a view).
-    fn frame(&self, _t_us: u64) -> Grid<f64> {
-        let max = *self.t.iter().max().unwrap_or(&1);
-        let min_written = self.t.iter().copied().filter(|&t| t > 0).min().unwrap_or(0);
-        let span = (max - min_written).max(1) as f64;
-        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
-            let t = self.t[y * self.res.width as usize + x];
-            if t == 0 {
-                0.0
-            } else {
-                (t - min_written) as f64 / span
-            }
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "SAE"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        // Unbounded in theory; a practical system stores ≥ n_T-bit stamps.
-        self.res.pixels() as u64 * 64
+    /// Batched inner loop: one bounds-free pass over the slice with the
+    /// stride hoisted; accounting is identical to repeated [`Self::ingest`].
+    fn ingest_batch(&mut self, events: &[Event]) {
+        let w = self.res.width as usize;
+        for e in events {
+            debug_assert!(self.res.contains(e.x, e.y));
+            self.t[e.y as usize * w + e.x as usize] = e.t.max(1);
+        }
+        self.events += events.len() as u64;
+        self.writes += events.len() as u64;
     }
 
     fn memory_writes(&self) -> u64 {
@@ -80,6 +68,31 @@ impl Representation for Sae {
 
     fn resolution(&self) -> Resolution {
         self.res
+    }
+}
+
+impl FrameSource for Sae {
+    /// Frame = timestamps min-max normalized (the Fig. 6a view).
+    fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let max = *self.t.iter().max().unwrap_or(&1);
+        let min_written = self.t.iter().copied().filter(|&t| t > 0).min().unwrap_or(0);
+        let span = (max - min_written).max(1) as f64;
+        let s = out.as_mut_slice();
+        for (o, &t) in s.iter_mut().zip(&self.t) {
+            *o = if t == 0 { 0.0 } else { (t - min_written) as f64 / span };
+        }
+    }
+}
+
+impl Representation for Sae {
+    fn name(&self) -> &'static str {
+        "SAE"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        // Unbounded in theory; a practical system stores ≥ n_T-bit stamps.
+        self.res.pixels() as u64 * 64
     }
 }
 
@@ -105,23 +118,13 @@ impl IdealTs {
     }
 }
 
-impl Representation for IdealTs {
-    fn update(&mut self, e: &Event) {
-        self.sae.update(e);
+impl EventSink for IdealTs {
+    fn ingest(&mut self, e: &Event) {
+        self.sae.ingest(e);
     }
 
-    fn frame(&self, t_us: u64) -> Grid<f64> {
-        Grid::from_fn(self.sae.res.width as usize, self.sae.res.height as usize, |x, y| {
-            self.value(x as u16, y as u16, t_us)
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "ideal-TS"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        self.sae.memory_bits()
+    fn ingest_batch(&mut self, events: &[Event]) {
+        self.sae.ingest_batch(events);
     }
 
     fn memory_writes(&self) -> u64 {
@@ -134,6 +137,32 @@ impl Representation for IdealTs {
 
     fn resolution(&self) -> Resolution {
         self.sae.res
+    }
+}
+
+impl FrameSource for IdealTs {
+    fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        let w = self.sae.res.width as usize;
+        out.ensure_shape(w, self.sae.res.height as usize, 0.0);
+        let tau = self.tau_us;
+        let s = out.as_mut_slice();
+        for (o, &tw) in s.iter_mut().zip(&self.sae.t) {
+            *o = if tw == 0 || t_us < tw {
+                0.0
+            } else {
+                (-((t_us - tw) as f64) / tau).exp()
+            };
+        }
+    }
+}
+
+impl Representation for IdealTs {
+    fn name(&self) -> &'static str {
+        "ideal-TS"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.sae.memory_bits()
     }
 }
 
@@ -183,8 +212,8 @@ impl QuantizedSae {
     }
 }
 
-impl Representation for QuantizedSae {
-    fn update(&mut self, e: &Event) {
+impl EventSink for QuantizedSae {
+    fn ingest(&mut self, e: &Event) {
         let i = self.res.index(e.x, e.y);
         self.t[i] = e.t & self.mask();
         self.written[i] = true;
@@ -192,18 +221,17 @@ impl Representation for QuantizedSae {
         self.writes += 1;
     }
 
-    fn frame(&self, t_us: u64) -> Grid<f64> {
-        Grid::from_fn(self.res.width as usize, self.res.height as usize, |x, y| {
-            self.value(x as u16, y as u16, t_us)
-        })
-    }
-
-    fn name(&self) -> &'static str {
-        "quantized-SAE"
-    }
-
-    fn memory_bits(&self) -> u64 {
-        self.res.pixels() as u64 * self.bits as u64
+    fn ingest_batch(&mut self, events: &[Event]) {
+        let w = self.res.width as usize;
+        let mask = self.mask();
+        for e in events {
+            debug_assert!(self.res.contains(e.x, e.y));
+            let i = e.y as usize * w + e.x as usize;
+            self.t[i] = e.t & mask;
+            self.written[i] = true;
+        }
+        self.events += events.len() as u64;
+        self.writes += events.len() as u64;
     }
 
     fn memory_writes(&self) -> u64 {
@@ -219,6 +247,34 @@ impl Representation for QuantizedSae {
     }
 }
 
+impl FrameSource for QuantizedSae {
+    fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let mask = self.mask();
+        let now = t_us & mask;
+        let tau = self.tau_us;
+        let s = out.as_mut_slice();
+        for i in 0..s.len() {
+            s[i] = if !self.written[i] {
+                0.0
+            } else {
+                let dt = now.wrapping_sub(self.t[i]) & mask;
+                (-(dt as f64) / tau).exp()
+            };
+        }
+    }
+}
+
+impl Representation for QuantizedSae {
+    fn name(&self) -> &'static str {
+        "quantized-SAE"
+    }
+
+    fn memory_bits(&self) -> u64 {
+        self.res.pixels() as u64 * self.bits as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,16 +287,30 @@ mod tests {
     #[test]
     fn sae_keeps_latest() {
         let mut s = Sae::new(Resolution::new(4, 4));
-        s.update(&ev(100, 1, 1));
-        s.update(&ev(500, 1, 1));
+        s.ingest(&ev(100, 1, 1));
+        s.ingest(&ev(500, 1, 1));
         assert_eq!(s.last(1, 1), 500);
         assert_eq!(s.writes_per_event(), 1.0);
     }
 
     #[test]
+    fn sae_batch_equals_single() {
+        let evs: Vec<Event> = (0..50).map(|k| ev(1 + k * 37, (k % 4) as u16, (k % 3) as u16)).collect();
+        let mut one = Sae::new(Resolution::new(4, 4));
+        let mut bat = Sae::new(Resolution::new(4, 4));
+        for e in &evs {
+            one.ingest(e);
+        }
+        bat.ingest_batch(&evs);
+        assert_eq!(one.frame(2_000), bat.frame(2_000));
+        assert_eq!(one.events_seen(), bat.events_seen());
+        assert_eq!(one.memory_writes(), bat.memory_writes());
+    }
+
+    #[test]
     fn ideal_ts_decays_exponentially() {
         let mut ts = IdealTs::new(Resolution::new(4, 4), 10_000.0);
-        ts.update(&ev(1_000, 2, 2));
+        ts.ingest(&ev(1_000, 2, 2));
         let v0 = ts.value(2, 2, 1_000);
         let v1 = ts.value(2, 2, 11_000); // one τ later
         assert!((v0 - 1.0).abs() < 1e-12);
@@ -250,11 +320,24 @@ mod tests {
     }
 
     #[test]
+    fn ideal_ts_frame_into_matches_point_values() {
+        let mut ts = IdealTs::new(Resolution::new(4, 4), 10_000.0);
+        ts.ingest_batch(&[ev(1_000, 2, 2), ev(3_000, 0, 1)]);
+        let mut buf = Grid::new(1, 1, 0.0);
+        ts.frame_into(&mut buf, 12_000);
+        for x in 0..4u16 {
+            for y in 0..4u16 {
+                assert_eq!(*buf.get(x as usize, y as usize), ts.value(x, y, 12_000));
+            }
+        }
+    }
+
+    #[test]
     fn quantized_sae_overflow_artifact() {
         // 10-bit µs counter wraps every 1 024 µs: a pixel written at t=1
         // and read at t=1025+1 looks *fresh* again.
         let mut q = QuantizedSae::new(Resolution::new(2, 2), 10, 200.0);
-        q.update(&ev(1, 0, 0));
+        q.ingest(&ev(1, 0, 0));
         let correct = q.value(0, 0, 900); // Δt=899: ~e^{-4.5}
         let aliased = q.value(0, 0, 1 + 1024 + 10); // wraps: Δt aliases to 10
         assert!(correct < 0.02);
@@ -264,7 +347,7 @@ mod tests {
     #[test]
     fn full_precision_has_no_alias() {
         let mut ts = IdealTs::new(Resolution::new(2, 2), 200.0);
-        ts.update(&ev(1, 0, 0));
+        ts.ingest(&ev(1, 0, 0));
         assert!(ts.value(0, 0, 1 + 1024 + 10) < 0.01);
     }
 

@@ -1,34 +1,50 @@
-//! Common interface + resource accounting for 2D event representations
-//! (paper Sec. II-B).
+//! The layered ingestion/readout API for 2D event representations
+//! (paper Sec. II-B), split along the two hardware data paths:
 //!
-//! Every representation ingests events one at a time and can render a
-//! frame at any query time. The accounting methods expose the paper's
-//! comparison axes: memory footprint (bits) and memory writes per event
-//! (SITS/TOS need 25–50× writes, which is why they are hostile to
-//! low-energy hardware).
+//! * [`EventSink`] — the *write* path. Events arrive in stream order,
+//!   preferably as sorted batches ([`EventSink::ingest_batch`]): the
+//!   batch is what lets a software representation touch shard-local
+//!   cells contiguously instead of paying per-event dispatch, mirroring
+//!   how the 3DS-ISC plane absorbs a burst of events in place. Simple
+//!   representations only implement the per-event [`EventSink::ingest`]
+//!   and inherit a correct batch loop.
+//! * [`FrameSource`] — the *read* path. [`FrameSource::frame_into`]
+//!   renders into a caller-owned [`Grid`], so a serving loop emits
+//!   frames with zero steady-state heap allocations; the allocating
+//!   [`FrameSource::frame`] wrapper stays for one-shot use.
+//! * [`Representation`] — the combined object-safe trait adding the
+//!   paper's comparison axes: memory footprint (bits) and memory writes
+//!   per event (SITS/TOS need 25–50× writes, which is why they are
+//!   hostile to low-energy hardware).
+//!
+//! Migration from the pre-batch API: `Representation::update(&Event)` is
+//! now [`EventSink::ingest`]; bulk callers should hand sorted slices to
+//! [`EventSink::ingest_batch`]; `frame(t)` still exists but hot paths
+//! should pass a reused buffer to [`FrameSource::frame_into`].
 
-use crate::events::{Event, Resolution};
+use crate::events::{Event, LabeledEvent, Resolution};
 use crate::util::grid::Grid;
 
-/// A 2D event-stream representation.
-pub trait Representation {
+/// Batch-first event ingestion (the write path of a representation).
+pub trait EventSink {
     /// Ingest one event (stream order).
-    fn update(&mut self, e: &Event);
+    fn ingest(&mut self, e: &Event);
 
-    /// Render the representation as a [0, 1] frame at query time `t_us`.
-    fn frame(&self, t_us: u64) -> Grid<f64>;
-
-    /// Human-readable name.
-    fn name(&self) -> &'static str;
-
-    /// Storage footprint in bits for the whole array.
-    fn memory_bits(&self) -> u64;
-
-    /// Total memory write operations performed so far (cells touched).
-    fn memory_writes(&self) -> u64;
+    /// Ingest a time-sorted batch. The default loops over [`Self::ingest`]
+    /// and is always semantically identical to repeated single-event
+    /// ingestion; implementations override it to hoist per-event work
+    /// (field loads, plane selection, bounds) out of the inner loop.
+    fn ingest_batch(&mut self, events: &[Event]) {
+        for e in events {
+            self.ingest(e);
+        }
+    }
 
     /// Events ingested so far.
     fn events_seen(&self) -> u64;
+
+    /// Total memory write operations performed so far (cells touched).
+    fn memory_writes(&self) -> u64;
 
     /// Memory writes per event — the paper's key hardware-cost metric.
     fn writes_per_event(&self) -> f64 {
@@ -44,7 +60,48 @@ pub trait Representation {
     /// accumulators (count/binary images) clear themselves here.
     fn reset_window(&mut self) {}
 
+    /// Sensor geometry this sink covers.
     fn resolution(&self) -> Resolution;
+}
+
+/// Feed a sorted labeled stream to a sink in bounded batches: raw events
+/// are staged `chunk` at a time into one reused buffer, so bulk callers
+/// get the batched inner loop without ever duplicating the full stream.
+pub fn ingest_labeled<S: EventSink + ?Sized>(sink: &mut S, events: &[LabeledEvent], chunk: usize) {
+    let chunk = chunk.max(1);
+    let mut staged: Vec<Event> = Vec::with_capacity(chunk.min(events.len()));
+    for part in events.chunks(chunk) {
+        staged.clear();
+        staged.extend(part.iter().map(|le| le.ev));
+        sink.ingest_batch(&staged);
+    }
+}
+
+/// Allocation-free frame readout (the read path of a representation).
+pub trait FrameSource: EventSink {
+    /// Render the representation as a [0, 1] frame at query time `t_us`
+    /// into `out`, reshaping it to [`EventSink::resolution`] if needed.
+    /// Every cell of `out` is overwritten; a warm (right-shaped) buffer
+    /// is never reallocated.
+    fn frame_into(&self, out: &mut Grid<f64>, t_us: u64);
+
+    /// Allocating convenience wrapper around [`Self::frame_into`].
+    fn frame(&self, t_us: u64) -> Grid<f64> {
+        let res = self.resolution();
+        let mut out = Grid::new(res.width as usize, res.height as usize, 0.0);
+        self.frame_into(&mut out, t_us);
+        out
+    }
+}
+
+/// A complete 2D event-stream representation: batch ingestion, zero-copy
+/// readout, plus the Sec. II-B resource-accounting axes.
+pub trait Representation: FrameSource {
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// Storage footprint in bits for the whole array.
+    fn memory_bits(&self) -> u64;
 }
 
 #[cfg(test)]
@@ -55,37 +112,94 @@ mod tests {
     struct Dummy {
         res: Resolution,
         n: u64,
+        batches: u64,
     }
-    impl Representation for Dummy {
-        fn update(&mut self, _e: &Event) {
+    impl EventSink for Dummy {
+        fn ingest(&mut self, _e: &Event) {
             self.n += 1;
         }
-        fn frame(&self, _t: u64) -> Grid<f64> {
-            Grid::new(1, 1, 0.0)
+        fn ingest_batch(&mut self, events: &[Event]) {
+            self.batches += 1;
+            for e in events {
+                self.ingest(e);
+            }
         }
+        fn events_seen(&self) -> u64 {
+            self.n
+        }
+        fn memory_writes(&self) -> u64 {
+            3 * self.n
+        }
+        fn resolution(&self) -> Resolution {
+            self.res
+        }
+    }
+    impl FrameSource for Dummy {
+        fn frame_into(&self, out: &mut Grid<f64>, _t: u64) {
+            out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+            out.fill(self.n as f64);
+        }
+    }
+    impl Representation for Dummy {
         fn name(&self) -> &'static str {
             "dummy"
         }
         fn memory_bits(&self) -> u64 {
             8
         }
-        fn memory_writes(&self) -> u64 {
-            3 * self.n
-        }
-        fn events_seen(&self) -> u64 {
-            self.n
-        }
-        fn resolution(&self) -> Resolution {
-            self.res
-        }
+    }
+
+    fn ev(t: u64) -> Event {
+        Event::new(t, 0, 0, Polarity::On)
     }
 
     #[test]
     fn writes_per_event_ratio() {
-        let mut d = Dummy { res: Resolution::new(2, 2), n: 0 };
+        let mut d = Dummy { res: Resolution::new(2, 2), n: 0, batches: 0 };
         assert_eq!(d.writes_per_event(), 0.0);
-        d.update(&Event::new(1, 0, 0, Polarity::On));
-        d.update(&Event::new(2, 0, 0, Polarity::On));
+        d.ingest(&ev(1));
+        d.ingest(&ev(2));
         assert_eq!(d.writes_per_event(), 3.0);
+    }
+
+    #[test]
+    fn batch_ingest_counts_every_event() {
+        let mut d = Dummy { res: Resolution::new(2, 2), n: 0, batches: 0 };
+        d.ingest_batch(&[ev(1), ev(2), ev(3)]);
+        assert_eq!(d.events_seen(), 3);
+        assert_eq!(d.batches, 1);
+    }
+
+    #[test]
+    fn frame_wrapper_matches_frame_into() {
+        let mut d = Dummy { res: Resolution::new(3, 2), n: 0, batches: 0 };
+        d.ingest(&ev(1));
+        let g = d.frame(10);
+        let mut buf = Grid::new(1, 1, 0.0);
+        d.frame_into(&mut buf, 10);
+        assert_eq!(g, buf);
+        assert_eq!(g.width(), 3);
+        assert_eq!(g.height(), 2);
+    }
+
+    #[test]
+    fn ingest_labeled_chunks_without_losing_events() {
+        let mut d = Dummy { res: Resolution::new(2, 2), n: 0, batches: 0 };
+        let les: Vec<LabeledEvent> =
+            (0..10).map(|k| LabeledEvent { ev: ev(k), is_signal: true }).collect();
+        ingest_labeled(&mut d, &les, 3);
+        assert_eq!(d.events_seen(), 10);
+        assert_eq!(d.batches, 4); // 3+3+3+1
+    }
+
+    #[test]
+    fn object_safe_boxed_usage() {
+        let mut b: Box<dyn Representation> =
+            Box::new(Dummy { res: Resolution::new(2, 2), n: 0, batches: 0 });
+        b.ingest_batch(&[ev(1), ev(2)]);
+        assert_eq!(b.events_seen(), 2);
+        assert_eq!(b.name(), "dummy");
+        let f = b.frame(5);
+        assert!(f.as_slice().iter().all(|&v| v == 2.0));
     }
 }

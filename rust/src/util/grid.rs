@@ -83,6 +83,20 @@ impl<T: Clone> Grid<T> {
         }
     }
 
+    /// Reshape in place to (width, height), reallocating only on a shape
+    /// change. The allocation-free `frame_into` readout path calls this
+    /// first, so a warm buffer is never reallocated.
+    pub fn ensure_shape(&mut self, width: usize, height: usize, fill: T) {
+        if self.width != width || self.height != height {
+            *self = Grid::new(width, height, fill);
+        }
+    }
+
+    /// Overwrite every cell with `fill` (no reallocation).
+    pub fn fill(&mut self, fill: T) {
+        self.data.fill(fill);
+    }
+
     /// Raw row-major slice.
     pub fn as_slice(&self) -> &[T] {
         &self.data
@@ -155,6 +169,27 @@ mod tests {
         let g = Grid::new(2, 2, 0.5f64);
         let s = g.to_pgm();
         assert!(s.starts_with("P2\n2 2\n255\n"));
+    }
+
+    #[test]
+    fn ensure_shape_keeps_buffer_when_unchanged() {
+        let mut g = Grid::new(4, 3, 1.0f64);
+        let ptr = g.as_slice().as_ptr();
+        g.ensure_shape(4, 3, 0.0);
+        assert_eq!(g.as_slice().as_ptr(), ptr, "same shape must not reallocate");
+        assert_eq!(*g.get(0, 0), 1.0, "same shape must not clear");
+        g.ensure_shape(2, 2, 0.5);
+        assert_eq!(g.width(), 2);
+        assert_eq!(*g.get(1, 1), 0.5);
+    }
+
+    #[test]
+    fn fill_overwrites_all() {
+        let mut g = Grid::from_fn(3, 3, |x, y| (x + y) as f64);
+        let ptr = g.as_slice().as_ptr();
+        g.fill(0.0);
+        assert!(g.as_slice().iter().all(|&v| v == 0.0));
+        assert_eq!(g.as_slice().as_ptr(), ptr);
     }
 
     #[test]

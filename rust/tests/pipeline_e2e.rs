@@ -13,7 +13,7 @@ fn pipeline_conserves_events_without_stcf() {
     let res = Resolution::new(64, 48);
     let scene = EdgeScene::new(90.0, 3);
     let events = convert(&scene, res, DvsParams::default(), 0.3);
-    let run = run_pipeline(&events, res, 300_000, &PipelineConfig::default());
+    let run = run_pipeline(events.iter().copied(), res, 300_000, &PipelineConfig::default());
     assert_eq!(run.stats.events_in, events.len() as u64);
     assert_eq!(run.stats.events_written, events.len() as u64);
     assert_eq!(run.stats.events_dropped_by_stcf, 0);
@@ -34,7 +34,7 @@ fn stcf_pipeline_prefers_signal() {
         stcf: Some(StcfParams::default()),
         ..PipelineConfig::default()
     };
-    let run = run_pipeline(&noisy, res, 500_000, &cfg);
+    let run = run_pipeline(noisy.iter().copied(), res, 500_000, &cfg);
     assert!(run.stats.events_dropped_by_stcf > 0);
     // The kept set should be signal-enriched relative to the input.
     let in_signal_frac =
@@ -50,7 +50,7 @@ fn frames_are_time_ordered_and_bounded() {
     let res = Resolution::new(32, 32);
     let scene = EdgeScene::new(120.0, 9);
     let events = convert(&scene, res, DvsParams::default(), 0.25);
-    let run = run_pipeline(&events, res, 250_000, &PipelineConfig::default());
+    let run = run_pipeline(events.iter().copied(), res, 250_000, &PipelineConfig::default());
     let mut prev = 0;
     for (t, f) in &run.frames {
         assert!(*t > prev);
@@ -70,7 +70,7 @@ fn shard_count_does_not_change_results() {
             router: RouterConfig { n_shards: shards, ..RouterConfig::default() },
             ..PipelineConfig::default()
         };
-        let run = run_pipeline(&events, res, 200_000, &cfg);
+        let run = run_pipeline(events.iter().copied(), res, 200_000, &cfg);
         frames.push(run.frames);
     }
     // Same write pattern ⇒ same set of written pixels in the final frame

@@ -6,7 +6,7 @@ use tsisc::events::aer;
 use tsisc::events::event::{merge_sorted, Event, LabeledEvent, Polarity, Resolution};
 use tsisc::isc::{IscArray, IscConfig};
 use tsisc::metrics::{roc, Scored};
-use tsisc::tsurface::{IdealTs, Representation, Sae};
+use tsisc::tsurface::{EventSink, FrameSource, IdealTs, Sae};
 use tsisc::util::check::{check, Gen};
 use tsisc::util::grid::Grid;
 use tsisc::util::image::resize_bilinear;
@@ -61,7 +61,7 @@ fn prop_sae_equals_replay_max() {
         let evs = random_events(g, res, 100);
         let mut sae = Sae::new(res);
         for le in &evs {
-            sae.update(&le.ev);
+            sae.ingest(&le.ev);
         }
         for x in 0..8u16 {
             for y in 0..8u16 {
@@ -84,7 +84,7 @@ fn prop_ideal_ts_bounded_and_monotone_between_writes() {
         let evs = random_events(g, res, 50);
         let mut ts = IdealTs::new(res, g.f64(1_000.0, 100_000.0));
         for le in &evs {
-            ts.update(&le.ev);
+            ts.ingest(&le.ev);
         }
         let t_end = evs.last().map(|e| e.ev.t).unwrap_or(0) + g.u64(0, 50_000);
         let f = ts.frame(t_end);
@@ -194,9 +194,9 @@ fn prop_event_order_within_pixel_preserved_by_representation() {
         let y = g.u64(0, 3) as u16;
         let t1 = g.u64(1, 1_000_000);
         let t2 = t1 + g.u64(1, 1_000_000);
-        ts.update(&Event::new(t1, x, y, Polarity::On));
+        ts.ingest(&Event::new(t1, x, y, Polarity::On));
         let v1 = ts.value(x, y, t2);
-        ts.update(&Event::new(t2, x, y, Polarity::On));
+        ts.ingest(&Event::new(t2, x, y, Polarity::On));
         let v2 = ts.value(x, y, t2);
         assert!(v2 >= v1);
     });

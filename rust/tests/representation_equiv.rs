@@ -1,0 +1,165 @@
+//! Cross-representation contracts of the batch-first API redesign:
+//!
+//! * `ingest_batch` ≡ repeated `ingest` for every representation
+//!   (frames, event counts and write accounting all identical);
+//! * `frame_into` ≡ `frame` and performs zero heap allocations on a warm
+//!   buffer (asserted via buffer-pointer stability);
+//! * the ISC analog TS agrees with the ideal exponential TS within the
+//!   paper's quantization/mismatch tolerance under the `frame_into` path.
+
+use tsisc::events::{Event, Polarity, Resolution};
+use tsisc::isc::IscConfig;
+use tsisc::tsurface::*;
+use tsisc::util::grid::Grid;
+use tsisc::util::rng::Pcg64;
+
+fn stream(res: Resolution, n: usize, seed: u64) -> Vec<Event> {
+    let mut rng = Pcg64::new(seed);
+    let mut t = 0u64;
+    (0..n)
+        .map(|_| {
+            t += 1 + rng.below(900);
+            Event::new(
+                t,
+                rng.below(res.width as u64) as u16,
+                rng.below(res.height as u64) as u16,
+                if rng.bool(0.5) { Polarity::On } else { Polarity::Off },
+            )
+        })
+        .collect()
+}
+
+/// Every representation under test, ×2 instances (single vs batched).
+fn all_reps(res: Resolution) -> Vec<[Box<dyn Representation>; 2]> {
+    fn pair(f: impl Fn() -> Box<dyn Representation>) -> [Box<dyn Representation>; 2] {
+        [f(), f()]
+    }
+    vec![
+        pair(|| Box::new(Sae::new(res))),
+        pair(|| Box::new(IdealTs::new(res, 24_000.0))),
+        pair(|| Box::new(QuantizedSae::new(res, 16, 24_000.0))),
+        pair(|| Box::new(EventCount::new(res, 4))),
+        pair(|| Box::new(Ebbi::new(res))),
+        pair(|| Box::new(Sits::new(res, 3))),
+        pair(|| Box::new(Tos::new(res, 3))),
+        pair(|| Box::new(Tore::new(res, 3, 100.0, 1e6))),
+        pair(|| Box::new(IscTs::with_defaults(res))),
+    ]
+}
+
+#[test]
+fn ingest_batch_equals_repeated_ingest_for_every_representation() {
+    let res = Resolution::new(24, 20);
+    let events = stream(res, 600, 11);
+    let t_end = events.last().unwrap().t + 5_000;
+    for [mut single, mut batched] in all_reps(res) {
+        for e in &events {
+            single.ingest(e);
+        }
+        // Uneven chunking exercises batch boundaries.
+        for chunk in events.chunks(97) {
+            batched.ingest_batch(chunk);
+        }
+        let name = single.name();
+        assert_eq!(single.events_seen(), batched.events_seen(), "{name}: events_seen");
+        assert_eq!(single.memory_writes(), batched.memory_writes(), "{name}: memory_writes");
+        assert_eq!(single.frame(t_end), batched.frame(t_end), "{name}: frame mismatch");
+    }
+}
+
+#[test]
+fn frame_into_matches_frame_and_never_reallocates_warm_buffer() {
+    let res = Resolution::new(24, 20);
+    let events = stream(res, 400, 23);
+    let t_end = events.last().unwrap().t;
+    for [mut rep, _] in all_reps(res) {
+        rep.ingest_batch(&events);
+        let mut buf = Grid::new(1, 1, 0.0);
+        rep.frame_into(&mut buf, t_end); // warmup: single reshape
+        let ptr = buf.as_slice().as_ptr();
+        for k in 1..=5u64 {
+            let t = t_end + k * 7_000;
+            rep.frame_into(&mut buf, t);
+            assert_eq!(
+                buf.as_slice().as_ptr(),
+                ptr,
+                "{}: warm frame_into reallocated",
+                rep.name()
+            );
+            assert_eq!(buf, rep.frame(t), "{}: frame_into != frame", rep.name());
+        }
+    }
+}
+
+#[test]
+fn isc_ts_tracks_ideal_ts_within_tolerance_via_frame_into() {
+    // The paper's parity claim (Sec. IV): the analog TS reproduces the
+    // ideal exponential TS up to the decay-LUT quantization (≤3.4 mV ≈
+    // 0.5 % of V_dd) plus the <2 % cell-mismatch CV. Rank order must
+    // match and written-pixel values must correlate tightly.
+    let res = Resolution::new(16, 16);
+    let mut hw = IscTs::with_defaults(res);
+    let mut ideal = IdealTs::new(res, 24_000.0);
+    let events = stream(res, 256, 5);
+    hw.ingest_batch(&events);
+    ideal.ingest_batch(&events);
+    let t_end = events.last().unwrap().t + 1_000;
+
+    let mut fh = Grid::new(1, 1, 0.0);
+    let mut fi = Grid::new(1, 1, 0.0);
+    hw.frame_into(&mut fh, t_end);
+    ideal.frame_into(&mut fi, t_end);
+
+    let argmax = |g: &Grid<f64>| {
+        g.as_slice()
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0
+    };
+    assert_eq!(argmax(&fh), argmax(&fi), "brightest pixel rank disagrees");
+
+    let (hs, is): (Vec<f64>, Vec<f64>) = fh
+        .as_slice()
+        .iter()
+        .zip(fi.as_slice())
+        .filter(|(a, b)| **a > 0.0 || **b > 0.0)
+        .map(|(a, b)| (*a, *b))
+        .unzip();
+    assert!(!hs.is_empty());
+    let (_, _, r2) = tsisc::util::stats::linreg(&hs, &is);
+    assert!(r2 > 0.8, "hardware vs ideal TS r² = {r2}");
+
+    // Fresh writes (small Δt, where the curves are pinned at V_reset)
+    // must agree within the quantization + mismatch band.
+    let last = events.last().unwrap();
+    let vh = *fh.get(last.x as usize, last.y as usize);
+    let vi = *fi.get(last.x as usize, last.y as usize);
+    assert!((vh - vi).abs() < 0.05, "fresh-pixel disagreement: hw {vh} vs ideal {vi}");
+}
+
+#[test]
+fn ideal_array_matches_ideal_ts_most_closely() {
+    // Without mismatch, only the decay-shape difference and the readout
+    // LUT quantization remain: agreement must tighten.
+    let res = Resolution::new(12, 12);
+    let events = stream(res, 200, 9);
+    let t_end = events.last().unwrap().t + 1_000;
+    let cfg = IscConfig { mismatch: None, ..IscConfig::default() };
+    let mut hw = IscTs::new(res, cfg);
+    let mut ideal = IdealTs::new(res, 24_000.0);
+    hw.ingest_batch(&events);
+    ideal.ingest_batch(&events);
+    let fh = hw.frame(t_end);
+    let fi = ideal.frame(t_end);
+    let (hs, is): (Vec<f64>, Vec<f64>) = fh
+        .as_slice()
+        .iter()
+        .zip(fi.as_slice())
+        .filter(|(a, b)| **a > 0.0 || **b > 0.0)
+        .map(|(a, b)| (*a, *b))
+        .unzip();
+    let (_, _, r2) = tsisc::util::stats::linreg(&hs, &is);
+    assert!(r2 > 0.85, "ideal-array vs ideal TS r² = {r2}");
+}
