@@ -5,7 +5,7 @@
 RUST_DIR := rust
 PYTHON := python3
 
-.PHONY: ci build test bench artifacts clean
+.PHONY: ci build test bench lint artifacts clean
 
 ci:
 	./ci.sh
@@ -15,6 +15,12 @@ build:
 
 test:
 	cd $(RUST_DIR) && cargo test -q
+
+# Style gate: formatting + clippy with warnings denied (mirrored by the
+# `lint` job in .github/workflows/ci.yml and invoked from ci.sh).
+lint:
+	cd $(RUST_DIR) && cargo fmt --check
+	cd $(RUST_DIR) && cargo clippy --all-targets -- -D warnings
 
 # Bench binaries use the in-repo harness (util::bench); bench_tsurface
 # additionally dumps BENCH_tsurface.json next to the manifest.

@@ -33,6 +33,13 @@ echo "== cargo build --release =="
 echo "== cargo test -q =="
 (cd rust && cargo test -q)
 
+echo "== lint (cargo fmt --check + clippy -D warnings) =="
+if cargo fmt --version >/dev/null 2>&1 && cargo clippy --version >/dev/null 2>&1; then
+    make lint
+else
+    echo "ci.sh: rustfmt/clippy components unavailable — skipping lint." >&2
+fi
+
 echo "== cargo bench (quick) =="
 (cd rust && cargo bench -- --quick)
 

@@ -1,7 +1,9 @@
 //! STCF throughput: decisions/s on ideal vs ISC backends — the per-event
-//! hot path of the denoise application (Fig. 10 workloads).
+//! hot path of the denoise application (Fig. 10 workloads) — plus the
+//! isolated support-scan microbenchmark comparing the row-sliced patch
+//! walk against the naive per-(dx,dy) reference.
 
-use tsisc::denoise::{run_stcf, StcfBackend, StcfParams};
+use tsisc::denoise::{run_stcf, support_count, support_count_naive, StcfBackend, StcfParams};
 use tsisc::events::noise::contaminate;
 use tsisc::events::scene::EdgeScene;
 use tsisc::events::v2e::{convert, DvsParams};
@@ -38,4 +40,50 @@ fn main() {
         std::hint::black_box(run_stcf(&mut b, &events, &prm));
     });
     println!("{}", r.report());
+
+    // --- Support-scan microbenchmark: row-sliced vs naive ----------------
+    // Pre-populated backends, scan-only (no ingestion in the loop), so
+    // the patch-walk cost is isolated.
+    header("STCF support scan: row-sliced vs naive reference");
+    let queries: Vec<_> = events.iter().step_by(7).map(|le| le.ev).collect();
+    let t_scan = events.last().unwrap().ev.t;
+    for r_patch in [1u16, 3] {
+        let prm = StcfParams { radius: r_patch, ..StcfParams::default() };
+        let mut ideal = StcfBackend::ideal(res);
+        let mut isc = StcfBackend::isc(res, IscConfig::default(), prm.tau_tw_us);
+        for le in &events {
+            ideal.ingest(&le.ev, &prm);
+            isc.ingest(&le.ev, &prm);
+        }
+        for (name, backend) in [("ideal", &ideal), ("ISC", &isc)] {
+            let rr = bench(
+                &format!("support scan row-sliced {name} r={r_patch}"),
+                queries.len() as f64,
+                80,
+                400,
+                || {
+                    for q in &queries {
+                        let mut e = *q;
+                        e.t = t_scan;
+                        std::hint::black_box(support_count(backend, &e, &prm));
+                    }
+                },
+            );
+            println!("{}", rr.report());
+            let rn = bench(
+                &format!("support scan naive      {name} r={r_patch}"),
+                queries.len() as f64,
+                80,
+                400,
+                || {
+                    for q in &queries {
+                        let mut e = *q;
+                        e.t = t_scan;
+                        std::hint::black_box(support_count_naive(backend, &e, &prm));
+                    }
+                },
+            );
+            println!("{}", rn.report());
+        }
+    }
 }

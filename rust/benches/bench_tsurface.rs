@@ -3,28 +3,45 @@
 //!
 //! Also sweeps the ingest batch size (1 / 64 / 4096) on the SAE-class and
 //! ISC representations to quantify the batch-first API win, benchmarks
-//! the allocation-free `frame_into` readout, and dumps the measurements
-//! to `BENCH_tsurface.json` so CI can track the perf trajectory.
+//! the frame-readout paths — including the dense vs. active-set sweep at
+//! 1 % / 10 % / 100 % pixel activity on 346×260 and 640×480 — and dumps
+//! the measurements to `BENCH_tsurface.json` (readout entries carry a
+//! `pixels_per_sec` field) so CI can track the perf trajectory.
 
 use tsisc::events::{Event, Polarity, Resolution};
+use tsisc::isc::{IscArray, IscConfig};
 use tsisc::tsurface::*;
 use tsisc::util::bench::{bench, header, BenchResult};
 use tsisc::util::grid::Grid;
 use tsisc::util::rng::Pcg64;
 
+/// One JSON line: every bench reports `meps` (items/s ÷ 1e6); frame
+/// readouts, whose items are pixels, additionally report `pixels_per_sec`.
+struct Entry {
+    result: BenchResult,
+    is_readout: bool,
+}
+
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
-fn dump_json(results: &[BenchResult], path: &str) {
+fn dump_json(entries: &[Entry], path: &str) {
     let mut s = String::from("{\n  \"benchmarks\": [\n");
-    for (i, r) in results.iter().enumerate() {
+    for (i, e) in entries.iter().enumerate() {
+        let r = &e.result;
+        let extra = if e.is_readout {
+            format!(", \"pixels_per_sec\": {:.1}", r.throughput_per_sec())
+        } else {
+            String::new()
+        };
         s.push_str(&format!(
-            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"meps\": {:.4}}}{}\n",
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"meps\": {:.4}{}}}{}\n",
             json_escape(&r.name),
             r.mean_ns,
             r.throughput_per_sec() / 1e6,
-            if i + 1 < results.len() { "," } else { "" }
+            extra,
+            if i + 1 < entries.len() { "," } else { "" }
         ));
     }
     s.push_str("  ]\n}\n");
@@ -50,7 +67,7 @@ fn main() {
             )
         })
         .collect();
-    let mut results: Vec<BenchResult> = Vec::new();
+    let mut entries: Vec<Entry> = Vec::new();
 
     // --- Per-event ingest across every representation -------------------
     {
@@ -61,7 +78,7 @@ fn main() {
                 }
             });
             println!("{}  (writes/event {:.2})", r.report(), rep.writes_per_event());
-            results.push(r);
+            entries.push(Entry { result: r, is_readout: false });
         };
         run_rep("SAE", Box::new(Sae::new(res)));
         run_rep("ideal TS", Box::new(IdealTs::new(res, 24_000.0)));
@@ -90,7 +107,7 @@ fn main() {
                 },
             );
             println!("{}", r.report());
-            results.push(r);
+            entries.push(Entry { result: r, is_readout: false });
         };
         run_batched("SAE", Box::new(Sae::new(res)));
         run_batched("3DS-ISC", Box::new(IscTs::with_defaults(res)));
@@ -111,8 +128,67 @@ fn main() {
             std::hint::black_box(buf.as_slice());
         });
         println!("{}", r.report());
-        results.push(r);
+        entries.push(Entry { result: r, is_readout: true });
     }
 
-    dump_json(&results, "BENCH_tsurface.json");
+    // --- Frame-readout sweep: dense vs. active-set ------------------------
+    // Activity = fraction of distinct pixels holding a live (in-horizon)
+    // write at readout time. The active path must win big at low activity
+    // and stay competitive at 100 %.
+    println!();
+    header("frame readout: dense vs active-set");
+    for (label, w, h) in [("346x260", 346u16, 260u16), ("640x480", 640, 480)] {
+        let sweep_res = Resolution::new(w, h);
+        for &activity in &[0.01f64, 0.10, 1.00] {
+            let mut arr = IscArray::new(sweep_res, IscConfig::default());
+            let n_active = ((sweep_res.pixels() as f64 * activity).round() as usize).max(1);
+            let stride = (sweep_res.pixels() / n_active).max(1);
+            let writes: Vec<Event> = (0..n_active)
+                .map(|k| {
+                    let i = (k * stride) % sweep_res.pixels();
+                    Event::new(
+                        1_000 + (k % 512) as u64,
+                        (i % w as usize) as u16,
+                        (i / w as usize) as u16,
+                        Polarity::On,
+                    )
+                })
+                .collect();
+            arr.write_batch(&writes);
+            let t_q = 40_000u64; // well inside the ~102 ms memory horizon
+            let act_pct = (activity * 100.0).round() as u32;
+
+            let mut buf = Grid::new(1, 1, 0.0f64);
+            arr.frame_merged_into(&mut buf, t_q); // warmup reshape
+            let r = bench(
+                &format!("ISC readout active {label} act={act_pct}%"),
+                sweep_res.pixels() as f64,
+                80,
+                400,
+                || {
+                    arr.frame_merged_into(&mut buf, t_q);
+                    std::hint::black_box(buf.as_slice());
+                },
+            );
+            println!("{}", r.report());
+            entries.push(Entry { result: r, is_readout: true });
+
+            let mut dbuf = Grid::new(1, 1, 0.0f64);
+            arr.frame_merged_dense_into(&mut dbuf, t_q);
+            let rd = bench(
+                &format!("ISC readout dense  {label} act={act_pct}%"),
+                sweep_res.pixels() as f64,
+                80,
+                400,
+                || {
+                    arr.frame_merged_dense_into(&mut dbuf, t_q);
+                    std::hint::black_box(dbuf.as_slice());
+                },
+            );
+            println!("{}", rd.report());
+            entries.push(Entry { result: rd, is_readout: true });
+        }
+    }
+
+    dump_json(&entries, "BENCH_tsurface.json");
 }

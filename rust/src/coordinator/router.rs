@@ -16,6 +16,10 @@
 //! snapshots recycle their band buffers: each `Snapshot` request carries
 //! a buffer the shard fills and returns, so a steady-state serving loop
 //! performs zero per-frame allocations (see [`Router::frame_into`]).
+//! Because each shard renders its band via the array's activity-aware
+//! `frame_merged_into`, snapshot cost scales with the band's *active*
+//! pixels, not its area — the per-band inheritance of the O(active)
+//! readout (see [`crate::isc`] module docs).
 //! std::thread + sync_channel (tokio is not available offline; bounded
 //! mpsc gives the same backpressure semantics deterministically).
 

@@ -4,4 +4,6 @@
 pub mod baf;
 pub mod stcf;
 
-pub use stcf::{run as run_stcf, support_count, StcfBackend, StcfParams, StcfRun};
+pub use stcf::{
+    run as run_stcf, support_count, support_count_naive, StcfBackend, StcfParams, StcfRun,
+};

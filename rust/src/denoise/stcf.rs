@@ -8,6 +8,10 @@
 //! does not. The hardware realization replaces the timestamp comparison
 //! `t − T(u) ≤ τ_tw` with a single analog comparator `V_mem ≥ V_tw`
 //! (Fig. 10b) — the entire point of the self-normalizing analog TS.
+//!
+//! The support query is row-sliced on both backends: one contiguous
+//! slice walk per patch row (see [`support_count`]), with the compiled
+//! [`Comparator`] keeping the per-cell test a pure integer-age compare.
 
 use crate::circuit::montecarlo::FittedBank;
 use crate::events::{Event, LabeledEvent, Polarity, Resolution};
@@ -16,6 +20,7 @@ use crate::isc::{IscArray, IscConfig};
 use crate::metrics::Scored;
 use crate::tsurface::sae::Sae;
 use crate::tsurface::EventSink;
+use crate::util::grid::patch_bounds;
 
 /// STCF parameters.
 #[derive(Clone, Copy, Debug)]
@@ -117,7 +122,50 @@ impl StcfBackend {
 }
 
 /// Support count for event `e` (center optional via `count_center`).
+///
+/// Row-sliced scan: the (2r+1)² patch is clamped to the sensor once,
+/// then each patch row is counted over one contiguous memory slice
+/// ([`Sae::count_recent_in_row`] / [`IscArray::count_recent_in_row`]) —
+/// no per-element 2D index math or bounds checks in the inner loop. The
+/// center pixel is included by the row scan and subtracted afterwards
+/// when `count_center` is off. Produces exactly the same counts as
+/// [`support_count_naive`].
 pub fn support_count(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 {
+    let res = backend.res();
+    if !res.contains(e.x, e.y) {
+        // Stray off-sensor event: keep the reference scan's clamped
+        // count instead of slicing with inverted bounds.
+        return support_count_naive(backend, e, prm);
+    }
+    let r = prm.radius as usize;
+    let (x0, x1) = patch_bounds(e.x as usize, r, res.width as usize);
+    let (y0, y1) = patch_bounds(e.y as usize, r, res.height as usize);
+    let (x0, x1) = (x0 as u16, x1 as u16);
+    let mut n = 0u32;
+    match backend {
+        StcfBackend::Ideal { sae } => {
+            let plane = if prm.polarity_sensitive { e.p.index() } else { 0 };
+            let s = &sae[plane];
+            for y in y0..=y1 {
+                n += s.count_recent_in_row(y as u16, x0, x1, e.t, prm.tau_tw_us);
+            }
+        }
+        StcfBackend::Isc { array, cmp, .. } => {
+            for y in y0..=y1 {
+                n += array.count_recent_in_row(cmp, e.p, y as u16, x0, x1, e.t);
+            }
+        }
+    }
+    if !prm.count_center && backend.supported(e.x, e.y, e.p, e.t, prm) {
+        n -= 1;
+    }
+    n
+}
+
+/// Reference implementation: per-(dx, dy) point reads over the patch.
+/// Kept for the equivalence tests and the support-scan benchmark; hot
+/// paths use the row-sliced [`support_count`].
+pub fn support_count_naive(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 {
     let res = backend.res();
     let r = prm.radius as i64;
     let (ex, ey) = (e.x as i64, e.y as i64);
@@ -183,7 +231,8 @@ mod tests {
         let prm = StcfParams::default();
         // Three neighbours fire, then the test event.
         let stream =
-            vec![le(100, 5, 5, true), le(200, 6, 5, true), le(300, 5, 6, true), le(400, 6, 6, true)];
+            vec![le(100, 5, 5, true), le(200, 6, 5, true), le(300, 5, 6, true),
+                 le(400, 6, 6, true)];
         let run = run(&mut b, &stream, &prm);
         // Last event sees 3 supporting neighbours.
         assert_eq!(run.scored[3].score, 3.0);
@@ -265,6 +314,48 @@ mod tests {
         let r = run(&mut b, &stream, &prm);
         // The ON event's only neighbour is OFF → zero support.
         assert_eq!(r.scored[1].score, 0.0);
+    }
+
+    #[test]
+    fn row_sliced_scan_equals_naive_reference() {
+        let res = Resolution::new(16, 12);
+        let evs: Vec<LabeledEvent> = (0..120u64)
+            .map(|k| {
+                LabeledEvent {
+                    ev: Event::new(
+                        100 + k * 300,
+                        (k * 7 % 16) as u16,
+                        (k * 5 % 12) as u16,
+                        if k % 2 == 0 { Polarity::On } else { Polarity::Off },
+                    ),
+                    is_signal: true,
+                }
+            })
+            .collect();
+        for polarity_sensitive in [false, true] {
+            for count_center in [false, true] {
+                let prm = StcfParams {
+                    radius: 3,
+                    polarity_sensitive,
+                    count_center,
+                    ..StcfParams::default()
+                };
+                let mut b = if polarity_sensitive {
+                    StcfBackend::Ideal { sae: [Sae::new(res), Sae::new(res)] }
+                } else {
+                    StcfBackend::ideal(res)
+                };
+                for le in &evs {
+                    assert_eq!(
+                        support_count(&b, &le.ev, &prm),
+                        support_count_naive(&b, &le.ev, &prm),
+                        "ps={polarity_sensitive} cc={count_center} e={:?}",
+                        le.ev
+                    );
+                    b.ingest(&le.ev, &prm);
+                }
+            }
+        }
     }
 
     #[test]

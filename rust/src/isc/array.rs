@@ -6,14 +6,25 @@
 //! then decays along that cell's double-exponential (sampled from the
 //! Monte-Carlo fitted bank, Sec. IV-C). Because the decay is a *passive*
 //! physical process, the simulator never touches idle pixels: state is
-//! (last-write time, per-pixel decay parameters) and V_mem is evaluated
-//! lazily at read/compare time — O(1) per event, O(patch) per STCF query,
-//! O(H·W) per frame readout. This mirrors the actual hardware's energy
-//! profile and is also what makes the software hot path fast.
+//! (last-write time, per-pixel decay parameters) plus per-row active-pixel
+//! lists, and V_mem is evaluated lazily at read/compare time — O(1) per
+//! event, O(patch rows) per STCF query, O(active) per frame readout. This
+//! mirrors the actual hardware's energy profile and is also what makes
+//! the software hot path fast.
+//!
+//! Readout goes through the shared quantized decay LUT
+//! ([`crate::util::decay::DecayLut`], 50 µs bins; the horizon is derived
+//! from the decay bank as the age at which the slowest cell falls below
+//! 1 % of V_dd — ≈102 ms for the 20 fF nominal cell, longer for larger
+//! C_mem); cells older than the horizon read exactly 0 and are lazily
+//! dropped from the active lists on the write path
+//! ([`crate::util::active`]).
 
 use crate::circuit::montecarlo::{FittedBank, MismatchParams};
 use crate::circuit::params::VDD;
 use crate::events::{Event, Polarity, Resolution};
+use crate::util::active::ActiveSet;
+use crate::util::decay::DecayLut;
 use crate::util::fit::DoubleExp;
 use crate::util::grid::Grid;
 use crate::util::rng::Pcg64;
@@ -45,12 +56,31 @@ impl Default for IscConfig {
     }
 }
 
-/// One storage plane: per-pixel write times + decay parameters.
+/// One storage plane: per-pixel write times + decay parameters + the
+/// per-row lists of pixels currently inside the memory horizon.
 struct Plane {
     /// Last write time in µs; 0 = never written.
     t_write: Vec<u64>,
     /// Index into the parameter bank per pixel.
     param_idx: Vec<u32>,
+    /// Pixels written within the memory horizon (lazily pruned).
+    active: ActiveSet,
+}
+
+impl Plane {
+    /// Record one write: refresh the stamp and (re-)list the pixel.
+    #[inline]
+    fn record(&mut self, i: usize, x: u16, y: u16, t_us: u64) {
+        self.t_write[i] = t_us.max(1);
+        self.active.mark(x, y);
+    }
+
+    /// Amortized expiry scan (write path only): accrue `writes` to the
+    /// scan budget and drop pixels whose age at the stream clock exceeds
+    /// the readout horizon once the budget covers a full scan.
+    fn maybe_prune(&mut self, writes: usize, clock_us: u64, horizon_us: u64) {
+        self.active.maybe_prune_expired(writes, &self.t_write, clock_us, horizon_us);
+    }
 }
 
 /// The ISC analog array.
@@ -60,18 +90,24 @@ pub struct IscArray {
     planes: Vec<Plane>,
     /// Distinct decay parameter tuples (shared bank — cache friendly).
     bank: Vec<DoubleExp>,
-    /// Quantized-decay lookup table for the frame-readout hot path:
-    /// `lut[bank_idx * LUT_N + (dt / LUT_STEP_US)]` = eval(dt)/V_dd.
-    /// Quantization step 50 µs ⇒ ≤3.4 mV error (≪ the mismatch CV);
-    /// point reads (`read`/`compare`) keep the exact closed form.
-    frame_lut: Vec<f32>,
+    /// Quantized-decay readout kernel: one row per bank entry, 50 µs
+    /// steps over the bank-derived memory horizon ⇒ ≤3.4 mV error (≪ the
+    /// mismatch CV); point reads (`read`/`compare`) keep the exact
+    /// closed form.
+    lut: DecayLut,
+    /// Latest event time ingested (the prune clock).
+    clock_us: u64,
     writes: u64,
 }
 
-/// Decay LUT resolution: 50 µs steps over a 102.4 ms horizon (past the
-/// memory window, where V ≈ 1 % of V_dd).
-const LUT_STEP_US: u64 = 50;
-const LUT_N: usize = 2048;
+/// Fraction of V_dd below which a cell counts as fully decayed: the
+/// readout horizon is the age at which the *slowest* bank cell crosses
+/// this floor, so frames cliff to exactly 0 only where V_mem is already
+/// sub-1 % (≈102 ms for the 20 fF nominal cell).
+const LUT_FLOOR_FRAC: f64 = 0.01;
+/// Horizon cap for cells that never cross the floor (e.g. a fit with a
+/// large offset): 10 s of decay span.
+const LUT_SPAN_CAP_S: f64 = 10.0;
 
 /// A compiled fixed-threshold comparator: per-bank-entry maximum age for
 /// which V_mem(Δt) ≥ V_tw still holds.
@@ -93,17 +129,23 @@ impl IscArray {
             .map(|_| Plane {
                 t_write: vec![0u64; n],
                 param_idx: (0..n).map(|_| rng.below(bank.len() as u64) as u32).collect(),
+                active: ActiveSet::new(res.width as usize, res.height as usize),
             })
             .collect();
-        // Precompute the frame-readout decay tables (one row per bank entry).
-        let mut frame_lut = Vec::with_capacity(bank.len() * LUT_N);
-        for f in &bank {
-            for k in 0..LUT_N {
-                let dt = (k as u64 * LUT_STEP_US) as f64 * 1e-6;
-                frame_lut.push((f.eval(dt) / VDD).clamp(0.0, 1.0) as f32);
-            }
-        }
-        Self { res, cfg, planes, bank, frame_lut, writes: 0 }
+        // Precompute the frame-readout decay tables (one row per bank
+        // entry) over the bank-derived memory horizon.
+        let span_s = bank
+            .iter()
+            .map(|f| {
+                f.time_to_reach(LUT_FLOOR_FRAC * VDD, LUT_SPAN_CAP_S).unwrap_or(LUT_SPAN_CAP_S)
+            })
+            .fold(0.0f64, f64::max)
+            .max(0.01);
+        let (step, bins) = DecayLut::layout_for_span(span_s * 1e6);
+        let lut = DecayLut::build(bank.len(), bins, step, |row, dt_us| {
+            (bank[row].eval(dt_us as f64 * 1e-6) / VDD).clamp(0.0, 1.0)
+        });
+        Self { res, cfg, planes, bank, lut, clock_us: 0, writes: 0 }
     }
 
     /// Ideal array: identical nominal cells (the "full-precision" software
@@ -124,6 +166,17 @@ impl IscArray {
         self.writes
     }
 
+    /// Age beyond which a cell's frame value reads exactly 0 (and the
+    /// cell is eligible for lazy removal from the active lists).
+    pub fn memory_horizon_us(&self) -> u64 {
+        self.lut.horizon_us()
+    }
+
+    /// Pixels currently listed as active on plane `p` (diagnostics).
+    pub fn active_pixels(&self, p: Polarity) -> usize {
+        self.planes[self.plane_for(p)].active.len()
+    }
+
     #[inline]
     fn plane_for(&self, p: Polarity) -> usize {
         if self.cfg.polarity_sensitive {
@@ -133,49 +186,59 @@ impl IscArray {
         }
     }
 
-    /// Event write: V_mem ← V_reset via the per-pixel Cu-Cu bond. O(1);
-    /// no other cell is touched (no half-select in the 3D organization).
+    /// Event write: V_mem ← V_reset via the per-pixel Cu-Cu bond. O(1)
+    /// amortized; no other cell is touched (no half-select in the 3D
+    /// organization) beyond the occasional active-list expiry scan.
     #[inline]
     pub fn write(&mut self, e: &Event) {
-        debug_assert!(self.res.contains(e.x, e.y));
-        let plane = self.plane_for(e.p);
         let i = self.res.index(e.x, e.y);
-        self.planes[plane].t_write[i] = e.t.max(1);
+        let pi = self.plane_for(e.p);
+        self.clock_us = self.clock_us.max(e.t);
+        let (clock, horizon) = (self.clock_us, self.lut.horizon_us());
+        let plane = &mut self.planes[pi];
+        plane.record(i, e.x, e.y, e.t);
+        plane.maybe_prune(1, clock, horizon);
         self.writes += 1;
     }
 
     /// Batched event write — semantically identical to calling
-    /// [`IscArray::write`] per event, but with plane selection and stride
-    /// hoisted out of the inner loop. This is the software analogue of the
-    /// plane absorbing an event burst in place, and the hot path of the
-    /// sharded router.
+    /// [`IscArray::write`] per event, but with plane selection hoisted
+    /// out of the inner loop and one expiry check per batch. This is the
+    /// software analogue of the plane absorbing an event burst in place,
+    /// and the hot path of the sharded router.
     pub fn write_batch(&mut self, events: &[Event]) {
-        let w = self.res.width as usize;
+        let res = self.res;
         if self.cfg.polarity_sensitive {
             let [off, on] = match &mut self.planes[..] {
                 [a, b] => [a, b],
                 _ => unreachable!("polarity-sensitive array has two planes"),
             };
             for e in events {
-                debug_assert!(self.res.contains(e.x, e.y));
-                let i = e.y as usize * w + e.x as usize;
+                let i = res.index(e.x, e.y);
                 match e.p {
-                    Polarity::Off => off.t_write[i] = e.t.max(1),
-                    Polarity::On => on.t_write[i] = e.t.max(1),
+                    Polarity::Off => off.record(i, e.x, e.y, e.t),
+                    Polarity::On => on.record(i, e.x, e.y, e.t),
                 }
             }
         } else {
-            let t_write = &mut self.planes[0].t_write;
+            let plane = &mut self.planes[0];
             for e in events {
-                debug_assert!(self.res.contains(e.x, e.y));
-                t_write[e.y as usize * w + e.x as usize] = e.t.max(1);
+                plane.record(res.index(e.x, e.y), e.x, e.y, e.t);
             }
+        }
+        if let Some(t_max) = events.iter().map(|e| e.t).max() {
+            self.clock_us = self.clock_us.max(t_max);
+        }
+        let (clock, horizon) = (self.clock_us, self.lut.horizon_us());
+        for plane in &mut self.planes {
+            plane.maybe_prune(events.len(), clock, horizon);
         }
         self.writes += events.len() as u64;
     }
 
     /// Analog readout of one cell at time `t_us`: the decayed V_mem in
     /// volts (0 if the cell was never written or `t` precedes the write).
+    /// Exact closed form — the reference the LUT frame paths approximate.
     #[inline]
     pub fn read(&self, x: u16, y: u16, p: Polarity, t_us: u64) -> f64 {
         let plane = &self.planes[self.plane_for(p)];
@@ -221,6 +284,32 @@ impl IscArray {
         tw != 0 && t_us >= tw && t_us - tw <= cmp.dt_max_us[plane.param_idx[i] as usize]
     }
 
+    /// Row-sliced comparator scan: how many cells in `x0..=x1` of row `y`
+    /// pass the compiled comparator at `t_us`? One contiguous walk over
+    /// the stamp and parameter slices — the STCF support query issues one
+    /// call per patch row instead of (2r+1)² indexed point reads.
+    pub fn count_recent_in_row(
+        &self,
+        cmp: &Comparator,
+        p: Polarity,
+        y: u16,
+        x0: u16,
+        x1: u16,
+        t_us: u64,
+    ) -> u32 {
+        debug_assert!(x0 <= x1 && self.res.contains(x1, y));
+        let plane = &self.planes[self.plane_for(p)];
+        let start = self.res.index(x0, y);
+        let end = self.res.index(x1, y);
+        let mut n = 0u32;
+        for (&tw, &pi) in plane.t_write[start..=end].iter().zip(&plane.param_idx[start..=end]) {
+            if tw != 0 && t_us >= tw && t_us - tw <= cmp.dt_max_us[pi as usize] {
+                n += 1;
+            }
+        }
+        n
+    }
+
     /// Last write time of a cell (µs; 0 = never) — the SAE view.
     #[inline]
     pub fn last_write(&self, x: u16, y: u16, p: Polarity) -> u64 {
@@ -228,9 +317,10 @@ impl IscArray {
     }
 
     /// Full-frame readout at `t_us`, normalized to [0, 1] by V_dd — the
-    /// time-surface the CV pipeline consumes (Fig. 6b). Hot path: uses the
-    /// quantized-decay LUT (§Perf iteration 1) instead of 2×exp per pixel;
-    /// quantization error ≤3.4 mV, below the cell mismatch CV.
+    /// time-surface the CV pipeline consumes (Fig. 6b). Hot path: the
+    /// buffer is zero-filled once (vectorized), then only active pixels
+    /// are evaluated through the quantized-decay LUT — O(active), no
+    /// transcendentals (§Perf iteration 3).
     pub fn frame(&self, p: Polarity, t_us: u64) -> Grid<f64> {
         let mut g = Grid::new(self.res.width as usize, self.res.height as usize, 0.0f64);
         self.frame_into(p, &mut g, t_us);
@@ -240,18 +330,42 @@ impl IscArray {
     /// Zero-copy variant of [`IscArray::frame`]: renders into a
     /// caller-owned buffer (reshaped on first use, never reallocated on a
     /// warm buffer). This is the serving loop's per-window readout path.
+    ///
+    /// Exactness contract: identical to [`IscArray::frame_dense_into`]
+    /// for every `t_us` ≥ the latest ingested event time (see
+    /// [`crate::util::active`] for why past-facing queries may differ).
     pub fn frame_into(&self, p: Polarity, out: &mut Grid<f64>, t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        out.fill(0.0);
+        self.accumulate_active(self.plane_for(p), out, t_us, false);
+    }
+
+    /// Dense reference readout: full H·W scan through the same LUT.
+    pub fn frame_dense_into(&self, p: Polarity, out: &mut Grid<f64>, t_us: u64) {
         out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
         let plane = &self.planes[self.plane_for(p)];
         let s = out.as_mut_slice();
         for i in 0..s.len() {
-            let tw = plane.t_write[i];
-            s[i] = if tw != 0 && t_us >= tw {
-                let bin = (((t_us - tw) / LUT_STEP_US) as usize).min(LUT_N - 1);
-                self.frame_lut[plane.param_idx[i] as usize * LUT_N + bin] as f64
-            } else {
-                0.0
-            };
+            s[i] = self.lut.value(plane.param_idx[i] as usize, plane.t_write[i], t_us);
+        }
+    }
+
+    /// Evaluate one plane's active pixels into `out`; with `merge_max`
+    /// the value only lands where it exceeds what is already there.
+    fn accumulate_active(&self, plane_idx: usize, out: &mut Grid<f64>, t_us: u64, merge_max: bool) {
+        let plane = &self.planes[plane_idx];
+        let w = self.res.width as usize;
+        for y in 0..plane.active.height() {
+            let row_t = &plane.t_write[y * w..(y + 1) * w];
+            let row_pi = &plane.param_idx[y * w..(y + 1) * w];
+            let row_out = out.row_mut(y);
+            for &x in plane.active.row(y) {
+                let xi = x as usize;
+                let v = self.lut.value(row_pi[xi] as usize, row_t[xi], t_us);
+                if !merge_max || v > row_out[xi] {
+                    row_out[xi] = v;
+                }
+            }
         }
     }
 
@@ -264,23 +378,38 @@ impl IscArray {
     }
 
     /// Zero-copy variant of [`IscArray::frame_merged`]: the OFF plane is
-    /// max-merged directly into `out` without a scratch grid.
+    /// max-merged directly into `out` without a scratch grid. O(active)
+    /// over both planes.
     pub fn frame_merged_into(&self, out: &mut Grid<f64>, t_us: u64) {
         self.frame_into(Polarity::On, out, t_us);
+        if self.cfg.polarity_sensitive {
+            self.accumulate_active(Polarity::Off.index(), out, t_us, true);
+        }
+    }
+
+    /// Dense reference for [`IscArray::frame_merged_into`].
+    pub fn frame_merged_dense_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        self.frame_dense_into(Polarity::On, out, t_us);
         if !self.cfg.polarity_sensitive {
             return;
         }
         let plane = &self.planes[Polarity::Off.index()];
         let s = out.as_mut_slice();
         for i in 0..s.len() {
-            let tw = plane.t_write[i];
-            if tw != 0 && t_us >= tw {
-                let bin = (((t_us - tw) / LUT_STEP_US) as usize).min(LUT_N - 1);
-                let v = self.frame_lut[plane.param_idx[i] as usize * LUT_N + bin] as f64;
-                if v > s[i] {
-                    s[i] = v;
-                }
+            let v = self.lut.value(plane.param_idx[i] as usize, plane.t_write[i], t_us);
+            if v > s[i] {
+                s[i] = v;
             }
+        }
+    }
+
+    /// Force an immediate expiry scan of the active lists (normally they
+    /// are pruned lazily on the write path once the accrued write budget
+    /// covers a scan). Useful before a long idle period in a serving loop.
+    pub fn prune_active(&mut self) {
+        let (clock, horizon) = (self.clock_us, self.lut.horizon_us());
+        for plane in &mut self.planes {
+            plane.active.prune_expired(&plane.t_write, clock, horizon);
         }
     }
 
@@ -288,7 +417,9 @@ impl IscArray {
     pub fn reset(&mut self) {
         for p in &mut self.planes {
             p.t_write.iter_mut().for_each(|t| *t = 0);
+            p.active.clear();
         }
+        self.clock_us = 0;
         self.writes = 0;
     }
 }
@@ -366,6 +497,94 @@ mod tests {
         // The more recent write must be brighter (TS ordering).
         assert!(f.get(8, 4) > f.get(3, 4));
         assert_eq!(*f.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn active_frame_matches_dense_reference() {
+        for polarity_sensitive in [false, true] {
+            let cfg = IscConfig { polarity_sensitive, ..IscConfig::default() };
+            let mut a = IscArray::new(Resolution::new(16, 12), cfg);
+            let events: Vec<Event> = (0..150u64)
+                .map(|k| {
+                    Event::new(
+                        1 + k * 400,
+                        (k % 16) as u16,
+                        (k % 12) as u16,
+                        if k % 3 == 0 { Polarity::Off } else { Polarity::On },
+                    )
+                })
+                .collect();
+            a.write_batch(&events);
+            let t = events.last().unwrap().t + 2_000;
+            let mut active = Grid::new(1, 1, 0.0);
+            let mut dense = Grid::new(1, 1, 0.0);
+            a.frame_merged_into(&mut active, t);
+            a.frame_merged_dense_into(&mut dense, t);
+            assert_eq!(active, dense);
+        }
+    }
+
+    #[test]
+    fn cells_expire_past_memory_horizon() {
+        // Ideal (nominal) array: the horizon is this single cell's own
+        // 1 %-of-V_dd crossing, so just inside it the frame value is
+        // still ≈1 % and at the horizon it reads exactly 0.
+        let mut a = IscArray::ideal(Resolution::new(16, 12));
+        a.write(&Event::new(1_000, 3, 3, Polarity::On));
+        let horizon = a.memory_horizon_us();
+        // dt = horizon − 1 lands in the last LUT bin whatever the step.
+        assert!(*a.frame(Polarity::On, 1_000 + horizon - 1).get(3, 3) > 0.0);
+        assert_eq!(*a.frame(Polarity::On, 1_000 + horizon).get(3, 3), 0.0);
+    }
+
+    #[test]
+    fn explicit_prune_drops_expired_cells_and_keeps_readout_exact() {
+        let res = Resolution::new(64, 64);
+        let mut a = IscArray::new(res, IscConfig::default());
+        let horizon = a.memory_horizon_us();
+        for k in 0..600u64 {
+            a.write(&Event::new(1 + k, (k % 64) as u16, (k / 64) as u16, Polarity::On));
+        }
+        assert_eq!(a.active_pixels(Polarity::On), 600);
+        // One fresh write far past the horizon, then force the scan:
+        // every stale cell is dropped, the fresh one stays.
+        a.write(&Event::new(horizon * 3, 0, 0, Polarity::On));
+        a.prune_active();
+        assert_eq!(a.active_pixels(Polarity::On), 1);
+        // Readout stays exact after pruning.
+        let t = horizon * 3 + 100;
+        let mut active = Grid::new(1, 1, 0.0);
+        let mut dense = Grid::new(1, 1, 0.0);
+        a.frame_merged_into(&mut active, t);
+        a.frame_merged_dense_into(&mut dense, t);
+        assert_eq!(active, dense);
+    }
+
+    #[test]
+    fn budget_prune_triggers_on_write_path() {
+        // 256 distinct stale pixels (rows 0..4), then a long burst of
+        // rewrites confined to an 8×8 region far past the horizon: once
+        // the write budget covers a scan, the expired 256 must drop out
+        // without any explicit prune call.
+        let res = Resolution::new(64, 64);
+        let mut a = IscArray::new(res, IscConfig::default());
+        let horizon = a.memory_horizon_us();
+        for k in 0..256u64 {
+            a.write(&Event::new(1 + k, (k % 64) as u16, (k / 64) as u16, Polarity::On));
+        }
+        for k in 0..600u64 {
+            a.write(&Event::new(
+                horizon * 2 + k,
+                (k % 8) as u16,
+                (32 + (k / 8) % 8) as u16,
+                Polarity::On,
+            ));
+        }
+        assert_eq!(
+            a.active_pixels(Polarity::On),
+            64,
+            "expired cells must be pruned by the write-budget scan"
+        );
     }
 
     #[test]
@@ -463,11 +682,28 @@ mod tests {
     }
 
     #[test]
+    fn count_recent_in_row_matches_compare_with() {
+        let mut a = small();
+        a.write_batch(&[
+            Event::new(1_000, 2, 5, Polarity::On),
+            Event::new(2_000, 4, 5, Polarity::On),
+            Event::new(90_000, 9, 5, Polarity::On),
+        ]);
+        let cmp = a.comparator(0.4);
+        let t = 25_000u64;
+        let by_row = a.count_recent_in_row(&cmp, Polarity::On, 5, 0, 15, t);
+        let by_point: u32 =
+            (0..16u16).filter(|&x| a.compare_with(&cmp, x, 5, Polarity::On, t)).count() as u32;
+        assert_eq!(by_row, by_point);
+    }
+
+    #[test]
     fn reset_clears_state() {
         let mut a = small();
         a.write(&Event::new(1_000, 2, 3, Polarity::On));
         a.reset();
         assert_eq!(a.read(2, 3, Polarity::On, 2_000), 0.0);
         assert_eq!(a.write_count(), 0);
+        assert_eq!(a.active_pixels(Polarity::On), 0);
     }
 }

@@ -1,6 +1,22 @@
 //! The in-sensor-computing analog array simulator: the software twin of the
 //! paper's 3D-stacked 6T-1C eDRAM plane, driven by the Monte-Carlo fitted
 //! cell bank from [`crate::circuit`].
+//!
+//! ## Per-path complexity (activity-aware readout, PR 2)
+//!
+//! A = cells written within the bank-derived memory horizon (the age at
+//! which the slowest cell decays below 1 % of V_dd, ≈102 ms nominal),
+//! H·W = resolution, r = STCF patch radius.
+//!
+//! | Path | Before | After |
+//! |---|---|---|
+//! | event write (`write`/`write_batch`) | O(1) | O(1) amortized (mark + lazy expiry) |
+//! | frame readout (`frame_into`/`frame_merged_into`) | O(H·W) LUT scan | zero-fill + O(A) LUT reads |
+//! | STCF support query (`count_recent_in_row`) | (2r+1)² indexed reads | 2r+1 row slices, integer-age test |
+//! | exact point read (`read`/`compare`) | closed form | unchanged (reference) |
+//!
+//! This is the software mirror of the paper's passive-decay energy
+//! model: idle cells cost nothing at write time *and* readout time.
 
 pub mod array;
 

@@ -34,6 +34,13 @@
 //! heterogeneous comparison tables. Bulk producers should batch:
 //! `Router::route_batch`, `IscArray::write_batch` and the coordinator
 //! pipeline all move events in batches end to end.
+//!
+//! Readout is activity-aware and transcendental-free as of the
+//! activity-aware readout change: decaying surfaces evaluate through the
+//! shared quantized [`util::decay::DecayLut`] and `frame_into` touches
+//! only pixels listed in the per-row [`util::active::ActiveSet`] —
+//! O(active) per frame instead of O(H·W). See the [`tsurface`] and
+//! [`isc`] module docs for the per-path complexity tables.
 
 pub mod arch;
 pub mod circuit;

@@ -3,9 +3,13 @@
 //!
 //! SITS and TOS touch an entire neighbourhood per event (≈25–50 memory
 //! writes/event — the paper's Sec. II-B argument for why they are hostile
-//! to low-energy hardware). TORE keeps a per-pixel FIFO of the K most
+//! to low-energy hardware). Their neighbourhood updates run over
+//! [`Grid::row_mut`] slices (one contiguous slice per patch row, no
+//! per-element 2D index math). TORE keeps a per-pixel FIFO of the K most
 //! recent timestamps per polarity (≥96 b/pixel — the paper's Sec. IV-D
-//! area argument: ≥16× the ISC cell).
+//! area argument: ≥16× the ISC cell); its clipped-log kernel is read
+//! through the shared quantized [`DecayLut`], so frame readout performs
+//! no `ln()` per FIFO entry.
 //!
 //! The neighbourhood updates are order-dependent, so these sinks keep the
 //! provided per-event batch loop ([`EventSink::ingest_batch`] default) —
@@ -13,7 +17,8 @@
 
 use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
-use crate::util::grid::Grid;
+use crate::util::decay::{DecayLut, MAX_BINS};
+use crate::util::grid::{patch_bounds, Grid};
 
 /// Speed-Invariant Time Surface: on each event, neighbours with values
 /// above the incoming cell's are decremented and the cell is set to the
@@ -21,7 +26,7 @@ use crate::util::grid::Grid;
 pub struct Sits {
     res: Resolution,
     r: usize,
-    vals: Vec<u16>,
+    vals: Grid<u16>,
     events: u64,
     writes: u64,
 }
@@ -29,7 +34,13 @@ pub struct Sits {
 impl Sits {
     pub fn new(res: Resolution, r: usize) -> Self {
         assert!(r >= 1);
-        Self { res, r, vals: vec![0; res.pixels()], events: 0, writes: 0 }
+        Self {
+            res,
+            r,
+            vals: Grid::new(res.width as usize, res.height as usize, 0),
+            events: 0,
+            writes: 0,
+        }
     }
 
     pub fn max_val(&self) -> u16 {
@@ -37,31 +48,28 @@ impl Sits {
     }
 
     pub fn value(&self, x: u16, y: u16) -> u16 {
-        self.vals[self.res.index(x, y)]
+        *self.vals.get(x as usize, y as usize)
     }
 }
 
 impl EventSink for Sits {
     fn ingest(&mut self, e: &Event) {
-        let (w, h) = (self.res.width as i64, self.res.height as i64);
-        let (ex, ey) = (e.x as i64, e.y as i64);
-        let center = self.res.index(e.x, e.y);
-        let v_center = self.vals[center];
-        let r = self.r as i64;
-        for dy in -r..=r {
-            for dx in -r..=r {
-                let (x, y) = (ex + dx, ey + dy);
-                if x < 0 || y < 0 || x >= w || y >= h || (dx == 0 && dy == 0) {
-                    continue;
-                }
-                let i = (y * w + x) as usize;
-                if self.vals[i] > v_center {
-                    self.vals[i] -= 1;
+        let (cx, cy) = (e.x as usize, e.y as usize);
+        let (x0, x1) = patch_bounds(cx, self.r, self.res.width as usize);
+        let (y0, y1) = patch_bounds(cy, self.r, self.res.height as usize);
+        let v_center = *self.vals.get(cx, cy);
+        for y in y0..=y1 {
+            // Row-sliced decrement; the center cell never satisfies
+            // `> v_center` against itself, so no skip is needed.
+            for v in &mut self.vals.row_mut(y)[x0..=x1] {
+                if *v > v_center {
+                    *v -= 1;
                     self.writes += 1;
                 }
             }
         }
-        self.vals[center] = self.max_val();
+        let m = self.max_val();
+        self.vals.set(cx, cy, m);
         self.writes += 1;
         self.events += 1;
     }
@@ -84,7 +92,7 @@ impl FrameSource for Sits {
         out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
         let m = self.max_val() as f64;
         let s = out.as_mut_slice();
-        for (o, &v) in s.iter_mut().zip(&self.vals) {
+        for (o, &v) in s.iter_mut().zip(self.vals.as_slice()) {
             *o = v as f64 / m;
         }
     }
@@ -106,41 +114,56 @@ impl Representation for Sits {
 pub struct Tos {
     res: Resolution,
     r: usize,
-    vals: Vec<u8>,
+    vals: Grid<u8>,
     events: u64,
     writes: u64,
 }
 
 impl Tos {
     pub fn new(res: Resolution, r: usize) -> Self {
-        Self { res, r, vals: vec![0; res.pixels()], events: 0, writes: 0 }
+        Self {
+            res,
+            r,
+            vals: Grid::new(res.width as usize, res.height as usize, 0),
+            events: 0,
+            writes: 0,
+        }
     }
 
     pub fn value(&self, x: u16, y: u16) -> u8 {
-        self.vals[self.res.index(x, y)]
+        *self.vals.get(x as usize, y as usize)
     }
 }
 
 impl EventSink for Tos {
     fn ingest(&mut self, e: &Event) {
-        let (w, h) = (self.res.width as i64, self.res.height as i64);
-        let (ex, ey) = (e.x as i64, e.y as i64);
-        let r = self.r as i64;
-        for dy in -r..=r {
-            for dx in -r..=r {
-                let (x, y) = (ex + dx, ey + dy);
-                if x < 0 || y < 0 || x >= w || y >= h || (dx == 0 && dy == 0) {
-                    continue;
-                }
-                let i = (y * w + x) as usize;
-                if self.vals[i] > 0 {
-                    self.vals[i] -= 1;
-                    self.writes += 1;
+        let (cx, cy) = (e.x as usize, e.y as usize);
+        let (x0, x1) = patch_bounds(cx, self.r, self.res.width as usize);
+        let (y0, y1) = patch_bounds(cy, self.r, self.res.height as usize);
+        let mut writes = 0u64;
+        let mut dec = |cells: &mut [u8]| {
+            for v in cells {
+                if *v > 0 {
+                    *v -= 1;
+                    writes += 1;
                 }
             }
+        };
+        for y in y0..=y1 {
+            let row = &mut self.vals.row_mut(y)[x0..=x1];
+            if y == cy {
+                // Split around the center: the event's own cell is set,
+                // not decayed.
+                let c = cx - x0;
+                let (left, rest) = row.split_at_mut(c);
+                dec(left);
+                dec(&mut rest[1..]);
+            } else {
+                dec(row);
+            }
         }
-        let c = self.res.index(e.x, e.y);
-        self.vals[c] = 255;
+        self.writes += writes;
+        self.vals.set(cx, cy, 255);
         self.writes += 1;
         self.events += 1;
     }
@@ -162,7 +185,7 @@ impl FrameSource for Tos {
     fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
         out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
         let s = out.as_mut_slice();
-        for (o, &v) in s.iter_mut().zip(&self.vals) {
+        for (o, &v) in s.iter_mut().zip(self.vals.as_slice()) {
             *o = v as f64 / 255.0;
         }
     }
@@ -181,6 +204,13 @@ impl Representation for Tos {
 /// Time-Ordered Recent Events: per-pixel, per-polarity FIFO of the K most
 /// recent event times. Frame value maps each FIFO entry's age through a
 /// clipped log kernel and averages (TORE volume collapsed to one channel).
+///
+/// The kernel `1 − clamp(ln(Δt/t_min)/ln(t_max/t_min))` is precomputed
+/// into a [`DecayLut`] at construction: readout is one table load per
+/// FIFO entry, with the step tied to t_min so the per-entry error stays
+/// ≤ `ln(1 + step/t_min)/ln(t_max/t_min)`, and ages past the table
+/// horizon (≥ t_max) read exactly 0 — which is also what the clamp
+/// yields there.
 pub struct Tore {
     res: Resolution,
     k: usize,
@@ -189,6 +219,7 @@ pub struct Tore {
     /// Log-kernel clip range (µs).
     pub t_min_us: f64,
     pub t_max_us: f64,
+    lut: DecayLut,
     events: u64,
     writes: u64,
 }
@@ -196,25 +227,39 @@ pub struct Tore {
 impl Tore {
     pub fn new(res: Resolution, k: usize, t_min_us: f64, t_max_us: f64) -> Self {
         assert!(k >= 1 && t_max_us > t_min_us && t_min_us > 0.0);
+        // The log kernel is steepest at t_min, so the LUT step tracks
+        // t_min/8: per-entry error ≤ ln(1 + step/t_min)/ln(t_max/t_min)
+        // (≈1.3 % at the 100 µs/1 s defaults). The table is capped at
+        // 8·MAX_BINS entries — the step widens past that, and the
+        // horizon always covers t_max (no early cliff to 0).
+        let step = ((t_min_us / 8.0).ceil() as u64)
+            .max((t_max_us / (8 * MAX_BINS) as f64).ceil() as u64)
+            .max(1);
+        let bins = ((t_max_us / step as f64).ceil() as usize).max(64);
+        let denom = (t_max_us / t_min_us).ln();
+        let lut = DecayLut::build(1, bins, step, |_, dt_us| {
+            let dt = (dt_us as f64).max(t_min_us);
+            1.0 - ((dt / t_min_us).ln() / denom).clamp(0.0, 1.0)
+        });
         Self {
             res,
             k,
             fifo: vec![[Vec::new(), Vec::new()]; res.pixels()],
             t_min_us,
             t_max_us,
+            lut,
             events: 0,
             writes: 0,
         }
     }
 
     /// Collapsed TORE value at a pixel: mean over both polarities' FIFOs of
-    /// 1 − clamp(log(Δt/t_min)/log(t_max/t_min)).
+    /// 1 − clamp(log(Δt/t_min)/log(t_max/t_min)), via the quantized LUT.
     pub fn value(&self, x: u16, y: u16, t_us: u64) -> f64 {
         self.cell_value(&self.fifo[self.res.index(x, y)], t_us)
     }
 
     fn cell_value(&self, cell: &[Vec<u64>; 2], t_us: u64) -> f64 {
-        let denom = (self.t_max_us / self.t_min_us).ln();
         let mut sum = 0.0;
         let mut n = 0usize;
         for plane in cell {
@@ -222,9 +267,7 @@ impl Tore {
                 if tw == 0 || t_us < tw {
                     continue;
                 }
-                let dt = ((t_us - tw) as f64).max(self.t_min_us);
-                let v = 1.0 - ((dt / self.t_min_us).ln() / denom).clamp(0.0, 1.0);
-                sum += v;
+                sum += self.lut.eval(0, t_us - tw);
                 n += 1;
             }
         }
@@ -348,6 +391,19 @@ mod tests {
     }
 
     #[test]
+    fn tos_corner_event_clamps_patch() {
+        // Border events must decay only the in-bounds part of the patch
+        // and never touch the center via the decay pass.
+        let mut t = Tos::new(Resolution::new(8, 8), 3);
+        t.ingest(&ev(1, 0, 0));
+        assert_eq!(t.value(0, 0), 255);
+        t.ingest(&ev(2, 1, 1));
+        assert_eq!(t.value(1, 1), 255);
+        assert_eq!(t.value(0, 0), 254); // decayed once by the neighbour
+        assert_eq!(t.memory_writes(), 3); // 2 sets + 1 decrement
+    }
+
+    #[test]
     fn tore_fifo_depth_bounded() {
         let mut t = Tore::new(Resolution::new(4, 4), 3, 100.0, 1e6);
         for k in 0..10u64 {
@@ -358,6 +414,31 @@ mod tests {
         let v_later = t.value(1, 1, 2_000_000);
         assert!(v_now > v_later);
         assert!((0.0..=1.0).contains(&v_now));
+    }
+
+    #[test]
+    fn tore_lut_tracks_exact_log_kernel() {
+        let t = Tore::new(Resolution::new(2, 2), 1, 100.0, 1e6);
+        let denom = (t.t_max_us / t.t_min_us).ln();
+        let step = t.lut.step_us();
+        let kernel =
+            |dt: f64| 1.0 - ((dt.max(t.t_min_us) / t.t_min_us).ln() / denom).clamp(0.0, 1.0);
+        // The step tracks t_min (≤ t_min/8 rounded up), keeping the
+        // kernel's steep region finely sampled.
+        assert!(step as f64 <= t.t_min_us / 8.0 + 1.0, "step={step}");
+        // Bin edges hold the closed form up to f32 storage rounding.
+        for bin in [0u64, 1, 7, 800, 5_000] {
+            let dt = bin * step;
+            assert!((t.lut.eval(0, dt) - kernel(dt as f64)).abs() < 1e-6, "dt={dt}");
+        }
+        // Between edges the floor-binned error stays within the
+        // documented ln(1 + step/t_min)/ln(t_max/t_min) bound.
+        let bound = (1.0 + step as f64 / t.t_min_us).ln() / denom + 1e-6;
+        for dt in [109u64, 149, 433, 25_037, 999_999] {
+            assert!((t.lut.eval(0, dt) - kernel(dt as f64)).abs() <= bound, "dt={dt}");
+        }
+        // Far past t_max the LUT horizon reads 0, matching the clamp.
+        assert_eq!(t.lut.eval(0, 5_000_000), 0.0);
     }
 
     #[test]

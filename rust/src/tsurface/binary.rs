@@ -47,11 +47,9 @@ impl EventSink for EventCount {
     }
 
     fn ingest_batch(&mut self, events: &[Event]) {
-        let w = self.res.width as usize;
         let max = self.max_count();
         for e in events {
-            debug_assert!(self.res.contains(e.x, e.y));
-            let i = e.y as usize * w + e.x as usize;
+            let i = self.res.index(e.x, e.y);
             if self.counts[i] < max {
                 self.counts[i] += 1;
                 self.writes += 1;
@@ -131,10 +129,8 @@ impl EventSink for Ebbi {
     }
 
     fn ingest_batch(&mut self, events: &[Event]) {
-        let w = self.res.width as usize;
         for e in events {
-            debug_assert!(self.res.contains(e.x, e.y));
-            let i = e.y as usize * w + e.x as usize;
+            let i = self.res.index(e.x, e.y);
             if !self.bits[i] {
                 self.bits[i] = true;
                 self.writes += 1;

@@ -1,7 +1,8 @@
 //! The ISC-backed time-surface: the [`Representation`] view of the analog
 //! array, so the hardware TS drops into every pipeline slot where the
 //! ideal/digital surfaces go (classification, reconstruction, denoising
-//! comparisons all use this adapter).
+//! comparisons all use this adapter). Frame readout inherits the array's
+//! activity-aware O(active) path (see [`crate::isc`] module docs).
 
 use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};

@@ -21,6 +21,26 @@
 //! [`EventSink::ingest`] / [`EventSink::ingest_batch`]; `frame(t)` is
 //! unchanged for one-shot reads, hot loops should switch to
 //! [`FrameSource::frame_into`] with a reused buffer.
+//!
+//! ## Per-path complexity (activity-aware readout, PR 2)
+//!
+//! With A = pixels live inside the K·τ memory horizon, W' = pixels ever
+//! written, H·W = resolution, r = patch radius. "Before" is the
+//! pre-PR-2 dense/transcendental path.
+//!
+//! | Path | Before | After |
+//! |---|---|---|
+//! | per-event ingest (SAE-class, ISC) | O(1) | O(1) amortized (+active-list mark) |
+//! | per-frame readout (`IdealTs`, ISC) | O(H·W), `exp()`/px | O(A) + one zero-fill, LUT only |
+//! | per-frame readout (`Sae`) | O(H·W) | O(W') + one zero-fill (stamps never expire) |
+//! | per-frame readout (`QuantizedSae`, `Tore`) | O(H·W), `exp()`/`ln()` | O(H·W), LUT only |
+//! | per-STCF-query support scan | (2r+1)² indexed point reads | 2r+1 contiguous row slices |
+//!
+//! The decay kernels are shared through [`crate::util::decay::DecayLut`]
+//! (50 µs quantization, exactly 0 past the K·τ horizon) and the active
+//! sets through [`crate::util::active::ActiveSet`]; dense reference
+//! scans remain as `frame_dense_into` on `Sae`/`IdealTs`/`IscArray`,
+//! proven bit-for-bit equivalent in `tests/readout_equiv.rs`.
 
 pub mod advanced;
 pub mod binary;

@@ -1,9 +1,18 @@
 //! Timestamp-based representations: SAE (Eq. 2), the ideal exponential
 //! time-surface (Eq. 3/5), and the finite-width "digital SRAM" variant
 //! exhibiting the timestamp-overflow hazard the paper's analog array avoids.
+//!
+//! Readout is activity-aware and transcendental-free: the SAE keeps
+//! per-row active-pixel lists ([`ActiveSet`]) so `frame_into` zero-fills
+//! once and then touches only written pixels, and the exponential kernel
+//! is evaluated through the shared quantized [`DecayLut`] (no `exp()` in
+//! any frame loop). Dense reference scans are kept as `frame_dense_into`
+//! for the equivalence tests and the dense-vs-active benchmarks.
 
 use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
+use crate::util::active::ActiveSet;
+use crate::util::decay::DecayLut;
 use crate::util::grid::Grid;
 
 /// Surface of Active Events: per-pixel latest timestamp (full precision).
@@ -11,13 +20,22 @@ pub struct Sae {
     res: Resolution,
     /// Last event time per pixel (µs; 0 = never).
     t: Vec<u64>,
+    /// Written-pixel lists per row. Full-precision timestamps never
+    /// expire, so this set only grows (and is exactly the written set).
+    active: ActiveSet,
     events: u64,
     writes: u64,
 }
 
 impl Sae {
     pub fn new(res: Resolution) -> Self {
-        Self { res, t: vec![0; res.pixels()], events: 0, writes: 0 }
+        Self {
+            res,
+            t: vec![0; res.pixels()],
+            active: ActiveSet::new(res.width as usize, res.height as usize),
+            events: 0,
+            writes: 0,
+        }
     }
 
     /// Raw timestamp read (the SAE value).
@@ -26,7 +44,9 @@ impl Sae {
         self.t[self.res.index(x, y)]
     }
 
-    /// Ideal TS value at query time: e^{−(t−SAE)/τ} (Eq. 5), 0 if unwritten.
+    /// Ideal TS value at query time: e^{−(t−SAE)/τ} (Eq. 5), 0 if
+    /// unwritten. This is the *exact* closed form — the reference the
+    /// quantized [`DecayLut`] paths are tested against.
     #[inline]
     pub fn ts_value(&self, x: u16, y: u16, t_us: u64, tau_us: f64) -> f64 {
         let tw = self.last(x, y);
@@ -36,23 +56,53 @@ impl Sae {
             (-((t_us - tw) as f64) / tau_us).exp()
         }
     }
+
+    /// Row-sliced support scan: how many pixels in `x0..=x1` of row `y`
+    /// hold an event within `tau_tw_us` of `t_us`? One contiguous slice
+    /// walk — the STCF patch query uses one call per patch row.
+    pub fn count_recent_in_row(&self, y: u16, x0: u16, x1: u16, t_us: u64, tau_tw_us: u64) -> u32 {
+        debug_assert!(x0 <= x1 && self.res.contains(x1, y));
+        let start = self.res.index(x0, y);
+        let end = self.res.index(x1, y);
+        let mut n = 0u32;
+        for &tw in &self.t[start..=end] {
+            if tw != 0 && t_us >= tw && t_us - tw <= tau_tw_us {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Dense reference readout: the full-H·W scan `frame_into` is proven
+    /// bit-for-bit equivalent to (see `tests/readout_equiv.rs`).
+    pub fn frame_dense_into(&self, out: &mut Grid<f64>, _t_us: u64) {
+        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
+        let max = *self.t.iter().max().unwrap_or(&1);
+        let min_written = self.t.iter().copied().filter(|&t| t > 0).min().unwrap_or(0);
+        let span = (max - min_written).max(1) as f64;
+        let s = out.as_mut_slice();
+        for (o, &t) in s.iter_mut().zip(&self.t) {
+            *o = if t == 0 { 0.0 } else { (t - min_written) as f64 / span };
+        }
+    }
 }
 
 impl EventSink for Sae {
     fn ingest(&mut self, e: &Event) {
         let i = self.res.index(e.x, e.y);
         self.t[i] = e.t.max(1);
+        self.active.mark(e.x, e.y);
         self.events += 1;
         self.writes += 1;
     }
 
-    /// Batched inner loop: one bounds-free pass over the slice with the
-    /// stride hoisted; accounting is identical to repeated [`Self::ingest`].
+    /// Batched inner loop: one bounds-free pass over the slice;
+    /// accounting is identical to repeated [`Self::ingest`].
     fn ingest_batch(&mut self, events: &[Event]) {
-        let w = self.res.width as usize;
         for e in events {
-            debug_assert!(self.res.contains(e.x, e.y));
-            self.t[e.y as usize * w + e.x as usize] = e.t.max(1);
+            let i = self.res.index(e.x, e.y);
+            self.t[i] = e.t.max(1);
+            self.active.mark(e.x, e.y);
         }
         self.events += events.len() as u64;
         self.writes += events.len() as u64;
@@ -73,14 +123,30 @@ impl EventSink for Sae {
 
 impl FrameSource for Sae {
     /// Frame = timestamps min-max normalized (the Fig. 6a view).
+    /// O(active): min/max and the value pass walk only written pixels.
     fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
-        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
-        let max = *self.t.iter().max().unwrap_or(&1);
-        let min_written = self.t.iter().copied().filter(|&t| t > 0).min().unwrap_or(0);
+        let w = self.res.width as usize;
+        out.ensure_shape(w, self.res.height as usize, 0.0);
+        out.fill(0.0);
+        if self.active.is_empty() {
+            return;
+        }
+        let (mut max, mut min_written) = (0u64, u64::MAX);
+        for y in 0..self.active.height() {
+            let row_t = &self.t[y * w..(y + 1) * w];
+            for &x in self.active.row(y) {
+                let t = row_t[x as usize];
+                max = max.max(t);
+                min_written = min_written.min(t);
+            }
+        }
         let span = (max - min_written).max(1) as f64;
-        let s = out.as_mut_slice();
-        for (o, &t) in s.iter_mut().zip(&self.t) {
-            *o = if t == 0 { 0.0 } else { (t - min_written) as f64 / span };
+        for y in 0..self.active.height() {
+            let row_t = &self.t[y * w..(y + 1) * w];
+            let row_out = out.row_mut(y);
+            for &x in self.active.row(y) {
+                row_out[x as usize] = (row_t[x as usize] - min_written) as f64 / span;
+            }
         }
     }
 }
@@ -97,34 +163,93 @@ impl Representation for Sae {
 }
 
 /// Ideal exponential time-surface built on a full-precision SAE.
+///
+/// Readout (point reads and frames) goes through the shared quantized
+/// [`DecayLut`]: 50 µs bins, value error ≤ `step/τ`, and exactly 0 past
+/// the `8τ` memory horizon. [`Sae::ts_value`] remains the exact closed
+/// form for callers that need it.
+///
+/// Unlike the backing SAE (whose written set never expires — its frame
+/// normalizes raw timestamps), the TS keeps its *own* active set pruned
+/// against the decay horizon on the write path, so `frame_into` is
+/// O(pixels live within 8τ), not O(pixels ever written).
 pub struct IdealTs {
     sae: Sae,
     pub tau_us: f64,
+    lut: DecayLut,
+    /// Pixels within the decay horizon (lazily pruned, unlike `sae.active`).
+    active: ActiveSet,
+    /// Latest event time ingested (the prune clock).
+    clock_us: u64,
 }
 
 impl IdealTs {
     pub fn new(res: Resolution, tau_us: f64) -> Self {
         assert!(tau_us > 0.0);
-        Self { sae: Sae::new(res), tau_us }
+        Self {
+            sae: Sae::new(res),
+            tau_us,
+            lut: DecayLut::exponential(tau_us),
+            active: ActiveSet::new(res.width as usize, res.height as usize),
+            clock_us: 0,
+        }
     }
 
+    /// Accrue `writes` toward the amortized expiry scan of the TS active
+    /// set (see [`crate::util::active::ActiveSet::maybe_prune_expired`]).
+    fn maybe_prune(&mut self, writes: usize) {
+        let horizon = self.lut.horizon_us();
+        let clock = self.clock_us;
+        self.active.maybe_prune_expired(writes, &self.sae.t, clock, horizon);
+    }
+
+    /// Quantized point read — identical to the corresponding
+    /// [`FrameSource::frame_into`] cell (same LUT, same horizon) for
+    /// causal queries (`t_us` ≥ the latest ingested event time). Behind
+    /// the stream head the frame may already have pruned a pixel this
+    /// read still sees (see [`crate::util::active`]).
     #[inline]
     pub fn value(&self, x: u16, y: u16, t_us: u64) -> f64 {
-        self.sae.ts_value(x, y, t_us, self.tau_us)
+        self.lut.value(0, self.sae.last(x, y), t_us)
     }
 
     pub fn sae(&self) -> &Sae {
         &self.sae
+    }
+
+    /// Age beyond which a pixel reads exactly 0 (the K·τ memory window).
+    pub fn memory_horizon_us(&self) -> u64 {
+        self.lut.horizon_us()
+    }
+
+    /// Dense reference readout (full H·W scan through the same LUT).
+    pub fn frame_dense_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        let w = self.sae.res.width as usize;
+        out.ensure_shape(w, self.sae.res.height as usize, 0.0);
+        let s = out.as_mut_slice();
+        for (o, &tw) in s.iter_mut().zip(&self.sae.t) {
+            *o = self.lut.value(0, tw, t_us);
+        }
     }
 }
 
 impl EventSink for IdealTs {
     fn ingest(&mut self, e: &Event) {
         self.sae.ingest(e);
+        self.active.mark(e.x, e.y);
+        self.clock_us = self.clock_us.max(e.t);
+        self.maybe_prune(1);
     }
 
     fn ingest_batch(&mut self, events: &[Event]) {
         self.sae.ingest_batch(events);
+        for e in events {
+            self.active.mark(e.x, e.y);
+        }
+        if let Some(t_max) = events.iter().map(|e| e.t).max() {
+            self.clock_us = self.clock_us.max(t_max);
+        }
+        self.maybe_prune(events.len());
     }
 
     fn memory_writes(&self) -> u64 {
@@ -141,17 +266,26 @@ impl EventSink for IdealTs {
 }
 
 impl FrameSource for IdealTs {
+    /// O(active) readout: zero-fill, then evaluate the LUT only on
+    /// pixels live within the decay horizon (expired ones contribute
+    /// the 0 already written by the fill). Identical to
+    /// [`IdealTs::frame_dense_into`] for every `t_us` ≥ the latest
+    /// ingested event time (see [`crate::util::active`] for the
+    /// behind-the-stream-head caveat).
     fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
         let w = self.sae.res.width as usize;
         out.ensure_shape(w, self.sae.res.height as usize, 0.0);
-        let tau = self.tau_us;
-        let s = out.as_mut_slice();
-        for (o, &tw) in s.iter_mut().zip(&self.sae.t) {
-            *o = if tw == 0 || t_us < tw {
-                0.0
-            } else {
-                (-((t_us - tw) as f64) / tau).exp()
-            };
+        out.fill(0.0);
+        let active = &self.active;
+        for y in 0..active.height() {
+            let row_t = &self.sae.t[y * w..(y + 1) * w];
+            let row_out = out.row_mut(y);
+            for &x in active.row(y) {
+                let v = self.lut.value(0, row_t[x as usize], t_us);
+                if v > 0.0 {
+                    row_out[x as usize] = v;
+                }
+            }
         }
     }
 }
@@ -168,13 +302,16 @@ impl Representation for IdealTs {
 
 /// SAE stored in `bits`-wide µs counters — the digital SRAM implementation
 /// [26]. The counter wraps, so after 2^bits µs old pixels suddenly look
-/// *recent*: the overflow artifact of Sec. II-B / IV-B.
+/// *recent*: the overflow artifact of Sec. II-B / IV-B. Readout shares the
+/// quantized exponential [`DecayLut`] (applied to the *wrapped* age, so
+/// the aliasing artifact is preserved exactly).
 pub struct QuantizedSae {
     res: Resolution,
     bits: u32,
     t: Vec<u64>, // stored wrapped value; u64 for convenience
     written: Vec<bool>,
     pub tau_us: f64,
+    lut: DecayLut,
     events: u64,
     writes: u64,
 }
@@ -182,12 +319,14 @@ pub struct QuantizedSae {
 impl QuantizedSae {
     pub fn new(res: Resolution, bits: u32, tau_us: f64) -> Self {
         assert!((1..=32).contains(&bits));
+        assert!(tau_us > 0.0);
         Self {
             res,
             bits,
             t: vec![0; res.pixels()],
             written: vec![false; res.pixels()],
             tau_us,
+            lut: DecayLut::exponential(tau_us),
             events: 0,
             writes: 0,
         }
@@ -199,16 +338,16 @@ impl QuantizedSae {
     }
 
     /// TS value computed from wrapped stamps — exhibits overflow errors.
+    /// Same LUT as the frame path, so point reads ≡ frame cells.
     pub fn value(&self, x: u16, y: u16, t_us: u64) -> f64 {
         let i = self.res.index(x, y);
         if !self.written[i] {
             return 0.0;
         }
         let now = t_us & self.mask();
-        let then = self.t[i];
         // Hardware subtracts modulo 2^bits: an old stamp aliases as recent.
-        let dt = now.wrapping_sub(then) & self.mask();
-        (-(dt as f64) / self.tau_us).exp()
+        let dt = now.wrapping_sub(self.t[i]) & self.mask();
+        self.lut.eval(0, dt)
     }
 }
 
@@ -222,11 +361,9 @@ impl EventSink for QuantizedSae {
     }
 
     fn ingest_batch(&mut self, events: &[Event]) {
-        let w = self.res.width as usize;
         let mask = self.mask();
         for e in events {
-            debug_assert!(self.res.contains(e.x, e.y));
-            let i = e.y as usize * w + e.x as usize;
+            let i = self.res.index(e.x, e.y);
             self.t[i] = e.t & mask;
             self.written[i] = true;
         }
@@ -252,14 +389,12 @@ impl FrameSource for QuantizedSae {
         out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
         let mask = self.mask();
         let now = t_us & mask;
-        let tau = self.tau_us;
         let s = out.as_mut_slice();
         for i in 0..s.len() {
             s[i] = if !self.written[i] {
                 0.0
             } else {
-                let dt = now.wrapping_sub(self.t[i]) & mask;
-                (-(dt as f64) / tau).exp()
+                self.lut.eval(0, now.wrapping_sub(self.t[i]) & mask)
             };
         }
     }
@@ -291,11 +426,14 @@ mod tests {
         s.ingest(&ev(500, 1, 1));
         assert_eq!(s.last(1, 1), 500);
         assert_eq!(s.writes_per_event(), 1.0);
+        // Rewrites do not duplicate the active entry.
+        assert_eq!(s.active.len(), 1);
     }
 
     #[test]
     fn sae_batch_equals_single() {
-        let evs: Vec<Event> = (0..50).map(|k| ev(1 + k * 37, (k % 4) as u16, (k % 3) as u16)).collect();
+        let evs: Vec<Event> =
+            (0..50).map(|k| ev(1 + k * 37, (k % 4) as u16, (k % 3) as u16)).collect();
         let mut one = Sae::new(Resolution::new(4, 4));
         let mut bat = Sae::new(Resolution::new(4, 4));
         for e in &evs {
@@ -308,13 +446,23 @@ mod tests {
     }
 
     #[test]
+    fn sae_active_frame_matches_dense() {
+        let mut s = Sae::new(Resolution::new(6, 5));
+        s.ingest_batch(&[ev(100, 0, 0), ev(900, 5, 4), ev(400, 2, 3)]);
+        let mut dense = Grid::new(1, 1, 0.0);
+        s.frame_dense_into(&mut dense, 2_000);
+        assert_eq!(s.frame(2_000), dense);
+    }
+
+    #[test]
     fn ideal_ts_decays_exponentially() {
         let mut ts = IdealTs::new(Resolution::new(4, 4), 10_000.0);
         ts.ingest(&ev(1_000, 2, 2));
         let v0 = ts.value(2, 2, 1_000);
-        let v1 = ts.value(2, 2, 11_000); // one τ later
+        let v1 = ts.value(2, 2, 11_000); // one τ later — a LUT bin edge
         assert!((v0 - 1.0).abs() < 1e-12);
-        assert!((v1 - (-1.0f64).exp()).abs() < 1e-9);
+        // Bin edge ⇒ only the LUT's f32 storage rounding remains.
+        assert!((v1 - (-1.0f64).exp()).abs() < 1e-6);
         // Normalized ≤ 1 always (the paper's bounded-representation point).
         assert!(ts.frame(50_000).as_slice().iter().all(|&v| v <= 1.0));
     }
@@ -329,6 +477,20 @@ mod tests {
             for y in 0..4u16 {
                 assert_eq!(*buf.get(x as usize, y as usize), ts.value(x, y, 12_000));
             }
+        }
+    }
+
+    #[test]
+    fn ideal_ts_quantization_within_bound() {
+        // LUT value vs the exact closed form: error ∈ [0, step/τ].
+        let tau = 10_000.0;
+        let mut ts = IdealTs::new(Resolution::new(2, 2), tau);
+        ts.ingest(&ev(1_000, 0, 0));
+        for dt in [0u64, 37, 1_234, 9_999, 25_001] {
+            let exact = ts.sae().ts_value(0, 0, 1_000 + dt, tau);
+            let got = ts.value(0, 0, 1_000 + dt);
+            assert!(got >= exact - 1e-6, "dt={dt}");
+            assert!(got - exact <= 50.0 / tau + 1e-6, "dt={dt}: err {}", got - exact);
         }
     }
 
@@ -352,6 +514,38 @@ mod tests {
     }
 
     #[test]
+    fn ideal_ts_active_set_prunes_expired_pixels() {
+        // 256 distinct stale pixels, then a rewrite burst confined to an
+        // 8×8 region far past the horizon: the write-budget scan must
+        // drop the stale 256 while the SAE's written set keeps them all.
+        let res = Resolution::new(64, 64);
+        let mut ts = IdealTs::new(res, 1_000.0);
+        for k in 0..256u64 {
+            ts.ingest(&ev(1 + k, (k % 64) as u16, (k / 64) as u16));
+        }
+        let far = ts.memory_horizon_us() * 3;
+        for k in 0..600u64 {
+            ts.ingest(&ev(far + k, (k % 8) as u16, (32 + (k / 8) % 8) as u16));
+        }
+        assert_eq!(ts.active.len(), 64, "expired TS pixels must be pruned");
+        assert_eq!(ts.sae.active.len(), 256 + 64, "SAE written set never expires");
+        // Readout stays exact after pruning.
+        let t = far + 1_000;
+        let mut dense = Grid::new(1, 1, 0.0);
+        ts.frame_dense_into(&mut dense, t);
+        assert_eq!(ts.frame(t), dense);
+    }
+
+    #[test]
+    fn ideal_ts_zero_past_memory_horizon() {
+        let mut ts = IdealTs::new(Resolution::new(2, 2), 1_000.0);
+        ts.ingest(&ev(1_000, 1, 1));
+        let horizon = ts.memory_horizon_us();
+        assert!(ts.value(1, 1, 1_000 + horizon - 1) > 0.0);
+        assert_eq!(ts.value(1, 1, 1_000 + horizon), 0.0);
+    }
+
+    #[test]
     fn unwritten_pixels_zero_in_all() {
         let res = Resolution::new(3, 3);
         let s = Sae::new(res);
@@ -360,5 +554,16 @@ mod tests {
         assert_eq!(s.frame(100).as_slice().iter().sum::<f64>(), 0.0);
         assert_eq!(ts.frame(100).as_slice().iter().sum::<f64>(), 0.0);
         assert_eq!(q.frame(100).as_slice().iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn count_recent_in_row_matches_point_tests() {
+        let res = Resolution::new(8, 3);
+        let mut s = Sae::new(res);
+        s.ingest_batch(&[ev(100, 1, 1), ev(500, 3, 1), ev(10_000, 6, 1)]);
+        // At t=600 with τ_tw=1000: pixels 1 and 3 are recent, 6 is future.
+        assert_eq!(s.count_recent_in_row(1, 0, 7, 600, 1_000), 2);
+        assert_eq!(s.count_recent_in_row(1, 2, 7, 600, 1_000), 1);
+        assert_eq!(s.count_recent_in_row(0, 0, 7, 600, 1_000), 0);
     }
 }

@@ -1,0 +1,235 @@
+//! Per-row active-pixel tracking for activity-proportional frame readout.
+//!
+//! The paper's energy argument (Sec. IV) is that passive decay costs
+//! nothing on idle pixels; the software twin exploits the same sparsity.
+//! An [`ActiveSet`] records which pixels of a plane currently hold a
+//! live (non-expired) write, kept as one `Vec<u16>` of x-coordinates per
+//! sensor row plus a per-pixel membership flag for O(1) dedup. A frame
+//! readout then zero-fills its output buffer once (a vectorized memset)
+//! and touches only listed pixels — O(active) instead of O(H·W).
+//!
+//! Expiry is pruned *on the write path* (the only `&mut` path), amortized
+//! by a write budget: a full O(len) prune scan runs only once at least
+//! `max(len, 256)` writes have accrued since the last scan, so the
+//! per-write cost stays O(1) amortized at every activity level (a scan
+//! is always paid for by at least as many writes as entries it walks,
+//! and a fully-active plane cannot trigger back-to-back scans). Between
+//! scans the set may hold entries that have already decayed past the
+//! memory horizon; readout is still exact because an expired pixel's
+//! value is *defined* as 0 (see
+//! [`crate::util::decay::DecayLut::horizon_us`]) and the zero-fill
+//! already wrote it. Stale entries are gone within one budget window of
+//! the activity dropping.
+//!
+//! Contract: pruning uses the stream clock (the latest ingested event
+//! time) as "now", so active-set readout is bit-for-bit identical to a
+//! dense scan for every query time `t_us` ≥ that clock — the causal
+//! serving case. Querying a frame *behind* the stream head may miss
+//! pixels that have already expired relative to the head.
+
+/// A prune scan needs at least this many accrued writes — small sets
+/// are cheap to walk anyway, and this keeps tiny sensors scan-free.
+pub const MIN_PRUNE_BUDGET: usize = 256;
+
+/// Per-row lists of currently-active pixel x-coordinates.
+#[derive(Clone, Debug)]
+pub struct ActiveSet {
+    width: usize,
+    /// Active x's per sensor row (unordered within a row).
+    rows: Vec<Vec<u16>>,
+    /// Per-pixel membership flag (dedup for [`ActiveSet::mark`]).
+    listed: Vec<bool>,
+    /// Total listed pixels across all rows.
+    len: usize,
+    /// Writes accrued since the last prune scan.
+    budget: usize,
+}
+
+impl ActiveSet {
+    pub fn new(width: usize, height: usize) -> Self {
+        assert!(width > 0 && height > 0, "empty active set");
+        Self {
+            width,
+            rows: vec![Vec::new(); height],
+            listed: vec![false; width * height],
+            len: 0,
+            budget: 0,
+        }
+    }
+
+    #[inline]
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    #[inline]
+    pub fn height(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Total listed pixels.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Active x-coordinates of row `y` (unordered).
+    #[inline]
+    pub fn row(&self, y: usize) -> &[u16] {
+        &self.rows[y]
+    }
+
+    /// Record a write at (x, y); idempotent while the pixel stays listed.
+    #[inline]
+    pub fn mark(&mut self, x: u16, y: u16) {
+        let i = y as usize * self.width + x as usize;
+        if !self.listed[i] {
+            self.listed[i] = true;
+            self.rows[y as usize].push(x);
+            self.len += 1;
+        }
+    }
+
+    /// Amortized prune: accrue `writes` to the scan budget and run a full
+    /// [`ActiveSet::prune`] scan once the budget reaches
+    /// `max(len, MIN_PRUNE_BUDGET)` — the scan is then paid for by at
+    /// least as many writes as entries it walks, O(1) amortized per
+    /// write regardless of how much the scan retains. Call on the write
+    /// path with an `expired(x, y)` predicate derived from the stream
+    /// clock and the memory horizon.
+    #[inline]
+    pub fn maybe_prune(&mut self, writes: usize, expired: impl FnMut(u16, usize) -> bool) {
+        self.budget += writes;
+        if self.budget >= self.len.max(MIN_PRUNE_BUDGET) {
+            self.prune(expired);
+            self.budget = 0;
+        }
+    }
+
+    /// Amortized age-based expiry against a row-major stamp plane
+    /// (`stamps[y·width + x]` = last write µs, 0 = never): accrue
+    /// `writes` and, once the budget covers a scan, drop pixels older
+    /// than `horizon_us` at `clock_us`. The one expiry rule shared by
+    /// every pruning caller — change it here, not at call sites.
+    #[inline]
+    pub fn maybe_prune_expired(
+        &mut self,
+        writes: usize,
+        stamps: &[u64],
+        clock_us: u64,
+        horizon_us: u64,
+    ) {
+        let w = self.width;
+        self.maybe_prune(writes, |x, y| {
+            clock_us.saturating_sub(stamps[y * w + x as usize]) > horizon_us
+        });
+    }
+
+    /// Immediate (non-amortized) variant of
+    /// [`ActiveSet::maybe_prune_expired`].
+    pub fn prune_expired(&mut self, stamps: &[u64], clock_us: u64, horizon_us: u64) {
+        let w = self.width;
+        self.prune(|x, y| clock_us.saturating_sub(stamps[y * w + x as usize]) > horizon_us);
+    }
+
+    /// Drop every listed pixel for which `expired(x, y)` holds. O(len).
+    pub fn prune(&mut self, mut expired: impl FnMut(u16, usize) -> bool) {
+        let w = self.width;
+        let listed = &mut self.listed;
+        let mut len = 0usize;
+        for (y, row) in self.rows.iter_mut().enumerate() {
+            row.retain(|&x| {
+                let keep = !expired(x, y);
+                if !keep {
+                    listed[y * w + x as usize] = false;
+                }
+                keep
+            });
+            len += row.len();
+        }
+        self.len = len;
+    }
+
+    /// Forget every pixel (power-on reset).
+    pub fn clear(&mut self) {
+        for row in &mut self.rows {
+            row.clear();
+        }
+        self.listed.fill(false);
+        self.len = 0;
+        self.budget = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mark_dedups_and_counts() {
+        let mut a = ActiveSet::new(8, 4);
+        a.mark(3, 1);
+        a.mark(3, 1);
+        a.mark(4, 1);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.row(1).len(), 2);
+        assert!(a.row(0).is_empty());
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn prune_unlists_so_remark_works() {
+        let mut a = ActiveSet::new(8, 2);
+        a.mark(1, 0);
+        a.mark(2, 0);
+        a.prune(|x, _| x == 1);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.row(0), &[2]);
+        // A pruned pixel can re-enter the set.
+        a.mark(1, 0);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn maybe_prune_amortizes_scans_against_write_budget() {
+        let mut a = ActiveSet::new(64, 64);
+        let mut probed = 0usize;
+        // One distinct mark + one accrued write per step: the first full
+        // scan fires exactly when the budget catches the listed count.
+        for i in 0..MIN_PRUNE_BUDGET {
+            a.mark((i % 64) as u16, (i / 64) as u16);
+            a.maybe_prune(1, |_, _| {
+                probed += 1;
+                false
+            });
+        }
+        assert_eq!(probed, MIN_PRUNE_BUDGET, "exactly one full scan");
+        // Nothing expired, so the next scan needs a fresh budget of
+        // max(len, MIN) writes — a few more writes must not rescan.
+        a.maybe_prune(10, |_, _| {
+            probed += 1;
+            false
+        });
+        assert_eq!(probed, MIN_PRUNE_BUDGET);
+        // Accruing a full budget triggers the scan; everything expires.
+        a.maybe_prune(MIN_PRUNE_BUDGET, |_, _| true);
+        assert!(a.is_empty());
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut a = ActiveSet::new(4, 4);
+        a.mark(0, 0);
+        a.mark(3, 3);
+        a.clear();
+        assert!(a.is_empty());
+        assert!(a.row(0).is_empty());
+        a.mark(0, 0);
+        assert_eq!(a.len(), 1);
+    }
+}

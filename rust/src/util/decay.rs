@@ -1,0 +1,220 @@
+//! Shared quantized-decay kernel for every frame-readout hot path.
+//!
+//! All decaying representations answer the same query at readout time:
+//! "a cell was written at `t_write`; what is its value at `t_us`?" The
+//! answer is a pure function of the age Δt = t_us − t_write, so it can be
+//! tabulated once per distinct decay curve and the readout loop becomes
+//! an integer divide plus one table load — no `exp()`/`ln()` per pixel.
+//!
+//! [`DecayLut`] generalizes the quantized LUT that used to live privately
+//! inside `isc::array`: a dense table of `rows` decay curves sampled every
+//! [`DEFAULT_STEP_US`] µs (50 µs by default — the documented quantization
+//! bound: for a pure exponential the readout error is at most
+//! `step_us / tau_us`, since |d/dΔt e^{−Δt/τ}| ≤ 1/τ). Samples are stored
+//! as `f32` (like the original `frame_lut` — half the cache footprint in
+//! the gather-heavy readout loop); the ≤6·10⁻⁸ relative rounding that
+//! adds is far below the binning error. It is shared by `IdealTs`,
+//! `QuantizedSae`, `Tore` and `IscArray`; exact point reads
+//! (`Sae::ts_value`, `IscArray::read`) keep the closed form as the
+//! reference fallback.
+//!
+//! Beyond the table horizon (`bins · step_us`, chosen ≥ the memory window
+//! K·τ) a cell's value is defined as exactly `0.0`. This is what makes
+//! the activity-aware readout ([`crate::util::active::ActiveSet`])
+//! bit-for-bit equal to a dense scan: a pixel older than the horizon can
+//! be dropped from the active set without changing any frame.
+
+/// Default quantization step: 50 µs (≤ 3.4 mV error on the ISC decay
+/// bank; ≤ `50/τ` relative error on a pure exponential).
+pub const DEFAULT_STEP_US: u64 = 50;
+
+/// Memory-horizon factor for exponential kernels: the LUT covers
+/// Δt ≤ K·τ with K = 8 (e^{−8} ≈ 3.4·10⁻⁴ — below every quantization
+/// floor in the simulator), after which the value reads as exactly 0.
+pub const EXP_HORIZON_TAUS: f64 = 8.0;
+
+/// Hard cap on table length so a pathological τ cannot allocate
+/// unbounded memory (65 536 bins × 50 µs ≈ 3.3 s horizon).
+pub const MAX_BINS: usize = 65_536;
+
+/// A bank of quantized decay curves: `rows` curves × `bins` samples at
+/// `step_us` spacing. Row-major, so one curve is one contiguous slice.
+#[derive(Clone, Debug)]
+pub struct DecayLut {
+    rows: usize,
+    bins: usize,
+    step_us: u64,
+    table: Vec<f32>,
+}
+
+impl DecayLut {
+    /// Tabulate `rows` curves: `f(row, dt_us)` is sampled at
+    /// `dt_us = bin · step_us` for every bin.
+    pub fn build(
+        rows: usize,
+        bins: usize,
+        step_us: u64,
+        mut f: impl FnMut(usize, u64) -> f64,
+    ) -> Self {
+        assert!(rows > 0 && bins > 0 && step_us > 0, "empty decay LUT");
+        let mut table = Vec::with_capacity(rows * bins);
+        for row in 0..rows {
+            for bin in 0..bins {
+                table.push(f(row, bin as u64 * step_us) as f32);
+            }
+        }
+        Self { rows, bins, step_us, table }
+    }
+
+    /// (step_us, bins) covering `span_us` of decay: the 50 µs default
+    /// step, widened (never truncated) when the span would need more
+    /// than [`MAX_BINS`] bins — the horizon always reaches `span_us`,
+    /// and the error bound is `step_us(actual)/τ` either way.
+    pub fn layout_for_span(span_us: f64) -> (u64, usize) {
+        assert!(span_us > 0.0);
+        let step = (DEFAULT_STEP_US as f64).max((span_us / MAX_BINS as f64).ceil()) as u64;
+        let bins = ((span_us / step as f64).ceil() as usize).clamp(64, MAX_BINS);
+        (step, bins)
+    }
+
+    /// Single-row pure-exponential kernel `e^{−Δt/τ}` at the default
+    /// 50 µs step (widened for τ > 409.6 ms, see
+    /// [`DecayLut::layout_for_span`]), with the horizon sized to
+    /// [`EXP_HORIZON_TAUS`]·τ.
+    pub fn exponential(tau_us: f64) -> Self {
+        assert!(tau_us > 0.0);
+        let (step, bins) = Self::layout_for_span(EXP_HORIZON_TAUS * tau_us);
+        Self::build(1, bins, step, |_, dt_us| (-(dt_us as f64) / tau_us).exp())
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn bins(&self) -> usize {
+        self.bins
+    }
+
+    #[inline]
+    pub fn step_us(&self) -> u64 {
+        self.step_us
+    }
+
+    /// Age beyond which every curve reads as exactly 0.
+    #[inline]
+    pub fn horizon_us(&self) -> u64 {
+        self.bins as u64 * self.step_us
+    }
+
+    /// One curve as a contiguous slice (bin `k` holds `f(k · step_us)`).
+    #[inline]
+    pub fn row(&self, row: usize) -> &[f32] {
+        &self.table[row * self.bins..(row + 1) * self.bins]
+    }
+
+    /// Quantized read at age `dt_us`: the value at `floor(dt/step)·step`
+    /// (rounded through f32 storage), or exactly 0 past the horizon.
+    #[inline]
+    pub fn eval(&self, row: usize, dt_us: u64) -> f64 {
+        let bin = (dt_us / self.step_us) as usize;
+        if bin >= self.bins {
+            0.0
+        } else {
+            self.table[row * self.bins + bin] as f64
+        }
+    }
+
+    /// The full readout query: value of a cell last written at `t_write`
+    /// (0 = never) observed at `t_us`. Unwritten cells and queries before
+    /// the write read 0 — the same contract every `frame_into` obeys.
+    #[inline]
+    pub fn value(&self, row: usize, t_write: u64, t_us: u64) -> f64 {
+        if t_write == 0 || t_us < t_write {
+            0.0
+        } else {
+            self.eval(row, t_us - t_write)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_exact_at_bin_edges() {
+        let tau = 10_000.0;
+        let lut = DecayLut::exponential(tau);
+        // dt a multiple of the step ⇒ the LUT holds the closed form up to
+        // the f32 storage rounding (≤6e-8 relative on values ≤ 1).
+        for dt in [0u64, 50, 5_000, 10_000, 20_000] {
+            let exact = (-(dt as f64) / tau).exp();
+            assert!((lut.eval(0, dt) - exact).abs() < 1e-7, "dt={dt}");
+        }
+    }
+
+    #[test]
+    fn exponential_error_bounded_by_step_over_tau() {
+        let tau = 10_000.0;
+        let lut = DecayLut::exponential(tau);
+        let bound = lut.step_us() as f64 / tau;
+        for dt in (0..lut.horizon_us()).step_by(37) {
+            let exact = (-(dt as f64) / tau).exp();
+            let got = lut.eval(0, dt);
+            // Floor-binning over-reads a monotone decay; only the f32
+            // storage rounding can under-read, and only marginally.
+            assert!(got >= exact - 1e-7, "dt={dt}");
+            assert!(got - exact <= bound + 1e-7, "dt={dt}: err {}", got - exact);
+        }
+    }
+
+    #[test]
+    fn beyond_horizon_reads_exact_zero() {
+        let lut = DecayLut::exponential(1_000.0);
+        assert_eq!(lut.eval(0, lut.horizon_us()), 0.0);
+        assert_eq!(lut.eval(0, u64::MAX), 0.0);
+    }
+
+    #[test]
+    fn value_contract_unwritten_and_future() {
+        let lut = DecayLut::exponential(1_000.0);
+        assert_eq!(lut.value(0, 0, 500), 0.0, "never written");
+        assert_eq!(lut.value(0, 1_000, 500), 0.0, "query precedes write");
+        assert_eq!(lut.value(0, 500, 500), 1.0, "fresh write");
+    }
+
+    #[test]
+    fn multi_row_layout_contiguous() {
+        let lut = DecayLut::build(3, 4, 10, |row, dt| (row * 100) as f64 + dt as f64);
+        assert_eq!(lut.row(1), &[100.0f32, 110.0, 120.0, 130.0]);
+        assert_eq!(lut.eval(2, 25), 220.0); // bin 2 of row 2
+    }
+
+    #[test]
+    fn horizon_scales_with_tau() {
+        let short = DecayLut::exponential(200.0);
+        let long = DecayLut::exponential(100_000.0);
+        assert!(short.horizon_us() >= (EXP_HORIZON_TAUS * 200.0) as u64);
+        assert!(long.horizon_us() > short.horizon_us());
+        assert!(long.bins() <= MAX_BINS);
+    }
+
+    #[test]
+    fn huge_tau_widens_step_instead_of_truncating_horizon() {
+        // τ = 1 s would need 160 000 bins at 50 µs; the layout must widen
+        // the step so the 8τ horizon is still covered.
+        let tau = 1_000_000.0;
+        let lut = DecayLut::exponential(tau);
+        assert!(lut.bins() <= MAX_BINS);
+        assert!(lut.step_us() > DEFAULT_STEP_US);
+        assert!(lut.horizon_us() as f64 >= EXP_HORIZON_TAUS * tau);
+        // A pixel aged 3.3 s must still read its exact-ish value, not 0.
+        let dt = 3_300_000u64;
+        let exact = (-(dt as f64) / tau).exp();
+        let got = lut.eval(0, dt);
+        assert!(got > 0.0);
+        assert!(got - exact <= lut.step_us() as f64 / tau + 1e-7 && got >= exact - 1e-7);
+    }
+}

@@ -1,6 +1,14 @@
 //! A small row-major 2D grid used for intensity fields, voltage planes and
 //! time-surface frames throughout the simulator.
 
+/// Clamped inclusive patch bounds around `c` with radius `r` in a
+/// dimension of size `limit` — shared by every (2r+1)² neighbourhood
+/// walk (SITS/TOS updates, the STCF support scan).
+#[inline]
+pub fn patch_bounds(c: usize, r: usize, limit: usize) -> (usize, usize) {
+    (c.saturating_sub(r), (c + r).min(limit - 1))
+}
+
 /// Row-major 2D array of `T` with (width, height) addressing `(x, y)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Grid<T> {
@@ -97,6 +105,21 @@ impl<T: Clone> Grid<T> {
         self.data.fill(fill);
     }
 
+    /// One row as a contiguous slice — the unit of the row-sliced readout
+    /// and patch-scan loops (no per-element `y * width + x` math).
+    #[inline]
+    pub fn row(&self, y: usize) -> &[T] {
+        debug_assert!(y < self.height);
+        &self.data[y * self.width..(y + 1) * self.width]
+    }
+
+    /// Mutable row slice (see [`Grid::row`]).
+    #[inline]
+    pub fn row_mut(&mut self, y: usize) -> &mut [T] {
+        debug_assert!(y < self.height);
+        &mut self.data[y * self.width..(y + 1) * self.width]
+    }
+
     /// Raw row-major slice.
     pub fn as_slice(&self) -> &[T] {
         &self.data
@@ -190,6 +213,15 @@ mod tests {
         g.fill(0.0);
         assert!(g.as_slice().iter().all(|&v| v == 0.0));
         assert_eq!(g.as_slice().as_ptr(), ptr);
+    }
+
+    #[test]
+    fn row_slices_match_manual_indexing() {
+        let mut g = Grid::from_fn(4, 3, |x, y| (y * 4 + x) as i32);
+        assert_eq!(g.row(1), &[4, 5, 6, 7]);
+        g.row_mut(2)[3] = -1;
+        assert_eq!(*g.get(3, 2), -1);
+        assert_eq!(g.row(0).len(), g.width());
     }
 
     #[test]

@@ -1,9 +1,13 @@
-//! Shared utilities: deterministic RNG, statistics, curve fitting, and the
+//! Shared utilities: deterministic RNG, statistics, curve fitting, the
 //! in-repo property-testing harness (offline substitutes for `rand`,
-//! `statrs`, and `proptest`).
+//! `statrs`, and `proptest`), and the readout kernels shared by every
+//! decaying representation: the quantized decay LUT ([`decay`]) and the
+//! per-row active-pixel tracker ([`active`]).
 
+pub mod active;
 pub mod bench;
 pub mod check;
+pub mod decay;
 pub mod fit;
 pub mod grid;
 pub mod image;

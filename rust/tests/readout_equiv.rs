@@ -1,0 +1,256 @@
+//! Equivalence contracts of the activity-aware, transcendental-free
+//! readout (PR 2):
+//!
+//! * active-set `frame_into` ≡ dense `frame_dense_into` bit-for-bit on
+//!   random event streams for `Sae`, `IdealTs` and `IscArray` (both
+//!   polarity modes), including interleaved write/read, streams long
+//!   enough to trigger the lazy active-list pruning, queries before any
+//!   write (`t_us < t_write`) and never-written arrays;
+//! * the row-sliced STCF support scan ≡ the naive (2r+1)² reference on
+//!   both backends across radii, polarity modes and border events;
+//! * the shared quantized decay LUT stays within the documented 50 µs
+//!   quantization bound of the exact exponential.
+
+use tsisc::denoise::{support_count, support_count_naive, StcfBackend, StcfParams};
+use tsisc::events::{Event, Polarity, Resolution};
+use tsisc::isc::{IscArray, IscConfig};
+use tsisc::tsurface::{EventSink, FrameSource, IdealTs, Sae};
+use tsisc::util::check::{check, Gen};
+use tsisc::util::decay::DecayLut;
+use tsisc::util::grid::Grid;
+
+/// Time-sorted random stream; `max_step_us` controls the total span (big
+/// steps push pixels past the memory horizon and force pruning).
+fn stream(g: &mut Gen, res: Resolution, n: usize, max_step_us: u64) -> Vec<Event> {
+    let mut t = 0u64;
+    (0..n)
+        .map(|_| {
+            t += g.u64(1, max_step_us);
+            Event::new(
+                t,
+                g.u64(0, res.width as u64 - 1) as u16,
+                g.u64(0, res.height as u64 - 1) as u16,
+                if g.bool(0.5) { Polarity::On } else { Polarity::Off },
+            )
+        })
+        .collect()
+}
+
+fn assert_frames_equal(active: &Grid<f64>, dense: &Grid<f64>, ctx: &str) {
+    assert_eq!(active, dense, "{ctx}: active-set readout != dense readout");
+}
+
+#[test]
+fn isc_active_frame_equals_dense_on_random_streams() {
+    check("isc active ≡ dense", 12, |g| {
+        let res = Resolution::new(32, 24);
+        let polarity_sensitive = g.bool(0.5);
+        let mut a = IscArray::new(
+            res,
+            IscConfig {
+                polarity_sensitive,
+                seed: g.u64(0, u64::MAX / 2),
+                bank_size: 64,
+                ..IscConfig::default()
+            },
+        );
+        // Interleave ingestion and readout; spans several horizons so the
+        // write-path pruning fires mid-stream.
+        let evs = stream(g, res, 3_000, 500);
+        let mut active = Grid::new(1, 1, 0.0);
+        let mut dense = Grid::new(1, 1, 0.0);
+        for chunk in evs.chunks(611) {
+            a.write_batch(chunk);
+            let t = chunk.last().unwrap().t + g.u64(0, 30_000);
+            a.frame_merged_into(&mut active, t);
+            a.frame_merged_dense_into(&mut dense, t);
+            assert_frames_equal(&active, &dense, "merged");
+            a.frame_into(Polarity::On, &mut active, t);
+            a.frame_dense_into(Polarity::On, &mut dense, t);
+            assert_frames_equal(&active, &dense, "on-plane");
+        }
+        // Far past the horizon everything reads zero in both paths.
+        let t_far = evs.last().unwrap().t + a.memory_horizon_us() + 1;
+        a.frame_merged_into(&mut active, t_far);
+        a.frame_merged_dense_into(&mut dense, t_far);
+        assert_frames_equal(&active, &dense, "past-horizon");
+        assert!(active.as_slice().iter().all(|&v| v == 0.0));
+    });
+}
+
+#[test]
+fn ideal_ts_and_sae_active_frame_equals_dense() {
+    check("ideal-ts/sae active ≡ dense", 20, |g| {
+        let res = Resolution::new(24, 18);
+        let tau = g.f64(2_000.0, 60_000.0);
+        let mut ts = IdealTs::new(res, tau);
+        let mut sae = Sae::new(res);
+        let evs = stream(g, res, 800, 700);
+        let mut active = Grid::new(1, 1, 0.0);
+        let mut dense = Grid::new(1, 1, 0.0);
+        for chunk in evs.chunks(173) {
+            ts.ingest_batch(chunk);
+            sae.ingest_batch(chunk);
+            let t = chunk.last().unwrap().t + g.u64(0, 100_000);
+            ts.frame_into(&mut active, t);
+            ts.frame_dense_into(&mut dense, t);
+            assert_frames_equal(&active, &dense, "ideal-ts");
+            sae.frame_into(&mut active, t);
+            sae.frame_dense_into(&mut dense, t);
+            assert_frames_equal(&active, &dense, "sae");
+        }
+    });
+}
+
+#[test]
+fn query_before_any_write_reads_zero_everywhere() {
+    // t_us < t_write: every cell was written after the query time, so
+    // both readout paths must produce the all-zero frame.
+    let res = Resolution::new(16, 12);
+    let evs: Vec<Event> = (0..50u64)
+        .map(|k| Event::new(10_000 + k, (k % 16) as u16, (k % 12) as u16, Polarity::On))
+        .collect();
+
+    let mut a = IscArray::new(res, IscConfig::default());
+    a.write_batch(&evs);
+    let mut active = Grid::new(1, 1, 0.0);
+    let mut dense = Grid::new(1, 1, 0.0);
+    a.frame_merged_into(&mut active, 500);
+    a.frame_merged_dense_into(&mut dense, 500);
+    assert_frames_equal(&active, &dense, "isc pre-write");
+    assert!(active.as_slice().iter().all(|&v| v == 0.0));
+
+    let mut ts = IdealTs::new(res, 24_000.0);
+    ts.ingest_batch(&evs);
+    ts.frame_into(&mut active, 500);
+    ts.frame_dense_into(&mut dense, 500);
+    assert_frames_equal(&active, &dense, "ideal-ts pre-write");
+    assert!(active.as_slice().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn never_written_arrays_read_zero_in_both_paths() {
+    let res = Resolution::new(8, 8);
+    let a = IscArray::new(res, IscConfig::default());
+    let ts = IdealTs::new(res, 24_000.0);
+    let sae = Sae::new(res);
+    let mut active = Grid::new(1, 1, 0.0);
+    let mut dense = Grid::new(1, 1, 0.0);
+
+    a.frame_merged_into(&mut active, 1_000_000);
+    a.frame_merged_dense_into(&mut dense, 1_000_000);
+    assert_frames_equal(&active, &dense, "isc unwritten");
+    ts.frame_into(&mut active, 1_000_000);
+    ts.frame_dense_into(&mut dense, 1_000_000);
+    assert_frames_equal(&active, &dense, "ideal-ts unwritten");
+    sae.frame_into(&mut active, 1_000_000);
+    sae.frame_dense_into(&mut dense, 1_000_000);
+    assert_frames_equal(&active, &dense, "sae unwritten");
+    assert!(active.as_slice().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn row_sliced_stcf_equals_naive_ideal_backend() {
+    check("stcf row ≡ naive (ideal)", 10, |g| {
+        let res = Resolution::new(20, 16);
+        let prm = StcfParams {
+            radius: g.u64(1, 4) as u16,
+            tau_tw_us: g.u64(500, 50_000),
+            polarity_sensitive: g.bool(0.5),
+            count_center: g.bool(0.5),
+            ..StcfParams::default()
+        };
+        let mut b = StcfBackend::ideal(res);
+        let mut evs = stream(g, res, 400, 600);
+        // Force border coverage: corners and edge mid-points.
+        let t_last = evs.last().unwrap().t;
+        for (x, y) in [(0, 0), (19, 15), (0, 15), (19, 0), (10, 0), (0, 8)] {
+            evs.push(Event::new(t_last + 10, x, y, Polarity::On));
+        }
+        for e in &evs {
+            assert_eq!(
+                support_count(&b, e, &prm),
+                support_count_naive(&b, e, &prm),
+                "r={} e={e:?}",
+                prm.radius
+            );
+            b.ingest(e, &prm);
+        }
+    });
+}
+
+#[test]
+fn row_sliced_stcf_equals_naive_isc_backend() {
+    check("stcf row ≡ naive (isc)", 4, |g| {
+        let res = Resolution::new(16, 16);
+        let prm = StcfParams {
+            radius: g.u64(1, 3) as u16,
+            polarity_sensitive: g.bool(0.5),
+            count_center: g.bool(0.5),
+            ..StcfParams::default()
+        };
+        let cfg = IscConfig {
+            polarity_sensitive: prm.polarity_sensitive,
+            bank_size: 32,
+            seed: g.u64(0, u64::MAX / 2),
+            ..IscConfig::default()
+        };
+        let mut b = StcfBackend::isc(res, cfg, prm.tau_tw_us);
+        let mut evs = stream(g, res, 300, 400);
+        let t_last = evs.last().unwrap().t;
+        for (x, y) in [(0, 0), (15, 15), (0, 15), (15, 0)] {
+            evs.push(Event::new(t_last + 10, x, y, Polarity::Off));
+        }
+        for e in &evs {
+            assert_eq!(
+                support_count(&b, e, &prm),
+                support_count_naive(&b, e, &prm),
+                "r={} e={e:?}",
+                prm.radius
+            );
+            b.ingest(e, &prm);
+        }
+    });
+}
+
+#[test]
+fn shared_lut_error_within_documented_50us_bound() {
+    // For e^{−Δt/τ} sampled every 50 µs, floor-binning over-reads by at
+    // most step/τ (|d/dΔt| ≤ 1/τ); only the f32 table storage can
+    // under-read, by ≤6e-8 relative.
+    check("decay LUT 50µs bound", 30, |g| {
+        let tau = g.f64(1_000.0, 100_000.0);
+        let lut = DecayLut::exponential(tau);
+        assert_eq!(lut.step_us(), 50, "documented quantization step");
+        let bound = lut.step_us() as f64 / tau + 1e-6;
+        for _ in 0..200 {
+            let dt = g.u64(0, lut.horizon_us() - 1);
+            let exact = (-(dt as f64) / tau).exp();
+            let got = lut.eval(0, dt);
+            assert!(got >= exact - 1e-6, "under-read at dt={dt}");
+            assert!(got - exact <= bound, "dt={dt}: err {} > {bound}", got - exact);
+        }
+        // Past the horizon the LUT reads exactly 0 — the contract that
+        // lets expired pixels leave the active set without changing any
+        // frame.
+        assert_eq!(lut.eval(0, lut.horizon_us()), 0.0);
+    });
+}
+
+#[test]
+fn ideal_ts_point_reads_match_frame_cells() {
+    // The quantized point read and the frame path share one kernel.
+    let res = Resolution::new(10, 10);
+    let mut ts = IdealTs::new(res, 10_000.0);
+    let evs: Vec<Event> = (0..60u64)
+        .map(|k| Event::new(1 + k * 777, (k % 10) as u16, (k * 3 % 10) as u16, Polarity::On))
+        .collect();
+    ts.ingest_batch(&evs);
+    let t = evs.last().unwrap().t + 4_321;
+    let f = ts.frame(t);
+    for x in 0..10u16 {
+        for y in 0..10u16 {
+            assert_eq!(*f.get(x as usize, y as usize), ts.value(x, y, t));
+        }
+    }
+}
