@@ -23,13 +23,16 @@ lint:
 	cd $(RUST_DIR) && cargo clippy --all-targets -- -D warnings
 
 # Bench binaries use the in-repo harness (util::bench); bench_tsurface
-# additionally dumps BENCH_tsurface.json next to the manifest.
+# and bench_router additionally dump BENCH_tsurface.json /
+# BENCH_router.json next to the manifest.
 bench:
 	cd $(RUST_DIR) && cargo bench -- --quick
-	@if [ -f $(RUST_DIR)/BENCH_tsurface.json ]; then \
-		cp $(RUST_DIR)/BENCH_tsurface.json BENCH_tsurface.json; \
-		echo "snapshot: BENCH_tsurface.json"; \
-	fi
+	@for snap in BENCH_tsurface.json BENCH_router.json; do \
+		if [ -f $(RUST_DIR)/$$snap ]; then \
+			cp $(RUST_DIR)/$$snap $$snap; \
+			echo "snapshot: $$snap"; \
+		fi; \
+	done
 
 # AOT-lower the JAX/Pallas kernels + models to HLO text artifacts for the
 # Rust PJRT runtime (no-op for pure-Rust development; the runtime tests
@@ -39,4 +42,5 @@ artifacts:
 
 clean:
 	cd $(RUST_DIR) && cargo clean
-	rm -f BENCH_tsurface.json $(RUST_DIR)/BENCH_tsurface.json
+	rm -f BENCH_tsurface.json $(RUST_DIR)/BENCH_tsurface.json \
+	      BENCH_router.json $(RUST_DIR)/BENCH_router.json

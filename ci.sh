@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 CI gate: release build + tests + quick bench snapshot.
 #
-# Emits BENCH_tsurface.json (ingest-throughput measurements, including the
-# batch-size sweep) at the repo root so successive PRs can be compared.
+# Emits BENCH_tsurface.json (ingest throughput, dense-vs-active readout,
+# the thread-count sweep with frames_per_sec and the dense-fallback α
+# crossover) and BENCH_router.json (routing throughput + dirty-band
+# snapshot frames_per_sec) at the repo root so successive PRs can be
+# compared.
 set -uo pipefail
 
 cd "$(dirname "$0")"
@@ -43,10 +46,12 @@ fi
 echo "== cargo bench (quick) =="
 (cd rust && cargo bench -- --quick)
 
-if [ -f rust/BENCH_tsurface.json ]; then
-    cp rust/BENCH_tsurface.json BENCH_tsurface.json
-    echo "== bench snapshot =="
-    cat BENCH_tsurface.json
-else
-    echo "ci.sh: warning — rust/BENCH_tsurface.json was not produced" >&2
-fi
+for snap in BENCH_tsurface.json BENCH_router.json; do
+    if [ -f "rust/$snap" ]; then
+        cp "rust/$snap" "$snap"
+        echo "== bench snapshot: $snap =="
+        cat "$snap"
+    else
+        echo "ci.sh: warning — rust/$snap was not produced" >&2
+    fi
+done

@@ -1,11 +1,14 @@
 //! Coordinator benchmarks: sharded-router throughput vs shard count and
-//! batch size, plus end-to-end pipeline events/s (the paper's "throughput
+//! batch size, end-to-end pipeline events/s (the paper's "throughput
 //! limited by data transmission" argument, Sec. III-B, measured on the
-//! software twin).
+//! software twin), and the dirty-band snapshot protocol (clean vs dirty
+//! steady-state frame cost, reported as `frames_per_sec`). All
+//! measurements are dumped to `BENCH_router.json` for the CI artifact.
 
 use tsisc::coordinator::{run_pipeline, PipelineConfig, Router, RouterConfig};
 use tsisc::events::{noise::ba_noise, Event, Polarity, Resolution};
-use tsisc::util::bench::{bench, header};
+use tsisc::util::bench::{bench, dump_json, header, JsonEntry};
+use tsisc::util::grid::Grid;
 use tsisc::util::rng::Pcg64;
 
 fn main() {
@@ -23,6 +26,7 @@ fn main() {
             )
         })
         .collect();
+    let mut entries: Vec<JsonEntry> = Vec::new();
 
     // Single-event route() (staged internally) vs explicit route_batch().
     for shards in [1usize, 2, 4, 8] {
@@ -36,6 +40,7 @@ fn main() {
             }
         });
         println!("{}", r.report());
+        entries.push(JsonEntry::plain(r));
         router.shutdown();
     }
 
@@ -49,6 +54,46 @@ fn main() {
             }
         });
         println!("{}", r.report());
+        entries.push(JsonEntry::plain(r));
+        router.shutdown();
+    }
+
+    // Dirty-band snapshots: steady-state frame cost when the stream is
+    // idle (all bands skip), sparse (one band dirty) and fully dirty.
+    // The clean case measures the pure composite-from-cache floor.
+    println!();
+    header("snapshot scatter-gather: dirty-band protocol (4 shards, QVGA)");
+    // Three steady states: an idle stream re-snapshotting the same
+    // instant (every band skipped — the pure composite-from-cache
+    // floor), a sparse stream confined to one band (3 of 4 bands
+    // skipped every frame), and a stream dirtying every band (the
+    // no-skip baseline).
+    let band_h = res.height / 4;
+    for (label, dirty_bands) in
+        [("clean (0 bands dirty)", 0u16), ("sparse (1 band dirty)", 1), ("all 4 bands dirty", 4)]
+    {
+        let mut router = Router::new(res, RouterConfig { n_shards: 4, ..RouterConfig::default() });
+        let mut out = Grid::new(1, 1, 0.0f64);
+        if dirty_bands == 0 {
+            router.route_batch(&events); // live content everywhere
+        }
+        router.frame_into(&mut out, 30_000); // warm caches
+        let mut t = 30_000u64;
+        let mut k = 0u64;
+        let r = bench(&format!("snapshot {label}"), 1.0, 100, 500, || {
+            t += 1_000;
+            for b in 0..dirty_bands {
+                router.route(Event::new(t, (k % res.width as u64) as u16, b * band_h,
+                                        Polarity::On));
+                k += 1;
+            }
+            router.frame_into(&mut out, if dirty_bands == 0 { 30_000 } else { t });
+            std::hint::black_box(out.as_slice());
+        });
+        let fps = r.throughput_per_sec();
+        println!("{}  [{fps:.1} frames/s, {} band renders skipped]",
+                 r.report(), router.bands_skipped_unchanged());
+        entries.push(JsonEntry::with(r, "frames_per_sec", fps));
         router.shutdown();
     }
 
@@ -65,4 +110,7 @@ fn main() {
         ));
     });
     println!("{}", r.report());
+    entries.push(JsonEntry::plain(r));
+
+    dump_json(&entries, "BENCH_router.json");
 }

@@ -3,53 +3,36 @@
 //!
 //! Also sweeps the ingest batch size (1 / 64 / 4096) on the SAE-class and
 //! ISC representations to quantify the batch-first API win, benchmarks
-//! the frame-readout paths — including the dense vs. active-set sweep at
-//! 1 % / 10 % / 100 % pixel activity on 346×260 and 640×480 — and dumps
-//! the measurements to `BENCH_tsurface.json` (readout entries carry a
-//! `pixels_per_sec` field) so CI can track the perf trajectory.
+//! the frame-readout paths — the dense vs. active-set sweep at
+//! 1 % / 10 % / 100 % pixel activity on 346×260 and 640×480, the
+//! row-parallel thread-count sweep (1/2/4/8 chunks × activity, reported
+//! as `frames_per_sec`), and the dense-fallback α crossover sweep
+//! (α ∈ {5, 10, 20, 40 %}, printing the measured crossover against the
+//! configured `DENSE_FALLBACK_ALPHA`) — and dumps everything to
+//! `BENCH_tsurface.json` so CI can track the perf trajectory.
 
 use tsisc::events::{Event, Polarity, Resolution};
 use tsisc::isc::{IscArray, IscConfig};
 use tsisc::tsurface::*;
-use tsisc::util::bench::{bench, header, BenchResult};
+use tsisc::util::active::DENSE_FALLBACK_ALPHA;
+use tsisc::util::bench::{bench, dump_json, header, JsonEntry};
 use tsisc::util::grid::Grid;
 use tsisc::util::rng::Pcg64;
 
-/// One JSON line: every bench reports `meps` (items/s ÷ 1e6); frame
-/// readouts, whose items are pixels, additionally report `pixels_per_sec`.
-struct Entry {
-    result: BenchResult,
-    is_readout: bool,
-}
-
-fn json_escape(s: &str) -> String {
-    s.replace('\\', "\\\\").replace('"', "\\\"")
-}
-
-fn dump_json(entries: &[Entry], path: &str) {
-    let mut s = String::from("{\n  \"benchmarks\": [\n");
-    for (i, e) in entries.iter().enumerate() {
-        let r = &e.result;
-        let extra = if e.is_readout {
-            format!(", \"pixels_per_sec\": {:.1}", r.throughput_per_sec())
-        } else {
-            String::new()
-        };
-        s.push_str(&format!(
-            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"meps\": {:.4}{}}}{}\n",
-            json_escape(&r.name),
-            r.mean_ns,
-            r.throughput_per_sec() / 1e6,
-            extra,
-            if i + 1 < entries.len() { "," } else { "" }
-        ));
-    }
-    s.push_str("  ]\n}\n");
-    if let Err(e) = std::fs::write(path, s) {
-        eprintln!("(could not write {path}: {e})");
-    } else {
-        println!("wrote {path}");
-    }
+/// Array with ~`activity`·pixels distinct live cells (even stride fill).
+fn array_at_activity(res: Resolution, activity: f64) -> IscArray {
+    let mut arr = IscArray::new(res, IscConfig::default());
+    let n_active = ((res.pixels() as f64 * activity).round() as usize).max(1);
+    let stride = (res.pixels() / n_active).max(1);
+    let w = res.width as usize;
+    let writes: Vec<Event> = (0..n_active)
+        .map(|k| {
+            let i = (k * stride) % res.pixels();
+            Event::new(1_000 + (k % 512) as u64, (i % w) as u16, (i / w) as u16, Polarity::On)
+        })
+        .collect();
+    arr.write_batch(&writes);
+    arr
 }
 
 fn main() {
@@ -67,7 +50,7 @@ fn main() {
             )
         })
         .collect();
-    let mut entries: Vec<Entry> = Vec::new();
+    let mut entries: Vec<JsonEntry> = Vec::new();
 
     // --- Per-event ingest across every representation -------------------
     {
@@ -78,7 +61,7 @@ fn main() {
                 }
             });
             println!("{}  (writes/event {:.2})", r.report(), rep.writes_per_event());
-            entries.push(Entry { result: r, is_readout: false });
+            entries.push(JsonEntry::plain(r));
         };
         run_rep("SAE", Box::new(Sae::new(res)));
         run_rep("ideal TS", Box::new(IdealTs::new(res, 24_000.0)));
@@ -107,7 +90,7 @@ fn main() {
                 },
             );
             println!("{}", r.report());
-            entries.push(Entry { result: r, is_readout: false });
+            entries.push(JsonEntry::plain(r));
         };
         run_batched("SAE", Box::new(Sae::new(res)));
         run_batched("3DS-ISC", Box::new(IscTs::with_defaults(res)));
@@ -128,7 +111,8 @@ fn main() {
             std::hint::black_box(buf.as_slice());
         });
         println!("{}", r.report());
-        entries.push(Entry { result: r, is_readout: true });
+        let pps = r.throughput_per_sec();
+        entries.push(JsonEntry::with(r, "pixels_per_sec", pps));
     }
 
     // --- Frame-readout sweep: dense vs. active-set ------------------------
@@ -136,42 +120,29 @@ fn main() {
     // write at readout time. The active path must win big at low activity
     // and stay competitive at 100 %.
     println!();
-    header("frame readout: dense vs active-set");
+    header("frame readout: dense vs active-set (forced modes)");
     for (label, w, h) in [("346x260", 346u16, 260u16), ("640x480", 640, 480)] {
         let sweep_res = Resolution::new(w, h);
         for &activity in &[0.01f64, 0.10, 1.00] {
-            let mut arr = IscArray::new(sweep_res, IscConfig::default());
-            let n_active = ((sweep_res.pixels() as f64 * activity).round() as usize).max(1);
-            let stride = (sweep_res.pixels() / n_active).max(1);
-            let writes: Vec<Event> = (0..n_active)
-                .map(|k| {
-                    let i = (k * stride) % sweep_res.pixels();
-                    Event::new(
-                        1_000 + (k % 512) as u64,
-                        (i % w as usize) as u16,
-                        (i / w as usize) as u16,
-                        Polarity::On,
-                    )
-                })
-                .collect();
-            arr.write_batch(&writes);
+            let arr = array_at_activity(sweep_res, activity);
             let t_q = 40_000u64; // well inside the ~102 ms memory horizon
             let act_pct = (activity * 100.0).round() as u32;
 
             let mut buf = Grid::new(1, 1, 0.0f64);
-            arr.frame_merged_into(&mut buf, t_q); // warmup reshape
+            arr.frame_merged_active_into(&mut buf, t_q); // warmup reshape
             let r = bench(
                 &format!("ISC readout active {label} act={act_pct}%"),
                 sweep_res.pixels() as f64,
                 80,
                 400,
                 || {
-                    arr.frame_merged_into(&mut buf, t_q);
+                    arr.frame_merged_active_into(&mut buf, t_q);
                     std::hint::black_box(buf.as_slice());
                 },
             );
             println!("{}", r.report());
-            entries.push(Entry { result: r, is_readout: true });
+            let pps = r.throughput_per_sec();
+            entries.push(JsonEntry::with(r, "pixels_per_sec", pps));
 
             let mut dbuf = Grid::new(1, 1, 0.0f64);
             arr.frame_merged_dense_into(&mut dbuf, t_q);
@@ -186,8 +157,85 @@ fn main() {
                 },
             );
             println!("{}", rd.report());
-            entries.push(Entry { result: rd, is_readout: true });
+            let pps = rd.throughput_per_sec();
+            entries.push(JsonEntry::with(rd, "pixels_per_sec", pps));
         }
+    }
+
+    // --- Row-parallel thread-count sweep ----------------------------------
+    // 1/2/4/8 chunks × 1/10/100 % activity at 640×480 through the
+    // explicit-chunk API (the auto path picks available_parallelism).
+    // The acceptance figure: 8-thread 100 %-activity frames_per_sec ≥ 2×
+    // the 1-thread figure from the same run.
+    println!();
+    header("frame readout: thread-count sweep (640x480)");
+    let par_res = Resolution::new(640, 480);
+    for &activity in &[0.01f64, 0.10, 1.00] {
+        let arr = array_at_activity(par_res, activity);
+        let act_pct = (activity * 100.0).round() as u32;
+        for &threads in &[1usize, 2, 4, 8] {
+            let mut buf = Grid::new(1, 1, 0.0f64);
+            arr.frame_merged_into_chunks(&mut buf, 40_000, threads); // warmup
+            let r = bench(
+                &format!("ISC readout 640x480 act={act_pct}% threads={threads}"),
+                1.0,
+                80,
+                400,
+                || {
+                    arr.frame_merged_into_chunks(&mut buf, 40_000, threads);
+                    std::hint::black_box(buf.as_slice());
+                },
+            );
+            let fps = r.throughput_per_sec();
+            println!("{}  [{fps:.1} frames/s]", r.report());
+            entries.push(JsonEntry::with(r, "frames_per_sec", fps));
+        }
+    }
+
+    // --- Dense-fallback α crossover sweep ---------------------------------
+    // Measure forced-active vs forced-dense at α ∈ {5, 10, 20, 40 %} and
+    // report the smallest swept activity at which the dense scan wins —
+    // the re-tuning signal for DENSE_FALLBACK_ALPHA.
+    println!();
+    header("dense-fallback crossover sweep (346x260)");
+    let cross_res = Resolution::new(346, 260);
+    let mut crossover: Option<f64> = None;
+    for &alpha in &[0.05f64, 0.10, 0.20, 0.40] {
+        let arr = array_at_activity(cross_res, alpha);
+        let mut abuf = Grid::new(1, 1, 0.0f64);
+        let mut dbuf = Grid::new(1, 1, 0.0f64);
+        arr.frame_merged_active_into(&mut abuf, 40_000);
+        arr.frame_merged_dense_into(&mut dbuf, 40_000);
+        let pct = (alpha * 100.0).round() as u32;
+        let ra = bench(&format!("crossover active act={pct}%"), 1.0, 60, 300, || {
+            arr.frame_merged_active_into(&mut abuf, 40_000);
+            std::hint::black_box(abuf.as_slice());
+        });
+        let rd = bench(&format!("crossover dense  act={pct}%"), 1.0, 60, 300, || {
+            arr.frame_merged_dense_into(&mut dbuf, 40_000);
+            std::hint::black_box(dbuf.as_slice());
+        });
+        let winner = if rd.mean_ns < ra.mean_ns { "dense" } else { "active" };
+        println!("{}  [{winner} wins]", ra.report());
+        println!("{}", rd.report());
+        if rd.mean_ns < ra.mean_ns && crossover.is_none() {
+            crossover = Some(alpha);
+        }
+        let fps = ra.throughput_per_sec();
+        entries.push(JsonEntry::with(ra, "frames_per_sec", fps));
+        let fps = rd.throughput_per_sec();
+        entries.push(JsonEntry::with(rd, "frames_per_sec", fps));
+    }
+    match crossover {
+        Some(a) => println!(
+            "chosen dense-fallback threshold: α = {:.0}% (configured = {:.0}%)",
+            a * 100.0,
+            DENSE_FALLBACK_ALPHA * 100.0
+        ),
+        None => println!(
+            "dense never won in the swept range; keep DENSE_FALLBACK_ALPHA = {:.0}%",
+            DENSE_FALLBACK_ALPHA * 100.0
+        ),
     }
 
     dump_json(&entries, "BENCH_tsurface.json");

@@ -58,6 +58,10 @@ pub struct PipelineStats {
     /// which is the pipeline's no-full-stream-copy guarantee.
     pub peak_batch_len: usize,
     pub wall_seconds: f64,
+    /// Router statistics, including the dirty-band snapshot counters:
+    /// `router.snapshots_served` (= `frames_emitted`) and
+    /// `router.bands_skipped_unchanged` (band renders the dirty-band
+    /// protocol avoided — the observable win on sparse streams).
     pub router: RouterStats,
     /// Throughput in events/second of wall time.
     pub events_per_second: f64,
@@ -231,6 +235,32 @@ mod tests {
         let run = run(std::iter::empty(), res, 150_000, &PipelineConfig::default());
         assert_eq!(run.frames.len(), 3);
         assert!(run.frames.iter().all(|(_, f)| f.as_slice().iter().all(|&v| v == 0.0)));
+        // Dirty-band protocol on an empty stream: the first snapshot
+        // renders every (empty) band; the later ones skip them all.
+        let st = &run.stats.router;
+        assert_eq!(st.snapshots_served, 3);
+        assert_eq!(st.bands_skipped_unchanged, 2 * st.per_shard.len() as u64);
+    }
+
+    #[test]
+    fn sparse_stream_skips_untouched_bands() {
+        // All activity confined to one row: after the first window, every
+        // never-written band is provably static and must stop costing a
+        // shard round-trip while the frames stay exact.
+        let res = Resolution::new(16, 16);
+        let evs: Vec<LabeledEvent> = (0..200u64)
+            .map(|k| LabeledEvent {
+                ev: Event::new(1 + k * 900, (k % 16) as u16, 5, Polarity::On),
+                is_signal: true,
+            })
+            .collect();
+        let run = run(evs.iter().copied(), res, 180_000, &PipelineConfig::default());
+        let st = &run.stats.router;
+        assert_eq!(st.snapshots_served, run.stats.frames_emitted);
+        assert!(
+            st.bands_skipped_unchanged > 0,
+            "clean bands must be skipped: {st:?}"
+        );
     }
 
     #[test]

@@ -14,14 +14,36 @@
 //! Backpressure still propagates through bounded queues (`queue_depth`
 //! counts in-flight *batches* per shard), and scatter-gather frame
 //! snapshots recycle their band buffers: each `Snapshot` request carries
-//! a buffer the shard fills and returns, so a steady-state serving loop
-//! performs zero per-frame allocations (see [`Router::frame_into`]).
-//! Because each shard renders its band via the array's activity-aware
-//! `frame_merged_into`, snapshot cost scales with the band's *active*
-//! pixels, not its area — the per-band inheritance of the O(active)
-//! readout (see [`crate::isc`] module docs).
+//! the shard's own previous band buffer, which the shard refreshes and
+//! returns, so a steady-state serving loop performs no per-frame buffer
+//! allocations (see [`Router::frame_into`]).
 //! std::thread + sync_channel (tokio is not available offline; bounded
 //! mpsc gives the same backpressure semantics deterministically).
+//!
+//! ## Dirty-band snapshots (PR 3)
+//!
+//! Snapshots are incremental. The router keeps each shard's last
+//! rendered band ([`BandCache`]) plus a per-shard dirty bit (set when a
+//! write batch ships); shards track their own dirty state and per-row
+//! dirty watermarks since their last reply. A snapshot then costs, per
+//! band:
+//!
+//! | Band state | Work |
+//! |---|---|
+//! | clean + cached at the same `at_us` | **skipped entirely** (no shard round-trip, composite from cache) |
+//! | clean + provably all-zero (every write expired) | **skipped entirely** for any later `at_us` |
+//! | clean but shard must confirm | `Unchanged` reply, zero render work |
+//! | dirty at the cached `at_us` | partial re-render of the dirty row span — O(dirty rows) |
+//! | dirty at a new `at_us` | band render (activity-aware + row-parallel, see [`crate::isc`]) |
+//!
+//! Steady-state snapshot cost is therefore O(dirty) render work plus
+//! the unavoidable composite memcpy, instead of O(H·W) renders; a
+//! sparse stream whose activity sits in a few bands skips most shard
+//! round-trips outright ([`RouterStats::bands_skipped_unchanged`]
+//! counts both skip flavors). The shard render itself stays bit-for-bit
+//! what a full re-render would produce, provided snapshot times are
+//! causal (non-decreasing and ≥ the routed event times — the same
+//! contract as the activity-aware readout, see [`crate::util::active`]).
 
 use crate::events::{Event, Resolution};
 use crate::isc::{IscArray, IscConfig};
@@ -51,10 +73,39 @@ impl Default for RouterConfig {
 enum ShardMsg {
     /// A staged batch of writes; `y` is still in sensor coordinates.
     WriteBatch(Vec<Event>),
-    /// Render the band's merged frame at `at_us` directly into `buf` and
-    /// send it back (the buffer cycles shard → router → shard).
-    Snapshot { at_us: u64, buf: Grid<f64>, reply: SyncSender<(usize, Grid<f64>)> },
+    /// Render the band's merged frame at `at_us` into `buf` and send it
+    /// back (the buffer cycles shard → router → shard) — or, when the
+    /// band provably cannot have changed, return the buffer untouched
+    /// with `rendered: false` (an `Unchanged` reply). `cache_valid`
+    /// promises `buf` still holds this shard's previous reply.
+    Snapshot { at_us: u64, buf: Grid<f64>, cache_valid: bool, reply: SyncSender<SnapReply> },
     Stop,
+}
+
+/// A shard's answer to [`ShardMsg::Snapshot`].
+struct SnapReply {
+    shard: usize,
+    buf: Grid<f64>,
+    /// false = the band was clean and `buf` still holds the previous
+    /// render (zero render work was performed).
+    rendered: bool,
+    /// See [`BandCache::empty_static`].
+    empty_static: bool,
+}
+
+/// Router-side cached state of one shard's band between snapshots.
+struct BandCache {
+    /// The shard's last rendered band (None only while in flight).
+    buf: Option<Grid<f64>>,
+    /// Query time of the cached render.
+    at_us: u64,
+    /// The cache holds a band this shard actually rendered (false until
+    /// the first snapshot reply arrives).
+    valid: bool,
+    /// The cached band is all-zero and stays all-zero at any later query
+    /// time absent new writes (every routed write had already expired at
+    /// `at_us` — passive decay is monotone, so zero stays zero).
+    empty_static: bool,
 }
 
 /// Post-shutdown statistics.
@@ -65,6 +116,12 @@ pub struct RouterStats {
     /// Batch messages shipped across all shards (events_routed / batches
     /// is the effective coalescing factor).
     pub batches_shipped: u64,
+    /// Frame snapshots served (`frame`/`frame_into` calls).
+    pub snapshots_served: u64,
+    /// Band renders avoided by the dirty-band protocol: clean bands
+    /// composited from the router cache, whether skipped without a shard
+    /// round-trip or acknowledged `Unchanged` by the shard.
+    pub bands_skipped_unchanged: u64,
 }
 
 /// The sharded router.
@@ -76,10 +133,15 @@ pub struct Router {
     batch_size: usize,
     /// Per-shard staging buffers awaiting a full batch.
     staging: Vec<Vec<Event>>,
-    /// Recycled band buffers for frame snapshots (shard → router → shard).
-    snap_bufs: Vec<Grid<f64>>,
+    /// Per-shard cached band from the previous snapshot (dirty-band
+    /// compositing; the buffers cycle shard → router → shard).
+    caches: Vec<BandCache>,
+    /// Shards that received a write batch since their band was cached.
+    shard_dirty: Vec<bool>,
     events_routed: u64,
     batches_shipped: u64,
+    snapshots_served: u64,
+    bands_skipped_unchanged: u64,
 }
 
 impl Router {
@@ -97,23 +159,82 @@ impl Router {
             let rows = band_h.min(res.height as usize - shard * band_h);
             let band_res = Resolution::new(res.width, rows as u16);
             let mut isc_cfg = cfg.isc.clone();
-            isc_cfg.seed = isc_cfg.seed.wrapping_add(shard as u64 * 0x9e37_79b9);
+            // Full 64-bit odd multiplier (the golden-ratio constant) so
+            // every shard's mismatch RNG stream is well separated even at
+            // high shard counts — a truncated 32-bit constant only
+            // perturbs the low half of the seed.
+            isc_cfg.seed =
+                isc_cfg.seed.wrapping_add((shard as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
             let y0 = (shard * band_h) as u16;
+            // All shards render their bands concurrently, so each band's
+            // in-shard row parallelism gets its share of the cores —
+            // without this cap a snapshot would spawn up to
+            // n_shards × available_parallelism transient threads.
+            let render_chunks = {
+                use crate::util::parallel::{auto_chunks, available_threads};
+                auto_chunks(band_res.pixels()).min((available_threads() / n).max(1))
+            };
             handles.push(std::thread::spawn(move || {
                 let mut array = IscArray::new(band_res, isc_cfg);
                 let mut processed = 0u64;
+                // Dirty-band state: what the previous reply rendered and
+                // which band-local rows have been written since.
+                let mut last_at: Option<u64> = None;
+                let mut dirty = false;
+                let mut dirty_rows: Option<(usize, usize)> = None;
+                let mut empty_static = false;
                 for msg in rx {
                     match msg {
                         ShardMsg::WriteBatch(mut batch) => {
                             for e in &mut batch {
                                 e.y -= y0;
+                                let yl = e.y as usize;
+                                dirty_rows = Some(match dirty_rows {
+                                    None => (yl, yl),
+                                    Some((lo, hi)) => (lo.min(yl), hi.max(yl)),
+                                });
                             }
+                            dirty = dirty || !batch.is_empty();
                             array.write_batch(&batch);
                             processed += batch.len() as u64;
                         }
-                        ShardMsg::Snapshot { at_us, mut buf, reply } => {
-                            array.frame_merged_into(&mut buf, at_us);
-                            let _ = reply.send((y0 as usize, buf));
+                        ShardMsg::Snapshot { at_us, mut buf, cache_valid, reply } => {
+                            let cached = cache_valid && last_at.is_some();
+                            // Clean band: the cached render is still exact
+                            // at the same query time, or at any later one
+                            // when it was all-zero with no pending decay
+                            // (every write already expired — see
+                            // `BandCache::empty_static`).
+                            let unchanged = cached
+                                && !dirty
+                                && (last_at == Some(at_us)
+                                    || (empty_static && at_us >= last_at.unwrap()));
+                            if !unchanged {
+                                if cached && dirty && last_at == Some(at_us) {
+                                    // Same query time: only rows written
+                                    // since the cached render can differ.
+                                    // O(dirty rows) via the watermarks.
+                                    let (lo, hi) = dirty_rows.unwrap_or((0, 0));
+                                    array.frame_merged_rows_into(&mut buf, at_us, lo..hi + 1);
+                                } else {
+                                    array.frame_merged_into_chunks(
+                                        &mut buf,
+                                        at_us,
+                                        render_chunks,
+                                    );
+                                }
+                                let empty = buf.as_slice().iter().all(|&v| v == 0.0);
+                                empty_static = empty && array.clock_us() <= at_us;
+                            }
+                            last_at = Some(at_us);
+                            dirty = false;
+                            dirty_rows = None;
+                            let _ = reply.send(SnapReply {
+                                shard,
+                                buf,
+                                rendered: !unchanged,
+                                empty_static,
+                            });
                         }
                         ShardMsg::Stop => break,
                     }
@@ -124,7 +245,15 @@ impl Router {
         }
         Self {
             staging: (0..n).map(|_| Vec::with_capacity(cfg.batch_size.max(1))).collect(),
-            snap_bufs: vec![Grid::new(1, 1, 0.0); n],
+            caches: (0..n)
+                .map(|_| BandCache {
+                    buf: Some(Grid::new(1, 1, 0.0)),
+                    at_us: 0,
+                    valid: false,
+                    empty_static: false,
+                })
+                .collect(),
+            shard_dirty: vec![false; n],
             senders,
             handles,
             res,
@@ -132,6 +261,8 @@ impl Router {
             batch_size: cfg.batch_size.max(1),
             events_routed: 0,
             batches_shipped: 0,
+            snapshots_served: 0,
+            bands_skipped_unchanged: 0,
         }
     }
 
@@ -185,6 +316,8 @@ impl Router {
         let batch = std::mem::replace(&mut self.staging[s], replacement);
         self.senders[s].send(ShardMsg::WriteBatch(batch)).expect("shard died");
         self.batches_shipped += 1;
+        // The shard's cached band no longer reflects every routed write.
+        self.shard_dirty[s] = true;
     }
 
     /// Ship all staged events to their shards.
@@ -204,29 +337,76 @@ impl Router {
 
     /// Scatter-gather a frame snapshot into a caller-owned grid. Staged
     /// writes are flushed first so the snapshot observes every routed
-    /// event. Band buffers are recycled between calls: after the first
-    /// frame, the readout path performs zero heap allocations.
+    /// event. Dirty-band protocol: clean bands whose cached render is
+    /// provably still exact are composited straight from the router
+    /// cache (no shard round-trip); the rest are requested concurrently,
+    /// and shards that find themselves clean reply `Unchanged` without
+    /// rendering. Band buffers are recycled per shard, so after the
+    /// first frame the readout path performs no buffer allocations.
     pub fn frame_into(&mut self, out: &mut Grid<f64>, at_us: u64) {
         self.flush();
+        self.snapshots_served += 1;
         let w = self.res.width as usize;
         out.ensure_shape(w, self.res.height as usize, 0.0);
-        let (tx, rx) = sync_channel(self.senders.len());
-        for s in &self.senders {
-            let buf = self.snap_bufs.pop().unwrap_or_else(|| Grid::new(1, 1, 0.0));
-            s.send(ShardMsg::Snapshot { at_us, buf, reply: tx.clone() })
-                .expect("shard died");
+        let n = self.senders.len();
+        let (tx, rx) = sync_channel(n);
+        let mut in_flight = 0usize;
+        for s in 0..n {
+            let cache = &mut self.caches[s];
+            // Skip the round-trip when the cached band is provably still
+            // exact: same query time, or an all-zero band whose every
+            // write had already expired (decay is monotone — zero stays
+            // zero at any later time absent new writes).
+            let skip = cache.valid
+                && !self.shard_dirty[s]
+                && (cache.at_us == at_us || (cache.empty_static && at_us >= cache.at_us));
+            if skip {
+                cache.at_us = at_us;
+                self.bands_skipped_unchanged += 1;
+                continue;
+            }
+            let buf = cache.buf.take().expect("band buffer in flight");
+            let msg =
+                ShardMsg::Snapshot { at_us, buf, cache_valid: cache.valid, reply: tx.clone() };
+            self.senders[s].send(msg).expect("shard died");
+            in_flight += 1;
         }
         drop(tx);
+        // Shards render their bands concurrently (row-parallel inside the
+        // larger ones); replies land in completion order.
+        for r in rx.iter().take(in_flight) {
+            if !r.rendered {
+                self.bands_skipped_unchanged += 1;
+            }
+            let cache = &mut self.caches[r.shard];
+            cache.buf = Some(r.buf);
+            cache.at_us = at_us;
+            cache.valid = true;
+            cache.empty_static = r.empty_static;
+            self.shard_dirty[r.shard] = false;
+        }
+        // Composite every band — refreshed or cached — into the frame.
         let slice = out.as_mut_slice();
-        for (y0, band) in rx.iter().take(self.senders.len()) {
-            let rows = band.height();
-            slice[y0 * w..(y0 + rows) * w].copy_from_slice(band.as_slice());
-            self.snap_bufs.push(band);
+        for (s, cache) in self.caches.iter().enumerate() {
+            let band = cache.buf.as_ref().expect("band buffer returned");
+            let y0 = s * self.band_h;
+            slice[y0 * w..y0 * w + band.len()].copy_from_slice(band.as_slice());
         }
     }
 
     pub fn events_routed(&self) -> u64 {
         self.events_routed
+    }
+
+    /// Frame snapshots served so far.
+    pub fn snapshots_served(&self) -> u64 {
+        self.snapshots_served
+    }
+
+    /// Band renders avoided so far by the dirty-band protocol (cache
+    /// skips + shard `Unchanged` replies).
+    pub fn bands_skipped_unchanged(&self) -> u64 {
+        self.bands_skipped_unchanged
     }
 
     pub fn n_shards(&self) -> usize {
@@ -245,6 +425,8 @@ impl Router {
             events_routed: self.events_routed,
             per_shard,
             batches_shipped: self.batches_shipped,
+            snapshots_served: self.snapshots_served,
+            bands_skipped_unchanged: self.bands_skipped_unchanged,
         }
     }
 }
@@ -366,6 +548,107 @@ mod tests {
             assert_eq!(out.as_slice().as_ptr(), ptr, "warm frame_into must not reallocate");
         }
         assert!(out.as_slice().iter().any(|&v| v > 0.0));
+        r.shutdown();
+    }
+
+    #[test]
+    fn snapshot_without_writes_performs_zero_band_renders() {
+        let res = Resolution::new(16, 16);
+        let mut r = Router::new(res, RouterConfig { n_shards: 4, ..RouterConfig::default() });
+        for y in 0..16u16 {
+            r.route(Event::new(1_000 + y as u64, 3, y, Polarity::On));
+        }
+        let f1 = r.frame(5_000);
+        let skips_before = r.bands_skipped_unchanged();
+        // Same query time, no intervening writes: every band must be
+        // composited from cache with zero shard render work.
+        let f2 = r.frame(5_000);
+        assert_eq!(f1, f2, "composited snapshot must equal the rendered one");
+        assert_eq!(
+            r.bands_skipped_unchanged() - skips_before,
+            r.n_shards() as u64,
+            "all bands clean ⇒ all skipped"
+        );
+        assert_eq!(r.snapshots_served(), 2);
+        let stats = r.shutdown();
+        assert_eq!(stats.snapshots_served, 2);
+        assert!(stats.bands_skipped_unchanged >= stats.per_shard.len() as u64);
+    }
+
+    #[test]
+    fn empty_bands_stay_skipped_as_time_advances() {
+        // Activity confined to one band: after the first snapshot the
+        // untouched bands are provably all-zero at every later time and
+        // must never cost a shard round-trip again.
+        let res = Resolution::new(8, 8);
+        let mut r = Router::new(res, RouterConfig { n_shards: 4, ..RouterConfig::default() });
+        r.route(Event::new(1_000, 2, 0, Polarity::On)); // band 0 only
+        r.frame(2_000);
+        let skips0 = r.bands_skipped_unchanged();
+        r.frame(30_000);
+        // Bands 1..3 are empty-static; band 0 re-renders (decay advanced).
+        assert_eq!(r.bands_skipped_unchanged() - skips0, 3);
+        r.shutdown();
+    }
+
+    #[test]
+    fn dirty_band_composite_equals_full_rerender_across_interleavings() {
+        let res = Resolution::new(12, 12);
+        let cfg = RouterConfig {
+            n_shards: 3,
+            queue_depth: 16,
+            isc: IscConfig { bank_size: 32, ..IscConfig::default() },
+            ..RouterConfig::default()
+        };
+        // Spatially clustered bursts (8 events per row, rows 0/3/6/9/…)
+        // so individual chunks leave some bands untouched — the skip,
+        // re-render and composite-from-cache paths all get exercised.
+        let events: Vec<Event> = (0..90u64)
+            .map(|k| {
+                let y = ((k / 8) * 3 % 12) as u16;
+                Event::new(1_000 + k * 400, (k % 12) as u16, y, Polarity::On)
+            })
+            .collect();
+        let mut incremental = Router::new(res, cfg.clone());
+        for (i, chunk) in events.chunks(15).enumerate() {
+            incremental.route_batch(chunk);
+            // Causal, non-decreasing snapshot times.
+            let at = chunk.last().unwrap().t + 200 * (i as u64 % 3);
+            let composited = incremental.frame(at);
+            // Reference: a fresh identically-configured router replaying
+            // the same prefix renders everything from scratch.
+            let mut fresh = Router::new(res, cfg.clone());
+            fresh.route_batch(&events[..(i + 1) * 15]);
+            assert_eq!(composited, fresh.frame(at), "step {i}");
+            fresh.shutdown();
+        }
+        incremental.shutdown();
+    }
+
+    #[test]
+    fn same_time_dirty_rows_rerender_partially_and_exactly() {
+        let res = Resolution::new(8, 8);
+        let cfg = RouterConfig { n_shards: 2, ..RouterConfig::default() };
+        let mut r = Router::new(res, cfg.clone());
+        let warm: Vec<Event> = (0..20u64)
+            .map(|k| Event::new(1_000 + k * 100, (k % 8) as u16, (k % 8) as u16, Polarity::On))
+            .collect();
+        r.route_batch(&warm);
+        let at = 10_000u64;
+        let f1 = r.frame(at);
+        // New causal writes into one band, snapshot at the SAME time:
+        // the shard takes the dirty-row-watermark partial render path.
+        let dirty: Vec<Event> = (0..6u64)
+            .map(|k| Event::new(5_000 + k, k as u16, 1, Polarity::On))
+            .collect();
+        r.route_batch(&dirty);
+        let f2 = r.frame(at);
+        let mut fresh = Router::new(res, cfg);
+        fresh.route_batch(&warm);
+        fresh.route_batch(&dirty);
+        assert_eq!(f2, fresh.frame(at), "partial re-render must equal a full one");
+        assert_ne!(f1, f2, "the dirty writes must be visible");
+        fresh.shutdown();
         r.shutdown();
     }
 

@@ -23,11 +23,13 @@
 use crate::circuit::montecarlo::{FittedBank, MismatchParams};
 use crate::circuit::params::VDD;
 use crate::events::{Event, Polarity, Resolution};
-use crate::util::active::ActiveSet;
+use crate::util::active::{for_each_sorted_run, ActiveSet, DENSE_FALLBACK_ALPHA};
 use crate::util::decay::DecayLut;
 use crate::util::fit::DoubleExp;
 use crate::util::grid::Grid;
+use crate::util::parallel::{auto_chunks, balanced_row_ranges, for_each_row_chunk};
 use crate::util::rng::Pcg64;
+use std::ops::Range;
 
 /// Array configuration.
 #[derive(Clone, Debug)]
@@ -81,6 +83,15 @@ impl Plane {
     fn maybe_prune(&mut self, writes: usize, clock_us: u64, horizon_us: u64) {
         self.active.maybe_prune_expired(writes, &self.t_write, clock_us, horizon_us);
     }
+}
+
+/// One readout pass of the render plan: a plane, the list-vs-dense mode
+/// chosen by the [`DENSE_FALLBACK_ALPHA`] activity test, and whether the
+/// pass max-merges (the OFF plane of a merged frame) or plain-stores.
+struct PlanePass<'a> {
+    plane: &'a Plane,
+    dense: bool,
+    merge: bool,
 }
 
 /// The ISC analog array.
@@ -170,6 +181,13 @@ impl IscArray {
     /// cell is eligible for lazy removal from the active lists).
     pub fn memory_horizon_us(&self) -> u64 {
         self.lut.horizon_us()
+    }
+
+    /// Latest event time ingested — the prune clock, and the causality
+    /// bound of the activity-aware readout contract (frames at
+    /// `t_us ≥ clock_us()` are exact; see [`crate::util::active`]).
+    pub fn clock_us(&self) -> u64 {
+        self.clock_us
     }
 
     /// Pixels currently listed as active on plane `p` (diagnostics).
@@ -320,7 +338,9 @@ impl IscArray {
     /// time-surface the CV pipeline consumes (Fig. 6b). Hot path: the
     /// buffer is zero-filled once (vectorized), then only active pixels
     /// are evaluated through the quantized-decay LUT — O(active), no
-    /// transcendentals (§Perf iteration 3).
+    /// transcendentals — with an automatic dense-scan fallback above the
+    /// [`DENSE_FALLBACK_ALPHA`] activity fraction and row-parallel
+    /// rendering on large frames (see [`IscArray::frame_into_chunks`]).
     pub fn frame(&self, p: Polarity, t_us: u64) -> Grid<f64> {
         let mut g = Grid::new(self.res.width as usize, self.res.height as usize, 0.0f64);
         self.frame_into(p, &mut g, t_us);
@@ -330,14 +350,22 @@ impl IscArray {
     /// Zero-copy variant of [`IscArray::frame`]: renders into a
     /// caller-owned buffer (reshaped on first use, never reallocated on a
     /// warm buffer). This is the serving loop's per-window readout path.
+    /// Large frames render row-parallel ([`crate::util::parallel`]).
     ///
     /// Exactness contract: identical to [`IscArray::frame_dense_into`]
     /// for every `t_us` ≥ the latest ingested event time (see
     /// [`crate::util::active`] for why past-facing queries may differ).
     pub fn frame_into(&self, p: Polarity, out: &mut Grid<f64>, t_us: u64) {
-        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
-        out.fill(0.0);
-        self.accumulate_active(self.plane_for(p), out, t_us, false);
+        self.frame_into_chunks(p, out, t_us, auto_chunks(self.res.pixels()));
+    }
+
+    /// [`IscArray::frame_into`] with an explicit row-chunk count: the
+    /// rows are split into `chunks` weight-balanced ranges (per-row
+    /// active counts) rendered on scoped threads. Bit-for-bit identical
+    /// for every chunk count — each output row is a pure function of
+    /// immutable plane state (`chunks = 1` is the single-threaded path).
+    pub fn frame_into_chunks(&self, p: Polarity, out: &mut Grid<f64>, t_us: u64, chunks: usize) {
+        self.render_chunked(&self.passes(false, p), out, t_us, chunks);
     }
 
     /// Dense reference readout: full H·W scan through the same LUT.
@@ -347,25 +375,6 @@ impl IscArray {
         let s = out.as_mut_slice();
         for i in 0..s.len() {
             s[i] = self.lut.value(plane.param_idx[i] as usize, plane.t_write[i], t_us);
-        }
-    }
-
-    /// Evaluate one plane's active pixels into `out`; with `merge_max`
-    /// the value only lands where it exceeds what is already there.
-    fn accumulate_active(&self, plane_idx: usize, out: &mut Grid<f64>, t_us: u64, merge_max: bool) {
-        let plane = &self.planes[plane_idx];
-        let w = self.res.width as usize;
-        for y in 0..plane.active.height() {
-            let row_t = &plane.t_write[y * w..(y + 1) * w];
-            let row_pi = &plane.param_idx[y * w..(y + 1) * w];
-            let row_out = out.row_mut(y);
-            for &x in plane.active.row(y) {
-                let xi = x as usize;
-                let v = self.lut.value(row_pi[xi] as usize, row_t[xi], t_us);
-                if !merge_max || v > row_out[xi] {
-                    row_out[xi] = v;
-                }
-            }
         }
     }
 
@@ -379,11 +388,144 @@ impl IscArray {
 
     /// Zero-copy variant of [`IscArray::frame_merged`]: the OFF plane is
     /// max-merged directly into `out` without a scratch grid. O(active)
-    /// over both planes.
+    /// over both planes, with the same dense fallback and row
+    /// parallelism as [`IscArray::frame_into`].
     pub fn frame_merged_into(&self, out: &mut Grid<f64>, t_us: u64) {
-        self.frame_into(Polarity::On, out, t_us);
-        if self.cfg.polarity_sensitive {
-            self.accumulate_active(Polarity::Off.index(), out, t_us, true);
+        self.frame_merged_into_chunks(out, t_us, auto_chunks(self.res.pixels()));
+    }
+
+    /// [`IscArray::frame_merged_into`] with an explicit row-chunk count
+    /// (see [`IscArray::frame_into_chunks`] for the chunking contract).
+    pub fn frame_merged_into_chunks(&self, out: &mut Grid<f64>, t_us: u64, chunks: usize) {
+        self.render_chunked(&self.passes(true, Polarity::On), out, t_us, chunks);
+    }
+
+    /// Forced active-list merged render (dense fallback disabled,
+    /// single-threaded) — the reference the α crossover bench sweeps
+    /// against [`IscArray::frame_merged_dense_into`].
+    pub fn frame_merged_active_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        let mut passes = self.passes(true, Polarity::On);
+        for pass in &mut passes {
+            pass.dense = false;
+        }
+        self.render_chunked(&passes, out, t_us, 1);
+    }
+
+    /// Partial merged re-render of rows `rows` only — the dirty-band
+    /// snapshot path: `out` must already hold this array's full merged
+    /// frame at the **same** `t_us` (rows outside the range are left
+    /// untouched, which is only valid when their pixels cannot have
+    /// changed). O(dirty rows), single-threaded (dirty spans are small
+    /// by construction).
+    pub fn frame_merged_rows_into(&self, out: &mut Grid<f64>, t_us: u64, rows: Range<usize>) {
+        let (w, h) = (self.res.width as usize, self.res.height as usize);
+        assert!(out.width() == w && out.height() == h, "partial render needs a full-shape buffer");
+        let rows = rows.start.min(h)..rows.end.min(h);
+        if rows.start >= rows.end {
+            return;
+        }
+        let passes = self.passes(true, Polarity::On);
+        let slab = &mut out.as_mut_slice()[rows.start * w..rows.end * w];
+        let mut scratch = Vec::new();
+        self.render_slab(&passes, rows, slab, t_us, &mut scratch);
+    }
+
+    /// Build the render plan: one pass per plane, ON first (plain store),
+    /// OFF max-merged on top when polarity-sensitive. Each pass picks the
+    /// dense fallback independently from its plane's activity.
+    fn passes(&self, merged: bool, p: Polarity) -> Vec<PlanePass<'_>> {
+        let mk = |idx: usize, merge: bool| {
+            let plane = &self.planes[idx];
+            PlanePass { plane, dense: plane.active.denser_than(DENSE_FALLBACK_ALPHA), merge }
+        };
+        if merged && self.cfg.polarity_sensitive {
+            vec![mk(Polarity::On.index(), false), mk(Polarity::Off.index(), true)]
+        } else {
+            vec![mk(self.plane_for(p), false)]
+        }
+    }
+
+    /// Chunked render driver: split the rows into weight-balanced ranges
+    /// and render each on its own scoped thread (inline when one chunk).
+    fn render_chunked(
+        &self,
+        passes: &[PlanePass<'_>],
+        out: &mut Grid<f64>,
+        t_us: u64,
+        chunks: usize,
+    ) {
+        let (w, h) = (self.res.width as usize, self.res.height as usize);
+        out.ensure_shape(w, h, 0.0);
+        let chunks = chunks.clamp(1, h);
+        if chunks == 1 {
+            let mut scratch = Vec::new();
+            self.render_slab(passes, 0..h, out.as_mut_slice(), t_us, &mut scratch);
+            return;
+        }
+        // Per-row work estimate: the zero-fill baseline plus each pass's
+        // cost — active count for a list walk, the full width for a
+        // dense scan — so threads balance under clustered activity.
+        let weights: Vec<usize> = (0..h)
+            .map(|y| {
+                1 + passes
+                    .iter()
+                    .map(|pass| if pass.dense { w } else { pass.plane.active.row(y).len() })
+                    .sum::<usize>()
+            })
+            .collect();
+        let ranges = balanced_row_ranges(&weights, chunks);
+        for_each_row_chunk(out, &ranges, |range, slab| {
+            let mut scratch = Vec::new();
+            self.render_slab(passes, range, slab, t_us, &mut scratch);
+        });
+    }
+
+    /// Render rows `rows` of the pass plan into `slab` (the row-major
+    /// slab covering exactly those rows). The inner loop sorts each
+    /// row's active columns once and gathers the LUT over contiguous
+    /// column runs — bounds-free parallel-slice walks instead of indexed
+    /// scatter (§Perf: batched LUT gathers).
+    fn render_slab(
+        &self,
+        passes: &[PlanePass<'_>],
+        rows: Range<usize>,
+        slab: &mut [f64],
+        t_us: u64,
+        scratch: &mut Vec<u16>,
+    ) {
+        let w = self.res.width as usize;
+        debug_assert_eq!(slab.len(), (rows.end - rows.start) * w);
+        // A leading dense store pass writes every cell itself.
+        if !passes.first().is_some_and(|pass| pass.dense && !pass.merge) {
+            slab.fill(0.0);
+        }
+        for pass in passes {
+            let (t_write, param) = (&pass.plane.t_write[..], &pass.plane.param_idx[..]);
+            for y in rows.clone() {
+                let row_out = &mut slab[(y - rows.start) * w..(y - rows.start + 1) * w];
+                if pass.dense {
+                    let src = y * w..(y + 1) * w;
+                    if pass.merge {
+                        self.lut.merge_run(&param[src.clone()], &t_write[src], t_us, row_out);
+                    } else {
+                        self.lut.fill_run(&param[src.clone()], &t_write[src], t_us, row_out);
+                    }
+                    continue;
+                }
+                let xs = pass.plane.active.row(y);
+                if xs.is_empty() {
+                    continue;
+                }
+                for_each_sorted_run(xs, scratch, |run| {
+                    let src = y * w + run.start..y * w + run.end;
+                    let out_run = &mut row_out[run];
+                    if pass.merge {
+                        self.lut.merge_run(&param[src.clone()], &t_write[src], t_us, out_run);
+                    } else {
+                        self.lut.fill_run(&param[src.clone()], &t_write[src], t_us, out_run);
+                    }
+                });
+            }
         }
     }
 
@@ -585,6 +727,92 @@ mod tests {
             64,
             "expired cells must be pruned by the write-budget scan"
         );
+    }
+
+    #[test]
+    fn chunked_render_identical_for_any_chunk_count() {
+        for polarity_sensitive in [false, true] {
+            let cfg = IscConfig { polarity_sensitive, ..IscConfig::default() };
+            let mut a = IscArray::new(Resolution::new(24, 13), cfg);
+            let events: Vec<Event> = (0..400u64)
+                .map(|k| {
+                    Event::new(
+                        1 + k * 90,
+                        (k % 24) as u16,
+                        ((k * 7) % 13) as u16,
+                        if k % 2 == 0 { Polarity::Off } else { Polarity::On },
+                    )
+                })
+                .collect();
+            a.write_batch(&events);
+            let t = events.last().unwrap().t + 500;
+            let mut reference = Grid::new(1, 1, 0.0);
+            a.frame_merged_into_chunks(&mut reference, t, 1);
+            // 2 and 8 chunks, plus more chunks than rows (13 rows).
+            for chunks in [2usize, 8, 64] {
+                let mut chunked = Grid::new(1, 1, 0.0);
+                a.frame_merged_into_chunks(&mut chunked, t, chunks);
+                assert_eq!(chunked, reference, "merged, chunks={chunks}");
+                a.frame_into_chunks(Polarity::On, &mut chunked, t, chunks);
+                let mut single = Grid::new(1, 1, 0.0);
+                a.frame_into_chunks(Polarity::On, &mut single, t, 1);
+                assert_eq!(chunked, single, "on-plane, chunks={chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_fallback_engages_and_matches_both_references() {
+        // 100 % activity: every pixel written ⇒ the α test must flip the
+        // render to the dense scan, and all three paths must agree at a
+        // causal query time.
+        let res = Resolution::new(20, 15);
+        let cfg = IscConfig { polarity_sensitive: true, ..IscConfig::default() };
+        let mut a = IscArray::new(res, cfg);
+        let events: Vec<Event> = (0..res.pixels() as u64)
+            .map(|k| {
+                Event::new(
+                    1 + k,
+                    (k % 20) as u16,
+                    (k / 20) as u16,
+                    if k % 3 == 0 { Polarity::Off } else { Polarity::On },
+                )
+            })
+            .collect();
+        a.write_batch(&events);
+        assert!(a.planes[0].active.denser_than(crate::util::active::DENSE_FALLBACK_ALPHA));
+        let t = events.last().unwrap().t + 1_000;
+        let (mut auto_f, mut dense, mut active) =
+            (Grid::new(1, 1, 0.0), Grid::new(1, 1, 0.0), Grid::new(1, 1, 0.0));
+        a.frame_merged_into(&mut auto_f, t);
+        a.frame_merged_dense_into(&mut dense, t);
+        a.frame_merged_active_into(&mut active, t);
+        assert_eq!(auto_f, dense);
+        assert_eq!(auto_f, active);
+    }
+
+    #[test]
+    fn partial_rows_render_matches_full_rerender() {
+        for polarity_sensitive in [false, true] {
+            let cfg = IscConfig { polarity_sensitive, ..IscConfig::default() };
+            let mut a = IscArray::new(Resolution::new(16, 12), cfg);
+            let warm: Vec<Event> = (0..80u64)
+                .map(|k| Event::new(1 + k * 600, (k % 16) as u16, (k % 12) as u16, Polarity::On))
+                .collect();
+            a.write_batch(&warm);
+            let t = 60_000u64;
+            let mut buf = Grid::new(1, 1, 0.0);
+            a.frame_merged_into(&mut buf, t);
+            // New writes confined to rows 3..6, still causal for t.
+            let dirty: Vec<Event> = (0..30u64)
+                .map(|k| {
+                    Event::new(55_000 + k, (k % 16) as u16, (3 + k % 3) as u16, Polarity::Off)
+                })
+                .collect();
+            a.write_batch(&dirty);
+            a.frame_merged_rows_into(&mut buf, t, 3..6);
+            assert_eq!(buf, a.frame_merged(t), "ps={polarity_sensitive}");
+        }
     }
 
     #[test]

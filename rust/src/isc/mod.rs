@@ -2,18 +2,29 @@
 //! paper's 3D-stacked 6T-1C eDRAM plane, driven by the Monte-Carlo fitted
 //! cell bank from [`crate::circuit`].
 //!
-//! ## Per-path complexity (activity-aware readout, PR 2)
+//! ## Per-path complexity (activity-aware readout PR 2, parallel readout PR 3)
 //!
 //! A = cells written within the bank-derived memory horizon (the age at
 //! which the slowest cell decays below 1 % of V_dd, ≈102 ms nominal),
-//! H·W = resolution, r = STCF patch radius.
+//! H·W = resolution, r = STCF patch radius, P = row chunks (auto:
+//! `available_parallelism`, gated to 1 below 32 k pixels), D = rows
+//! written since the last snapshot.
 //!
 //! | Path | Before | After |
 //! |---|---|---|
 //! | event write (`write`/`write_batch`) | O(1) | O(1) amortized (mark + lazy expiry) |
-//! | frame readout (`frame_into`/`frame_merged_into`) | O(H·W) LUT scan | zero-fill + O(A) LUT reads |
+//! | frame readout (`frame_into`/`frame_merged_into`) | O(H·W) LUT scan | zero-fill + O(A) sorted-run LUT gathers, O(A/P) wall-clock |
+//! | dense fallback (activity > α = 20 %) | n/a | O(H·W / P) contiguous row scans (beats the list walk past α) |
+//! | partial re-render (`frame_merged_rows_into`) | full frame | O(D·W) — the router's dirty-band snapshot unit |
 //! | STCF support query (`count_recent_in_row`) | (2r+1)² indexed reads | 2r+1 row slices, integer-age test |
 //! | exact point read (`read`/`compare`) | closed form | unchanged (reference) |
+//!
+//! Chunked rendering is bit-for-bit identical for every chunk count
+//! (each output row is a pure function of immutable plane state —
+//! mirroring the tiled analog readout, where every pixel is sampled
+//! concurrently by construction). The list/dense mode switch is decided
+//! per plane from total activity, never per chunk, so it cannot differ
+//! between the serial and parallel renders of one frame.
 //!
 //! This is the software mirror of the paper's passive-decay energy
 //! model: idle cells cost nothing at write time *and* readout time.

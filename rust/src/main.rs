@@ -97,12 +97,15 @@ fn cmd_pipeline(args: &Args) -> i32 {
     println!(
         "pipeline: {} events in, {} written, {} dropped by STCF\n\
          frames: {} ({} ms windows)\n\
+         snapshots: {} served, {} band renders skipped (dirty-band protocol)\n\
          wall: {:.3} s  throughput: {:.2} Meps  shards: {:?}",
         st.events_in,
         st.events_written,
         st.events_dropped_by_stcf,
         st.frames_emitted,
         cfg.window_us / 1000,
+        st.router.snapshots_served,
+        st.router.bands_skipped_unchanged,
         st.wall_seconds,
         st.events_per_second / 1e6,
         st.router.per_shard,

@@ -19,6 +19,7 @@ use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
 use crate::util::decay::{DecayLut, MAX_BINS};
 use crate::util::grid::{patch_bounds, Grid};
+use crate::util::parallel::{auto_chunks, balanced_row_ranges, for_each_row_chunk};
 
 /// Speed-Invariant Time Surface: on each event, neighbours with values
 /// above the incoming cell's are decremented and the cell is set to the
@@ -305,13 +306,43 @@ impl EventSink for Tore {
     }
 }
 
+impl Tore {
+    /// [`FrameSource::frame_into`] with an explicit row-chunk count:
+    /// rows split across scoped threads, weight-balanced by per-row
+    /// FIFO occupancy — bit-for-bit identical for every chunk count
+    /// (each cell's reduction is independent).
+    pub fn frame_into_chunks(&self, out: &mut Grid<f64>, t_us: u64, chunks: usize) {
+        let (w, h) = (self.res.width as usize, self.res.height as usize);
+        out.ensure_shape(w, h, 0.0);
+        let chunks = chunks.clamp(1, h);
+        let ranges = if chunks == 1 {
+            vec![0..h]
+        } else {
+            let weights: Vec<usize> = (0..h)
+                .map(|y| {
+                    1 + self.fifo[y * w..(y + 1) * w]
+                        .iter()
+                        .map(|c| c[0].len() + c[1].len())
+                        .sum::<usize>()
+                })
+                .collect();
+            balanced_row_ranges(&weights, chunks)
+        };
+        for_each_row_chunk(out, &ranges, |range, slab| {
+            for (o, cell) in slab.iter_mut().zip(&self.fifo[range.start * w..range.end * w]) {
+                *o = self.cell_value(cell, t_us);
+            }
+        });
+    }
+}
+
 impl FrameSource for Tore {
+    /// Per-cell FIFO reduction through the clipped-log LUT. The walk is
+    /// the costliest per pixel of any representation here (up to 2K LUT
+    /// reads per cell), so large frames split the rows across scoped
+    /// threads (see [`Tore::frame_into_chunks`]).
     fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
-        out.ensure_shape(self.res.width as usize, self.res.height as usize, 0.0);
-        let s = out.as_mut_slice();
-        for (o, cell) in s.iter_mut().zip(&self.fifo) {
-            *o = self.cell_value(cell, t_us);
-        }
+        self.frame_into_chunks(out, t_us, auto_chunks(self.res.pixels()));
     }
 }
 
@@ -439,6 +470,23 @@ mod tests {
         }
         // Far past t_max the LUT horizon reads 0, matching the clamp.
         assert_eq!(t.lut.eval(0, 5_000_000), 0.0);
+    }
+
+    #[test]
+    fn tore_chunked_frames_identical_for_any_chunk_count() {
+        let mut t = Tore::new(Resolution::new(9, 7), 3, 100.0, 1e6);
+        for k in 0..200u64 {
+            t.ingest(&ev(1 + k * 700, (k % 9) as u16, ((k * 3) % 7) as u16));
+        }
+        let at = 200 * 700 + 5_000;
+        let mut serial = crate::util::grid::Grid::new(1, 1, 0.0);
+        let mut chunked = crate::util::grid::Grid::new(1, 1, 0.0);
+        t.frame_into_chunks(&mut serial, at, 1);
+        // 2, 8 chunks and more chunks than rows (7 rows).
+        for chunks in [2usize, 8, 64] {
+            t.frame_into_chunks(&mut chunked, at, chunks);
+            assert_eq!(serial, chunked, "chunks={chunks}");
+        }
     }
 
     #[test]

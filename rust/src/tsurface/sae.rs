@@ -6,14 +6,20 @@
 //! per-row active-pixel lists ([`ActiveSet`]) so `frame_into` zero-fills
 //! once and then touches only written pixels, and the exponential kernel
 //! is evaluated through the shared quantized [`DecayLut`] (no `exp()` in
-//! any frame loop). Dense reference scans are kept as `frame_dense_into`
-//! for the equivalence tests and the dense-vs-active benchmarks.
+//! any frame loop). Large frames render row-parallel on scoped threads
+//! (`frame_into_chunks`, bit-for-bit identical for every chunk count),
+//! the inner loops gather over sorted contiguous column runs, and above
+//! [`DENSE_FALLBACK_ALPHA`] activity the render falls back to a dense
+//! row scan automatically. Dense reference scans are kept as
+//! `frame_dense_into` for the equivalence tests and the dense-vs-active
+//! benchmarks.
 
 use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
-use crate::util::active::ActiveSet;
+use crate::util::active::{for_each_sorted_run, ActiveSet, DENSE_FALLBACK_ALPHA};
 use crate::util::decay::DecayLut;
 use crate::util::grid::Grid;
+use crate::util::parallel::{auto_chunks, for_each_row_chunk};
 
 /// Surface of Active Events: per-pixel latest timestamp (full precision).
 pub struct Sae {
@@ -121,18 +127,21 @@ impl EventSink for Sae {
     }
 }
 
-impl FrameSource for Sae {
-    /// Frame = timestamps min-max normalized (the Fig. 6a view).
-    /// O(active): min/max and the value pass walk only written pixels.
-    fn frame_into(&self, out: &mut Grid<f64>, _t_us: u64) {
-        let w = self.res.width as usize;
-        out.ensure_shape(w, self.res.height as usize, 0.0);
-        out.fill(0.0);
+impl Sae {
+    /// [`FrameSource::frame_into`] with an explicit row-chunk count:
+    /// chunks render on scoped threads over disjoint row slabs and the
+    /// result is bit-for-bit identical for every chunk count (the
+    /// normalization bounds are computed once, before chunking).
+    pub fn frame_into_chunks(&self, out: &mut Grid<f64>, _t_us: u64, chunks: usize) {
+        let (w, h) = (self.res.width as usize, self.res.height as usize);
+        out.ensure_shape(w, h, 0.0);
         if self.active.is_empty() {
+            out.fill(0.0);
             return;
         }
+        // Normalization bounds over the active lists (= the written set).
         let (mut max, mut min_written) = (0u64, u64::MAX);
-        for y in 0..self.active.height() {
+        for y in 0..h {
             let row_t = &self.t[y * w..(y + 1) * w];
             for &x in self.active.row(y) {
                 let t = row_t[x as usize];
@@ -141,13 +150,44 @@ impl FrameSource for Sae {
             }
         }
         let span = (max - min_written).max(1) as f64;
-        for y in 0..self.active.height() {
-            let row_t = &self.t[y * w..(y + 1) * w];
-            let row_out = out.row_mut(y);
-            for &x in self.active.row(y) {
-                row_out[x as usize] = (row_t[x as usize] - min_written) as f64 / span;
+        let dense = self.active.denser_than(DENSE_FALLBACK_ALPHA);
+        let ranges = self.active.render_ranges(dense, chunks);
+        let (t_all, active) = (&self.t, &self.active);
+        for_each_row_chunk(out, &ranges, |range, slab| {
+            if dense {
+                // α fallback: one contiguous scan, unwritten pixels are 0.
+                for (o, &t) in slab.iter_mut().zip(&t_all[range.start * w..range.end * w]) {
+                    *o = if t == 0 { 0.0 } else { (t - min_written) as f64 / span };
+                }
+                return;
             }
-        }
+            slab.fill(0.0);
+            let mut scratch: Vec<u16> = Vec::new();
+            for y in range.clone() {
+                let xs = active.row(y);
+                if xs.is_empty() {
+                    continue;
+                }
+                let row_t = &t_all[y * w..(y + 1) * w];
+                let row_out = &mut slab[(y - range.start) * w..(y - range.start + 1) * w];
+                for_each_sorted_run(xs, &mut scratch, |run| {
+                    let src = &row_t[run.clone()];
+                    for (o, &t) in row_out[run].iter_mut().zip(src) {
+                        *o = (t - min_written) as f64 / span;
+                    }
+                });
+            }
+        });
+    }
+}
+
+impl FrameSource for Sae {
+    /// Frame = timestamps min-max normalized (the Fig. 6a view).
+    /// O(active): min/max and the value pass walk only written pixels,
+    /// with the dense fallback above [`DENSE_FALLBACK_ALPHA`] activity
+    /// and row-parallel rendering on large frames.
+    fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
+        self.frame_into_chunks(out, t_us, auto_chunks(self.res.pixels()));
     }
 }
 
@@ -265,28 +305,50 @@ impl EventSink for IdealTs {
     }
 }
 
+impl IdealTs {
+    /// [`FrameSource::frame_into`] with an explicit row-chunk count
+    /// (bit-for-bit identical for every chunk count; see
+    /// [`Sae::frame_into_chunks`]).
+    pub fn frame_into_chunks(&self, out: &mut Grid<f64>, t_us: u64, chunks: usize) {
+        let (w, h) = (self.sae.res.width as usize, self.sae.res.height as usize);
+        out.ensure_shape(w, h, 0.0);
+        let dense = self.active.denser_than(DENSE_FALLBACK_ALPHA);
+        let ranges = self.active.render_ranges(dense, chunks);
+        let (t_all, active, lut) = (&self.sae.t, &self.active, &self.lut);
+        for_each_row_chunk(out, &ranges, |range, slab| {
+            if dense {
+                // α fallback: one batched LUT gather over the whole slab.
+                lut.fill_run_single(&t_all[range.start * w..range.end * w], t_us, slab);
+                return;
+            }
+            slab.fill(0.0);
+            let mut scratch: Vec<u16> = Vec::new();
+            for y in range.clone() {
+                let xs = active.row(y);
+                if xs.is_empty() {
+                    continue;
+                }
+                let row_t = &t_all[y * w..(y + 1) * w];
+                let row_out = &mut slab[(y - range.start) * w..(y - range.start + 1) * w];
+                for_each_sorted_run(xs, &mut scratch, |run| {
+                    lut.fill_run_single(&row_t[run.clone()], t_us, &mut row_out[run]);
+                });
+            }
+        });
+    }
+}
+
 impl FrameSource for IdealTs {
     /// O(active) readout: zero-fill, then evaluate the LUT only on
     /// pixels live within the decay horizon (expired ones contribute
-    /// the 0 already written by the fill). Identical to
+    /// the 0 already written by the fill), as sorted-run batched LUT
+    /// gathers, row-parallel on large frames, with the dense fallback
+    /// above [`DENSE_FALLBACK_ALPHA`] activity. Identical to
     /// [`IdealTs::frame_dense_into`] for every `t_us` ≥ the latest
     /// ingested event time (see [`crate::util::active`] for the
     /// behind-the-stream-head caveat).
     fn frame_into(&self, out: &mut Grid<f64>, t_us: u64) {
-        let w = self.sae.res.width as usize;
-        out.ensure_shape(w, self.sae.res.height as usize, 0.0);
-        out.fill(0.0);
-        let active = &self.active;
-        for y in 0..active.height() {
-            let row_t = &self.sae.t[y * w..(y + 1) * w];
-            let row_out = out.row_mut(y);
-            for &x in active.row(y) {
-                let v = self.lut.value(0, row_t[x as usize], t_us);
-                if v > 0.0 {
-                    row_out[x as usize] = v;
-                }
-            }
-        }
+        self.frame_into_chunks(out, t_us, auto_chunks(self.sae.res.pixels()));
     }
 }
 
@@ -492,6 +554,53 @@ mod tests {
             assert!(got >= exact - 1e-6, "dt={dt}");
             assert!(got - exact <= 50.0 / tau + 1e-6, "dt={dt}: err {}", got - exact);
         }
+    }
+
+    #[test]
+    fn chunked_frames_identical_for_any_chunk_count() {
+        let res = Resolution::new(14, 11);
+        let mut sae = Sae::new(res);
+        let mut ts = IdealTs::new(res, 12_000.0);
+        let evs: Vec<Event> =
+            (0..120u64).map(|k| ev(1 + k * 333, (k % 14) as u16, ((k * 3) % 11) as u16)).collect();
+        sae.ingest_batch(&evs);
+        ts.ingest_batch(&evs);
+        let t = evs.last().unwrap().t + 2_500;
+        let (mut a, mut b) = (Grid::new(1, 1, 0.0), Grid::new(1, 1, 0.0));
+        // 2, 8 and more-chunks-than-rows (11 rows) against the serial render.
+        for chunks in [2usize, 8, 64] {
+            sae.frame_into_chunks(&mut a, t, 1);
+            sae.frame_into_chunks(&mut b, t, chunks);
+            assert_eq!(a, b, "sae chunks={chunks}");
+            ts.frame_into_chunks(&mut a, t, 1);
+            ts.frame_into_chunks(&mut b, t, chunks);
+            assert_eq!(a, b, "ideal-ts chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn dense_fallback_matches_dense_reference_at_full_activity() {
+        let res = Resolution::new(12, 9);
+        let mut sae = Sae::new(res);
+        let mut ts = IdealTs::new(res, 20_000.0);
+        // Write every pixel: activity 100 % > α, the fallback must engage
+        // and still equal the dense reference scans.
+        for y in 0..9u16 {
+            for x in 0..12u16 {
+                let e = ev(1 + (y as u64 * 12 + x as u64) * 40, x, y);
+                sae.ingest(&e);
+                ts.ingest(&e);
+            }
+        }
+        assert!(sae.active.denser_than(crate::util::active::DENSE_FALLBACK_ALPHA));
+        let t = 1 + 108 * 40 + 777;
+        let (mut got, mut want) = (Grid::new(1, 1, 0.0), Grid::new(1, 1, 0.0));
+        sae.frame_into(&mut got, t);
+        sae.frame_dense_into(&mut want, t);
+        assert_eq!(got, want, "sae dense fallback");
+        ts.frame_into(&mut got, t);
+        ts.frame_dense_into(&mut want, t);
+        assert_eq!(got, want, "ideal-ts dense fallback");
     }
 
     #[test]

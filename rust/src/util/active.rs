@@ -31,6 +31,18 @@
 /// are cheap to walk anyway, and this keeps tiny sensors scan-free.
 pub const MIN_PRUNE_BUDGET: usize = 256;
 
+/// Dense-fallback activity threshold α: once a plane lists more than
+/// α·rows·width pixels, the zero-fill + list-walk readout pays its
+/// constants (indexed stores, run bookkeeping) on nearly every pixel and
+/// a straight dense row scan wins. Readout paths switch automatically via
+/// [`ActiveSet::denser_than`]. The default is the bench-sweep crossover
+/// (`bench_tsurface` sweeps α ∈ {5, 10, 20, 40 %} and prints the measured
+/// crossover each run so this constant can be re-tuned); the two modes
+/// are bit-for-bit interchangeable for causal queries (`t_us` ≥ the
+/// stream clock — see the module contract above), so the switch never
+/// changes a served frame.
+pub const DENSE_FALLBACK_ALPHA: f64 = 0.20;
+
 /// Per-row lists of currently-active pixel x-coordinates.
 #[derive(Clone, Debug)]
 pub struct ActiveSet {
@@ -82,6 +94,29 @@ impl ActiveSet {
     #[inline]
     pub fn row(&self, y: usize) -> &[u16] {
         &self.rows[y]
+    }
+
+    /// Does the listed fraction exceed `alpha` of the plane? Readout
+    /// paths use this with [`DENSE_FALLBACK_ALPHA`] to fall back to a
+    /// dense row scan at high activity.
+    #[inline]
+    pub fn denser_than(&self, alpha: f64) -> bool {
+        self.len as f64 > alpha * (self.width * self.rows.len()) as f64
+    }
+
+    /// Contiguous row ranges for a chunked render over this set's plane:
+    /// one whole-plane range when `chunks <= 1`, else weight-balanced by
+    /// per-row active counts (or the row width once the dense fallback
+    /// is active) via [`crate::util::parallel::balanced_row_ranges`].
+    pub fn render_ranges(&self, dense: bool, chunks: usize) -> Vec<std::ops::Range<usize>> {
+        let h = self.rows.len();
+        let chunks = chunks.clamp(1, h);
+        if chunks == 1 {
+            return vec![0..h];
+        }
+        let weights: Vec<usize> =
+            (0..h).map(|y| 1 + if dense { self.width } else { self.rows[y].len() }).collect();
+        crate::util::parallel::balanced_row_ranges(&weights, chunks)
     }
 
     /// Record a write at (x, y); idempotent while the pixel stays listed.
@@ -166,6 +201,33 @@ impl ActiveSet {
     }
 }
 
+/// Walk the sorted contiguous column runs of one row's active list:
+/// `f(x0..x1)` is invoked once per maximal run of consecutive x's.
+/// Entries are unique (the `mark` dedup), so a run maps 1:1 onto a
+/// contiguous cell slice — the unit of the batched LUT gathers in the
+/// readout inner loops. `scratch` holds the sort copy (rows are stored
+/// unordered) and is reused across calls.
+#[inline]
+pub fn for_each_sorted_run(
+    xs: &[u16],
+    scratch: &mut Vec<u16>,
+    mut f: impl FnMut(std::ops::Range<usize>),
+) {
+    scratch.clear();
+    scratch.extend_from_slice(xs);
+    scratch.sort_unstable();
+    let mut i = 0usize;
+    while i < scratch.len() {
+        let x0 = scratch[i] as usize;
+        let mut j = i + 1;
+        while j < scratch.len() && scratch[j] as usize == x0 + (j - i) {
+            j += 1;
+        }
+        f(x0..x0 + (j - i));
+        i = j;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -219,6 +281,45 @@ mod tests {
         // Accruing a full budget triggers the scan; everything expires.
         a.maybe_prune(MIN_PRUNE_BUDGET, |_, _| true);
         assert!(a.is_empty());
+    }
+
+    #[test]
+    fn sorted_runs_partition_the_row() {
+        let mut scratch = Vec::new();
+        let mut runs: Vec<(usize, usize)> = Vec::new();
+        for_each_sorted_run(&[7, 2, 3, 9, 4, 12], &mut scratch, |r| runs.push((r.start, r.end)));
+        assert_eq!(runs, vec![(2, 5), (7, 8), (9, 10), (12, 13)]);
+        runs.clear();
+        for_each_sorted_run(&[], &mut scratch, |r| runs.push((r.start, r.end)));
+        assert!(runs.is_empty());
+    }
+
+    #[test]
+    fn render_ranges_cover_and_respect_chunks() {
+        let mut a = ActiveSet::new(8, 10);
+        for x in 0..8u16 {
+            a.mark(x, 9); // all the activity in the last row
+        }
+        let one = a.render_ranges(false, 1);
+        assert_eq!(one, vec![0..10]);
+        let four = a.render_ranges(false, 4);
+        assert_eq!(four.first().unwrap().start, 0);
+        assert_eq!(four.last().unwrap().end, 10);
+        assert!(four.len() <= 4 && !four.is_empty());
+        // More chunks than rows still covers every row exactly once.
+        let many = a.render_ranges(true, 64);
+        assert_eq!(many.len(), 10);
+    }
+
+    #[test]
+    fn denser_than_tracks_listed_fraction() {
+        let mut a = ActiveSet::new(10, 10);
+        for k in 0..21u16 {
+            a.mark(k % 10, k / 10);
+        }
+        assert!(a.denser_than(0.20), "21/100 listed > 20 %");
+        assert!(!a.denser_than(0.21));
+        assert!(!a.denser_than(DENSE_FALLBACK_ALPHA) || DENSE_FALLBACK_ALPHA < 0.21);
     }
 
     #[test]

@@ -46,7 +46,13 @@ impl BenchResult {
 
 /// Benchmark `f` for ~`measure_ms` after ~`warmup_ms` of warmup.
 /// `items` is the number of logical items one call of `f` processes.
-pub fn bench(name: &str, items: f64, warmup_ms: u64, measure_ms: u64, mut f: impl FnMut()) -> BenchResult {
+pub fn bench(
+    name: &str,
+    items: f64,
+    warmup_ms: u64,
+    measure_ms: u64,
+    mut f: impl FnMut(),
+) -> BenchResult {
     // Warmup.
     let warm_until = Instant::now() + Duration::from_millis(warmup_ms);
     while Instant::now() < warm_until {
@@ -77,9 +83,79 @@ pub fn header(title: &str) {
     println!("\n## {title}");
 }
 
+/// One line of a `BENCH_*.json` dump: a measurement plus any extra
+/// named metrics (`pixels_per_sec`, `frames_per_sec`, …).
+pub struct JsonEntry {
+    pub result: BenchResult,
+    pub extra: Vec<(&'static str, f64)>,
+}
+
+impl JsonEntry {
+    pub fn plain(result: BenchResult) -> Self {
+        Self { result, extra: Vec::new() }
+    }
+
+    pub fn with(result: BenchResult, key: &'static str, value: f64) -> Self {
+        Self { result, extra: vec![(key, value)] }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Write the standard bench-snapshot JSON (`{"benchmarks": [...]}`) that
+/// CI uploads as an artifact; every entry carries `mean_ns` and `meps`
+/// (items/s ÷ 1e6) plus its extra metrics.
+pub fn dump_json(entries: &[JsonEntry], path: &str) {
+    let mut s = String::from("{\n  \"benchmarks\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        let r = &e.result;
+        let extra: String = e
+            .extra
+            .iter()
+            .map(|(k, v)| format!(", \"{k}\": {v:.1}"))
+            .collect();
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"meps\": {:.4}{}}}{}\n",
+            json_escape(&r.name),
+            r.mean_ns,
+            r.throughput_per_sec() / 1e6,
+            extra,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    if let Err(e) = std::fs::write(path, s) {
+        eprintln!("(could not write {path}: {e})");
+    } else {
+        println!("wrote {path}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_dump_shape() {
+        let r = BenchResult {
+            name: "a \"quoted\" name".into(),
+            iters: 3,
+            mean_ns: 1_000.0,
+            stddev_ns: 1.0,
+            min_ns: 990.0,
+            items_per_iter: 10.0,
+        };
+        let path = std::env::temp_dir().join("tsisc_bench_dump_test.json");
+        let path = path.to_str().unwrap();
+        dump_json(&[JsonEntry::with(r, "frames_per_sec", 123.456)], path);
+        let s = std::fs::read_to_string(path).unwrap();
+        assert!(s.contains("\"benchmarks\""));
+        assert!(s.contains("a \\\"quoted\\\" name"));
+        assert!(s.contains("\"frames_per_sec\": 123.5"));
+        let _ = std::fs::remove_file(path);
+    }
 
     #[test]
     fn bench_measures_something() {

@@ -137,6 +137,43 @@ impl DecayLut {
             self.eval(row, t_us - t_write)
         }
     }
+
+    /// Batched gather over one contiguous run of cells:
+    /// `out[k] = value(param[k], t_write[k], t_us)`. The three slices are
+    /// parallel views of the same cell run (same length), so the loop is
+    /// a straight bounds-free walk the compiler can unroll — the unit of
+    /// the run-batched readout inner loop.
+    #[inline]
+    pub fn fill_run(&self, param: &[u32], t_write: &[u64], t_us: u64, out: &mut [f64]) {
+        debug_assert!(param.len() == out.len() && t_write.len() == out.len());
+        for ((o, &pi), &tw) in out.iter_mut().zip(param).zip(t_write) {
+            *o = self.value(pi as usize, tw, t_us);
+        }
+    }
+
+    /// Max-merge variant of [`DecayLut::fill_run`]: the value lands only
+    /// where it exceeds what is already in `out` (the merged-polarity
+    /// readout).
+    #[inline]
+    pub fn merge_run(&self, param: &[u32], t_write: &[u64], t_us: u64, out: &mut [f64]) {
+        debug_assert!(param.len() == out.len() && t_write.len() == out.len());
+        for ((o, &pi), &tw) in out.iter_mut().zip(param).zip(t_write) {
+            let v = self.value(pi as usize, tw, t_us);
+            if v > *o {
+                *o = v;
+            }
+        }
+    }
+
+    /// Single-curve (`row == 0`) variant of [`DecayLut::fill_run`] for
+    /// representations with one shared decay kernel.
+    #[inline]
+    pub fn fill_run_single(&self, t_write: &[u64], t_us: u64, out: &mut [f64]) {
+        debug_assert_eq!(t_write.len(), out.len());
+        for (o, &tw) in out.iter_mut().zip(t_write) {
+            *o = self.value(0, tw, t_us);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -190,6 +227,32 @@ mod tests {
         let lut = DecayLut::build(3, 4, 10, |row, dt| (row * 100) as f64 + dt as f64);
         assert_eq!(lut.row(1), &[100.0f32, 110.0, 120.0, 130.0]);
         assert_eq!(lut.eval(2, 25), 220.0); // bin 2 of row 2
+    }
+
+    #[test]
+    fn run_gathers_match_pointwise_value() {
+        let lut = DecayLut::build(3, 64, 10, |row, dt| (row as f64 + 1.0) / (1.0 + dt as f64));
+        let param = [0u32, 2, 1, 0];
+        let t_write = [0u64, 100, 250, 400];
+        let t_us = 300u64;
+        let mut out = [0.0f64; 4];
+        lut.fill_run(&param, &t_write, t_us, &mut out);
+        for k in 0..4 {
+            assert_eq!(out[k], lut.value(param[k] as usize, t_write[k], t_us), "k={k}");
+        }
+        // Merge only overwrites where the new value is larger.
+        let mut merged = [0.0f64, 10.0, 0.0, 10.0];
+        lut.merge_run(&param, &t_write, t_us, &mut merged);
+        assert_eq!(merged[0], out[0].max(0.0));
+        assert_eq!(merged[1], 10.0);
+        assert_eq!(merged[2], out[2]);
+        assert_eq!(merged[3], 10.0);
+        // Single-curve gather is the row-0 fill.
+        let mut single = [0.0f64; 4];
+        lut.fill_run_single(&t_write, t_us, &mut single);
+        for k in 0..4 {
+            assert_eq!(single[k], lut.value(0, t_write[k], t_us), "k={k}");
+        }
     }
 
     #[test]

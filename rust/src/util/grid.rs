@@ -120,6 +120,33 @@ impl<T: Clone> Grid<T> {
         &mut self.data[y * self.width..(y + 1) * self.width]
     }
 
+    /// Disjoint mutable row slabs for chunked (scoped-thread) rendering:
+    /// one `&mut [T]` per range, covering rows `r.start..r.end` row-major.
+    /// `ranges` must be sorted, non-overlapping and contiguous (each
+    /// range starts where the previous ended) — the cover produced by
+    /// [`crate::util::parallel::balanced_row_ranges`].
+    pub fn row_slabs_mut(&mut self, ranges: &[std::ops::Range<usize>]) -> Vec<&mut [T]> {
+        let w = self.width;
+        let Some(first) = ranges.first() else {
+            return Vec::new();
+        };
+        assert!(first.start <= self.height);
+        let mut rest: &mut [T] = &mut self.data[first.start * w..];
+        let mut consumed = first.start;
+        let mut slabs = Vec::with_capacity(ranges.len());
+        for r in ranges {
+            assert!(
+                r.start == consumed && r.start < r.end && r.end <= self.height,
+                "row ranges must be sorted, contiguous and in bounds"
+            );
+            let (slab, tail) = rest.split_at_mut((r.end - r.start) * w);
+            slabs.push(slab);
+            rest = tail;
+            consumed = r.end;
+        }
+        slabs
+    }
+
     /// Raw row-major slice.
     pub fn as_slice(&self) -> &[T] {
         &self.data
@@ -222,6 +249,19 @@ mod tests {
         g.row_mut(2)[3] = -1;
         assert_eq!(*g.get(3, 2), -1);
         assert_eq!(g.row(0).len(), g.width());
+    }
+
+    #[test]
+    fn row_slabs_cover_disjointly() {
+        let mut g = Grid::from_fn(3, 5, |x, y| (y * 3 + x) as i32);
+        let slabs = g.row_slabs_mut(&[0..2, 2..3, 3..5]);
+        assert_eq!(slabs.len(), 3);
+        assert_eq!(slabs[0], &[0, 1, 2, 3, 4, 5]);
+        assert_eq!(slabs[1], &[6, 7, 8]);
+        assert_eq!(slabs[2].len(), 6);
+        slabs.into_iter().flatten().for_each(|v| *v = -1);
+        assert!(g.as_slice().iter().all(|&v| v == -1));
+        assert!(g.row_slabs_mut(&[]).is_empty());
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! Shared utilities: deterministic RNG, statistics, curve fitting, the
 //! in-repo property-testing harness (offline substitutes for `rand`,
 //! `statrs`, and `proptest`), and the readout kernels shared by every
-//! decaying representation: the quantized decay LUT ([`decay`]) and the
-//! per-row active-pixel tracker ([`active`]).
+//! decaying representation: the quantized decay LUT ([`decay`]), the
+//! per-row active-pixel tracker ([`active`]) and the scoped-thread row
+//! parallelism helpers ([`parallel`]).
 
 pub mod active;
 pub mod bench;
@@ -11,5 +12,6 @@ pub mod decay;
 pub mod fit;
 pub mod grid;
 pub mod image;
+pub mod parallel;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,188 @@
+//! Scoped-thread row parallelism for frame readout.
+//!
+//! The paper's tiled analog readout is embarrassingly parallel by
+//! construction: every pixel is sampled concurrently, and the digital
+//! twin inherits that shape — a frame is a set of independent per-row
+//! evaluations into disjoint output rows. This module provides the three
+//! pieces every parallel readout path shares:
+//!
+//! * [`auto_chunks`] — how many row chunks to render concurrently
+//!   (`std::thread::available_parallelism`, gated by a minimum amount of
+//!   work so small frames never pay a thread-spawn);
+//! * [`balanced_row_ranges`] — a contiguous partition of the rows into
+//!   chunks of roughly equal *weight* (per-row active-pixel counts), so
+//!   threads stay balanced when activity clusters in a few bands;
+//! * [`for_each_row_chunk`] — run a renderer over each chunk's disjoint
+//!   mutable row slab, on scoped `std` threads (no external deps; one
+//!   chunk degenerates to an inline call with no spawn).
+//!
+//! Because each chunk owns a disjoint slab of output rows and every
+//! pixel's value is a pure function of immutable shared state, a chunked
+//! render is **bit-for-bit identical** to the single-threaded render for
+//! every chunk count (asserted in `tests/readout_equiv.rs`).
+
+use crate::util::grid::Grid;
+use std::ops::Range;
+
+/// Below this many output pixels a frame render stays single-threaded:
+/// thread spawn/join costs on the order of the whole render.
+pub const MIN_PAR_PIXELS: usize = 1 << 15;
+
+/// Worker threads the host offers (≥ 1; 1 when the query fails).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Chunk count for a render covering `work_pixels` output pixels: all
+/// available cores, or 1 below the [`MIN_PAR_PIXELS`] work gate.
+pub fn auto_chunks(work_pixels: usize) -> usize {
+    if work_pixels < MIN_PAR_PIXELS {
+        1
+    } else {
+        available_threads()
+    }
+}
+
+/// Partition rows `0..weights.len()` into at most `chunks` contiguous,
+/// non-empty ranges of roughly equal total weight (greedy prefix cut at
+/// the ideal cumulative targets). `weights[y]` is the per-row work
+/// estimate — active-pixel count for list readout, the row width for a
+/// dense scan. Always covers every row; returns fewer ranges than
+/// requested when there are fewer rows than chunks.
+pub fn balanced_row_ranges(weights: &[usize], chunks: usize) -> Vec<Range<usize>> {
+    let rows = weights.len();
+    if rows == 0 {
+        return Vec::new();
+    }
+    let chunks = chunks.clamp(1, rows);
+    let total: usize = weights.iter().sum();
+    let mut ranges = Vec::with_capacity(chunks);
+    let mut start = 0usize;
+    let mut prefix = 0usize;
+    for k in 0..chunks {
+        if start >= rows {
+            break;
+        }
+        if k == chunks - 1 {
+            ranges.push(start..rows);
+            break;
+        }
+        // Leave at least one row for each later chunk.
+        let max_end = rows - (chunks - k - 1);
+        let target = total * (k + 1) / chunks;
+        let mut end = start + 1;
+        prefix += weights[start];
+        while end < max_end && prefix < target {
+            prefix += weights[end];
+            end += 1;
+        }
+        ranges.push(start..end);
+        start = end;
+    }
+    ranges
+}
+
+/// Render each range's rows on its own scoped thread: `f(range, slab)`
+/// receives the row range and the matching disjoint mutable slab of
+/// `out` (rows `range.start..range.end`, row-major). Ranges must be the
+/// sorted, contiguous cover produced by [`balanced_row_ranges`]. A
+/// single range runs inline with no thread spawn.
+pub fn for_each_row_chunk<T, F>(out: &mut Grid<T>, ranges: &[Range<usize>], f: F)
+where
+    T: Clone + Send,
+    F: Fn(Range<usize>, &mut [T]) + Sync,
+{
+    let mut slabs = out.row_slabs_mut(ranges);
+    if slabs.len() <= 1 {
+        if let (Some(slab), Some(range)) = (slabs.pop(), ranges.first()) {
+            f(range.clone(), slab);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        for (range, slab) in ranges.iter().zip(slabs) {
+            let f = &f;
+            scope.spawn(move || f(range.clone(), slab));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cover_ok(ranges: &[Range<usize>], rows: usize) {
+        assert!(!ranges.is_empty());
+        assert_eq!(ranges[0].start, 0);
+        assert_eq!(ranges.last().unwrap().end, rows);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].end, w[1].start, "ranges must be contiguous");
+        }
+        assert!(ranges.iter().all(|r| r.start < r.end), "no empty ranges");
+    }
+
+    #[test]
+    fn uniform_weights_split_evenly() {
+        let ranges = balanced_row_ranges(&[1; 12], 4);
+        cover_ok(&ranges, 12);
+        assert_eq!(ranges.len(), 4);
+        assert!(ranges.iter().all(|r| r.end - r.start == 3), "{ranges:?}");
+    }
+
+    #[test]
+    fn fewer_rows_than_chunks_yields_one_row_each() {
+        let ranges = balanced_row_ranges(&[5, 5, 5], 8);
+        cover_ok(&ranges, 3);
+        assert_eq!(ranges.len(), 3);
+    }
+
+    #[test]
+    fn clustered_weight_isolates_the_hot_rows() {
+        // All the activity in rows 0..2: the first chunk must not also
+        // swallow the whole cold tail.
+        let mut w = vec![0usize; 16];
+        w[0] = 1_000;
+        w[1] = 1_000;
+        let ranges = balanced_row_ranges(&w, 4);
+        cover_ok(&ranges, 16);
+        assert_eq!(ranges.len(), 4);
+        assert!(ranges[0].end <= 2, "hot rows confined to the first chunk: {ranges:?}");
+    }
+
+    #[test]
+    fn zero_total_weight_still_covers() {
+        let ranges = balanced_row_ranges(&[0; 7], 3);
+        cover_ok(&ranges, 7);
+        assert_eq!(ranges.len(), 3);
+    }
+
+    #[test]
+    fn single_chunk_is_everything() {
+        let ranges = balanced_row_ranges(&[3, 1, 4], 1);
+        assert_eq!(ranges, vec![0..3]);
+    }
+
+    #[test]
+    fn row_chunks_write_disjoint_slabs() {
+        let mut g = Grid::new(4, 9, 0i64);
+        let ranges = balanced_row_ranges(&[1; 9], 3);
+        for_each_row_chunk(&mut g, &ranges, |range, slab| {
+            assert_eq!(slab.len(), (range.end - range.start) * 4);
+            for (i, v) in slab.iter_mut().enumerate() {
+                *v = (range.start * 4 + i) as i64;
+            }
+        });
+        // Every cell holds its own row-major index: full disjoint cover.
+        for (i, &v) in g.as_slice().iter().enumerate() {
+            assert_eq!(v, i as i64);
+        }
+    }
+
+    #[test]
+    fn auto_chunks_gates_small_work() {
+        assert_eq!(auto_chunks(0), 1);
+        assert_eq!(auto_chunks(MIN_PAR_PIXELS - 1), 1);
+        assert_eq!(auto_chunks(MIN_PAR_PIXELS), available_threads());
+        assert!(available_threads() >= 1);
+    }
+}

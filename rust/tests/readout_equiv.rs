@@ -1,16 +1,23 @@
 //! Equivalence contracts of the activity-aware, transcendental-free
-//! readout (PR 2):
+//! readout (PR 2) and the row-parallel / dirty-band readout (PR 3):
 //!
 //! * active-set `frame_into` ≡ dense `frame_dense_into` bit-for-bit on
 //!   random event streams for `Sae`, `IdealTs` and `IscArray` (both
 //!   polarity modes), including interleaved write/read, streams long
 //!   enough to trigger the lazy active-list pruning, queries before any
 //!   write (`t_us < t_write`) and never-written arrays;
+//! * chunked (scoped-thread) rendering ≡ the single-thread render
+//!   bit-for-bit for 1/2/8 chunks, including more chunks than rows and
+//!   the α dense-fallback regime;
+//! * the router's dirty-band composited snapshots ≡ a full re-render by
+//!   a fresh identically-configured router, across random
+//!   write/snapshot/write interleavings at causal query times;
 //! * the row-sliced STCF support scan ≡ the naive (2r+1)² reference on
 //!   both backends across radii, polarity modes and border events;
 //! * the shared quantized decay LUT stays within the documented 50 µs
 //!   quantization bound of the exact exponential.
 
+use tsisc::coordinator::{Router, RouterConfig};
 use tsisc::denoise::{support_count, support_count_naive, StcfBackend, StcfParams};
 use tsisc::events::{Event, Polarity, Resolution};
 use tsisc::isc::{IscArray, IscConfig};
@@ -99,6 +106,115 @@ fn ideal_ts_and_sae_active_frame_equals_dense() {
             sae.frame_dense_into(&mut dense, t);
             assert_frames_equal(&active, &dense, "sae");
         }
+    });
+}
+
+#[test]
+fn chunked_readout_bit_for_bit_identical_across_chunk_counts() {
+    // Row-parallel rendering must be a pure decomposition: for every
+    // chunk count (1 / 2 / 8, and more chunks than rows) the frame is
+    // bit-for-bit the single-thread frame, across activity levels
+    // (sparse through the α dense-fallback regime) and polarity modes.
+    check("parallel ≡ serial", 10, |g| {
+        let h = g.usize(3, 20) as u16; // sometimes fewer rows than chunks
+        let res = Resolution::new(28, h);
+        let polarity_sensitive = g.bool(0.5);
+        let mut arr = IscArray::new(
+            res,
+            IscConfig {
+                polarity_sensitive,
+                seed: g.u64(0, u64::MAX / 2),
+                bank_size: 48,
+                ..IscConfig::default()
+            },
+        );
+        let mut sae = Sae::new(res);
+        let mut ts = IdealTs::new(res, g.f64(3_000.0, 40_000.0));
+        // Activity from a handful of pixels to full coverage.
+        let n = g.usize(5, 1_500);
+        let evs = stream(g, res, n, 300);
+        arr.write_batch(&evs);
+        sae.ingest_batch(&evs);
+        ts.ingest_batch(&evs);
+        let t = evs.last().unwrap().t + g.u64(0, 20_000);
+        let (mut serial, mut chunked) = (Grid::new(1, 1, 0.0), Grid::new(1, 1, 0.0));
+        for chunks in [2usize, 8, 100] {
+            arr.frame_merged_into_chunks(&mut serial, t, 1);
+            arr.frame_merged_into_chunks(&mut chunked, t, chunks);
+            assert_eq!(serial, chunked, "isc merged, chunks={chunks}");
+            arr.frame_into_chunks(Polarity::On, &mut serial, t, 1);
+            arr.frame_into_chunks(Polarity::On, &mut chunked, t, chunks);
+            assert_eq!(serial, chunked, "isc on-plane, chunks={chunks}");
+            sae.frame_into_chunks(&mut serial, t, 1);
+            sae.frame_into_chunks(&mut chunked, t, chunks);
+            assert_eq!(serial, chunked, "sae, chunks={chunks}");
+            ts.frame_into_chunks(&mut serial, t, 1);
+            ts.frame_into_chunks(&mut chunked, t, chunks);
+            assert_eq!(serial, chunked, "ideal-ts, chunks={chunks}");
+        }
+        // The chunked render also still matches the dense reference at
+        // this causal query time (mode switch ⊥ chunking).
+        arr.frame_merged_into_chunks(&mut chunked, t, 8);
+        let mut dense = Grid::new(1, 1, 0.0);
+        arr.frame_merged_dense_into(&mut dense, t);
+        assert_eq!(chunked, dense, "chunked ≡ dense reference");
+    });
+}
+
+#[test]
+fn router_dirty_band_composite_equals_fresh_full_render() {
+    // Random write / snapshot / write interleavings at causal,
+    // non-decreasing query times: the incrementally-composited snapshot
+    // (cached clean bands + partial dirty re-renders) must equal a full
+    // render by a fresh identically-configured router replaying the
+    // same prefix.
+    check("router dirty-band ≡ fresh render", 4, |g| {
+        let res = Resolution::new(16, 16);
+        let cfg = RouterConfig {
+            n_shards: g.usize(1, 5),
+            queue_depth: 16,
+            batch_size: g.usize(1, 64),
+            isc: IscConfig {
+                bank_size: 32,
+                seed: g.u64(0, u64::MAX / 2),
+                ..IscConfig::default()
+            },
+            ..RouterConfig::default()
+        };
+        let evs = stream(g, res, 500, 300);
+        let chunk_len = g.usize(40, 160);
+        let mut incremental = Router::new(res, cfg.clone());
+        let mut at = 0u64;
+        let mut routed = 0usize;
+        for chunk in evs.chunks(chunk_len) {
+            incremental.route_batch(chunk);
+            routed += chunk.len();
+            // Causal and non-decreasing; sometimes repeat the same time
+            // to drive the dirty-row-watermark partial re-render path.
+            if !g.bool(0.3) {
+                at = at.max(chunk.last().unwrap().t + g.u64(0, 8_000));
+            }
+            at = at.max(chunk.last().unwrap().t);
+            let composited = incremental.frame(at);
+            let mut fresh = Router::new(res, cfg.clone());
+            fresh.route_batch(&evs[..routed]);
+            let full = fresh.frame(at);
+            fresh.shutdown();
+            assert_eq!(composited, full, "at={at} routed={routed}");
+        }
+        // A snapshot with no intervening writes must skip every band and
+        // reproduce the previous frame exactly.
+        let before = incremental.bands_skipped_unchanged();
+        let again = incremental.frame(at);
+        assert_eq!(
+            incremental.bands_skipped_unchanged() - before,
+            incremental.n_shards() as u64
+        );
+        let mut fresh = Router::new(res, cfg.clone());
+        fresh.route_batch(&evs[..routed]);
+        assert_eq!(again, fresh.frame(at));
+        fresh.shutdown();
+        incremental.shutdown();
     });
 }
 
