@@ -1,89 +1,161 @@
-//! STCF throughput: decisions/s on ideal vs ISC backends — the per-event
-//! hot path of the denoise application (Fig. 10 workloads) — plus the
-//! isolated support-scan microbenchmark comparing the row-sliced patch
-//! walk against the naive per-(dx,dy) reference.
+//! STCF denoise benchmarks — the ingest half of the pipeline:
+//!
+//! * support-scan tier sweep: events/s for the bitmask-popcount,
+//!   row-sliced and naive scans × radius {1, 2, 3} × backend activity
+//!   {1, 10, 100 %} (the bitmask tier's win grows as activity falls —
+//!   all-zero patch rows cost one word load);
+//! * end-to-end score+ingest throughput on ideal and ISC backends;
+//! * denoise-shard-count sweep: sharded STCF scoring
+//!   ([`tsisc::denoise::StcfShardPool`]) events/s at 1/2/4/8 shards vs
+//!   the serial reference.
+//!
+//! Dumps `BENCH_denoise.json` (via `util::bench::dump_json`) next to the
+//! manifest; CI uploads it alongside the tsurface/router snapshots.
 
-use tsisc::denoise::{run_stcf, support_count, support_count_naive, StcfBackend, StcfParams};
+use tsisc::denoise::{
+    run_stcf, support_count, support_count_naive, support_count_rows, ShardBackend, StcfBackend,
+    StcfParams, StcfShardPool,
+};
 use tsisc::events::noise::contaminate;
 use tsisc::events::scene::EdgeScene;
 use tsisc::events::v2e::{convert, DvsParams};
-use tsisc::events::Resolution;
+use tsisc::events::{Event, LabeledEvent, Polarity, Resolution};
 use tsisc::isc::IscConfig;
-use tsisc::util::bench::{bench, header};
+use tsisc::util::bench::{bench, dump_json, header, JsonEntry};
+
+/// Populate `backend` so that ~`activity_pct` % of pixels hold a stamp
+/// recent at `t_query` (the rest stay unwritten), and return the query
+/// events + query time for the scan-only loops.
+fn populate(
+    backend: &mut StcfBackend,
+    res: Resolution,
+    activity_pct: usize,
+    prm: &StcfParams,
+) -> (Vec<Event>, u64) {
+    let px = res.pixels();
+    let writes = (px * activity_pct).div_ceil(100);
+    let t_query = prm.tau_tw_us; // all writes land inside the window
+    for k in 0..writes {
+        // Low-discrepancy pixel walk: spreads activity over the sensor.
+        let i = (k * 2_654_435_761) % px;
+        let (x, y) = ((i % res.width as usize) as u16, (i / res.width as usize) as u16);
+        let t = 1 + (k as u64 * (t_query - 2)) / writes.max(1) as u64;
+        backend.ingest(&Event::new(t, x, y, Polarity::On), prm);
+    }
+    // Queries spread over the sensor (fixed count so events/s compare
+    // across activity levels).
+    let queries = (0..2_000usize)
+        .map(|k| {
+            let i = (k * 40_503 + 7) % px;
+            let (x, y) = ((i % res.width as usize) as u16, (i / res.width as usize) as u16);
+            Event::new(t_query, x, y, Polarity::On)
+        })
+        .collect();
+    (queries, t_query)
+}
 
 fn main() {
-    header("bench_denoise — STCF decision throughput");
+    let mut json: Vec<JsonEntry> = Vec::new();
     let res = Resolution::new(128, 96);
+
+    // --- Support-scan tier sweep: bitmask vs row-sliced vs naive ---------
+    header("STCF support scan: bitmask vs row-sliced vs naive");
+    for radius in [1u16, 2, 3] {
+        for activity_pct in [1usize, 10, 100] {
+            let prm = StcfParams { radius, ..StcfParams::default() };
+            let mut b = StcfBackend::ideal(res);
+            let (queries, _) = populate(&mut b, res, activity_pct, &prm);
+            type Scan = fn(&StcfBackend, &Event, &StcfParams) -> u32;
+            // `support_count` auto-dispatches to the bitmask tier here:
+            // the backend's recency plane covers the default window.
+            let tiers: [(&str, Scan); 3] = [
+                ("bitmask", support_count),
+                ("rows", support_count_rows),
+                ("naive", support_count_naive),
+            ];
+            for (name, scan) in tiers {
+                let r = bench(
+                    &format!("scan {name:<7} r={radius} act={activity_pct:>3}%"),
+                    queries.len() as f64,
+                    40,
+                    200,
+                    || {
+                        let mut acc = 0u32;
+                        for q in &queries {
+                            acc = acc.wrapping_add(scan(&b, q, &prm));
+                        }
+                        std::hint::black_box(acc);
+                    },
+                );
+                println!("{}", r.report());
+                let tput = r.throughput_per_sec();
+                json.push(JsonEntry::with(r, "events_per_sec", tput));
+            }
+        }
+    }
+
+    // --- End-to-end score+ingest throughput ------------------------------
+    header("STCF end-to-end score+ingest (Fig. 10 workload)");
     let scene = EdgeScene::new(90.0, 21);
     let signal = convert(&scene, res, DvsParams::default(), 0.3);
     let events = contaminate(&signal, res, 5.0, 0.3, 17);
     println!("workload: {} events at 128x96", events.len());
-
-    for r_patch in [1u16, 2, 3] {
-        let prm = StcfParams { radius: r_patch, ..StcfParams::default() };
+    let span = events.last().unwrap().ev.t + 1;
+    let prm = StcfParams::default();
+    {
         let mut b = StcfBackend::ideal(res);
+        let r = bench("e2e ideal backend, r=3", events.len() as f64, 100, 500, || {
+            std::hint::black_box(run_stcf(&mut b, &events, &prm));
+        });
+        println!("{}", r.report());
+        let tput = r.throughput_per_sec();
+        json.push(JsonEntry::with(r, "events_per_sec", tput));
+    }
+    {
+        // Backend constructed once (bank build is setup, not hot path).
+        let mut b = StcfBackend::isc(res, IscConfig::default(), prm.tau_tw_us);
+        let r = bench("e2e ISC backend (mismatched), r=3", events.len() as f64, 100, 500, || {
+            std::hint::black_box(run_stcf(&mut b, &events, &prm));
+        });
+        println!("{}", r.report());
+        let tput = r.throughput_per_sec();
+        json.push(JsonEntry::with(r, "events_per_sec", tput));
+    }
+
+    // --- Denoise-shard-count sweep ---------------------------------------
+    header("sharded STCF scoring: events/s vs shard count");
+    for shards in [1usize, 2, 4, 8] {
+        let mut pool = StcfShardPool::new(res, shards, ShardBackend::Ideal, prm);
+        // Each iteration replays the stream shifted forward by the span
+        // so queries stay causal (at the stream head) — the shifted copy
+        // costs O(n) against the O(n·patch) scoring it feeds.
+        let mut offset = 0u64;
+        let mut shifted: Vec<LabeledEvent> = events.clone();
+        let mut scores: Vec<u32> = Vec::new();
         let r = bench(
-            &format!("ideal backend, r={r_patch}"),
+            &format!("sharded scoring, {shards} shard(s)"),
             events.len() as f64,
-            100,
-            700,
+            80,
+            400,
             || {
-                std::hint::black_box(run_stcf(&mut b, &events, &prm));
+                offset += span;
+                for (dst, src) in shifted.iter_mut().zip(&events) {
+                    *dst = *src;
+                    dst.ev.t += offset;
+                }
+                for chunk in shifted.chunks(4_096) {
+                    pool.score_batch(chunk, &mut scores);
+                    std::hint::black_box(&scores);
+                }
             },
         );
         println!("{}", r.report());
+        let tput = r.throughput_per_sec();
+        let mut entry = JsonEntry::with(r, "denoise_shards", shards as f64);
+        entry.extra.push(("events_per_sec", tput));
+        json.push(entry);
+        pool.shutdown();
     }
-    // Backend constructed once (bank build is setup, not hot path).
-    let prm = StcfParams::default();
-    let mut b = StcfBackend::isc(res, IscConfig::default(), prm.tau_tw_us);
-    let r = bench("ISC backend (mismatched), r=3", events.len() as f64, 100, 700, || {
-        std::hint::black_box(run_stcf(&mut b, &events, &prm));
-    });
-    println!("{}", r.report());
 
-    // --- Support-scan microbenchmark: row-sliced vs naive ----------------
-    // Pre-populated backends, scan-only (no ingestion in the loop), so
-    // the patch-walk cost is isolated.
-    header("STCF support scan: row-sliced vs naive reference");
-    let queries: Vec<_> = events.iter().step_by(7).map(|le| le.ev).collect();
-    let t_scan = events.last().unwrap().ev.t;
-    for r_patch in [1u16, 3] {
-        let prm = StcfParams { radius: r_patch, ..StcfParams::default() };
-        let mut ideal = StcfBackend::ideal(res);
-        let mut isc = StcfBackend::isc(res, IscConfig::default(), prm.tau_tw_us);
-        for le in &events {
-            ideal.ingest(&le.ev, &prm);
-            isc.ingest(&le.ev, &prm);
-        }
-        for (name, backend) in [("ideal", &ideal), ("ISC", &isc)] {
-            let rr = bench(
-                &format!("support scan row-sliced {name} r={r_patch}"),
-                queries.len() as f64,
-                80,
-                400,
-                || {
-                    for q in &queries {
-                        let mut e = *q;
-                        e.t = t_scan;
-                        std::hint::black_box(support_count(backend, &e, &prm));
-                    }
-                },
-            );
-            println!("{}", rr.report());
-            let rn = bench(
-                &format!("support scan naive      {name} r={r_patch}"),
-                queries.len() as f64,
-                80,
-                400,
-                || {
-                    for q in &queries {
-                        let mut e = *q;
-                        e.t = t_scan;
-                        std::hint::black_box(support_count_naive(backend, &e, &prm));
-                    }
-                },
-            );
-            println!("{}", rn.report());
-        }
-    }
+    dump_json(&json, "BENCH_denoise.json");
 }

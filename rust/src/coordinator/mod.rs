@@ -8,10 +8,33 @@
 //!   sort-free run coalescing), applies backpressure through bounded
 //!   queues, and scatter-gathers frame snapshots into reused buffers.
 //! * [`pipeline`] — the end-to-end loop: an
-//!   `IntoIterator<Item = LabeledEvent>` source → optional inline STCF →
-//!   batched shard writes → windowed `frame_into` readout. Streaming by
-//!   construction: the full event stream is never materialized or
-//!   cloned; buffering is bounded by `PipelineConfig::batch_size`.
+//!   `IntoIterator<Item = LabeledEvent>` source → optional band-sharded
+//!   STCF → batched shard writes → windowed `frame_into` readout.
+//!   Streaming by construction: the full event stream is never
+//!   materialized or cloned; buffering is bounded by
+//!   `PipelineConfig::batch_size`.
+//!
+//! ## Pipeline stages
+//!
+//! Every stage after the producer runs on its own threads; both shard
+//! pools cut the sensor into the same horizontal bands
+//! ([`crate::util::parallel::band_layout`]):
+//!
+//! ```text
+//!            staged batch           kept events (stream order)
+//! producer ──────────────► STCF denoise shards ─────────────► Router
+//!  (source    ≤batch_size   [band + r halo rows each;           │ WriteBatch
+//!   iterator)               score-then-write, popcount-         ▼ per band
+//!                           gated support scans]           ISC write shards
+//!                                                               │ Snapshot /
+//!                                                               ▼ Unchanged
+//!                           frames (every window_us) ◄── dirty-band composite
+//! ```
+//!
+//! With `denoise_shards: 0` the STCF scores inline on the producer (one
+//! core, same decisions). `PipelineStats::stage_wall` reports where the
+//! producer's time went; `PipelineStats::denoise` carries the per-shard
+//! kept/dropped/halo tallies.
 //!
 //! **Migration note** (old → new API): `pipeline::run(&[LabeledEvent],…)`
 //! → `pipeline::run(events.iter().copied(), …)` (or any lazy source);
@@ -24,5 +47,7 @@ pub mod pipeline;
 pub mod router;
 
 pub use batcher::{batches, Batches, MicroBatch, MicroBatcher};
-pub use pipeline::{run as run_pipeline, PipelineConfig, PipelineRun, PipelineStats};
+pub use pipeline::{
+    run as run_pipeline, DenoiseStats, PipelineConfig, PipelineRun, PipelineStats, StageWall,
+};
 pub use router::{Router, RouterConfig, RouterStats};

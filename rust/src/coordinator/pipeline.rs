@@ -1,5 +1,5 @@
-//! The end-to-end event pipeline: source → (optional STCF denoise) →
-//! sharded ISC writes → windowed frame readout.
+//! The end-to-end event pipeline: source → (optional STCF denoise, band-
+//! sharded) → sharded ISC writes → windowed frame readout.
 //!
 //! This is the serving loop of the system: events stream in, the analog
 //! plane absorbs them, and every `window_us` a time-surface frame is
@@ -10,13 +10,22 @@
 //! `IntoIterator<Item = LabeledEvent>` (a replayed recording, a lazy
 //! generator, `events.iter().copied()` over a slice) and never
 //! materializes the stream — the only buffering is a bounded staging
-//! batch of at most `batch_size` events between router flushes, and the
-//! STCF (causal and cheap relative to everything downstream) filters
-//! events inline as they pass. Stages communicate over bounded channels,
-//! so a slow consumer backpressures the source instead of buffering
-//! unboundedly.
+//! batch of at most `batch_size` events between flushes. Stages
+//! communicate over bounded channels, so a slow consumer backpressures
+//! the source instead of buffering unboundedly.
+//!
+//! The STCF stage scores on its own worker shards
+//! ([`crate::denoise::sharded`], `denoise_shards` > 0): each staged
+//! batch fans out to band-owning scorers (with halo-row duplication at
+//! band borders), and the kept events come back in stream order to feed
+//! [`Router::route_batch`]. Set `denoise_shards: 0` to score inline on
+//! the producer thread (the pre-sharding behaviour — same decisions,
+//! one core). [`PipelineStats`] reports per-stage wall time
+//! ([`StageWall`]) and the per-shard kept/dropped tallies
+//! ([`DenoiseStats`]).
 
 use super::router::{Router, RouterConfig, RouterStats};
+use crate::denoise::sharded::{ShardBackend, ShardTally, StcfShardPool};
 use crate::denoise::{support_count, StcfBackend, StcfParams};
 use crate::events::{Event, LabeledEvent, Resolution};
 use crate::util::grid::Grid;
@@ -29,15 +38,29 @@ pub struct PipelineConfig {
     pub window_us: u64,
     /// Run the STCF in front of the array (None = raw stream).
     pub stcf: Option<StcfParams>,
-    /// Events staged between router flushes — the ingest batch size and
-    /// the pipeline's only stream buffering.
+    /// Denoise worker shards for the STCF stage (ignored when `stcf` is
+    /// None). 0 scores inline on the producer thread. With cell mismatch
+    /// enabled (the default `IscConfig`), band-local arrays carry
+    /// per-shard mismatch maps, so keep/drop decisions — like the write
+    /// router's frame values — vary slightly with the shard layout; set
+    /// 0 (or `mismatch: None`, under which every layout is bit-for-bit
+    /// identical) to reproduce the serial scores exactly.
+    pub denoise_shards: usize,
+    /// Events staged between flushes — the ingest batch size and the
+    /// pipeline's only stream buffering.
     pub batch_size: usize,
     pub router: RouterConfig,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        Self { window_us: 50_000, stcf: None, batch_size: 4_096, router: RouterConfig::default() }
+        Self {
+            window_us: 50_000,
+            stcf: None,
+            denoise_shards: 4,
+            batch_size: 4_096,
+            router: RouterConfig::default(),
+        }
     }
 }
 
@@ -46,6 +69,29 @@ pub struct PipelineRun {
     /// (frame timestamp µs, normalized TS frame).
     pub frames: Vec<(u64, Grid<f64>)>,
     pub stats: PipelineStats,
+}
+
+/// Producer-side wall time spent in each pipeline stage (the stages a
+/// single run iteration passes through; router shards and denoise
+/// shards additionally overlap work on their own threads).
+#[derive(Clone, Debug, Default)]
+pub struct StageWall {
+    /// STCF scoring + filtering (fan-out/fan-in for sharded scoring).
+    pub denoise_seconds: f64,
+    /// `Router::route_batch` staging + shipping.
+    pub route_seconds: f64,
+    /// Frame snapshots (`Router::frame`, dirty-band protocol included).
+    pub snapshot_seconds: f64,
+}
+
+/// Denoise-stage outcome counters.
+#[derive(Clone, Debug)]
+pub struct DenoiseStats {
+    /// True when scoring ran inline on the producer (`denoise_shards: 0`).
+    pub inline_scoring: bool,
+    /// Per-shard kept/dropped/halo tallies (a single entry for inline
+    /// scoring, with `halo_ingests` = 0).
+    pub per_shard: Vec<ShardTally>,
 }
 
 #[derive(Clone, Debug)]
@@ -58,6 +104,10 @@ pub struct PipelineStats {
     /// which is the pipeline's no-full-stream-copy guarantee.
     pub peak_batch_len: usize,
     pub wall_seconds: f64,
+    /// Per-stage producer wall time (denoise / route / snapshot).
+    pub stage_wall: StageWall,
+    /// Denoise-stage tallies (None when the STCF is disabled).
+    pub denoise: Option<DenoiseStats>,
     /// Router statistics, including the dirty-band snapshot counters:
     /// `router.snapshots_served` (= `frames_emitted`) and
     /// `router.bands_skipped_unchanged` (band renders the dirty-band
@@ -65,6 +115,91 @@ pub struct PipelineStats {
     pub router: RouterStats,
     /// Throughput in events/second of wall time.
     pub events_per_second: f64,
+}
+
+/// The STCF stage in one of its two homes: inline on the producer, or
+/// fanned out to the band-sharded scorer pool.
+enum DenoiseStage {
+    Inline { backend: StcfBackend, prm: StcfParams, tally: ShardTally },
+    Sharded { pool: StcfShardPool, scores: Vec<u32> },
+}
+
+impl DenoiseStage {
+    fn new(res: Resolution, cfg: &PipelineConfig, prm: StcfParams) -> Self {
+        if cfg.denoise_shards == 0 {
+            let backend = StcfBackend::isc(res, cfg.router.isc.clone(), prm.tau_tw_us);
+            DenoiseStage::Inline { backend, prm, tally: ShardTally::default() }
+        } else {
+            let backend = ShardBackend::Isc(cfg.router.isc.clone());
+            let pool = StcfShardPool::new(res, cfg.denoise_shards, backend, prm);
+            DenoiseStage::Sharded { pool, scores: Vec::new() }
+        }
+    }
+
+    /// Score `batch` (causal score-then-write order) and append the
+    /// events passing the keep threshold to `kept` in stream order.
+    fn filter(&mut self, batch: &[LabeledEvent], kept: &mut Vec<LabeledEvent>) {
+        match self {
+            DenoiseStage::Inline { backend, prm, tally } => {
+                for le in batch {
+                    let s = support_count(backend, &le.ev, prm);
+                    backend.ingest(&le.ev, prm);
+                    tally.scored += 1;
+                    if s >= prm.threshold {
+                        tally.kept += 1;
+                        kept.push(*le);
+                    } else {
+                        tally.dropped += 1;
+                    }
+                }
+            }
+            DenoiseStage::Sharded { pool, scores } => pool.filter_batch(batch, scores, kept),
+        }
+    }
+
+    fn finish(self) -> DenoiseStats {
+        match self {
+            DenoiseStage::Inline { tally, .. } => {
+                DenoiseStats { inline_scoring: true, per_shard: vec![tally] }
+            }
+            DenoiseStage::Sharded { pool, .. } => {
+                DenoiseStats { inline_scoring: false, per_shard: pool.shutdown() }
+            }
+        }
+    }
+}
+
+/// Push the staged batch through the denoise stage (when configured)
+/// and route the survivors. Returns the number of events dropped.
+fn flush_staged(
+    pre: &mut Vec<LabeledEvent>,
+    stage: &mut Option<DenoiseStage>,
+    kept: &mut Vec<LabeledEvent>,
+    route_buf: &mut Vec<Event>,
+    router: &mut Router,
+    wall: &mut StageWall,
+) -> u64 {
+    if pre.is_empty() {
+        return 0;
+    }
+    route_buf.clear();
+    let mut dropped = 0u64;
+    match stage {
+        Some(st) => {
+            let t0 = Instant::now();
+            kept.clear();
+            st.filter(pre, kept);
+            wall.denoise_seconds += t0.elapsed().as_secs_f64();
+            dropped = (pre.len() - kept.len()) as u64;
+            route_buf.extend(kept.iter().map(|le| le.ev));
+        }
+        None => route_buf.extend(pre.iter().map(|le| le.ev)),
+    }
+    pre.clear();
+    let t0 = Instant::now();
+    router.route_batch(route_buf);
+    wall.route_seconds += t0.elapsed().as_secs_f64();
+    dropped
 }
 
 /// Run the pipeline over a sorted labeled event source covering
@@ -77,15 +212,16 @@ where
     let start = Instant::now();
     let batch_size = cfg.batch_size.max(1);
 
-    // Optional STCF stage, applied inline per event (score against the
-    // current surface, then write — the filter is causal by construction).
-    let mut stcf: Option<(StcfBackend, StcfParams)> = cfg.stcf.as_ref().map(|prm| {
-        (StcfBackend::isc(res, cfg.router.isc.clone(), prm.tau_tw_us), *prm)
-    });
+    // Optional STCF stage: scored in causal score-then-write order per
+    // staged batch, inline or on the denoise shard pool.
+    let mut stage: Option<DenoiseStage> = cfg.stcf.map(|prm| DenoiseStage::new(res, cfg, prm));
 
     let mut router = Router::new(res, cfg.router.clone());
     let mut frames: Vec<(u64, Grid<f64>)> = Vec::new();
-    let mut batch: Vec<Event> = Vec::with_capacity(batch_size);
+    let mut pre: Vec<LabeledEvent> = Vec::with_capacity(batch_size);
+    let mut kept: Vec<LabeledEvent> = Vec::with_capacity(batch_size);
+    let mut route_buf: Vec<Event> = Vec::with_capacity(batch_size);
+    let mut wall = StageWall::default();
     let mut next_frame = cfg.window_us;
     let mut events_in = 0u64;
     let mut dropped = 0u64;
@@ -94,49 +230,62 @@ where
     for le in events {
         events_in += 1;
         // Snapshot every window boundary the stream has passed; staged
-        // writes are flushed by `Router::frame` so each frame observes
-        // exactly the events that precede it.
+        // events are flushed through denoise + routing first, so each
+        // frame observes exactly the events that precede it.
         while le.ev.t > next_frame && next_frame <= t_end_us {
-            peak_batch_len = peak_batch_len.max(batch.len());
-            router.route_batch(&batch);
-            batch.clear();
-            frames.push((next_frame, router.frame(next_frame)));
+            peak_batch_len = peak_batch_len.max(pre.len());
+            dropped += flush_staged(
+                &mut pre,
+                &mut stage,
+                &mut kept,
+                &mut route_buf,
+                &mut router,
+                &mut wall,
+            );
+            let t0 = Instant::now();
+            let frame = router.frame(next_frame);
+            wall.snapshot_seconds += t0.elapsed().as_secs_f64();
+            frames.push((next_frame, frame));
             next_frame += cfg.window_us;
         }
-        if let Some((backend, prm)) = stcf.as_mut() {
-            let s = support_count(backend, &le.ev, prm);
-            backend.ingest(&le.ev, prm);
-            if s < prm.threshold {
-                dropped += 1;
-                continue;
-            }
-        }
-        batch.push(le.ev);
-        if batch.len() >= batch_size {
-            peak_batch_len = peak_batch_len.max(batch.len());
-            router.route_batch(&batch);
-            batch.clear();
+        pre.push(le);
+        if pre.len() >= batch_size {
+            peak_batch_len = peak_batch_len.max(pre.len());
+            dropped += flush_staged(
+                &mut pre,
+                &mut stage,
+                &mut kept,
+                &mut route_buf,
+                &mut router,
+                &mut wall,
+            );
         }
     }
-    peak_batch_len = peak_batch_len.max(batch.len());
-    router.route_batch(&batch);
-    batch.clear();
+    peak_batch_len = peak_batch_len.max(pre.len());
+    dropped +=
+        flush_staged(&mut pre, &mut stage, &mut kept, &mut route_buf, &mut router, &mut wall);
     while next_frame <= t_end_us {
-        frames.push((next_frame, router.frame(next_frame)));
+        let t0 = Instant::now();
+        let frame = router.frame(next_frame);
+        wall.snapshot_seconds += t0.elapsed().as_secs_f64();
+        frames.push((next_frame, frame));
         next_frame += cfg.window_us;
     }
 
     let events_written = router.events_routed();
+    let denoise = stage.map(DenoiseStage::finish);
     let router_stats = router.shutdown();
-    let wall = start.elapsed().as_secs_f64();
+    let wall_s = start.elapsed().as_secs_f64();
     let stats = PipelineStats {
         events_in,
         events_written,
         events_dropped_by_stcf: dropped,
         frames_emitted: frames.len() as u64,
         peak_batch_len,
-        wall_seconds: wall,
-        events_per_second: if wall > 0.0 { events_in as f64 / wall } else { 0.0 },
+        wall_seconds: wall_s,
+        stage_wall: wall,
+        denoise,
+        events_per_second: if wall_s > 0.0 { events_in as f64 / wall_s } else { 0.0 },
         router: router_stats,
     };
     PipelineRun { frames, stats }
@@ -146,6 +295,7 @@ where
 mod tests {
     use super::*;
     use crate::events::event::{Event, Polarity};
+    use crate::isc::IscConfig;
 
     fn stream(n: u64, res: Resolution) -> Vec<LabeledEvent> {
         (0..n)
@@ -170,6 +320,7 @@ mod tests {
         assert_eq!(run.stats.frames_emitted, 2);
         assert_eq!(run.stats.events_in, 100);
         assert_eq!(run.stats.events_written, 100);
+        assert!(run.stats.denoise.is_none(), "no STCF configured");
     }
 
     #[test]
@@ -213,6 +364,71 @@ mod tests {
         let run = run(evs.iter().copied(), res, 50_000, &cfg);
         assert!(run.stats.events_dropped_by_stcf > 10,
                 "dropped {}", run.stats.events_dropped_by_stcf);
+        // The denoise tallies reconcile with the drop counter.
+        let dn = run.stats.denoise.as_ref().expect("STCF configured");
+        assert!(!dn.inline_scoring);
+        assert_eq!(
+            dn.per_shard.iter().map(|t| t.dropped).sum::<u64>(),
+            run.stats.events_dropped_by_stcf
+        );
+        assert_eq!(dn.per_shard.iter().map(|t| t.scored).sum::<u64>(), 20);
+    }
+
+    #[test]
+    fn inline_and_sharded_denoise_agree_on_mismatch_free_configs() {
+        // With `mismatch: None` every denoise backend (inline full-res,
+        // sharded band+halo) holds identical nominal cells, so the keep
+        // decisions — and therefore every routed write and frame — are
+        // bit-for-bit identical across shard counts.
+        let res = Resolution::new(32, 24);
+        let evs: Vec<LabeledEvent> = (0..600u64)
+            .map(|k| LabeledEvent {
+                ev: Event::new(
+                    1 + k * 150,
+                    (k * 3 % 32) as u16,
+                    (k * 7 % 24) as u16,
+                    Polarity::On,
+                ),
+                is_signal: true,
+            })
+            .collect();
+        let mut all = Vec::new();
+        for denoise_shards in [0usize, 1, 4] {
+            let cfg = PipelineConfig {
+                stcf: Some(StcfParams::default()),
+                denoise_shards,
+                router: RouterConfig {
+                    isc: IscConfig { mismatch: None, ..IscConfig::default() },
+                    ..RouterConfig::default()
+                },
+                ..PipelineConfig::default()
+            };
+            let r = run(evs.iter().copied(), res, 90_000, &cfg);
+            all.push((denoise_shards, r.stats.events_written, r.frames));
+        }
+        for w in all.windows(2) {
+            assert_eq!(w[0].1, w[1].1, "kept counts differ: {} vs {} shards", w[0].0, w[1].0);
+            assert_eq!(w[0].2, w[1].2, "frames differ: {} vs {} shards", w[0].0, w[1].0);
+        }
+    }
+
+    #[test]
+    fn stage_wall_times_are_recorded() {
+        let res = Resolution::new(16, 16);
+        let evs = stream(300, res);
+        let cfg = PipelineConfig {
+            stcf: Some(StcfParams::default()),
+            ..PipelineConfig::default()
+        };
+        let r = run(evs.iter().copied(), res, 300_000, &cfg);
+        let w = &r.stats.stage_wall;
+        assert!(w.denoise_seconds > 0.0);
+        assert!(w.snapshot_seconds > 0.0);
+        // Route time can be arbitrarily small but never negative; the
+        // three stage timers are all bounded by the total wall clock.
+        assert!(w.route_seconds >= 0.0);
+        let sum = w.denoise_seconds + w.route_seconds + w.snapshot_seconds;
+        assert!(sum <= r.stats.wall_seconds + 1e-9, "{sum} vs {}", r.stats.wall_seconds);
     }
 
     #[test]

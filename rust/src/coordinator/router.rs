@@ -146,11 +146,9 @@ pub struct Router {
 
 impl Router {
     pub fn new(res: Resolution, cfg: RouterConfig) -> Self {
-        let requested = cfg.n_shards.max(1).min(res.height as usize);
-        let band_h = (res.height as usize).div_ceil(requested);
-        // Recompute the effective shard count so no shard owns zero rows
-        // (e.g. 8 rows over 6 requested shards → bands of 2 → 4 shards).
-        let n = (res.height as usize).div_ceil(band_h);
+        // Shared band math (`util::parallel::band_layout`): no shard owns
+        // zero rows, and the STCF denoise shards cut identical bands.
+        let (band_h, n) = crate::util::parallel::band_layout(res.height as usize, cfg.n_shards);
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for shard in 0..n {
@@ -159,12 +157,7 @@ impl Router {
             let rows = band_h.min(res.height as usize - shard * band_h);
             let band_res = Resolution::new(res.width, rows as u16);
             let mut isc_cfg = cfg.isc.clone();
-            // Full 64-bit odd multiplier (the golden-ratio constant) so
-            // every shard's mismatch RNG stream is well separated even at
-            // high shard counts — a truncated 32-bit constant only
-            // perturbs the low half of the seed.
-            isc_cfg.seed =
-                isc_cfg.seed.wrapping_add((shard as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            isc_cfg.seed = crate::util::parallel::shard_seed(isc_cfg.seed, shard);
             let y0 = (shard * band_h) as u16;
             // All shards render their bands concurrently, so each band's
             // in-shard row parallelism gets its share of the cores —

@@ -1,9 +1,30 @@
 //! Event-stream denoising: the STCF (paper Sec. IV-C) over ideal and
 //! ISC-analog backends, plus the BAF baseline.
+//!
+//! ## Support-scan complexity (per scored event, patch (2r+1)²)
+//!
+//! | scan | per patch row | typical cost | where |
+//! |---|---|---|---|
+//! | naive patch scan | 2r+1 indexed point reads (2D index math + bounds checks each) | O((2r+1)²) always | [`support_count_naive`] — reference |
+//! | row-sliced | one contiguous stamp/param slice walk | O((2r+1)²) but bounds-free, cache-linear | [`support_count_rows`] |
+//! | bitmask-popcount | 1–2 window words × live epoch buckets (≤ 4) `u64` loads, then exact confirmation of set-bit runs only | O((2r+1) · buckets) word loads + O(recent) confirms — all-zero rows cost no stamp reads | [`support_count_bitmask`] via [`crate::util::bitplane::RecencyPlane`] |
+//!
+//! [`support_count`] picks the bitmask tier whenever the backend's
+//! recency plane covers the query window and falls back to the
+//! row-sliced scan otherwise; all tiers are bit-for-bit equivalent on
+//! causal (stream-head) queries — `tests/stcf_equiv.rs` asserts it.
+//!
+//! Scoring itself parallelizes across horizontal bands with replicated
+//! halo rows ([`sharded::StcfShardPool`]): end-to-end denoised
+//! throughput scales with cores while keeping the serial filter's exact
+//! scores (see the module docs for the mismatch caveat).
 
 pub mod baf;
+pub mod sharded;
 pub mod stcf;
 
+pub use sharded::{ShardBackend, ShardTally, StcfShardPool};
 pub use stcf::{
-    run as run_stcf, support_count, support_count_naive, StcfBackend, StcfParams, StcfRun,
+    run as run_stcf, support_count, support_count_bitmask, support_count_naive,
+    support_count_rows, StcfBackend, StcfParams, StcfRun,
 };

@@ -1,0 +1,380 @@
+//! Band-sharded STCF scoring: the denoise stage as a worker pool.
+//!
+//! The serial [`super::stcf::run`] scores every event on the caller's
+//! thread — the last serial hot path of a denoised pipeline once writes
+//! (router shards) and readout (row-parallel rendering) scale with
+//! cores. This module moves scoring onto worker shards, each owning a
+//! horizontal band of the sensor exactly as the write router cuts it
+//! ([`crate::util::parallel::band_layout`]).
+//!
+//! ## Halo replication
+//!
+//! A support patch of radius `r` centred in one band can reach up to
+//! `r` rows into the neighbouring bands, so each shard's backend covers
+//! its band **plus `r` replicated halo rows** on each side. The
+//! dispatcher sends every event to the shard that owns its row (a
+//! `Score` item) and *duplicates* it to every shard whose halo region
+//! contains the row (`Halo` items — write-only ingests, never scored).
+//! Each shard therefore sees, in stream order, exactly the events whose
+//! row intersects its extended region, and processes them in the same
+//! causal score-then-write order as the serial filter: a `Score` item
+//! is scored against the shard surface *before* it (or any later event)
+//! is written. Scores are consequently **bit-for-bit identical** to the
+//! serial reference for the ideal backend and for mismatch-free ISC
+//! configs; with cell mismatch enabled, per-shard mismatch maps differ
+//! from a single full-sensor array (the same caveat as the write
+//! router's per-shard seeds).
+//!
+//! Batches are scored synchronously: [`StcfShardPool::score_batch`]
+//! fans a time-sorted batch out, the shards score their slices
+//! concurrently, and the reply merge restores input order — so the
+//! caller (the coordinator pipeline) keeps its frame-boundary
+//! bookkeeping unchanged while the patch scans run on every core.
+
+use super::stcf::{support_count, StcfBackend, StcfParams, StcfRun};
+use crate::events::{Event, LabeledEvent, Resolution};
+use crate::isc::IscConfig;
+use crate::metrics::Scored;
+use crate::util::parallel::band_layout;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+
+/// How each denoise shard builds its band(+halo) backend.
+#[derive(Clone, Debug)]
+pub enum ShardBackend {
+    /// Full-precision SAE planes — sharded scoring is bit-for-bit ≡ the
+    /// serial ideal backend.
+    Ideal,
+    /// ISC analog arrays (per-shard seeds derived as in the write
+    /// router). Bit-for-bit ≡ serial when `mismatch` is `None`; with
+    /// mismatch the per-shard maps differ by construction.
+    Isc(IscConfig),
+}
+
+/// Per-shard outcome counters, returned by [`StcfShardPool::shutdown`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardTally {
+    /// Events this shard owned and scored.
+    pub scored: u64,
+    /// Scored events at or above the keep threshold.
+    pub kept: u64,
+    /// Scored events below the keep threshold.
+    pub dropped: u64,
+    /// Write-only halo ingests (duplicates of border events owned by a
+    /// neighbouring shard).
+    pub halo_ingests: u64,
+}
+
+/// One time-ordered work item for a shard.
+enum Item {
+    /// Score this event (index into the dispatched batch), then ingest it.
+    Score(u32, Event),
+    /// Ingest only: a halo duplicate owned by another shard.
+    Halo(Event),
+}
+
+enum Job {
+    Batch(Vec<Item>),
+    Stop,
+}
+
+struct Reply {
+    scores: Vec<(u32, u32)>,
+}
+
+/// The denoise shard pool. Construct once, feed time-sorted batches
+/// through [`StcfShardPool::score_batch`] / [`StcfShardPool::filter_batch`],
+/// then [`StcfShardPool::shutdown`] for the tallies.
+pub struct StcfShardPool {
+    senders: Vec<SyncSender<Job>>,
+    handles: Vec<JoinHandle<ShardTally>>,
+    reply_rx: Receiver<Reply>,
+    res: Resolution,
+    prm: StcfParams,
+    band_h: usize,
+    radius: usize,
+    /// Per-shard item lists for the dispatch in progress (shipped whole
+    /// to the shard, so each dispatch hands its allocation over).
+    staging: Vec<Vec<Item>>,
+}
+
+impl StcfShardPool {
+    /// Pool of (at most) `n_shards` denoise workers over `res`, each
+    /// backed per `backend`. The shard bands match
+    /// [`crate::util::parallel::band_layout`]; each backend additionally
+    /// covers `prm.radius` halo rows per side.
+    pub fn new(res: Resolution, n_shards: usize, backend: ShardBackend, prm: StcfParams) -> Self {
+        let h = res.height as usize;
+        let (band_h, n) = band_layout(h, n_shards);
+        let radius = prm.radius as usize;
+        let (reply_tx, reply_rx) = sync_channel::<Reply>(n);
+        let mut senders = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for shard in 0..n {
+            let (tx, rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(2);
+            let band_start = shard * band_h;
+            let band_end = (band_start + band_h).min(h) - 1;
+            let lo = band_start.saturating_sub(radius);
+            let hi = (band_end + radius).min(h - 1);
+            let local = Resolution::new(res.width, (hi - lo + 1) as u16);
+            let backend = backend.clone();
+            let reply = reply_tx.clone();
+            handles.push(std::thread::spawn(move || {
+                // Built on the worker so heavyweight setup (the ISC
+                // Monte-Carlo bank fit) also runs in parallel.
+                let mut b = match backend {
+                    ShardBackend::Ideal => StcfBackend::ideal_with_window(local, prm.tau_tw_us),
+                    ShardBackend::Isc(mut cfg) => {
+                        cfg.seed = crate::util::parallel::shard_seed(cfg.seed, shard);
+                        StcfBackend::isc(local, cfg, prm.tau_tw_us)
+                    }
+                };
+                let mut tally = ShardTally::default();
+                for job in rx {
+                    let items = match job {
+                        Job::Batch(items) => items,
+                        Job::Stop => break,
+                    };
+                    let mut scores = Vec::new();
+                    for item in &items {
+                        match item {
+                            Item::Score(idx, ev) => {
+                                let mut e = *ev;
+                                e.y -= lo as u16;
+                                let s = support_count(&b, &e, &prm);
+                                scores.push((*idx, s));
+                                b.ingest(&e, &prm);
+                                tally.scored += 1;
+                                if s >= prm.threshold {
+                                    tally.kept += 1;
+                                } else {
+                                    tally.dropped += 1;
+                                }
+                            }
+                            Item::Halo(ev) => {
+                                let mut e = *ev;
+                                e.y -= lo as u16;
+                                b.ingest(&e, &prm);
+                                tally.halo_ingests += 1;
+                            }
+                        }
+                    }
+                    if reply.send(Reply { scores }).is_err() {
+                        break; // pool dropped mid-batch
+                    }
+                }
+                tally
+            }));
+            senders.push(tx);
+        }
+        // The pool holds no reply sender of its own: once every worker
+        // clone is gone, `reply_rx.recv()` reports the death instead of
+        // blocking forever.
+        drop(reply_tx);
+        Self {
+            senders,
+            handles,
+            reply_rx,
+            res,
+            prm,
+            band_h,
+            radius,
+            staging: (0..n).map(|_| Vec::new()).collect(),
+        }
+    }
+
+    /// Effective shard count (≤ requested; see `band_layout`).
+    pub fn n_shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// The filter parameters every shard scores with.
+    pub fn params(&self) -> &StcfParams {
+        &self.prm
+    }
+
+    #[inline]
+    fn shard_for(&self, y: usize) -> usize {
+        (y / self.band_h).min(self.senders.len() - 1)
+    }
+
+    /// Score a time-sorted batch of on-sensor events. `scores` is
+    /// cleared and filled with one support count per event, in input
+    /// order — identical to calling [`support_count`] +
+    /// [`StcfBackend::ingest`] serially over the whole stream (see the
+    /// module docs for the backend caveats). Blocks until every shard
+    /// has finished its slice.
+    pub fn score_batch(&mut self, batch: &[LabeledEvent], scores: &mut Vec<u32>) {
+        scores.clear();
+        scores.resize(batch.len(), 0);
+        let h = self.res.height as usize;
+        for (k, le) in batch.iter().enumerate() {
+            let e = &le.ev;
+            debug_assert!(self.res.contains(e.x, e.y), "off-sensor event {e:?}");
+            let y = e.y as usize;
+            let own = self.shard_for(y);
+            let s_min = self.shard_for(y.saturating_sub(self.radius));
+            let s_max = self.shard_for((y + self.radius).min(h - 1));
+            for s in s_min..=s_max {
+                if s == own {
+                    self.staging[s].push(Item::Score(k as u32, *e));
+                } else {
+                    self.staging[s].push(Item::Halo(*e));
+                }
+            }
+        }
+        let mut in_flight = 0usize;
+        for s in 0..self.senders.len() {
+            if self.staging[s].is_empty() {
+                continue;
+            }
+            let items = std::mem::take(&mut self.staging[s]);
+            self.senders[s].send(Job::Batch(items)).expect("denoise shard died");
+            in_flight += 1;
+        }
+        for _ in 0..in_flight {
+            let r = self.reply_rx.recv().expect("denoise shard died");
+            for &(idx, s) in &r.scores {
+                scores[idx as usize] = s;
+            }
+        }
+    }
+
+    /// Score `batch` and append the events passing the keep threshold to
+    /// `kept` in input order. `scores` is scratch (reused across calls).
+    pub fn filter_batch(
+        &mut self,
+        batch: &[LabeledEvent],
+        scores: &mut Vec<u32>,
+        kept: &mut Vec<LabeledEvent>,
+    ) {
+        self.score_batch(batch, scores);
+        for (le, &s) in batch.iter().zip(scores.iter()) {
+            if s >= self.prm.threshold {
+                kept.push(*le);
+            }
+        }
+    }
+
+    /// Convenience mirror of the serial [`super::stcf::run`]: score a
+    /// whole sorted stream (in pool-sized batches — the split does not
+    /// change any score) and return the same [`StcfRun`] shape.
+    pub fn run(&mut self, events: &[LabeledEvent]) -> StcfRun {
+        let mut scores = Vec::new();
+        let mut scored = Vec::with_capacity(events.len());
+        let mut kept = Vec::new();
+        for chunk in events.chunks(4_096) {
+            self.score_batch(chunk, &mut scores);
+            for (le, &s) in chunk.iter().zip(&scores) {
+                scored.push(Scored { score: s as f64, is_signal: le.is_signal });
+                if s >= self.prm.threshold {
+                    kept.push(*le);
+                }
+            }
+        }
+        StcfRun { scored, kept }
+    }
+
+    /// Stop all shards and collect their tallies (index = shard).
+    pub fn shutdown(mut self) -> Vec<ShardTally> {
+        for s in &self.senders {
+            let _ = s.send(Job::Stop);
+        }
+        self.handles.drain(..).map(|h| h.join().expect("join denoise shard")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::denoise::stcf;
+    use crate::events::Polarity;
+
+    fn le(t: u64, x: u16, y: u16) -> LabeledEvent {
+        LabeledEvent { ev: Event::new(t, x, y, Polarity::On), is_signal: true }
+    }
+
+    /// Deterministic stream that hits every row, including band borders.
+    fn stream(res: Resolution, n: u64) -> Vec<LabeledEvent> {
+        (0..n)
+            .map(|k| {
+                le(
+                    1 + k * 211,
+                    (k * 7 % res.width as u64) as u16,
+                    (k * 5 % res.height as u64) as u16,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sharded_ideal_equals_serial_for_every_shard_count() {
+        let res = Resolution::new(24, 16);
+        let evs = stream(res, 400);
+        let prm = StcfParams::default();
+        let mut serial_b = StcfBackend::ideal(res);
+        let serial = stcf::run(&mut serial_b, &evs, &prm);
+        for shards in [1usize, 2, 4, 8] {
+            let mut pool = StcfShardPool::new(res, shards, ShardBackend::Ideal, prm);
+            let got = pool.run(&evs);
+            assert_eq!(got.scored, serial.scored, "shards={shards}");
+            assert_eq!(got.kept, serial.kept, "shards={shards}");
+            let tallies = pool.shutdown();
+            assert_eq!(tallies.iter().map(|t| t.scored).sum::<u64>(), evs.len() as u64);
+            assert_eq!(
+                tallies.iter().map(|t| t.kept).sum::<u64>(),
+                serial.kept.len() as u64,
+                "shards={shards}"
+            );
+        }
+    }
+
+    #[test]
+    fn halo_rows_are_replicated_not_scored() {
+        let res = Resolution::new(8, 8);
+        let prm = StcfParams::default(); // radius 3 > band_h 2: deep halos
+        let mut pool = StcfShardPool::new(res, 4, ShardBackend::Ideal, prm);
+        let evs = stream(res, 120);
+        pool.run(&evs);
+        let tallies = pool.shutdown();
+        assert_eq!(tallies.len(), 4);
+        // Every event is scored exactly once pool-wide...
+        assert_eq!(tallies.iter().map(|t| t.scored).sum::<u64>(), 120);
+        // ...and border events are additionally halo-ingested elsewhere.
+        assert!(tallies.iter().map(|t| t.halo_ingests).sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn batch_split_does_not_change_scores() {
+        let res = Resolution::new(16, 12);
+        let evs = stream(res, 300);
+        let prm = StcfParams::default();
+        let mut a = StcfShardPool::new(res, 3, ShardBackend::Ideal, prm);
+        let whole = a.run(&evs);
+        let mut b = StcfShardPool::new(res, 3, ShardBackend::Ideal, prm);
+        let mut scores = Vec::new();
+        let mut got = Vec::new();
+        for chunk in evs.chunks(17) {
+            b.score_batch(chunk, &mut scores);
+            got.extend(scores.iter().map(|&s| s as f64));
+        }
+        let want: Vec<f64> = whole.scored.iter().map(|s| s.score).collect();
+        assert_eq!(got, want);
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn filter_batch_applies_threshold_in_order() {
+        let res = Resolution::new(16, 8);
+        let evs = stream(res, 200);
+        let prm = StcfParams::default();
+        let mut pool = StcfShardPool::new(res, 2, ShardBackend::Ideal, prm);
+        let (mut scores, mut kept) = (Vec::new(), Vec::new());
+        pool.filter_batch(&evs, &mut scores, &mut kept);
+        let mut serial_b = StcfBackend::ideal(res);
+        let serial = stcf::run(&mut serial_b, &evs, &prm);
+        assert_eq!(kept, serial.kept);
+        pool.shutdown();
+    }
+}

@@ -9,9 +9,25 @@
 //! `t − T(u) ≤ τ_tw` with a single analog comparator `V_mem ≥ V_tw`
 //! (Fig. 10b) — the entire point of the self-normalizing analog TS.
 //!
-//! The support query is row-sliced on both backends: one contiguous
-//! slice walk per patch row (see [`support_count`]), with the compiled
-//! [`Comparator`] keeping the per-cell test a pure integer-age compare.
+//! The support query runs at three tiers (fastest applicable wins; all
+//! three produce identical counts — see `tests/stcf_equiv.rs` and the
+//! complexity table in [`crate::denoise`]):
+//!
+//! 1. **bitmask** ([`support_count_bitmask`]) — popcount the per-row
+//!    recency bitmask words over the masked patch window
+//!    ([`crate::util::bitplane::RecencyPlane`]), skip all-zero rows
+//!    outright, and confirm only the set-bit runs against the exact
+//!    timestamp/comparator test;
+//! 2. **row-sliced** ([`support_count_rows`]) — one contiguous slice
+//!    walk per patch row with the compiled [`Comparator`] integer-age
+//!    test;
+//! 3. **naive** ([`support_count_naive`]) — per-(dx, dy) point reads,
+//!    the reference.
+//!
+//! The bitmask tier inherits the causality contract of the recency
+//! plane: counts are exact for queries at or ahead of the stream head
+//! (score-then-write over a time-sorted stream — precisely how
+//! [`run`] and the coordinator pipeline drive it).
 
 use crate::circuit::montecarlo::FittedBank;
 use crate::events::{Event, LabeledEvent, Polarity, Resolution};
@@ -52,7 +68,16 @@ impl Default for StcfParams {
 /// Which surface backs the support query.
 pub enum StcfBackend {
     /// Full-precision timestamps (the paper's "ideal" software curve).
-    Ideal { sae: [Sae; 2] },
+    /// `planes[0]` serves polarity-insensitive queries and the OFF
+    /// polarity; `planes[1]` (the ON plane) is allocated lazily on the
+    /// first polarity-sensitive ON ingest, so the default
+    /// (`polarity_sensitive: false`) configuration pays for one plane.
+    Ideal {
+        planes: Vec<Sae>,
+        /// Recency window baked into each plane's bitmask (lazily
+        /// created planes inherit it).
+        window_us: u64,
+    },
     /// The simulated analog array with a comparator at `v_tw` volts.
     /// `cmp` is the compiled fixed-threshold comparator (integer-age test;
     /// see `IscArray::comparator`).
@@ -60,9 +85,18 @@ pub enum StcfBackend {
 }
 
 impl StcfBackend {
-    /// Ideal backend at resolution `res`.
+    /// Ideal backend at resolution `res`. The recency bitmask is sized
+    /// for the default correlation window ([`StcfParams::default`]);
+    /// queries with a larger τ_tw fall back to the row-sliced scan —
+    /// use [`StcfBackend::ideal_with_window`] to cover them.
     pub fn ideal(res: Resolution) -> Self {
-        StcfBackend::Ideal { sae: [Sae::new(res), Sae::new(res)] }
+        Self::ideal_with_window(res, StcfParams::default().tau_tw_us)
+    }
+
+    /// Ideal backend whose recency bitmask covers windows up to
+    /// `window_us`.
+    pub fn ideal_with_window(res: Resolution, window_us: u64) -> Self {
+        StcfBackend::Ideal { planes: vec![Sae::with_recency(res, window_us)], window_us }
     }
 
     /// ISC backend with the comparator threshold derived from the nominal
@@ -78,17 +112,28 @@ impl StcfBackend {
         Self::isc_with_vtw(res, cfg, v_tw)
     }
 
-    /// ISC backend with an explicit comparator voltage.
+    /// ISC backend with an explicit comparator voltage. The backing
+    /// array always maintains its recency bitmask (the bitmask support
+    /// tier reads it); pure write/readout arrays leave it off.
     pub fn isc_with_vtw(res: Resolution, cfg: IscConfig, v_tw: f64) -> Self {
-        let array = IscArray::new(res, cfg);
+        let array = IscArray::new(res, IscConfig { recency_bitmask: true, ..cfg });
         let cmp = array.comparator(v_tw);
         StcfBackend::Isc { array, v_tw, cmp }
     }
 
     fn res(&self) -> Resolution {
         match self {
-            StcfBackend::Ideal { sae } => sae[0].resolution(),
+            StcfBackend::Ideal { planes, .. } => planes[0].resolution(),
             StcfBackend::Isc { array, .. } => array.resolution(),
+        }
+    }
+
+    /// Number of allocated SAE planes (ideal backend; diagnostics for
+    /// the lazy-allocation contract).
+    pub fn ideal_planes(&self) -> usize {
+        match self {
+            StcfBackend::Ideal { planes, .. } => planes.len(),
+            StcfBackend::Isc { .. } => 0,
         }
     }
 
@@ -96,10 +141,15 @@ impl StcfBackend {
     #[inline]
     fn supported(&self, x: u16, y: u16, p: Polarity, t: u64, prm: &StcfParams) -> bool {
         match self {
-            StcfBackend::Ideal { sae } => {
-                let plane = if prm.polarity_sensitive { p.index() } else { 0 };
-                let tw = sae[plane].last(x, y);
-                tw != 0 && t >= tw && t - tw <= prm.tau_tw_us
+            StcfBackend::Ideal { planes, .. } => {
+                let idx = if prm.polarity_sensitive { p.index() } else { 0 };
+                match planes.get(idx) {
+                    None => false, // plane never ingested — nothing recent
+                    Some(s) => {
+                        let tw = s.last(x, y);
+                        tw != 0 && t >= tw && t - tw <= prm.tau_tw_us
+                    }
+                }
             }
             StcfBackend::Isc { array, cmp, .. } => array.compare_with(cmp, x, y, p, t),
         }
@@ -108,29 +158,114 @@ impl StcfBackend {
     /// Record an event on the backing surface (after scoring it — the
     /// filter is causal). Public so streaming consumers (the coordinator
     /// pipeline) can interleave scoring and ingestion without
-    /// materializing a kept-event vector.
+    /// materializing a kept-event vector. The ideal backend allocates
+    /// its second (ON) plane here on the first polarity-sensitive ON
+    /// ingest.
     #[inline]
     pub fn ingest(&mut self, e: &Event, prm: &StcfParams) {
         match self {
-            StcfBackend::Ideal { sae } => {
-                let plane = if prm.polarity_sensitive { e.p.index() } else { 0 };
-                sae[plane].ingest(e);
+            StcfBackend::Ideal { planes, window_us } => {
+                let idx = if prm.polarity_sensitive { e.p.index() } else { 0 };
+                if planes.len() <= idx {
+                    let res = planes[0].resolution();
+                    planes.push(Sae::with_recency(res, *window_us));
+                }
+                planes[idx].ingest(e);
             }
             StcfBackend::Isc { array, .. } => array.write(e),
         }
     }
 }
 
-/// Support count for event `e` (center optional via `count_center`).
+/// Support count for event `e` (center optional via `count_center`):
+/// the bitmask-accelerated scan when the backend's recency plane covers
+/// the query window, else the row-sliced scan. Identical counts either
+/// way (causal queries; see the module docs).
+pub fn support_count(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 {
+    match support_count_bitmask(backend, e, prm) {
+        Some(n) => n,
+        None => support_count_rows(backend, e, prm),
+    }
+}
+
+/// Bitmask-accelerated support scan: popcount the masked recency words
+/// per patch row (all-zero rows cost one or two word loads and nothing
+/// else), then confirm each set-bit run with the exact row-sliced
+/// timestamp/comparator test — the bitmask is a conservative superset,
+/// so the confirmed count is bit-for-bit the exact one.
 ///
-/// Row-sliced scan: the (2r+1)² patch is clamped to the sensor once,
-/// then each patch row is counted over one contiguous memory slice
+/// Returns `None` when the fast path does not apply (off-sensor event,
+/// no recency plane, or a query window the plane does not cover) — the
+/// caller falls back to [`support_count_rows`].
+pub fn support_count_bitmask(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> Option<u32> {
+    let res = backend.res();
+    if !res.contains(e.x, e.y) {
+        return None; // stray off-sensor event: the clamped reference scans handle it
+    }
+    let r = prm.radius as usize;
+    let (x0, x1) = patch_bounds(e.x as usize, r, res.width as usize);
+    let (y0, y1) = patch_bounds(e.y as usize, r, res.height as usize);
+    let (x0, x1) = (x0 as u16, x1 as u16);
+    let mut n = 0u32;
+    match backend {
+        StcfBackend::Ideal { planes, .. } => {
+            let idx = if prm.polarity_sensitive { e.p.index() } else { 0 };
+            let Some(s) = planes.get(idx) else {
+                return Some(0); // plane never ingested — zero support by definition
+            };
+            let rp = s.recency()?;
+            if !rp.covers(prm.tau_tw_us) {
+                return None;
+            }
+            for y in y0..=y1 {
+                rp.for_each_possibly_recent_run(y, x0, x1, e.t, |run| {
+                    n += s.count_recent_in_row(
+                        y as u16,
+                        run.start as u16,
+                        (run.end - 1) as u16,
+                        e.t,
+                        prm.tau_tw_us,
+                    );
+                });
+            }
+        }
+        StcfBackend::Isc { array, cmp, .. } => {
+            let rp = array.recency_plane(e.p)?;
+            if !rp.covers(cmp.max_dt_us()) {
+                return None;
+            }
+            for y in y0..=y1 {
+                rp.for_each_possibly_recent_run(y, x0, x1, e.t, |run| {
+                    n += array.count_recent_in_row(
+                        cmp,
+                        e.p,
+                        y as u16,
+                        run.start as u16,
+                        (run.end - 1) as u16,
+                        e.t,
+                    );
+                });
+            }
+        }
+    }
+    if !prm.count_center && backend.supported(e.x, e.y, e.p, e.t, prm) {
+        // Saturating: on a causal query a supported center always has its
+        // bit set (so n ≥ 1), but a non-causal query can lose the bit to
+        // bucket recycling while the exact point test still passes —
+        // bound that contract violation at 0 instead of wrapping.
+        n = n.saturating_sub(1);
+    }
+    Some(n)
+}
+
+/// Row-sliced support scan: the (2r+1)² patch is clamped to the sensor
+/// once, then each patch row is counted over one contiguous memory slice
 /// ([`Sae::count_recent_in_row`] / [`IscArray::count_recent_in_row`]) —
 /// no per-element 2D index math or bounds checks in the inner loop. The
 /// center pixel is included by the row scan and subtracted afterwards
 /// when `count_center` is off. Produces exactly the same counts as
 /// [`support_count_naive`].
-pub fn support_count(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 {
+pub fn support_count_rows(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 {
     let res = backend.res();
     if !res.contains(e.x, e.y) {
         // Stray off-sensor event: keep the reference scan's clamped
@@ -143,9 +278,11 @@ pub fn support_count(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 
     let (x0, x1) = (x0 as u16, x1 as u16);
     let mut n = 0u32;
     match backend {
-        StcfBackend::Ideal { sae } => {
-            let plane = if prm.polarity_sensitive { e.p.index() } else { 0 };
-            let s = &sae[plane];
+        StcfBackend::Ideal { planes, .. } => {
+            let idx = if prm.polarity_sensitive { e.p.index() } else { 0 };
+            let Some(s) = planes.get(idx) else {
+                return 0; // plane never ingested — zero support by definition
+            };
             for y in y0..=y1 {
                 n += s.count_recent_in_row(y as u16, x0, x1, e.t, prm.tau_tw_us);
             }
@@ -164,7 +301,7 @@ pub fn support_count(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 
 
 /// Reference implementation: per-(dx, dy) point reads over the patch.
 /// Kept for the equivalence tests and the support-scan benchmark; hot
-/// paths use the row-sliced [`support_count`].
+/// paths use [`support_count`].
 pub fn support_count_naive(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 {
     let res = backend.res();
     let r = prm.radius as i64;
@@ -199,7 +336,8 @@ pub struct StcfRun {
 /// Run the STCF over a sorted labeled stream: score every event against
 /// the *current* surface, then write it. For streaming consumption
 /// without materializing `kept`, interleave [`support_count`] and
-/// [`StcfBackend::ingest`] directly (see `coordinator::pipeline`).
+/// [`StcfBackend::ingest`] directly (see `coordinator::pipeline`); to
+/// score on worker threads, use [`crate::denoise::sharded`].
 pub fn run(backend: &mut StcfBackend, events: &[LabeledEvent], prm: &StcfParams) -> StcfRun {
     let mut scored = Vec::with_capacity(events.len());
     let mut kept = Vec::new();
@@ -306,7 +444,7 @@ mod tests {
     fn polarity_sensitive_counts_same_polarity_only() {
         let res = Resolution::new(8, 8);
         let prm = StcfParams { polarity_sensitive: true, ..StcfParams::default() };
-        let mut b = StcfBackend::Ideal { sae: [Sae::new(res), Sae::new(res)] };
+        let mut b = StcfBackend::ideal(res);
         let stream = vec![
             LabeledEvent { ev: Event::new(100, 3, 3, Polarity::Off), is_signal: true },
             LabeledEvent { ev: Event::new(200, 4, 3, Polarity::On), is_signal: true },
@@ -317,7 +455,34 @@ mod tests {
     }
 
     #[test]
-    fn row_sliced_scan_equals_naive_reference() {
+    fn second_ideal_plane_is_allocated_lazily() {
+        let res = Resolution::new(8, 8);
+        let mut b = StcfBackend::ideal(res);
+        assert_eq!(b.ideal_planes(), 1, "default config holds one plane");
+        // Polarity-insensitive traffic of both polarities stays on one
+        // plane (the memory-halving default).
+        let prm = StcfParams::default();
+        b.ingest(&Event::new(100, 1, 1, Polarity::On), &prm);
+        b.ingest(&Event::new(200, 2, 1, Polarity::Off), &prm);
+        assert_eq!(b.ideal_planes(), 1);
+        // Polarity-sensitive OFF traffic also lives on plane 0...
+        let ps = StcfParams { polarity_sensitive: true, ..StcfParams::default() };
+        b.ingest(&Event::new(300, 3, 1, Polarity::Off), &ps);
+        assert_eq!(b.ideal_planes(), 1);
+        // ...and a query against the absent ON plane reads zero support
+        // on every scan tier.
+        let probe = Event::new(400, 3, 1, Polarity::On);
+        assert_eq!(support_count(&b, &probe, &ps), 0);
+        assert_eq!(support_count_rows(&b, &probe, &ps), 0);
+        assert_eq!(support_count_naive(&b, &probe, &ps), 0);
+        // The first polarity-sensitive ON ingest materializes plane 1.
+        b.ingest(&probe, &ps);
+        assert_eq!(b.ideal_planes(), 2);
+        assert_eq!(support_count(&b, &Event::new(500, 4, 1, Polarity::On), &ps), 1);
+    }
+
+    #[test]
+    fn all_three_scan_tiers_agree() {
         let res = Resolution::new(16, 12);
         let evs: Vec<LabeledEvent> = (0..120u64)
             .map(|k| {
@@ -340,21 +505,42 @@ mod tests {
                     count_center,
                     ..StcfParams::default()
                 };
-                let mut b = if polarity_sensitive {
-                    StcfBackend::Ideal { sae: [Sae::new(res), Sae::new(res)] }
-                } else {
-                    StcfBackend::ideal(res)
-                };
+                let mut b = StcfBackend::ideal(res);
                 for le in &evs {
+                    let naive = support_count_naive(&b, &le.ev, &prm);
                     assert_eq!(
-                        support_count(&b, &le.ev, &prm),
-                        support_count_naive(&b, &le.ev, &prm),
-                        "ps={polarity_sensitive} cc={count_center} e={:?}",
+                        support_count_rows(&b, &le.ev, &prm),
+                        naive,
+                        "rows: ps={polarity_sensitive} cc={count_center} e={:?}",
                         le.ev
                     );
+                    assert_eq!(
+                        support_count_bitmask(&b, &le.ev, &prm),
+                        Some(naive),
+                        "bitmask: ps={polarity_sensitive} cc={count_center} e={:?}",
+                        le.ev
+                    );
+                    assert_eq!(support_count(&b, &le.ev, &prm), naive);
                     b.ingest(&le.ev, &prm);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn uncovered_window_falls_back_to_rows() {
+        // Query window wider than the bitmask guarantee: the fast path
+        // must decline, and the auto dispatch must still be exact.
+        let res = Resolution::new(12, 12);
+        let mut b = StcfBackend::ideal_with_window(res, 1_000);
+        let prm = StcfParams { tau_tw_us: 50_000, ..StcfParams::default() };
+        let mut t = 0u64;
+        for k in 0..60u64 {
+            t += 400;
+            let e = Event::new(t, (k % 12) as u16, (k * 5 % 12) as u16, Polarity::On);
+            assert_eq!(support_count_bitmask(&b, &e, &prm), None);
+            assert_eq!(support_count(&b, &e, &prm), support_count_naive(&b, &e, &prm));
+            b.ingest(&e, &prm);
         }
     }
 

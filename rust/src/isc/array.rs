@@ -7,8 +7,9 @@
 //! Monte-Carlo fitted bank, Sec. IV-C). Because the decay is a *passive*
 //! physical process, the simulator never touches idle pixels: state is
 //! (last-write time, per-pixel decay parameters) plus per-row active-pixel
-//! lists, and V_mem is evaluated lazily at read/compare time — O(1) per
-//! event, O(patch rows) per STCF query, O(active) per frame readout. This
+//! lists and recency bitmask words, and V_mem is evaluated lazily at
+//! read/compare time — O(1) per event, O(patch words + confirms) per
+//! STCF query, O(active) per frame readout. This
 //! mirrors the actual hardware's energy profile and is also what makes
 //! the software hot path fast.
 //!
@@ -24,6 +25,7 @@ use crate::circuit::montecarlo::{FittedBank, MismatchParams};
 use crate::circuit::params::VDD;
 use crate::events::{Event, Polarity, Resolution};
 use crate::util::active::{for_each_sorted_run, ActiveSet, DENSE_FALLBACK_ALPHA};
+use crate::util::bitplane::RecencyPlane;
 use crate::util::decay::DecayLut;
 use crate::util::fit::DoubleExp;
 use crate::util::grid::Grid;
@@ -40,6 +42,12 @@ pub struct IscConfig {
     pub mismatch: Option<MismatchParams>,
     /// Separate planes per polarity (paper Sec. IV-F; costs 2× area).
     pub polarity_sensitive: bool,
+    /// Maintain per-row recency bitmask words on every write (the STCF
+    /// bitmask support scan reads them; see [`IscArray::recency_plane`]).
+    /// Off by default so pure write/readout arrays — the router's write
+    /// shards — don't pay the mark + bucket-recycle cost;
+    /// `StcfBackend::isc*` constructors turn it on.
+    pub recency_bitmask: bool,
     /// Size of the fitted MC bank pixels sample from.
     pub bank_size: usize,
     /// Seed for per-pixel parameter assignment.
@@ -52,6 +60,7 @@ impl Default for IscConfig {
             c_mem: 20e-15,
             mismatch: Some(MismatchParams::default()),
             polarity_sensitive: false,
+            recency_bitmask: false,
             bank_size: 512,
             seed: 0x15c,
         }
@@ -67,14 +76,22 @@ struct Plane {
     param_idx: Vec<u32>,
     /// Pixels written within the memory horizon (lazily pruned).
     active: ActiveSet,
+    /// Per-row recency bitmask (window = the memory horizon), maintained
+    /// on every write when [`IscConfig::recency_bitmask`] is set — the
+    /// STCF bitmask support scan reads it.
+    recency: Option<RecencyPlane>,
 }
 
 impl Plane {
-    /// Record one write: refresh the stamp and (re-)list the pixel.
+    /// Record one write: refresh the stamp, (re-)list the pixel and set
+    /// its recency bit.
     #[inline]
     fn record(&mut self, i: usize, x: u16, y: u16, t_us: u64) {
         self.t_write[i] = t_us.max(1);
         self.active.mark(x, y);
+        if let Some(rp) = &mut self.recency {
+            rp.mark(x, y, t_us.max(1));
+        }
     }
 
     /// Amortized expiry scan (write path only): accrue `writes` to the
@@ -127,6 +144,18 @@ pub struct Comparator {
     dt_max_us: Vec<u64>,
 }
 
+impl Comparator {
+    /// Largest Δt_max across the bank — the recency window a superset
+    /// structure (the [`RecencyPlane`]) must cover for "bit clear ⇒
+    /// comparator fails" to hold for every cell. `u64::MAX` when some
+    /// cell never decays below the threshold within the fit span (such a
+    /// comparator cannot be bitmask-accelerated).
+    #[inline]
+    pub fn max_dt_us(&self) -> u64 {
+        self.dt_max_us.iter().copied().max().unwrap_or(0)
+    }
+}
+
 impl IscArray {
     pub fn new(res: Resolution, cfg: IscConfig) -> Self {
         let n = res.pixels();
@@ -134,15 +163,6 @@ impl IscArray {
             Some(mm) => FittedBank::build(cfg.c_mem, mm, cfg.bank_size, cfg.seed).fits,
             None => vec![FittedBank::nominal(cfg.c_mem)],
         };
-        let n_planes = if cfg.polarity_sensitive { 2 } else { 1 };
-        let mut rng = Pcg64::with_stream(cfg.seed, 0xa55);
-        let planes = (0..n_planes)
-            .map(|_| Plane {
-                t_write: vec![0u64; n],
-                param_idx: (0..n).map(|_| rng.below(bank.len() as u64) as u32).collect(),
-                active: ActiveSet::new(res.width as usize, res.height as usize),
-            })
-            .collect();
         // Precompute the frame-readout decay tables (one row per bank
         // entry) over the bank-derived memory horizon.
         let span_s = bank
@@ -156,6 +176,21 @@ impl IscArray {
         let lut = DecayLut::build(bank.len(), bins, step, |row, dt_us| {
             (bank[row].eval(dt_us as f64 * 1e-6) / VDD).clamp(0.0, 1.0)
         });
+        let n_planes = if cfg.polarity_sensitive { 2 } else { 1 };
+        let mut rng = Pcg64::with_stream(cfg.seed, 0xa55);
+        let planes = (0..n_planes)
+            .map(|_| Plane {
+                t_write: vec![0u64; n],
+                param_idx: (0..n).map(|_| rng.below(bank.len() as u64) as u32).collect(),
+                active: ActiveSet::new(res.width as usize, res.height as usize),
+                // Recency window = the readout horizon: a clear bit then
+                // certifies "expired" for every comparator threshold whose
+                // Δt_max fits inside the horizon (`Comparator::max_dt_us`).
+                recency: cfg.recency_bitmask.then(|| {
+                    RecencyPlane::new(res.width as usize, res.height as usize, lut.horizon_us())
+                }),
+            })
+            .collect();
         Self { res, cfg, planes, bank, lut, clock_us: 0, writes: 0 }
     }
 
@@ -193,6 +228,16 @@ impl IscArray {
     /// Pixels currently listed as active on plane `p` (diagnostics).
     pub fn active_pixels(&self, p: Polarity) -> usize {
         self.planes[self.plane_for(p)].active.len()
+    }
+
+    /// The recency bitmask of the plane serving polarity `p` (window =
+    /// the memory horizon; maintained on every write), present when the
+    /// array was built with [`IscConfig::recency_bitmask`]. The STCF
+    /// support scan popcounts it before touching any stamp (see
+    /// [`crate::denoise::support_count`]).
+    #[inline]
+    pub fn recency_plane(&self, p: Polarity) -> Option<&RecencyPlane> {
+        self.planes[self.plane_for(p)].recency.as_ref()
     }
 
     #[inline]
@@ -560,6 +605,9 @@ impl IscArray {
         for p in &mut self.planes {
             p.t_write.iter_mut().for_each(|t| *t = 0);
             p.active.clear();
+            if let Some(rp) = &mut p.recency {
+                rp.clear();
+            }
         }
         self.clock_us = 0;
         self.writes = 0;
@@ -923,6 +971,27 @@ mod tests {
         let by_point: u32 =
             (0..16u16).filter(|&x| a.compare_with(&cmp, x, 5, Polarity::On, t)).count() as u32;
         assert_eq!(by_row, by_point);
+    }
+
+    #[test]
+    fn recency_bits_follow_writes_and_cover_the_comparator() {
+        // Off by default: the router's write shards never pay for it.
+        assert!(small().recency_plane(Polarity::On).is_none());
+        let cfg = IscConfig { recency_bitmask: true, ..IscConfig::default() };
+        let mut a = IscArray::new(Resolution::new(16, 12), cfg);
+        a.write(&Event::new(1_000, 3, 4, Polarity::On));
+        let rp = a.recency_plane(Polarity::On).unwrap();
+        assert!(rp.covers(a.memory_horizon_us()));
+        assert_eq!(rp.popcount_window(4, 0, 15, 2_000), 1);
+        assert_eq!(rp.popcount_window(5, 0, 15, 2_000), 0);
+        // Any in-horizon comparator threshold is bitmask-coverable: each
+        // cell crosses v_tw strictly before its 1 %-of-V_dd horizon.
+        let cmp = a.comparator(0.4);
+        assert!(cmp.max_dt_us() <= a.memory_horizon_us());
+        assert!(rp.covers(cmp.max_dt_us()));
+        a.reset();
+        let rp = a.recency_plane(Polarity::On).unwrap();
+        assert_eq!(rp.popcount_window(4, 0, 15, 2_000), 0);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! | dense fallback (activity > α = 20 %) | n/a | O(H·W / P) contiguous row scans (beats the list walk past α) |
 //! | partial re-render (`frame_merged_rows_into`) | full frame | O(D·W) — the router's dirty-band snapshot unit |
 //! | STCF support query (`count_recent_in_row`) | (2r+1)² indexed reads | 2r+1 row slices, integer-age test |
+//! | STCF support query, bitmask tier (`recency_plane`) | 2r+1 row slices | 2r+1 masked `u64` word loads + exact confirms of set-bit runs only (see [`crate::denoise`]) |
 //! | exact point read (`read`/`compare`) | closed form | unchanged (reference) |
 //!
 //! Chunked rendering is bit-for-bit identical for every chunk count

@@ -33,7 +33,8 @@ USAGE:
   tsisc exp <id|all> [--full]    regenerate a paper table/figure
                                  ids: table1 fig2d fig4 fig5 fig6 fig7 fig8
                                       fig9 fig10 fig12 sec2b table2 table3
-  tsisc pipeline [--duration S] [--stcf] [--shards K] [--batch-size N]
+  tsisc pipeline [--duration S] [--stcf] [--shards K] [--denoise-shards K]
+                 [--batch-size N]
   tsisc train [--family nmnist|shapes|cifardvs|gesture] [--steps N]
               [--surface isc|ideal|count|ebbi] [--per-class N]
   tsisc info
@@ -80,6 +81,7 @@ fn cmd_pipeline(args: &Args) -> i32 {
     let res = Resolution::QVGA;
     let dur = args.get_parsed("duration", 0.5f64);
     let shards = args.get_parsed("shards", 4usize);
+    let denoise_shards = args.get_parsed("denoise-shards", 4usize);
     eprintln!("generating driving-like stream at QVGA for {dur} s ...");
     let scene = EdgeScene::new(120.0, 21);
     let signal = v2e::convert(&scene, res, v2e::DvsParams::default(), dur);
@@ -88,6 +90,7 @@ fn cmd_pipeline(args: &Args) -> i32 {
 
     let cfg = PipelineConfig {
         stcf: if args.flag("stcf") { Some(StcfParams::default()) } else { None },
+        denoise_shards,
         batch_size: args.get_parsed("batch-size", 4_096usize),
         router: RouterConfig { n_shards: shards, ..RouterConfig::default() },
         ..PipelineConfig::default()
@@ -98,6 +101,7 @@ fn cmd_pipeline(args: &Args) -> i32 {
         "pipeline: {} events in, {} written, {} dropped by STCF\n\
          frames: {} ({} ms windows)\n\
          snapshots: {} served, {} band renders skipped (dirty-band protocol)\n\
+         stage wall: denoise {:.3} s, route {:.3} s, snapshot {:.3} s\n\
          wall: {:.3} s  throughput: {:.2} Meps  shards: {:?}",
         st.events_in,
         st.events_written,
@@ -106,10 +110,22 @@ fn cmd_pipeline(args: &Args) -> i32 {
         cfg.window_us / 1000,
         st.router.snapshots_served,
         st.router.bands_skipped_unchanged,
+        st.stage_wall.denoise_seconds,
+        st.stage_wall.route_seconds,
+        st.stage_wall.snapshot_seconds,
         st.wall_seconds,
         st.events_per_second / 1e6,
         st.router.per_shard,
     );
+    if let Some(dn) = &st.denoise {
+        let kept: Vec<u64> = dn.per_shard.iter().map(|t| t.kept).collect();
+        let dropped: Vec<u64> = dn.per_shard.iter().map(|t| t.dropped).collect();
+        let halo: u64 = dn.per_shard.iter().map(|t| t.halo_ingests).sum();
+        println!(
+            "denoise: {} kept {kept:?}, dropped {dropped:?}, {halo} halo ingests",
+            if dn.inline_scoring { "inline," } else { "sharded," },
+        );
+    }
     0
 }
 

@@ -6,7 +6,7 @@
 
 /// One scored decision: the classifier score (higher = more signal-like)
 /// and the ground-truth label.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Scored {
     pub score: f64,
     pub is_signal: bool,

@@ -17,6 +17,7 @@
 use super::traits::{EventSink, FrameSource, Representation};
 use crate::events::{Event, Resolution};
 use crate::util::active::{for_each_sorted_run, ActiveSet, DENSE_FALLBACK_ALPHA};
+use crate::util::bitplane::RecencyPlane;
 use crate::util::decay::DecayLut;
 use crate::util::grid::Grid;
 use crate::util::parallel::{auto_chunks, for_each_row_chunk};
@@ -29,6 +30,9 @@ pub struct Sae {
     /// Written-pixel lists per row. Full-precision timestamps never
     /// expire, so this set only grows (and is exactly the written set).
     active: ActiveSet,
+    /// Optional per-row recency bitmask, maintained on every write
+    /// (see [`Sae::with_recency`]). Backs the STCF bitmask support scan.
+    recency: Option<RecencyPlane>,
     events: u64,
     writes: u64,
 }
@@ -39,9 +43,26 @@ impl Sae {
             res,
             t: vec![0; res.pixels()],
             active: ActiveSet::new(res.width as usize, res.height as usize),
+            recency: None,
             events: 0,
             writes: 0,
         }
+    }
+
+    /// SAE that additionally maintains a [`RecencyPlane`] on every write,
+    /// guaranteeing no false negatives for recency windows up to
+    /// `window_us` — the backing store of the STCF bitmask support scan
+    /// (see [`crate::denoise::support_count`]).
+    pub fn with_recency(res: Resolution, window_us: u64) -> Self {
+        let mut s = Self::new(res);
+        s.recency = Some(RecencyPlane::new(res.width as usize, res.height as usize, window_us));
+        s
+    }
+
+    /// The recency bitmask plane, if this SAE maintains one.
+    #[inline]
+    pub fn recency(&self) -> Option<&RecencyPlane> {
+        self.recency.as_ref()
     }
 
     /// Raw timestamp read (the SAE value).
@@ -98,6 +119,9 @@ impl EventSink for Sae {
         let i = self.res.index(e.x, e.y);
         self.t[i] = e.t.max(1);
         self.active.mark(e.x, e.y);
+        if let Some(rp) = &mut self.recency {
+            rp.mark(e.x, e.y, e.t.max(1));
+        }
         self.events += 1;
         self.writes += 1;
     }
@@ -105,6 +129,11 @@ impl EventSink for Sae {
     /// Batched inner loop: one bounds-free pass over the slice;
     /// accounting is identical to repeated [`Self::ingest`].
     fn ingest_batch(&mut self, events: &[Event]) {
+        if let Some(rp) = &mut self.recency {
+            for e in events {
+                rp.mark(e.x, e.y, e.t.max(1));
+            }
+        }
         for e in events {
             let i = self.res.index(e.x, e.y);
             self.t[i] = e.t.max(1);
@@ -490,6 +519,18 @@ mod tests {
         assert_eq!(s.writes_per_event(), 1.0);
         // Rewrites do not duplicate the active entry.
         assert_eq!(s.active.len(), 1);
+    }
+
+    #[test]
+    fn recency_plane_tracks_writes_when_enabled() {
+        assert!(Sae::new(Resolution::new(8, 8)).recency().is_none());
+        let mut s = Sae::with_recency(Resolution::new(8, 8), 10_000);
+        s.ingest(&ev(1_000, 3, 2));
+        s.ingest_batch(&[ev(1_500, 5, 2)]);
+        let rp = s.recency().unwrap();
+        assert!(rp.covers(10_000));
+        assert_eq!(rp.popcount_window(2, 0, 7, 2_000), 2);
+        assert_eq!(rp.popcount_window(3, 0, 7, 2_000), 0);
     }
 
     #[test]

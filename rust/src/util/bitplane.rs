@@ -1,0 +1,347 @@
+//! Per-row recency bitmask planes for the STCF support fast path.
+//!
+//! The paper's point about support checking (Sec. IV-C, Fig. 10b) is
+//! that "was this neighbour recently active?" collapses to a binary
+//! comparator test per cell. A [`RecencyPlane`] is the software image of
+//! that observation: one bit per pixel, packed into `u64` words per
+//! sensor row, where a set bit means the pixel *possibly* holds a write
+//! recent enough to matter and a clear bit means it *provably* does not.
+//! A patch-support query then masks the few words covering the patch
+//! window, popcounts them, skips all-zero rows outright, and confirms
+//! only the set-bit runs against the exact timestamp / comparator test —
+//! O(patch words) instead of O(patch pixels) on the (common) sparse
+//! rows, and bit-for-bit equal to the exact scan because the bitmask is
+//! a conservative superset.
+//!
+//! ## Epoch-bucketed lazy ageing
+//!
+//! Bits must *expire*: a pixel written long ago is no longer recent, but
+//! clearing its bit eagerly would need a scan on every write. Instead,
+//! time is divided into epochs of `epoch_us` and the plane keeps
+//! [`EPOCH_BUCKETS`] bitmask buckets, bucket `b` holding the writes of
+//! the epochs `e ≡ b (mod EPOCH_BUCKETS)`. A write first recycles its
+//! bucket if the bucket still holds an older epoch (one `memset` per
+//! bucket per epoch — amortized to nothing) and then sets its bit. A
+//! query at time `t` ORs only the buckets whose epoch is within
+//! `EPOCH_BUCKETS − 1` of `t`'s epoch, so a clear bit guarantees
+//!
+//! > age > (EPOCH_BUCKETS − 1) · epoch_us ≥ window_us,
+//!
+//! i.e. the pixel cannot pass any recency test with a window up to
+//! [`RecencyPlane::window_us`] ([`RecencyPlane::covers`] is the gate).
+//! Set bits can be up to `EPOCH_BUCKETS · epoch_us ≈ 1.33 · window`
+//! stale — false positives the exact confirmation filters out. A bucket
+//! is only ever recycled by a mark in a *newer* epoch, so marks arriving
+//! out of time order cannot wipe recent bits (a late mark lands in the
+//! newer-tagged bucket instead — more conservative, never less).
+//!
+//! ## Causality contract
+//!
+//! Like the active-set readout ([`crate::util::active`]), the
+//! no-false-negative guarantee holds for queries at or ahead of the
+//! stream head (`t_us` ≥ every marked time). A bucket is only recycled
+//! by a write at least `EPOCH_BUCKETS − 1` epochs after the writes it
+//! held, so by the time a recent bit could be lost, the query time that
+//! made it recent has necessarily passed. Querying *behind* the stream
+//! head may miss bits recycled by later writes; callers that need
+//! non-causal queries must use the exact scan.
+
+use std::ops::Range;
+
+/// Number of epoch buckets. Four buckets bound the staleness of a set
+/// bit at `4/3 ·` window (versus `2 ·` window for the minimal two) while
+/// keeping the per-write bucket lookup a mask.
+pub const EPOCH_BUCKETS: usize = 4;
+
+/// One-bit-per-pixel recency plane with epoch-bucketed lazy ageing.
+#[derive(Clone, Debug)]
+pub struct RecencyPlane {
+    width: usize,
+    words_per_row: usize,
+    epoch_us: u64,
+    /// `EPOCH_BUCKETS` bit planes of `height · words_per_row` words.
+    buckets: Vec<Vec<u64>>,
+    /// Epoch currently held by each bucket (`u64::MAX` = empty).
+    bucket_epoch: [u64; EPOCH_BUCKETS],
+}
+
+impl RecencyPlane {
+    /// Plane guaranteeing no false negatives for recency windows up to
+    /// `window_us` (see [`RecencyPlane::covers`]).
+    pub fn new(width: usize, height: usize, window_us: u64) -> Self {
+        assert!(width > 0 && height > 0, "empty recency plane");
+        let epoch_us = window_us.div_ceil(EPOCH_BUCKETS as u64 - 1).max(1);
+        let words_per_row = width.div_ceil(64);
+        Self {
+            width,
+            words_per_row,
+            epoch_us,
+            buckets: (0..EPOCH_BUCKETS).map(|_| vec![0u64; height * words_per_row]).collect(),
+            bucket_epoch: [u64::MAX; EPOCH_BUCKETS],
+        }
+    }
+
+    /// Largest recency window (µs) this plane guarantees: a clear bit
+    /// implies the pixel's last write is older than this at any causal
+    /// query time.
+    #[inline]
+    pub fn window_us(&self) -> u64 {
+        (EPOCH_BUCKETS as u64 - 1) * self.epoch_us
+    }
+
+    /// Does the no-false-negative guarantee hold for `tau_us`? (Any
+    /// window up to the construction window is covered; a clear bit
+    /// means age > [`RecencyPlane::window_us`] ≥ `tau_us`.)
+    #[inline]
+    pub fn covers(&self, tau_us: u64) -> bool {
+        tau_us <= self.window_us()
+    }
+
+    /// Bytes of bitmask storage (diagnostics).
+    pub fn memory_bytes(&self) -> usize {
+        self.buckets.iter().map(|b| b.len() * 8).sum()
+    }
+
+    /// Record a write at `(x, y)` at time `t_us`, recycling the target
+    /// epoch bucket first if it still holds an **older** epoch. A bucket
+    /// tagged with a *newer* epoch (possible only when marks arrive out
+    /// of time order) is never wiped — the late mark just ORs its bit
+    /// into the newer bucket, which is conservative (the bit outlives
+    /// its true window; the exact confirmation filters it) where wiping
+    /// would lose genuinely recent bits.
+    #[inline]
+    pub fn mark(&mut self, x: u16, y: u16, t_us: u64) {
+        let epoch = t_us / self.epoch_us;
+        let b = (epoch % EPOCH_BUCKETS as u64) as usize;
+        let tag = self.bucket_epoch[b];
+        if tag == u64::MAX || tag < epoch {
+            self.buckets[b].fill(0);
+            self.bucket_epoch[b] = epoch;
+        }
+        self.buckets[b][y as usize * self.words_per_row + x as usize / 64] |= 1u64 << (x % 64);
+    }
+
+    /// Popcount of possibly-recent pixels in columns `x0..=x1` of row
+    /// `y` at query time `t_us` — an upper bound on the exact recent
+    /// count (diagnostics and tests; the scan path uses the run walk).
+    pub fn popcount_window(&self, y: usize, x0: u16, x1: u16, t_us: u64) -> u32 {
+        let mut n = 0u32;
+        self.for_each_possibly_recent_run(y, x0, x1, t_us, |run| n += run.len() as u32);
+        n
+    }
+
+    /// Invoke `f` once per maximal run of consecutive possibly-recent
+    /// columns within `x0..=x1` of row `y` (runs never span a word
+    /// boundary — a longer run simply arrives as two calls). An all-zero
+    /// window costs at most one word load per live epoch bucket per
+    /// window word (≤ `EPOCH_BUCKETS` × 1–2) and no calls; callers
+    /// confirm each run against the exact timestamp/comparator test.
+    #[inline]
+    pub fn for_each_possibly_recent_run(
+        &self,
+        y: usize,
+        x0: u16,
+        x1: u16,
+        t_us: u64,
+        mut f: impl FnMut(Range<usize>),
+    ) {
+        debug_assert!(x0 <= x1 && (x1 as usize) < self.width);
+        let min_epoch = (t_us / self.epoch_us).saturating_sub(EPOCH_BUCKETS as u64 - 1);
+        // Bucket liveness is query-global: resolve it once, not per word.
+        // Buckets older than min_epoch hold only writes whose age already
+        // exceeds the guaranteed window — skip them. Future tags (possible
+        // only on non-causal queries) stay included: conservative, and the
+        // exact confirmation filters them.
+        let mut live = [0usize; EPOCH_BUCKETS];
+        let mut n_live = 0usize;
+        for (b, &tag) in self.bucket_epoch.iter().enumerate() {
+            if tag != u64::MAX && tag >= min_epoch {
+                live[n_live] = b;
+                n_live += 1;
+            }
+        }
+        if n_live == 0 {
+            return;
+        }
+        let (w0, w1) = (x0 as usize / 64, x1 as usize / 64);
+        for wi in w0..=w1 {
+            let i = y * self.words_per_row + wi;
+            let mut m = 0u64;
+            for &b in &live[..n_live] {
+                m |= self.buckets[b][i];
+            }
+            if wi == w0 {
+                m &= !0u64 << (x0 % 64);
+            }
+            if wi == w1 {
+                let hi = x1 % 64;
+                if hi < 63 {
+                    m &= (1u64 << (hi + 1)) - 1;
+                }
+            }
+            while m != 0 {
+                let start = m.trailing_zeros() as usize;
+                let len = (!(m >> start)).trailing_zeros() as usize;
+                f(wi * 64 + start..wi * 64 + start + len);
+                if start + len >= 64 {
+                    break;
+                }
+                m &= !(((1u64 << len) - 1) << start);
+            }
+        }
+    }
+
+    /// Forget every bit (power-on reset).
+    pub fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.fill(0);
+        }
+        self.bucket_epoch = [u64::MAX; EPOCH_BUCKETS];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runs(p: &RecencyPlane, y: usize, x0: u16, x1: u16, t: u64) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        p.for_each_possibly_recent_run(y, x0, x1, t, |r| v.push((r.start, r.end)));
+        v
+    }
+
+    #[test]
+    fn fresh_marks_are_visible_and_masked_to_the_window() {
+        let mut p = RecencyPlane::new(100, 4, 24_000);
+        p.mark(3, 1, 1_000);
+        p.mark(5, 1, 1_200);
+        p.mark(6, 1, 1_300);
+        p.mark(70, 1, 1_400); // second word
+        assert_eq!(runs(&p, 1, 0, 99, 2_000), vec![(3, 4), (5, 7), (70, 71)]);
+        // Window clamps: x0 excludes 3, x1 excludes 70.
+        assert_eq!(runs(&p, 1, 4, 69, 2_000), vec![(5, 7)]);
+        // Other rows stay empty.
+        assert_eq!(runs(&p, 0, 0, 99, 2_000), vec![]);
+        assert_eq!(p.popcount_window(1, 0, 99, 2_000), 4);
+    }
+
+    #[test]
+    fn word_boundary_columns_mask_exactly() {
+        let mut p = RecencyPlane::new(130, 2, 10_000);
+        for x in [0u16, 63, 64, 127, 128, 129] {
+            p.mark(x, 0, 500);
+        }
+        let want = vec![(0, 1), (63, 64), (64, 65), (127, 128), (128, 130)];
+        assert_eq!(runs(&p, 0, 0, 129, 600), want);
+        assert_eq!(runs(&p, 0, 63, 64, 600), vec![(63, 64), (64, 65)]);
+        assert_eq!(runs(&p, 0, 129, 129, 600), vec![(129, 130)]);
+        assert_eq!(p.popcount_window(0, 0, 129, 600), 6);
+    }
+
+    #[test]
+    fn full_word_run_is_one_call() {
+        let mut p = RecencyPlane::new(64, 1, 1_000);
+        for x in 0..64u16 {
+            p.mark(x, 0, 100);
+        }
+        assert_eq!(runs(&p, 0, 0, 63, 200), vec![(0, 64)]);
+    }
+
+    #[test]
+    fn bits_age_out_after_the_guaranteed_window() {
+        let mut p = RecencyPlane::new(32, 2, 9_000); // epoch = 3 000 µs
+        assert_eq!(p.window_us(), 9_000);
+        p.mark(4, 0, 1_000); // epoch 0
+        // Still possibly recent just inside the window...
+        assert_eq!(p.popcount_window(0, 0, 31, 9_500), 1);
+        // ...and excluded once the query epoch moves past the ageing
+        // window, even though no write recycled the bucket.
+        assert_eq!(p.popcount_window(0, 0, 31, 13_000), 0);
+    }
+
+    #[test]
+    fn bucket_recycling_drops_only_expired_bits() {
+        let mut p = RecencyPlane::new(32, 1, 9_000); // epoch = 3 000 µs
+        p.mark(1, 0, 1_000); // epoch 0 → bucket 0
+        p.mark(2, 0, 4_000); // epoch 1 → bucket 1
+        // Epoch 4 maps back onto bucket 0 and must recycle it: pixel 1's
+        // bit disappears, but its age (≥ 11 000) already exceeds the
+        // 9 000 window, so no false negative is possible.
+        p.mark(3, 0, 12_500);
+        let got = runs(&p, 0, 0, 31, 12_600);
+        assert_eq!(got, vec![(2, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn out_of_order_mark_never_wipes_a_newer_bucket() {
+        let mut p = RecencyPlane::new(32, 1, 9_000); // epoch = 3 000 µs
+        p.mark(4, 0, 16_000); // epoch 5 → bucket 1
+        // A late mark from epoch 1 maps to the same bucket; it must not
+        // recycle it (that would lose pixel 4, written 100 µs before the
+        // causal query below) — its own bit just rides the newer bucket.
+        p.mark(7, 0, 4_000);
+        assert_eq!(runs(&p, 0, 0, 31, 16_100), vec![(4, 5), (7, 8)]);
+    }
+
+    #[test]
+    fn superset_property_on_random_streams() {
+        use crate::util::check::check;
+        check("recency bitmask superset", 25, |g| {
+            let (w, h) = (48usize, 12usize);
+            let window = g.u64(1_000, 40_000);
+            let mut p = RecencyPlane::new(w, h, window);
+            let mut last = vec![0u64; w * h]; // 0 = never written
+            let mut t = 0u64;
+            for _ in 0..300 {
+                t += g.u64(1, window / 4 + 1);
+                let (x, y) = (g.u64(0, w as u64 - 1) as u16, g.u64(0, h as u64 - 1) as u16);
+                p.mark(x, y, t);
+                last[y as usize * w + x as usize] = t;
+                // Causal query: every truly-recent pixel must have its
+                // bit set for any tau the plane covers.
+                let tau = g.u64(0, window);
+                let y_q = g.u64(0, h as u64 - 1) as usize;
+                let (x0, x1) = {
+                    let a = g.u64(0, w as u64 - 1) as u16;
+                    let b = g.u64(0, w as u64 - 1) as u16;
+                    (a.min(b), a.max(b))
+                };
+                let mut bits = vec![false; w];
+                p.for_each_possibly_recent_run(y_q, x0, x1, t, |r| {
+                    for x in r {
+                        bits[x] = true;
+                    }
+                });
+                for x in x0..=x1 {
+                    let tw = last[y_q * w + x as usize];
+                    if tw != 0 && t - tw <= tau {
+                        assert!(
+                            bits[x as usize],
+                            "false negative at ({x},{y_q}) t={t} tw={tw} tau={tau} win={window}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn covers_matches_guaranteed_window() {
+        let p = RecencyPlane::new(16, 16, 24_000);
+        assert!(p.covers(24_000));
+        assert!(p.covers(1));
+        assert!(p.covers(p.window_us()));
+        assert!(!p.covers(p.window_us() + 1));
+        assert!(p.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn clear_forgets_everything() {
+        let mut p = RecencyPlane::new(16, 4, 5_000);
+        p.mark(3, 2, 700);
+        p.clear();
+        assert_eq!(p.popcount_window(2, 0, 15, 800), 0);
+        p.mark(3, 2, 900);
+        assert_eq!(p.popcount_window(2, 0, 15, 950), 1);
+    }
+}

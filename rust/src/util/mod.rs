@@ -2,11 +2,13 @@
 //! in-repo property-testing harness (offline substitutes for `rand`,
 //! `statrs`, and `proptest`), and the readout kernels shared by every
 //! decaying representation: the quantized decay LUT ([`decay`]), the
-//! per-row active-pixel tracker ([`active`]) and the scoped-thread row
-//! parallelism helpers ([`parallel`]).
+//! per-row active-pixel tracker ([`active`]), the epoch-bucketed recency
+//! bitmask planes backing the STCF support fast path ([`bitplane`]) and
+//! the scoped-thread row parallelism helpers ([`parallel`]).
 
 pub mod active;
 pub mod bench;
+pub mod bitplane;
 pub mod check;
 pub mod decay;
 pub mod fit;

@@ -43,6 +43,30 @@ pub fn auto_chunks(work_pixels: usize) -> usize {
     }
 }
 
+/// Horizontal band partition shared by every band-sharded stage (the
+/// write router's shard bands and the STCF denoise shards): `requested`
+/// bands over `height` rows. Returns `(band_h, n_bands)` with the band
+/// height rounded up and the effective band count recomputed so no band
+/// owns zero rows (e.g. 8 rows over 6 requested bands → bands of 2 →
+/// 4 bands). Band `s` owns rows `s·band_h .. min((s+1)·band_h, height)`.
+pub fn band_layout(height: usize, requested: usize) -> (usize, usize) {
+    assert!(height > 0, "empty band layout");
+    let requested = requested.max(1).min(height);
+    let band_h = height.div_ceil(requested);
+    (band_h, height.div_ceil(band_h))
+}
+
+/// Per-shard RNG seed derivation shared by every band-sharded stage:
+/// the full 64-bit odd multiplier (the golden-ratio constant) keeps
+/// every shard's stream well separated even at high shard counts (a
+/// truncated 32-bit constant only perturbs the low half of the seed).
+/// One definition, so the write router and the denoise pool can never
+/// drift apart.
+#[inline]
+pub fn shard_seed(seed: u64, shard: usize) -> u64 {
+    seed.wrapping_add((shard as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
+}
+
 /// Partition rows `0..weights.len()` into at most `chunks` contiguous,
 /// non-empty ranges of roughly equal total weight (greedy prefix cut at
 /// the ideal cumulative targets). `weights[y]` is the per-row work
@@ -175,6 +199,22 @@ mod tests {
         // Every cell holds its own row-major index: full disjoint cover.
         for (i, &v) in g.as_slice().iter().enumerate() {
             assert_eq!(v, i as i64);
+        }
+    }
+
+    #[test]
+    fn band_layout_covers_without_empty_bands() {
+        assert_eq!(band_layout(16, 4), (4, 4));
+        assert_eq!(band_layout(8, 6), (2, 4), "rounding must drop empty bands");
+        assert_eq!(band_layout(10, 4), (3, 4)); // bands of 3,3,3,1
+        assert_eq!(band_layout(5, 1), (5, 1));
+        assert_eq!(band_layout(3, 100), (1, 3), "never more bands than rows");
+        for h in 1..40usize {
+            for req in 1..12usize {
+                let (band_h, n) = band_layout(h, req);
+                assert!(n >= 1 && n <= req.min(h).max(1));
+                assert!((n - 1) * band_h < h && n * band_h >= h, "h={h} req={req}");
+            }
         }
     }
 

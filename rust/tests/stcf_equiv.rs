@@ -1,0 +1,280 @@
+//! Equivalence contracts of the bitmask-accelerated and band-sharded
+//! STCF (the parallel-ingest PR):
+//!
+//! * the three support-scan tiers — bitmask-popcount, row-sliced, naive
+//!   patch scan — produce identical counts on random causal streams for
+//!   both backends, across radii, polarity modes, `count_center` off,
+//!   sensor borders, and expiry/ageing edges (long gaps that force
+//!   epoch-bucket recycling in the recency plane);
+//! * band-sharded scoring ([`StcfShardPool`]) ≡ the serial
+//!   [`run_stcf`] bit-for-bit — scores and kept sets — including events
+//!   on band borders and halo configurations where the patch radius
+//!   exceeds the band height, for the ideal backend and mismatch-free
+//!   ISC configs at every shard count;
+//! * the coordinator pipeline emits identical frames whether the STCF
+//!   scores inline or on the shard pool (mismatch-free configs).
+
+use tsisc::coordinator::{run_pipeline, PipelineConfig, RouterConfig};
+use tsisc::denoise::{
+    run_stcf, support_count, support_count_bitmask, support_count_naive, support_count_rows,
+    ShardBackend, StcfBackend, StcfParams, StcfShardPool,
+};
+use tsisc::events::{Event, LabeledEvent, Polarity, Resolution};
+use tsisc::isc::IscConfig;
+use tsisc::util::check::{check, Gen};
+
+/// Time-sorted random stream; `max_step_us` controls the gap sizes (big
+/// steps cross recency epochs and expire support).
+fn stream(g: &mut Gen, res: Resolution, n: usize, max_step_us: u64) -> Vec<Event> {
+    let mut t = 0u64;
+    (0..n)
+        .map(|_| {
+            t += g.u64(1, max_step_us);
+            Event::new(
+                t,
+                g.u64(0, res.width as u64 - 1) as u16,
+                g.u64(0, res.height as u64 - 1) as u16,
+                if g.bool(0.5) { Polarity::On } else { Polarity::Off },
+            )
+        })
+        .collect()
+}
+
+fn labeled(evs: &[Event]) -> Vec<LabeledEvent> {
+    evs.iter().map(|&ev| LabeledEvent { ev, is_signal: true }).collect()
+}
+
+/// Assert all three scan tiers agree on `e` against the current state
+/// of `b` (bitmask must actually engage: the caller guarantees coverage).
+fn assert_tiers_agree(b: &StcfBackend, e: &Event, prm: &StcfParams, ctx: &str) {
+    let naive = support_count_naive(b, e, prm);
+    assert_eq!(support_count_rows(b, e, prm), naive, "rows≠naive {ctx} e={e:?}");
+    assert_eq!(
+        support_count_bitmask(b, e, prm),
+        Some(naive),
+        "bitmask≠naive {ctx} e={e:?}"
+    );
+    assert_eq!(support_count(b, e, prm), naive, "auto≠naive {ctx} e={e:?}");
+}
+
+#[test]
+fn scan_tiers_agree_ideal_backend_random_streams() {
+    check("stcf bitmask ≡ rows ≡ naive (ideal)", 10, |g| {
+        let res = Resolution::new(20, 16);
+        let prm = StcfParams {
+            radius: g.u64(1, 4) as u16,
+            tau_tw_us: g.u64(500, 50_000),
+            polarity_sensitive: g.bool(0.5),
+            count_center: g.bool(0.5),
+            ..StcfParams::default()
+        };
+        let mut b = StcfBackend::ideal_with_window(res, prm.tau_tw_us);
+        // Gaps up to ~2 epochs: plenty of expiry + bucket recycling.
+        let mut evs = stream(g, res, 400, prm.tau_tw_us / 2 + 10);
+        // Force border coverage: corners and edge mid-points.
+        let t_last = evs.last().unwrap().t;
+        for (x, y) in [(0, 0), (19, 15), (0, 15), (19, 0), (10, 0), (0, 8)] {
+            evs.push(Event::new(t_last + 10, x, y, Polarity::On));
+        }
+        let ctx = format!("r={} tau={}", prm.radius, prm.tau_tw_us);
+        for e in &evs {
+            assert_tiers_agree(&b, e, &prm, &ctx);
+            b.ingest(e, &prm);
+        }
+    });
+}
+
+#[test]
+fn scan_tiers_agree_isc_backend_random_streams() {
+    check("stcf bitmask ≡ rows ≡ naive (isc)", 4, |g| {
+        let res = Resolution::new(16, 16);
+        let prm = StcfParams {
+            radius: g.u64(1, 3) as u16,
+            polarity_sensitive: g.bool(0.5),
+            count_center: g.bool(0.5),
+            ..StcfParams::default()
+        };
+        let cfg = IscConfig {
+            polarity_sensitive: prm.polarity_sensitive,
+            bank_size: 32,
+            seed: g.u64(0, u64::MAX / 2),
+            ..IscConfig::default()
+        };
+        let mut b = StcfBackend::isc(res, cfg, prm.tau_tw_us);
+        let mut evs = stream(g, res, 300, 400);
+        let t_last = evs.last().unwrap().t;
+        for (x, y) in [(0, 0), (15, 15), (0, 15), (15, 0)] {
+            evs.push(Event::new(t_last + 10, x, y, Polarity::Off));
+        }
+        for e in &evs {
+            assert_tiers_agree(&b, e, &prm, "isc");
+            b.ingest(e, &prm);
+        }
+    });
+}
+
+#[test]
+fn scan_tiers_agree_across_expiry_and_ageing_edges() {
+    // Deterministic ageing torture: gaps exactly at, just below and just
+    // above τ_tw and the bitmask epoch width, plus bursts that recycle
+    // epoch buckets while older support is still live.
+    let res = Resolution::new(12, 12);
+    for tau in [900u64, 3_000, 24_000] {
+        let prm = StcfParams { tau_tw_us: tau, ..StcfParams::default() };
+        let mut b = StcfBackend::ideal_with_window(res, tau);
+        let mut t = 1u64;
+        let mut evs: Vec<Event> = Vec::new();
+        let gaps = [1u64, tau / 3, tau / 3 + 1, tau - 1, tau, tau + 1, 3 * tau, 5 * tau + 7];
+        for (k, &gap) in gaps.iter().cycle().take(160).enumerate() {
+            t += gap;
+            evs.push(Event::new(t, (k % 12) as u16, ((k / 3) % 12) as u16, Polarity::On));
+        }
+        for e in &evs {
+            assert_tiers_agree(&b, e, &prm, &format!("tau={tau}"));
+            b.ingest(e, &prm);
+        }
+    }
+}
+
+#[test]
+fn sharded_scoring_equals_serial_ideal_across_shard_counts() {
+    check("sharded ≡ serial (ideal)", 6, |g| {
+        let res = Resolution::new(20, 16);
+        let prm = StcfParams {
+            radius: g.u64(1, 4) as u16,
+            polarity_sensitive: g.bool(0.5),
+            count_center: g.bool(0.5),
+            ..StcfParams::default()
+        };
+        let mut evs = stream(g, res, 350, 600);
+        // Events exactly on band borders for every layout under test
+        // (band heights 16, 8, 4, 2 ⇒ borders at multiples of 2).
+        let t_last = evs.last().unwrap().t;
+        for (k, y) in [0u16, 1, 2, 3, 7, 8, 9, 14, 15].iter().enumerate() {
+            evs.push(Event::new(t_last + 10 + k as u64, 10, *y, Polarity::On));
+        }
+        let evs = labeled(&evs);
+        let mut serial_b = StcfBackend::ideal(res);
+        let serial = run_stcf(&mut serial_b, &evs, &prm);
+        for shards in [1usize, 2, 4, 8] {
+            let mut pool = StcfShardPool::new(res, shards, ShardBackend::Ideal, prm);
+            let got = pool.run(&evs);
+            assert_eq!(got.scored, serial.scored, "scores, shards={shards} r={}", prm.radius);
+            assert_eq!(got.kept, serial.kept, "kept, shards={shards} r={}", prm.radius);
+            pool.shutdown();
+        }
+    });
+}
+
+#[test]
+fn sharded_scoring_equals_serial_isc_mismatch_free() {
+    // With mismatch disabled every cell decays along the nominal curve,
+    // so band-local arrays are exact windows of the full-sensor array
+    // and sharded scoring must be bit-for-bit ≡ serial. (With mismatch
+    // enabled the per-shard maps differ by construction — the same
+    // caveat as the write router's per-shard seeds.)
+    let res = Resolution::new(16, 16);
+    let cfg = IscConfig { mismatch: None, ..IscConfig::default() };
+    for polarity_sensitive in [false, true] {
+        let prm = StcfParams { polarity_sensitive, ..StcfParams::default() };
+        let cfg = IscConfig { polarity_sensitive, ..cfg.clone() };
+        let evs: Vec<LabeledEvent> = labeled(
+            &(0..400u64)
+                .map(|k| {
+                    Event::new(
+                        1 + k * 230,
+                        (k * 7 % 16) as u16,
+                        (k * 3 % 16) as u16,
+                        if k % 3 == 0 { Polarity::Off } else { Polarity::On },
+                    )
+                })
+                .collect::<Vec<_>>(),
+        );
+        let mut serial_b = StcfBackend::isc(res, cfg.clone(), prm.tau_tw_us);
+        let serial = run_stcf(&mut serial_b, &evs, &prm);
+        for shards in [2usize, 5, 8] {
+            let mut pool = StcfShardPool::new(res, shards, ShardBackend::Isc(cfg.clone()), prm);
+            let got = pool.run(&evs);
+            assert_eq!(got.scored, serial.scored, "ps={polarity_sensitive} shards={shards}");
+            assert_eq!(got.kept, serial.kept, "ps={polarity_sensitive} shards={shards}");
+            let tallies = pool.shutdown();
+            assert_eq!(
+                tallies.iter().map(|t| t.kept + t.dropped).sum::<u64>(),
+                evs.len() as u64
+            );
+        }
+    }
+}
+
+#[test]
+fn radius_deeper_than_band_reaches_across_multiple_bands() {
+    // 16 rows over 8 shards ⇒ bands of 2; radius 5 spans up to 5 bands
+    // per side. The dispatcher must duplicate border events to every
+    // shard whose halo contains them, or counts break at the seams.
+    let res = Resolution::new(12, 16);
+    let prm = StcfParams { radius: 5, ..StcfParams::default() };
+    let evs: Vec<LabeledEvent> = labeled(
+        &(0..300u64)
+            .map(|k| {
+                Event::new(1 + k * 170, (k * 5 % 12) as u16, (k * 11 % 16) as u16, Polarity::On)
+            })
+            .collect::<Vec<_>>(),
+    );
+    let mut serial_b = StcfBackend::ideal(res);
+    let serial = run_stcf(&mut serial_b, &evs, &prm);
+    let mut pool = StcfShardPool::new(res, 8, ShardBackend::Ideal, prm);
+    let got = pool.run(&evs);
+    assert_eq!(got.scored, serial.scored);
+    assert_eq!(got.kept, serial.kept);
+    let tallies = pool.shutdown();
+    assert!(
+        tallies.iter().map(|t| t.halo_ingests).sum::<u64>() > evs.len() as u64,
+        "deep halos must duplicate most events to several shards"
+    );
+}
+
+#[test]
+fn pipeline_frames_identical_inline_vs_sharded_denoise() {
+    // End-to-end: same frames whether the STCF runs inline on the
+    // producer or fanned out over denoise shards (mismatch-free config
+    // so keep decisions are provably identical).
+    let res = Resolution::new(32, 32);
+    let evs: Vec<LabeledEvent> = labeled(
+        &(0..1_500u64)
+            .map(|k| {
+                Event::new(
+                    1 + k * 80,
+                    (k * 13 % 32) as u16,
+                    ((k / 7) % 32) as u16,
+                    if k % 4 == 0 { Polarity::Off } else { Polarity::On },
+                )
+            })
+            .collect::<Vec<_>>(),
+    );
+    let mut all = Vec::new();
+    for denoise_shards in [0usize, 3, 8] {
+        let cfg = PipelineConfig {
+            stcf: Some(StcfParams::default()),
+            denoise_shards,
+            batch_size: 200, // multiple flushes per window
+            router: RouterConfig {
+                isc: IscConfig { mismatch: None, ..IscConfig::default() },
+                ..RouterConfig::default()
+            },
+            ..PipelineConfig::default()
+        };
+        let r = run_pipeline(evs.iter().copied(), res, 120_000, &cfg);
+        assert_eq!(r.stats.events_in, evs.len() as u64);
+        let dn = r.stats.denoise.expect("stcf configured");
+        assert_eq!(dn.inline_scoring, denoise_shards == 0);
+        assert_eq!(
+            dn.per_shard.iter().map(|t| t.dropped).sum::<u64>(),
+            r.stats.events_dropped_by_stcf
+        );
+        all.push((denoise_shards, r.stats.events_written, r.frames));
+    }
+    for w in all.windows(2) {
+        assert_eq!(w[0].1, w[1].1, "written: {} vs {} shards", w[0].0, w[1].0);
+        assert_eq!(w[0].2, w[1].2, "frames: {} vs {} shards", w[0].0, w[1].0);
+    }
+}
