@@ -23,11 +23,13 @@ lint:
 	cd $(RUST_DIR) && cargo clippy --all-targets -- -D warnings
 
 # Bench binaries use the in-repo harness (util::bench); bench_tsurface,
-# bench_router and bench_denoise additionally dump BENCH_tsurface.json /
-# BENCH_router.json / BENCH_denoise.json next to the manifest.
+# bench_router, bench_denoise and bench_serve additionally dump
+# BENCH_tsurface.json / BENCH_router.json / BENCH_denoise.json /
+# BENCH_serve.json next to the manifest.
 bench:
 	cd $(RUST_DIR) && cargo bench -- --quick
-	@for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json; do \
+	@for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json \
+	             BENCH_serve.json; do \
 		if [ -f $(RUST_DIR)/$$snap ]; then \
 			cp $(RUST_DIR)/$$snap $$snap; \
 			echo "snapshot: $$snap"; \
@@ -44,4 +46,5 @@ clean:
 	cd $(RUST_DIR) && cargo clean
 	rm -f BENCH_tsurface.json $(RUST_DIR)/BENCH_tsurface.json \
 	      BENCH_router.json $(RUST_DIR)/BENCH_router.json \
-	      BENCH_denoise.json $(RUST_DIR)/BENCH_denoise.json
+	      BENCH_denoise.json $(RUST_DIR)/BENCH_denoise.json \
+	      BENCH_serve.json $(RUST_DIR)/BENCH_serve.json

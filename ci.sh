@@ -4,9 +4,10 @@
 # Emits BENCH_tsurface.json (ingest throughput, dense-vs-active readout,
 # the thread-count sweep with frames_per_sec and the dense-fallback α
 # crossover), BENCH_router.json (routing throughput + dirty-band
-# snapshot frames_per_sec) and BENCH_denoise.json (support-scan tier
-# sweep + denoise-shard scaling, events_per_sec) at the repo root so
-# successive PRs can be compared.
+# snapshot frames_per_sec), BENCH_denoise.json (support-scan tier
+# sweep + denoise-shard scaling, events_per_sec) and BENCH_serve.json
+# (multi-tenant sessions × workers sweep, aggregate events_per_sec +
+# snapshot_p99_ms) at the repo root so successive PRs can be compared.
 set -uo pipefail
 
 cd "$(dirname "$0")"
@@ -47,7 +48,7 @@ fi
 echo "== cargo bench (quick) =="
 (cd rust && cargo bench -- --quick)
 
-for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json; do
+for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json BENCH_serve.json; do
     if [ -f "rust/$snap" ]; then
         cp "rust/$snap" "$snap"
         echo "== bench snapshot: $snap =="

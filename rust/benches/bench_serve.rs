@@ -1,0 +1,127 @@
+//! Multi-tenant serve-layer benchmarks: the sessions × worker-pool-size
+//! sweep (1/4/16 sessions × 2/4/8 workers) measuring **aggregate ingest
+//! throughput** (events/s across the whole fleet) and **snapshot p99**
+//! (on-demand frame latency under concurrent session load), plus one
+//! denoised-fleet configuration.
+//!
+//! Dumps `BENCH_serve.json` (via `util::bench::dump_json`) next to the
+//! manifest; CI uploads it alongside the tsurface/router/denoise
+//! snapshots.
+
+use std::time::Instant;
+use tsisc::coordinator::{PipelineConfig, RouterConfig};
+use tsisc::denoise::StcfParams;
+use tsisc::events::scene::EdgeScene;
+use tsisc::events::v2e::{convert, DvsParams};
+use tsisc::events::{LabeledEvent, Resolution};
+use tsisc::isc::IscConfig;
+use tsisc::serve::{ServeConfig, SessionConfig, SessionManager};
+use tsisc::util::bench::{bench, dump_json, header, JsonEntry};
+use tsisc::util::stats::percentile;
+
+/// One fleet configuration measured end to end.
+#[allow(clippy::too_many_arguments)]
+fn bench_fleet(
+    json: &mut Vec<JsonEntry>,
+    base: &[LabeledEvent],
+    span: u64,
+    res: Resolution,
+    sessions: usize,
+    workers: usize,
+    stcf: Option<StcfParams>,
+    label: &str,
+) {
+    let mut m = SessionManager::new(ServeConfig {
+        workers,
+        max_sessions: sessions,
+        max_inflight_batches: 1 << 20, // throughput run: never reject
+    });
+    let sids: Vec<_> = (0..sessions)
+        .map(|k| {
+            m.open(SessionConfig {
+                name: format!("bench-{k}"),
+                res,
+                // No window clock: frames are taken explicitly below so
+                // the snapshot latency is measured, not amortized.
+                t_end_us: 0,
+                pipeline: PipelineConfig {
+                    stcf,
+                    denoise_shards: if stcf.is_some() { 2 } else { 0 },
+                    router: RouterConfig {
+                        isc: IscConfig { bank_size: 64, ..IscConfig::default() },
+                        ..RouterConfig::default()
+                    },
+                    ..PipelineConfig::default()
+                },
+            })
+            .expect("open bench session")
+        })
+        .collect();
+    let mut offset = 0u64;
+    let mut shifted: Vec<LabeledEvent> = base.to_vec();
+    let mut snap_lat: Vec<f64> = Vec::new();
+    let r = bench(label, (base.len() * sessions) as f64, 60, 300, || {
+        // Causal replay: every iteration shifts the stream past the
+        // previous snapshot time.
+        offset += span;
+        for (dst, src) in shifted.iter_mut().zip(base) {
+            *dst = *src;
+            dst.ev.t += offset;
+        }
+        // Interleave chunks across every session — the fleet serves all
+        // cameras at once, not one after another.
+        for chunk in shifted.chunks(2_048) {
+            for sid in &sids {
+                m.ingest_batch(*sid, chunk).expect("ingest");
+            }
+        }
+        for sid in &sids {
+            let t0 = Instant::now();
+            std::hint::black_box(m.snapshot(*sid, offset + span).expect("snapshot"));
+            snap_lat.push(t0.elapsed().as_secs_f64());
+        }
+    });
+    println!("{}", r.report());
+    let p99_ms = percentile(&snap_lat, 99.0) * 1e3;
+    println!("    snapshot p99 {p99_ms:.3} ms over {} frames", snap_lat.len());
+    let tput = r.throughput_per_sec();
+    let mut entry = JsonEntry::with(r, "sessions", sessions as f64);
+    entry.extra.push(("workers", workers as f64));
+    entry.extra.push(("events_per_sec", tput));
+    entry.extra.push(("snapshot_p99_ms", p99_ms));
+    json.push(entry);
+    m.shutdown();
+}
+
+fn main() {
+    let mut json: Vec<JsonEntry> = Vec::new();
+    let res = Resolution::new(64, 64);
+    let scene = EdgeScene::new(90.0, 21);
+    let base = convert(&scene, res, DvsParams::default(), 0.2);
+    let span = base.last().expect("non-empty stream").ev.t + 1;
+    println!("workload: {} events/session at 64x64", base.len());
+
+    // --- sessions × workers sweep (raw ingest + snapshot) ----------------
+    header("serve fleet: aggregate events/s and snapshot p99");
+    for &sessions in &[1usize, 4, 16] {
+        for &workers in &[2usize, 4, 8] {
+            let label = format!("serve {sessions:>2} sessions x {workers} workers");
+            bench_fleet(&mut json, &base, span, res, sessions, workers, None, &label);
+        }
+    }
+
+    // --- denoised fleet ---------------------------------------------------
+    header("serve fleet with sharded STCF");
+    bench_fleet(
+        &mut json,
+        &base,
+        span,
+        res,
+        4,
+        4,
+        Some(StcfParams::default()),
+        "serve  4 sessions x 4 workers + stcf",
+    );
+
+    dump_json(&json, "BENCH_serve.json");
+}

@@ -36,6 +36,13 @@
 //! producer's time went; `PipelineStats::denoise` carries the per-shard
 //! kept/dropped/halo tallies.
 //!
+//! This module serves **one** stream with dedicated thread teams. To
+//! host many concurrent streams on a shared fixed-size worker fleet —
+//! with admission control and fair scheduling — use the
+//! [`crate::serve`] session layer, which drives the same band cores
+//! ([`router::BandWriter`], the denoise pool's band scorers) as queued
+//! jobs and emits bit-for-bit identical frames.
+//!
 //! **Migration note** (old → new API): `pipeline::run(&[LabeledEvent],…)`
 //! → `pipeline::run(events.iter().copied(), …)` (or any lazy source);
 //! `Router::route` still exists for single events but stages internally —

@@ -39,12 +39,11 @@ pub struct PipelineConfig {
     /// Run the STCF in front of the array (None = raw stream).
     pub stcf: Option<StcfParams>,
     /// Denoise worker shards for the STCF stage (ignored when `stcf` is
-    /// None). 0 scores inline on the producer thread. With cell mismatch
-    /// enabled (the default `IscConfig`), band-local arrays carry
-    /// per-shard mismatch maps, so keep/drop decisions — like the write
-    /// router's frame values — vary slightly with the shard layout; set
-    /// 0 (or `mismatch: None`, under which every layout is bit-for-bit
-    /// identical) to reproduce the serial scores exactly.
+    /// None). 0 scores inline on the producer thread. Every layout —
+    /// inline or any shard count — produces bit-for-bit identical
+    /// keep/drop decisions: band-local arrays anchor their
+    /// position-stable mismatch maps at the band origin, making each an
+    /// exact window of the full-sensor array.
     pub denoise_shards: usize,
     /// Events staged between flushes — the ingest batch size and the
     /// pipeline's only stream buffering.
@@ -375,11 +374,12 @@ mod tests {
     }
 
     #[test]
-    fn inline_and_sharded_denoise_agree_on_mismatch_free_configs() {
-        // With `mismatch: None` every denoise backend (inline full-res,
-        // sharded band+halo) holds identical nominal cells, so the keep
-        // decisions — and therefore every routed write and frame — are
-        // bit-for-bit identical across shard counts.
+    fn inline_and_sharded_denoise_agree_across_layouts() {
+        // Position-stable mismatch assignment: every denoise backend
+        // (inline full-res, sharded band+halo) holds the exact same
+        // per-pixel cells over its region, so the keep decisions — and
+        // therefore every routed write and frame — are bit-for-bit
+        // identical across shard counts, mismatch enabled and all.
         let res = Resolution::new(32, 24);
         let evs: Vec<LabeledEvent> = (0..600u64)
             .map(|k| LabeledEvent {
@@ -397,10 +397,7 @@ mod tests {
             let cfg = PipelineConfig {
                 stcf: Some(StcfParams::default()),
                 denoise_shards,
-                router: RouterConfig {
-                    isc: IscConfig { mismatch: None, ..IscConfig::default() },
-                    ..RouterConfig::default()
-                },
+                router: RouterConfig { isc: IscConfig::default(), ..RouterConfig::default() },
                 ..PipelineConfig::default()
             };
             let r = run(evs.iter().copied(), res, 90_000, &cfg);

@@ -44,6 +44,19 @@
 //! what a full re-render would produce, provided snapshot times are
 //! causal (non-decreasing and ≥ the routed event times — the same
 //! contract as the activity-aware readout, see [`crate::util::active`]).
+//!
+//! ## Band-job core (serve PR)
+//!
+//! The per-shard state machine — band array, dirty watermarks, the
+//! snapshot decision tree above — lives in [`BandWriter`], which the
+//! shard thread loop merely drives. The multi-tenant session layer
+//! ([`crate::serve`]) schedules the same struct as queued jobs on a
+//! shared worker pool, so a session's band state evolves exactly as a
+//! dedicated router's would. Band arrays are anchored at their global
+//! origin rows ([`IscConfig::origin_y`]): with the position-stable
+//! mismatch assignment, routed frames are bit-for-bit identical to an
+//! unsharded array for **every** shard layout, mismatch included (the
+//! PR 4 per-shard-seed caveat is gone).
 
 use crate::events::{Event, Resolution};
 use crate::isc::{IscArray, IscConfig};
@@ -60,7 +73,10 @@ pub struct RouterConfig {
     pub queue_depth: usize,
     /// Events staged per shard before a batch is shipped.
     pub batch_size: usize,
-    /// Array config cloned per shard (seeds are derived per shard).
+    /// Array config cloned per shard. Each band array is anchored at its
+    /// global origin row, so the position-stable mismatch assignment
+    /// makes every band an exact window of the full-sensor array —
+    /// routed frames are bit-for-bit independent of the shard count.
     pub isc: IscConfig,
 }
 
@@ -106,6 +122,134 @@ struct BandCache {
     /// time absent new writes (every routed write had already expired at
     /// `at_us` — passive decay is monotone, so zero stays zero).
     empty_static: bool,
+}
+
+/// One write shard's band-local core: the band's analog array plus the
+/// dirty-band snapshot state. The router's shard threads and the serve
+/// scheduler's band jobs ([`crate::serve`]) both drive this struct —
+/// extracting it is what lets a multi-tenant session replay the exact
+/// per-band write/render sequence a dedicated router would run, so
+/// session frames are bit-for-bit identical to a standalone pipeline.
+pub struct BandWriter {
+    array: IscArray,
+    /// Global sensor row of the band's row 0.
+    y0: u16,
+    /// Row-chunk count for full band renders (1 = render inline on the
+    /// calling thread; the serve scheduler always passes 1 so worker
+    /// threads stay bounded by the pool size).
+    render_chunks: usize,
+    /// Query time of the previous snapshot reply (None before the first).
+    last_at: Option<u64>,
+    /// Writes arrived since the previous snapshot reply.
+    dirty: bool,
+    /// Band-local dirty row watermarks since the previous reply.
+    dirty_rows: Option<(usize, usize)>,
+    /// See [`BandCache::empty_static`].
+    empty_static: bool,
+    processed: u64,
+}
+
+/// Outcome of [`BandWriter::snapshot_into`].
+pub struct BandSnapshot {
+    /// False = the band was clean and the buffer still holds the
+    /// previous render (zero render work was performed).
+    pub rendered: bool,
+    /// See [`BandCache::empty_static`].
+    pub empty_static: bool,
+}
+
+impl BandWriter {
+    /// The writer for band `shard` of the `band_layout(height, …)`
+    /// partition of `res`: rows `shard·band_h ..`. The band's array is
+    /// anchored at its global origin ([`IscConfig::origin_y`]), so its
+    /// position-stable mismatch map is an exact window of the
+    /// full-sensor array's and band partitioning never perturbs values.
+    pub fn for_band(
+        res: Resolution,
+        isc: &IscConfig,
+        band_h: usize,
+        shard: usize,
+        render_chunks: usize,
+    ) -> Self {
+        let rows = band_h.min(res.height as usize - shard * band_h);
+        let band_res = Resolution::new(res.width, rows as u16);
+        let y0 = (shard * band_h) as u16;
+        let mut cfg = isc.clone();
+        cfg.origin_y = isc.origin_y + y0;
+        Self {
+            array: IscArray::new(band_res, cfg),
+            y0,
+            render_chunks: render_chunks.max(1),
+            last_at: None,
+            dirty: false,
+            dirty_rows: None,
+            empty_static: false,
+            processed: 0,
+        }
+    }
+
+    /// Apply one write batch. Events arrive in sensor coordinates and
+    /// are shifted into the band in place; the dirty flag and row
+    /// watermarks advance so the next snapshot can re-render only what
+    /// changed.
+    pub fn apply_batch(&mut self, batch: &mut [Event]) {
+        for e in batch.iter_mut() {
+            e.y -= self.y0;
+            let yl = e.y as usize;
+            self.dirty_rows = Some(match self.dirty_rows {
+                None => (yl, yl),
+                Some((lo, hi)) => (lo.min(yl), hi.max(yl)),
+            });
+        }
+        self.dirty = self.dirty || !batch.is_empty();
+        self.array.write_batch(batch);
+        self.processed += batch.len() as u64;
+    }
+
+    /// Render the band's merged frame at `at_us` into `buf` — or, when
+    /// the band provably cannot have changed, leave `buf` untouched and
+    /// report `rendered: false`. `cache_valid` promises `buf` still
+    /// holds this band's previous reply. Clean bands at the cached
+    /// query time (or provably all-zero ones at any later time) cost
+    /// nothing; dirty bands at the cached time re-render only the dirty
+    /// row span.
+    pub fn snapshot_into(
+        &mut self,
+        buf: &mut Grid<f64>,
+        at_us: u64,
+        cache_valid: bool,
+    ) -> BandSnapshot {
+        let cached = cache_valid && self.last_at.is_some();
+        // Clean band: the cached render is still exact at the same query
+        // time, or at any later one when it was all-zero with no pending
+        // decay (every write already expired — see
+        // [`BandCache::empty_static`]).
+        let unchanged = cached
+            && !self.dirty
+            && (self.last_at == Some(at_us)
+                || (self.empty_static && at_us >= self.last_at.unwrap()));
+        if !unchanged {
+            if cached && self.dirty && self.last_at == Some(at_us) {
+                // Same query time: only rows written since the cached
+                // render can differ. O(dirty rows) via the watermarks.
+                let (lo, hi) = self.dirty_rows.unwrap_or((0, 0));
+                self.array.frame_merged_rows_into(buf, at_us, lo..hi + 1);
+            } else {
+                self.array.frame_merged_into_chunks(buf, at_us, self.render_chunks);
+            }
+            let empty = buf.as_slice().iter().all(|&v| v == 0.0);
+            self.empty_static = empty && self.array.clock_us() <= at_us;
+        }
+        self.last_at = Some(at_us);
+        self.dirty = false;
+        self.dirty_rows = None;
+        BandSnapshot { rendered: !unchanged, empty_static: self.empty_static }
+    }
+
+    /// Events written into the band so far.
+    pub fn events_written(&self) -> u64 {
+        self.processed
+    }
 }
 
 /// Post-shutdown statistics.
@@ -155,84 +299,36 @@ impl Router {
             let (tx, rx): (SyncSender<ShardMsg>, Receiver<ShardMsg>) =
                 sync_channel(cfg.queue_depth.max(1));
             let rows = band_h.min(res.height as usize - shard * band_h);
-            let band_res = Resolution::new(res.width, rows as u16);
-            let mut isc_cfg = cfg.isc.clone();
-            isc_cfg.seed = crate::util::parallel::shard_seed(isc_cfg.seed, shard);
-            let y0 = (shard * band_h) as u16;
+            let band_pixels = res.width as usize * rows;
+            let isc_cfg = cfg.isc.clone();
             // All shards render their bands concurrently, so each band's
             // in-shard row parallelism gets its share of the cores —
             // without this cap a snapshot would spawn up to
             // n_shards × available_parallelism transient threads.
             let render_chunks = {
                 use crate::util::parallel::{auto_chunks, available_threads};
-                auto_chunks(band_res.pixels()).min((available_threads() / n).max(1))
+                auto_chunks(band_pixels).min((available_threads() / n).max(1))
             };
             handles.push(std::thread::spawn(move || {
-                let mut array = IscArray::new(band_res, isc_cfg);
-                let mut processed = 0u64;
-                // Dirty-band state: what the previous reply rendered and
-                // which band-local rows have been written since.
-                let mut last_at: Option<u64> = None;
-                let mut dirty = false;
-                let mut dirty_rows: Option<(usize, usize)> = None;
-                let mut empty_static = false;
+                // The band-job core (shared with the serve scheduler,
+                // which drives the same struct from pooled workers).
+                let mut w = BandWriter::for_band(res, &isc_cfg, band_h, shard, render_chunks);
                 for msg in rx {
                     match msg {
-                        ShardMsg::WriteBatch(mut batch) => {
-                            for e in &mut batch {
-                                e.y -= y0;
-                                let yl = e.y as usize;
-                                dirty_rows = Some(match dirty_rows {
-                                    None => (yl, yl),
-                                    Some((lo, hi)) => (lo.min(yl), hi.max(yl)),
-                                });
-                            }
-                            dirty = dirty || !batch.is_empty();
-                            array.write_batch(&batch);
-                            processed += batch.len() as u64;
-                        }
+                        ShardMsg::WriteBatch(mut batch) => w.apply_batch(&mut batch),
                         ShardMsg::Snapshot { at_us, mut buf, cache_valid, reply } => {
-                            let cached = cache_valid && last_at.is_some();
-                            // Clean band: the cached render is still exact
-                            // at the same query time, or at any later one
-                            // when it was all-zero with no pending decay
-                            // (every write already expired — see
-                            // `BandCache::empty_static`).
-                            let unchanged = cached
-                                && !dirty
-                                && (last_at == Some(at_us)
-                                    || (empty_static && at_us >= last_at.unwrap()));
-                            if !unchanged {
-                                if cached && dirty && last_at == Some(at_us) {
-                                    // Same query time: only rows written
-                                    // since the cached render can differ.
-                                    // O(dirty rows) via the watermarks.
-                                    let (lo, hi) = dirty_rows.unwrap_or((0, 0));
-                                    array.frame_merged_rows_into(&mut buf, at_us, lo..hi + 1);
-                                } else {
-                                    array.frame_merged_into_chunks(
-                                        &mut buf,
-                                        at_us,
-                                        render_chunks,
-                                    );
-                                }
-                                let empty = buf.as_slice().iter().all(|&v| v == 0.0);
-                                empty_static = empty && array.clock_us() <= at_us;
-                            }
-                            last_at = Some(at_us);
-                            dirty = false;
-                            dirty_rows = None;
+                            let out = w.snapshot_into(&mut buf, at_us, cache_valid);
                             let _ = reply.send(SnapReply {
                                 shard,
                                 buf,
-                                rendered: !unchanged,
-                                empty_static,
+                                rendered: out.rendered,
+                                empty_static: out.empty_static,
                             });
                         }
                         ShardMsg::Stop => break,
                     }
                 }
-                processed
+                w.events_written()
             }));
             senders.push(tx);
         }
@@ -500,17 +596,36 @@ mod tests {
         single.write_batch(&events);
         let fr = router.frame(25_000);
         let fs = single.frame_merged(25_000);
-        // Same write pattern, same nominal bank ⇒ same brightness ordering;
-        // mismatch maps differ per shard seed, so compare written-pixel sets
-        // and value proximity.
-        for (x, y, &v) in fr.iter_coords() {
-            let vs = *fs.get(x, y);
-            assert_eq!(v > 0.0, vs > 0.0, "write-set mismatch at ({x},{y})");
-            if v > 0.0 {
-                assert!((v - vs).abs() < 0.05, "({x},{y}): {v} vs {vs}");
-            }
-        }
+        // Position-stable mismatch assignment: every band array is an
+        // exact window of the full-sensor array, so the composited frame
+        // is bit-for-bit the unsharded one — mismatch enabled (the
+        // default config) and all.
+        assert_eq!(fr, fs);
         router.shutdown();
+    }
+
+    #[test]
+    fn frames_identical_across_shard_counts_with_mismatch() {
+        // The unconditional sharded ≡ serial guarantee: the default
+        // (mismatch-enabled) config must produce identical frames for
+        // every band layout.
+        let res = Resolution::new(12, 10);
+        let events: Vec<Event> = (0..80)
+            .map(|k| Event::new(1_000 + k * 350, (k % 12) as u16, ((k * 3) % 10) as u16,
+                                Polarity::On))
+            .collect();
+        let mut reference: Option<Grid<f64>> = None;
+        for n_shards in [1usize, 3, 4, 10] {
+            let mut r = Router::new(res, RouterConfig { n_shards, ..RouterConfig::default() });
+            r.route_batch(&events);
+            let f = r.frame(40_000);
+            if let Some(want) = &reference {
+                assert_eq!(&f, want, "n_shards={n_shards}");
+            } else {
+                reference = Some(f);
+            }
+            r.shutdown();
+        }
     }
 
     #[test]

@@ -17,13 +17,15 @@
 //! Scoring itself parallelizes across horizontal bands with replicated
 //! halo rows ([`sharded::StcfShardPool`]): end-to-end denoised
 //! throughput scales with cores while keeping the serial filter's exact
-//! scores (see the module docs for the mismatch caveat).
+//! scores — bit-for-bit for both backends, since ISC band arrays are
+//! exact mismatch windows of the full-sensor array (position-stable
+//! assignment, [`crate::isc::param_index_at`]).
 
 pub mod baf;
 pub mod sharded;
 pub mod stcf;
 
-pub use sharded::{ShardBackend, ShardTally, StcfShardPool};
+pub use sharded::{stage_items, BandScorer, ScoreItem, ShardBackend, ShardTally, StcfShardPool};
 pub use stcf::{
     run as run_stcf, support_count, support_count_bitmask, support_count_naive,
     support_count_rows, StcfBackend, StcfParams, StcfRun,

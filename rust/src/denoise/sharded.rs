@@ -20,10 +20,17 @@
 //! causal score-then-write order as the serial filter: a `Score` item
 //! is scored against the shard surface *before* it (or any later event)
 //! is written. Scores are consequently **bit-for-bit identical** to the
-//! serial reference for the ideal backend and for mismatch-free ISC
-//! configs; with cell mismatch enabled, per-shard mismatch maps differ
-//! from a single full-sensor array (the same caveat as the write
-//! router's per-shard seeds).
+//! serial reference for both backends — ISC band arrays anchor their
+//! position-stable mismatch maps at the band-plus-halo origin
+//! ([`crate::isc::IscConfig::origin_y`]), so each is an exact window of
+//! the full-sensor array and shard layout can never perturb a decision.
+//!
+//! The per-shard core — backend, halo offset, causal score-then-write
+//! loop, tallies — lives in [`BandScorer`]; the pool's worker threads
+//! merely drive it, and the serve session layer ([`crate::serve`])
+//! schedules the same struct as queued jobs on its shared worker pool.
+//! [`stage_items`] is the matching dispatch: both layers fan a batch
+//! out with identical Score/Halo duplication.
 //!
 //! Batches are scored synchronously: [`StcfShardPool::score_batch`]
 //! fans a time-sorted batch out, the shards score their slices
@@ -45,9 +52,10 @@ pub enum ShardBackend {
     /// Full-precision SAE planes — sharded scoring is bit-for-bit ≡ the
     /// serial ideal backend.
     Ideal,
-    /// ISC analog arrays (per-shard seeds derived as in the write
-    /// router). Bit-for-bit ≡ serial when `mismatch` is `None`; with
-    /// mismatch the per-shard maps differ by construction.
+    /// ISC analog arrays, anchored at each band's global origin row so
+    /// the position-stable mismatch map is an exact window of the
+    /// full-sensor array — bit-for-bit ≡ serial for every shard count,
+    /// mismatch included.
     Isc(IscConfig),
 }
 
@@ -65,16 +73,127 @@ pub struct ShardTally {
     pub halo_ingests: u64,
 }
 
-/// One time-ordered work item for a shard.
-enum Item {
+/// One time-ordered work item for a scorer band.
+pub enum ScoreItem {
     /// Score this event (index into the dispatched batch), then ingest it.
     Score(u32, Event),
-    /// Ingest only: a halo duplicate owned by another shard.
+    /// Ingest only: a halo duplicate owned by another band.
     Halo(Event),
 }
 
+/// Fan a time-sorted batch out to per-band item lists: each event
+/// becomes a [`ScoreItem::Score`] for the band owning its row and a
+/// [`ScoreItem::Halo`] for every band whose halo region contains it
+/// (generalized to radii deeper than the band height). The pool's
+/// dispatcher and the serve session layer share this function, so both
+/// produce identical item sequences. `staging` must hold `n_bands`
+/// lists (appended to, not cleared).
+pub fn stage_items(
+    res: Resolution,
+    band_h: usize,
+    n_bands: usize,
+    radius: usize,
+    batch: &[LabeledEvent],
+    staging: &mut [Vec<ScoreItem>],
+) {
+    debug_assert_eq!(staging.len(), n_bands);
+    let h = res.height as usize;
+    let band_for = |y: usize| (y / band_h).min(n_bands - 1);
+    for (k, le) in batch.iter().enumerate() {
+        let e = &le.ev;
+        debug_assert!(res.contains(e.x, e.y), "off-sensor event {e:?}");
+        let y = e.y as usize;
+        let own = band_for(y);
+        let s_min = band_for(y.saturating_sub(radius));
+        let s_max = band_for((y + radius).min(h - 1));
+        for s in s_min..=s_max {
+            if s == own {
+                staging[s].push(ScoreItem::Score(k as u32, *e));
+            } else {
+                staging[s].push(ScoreItem::Halo(*e));
+            }
+        }
+    }
+}
+
+/// One denoise shard's band-local core: the band(+halo) backend plus
+/// the causal score-then-write loop and its tallies. The pool's worker
+/// threads and the serve scheduler's band jobs both drive this struct.
+pub struct BandScorer {
+    backend: StcfBackend,
+    prm: StcfParams,
+    /// Global sensor row of the backend's row 0 (halo included).
+    lo: u16,
+    tally: ShardTally,
+}
+
+impl BandScorer {
+    /// The scorer for band `shard` of the `band_layout(height, …)`
+    /// partition of `res`, covering `prm.radius` halo rows per side.
+    /// ISC backends anchor their mismatch window at the global region
+    /// origin, making them exact windows of the full-sensor array.
+    pub fn for_band(
+        res: Resolution,
+        backend: &ShardBackend,
+        prm: StcfParams,
+        band_h: usize,
+        shard: usize,
+    ) -> Self {
+        let h = res.height as usize;
+        let radius = prm.radius as usize;
+        let band_start = shard * band_h;
+        let band_end = (band_start + band_h).min(h) - 1;
+        let lo = band_start.saturating_sub(radius);
+        let hi = (band_end + radius).min(h - 1);
+        let local = Resolution::new(res.width, (hi - lo + 1) as u16);
+        let b = match backend {
+            ShardBackend::Ideal => StcfBackend::ideal_with_window(local, prm.tau_tw_us),
+            ShardBackend::Isc(cfg) => {
+                let mut cfg = cfg.clone();
+                cfg.origin_y += lo as u16;
+                StcfBackend::isc(local, cfg, prm.tau_tw_us)
+            }
+        };
+        Self { backend: b, prm, lo: lo as u16, tally: ShardTally::default() }
+    }
+
+    /// Process one time-ordered item list — score-then-write causally —
+    /// appending `(batch index, support)` pairs for owned events to
+    /// `scores`.
+    pub fn process(&mut self, items: &[ScoreItem], scores: &mut Vec<(u32, u32)>) {
+        for item in items {
+            match item {
+                ScoreItem::Score(idx, ev) => {
+                    let mut e = *ev;
+                    e.y -= self.lo;
+                    let s = support_count(&self.backend, &e, &self.prm);
+                    scores.push((*idx, s));
+                    self.backend.ingest(&e, &self.prm);
+                    self.tally.scored += 1;
+                    if s >= self.prm.threshold {
+                        self.tally.kept += 1;
+                    } else {
+                        self.tally.dropped += 1;
+                    }
+                }
+                ScoreItem::Halo(ev) => {
+                    let mut e = *ev;
+                    e.y -= self.lo;
+                    self.backend.ingest(&e, &self.prm);
+                    self.tally.halo_ingests += 1;
+                }
+            }
+        }
+    }
+
+    /// The shard's outcome counters so far.
+    pub fn tally(&self) -> &ShardTally {
+        &self.tally
+    }
+}
+
 enum Job {
-    Batch(Vec<Item>),
+    Batch(Vec<ScoreItem>),
     Stop,
 }
 
@@ -95,7 +214,7 @@ pub struct StcfShardPool {
     radius: usize,
     /// Per-shard item lists for the dispatch in progress (shipped whole
     /// to the shard, so each dispatch hands its allocation over).
-    staging: Vec<Vec<Item>>,
+    staging: Vec<Vec<ScoreItem>>,
 }
 
 impl StcfShardPool {
@@ -112,58 +231,24 @@ impl StcfShardPool {
         let mut handles = Vec::with_capacity(n);
         for shard in 0..n {
             let (tx, rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(2);
-            let band_start = shard * band_h;
-            let band_end = (band_start + band_h).min(h) - 1;
-            let lo = band_start.saturating_sub(radius);
-            let hi = (band_end + radius).min(h - 1);
-            let local = Resolution::new(res.width, (hi - lo + 1) as u16);
             let backend = backend.clone();
             let reply = reply_tx.clone();
             handles.push(std::thread::spawn(move || {
                 // Built on the worker so heavyweight setup (the ISC
                 // Monte-Carlo bank fit) also runs in parallel.
-                let mut b = match backend {
-                    ShardBackend::Ideal => StcfBackend::ideal_with_window(local, prm.tau_tw_us),
-                    ShardBackend::Isc(mut cfg) => {
-                        cfg.seed = crate::util::parallel::shard_seed(cfg.seed, shard);
-                        StcfBackend::isc(local, cfg, prm.tau_tw_us)
-                    }
-                };
-                let mut tally = ShardTally::default();
+                let mut scorer = BandScorer::for_band(res, &backend, prm, band_h, shard);
                 for job in rx {
                     let items = match job {
                         Job::Batch(items) => items,
                         Job::Stop => break,
                     };
                     let mut scores = Vec::new();
-                    for item in &items {
-                        match item {
-                            Item::Score(idx, ev) => {
-                                let mut e = *ev;
-                                e.y -= lo as u16;
-                                let s = support_count(&b, &e, &prm);
-                                scores.push((*idx, s));
-                                b.ingest(&e, &prm);
-                                tally.scored += 1;
-                                if s >= prm.threshold {
-                                    tally.kept += 1;
-                                } else {
-                                    tally.dropped += 1;
-                                }
-                            }
-                            Item::Halo(ev) => {
-                                let mut e = *ev;
-                                e.y -= lo as u16;
-                                b.ingest(&e, &prm);
-                                tally.halo_ingests += 1;
-                            }
-                        }
-                    }
+                    scorer.process(&items, &mut scores);
                     if reply.send(Reply { scores }).is_err() {
                         break; // pool dropped mid-batch
                     }
                 }
-                tally
+                scorer.tally
             }));
             senders.push(tx);
         }
@@ -193,36 +278,17 @@ impl StcfShardPool {
         &self.prm
     }
 
-    #[inline]
-    fn shard_for(&self, y: usize) -> usize {
-        (y / self.band_h).min(self.senders.len() - 1)
-    }
-
     /// Score a time-sorted batch of on-sensor events. `scores` is
     /// cleared and filled with one support count per event, in input
-    /// order — identical to calling [`support_count`] +
-    /// [`StcfBackend::ingest`] serially over the whole stream (see the
-    /// module docs for the backend caveats). Blocks until every shard
-    /// has finished its slice.
+    /// order — bit-for-bit identical to calling [`support_count`] +
+    /// [`StcfBackend::ingest`] serially over the whole stream, for both
+    /// backends and any shard count. Blocks until every shard has
+    /// finished its slice.
     pub fn score_batch(&mut self, batch: &[LabeledEvent], scores: &mut Vec<u32>) {
         scores.clear();
         scores.resize(batch.len(), 0);
-        let h = self.res.height as usize;
-        for (k, le) in batch.iter().enumerate() {
-            let e = &le.ev;
-            debug_assert!(self.res.contains(e.x, e.y), "off-sensor event {e:?}");
-            let y = e.y as usize;
-            let own = self.shard_for(y);
-            let s_min = self.shard_for(y.saturating_sub(self.radius));
-            let s_max = self.shard_for((y + self.radius).min(h - 1));
-            for s in s_min..=s_max {
-                if s == own {
-                    self.staging[s].push(Item::Score(k as u32, *e));
-                } else {
-                    self.staging[s].push(Item::Halo(*e));
-                }
-            }
-        }
+        let n = self.senders.len();
+        stage_items(self.res, self.band_h, n, self.radius, batch, &mut self.staging);
         let mut in_flight = 0usize;
         for s in 0..self.senders.len() {
             if self.staging[s].is_empty() {

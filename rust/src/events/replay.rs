@@ -1,10 +1,18 @@
-//! Event-stream persistence: save/load labeled recordings so experiment
-//! workloads can be frozen, shared and replayed byte-identically.
+//! Event-stream persistence and multi-stream replay: save/load labeled
+//! recordings so experiment workloads can be frozen, shared and
+//! replayed byte-identically, and interleave many labeled streams into
+//! one deterministic multi-camera feed (the serve-layer workload).
 //!
-//! Two formats:
+//! Two persistence formats:
 //! * binary `.aer` — the [`super::aer`] wire format plus a label bitmap
 //!   and a small header (geometry, duration);
 //! * text `.csv` — `t,x,y,p,label` rows for quick inspection/plotting.
+//!
+//! Multi-stream replay ([`interleave`]): each [`StreamSpec`] carries its
+//! own resolution and a playback `rate` (timestamps divided by it), and
+//! the merged iterator yields [`TaggedEvent`]s in deterministic
+//! (replay time, stream index) order — the fixture the `serve` CLI and
+//! `bench_serve` feed to concurrent sessions.
 
 use super::aer;
 use super::event::{Event, LabeledEvent, Polarity, Resolution};
@@ -158,6 +166,91 @@ pub fn from_csv(text: &str, res: Resolution, duration_us: u64) -> Result<Recordi
     Ok(Recording { res, duration_us, events })
 }
 
+/// One labeled stream of an interleaved multi-camera replay.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    /// Display label (scene name, file stem, …).
+    pub name: String,
+    pub res: Resolution,
+    /// Time-sorted labeled events in the stream's own clock.
+    pub events: Vec<LabeledEvent>,
+    /// Playback rate: replay timestamps are the stream's divided by
+    /// this factor ([`scale_time`]), so 2.0 replays at twice real-time
+    /// speed. Must be > 0.
+    pub rate: f64,
+}
+
+impl StreamSpec {
+    /// A stream replayed at real-time speed.
+    pub fn new(name: impl Into<String>, res: Resolution, events: Vec<LabeledEvent>) -> Self {
+        Self { name: name.into(), res, events, rate: 1.0 }
+    }
+
+    /// End of the stream on the replay clock (exclusive; 0 when empty).
+    pub fn replay_end_us(&self) -> u64 {
+        self.events.last().map(|le| scale_time(le.ev.t, self.rate) + 1).unwrap_or(0)
+    }
+}
+
+/// An event of one stream of a multi-stream replay, on the shared
+/// replay clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TaggedEvent {
+    /// Index into the [`interleave`] input slice.
+    pub stream: usize,
+    /// The event with its timestamp rescaled to the replay clock.
+    pub le: LabeledEvent,
+}
+
+/// Replay timestamp of stream time `t` under rate scaling (monotone in
+/// `t`, so per-stream order is preserved; clamped to ≥ 1 because 0 is
+/// the never-written sentinel throughout the stack).
+#[inline]
+pub fn scale_time(t: u64, rate: f64) -> u64 {
+    ((t as f64 / rate).round() as u64).max(1)
+}
+
+/// Deterministically interleave labeled streams into one replay-ordered
+/// feed: a lazy k-way merge by (scaled timestamp, stream index), so
+/// equal-time events always replay in stream-index order and the merge
+/// is reproducible run-to-run and platform-to-platform. Each input must
+/// be time-sorted; the output preserves every stream as an in-order
+/// subsequence.
+pub fn interleave(streams: &[StreamSpec]) -> MultiReplay<'_> {
+    MultiReplay { streams, heads: vec![0; streams.len()] }
+}
+
+/// Iterator returned by [`interleave`].
+pub struct MultiReplay<'a> {
+    streams: &'a [StreamSpec],
+    heads: Vec<usize>,
+}
+
+impl Iterator for MultiReplay<'_> {
+    type Item = TaggedEvent;
+
+    fn next(&mut self) -> Option<TaggedEvent> {
+        // Linear head scan: stream counts are small (a camera fleet,
+        // not a data center), so this beats heap bookkeeping.
+        let mut best: Option<(u64, usize)> = None;
+        for (s, spec) in self.streams.iter().enumerate() {
+            if let Some(le) = spec.events.get(self.heads[s]) {
+                let t = scale_time(le.ev.t, spec.rate);
+                // Strict < keeps the lowest stream index on time ties.
+                match best {
+                    Some((bt, _)) if t >= bt => {}
+                    _ => best = Some((t, s)),
+                }
+            }
+        }
+        let (t, s) = best?;
+        let mut le = self.streams[s].events[self.heads[s]];
+        self.heads[s] += 1;
+        le.ev.t = t;
+        Some(TaggedEvent { stream: s, le })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -212,6 +305,53 @@ mod tests {
         let back = load(&path).unwrap();
         std::fs::remove_file(&path).ok();
         assert_eq!(rec, back);
+    }
+
+    fn spec(name: &str, rate: f64, ts: &[u64]) -> StreamSpec {
+        StreamSpec {
+            name: name.into(),
+            res: Resolution::new(8, 8),
+            events: ts
+                .iter()
+                .map(|&t| LabeledEvent { ev: Event::new(t, 1, 2, Polarity::On), is_signal: true })
+                .collect(),
+            rate,
+        }
+    }
+
+    #[test]
+    fn interleave_merges_by_time_with_stream_index_ties() {
+        let streams = [spec("a", 1.0, &[10, 30, 30]), spec("b", 1.0, &[10, 20, 40])];
+        let got: Vec<(usize, u64)> =
+            interleave(&streams).map(|te| (te.stream, te.le.ev.t)).collect();
+        // Equal times replay lowest-stream-first; each stream stays an
+        // in-order subsequence.
+        assert_eq!(got, vec![(0, 10), (1, 10), (1, 20), (0, 30), (0, 30), (1, 40)]);
+    }
+
+    #[test]
+    fn interleave_rate_scales_timestamps() {
+        let streams = [spec("fast", 2.0, &[100, 200]), spec("slow", 0.5, &[100])];
+        let got: Vec<(usize, u64)> =
+            interleave(&streams).map(|te| (te.stream, te.le.ev.t)).collect();
+        // rate 2 halves timestamps, rate 0.5 doubles them.
+        assert_eq!(got, vec![(0, 50), (0, 100), (1, 200)]);
+        assert_eq!(streams[0].replay_end_us(), 101);
+        assert_eq!(scale_time(1, 4.0), 1, "scaled times never hit the 0 sentinel");
+    }
+
+    #[test]
+    fn interleave_is_deterministic_and_complete() {
+        let streams =
+            [spec("a", 1.0, &[5, 9, 13]), spec("b", 1.3, &[1, 7]), spec("c", 0.7, &[2, 3, 4])];
+        let a: Vec<TaggedEvent> = interleave(&streams).collect();
+        let b: Vec<TaggedEvent> = interleave(&streams).collect();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 8, "every event of every stream replays exactly once");
+        // Globally nondecreasing on the replay clock.
+        assert!(a.windows(2).all(|w| w[0].le.ev.t <= w[1].le.ev.t));
+        // Empty input terminates immediately.
+        assert_eq!(interleave(&[]).count(), 0);
     }
 
     #[test]

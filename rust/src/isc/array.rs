@@ -30,7 +30,6 @@ use crate::util::decay::DecayLut;
 use crate::util::fit::DoubleExp;
 use crate::util::grid::Grid;
 use crate::util::parallel::{auto_chunks, balanced_row_ranges, for_each_row_chunk};
-use crate::util::rng::Pcg64;
 use std::ops::Range;
 
 /// Array configuration.
@@ -52,6 +51,13 @@ pub struct IscConfig {
     pub bank_size: usize,
     /// Seed for per-pixel parameter assignment.
     pub seed: u64,
+    /// Global sensor row of this array's row 0. Band-sharded stages (the
+    /// write router's shards, the STCF denoise pool, the serve session
+    /// layer) set it to their band's first row so the position-stable
+    /// mismatch assignment ([`param_index_at`]) makes the band array an
+    /// exact window of the full-sensor array — sharded ≡ serial holds
+    /// bit-for-bit for every shard layout, mismatch included.
+    pub origin_y: u16,
 }
 
 impl Default for IscConfig {
@@ -63,8 +69,27 @@ impl Default for IscConfig {
             recency_bitmask: false,
             bank_size: 512,
             seed: 0x15c,
+            origin_y: 0,
         }
     }
+}
+
+/// Position-stable mismatch assignment: the bank index of the cell at
+/// **global** sensor position (x, y) on plane `plane` under `seed`. A
+/// pure hash of (seed, plane, x, y) — independent of array shape,
+/// creation order and shard layout — so a band array anchored at its
+/// global rows ([`IscConfig::origin_y`]) samples exactly the per-pixel
+/// decay parameters the full-sensor array holds over those rows.
+#[inline]
+pub fn param_index_at(seed: u64, plane: usize, x: u16, global_y: u32, bank_len: usize) -> u32 {
+    // Disjoint bit fields (plane | y | x) through the SplitMix64
+    // finalizer; stable forever — changing it changes every mismatch map.
+    let key = (plane as u64) << 48 | (global_y as u64) << 16 | x as u64;
+    let mut z = seed ^ key.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z % bank_len as u64) as u32
 }
 
 /// One storage plane: per-pixel write times + decay parameters + the
@@ -177,11 +202,20 @@ impl IscArray {
             (bank[row].eval(dt_us as f64 * 1e-6) / VDD).clamp(0.0, 1.0)
         });
         let n_planes = if cfg.polarity_sensitive { 2 } else { 1 };
-        let mut rng = Pcg64::with_stream(cfg.seed, 0xa55);
+        let w = res.width as usize;
         let planes = (0..n_planes)
-            .map(|_| Plane {
+            .map(|plane| Plane {
                 t_write: vec![0u64; n],
-                param_idx: (0..n).map(|_| rng.below(bank.len() as u64) as u32).collect(),
+                // Position-stable assignment: each cell hashes its global
+                // (plane, x, y) position into the shared bank, so a band
+                // array is an exact window of the full-sensor array.
+                param_idx: (0..n)
+                    .map(|i| {
+                        let x = (i % w) as u16;
+                        let gy = (i / w) as u32 + cfg.origin_y as u32;
+                        param_index_at(cfg.seed, plane, x, gy, bank.len())
+                    })
+                    .collect(),
                 active: ActiveSet::new(res.width as usize, res.height as usize),
                 // Recency window = the readout horizon: a clear bit then
                 // certifies "expired" for every comparator threshold whose
@@ -861,6 +895,63 @@ mod tests {
             a.frame_merged_rows_into(&mut buf, t, 3..6);
             assert_eq!(buf, a.frame_merged(t), "ps={polarity_sensitive}");
         }
+    }
+
+    #[test]
+    fn band_array_is_exact_window_of_full_sensor_array() {
+        // Position-stable mismatch assignment: an array covering rows
+        // y0..y0+rows with `origin_y: y0` must hold exactly the decay
+        // parameters the full-sensor array assigns to those rows, so
+        // identical writes read identical voltages — bit for bit, on
+        // both planes, for any band placement.
+        for polarity_sensitive in [false, true] {
+            let cfg = IscConfig { polarity_sensitive, ..IscConfig::default() };
+            let res = Resolution::new(16, 12);
+            let mut full = IscArray::new(res, cfg.clone());
+            for y0 in [0u16, 3, 7, 11] {
+                let rows = 4u16.min(12 - y0);
+                let band_cfg = IscConfig { origin_y: y0, ..cfg.clone() };
+                let mut band = IscArray::new(Resolution::new(16, rows), band_cfg);
+                full.reset();
+                for k in 0..(16 * rows as u64) {
+                    let (x, dy) = ((k % 16) as u16, (k / 16) as u16);
+                    let p = if k % 3 == 0 { Polarity::Off } else { Polarity::On };
+                    let t = 1_000 + k * 37;
+                    full.write(&Event::new(t, x, y0 + dy, p));
+                    band.write(&Event::new(t, x, dy, p));
+                }
+                for k in 0..(16 * rows as u64) {
+                    let (x, dy) = ((k % 16) as u16, (k / 16) as u16);
+                    for dt in [0u64, 7_000, 31_000] {
+                        let t = 1_000 + 16 * rows as u64 * 37 + dt;
+                        assert_eq!(
+                            full.read(x, y0 + dy, Polarity::On, t),
+                            band.read(x, dy, Polarity::On, t),
+                            "y0={y0} ({x},{dy}) dt={dt} ps={polarity_sensitive}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn param_index_at_is_shape_independent_and_in_range() {
+        for seed in [0u64, 0x15c, u64::MAX / 3] {
+            for bank_len in [1usize, 32, 512] {
+                for plane in [0usize, 1] {
+                    let a = param_index_at(seed, plane, 13, 1_000, bank_len);
+                    assert!(a < bank_len as u32);
+                    // Pure function of the global position.
+                    assert_eq!(a, param_index_at(seed, plane, 13, 1_000, bank_len));
+                }
+            }
+        }
+        // Planes draw independent maps (polarity-sensitive arrays must
+        // not mirror their mismatch across planes).
+        let differs = (0..64u32)
+            .any(|y| param_index_at(7, 0, 3, y, 512) != param_index_at(7, 1, 3, y, 512));
+        assert!(differs);
     }
 
     #[test]

@@ -29,7 +29,15 @@
 //!
 //! This is the software mirror of the paper's passive-decay energy
 //! model: idle cells cost nothing at write time *and* readout time.
+//!
+//! Per-pixel mismatch parameters are assigned **position-stably**: every
+//! cell hashes its global (plane, x, y) position into the shared fitted
+//! bank ([`array::param_index_at`]), and band-local arrays anchor
+//! themselves with [`IscConfig::origin_y`] — so any band partition of
+//! the sensor (router write shards, denoise shards, serve sessions)
+//! carries exactly the full-sensor mismatch map over its rows and
+//! sharded results equal serial results bit for bit.
 
 pub mod array;
 
-pub use array::{IscArray, IscConfig};
+pub use array::{param_index_at, IscArray, IscConfig};

@@ -41,6 +41,12 @@
 //! only pixels listed in the per-row [`util::active::ActiveSet`] —
 //! O(active) per frame instead of O(H·W). See the [`tsurface`] and
 //! [`isc`] module docs for the per-path complexity tables.
+//!
+//! Many concurrent camera streams multiplex over one fixed worker fleet
+//! through the [`serve`] session layer (`SessionManager`): per-session
+//! pipelines as queued (session, band) jobs with admission control and
+//! fair round-robin scheduling, frames bit-for-bit identical to a
+//! dedicated [`coordinator`] pipeline of the same stream.
 
 pub mod arch;
 pub mod circuit;
@@ -54,6 +60,7 @@ pub mod isc;
 pub mod metrics;
 pub mod recon;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod tsurface;
 pub mod util;

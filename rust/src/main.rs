@@ -4,6 +4,9 @@
 //!   exp <id|all> [--full]     regenerate a paper table/figure (DESIGN.md §3)
 //!   pipeline [--events N]     run the event→frame serving pipeline and
 //!                             print throughput/latency stats
+//!   serve [--sessions M]      replay M independent camera streams through
+//!                             the multi-tenant session layer and print the
+//!                             fleet summary
 //!   train [--family F]        train the classifier on a synthetic dataset
 //!                             through the AOT artifacts (needs `make artifacts`)
 //!   info                      runtime/platform diagnostics
@@ -16,6 +19,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("exp") => cmd_exp(&args),
         Some("pipeline") => cmd_pipeline(&args),
+        Some("serve") => cmd_serve(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -35,6 +39,9 @@ USAGE:
                                       fig9 fig10 fig12 sec2b table2 table3
   tsisc pipeline [--duration S] [--stcf] [--shards K] [--denoise-shards K]
                  [--batch-size N]
+  tsisc serve [--sessions M] [--duration S] [--workers N] [--stcf]
+              [--shards K] [--denoise-shards K] [--batch-size N]
+              [--max-inflight B] [--chunk N]
   tsisc train [--family nmnist|shapes|cifardvs|gesture] [--steps N]
               [--surface isc|ideal|count|ebbi] [--per-class N]
   tsisc info
@@ -126,6 +133,163 @@ fn cmd_pipeline(args: &Args) -> i32 {
             if dn.inline_scoring { "inline," } else { "sharded," },
         );
     }
+    0
+}
+
+/// Replay M independent camera streams (mixed scenes, resolutions and
+/// playback rates) concurrently through the multi-tenant session layer
+/// and print the fleet summary.
+fn cmd_serve(args: &Args) -> i32 {
+    use tsisc::coordinator::{PipelineConfig, RouterConfig};
+    use tsisc::denoise::StcfParams;
+    use tsisc::events::noise::contaminate;
+    use tsisc::events::replay::{interleave, scale_time, StreamSpec};
+    use tsisc::events::scene::{BlobScene, EdgeScene, Scene, TextureMotion, TextureScene};
+    use tsisc::events::{v2e, LabeledEvent, Resolution};
+    use tsisc::serve::{Reject, ServeConfig, SessionConfig, SessionManager};
+
+    let n_sessions = args.get_parsed("sessions", 4usize).max(1);
+    let dur = args.get_parsed("duration", 0.3f64);
+    let chunk = args.get_parsed("chunk", 2_048usize).max(1);
+    let serve_cfg = ServeConfig {
+        workers: args.get_parsed("workers", ServeConfig::default().workers),
+        max_sessions: n_sessions.max(ServeConfig::default().max_sessions),
+        max_inflight_batches: args.get_parsed("max-inflight", 64usize),
+    };
+
+    // Mixed fleet workload: per session a different scene family,
+    // resolution and playback rate.
+    eprintln!("generating {n_sessions} streams ({dur} s each) ...");
+    let streams: Vec<StreamSpec> = (0..n_sessions)
+        .map(|k| {
+            let seed = 21 + k as u64;
+            let (res, name, scene): (Resolution, String, Box<dyn Scene>) = match k % 3 {
+                0 => (
+                    Resolution::new(160, 120),
+                    format!("driving-{k}"),
+                    Box::new(EdgeScene::new(120.0, seed)),
+                ),
+                1 => (
+                    Resolution::new(128, 96),
+                    format!("hotelbar-{k}"),
+                    Box::new(BlobScene::new(128, 96, 3, dur, seed)),
+                ),
+                _ => (
+                    Resolution::new(96, 96),
+                    format!("texture-{k}"),
+                    Box::new(TextureScene::new(
+                        96,
+                        96,
+                        TextureMotion::Mixed { vx: 40.0, vy: 10.0, omega: 0.6 },
+                        seed,
+                    )),
+                ),
+            };
+            let signal = v2e::convert(scene.as_ref(), res, v2e::DvsParams::default(), dur);
+            let events = contaminate(&signal, res, 5.0, dur, seed ^ 0x5e);
+            let rate = [1.0, 2.0, 0.5][k % 3];
+            StreamSpec { name, res, events, rate }
+        })
+        .collect();
+    let total_events: usize = streams.iter().map(|s| s.events.len()).sum();
+    eprintln!("{total_events} events across {n_sessions} streams");
+
+    let mut manager = SessionManager::new(serve_cfg);
+    let mut sids = Vec::with_capacity(n_sessions);
+    for spec in &streams {
+        let cfg = SessionConfig {
+            name: spec.name.clone(),
+            res: spec.res,
+            t_end_us: scale_time((dur * 1e6) as u64, spec.rate),
+            pipeline: PipelineConfig {
+                stcf: args.flag("stcf").then(StcfParams::default),
+                denoise_shards: args.get_parsed("denoise-shards", 4usize),
+                batch_size: args.get_parsed("batch-size", 4_096usize),
+                router: RouterConfig {
+                    n_shards: args.get_parsed("shards", 4usize),
+                    ..RouterConfig::default()
+                },
+                ..PipelineConfig::default()
+            },
+        };
+        sids.push(manager.open(cfg).expect("open session"));
+    }
+
+    // One interleaved multi-camera feed, chunked per stream.
+    let start = std::time::Instant::now();
+    let mut buffers: Vec<Vec<LabeledEvent>> = vec![Vec::with_capacity(chunk); n_sessions];
+    let mut frames = vec![0usize; n_sessions];
+    let mut dropped_by_backpressure = 0u64;
+    // Ship one stream's buffered chunk; returns (frames emitted, events
+    // dropped by admission control).
+    let feed = |manager: &mut SessionManager,
+                sid: tsisc::serve::SessionId,
+                buf: &mut Vec<LabeledEvent>|
+     -> (usize, u64) {
+        let out = match manager.ingest_batch(sid, buf) {
+            Ok(fs) => (fs.len(), 0),
+            Err(Reject::Backpressure { .. }) => (0, buf.len() as u64),
+            Err(e) => panic!("ingest: {e}"),
+        };
+        buf.clear();
+        out
+    };
+    for te in interleave(&streams) {
+        buffers[te.stream].push(te.le);
+        if buffers[te.stream].len() >= chunk {
+            let mut buf = std::mem::take(&mut buffers[te.stream]);
+            let (f, d) = feed(&mut manager, sids[te.stream], &mut buf);
+            frames[te.stream] += f;
+            dropped_by_backpressure += d;
+            buffers[te.stream] = buf;
+        }
+    }
+    for s in 0..n_sessions {
+        let mut buf = std::mem::take(&mut buffers[s]);
+        if !buf.is_empty() {
+            let (f, d) = feed(&mut manager, sids[s], &mut buf);
+            frames[s] += f;
+            dropped_by_backpressure += d;
+        }
+        frames[s] += manager.drain(sids[s]).expect("drain").len();
+    }
+    let wall = start.elapsed().as_secs_f64();
+
+    let fleet = manager.stats();
+    println!(
+        "serve fleet: {} sessions on {} workers — {} events in {:.3} s ({:.2} Meps aggregate)",
+        fleet.open_sessions,
+        fleet.workers,
+        fleet.events_in,
+        wall,
+        fleet.events_in as f64 / wall.max(1e-9) / 1e6,
+    );
+    println!(
+        "jobs executed: {}  rejected batches: {}  events dropped by backpressure: {}",
+        fleet.jobs_executed, fleet.rejected_batches, dropped_by_backpressure,
+    );
+    for (k, sid) in sids.iter().enumerate() {
+        let report = manager.close(*sid).expect("close");
+        let st = &report.stats;
+        let p = &report.pipeline;
+        println!(
+            "  {:<12} {:>4}x{:<4} rate {:<3} | {:>7} in, {:>7} written, {:>6} dropped | \
+             {} frames | p50 {:.2} ms p99 {:.2} ms | peak queue {}",
+            st.name,
+            st.res.width,
+            st.res.height,
+            streams[k].rate,
+            p.events_in,
+            p.events_written,
+            p.events_dropped_by_stcf,
+            frames[k],
+            st.batch_latency_p50_ms,
+            st.batch_latency_p99_ms,
+            st.peak_queue_depth,
+        );
+    }
+    let final_stats = manager.shutdown();
+    assert_eq!(final_stats.open_bands, 0, "all bands freed at shutdown");
     0
 }
 

@@ -1,0 +1,79 @@
+//! The multi-tenant session layer: many concurrent camera streams over
+//! one shared, fixed-size worker fleet.
+//!
+//! Everything below L3 — router write shards, the STCF shard pool,
+//! dirty-band snapshots — assumed one sensor stream owning dedicated
+//! thread teams, so N cameras would have cost N×(denoise_shards +
+//! write_shards) threads with no admission control. This module
+//! multiplexes instead: each [`SessionManager`] session keeps its own
+//! *state* (band arrays, STCF surfaces, window clock, staging batcher)
+//! but shares the fleet's *threads*, with every unit of work queued as
+//! a (session, band)-tagged job.
+//!
+//! ## Stages and queues
+//!
+//! Mirroring the [`crate::coordinator`] stage diagram, with thread
+//! teams replaced by queues on one pool:
+//!
+//! ```text
+//!  session A ──ingest_batch──► staging (≤batch_size) ──┐ Score jobs (A, band)
+//!  session B ──ingest_batch──► staging (≤batch_size) ──┤   + kept events
+//!      ⋮                                               ▼
+//!                                     ┌────────────────────────────┐
+//!        admission control:           │  global ready queue        │
+//!        max_sessions,                │  round-robin over every    │
+//!        max_inflight_batches         │  (session, band) actor —   │
+//!        reject-with-reason           │  one job per turn          │
+//!                                     └──────┬─────────────────────┘
+//!                                            │ workers (fixed pool)
+//!                    ┌───────────────────────┼──────────────────────┐
+//!                    ▼                       ▼                      ▼
+//!            BandScorer job           BandWriter job          Snapshot job
+//!            (score-then-write,       (write_batch +          (dirty-band
+//!             halo ingests)            dirty watermark)        render / skip)
+//!                    │ scores                                       │ band buf
+//!                    ▼                                              ▼
+//!            session staging ──► Write jobs per band ──► window frame composite
+//! ```
+//!
+//! Per-band FIFO order makes a band's snapshot observe every write
+//! queued before it; the round-robin ready queue gives fairness — a hot
+//! camera only lengthens its own queue, never another session's turn.
+//!
+//! ## Per-batch complexity vs fleet size
+//!
+//! With S open sessions, B bands per session, W workers, n events per
+//! batch and (2r+1)² STCF patches:
+//!
+//! | Operation | Producer side | Fleet side | Scaling |
+//! |---|---|---|---|
+//! | `ingest_batch` (no STCF) | O(n) stage + O(touched bands) job enqueues | O(n) writes | independent of S |
+//! | `ingest_batch` (sharded STCF) | O(n·(1 + halo dup)) item staging + reply merge | O(n·(2r+1)²) scoring across ≤ min(B, W) workers | per-session latency grows ∝ active sessions (fair share), fleet throughput bounded by W |
+//! | window frame | O(B) skip checks + composite memcpy | O(dirty) render work (dirty-band protocol) | clean bands cost no job at all |
+//! | `open`/`close` | O(B) actor setup / teardown jobs | bank fit per band (open), frees arrays (close) | bands gauge drops on close |
+//! | admission check | O(1) atomic read | — | rejects instead of buffering |
+//!
+//! Worker threads are bounded by [`ServeConfig::workers`] — never by
+//! session count: band renders run with `render_chunks = 1` and
+//! sessions spawn nothing.
+//!
+//! ## Exactness
+//!
+//! A session's frames are **bit-for-bit identical** to a standalone
+//! [`crate::coordinator::pipeline::run`] of the same stream and config,
+//! including mismatch-enabled ISC backends — the band jobs drive the
+//! very structs the dedicated router/pool threads drive
+//! ([`crate::coordinator::router::BandWriter`],
+//! [`crate::denoise::sharded::BandScorer`]), and the position-stable
+//! mismatch assignment ([`crate::isc::param_index_at`]) makes every
+//! band array an exact window of the full-sensor array regardless of
+//! how sessions land on the fleet. `tests/serve_equiv.rs` asserts it
+//! across 1/4/16 concurrent sessions with mixed resolutions.
+
+mod scheduler;
+pub mod session;
+pub mod stats;
+
+pub use scheduler::HoldGuard;
+pub use session::{Reject, ServeConfig, SessionConfig, SessionId, SessionManager};
+pub use stats::{ServeStats, SessionReport, SessionStats};

@@ -1,0 +1,840 @@
+//! Multi-tenant camera sessions over the shared worker fleet.
+//!
+//! A [`SessionManager`] hosts many concurrent sessions — each with its
+//! own resolution, ISC config, STCF stage and window clock — on one
+//! fixed [`scheduler`](super::scheduler) worker pool. Per session it
+//! reproduces the coordinator pipeline's streaming semantics **exactly**
+//! (same staging batcher, same band layout, same causal
+//! score-then-write order, same dirty-band snapshot protocol), so the
+//! frames a session emits are bit-for-bit identical to a standalone
+//! [`crate::coordinator::pipeline::run`] of the same stream and config
+//! — verified in `tests/serve_equiv.rs` across 1/4/16 concurrent
+//! sessions with mismatch-enabled ISC backends.
+//!
+//! Admission control: `open` rejects past [`ServeConfig::max_sessions`];
+//! `ingest_batch` rejects (with [`Reject::Backpressure`]) while the
+//! session's in-flight write batches sit at
+//! [`ServeConfig::max_inflight_batches`] — queues stay bounded instead
+//! of buffering a hot camera unboundedly. Within the bound, a batch is
+//! accepted in full; the per-call overshoot is at most one write job
+//! per touched band per internal flush.
+
+use super::scheduler::{
+    BandActor, BandState, CloseDone, HoldGuard, Job, ScoreDone, SnapDone, WorkerPool,
+};
+use super::stats::{latency_percentiles_ms, ServeStats, SessionReport, SessionStats};
+use crate::coordinator::router::BandWriter;
+use crate::coordinator::{DenoiseStats, PipelineConfig, PipelineStats, RouterStats, StageWall};
+use crate::denoise::sharded::{stage_items, BandScorer, ScoreItem, ShardBackend, ShardTally};
+use crate::denoise::{support_count, StcfBackend, StcfParams};
+use crate::events::{Event, LabeledEvent, Resolution};
+use crate::util::grid::Grid;
+use crate::util::parallel::band_layout;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Opaque session handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionId(u64);
+
+impl SessionId {
+    /// The raw id (stable for the manager's lifetime).
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// Why the manager refused a request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reject {
+    /// `open` at the [`ServeConfig::max_sessions`] ceiling.
+    TooManySessions { open: usize, max: usize },
+    /// `ingest_batch` while the session's queued write batches sit at
+    /// [`ServeConfig::max_inflight_batches`]. Retry after the fleet
+    /// drains; nothing from the rejected batch was ingested.
+    Backpressure { queued: usize, max: usize },
+    /// Unknown (or already closed) session id.
+    UnknownSession(u64),
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::TooManySessions { open, max } => {
+                write!(f, "session limit reached ({open}/{max})")
+            }
+            Reject::Backpressure { queued, max } => {
+                write!(f, "backpressure: {queued}/{max} write batches in flight")
+            }
+            Reject::UnknownSession(id) => write!(f, "unknown session s{id}"),
+        }
+    }
+}
+
+/// Fleet configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Fixed worker-thread count shared by every session (≥ 1).
+    pub workers: usize,
+    /// Admission ceiling on concurrently open sessions.
+    pub max_sessions: usize,
+    /// Per-session bound on queued write batches — the backpressure
+    /// knob: `ingest_batch` rejects instead of buffering past it.
+    pub max_inflight_batches: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            workers: crate::util::parallel::available_threads(),
+            max_sessions: 64,
+            max_inflight_batches: 64,
+        }
+    }
+}
+
+/// Per-session configuration: the stream's geometry and end time plus
+/// the exact pipeline shape a standalone run would use.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    /// Display label for fleet summaries.
+    pub name: String,
+    pub res: Resolution,
+    /// Stream end time: window frames are emitted for every boundary
+    /// ≤ `t_end_us`, exactly as `pipeline::run(events, res, t_end_us, …)`.
+    pub t_end_us: u64,
+    /// Window period, STCF stage, band counts, batch size and ISC
+    /// config — the same struct `pipeline::run` takes. Results are
+    /// interpreted identically; two knobs are moot for queueing only:
+    /// `router.queue_depth` (serve bounds queues per session via
+    /// [`ServeConfig::max_inflight_batches`]) and `router.batch_size`
+    /// (serve ships one write job per touched band per staged flush —
+    /// message boundaries never change band state, so frames are
+    /// unaffected).
+    pub pipeline: PipelineConfig,
+}
+
+/// The inline STCF stage (`denoise_shards: 0`): scored on the calling
+/// thread, mirroring the pipeline's inline path decision-for-decision.
+struct InlineStage {
+    backend: StcfBackend,
+    prm: StcfParams,
+    tally: ShardTally,
+}
+
+/// Router-side cached band state (the dirty-band snapshot protocol,
+/// mirroring `coordinator::router::BandCache`).
+struct BandCache {
+    buf: Option<Grid<f64>>,
+    at_us: u64,
+    valid: bool,
+    /// The cached band is all-zero and stays all-zero at any later query
+    /// time absent new writes (see the router's dirty-band docs).
+    empty_static: bool,
+}
+
+/// One open session's state (producer-side; band state lives on the
+/// fleet's actors).
+struct Session {
+    id: SessionId,
+    cfg: SessionConfig,
+    write_actors: Vec<Arc<BandActor>>,
+    /// Sharded STCF bands (empty when the STCF is off or inline).
+    score_actors: Vec<Arc<BandActor>>,
+    inline: Option<InlineStage>,
+    band_h: usize,
+    score_band_h: usize,
+    score_radius: usize,
+    caches: Vec<BandCache>,
+    band_dirty: Vec<bool>,
+    inflight: Arc<AtomicUsize>,
+    // Streaming state (the pipeline's producer loop, verbatim).
+    pre: Vec<LabeledEvent>,
+    kept: Vec<LabeledEvent>,
+    scores: Vec<u32>,
+    score_staging: Vec<Vec<ScoreItem>>,
+    route_staging: Vec<Vec<Event>>,
+    next_frame: u64,
+    // Counters.
+    events_in: u64,
+    events_routed: u64,
+    dropped: u64,
+    peak_batch_len: usize,
+    batches_shipped: u64,
+    snapshots_served: u64,
+    bands_skipped_unchanged: u64,
+    frames_emitted: u64,
+    rejected_batches: u64,
+    peak_queue_depth: usize,
+    /// Ring of per-`ingest_batch` wall latencies (bounded so long-lived
+    /// sessions don't grow without limit).
+    batch_latency_s: Vec<f64>,
+    latency_cursor: usize,
+    stage_wall: StageWall,
+    opened: Instant,
+}
+
+/// Latency samples kept per session (ring buffer).
+const LATENCY_SAMPLES: usize = 16_384;
+
+impl Session {
+    /// The pipeline producer loop body for one event (staging + window
+    /// clock), emitting window frames into `frames`.
+    fn push(&mut self, pool: &WorkerPool, le: LabeledEvent, frames: &mut Vec<(u64, Grid<f64>)>) {
+        debug_assert!(
+            self.cfg.res.contains(le.ev.x, le.ev.y),
+            "off-sensor event {:?} for {}x{} session",
+            le.ev,
+            self.cfg.res.width,
+            self.cfg.res.height
+        );
+        self.events_in += 1;
+        let window = self.cfg.pipeline.window_us;
+        while le.ev.t > self.next_frame && self.next_frame <= self.cfg.t_end_us {
+            self.flush(pool);
+            let at = self.next_frame;
+            let frame = self.snapshot_frame(pool, at);
+            self.frames_emitted += 1;
+            frames.push((at, frame));
+            self.next_frame += window;
+        }
+        self.pre.push(le);
+        if self.pre.len() >= self.cfg.pipeline.batch_size.max(1) {
+            self.flush(pool);
+        }
+    }
+
+    /// Push the staged batch through the STCF stage (when configured)
+    /// and ship the survivors to the band writers.
+    fn flush(&mut self, pool: &WorkerPool) {
+        self.peak_batch_len = self.peak_batch_len.max(self.pre.len());
+        if self.pre.is_empty() {
+            return;
+        }
+        if self.cfg.pipeline.stcf.is_some() {
+            let t0 = Instant::now();
+            self.kept.clear();
+            if let Some(st) = &mut self.inline {
+                for le in &self.pre {
+                    let s = support_count(&st.backend, &le.ev, &st.prm);
+                    st.backend.ingest(&le.ev, &st.prm);
+                    st.tally.scored += 1;
+                    if s >= st.prm.threshold {
+                        st.tally.kept += 1;
+                        self.kept.push(*le);
+                    } else {
+                        st.tally.dropped += 1;
+                    }
+                }
+            } else {
+                self.score_sharded(pool);
+            }
+            self.stage_wall.denoise_seconds += t0.elapsed().as_secs_f64();
+            self.dropped += (self.pre.len() - self.kept.len()) as u64;
+            let t0 = Instant::now();
+            self.route(pool, true);
+            self.stage_wall.route_seconds += t0.elapsed().as_secs_f64();
+        } else {
+            let t0 = Instant::now();
+            self.route(pool, false);
+            self.stage_wall.route_seconds += t0.elapsed().as_secs_f64();
+        }
+        self.pre.clear();
+    }
+
+    /// Fan `pre` out to the scorer bands (identical item construction
+    /// to `StcfShardPool::score_batch`), wait for the per-band replies,
+    /// and fill `kept` threshold-gated in input order.
+    fn score_sharded(&mut self, pool: &WorkerPool) {
+        let n = self.score_actors.len();
+        stage_items(
+            self.cfg.res,
+            self.score_band_h,
+            n,
+            self.score_radius,
+            &self.pre,
+            &mut self.score_staging,
+        );
+        let (tx, rx) = sync_channel::<ScoreDone>(n);
+        let mut in_flight = 0usize;
+        for b in 0..n {
+            if self.score_staging[b].is_empty() {
+                continue;
+            }
+            let items = std::mem::take(&mut self.score_staging[b]);
+            pool.enqueue(&self.score_actors[b], Job::Score { items, reply: tx.clone() });
+            in_flight += 1;
+        }
+        drop(tx);
+        self.scores.clear();
+        self.scores.resize(self.pre.len(), 0);
+        for done in rx.iter().take(in_flight) {
+            for (idx, s) in done.scores {
+                self.scores[idx as usize] = s;
+            }
+        }
+        let threshold = self.cfg.pipeline.stcf.expect("sharded scoring needs stcf").threshold;
+        for (le, &s) in self.pre.iter().zip(&self.scores) {
+            if s >= threshold {
+                self.kept.push(*le);
+            }
+        }
+    }
+
+    /// Ship `kept` (or raw `pre`) to the band writers: one write job per
+    /// touched band, coalesced over consecutive same-band runs exactly
+    /// like `Router::route_batch` staging.
+    fn route(&mut self, pool: &WorkerPool, from_kept: bool) {
+        let events: &[LabeledEvent] = if from_kept { &self.kept } else { &self.pre };
+        let band_h = self.band_h;
+        let n = self.write_actors.len();
+        let mut i = 0usize;
+        while i < events.len() {
+            let s = (events[i].ev.y as usize / band_h).min(n - 1);
+            let mut j = i + 1;
+            while j < events.len() && (events[j].ev.y as usize / band_h).min(n - 1) == s {
+                j += 1;
+            }
+            self.route_staging[s].extend(events[i..j].iter().map(|le| le.ev));
+            i = j;
+        }
+        for s in 0..n {
+            if self.route_staging[s].is_empty() {
+                continue;
+            }
+            let batch = std::mem::take(&mut self.route_staging[s]);
+            self.events_routed += batch.len() as u64;
+            pool.enqueue(&self.write_actors[s], Job::Write(batch));
+            self.batches_shipped += 1;
+            self.band_dirty[s] = true;
+        }
+        self.peak_queue_depth = self.peak_queue_depth.max(self.inflight.load(Ordering::SeqCst));
+    }
+
+    /// Scatter-gather one frame at `at_us` — `Router::frame_into`'s
+    /// dirty-band protocol over the fleet: provably-clean bands
+    /// composite from the session cache with no job at all, the rest
+    /// snapshot behind their pending writes in band-FIFO order.
+    fn snapshot_frame(&mut self, pool: &WorkerPool, at_us: u64) -> Grid<f64> {
+        let t0 = Instant::now();
+        self.snapshots_served += 1;
+        let w = self.cfg.res.width as usize;
+        let mut out = Grid::new(w, self.cfg.res.height as usize, 0.0f64);
+        let n = self.write_actors.len();
+        let (tx, rx) = sync_channel::<SnapDone>(n);
+        let mut in_flight = 0usize;
+        for s in 0..n {
+            let cache = &mut self.caches[s];
+            let skip = cache.valid
+                && !self.band_dirty[s]
+                && (cache.at_us == at_us || (cache.empty_static && at_us >= cache.at_us));
+            if skip {
+                cache.at_us = at_us;
+                self.bands_skipped_unchanged += 1;
+                continue;
+            }
+            let buf = cache.buf.take().expect("band buffer in flight");
+            let job = Job::Snapshot {
+                at_us,
+                buf,
+                cache_valid: cache.valid,
+                band: s,
+                reply: tx.clone(),
+            };
+            pool.enqueue(&self.write_actors[s], job);
+            in_flight += 1;
+        }
+        drop(tx);
+        for r in rx.iter().take(in_flight) {
+            if !r.rendered {
+                self.bands_skipped_unchanged += 1;
+            }
+            let cache = &mut self.caches[r.band];
+            cache.buf = Some(r.buf);
+            cache.at_us = at_us;
+            cache.valid = true;
+            cache.empty_static = r.empty_static;
+            self.band_dirty[r.band] = false;
+        }
+        let slice = out.as_mut_slice();
+        for (s, cache) in self.caches.iter().enumerate() {
+            let band = cache.buf.as_ref().expect("band buffer returned");
+            let y0 = s * self.band_h;
+            slice[y0 * w..y0 * w + band.len()].copy_from_slice(band.as_slice());
+        }
+        self.stage_wall.snapshot_seconds += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn live_stats(&self) -> SessionStats {
+        let (p50, p99) = latency_percentiles_ms(&self.batch_latency_s);
+        SessionStats {
+            id: self.id.raw(),
+            name: self.cfg.name.clone(),
+            res: self.cfg.res,
+            events_in: self.events_in,
+            events_routed: self.events_routed,
+            events_dropped_by_stcf: self.dropped,
+            frames_emitted: self.frames_emitted,
+            snapshots_served: self.snapshots_served,
+            bands_skipped_unchanged: self.bands_skipped_unchanged,
+            batches_shipped: self.batches_shipped,
+            queue_depth: self.inflight.load(Ordering::SeqCst),
+            peak_queue_depth: self.peak_queue_depth,
+            rejected_batches: self.rejected_batches,
+            batch_latency_p50_ms: p50,
+            batch_latency_p99_ms: p99,
+        }
+    }
+}
+
+/// The multi-tenant session manager (see the module docs).
+pub struct SessionManager {
+    cfg: ServeConfig,
+    pool: WorkerPool,
+    sessions: BTreeMap<u64, Session>,
+    next_id: u64,
+    open_bands: Arc<AtomicUsize>,
+    /// Rejections + events of already-closed sessions (fleet totals).
+    closed_rejected: u64,
+    closed_events_in: u64,
+}
+
+impl SessionManager {
+    pub fn new(cfg: ServeConfig) -> Self {
+        Self {
+            pool: WorkerPool::new(cfg.workers),
+            cfg,
+            sessions: BTreeMap::new(),
+            next_id: 0,
+            open_bands: Arc::new(AtomicUsize::new(0)),
+            closed_rejected: 0,
+            closed_events_in: 0,
+        }
+    }
+
+    /// Open a session: builds its band writers (and scorer bands when
+    /// the STCF is sharded) as fleet actors. Rejects at the session
+    /// ceiling.
+    pub fn open(&mut self, cfg: SessionConfig) -> Result<SessionId, Reject> {
+        if self.sessions.len() >= self.cfg.max_sessions {
+            return Err(Reject::TooManySessions {
+                open: self.sessions.len(),
+                max: self.cfg.max_sessions,
+            });
+        }
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let height = cfg.res.height as usize;
+        let (band_h, n_bands) = band_layout(height, cfg.pipeline.router.n_shards);
+        let write_actors: Vec<Arc<BandActor>> = (0..n_bands)
+            .map(|s| {
+                // render_chunks = 1: the fleet's workers are the
+                // parallelism; band renders must not spawn threads.
+                let writer = BandWriter::for_band(cfg.res, &cfg.pipeline.router.isc, band_h, s, 1);
+                self.pool.spawn_actor(
+                    BandState::Writer(Box::new(writer)),
+                    inflight.clone(),
+                    self.open_bands.clone(),
+                )
+            })
+            .collect();
+        let sharded = cfg.pipeline.stcf.is_some() && cfg.pipeline.denoise_shards > 0;
+        let (score_band_h, n_score) = if sharded {
+            band_layout(height, cfg.pipeline.denoise_shards)
+        } else {
+            (height, 0)
+        };
+        let score_radius =
+            cfg.pipeline.stcf.map(|prm| prm.radius as usize).unwrap_or(0);
+        let score_actors: Vec<Arc<BandActor>> = (0..n_score)
+            .map(|s| {
+                let prm = cfg.pipeline.stcf.expect("sharded stage needs stcf");
+                let backend = ShardBackend::Isc(cfg.pipeline.router.isc.clone());
+                let scorer = BandScorer::for_band(cfg.res, &backend, prm, score_band_h, s);
+                self.pool.spawn_actor(
+                    BandState::Scorer(Box::new(scorer)),
+                    inflight.clone(),
+                    self.open_bands.clone(),
+                )
+            })
+            .collect();
+        let inline = match (&cfg.pipeline.stcf, sharded) {
+            (Some(prm), false) => Some(InlineStage {
+                backend: StcfBackend::isc(
+                    cfg.res,
+                    cfg.pipeline.router.isc.clone(),
+                    prm.tau_tw_us,
+                ),
+                prm: *prm,
+                tally: ShardTally::default(),
+            }),
+            _ => None,
+        };
+        let batch_size = cfg.pipeline.batch_size.max(1);
+        let next_frame = cfg.pipeline.window_us;
+        let session = Session {
+            id,
+            write_actors,
+            score_actors,
+            inline,
+            band_h,
+            score_band_h,
+            score_radius,
+            caches: (0..n_bands)
+                .map(|_| BandCache {
+                    buf: Some(Grid::new(1, 1, 0.0)),
+                    at_us: 0,
+                    valid: false,
+                    empty_static: false,
+                })
+                .collect(),
+            band_dirty: vec![false; n_bands],
+            inflight,
+            pre: Vec::with_capacity(batch_size),
+            kept: Vec::with_capacity(batch_size),
+            scores: Vec::new(),
+            score_staging: (0..n_score).map(|_| Vec::new()).collect(),
+            route_staging: (0..n_bands).map(|_| Vec::new()).collect(),
+            next_frame,
+            events_in: 0,
+            events_routed: 0,
+            dropped: 0,
+            peak_batch_len: 0,
+            batches_shipped: 0,
+            snapshots_served: 0,
+            bands_skipped_unchanged: 0,
+            frames_emitted: 0,
+            rejected_batches: 0,
+            peak_queue_depth: 0,
+            batch_latency_s: Vec::new(),
+            latency_cursor: 0,
+            stage_wall: StageWall::default(),
+            opened: Instant::now(),
+            cfg,
+        };
+        self.sessions.insert(id.raw(), session);
+        Ok(id)
+    }
+
+    /// Ingest a time-sorted labeled batch, returning any window frames
+    /// the stream crossed. Rejected in full (nothing ingested) while the
+    /// session's queued write batches sit at the in-flight bound.
+    pub fn ingest_batch(
+        &mut self,
+        sid: SessionId,
+        events: &[LabeledEvent],
+    ) -> Result<Vec<(u64, Grid<f64>)>, Reject> {
+        let s = self.sessions.get_mut(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        let queued = s.inflight.load(Ordering::SeqCst);
+        if queued >= self.cfg.max_inflight_batches {
+            s.rejected_batches += 1;
+            return Err(Reject::Backpressure { queued, max: self.cfg.max_inflight_batches });
+        }
+        let t0 = Instant::now();
+        let mut frames = Vec::new();
+        for le in events {
+            s.push(&self.pool, *le, &mut frames);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if s.batch_latency_s.len() < LATENCY_SAMPLES {
+            s.batch_latency_s.push(dt);
+        } else {
+            s.batch_latency_s[s.latency_cursor] = dt;
+            s.latency_cursor = (s.latency_cursor + 1) % LATENCY_SAMPLES;
+        }
+        Ok(frames)
+    }
+
+    /// On-demand frame at `at_us` (flushes staged events first, like
+    /// `Router::frame`). Must be causal — non-decreasing and ≥ the
+    /// session's ingested event times — the same contract as every
+    /// snapshot in the stack; causal on-demand snapshots never perturb
+    /// the window frames.
+    pub fn snapshot(&mut self, sid: SessionId, at_us: u64) -> Result<Grid<f64>, Reject> {
+        let s = self.sessions.get_mut(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        s.flush(&self.pool);
+        Ok(s.snapshot_frame(&self.pool, at_us))
+    }
+
+    /// Flush staged events and emit every remaining window frame through
+    /// `t_end_us` — the pipeline run's tail, so `ingest_batch` frames +
+    /// `drain` frames together are exactly `pipeline::run`'s frame list.
+    pub fn drain(&mut self, sid: SessionId) -> Result<Vec<(u64, Grid<f64>)>, Reject> {
+        let s = self.sessions.get_mut(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        s.flush(&self.pool);
+        let mut frames = Vec::new();
+        while s.next_frame <= s.cfg.t_end_us {
+            let at = s.next_frame;
+            let frame = s.snapshot_frame(&self.pool, at);
+            s.frames_emitted += 1;
+            frames.push((at, frame));
+            s.next_frame += s.cfg.pipeline.window_us;
+        }
+        Ok(frames)
+    }
+
+    /// Close a session: waits for its queued jobs, frees its bands on
+    /// the fleet, and returns the final accounting (a full
+    /// `PipelineStats` among it). Staged-but-unflushed events are
+    /// discarded — `drain` first for pipeline-identical totals.
+    pub fn close(&mut self, sid: SessionId) -> Result<SessionReport, Reject> {
+        let mut s =
+            self.sessions.remove(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        let n_actors = s.write_actors.len() + s.score_actors.len();
+        let (tx, rx) = sync_channel::<CloseDone>(n_actors);
+        for (b, actor) in s.write_actors.iter().enumerate() {
+            self.pool.enqueue(actor, Job::Close { band: b, reply: tx.clone() });
+        }
+        for (b, actor) in s.score_actors.iter().enumerate() {
+            let band = s.write_actors.len() + b;
+            self.pool.enqueue(actor, Job::Close { band, reply: tx.clone() });
+        }
+        drop(tx);
+        let mut per_shard = vec![0u64; s.write_actors.len()];
+        let mut tallies: Vec<(usize, ShardTally)> = Vec::new();
+        for done in rx.iter().take(n_actors) {
+            if let Some(t) = done.tally {
+                tallies.push((done.band, t));
+            } else if done.band < per_shard.len() {
+                per_shard[done.band] = done.written;
+            }
+        }
+        tallies.sort_by_key(|(b, _)| *b);
+        let denoise = match (&s.cfg.pipeline.stcf, s.inline.take()) {
+            (Some(_), Some(st)) => {
+                Some(DenoiseStats { inline_scoring: true, per_shard: vec![st.tally] })
+            }
+            (Some(_), None) => Some(DenoiseStats {
+                inline_scoring: false,
+                per_shard: tallies.into_iter().map(|(_, t)| t).collect(),
+            }),
+            _ => None,
+        };
+        let wall = s.opened.elapsed().as_secs_f64();
+        let stats = s.live_stats();
+        let pipeline = PipelineStats {
+            events_in: s.events_in,
+            events_written: per_shard.iter().sum(),
+            events_dropped_by_stcf: s.dropped,
+            frames_emitted: s.frames_emitted,
+            peak_batch_len: s.peak_batch_len,
+            wall_seconds: wall,
+            stage_wall: s.stage_wall.clone(),
+            denoise,
+            router: RouterStats {
+                events_routed: s.events_routed,
+                per_shard,
+                batches_shipped: s.batches_shipped,
+                snapshots_served: s.snapshots_served,
+                bands_skipped_unchanged: s.bands_skipped_unchanged,
+            },
+            events_per_second: if wall > 0.0 { s.events_in as f64 / wall } else { 0.0 },
+        };
+        self.closed_rejected += s.rejected_batches;
+        self.closed_events_in += s.events_in;
+        Ok(SessionReport { stats, pipeline })
+    }
+
+    /// Live band states on the fleet (drops to 0 once every session is
+    /// closed — "close frees its bands").
+    pub fn open_bands(&self) -> usize {
+        self.open_bands.load(Ordering::SeqCst)
+    }
+
+    /// Open session count.
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Pause the worker fleet until the guard drops (maintenance drains,
+    /// deterministic backpressure tests). While held, write jobs queue
+    /// but nothing executes — so `snapshot`/`drain`/`close` and sharded
+    /// scoring, which wait on job replies, will block until release.
+    pub fn hold_workers(&self) -> HoldGuard {
+        self.pool.hold()
+    }
+
+    /// Fleet-wide statistics snapshot.
+    pub fn stats(&self) -> ServeStats {
+        let sessions: Vec<SessionStats> =
+            self.sessions.values().map(Session::live_stats).collect();
+        ServeStats {
+            workers: self.pool.workers(),
+            open_sessions: sessions.len(),
+            open_bands: self.open_bands(),
+            jobs_executed: self.pool.jobs_executed(),
+            ready_depth: self.pool.ready_depth(),
+            rejected_batches: self.closed_rejected
+                + sessions.iter().map(|s| s.rejected_batches).sum::<u64>(),
+            events_in: self.closed_events_in
+                + sessions.iter().map(|s| s.events_in).sum::<u64>(),
+            sessions,
+        }
+    }
+
+    /// Close every remaining session and stop the worker fleet,
+    /// returning the final fleet statistics.
+    pub fn shutdown(mut self) -> ServeStats {
+        let ids: Vec<u64> = self.sessions.keys().copied().collect();
+        for id in ids {
+            let _ = self.close(SessionId(id));
+        }
+        let stats = self.stats();
+        self.pool.shutdown();
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Polarity;
+
+    fn stream(n: u64, res: Resolution) -> Vec<LabeledEvent> {
+        (0..n)
+            .map(|k| LabeledEvent {
+                ev: Event::new(
+                    1 + k * 1_000,
+                    (k % res.width as u64) as u16,
+                    (k % res.height as u64) as u16,
+                    Polarity::On,
+                ),
+                is_signal: true,
+            })
+            .collect()
+    }
+
+    fn session_cfg(res: Resolution, t_end_us: u64) -> SessionConfig {
+        SessionConfig {
+            name: "test".into(),
+            res,
+            t_end_us,
+            pipeline: PipelineConfig::default(),
+        }
+    }
+
+    #[test]
+    fn open_ingest_drain_close_lifecycle() {
+        let mut m = SessionManager::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+        let res = Resolution::new(16, 16);
+        let sid = m.open(session_cfg(res, 100_000)).unwrap();
+        assert_eq!(m.session_count(), 1);
+        assert!(m.open_bands() > 0);
+        let evs = stream(100, res); // covers 0..100 ms, 50 ms windows
+        let mut frames = m.ingest_batch(sid, &evs).unwrap();
+        frames.extend(m.drain(sid).unwrap());
+        assert_eq!(frames.len(), 2);
+        let report = m.close(sid).unwrap();
+        assert_eq!(report.pipeline.events_in, 100);
+        assert_eq!(report.pipeline.events_written, 100);
+        assert_eq!(report.pipeline.frames_emitted, 2);
+        assert_eq!(m.open_bands(), 0, "close must free every band");
+        assert_eq!(m.session_count(), 0);
+        assert!(matches!(m.ingest_batch(sid, &evs), Err(Reject::UnknownSession(_))));
+        m.shutdown();
+    }
+
+    #[test]
+    fn session_ceiling_rejects_with_reason() {
+        let mut m = SessionManager::new(ServeConfig {
+            workers: 1,
+            max_sessions: 2,
+            ..ServeConfig::default()
+        });
+        let res = Resolution::new(8, 8);
+        m.open(session_cfg(res, 10_000)).unwrap();
+        m.open(session_cfg(res, 10_000)).unwrap();
+        match m.open(session_cfg(res, 10_000)) {
+            Err(Reject::TooManySessions { open: 2, max: 2 }) => {}
+            other => panic!("expected session-ceiling reject, got {other:?}"),
+        }
+        m.shutdown();
+    }
+
+    #[test]
+    fn held_fleet_builds_bounded_queue_then_rejects() {
+        let mut m = SessionManager::new(ServeConfig {
+            workers: 2,
+            max_sessions: 4,
+            max_inflight_batches: 3,
+        });
+        let res = Resolution::new(8, 8);
+        let mut cfg = session_cfg(res, 10_000_000);
+        cfg.pipeline.batch_size = 4; // every call flushes
+        cfg.pipeline.window_us = 100_000_000; // no window crossing
+        let sid = m.open(cfg).unwrap();
+        let hold = m.hold_workers();
+        let evs = stream(4, res);
+        let mut rejected = 0u64;
+        for _ in 0..20 {
+            match m.ingest_batch(sid, &evs) {
+                Ok(_) => {}
+                Err(Reject::Backpressure { queued, max }) => {
+                    assert_eq!(max, 3);
+                    assert!(queued >= 3);
+                    rejected += 1;
+                }
+                Err(other) => panic!("unexpected reject {other:?}"),
+            }
+        }
+        assert!(rejected > 0, "a held fleet must reject past the in-flight bound");
+        let st = m.stats();
+        assert_eq!(st.rejected_batches, rejected);
+        // Queue stayed bounded: at most the admission bound plus one
+        // call's own flush (≤ touched bands) ever sat in flight.
+        assert!(
+            st.sessions[0].peak_queue_depth
+                <= 3 + st.sessions[0].batches_shipped as usize,
+        );
+        drop(hold);
+        // Released fleet drains and the session closes cleanly.
+        let report = m.close(sid).unwrap();
+        assert_eq!(report.stats.rejected_batches, rejected);
+        assert_eq!(report.pipeline.events_in, report.pipeline.events_written);
+        m.shutdown();
+    }
+
+    #[test]
+    fn many_sessions_share_a_small_fixed_fleet() {
+        // 6 sessions on 2 workers: everything completes, the fleet
+        // reports 2 workers regardless of session count, and each
+        // session's frames land independently.
+        let mut m = SessionManager::new(ServeConfig {
+            workers: 2,
+            max_sessions: 8,
+            ..ServeConfig::default()
+        });
+        let resolutions = [Resolution::new(16, 16), Resolution::new(8, 12)];
+        let mut sids = Vec::new();
+        for k in 0..6usize {
+            let res = resolutions[k % 2];
+            sids.push((m.open(session_cfg(res, 100_000)).unwrap(), res));
+        }
+        assert_eq!(m.stats().workers, 2);
+        let mut emitted = vec![0usize; sids.len()];
+        for (k, (sid, res)) in sids.iter().enumerate() {
+            emitted[k] += m.ingest_batch(*sid, &stream(60, *res)).unwrap().len();
+        }
+        for (k, (sid, _)) in sids.iter().enumerate() {
+            emitted[k] += m.drain(*sid).unwrap().len();
+            assert_eq!(emitted[k], 2, "50 ms windows over 100 ms, session {k}");
+        }
+        let st = m.stats();
+        assert_eq!(st.open_sessions, 6);
+        assert!(st.jobs_executed > 0);
+        let final_stats = m.shutdown();
+        assert_eq!(final_stats.open_sessions, 0);
+        assert_eq!(final_stats.open_bands, 0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Fleet-wide and per-session serving statistics.
+//!
+//! [`SessionStats`] is the live, producer-side view of one session
+//! (counters the session updates as it ingests — no worker round-trips
+//! needed); [`SessionReport`] is the final accounting a `close`
+//! returns, which additionally assembles a full
+//! [`crate::coordinator::PipelineStats`] — per-band written counts and
+//! denoise tallies included — so a serve session reports exactly the
+//! shape a standalone `pipeline::run` does. [`ServeStats`] aggregates
+//! the fleet: worker count, queue depths, executed jobs, rejections.
+
+use crate::coordinator::PipelineStats;
+use crate::events::Resolution;
+use crate::util::stats::percentile;
+
+/// Live statistics of one open session.
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// The session's id (see `SessionId`).
+    pub id: u64,
+    /// Display label from the session config.
+    pub name: String,
+    pub res: Resolution,
+    /// Events accepted by `ingest_batch` (rejected batches excluded).
+    pub events_in: u64,
+    /// Events routed to the write bands (post-STCF).
+    pub events_routed: u64,
+    pub events_dropped_by_stcf: u64,
+    /// Window frames emitted by the session clock.
+    pub frames_emitted: u64,
+    /// Frame snapshots served (window frames + on-demand).
+    pub snapshots_served: u64,
+    /// Band renders avoided by the dirty-band protocol.
+    pub bands_skipped_unchanged: u64,
+    /// Write-batch jobs shipped to the band writers.
+    pub batches_shipped: u64,
+    /// Write batches queued or running on the fleet right now.
+    pub queue_depth: usize,
+    /// High-water mark of `queue_depth`.
+    pub peak_queue_depth: usize,
+    /// `ingest_batch` calls rejected by admission control.
+    pub rejected_batches: u64,
+    /// p50 of per-`ingest_batch` wall latency, milliseconds (0 when no
+    /// batch completed yet).
+    pub batch_latency_p50_ms: f64,
+    /// p99 of per-`ingest_batch` wall latency, milliseconds.
+    pub batch_latency_p99_ms: f64,
+}
+
+/// Final accounting of one closed session.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    /// The closing snapshot of the live counters.
+    pub stats: SessionStats,
+    /// The standalone-pipeline-shaped totals: stage wall times, per-band
+    /// written counts, denoise tallies, router counters, throughput.
+    pub pipeline: PipelineStats,
+}
+
+/// Fleet-wide aggregate over the shared worker pool and every open
+/// session.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    /// Fixed worker-thread count (the whole fleet's parallelism budget —
+    /// independent of how many sessions are open).
+    pub workers: usize,
+    pub open_sessions: usize,
+    /// Live band states (writer + scorer bands across all sessions);
+    /// drops as sessions close.
+    pub open_bands: usize,
+    /// Jobs executed fleet-wide since the manager was built.
+    pub jobs_executed: u64,
+    /// Band actors waiting in the global ready queue right now.
+    pub ready_depth: usize,
+    /// Rejected `ingest_batch` calls, fleet-wide (closed sessions
+    /// included).
+    pub rejected_batches: u64,
+    /// Events accepted fleet-wide (closed sessions included).
+    pub events_in: u64,
+    /// Per-open-session live stats.
+    pub sessions: Vec<SessionStats>,
+}
+
+/// (p50, p99) of a latency sample set in milliseconds; zeros when empty.
+pub(crate) fn latency_percentiles_ms(samples_s: &[f64]) -> (f64, f64) {
+    if samples_s.is_empty() {
+        return (0.0, 0.0);
+    }
+    (percentile(samples_s, 50.0) * 1e3, percentile(samples_s, 99.0) * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles_handle_empty_and_scale_to_ms() {
+        assert_eq!(latency_percentiles_ms(&[]), (0.0, 0.0));
+        let (p50, p99) = latency_percentiles_ms(&[0.001, 0.002, 0.003]);
+        assert!((p50 - 2.0).abs() < 1e-9, "p50={p50}");
+        assert!(p99 > 2.9 && p99 <= 3.0, "p99={p99}");
+    }
+}

@@ -56,16 +56,11 @@ pub fn band_layout(height: usize, requested: usize) -> (usize, usize) {
     (band_h, height.div_ceil(band_h))
 }
 
-/// Per-shard RNG seed derivation shared by every band-sharded stage:
-/// the full 64-bit odd multiplier (the golden-ratio constant) keeps
-/// every shard's stream well separated even at high shard counts (a
-/// truncated 32-bit constant only perturbs the low half of the seed).
-/// One definition, so the write router and the denoise pool can never
-/// drift apart.
-#[inline]
-pub fn shard_seed(seed: u64, shard: usize) -> u64 {
-    seed.wrapping_add((shard as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15))
-}
+// (The per-shard RNG seed derivation that used to live here is gone:
+// band-sharded stages now anchor their arrays with
+// `IscConfig::origin_y` and the position-stable mismatch hash
+// `crate::isc::param_index_at`, so every shard shares the full-sensor
+// seed and samples the exact window of its parameter map.)
 
 /// Partition rows `0..weights.len()` into at most `chunks` contiguous,
 /// non-empty ranges of roughly equal total weight (greedy prefix cut at

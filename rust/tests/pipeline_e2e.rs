@@ -73,12 +73,8 @@ fn shard_count_does_not_change_results() {
         let run = run_pipeline(events.iter().copied(), res, 200_000, &cfg);
         frames.push(run.frames);
     }
-    // Same write pattern ⇒ same set of written pixels in the final frame
-    // regardless of sharding (values differ slightly via per-shard seeds).
-    let a = &frames[0].last().unwrap().1;
-    let b = &frames[1].last().unwrap().1;
-    for (x, y, &va) in a.iter_coords() {
-        let vb = *b.get(x, y);
-        assert_eq!(va > 0.0, vb > 0.0, "write-set mismatch at ({x},{y})");
-    }
+    // Position-stable mismatch assignment: every band array is an exact
+    // window of the full-sensor array, so the frame sequence is
+    // bit-for-bit identical for every shard count.
+    assert_eq!(frames[0], frames[1]);
 }

@@ -1,0 +1,276 @@
+//! Contracts of the multi-tenant serve layer (`tsisc::serve`):
+//!
+//! * session frames ≡ standalone `pipeline::run` **bit-for-bit** across
+//!   1/4/16 concurrent sessions with mixed resolutions, mixed pipeline
+//!   shapes (inline and sharded STCF, varying band counts and batch
+//!   sizes) and **mismatch-enabled** ISC backends — the position-stable
+//!   assignment makes band placement irrelevant to results;
+//! * bounded per-session queues: a held fleet rejects with
+//!   `Reject::Backpressure` instead of buffering unboundedly, and
+//!   recovers cleanly once released;
+//! * `close` frees the session's bands on the fleet (the live-bands
+//!   gauge drops to zero) and invalidates the id;
+//! * causal on-demand snapshots never perturb the window frames.
+
+use tsisc::coordinator::{run_pipeline, PipelineConfig, RouterConfig};
+use tsisc::denoise::StcfParams;
+use tsisc::events::{Event, LabeledEvent, Polarity, Resolution};
+use tsisc::isc::IscConfig;
+use tsisc::serve::{Reject, ServeConfig, SessionConfig, SessionManager};
+use tsisc::util::grid::Grid;
+
+/// Deterministic time-sorted stream covering every row of `res`.
+fn stream(res: Resolution, n: u64, step_us: u64, salt: u64) -> Vec<LabeledEvent> {
+    (0..n)
+        .map(|k| LabeledEvent {
+            ev: Event::new(
+                1 + k * step_us,
+                ((k * 7 + salt) % res.width as u64) as u16,
+                ((k * 5 + salt * 3) % res.height as u64) as u16,
+                if (k + salt) % 3 == 0 { Polarity::Off } else { Polarity::On },
+            ),
+            is_signal: true,
+        })
+        .collect()
+}
+
+/// Per-session pipeline shape `k`: varied band counts, batch sizes and
+/// STCF stages, always with the default **mismatch-enabled** ISC config
+/// (small bank so 16 sessions of band arrays build quickly).
+fn pipeline_cfg(k: usize) -> PipelineConfig {
+    let stcf = match k % 3 {
+        0 => None,
+        1 => Some(StcfParams { threshold: 1, ..StcfParams::default() }),
+        _ => Some(StcfParams::default()),
+    };
+    PipelineConfig {
+        stcf,
+        denoise_shards: [0usize, 2, 3, 1][k % 4],
+        batch_size: [64usize, 97, 4_096][k % 3],
+        router: RouterConfig {
+            n_shards: 1 + k % 4,
+            isc: IscConfig { bank_size: 48, ..IscConfig::default() },
+            ..RouterConfig::default()
+        },
+        ..PipelineConfig::default()
+    }
+}
+
+fn resolution(k: usize) -> Resolution {
+    [Resolution::new(24, 18), Resolution::new(32, 24), Resolution::new(16, 16)][k % 3]
+}
+
+#[test]
+fn session_frames_equal_standalone_pipeline_bitforbit() {
+    let t_end = 130_000u64; // 50 ms windows ⇒ frames at 50 ms and 100 ms
+    for &n_sessions in &[1usize, 4, 16] {
+        let mut m = SessionManager::new(ServeConfig {
+            workers: 3,
+            max_sessions: 32,
+            max_inflight_batches: 4_096,
+        });
+        let specs: Vec<(Resolution, Vec<LabeledEvent>, PipelineConfig)> = (0..n_sessions)
+            .map(|k| {
+                let res = resolution(k);
+                (res, stream(res, 400, 300, k as u64), pipeline_cfg(k))
+            })
+            .collect();
+        let sids: Vec<_> = specs
+            .iter()
+            .enumerate()
+            .map(|(k, (res, _, cfg))| {
+                m.open(SessionConfig {
+                    name: format!("cam-{k}"),
+                    res: *res,
+                    t_end_us: t_end,
+                    pipeline: cfg.clone(),
+                })
+                .unwrap()
+            })
+            .collect();
+        // Worker threads are the pool's, never the sessions': the fleet
+        // reports its fixed size no matter how many sessions are open.
+        assert_eq!(m.stats().workers, 3);
+        assert_eq!(m.stats().open_sessions, n_sessions);
+
+        // Feed every stream concurrently, round-robin in uneven chunks
+        // (coprime to every batch size, so staging boundaries and
+        // ingest boundaries interleave freely).
+        let mut frames: Vec<Vec<(u64, Grid<f64>)>> = vec![Vec::new(); n_sessions];
+        let mut heads = vec![0usize; n_sessions];
+        loop {
+            let mut progressed = false;
+            for (s, (_, events, _)) in specs.iter().enumerate() {
+                let lo = heads[s];
+                if lo >= events.len() {
+                    continue;
+                }
+                let hi = (lo + 37).min(events.len());
+                frames[s].extend(m.ingest_batch(sids[s], &events[lo..hi]).unwrap());
+                heads[s] = hi;
+                progressed = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+        for (s, sid) in sids.iter().enumerate() {
+            frames[s].extend(m.drain(*sid).unwrap());
+        }
+
+        // Every session must match its own standalone pipeline run.
+        for (s, (res, events, cfg)) in specs.iter().enumerate() {
+            let reference = run_pipeline(events.iter().copied(), *res, t_end, cfg);
+            assert_eq!(
+                frames[s], reference.frames,
+                "n_sessions={n_sessions} session={s} frames diverged from pipeline::run"
+            );
+            let report = m.close(sids[s]).unwrap();
+            assert_eq!(report.pipeline.events_in, reference.stats.events_in);
+            assert_eq!(report.pipeline.events_written, reference.stats.events_written);
+            assert_eq!(
+                report.pipeline.events_dropped_by_stcf,
+                reference.stats.events_dropped_by_stcf
+            );
+            assert_eq!(report.pipeline.frames_emitted, reference.stats.frames_emitted);
+            assert_eq!(
+                report.pipeline.router.events_routed,
+                reference.stats.router.events_routed
+            );
+            // Per-band accounting, not just the sum: both sides cut the
+            // same bands and keep the same events, so the counts match
+            // band for band.
+            assert_eq!(
+                report.pipeline.router.per_shard,
+                reference.stats.router.per_shard,
+                "session {s} per-band written counts"
+            );
+            match (&report.pipeline.denoise, &reference.stats.denoise) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.inline_scoring, b.inline_scoring, "session {s}");
+                    assert_eq!(a.per_shard, b.per_shard, "session {s} denoise tallies");
+                }
+                (None, None) => {}
+                other => panic!("denoise stats shape diverged: {other:?}"),
+            }
+        }
+        assert_eq!(m.open_bands(), 0, "all sessions closed ⇒ no live bands");
+        m.shutdown();
+    }
+}
+
+#[test]
+fn backpressure_rejects_instead_of_buffering() {
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 1,
+        max_sessions: 2,
+        max_inflight_batches: 2,
+    });
+    let res = Resolution::new(8, 8);
+    let mut cfg = pipeline_cfg(0); // no STCF: ingest never waits on jobs
+    cfg.batch_size = 8; // every 8-event call flushes
+    cfg.window_us = 1 << 40; // no window crossing while held
+    let sid = m
+        .open(SessionConfig { name: "hot".into(), res, t_end_us: 1 << 41, pipeline: cfg })
+        .unwrap();
+    let hold = m.hold_workers();
+    let evs = stream(res, 8, 10, 0);
+    let (mut accepted, mut rejected) = (0u64, 0u64);
+    for _ in 0..30 {
+        match m.ingest_batch(sid, &evs) {
+            Ok(_) => accepted += 1,
+            Err(Reject::Backpressure { queued, max }) => {
+                assert_eq!(max, 2);
+                assert!(queued >= 2, "rejected below the bound: {queued}");
+                rejected += 1;
+            }
+            Err(other) => panic!("unexpected rejection {other:?}"),
+        }
+    }
+    assert!(rejected >= 25, "held fleet must reject almost everything: {rejected}");
+    assert!(accepted >= 1);
+    let st = m.stats();
+    assert_eq!(st.rejected_batches, rejected);
+    // The bound is the admission check plus at most one call's own
+    // flush — nothing grows with the number of attempts.
+    assert!(
+        st.sessions[0].peak_queue_depth <= 2 + st.sessions[0].batches_shipped as usize,
+        "queue grew unboundedly: {:?}",
+        st.sessions[0]
+    );
+    drop(hold);
+    // Released fleet drains; accepted events all land.
+    let report = m.close(sid).unwrap();
+    assert_eq!(report.pipeline.events_in, accepted * 8);
+    assert_eq!(report.pipeline.events_written, accepted * 8);
+    assert_eq!(report.stats.rejected_batches, rejected);
+    m.shutdown();
+}
+
+#[test]
+fn close_frees_bands_and_invalidates_the_id() {
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 2,
+        max_sessions: 4,
+        max_inflight_batches: 64,
+    });
+    let res = Resolution::new(16, 16);
+    let mk = |k: usize| SessionConfig {
+        name: format!("cam-{k}"),
+        res,
+        t_end_us: 100_000,
+        pipeline: pipeline_cfg(1), // sharded STCF ⇒ scorer bands too
+    };
+    let a = m.open(mk(0)).unwrap();
+    let b = m.open(mk(1)).unwrap();
+    let bands_two = m.open_bands();
+    assert!(bands_two > 0);
+    m.ingest_batch(a, &stream(res, 200, 400, 1)).unwrap();
+    m.ingest_batch(b, &stream(res, 200, 400, 2)).unwrap();
+    m.drain(a).unwrap();
+    m.close(a).unwrap();
+    let bands_one = m.open_bands();
+    assert!(bands_one < bands_two, "closing a session must free its bands");
+    assert_eq!(m.session_count(), 1);
+    assert_eq!(m.close(a).unwrap_err(), Reject::UnknownSession(a.raw()));
+    assert!(m.snapshot(a, 200_000).is_err());
+    m.close(b).unwrap();
+    assert_eq!(m.open_bands(), 0);
+    m.shutdown();
+}
+
+#[test]
+fn causal_on_demand_snapshots_do_not_perturb_window_frames() {
+    let res = Resolution::new(24, 18);
+    let events = stream(res, 300, 350, 5);
+    let cfg = pipeline_cfg(2); // sharded STCF, mismatch enabled
+    let t_end = 110_000u64;
+    let reference = run_pipeline(events.iter().copied(), res, t_end, &cfg);
+
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 2,
+        max_sessions: 2,
+        max_inflight_batches: 1_024,
+    });
+    let sid = m
+        .open(SessionConfig {
+            name: "probed".into(),
+            res,
+            t_end_us: t_end,
+            pipeline: cfg,
+        })
+        .unwrap();
+    let mut frames = Vec::new();
+    for chunk in events.chunks(50) {
+        frames.extend(m.ingest_batch(sid, chunk).unwrap());
+        // Causal probe at the stream head: flushes staged events and
+        // renders, but must leave the window-frame sequence untouched.
+        let probe_at = chunk.last().unwrap().ev.t;
+        let probe = m.snapshot(sid, probe_at).unwrap();
+        assert_eq!(probe.width(), res.width as usize);
+    }
+    frames.extend(m.drain(sid).unwrap());
+    assert_eq!(frames, reference.frames);
+    m.close(sid).unwrap();
+    m.shutdown();
+}

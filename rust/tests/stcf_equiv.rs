@@ -9,10 +9,11 @@
 //! * band-sharded scoring ([`StcfShardPool`]) ≡ the serial
 //!   [`run_stcf`] bit-for-bit — scores and kept sets — including events
 //!   on band borders and halo configurations where the patch radius
-//!   exceeds the band height, for the ideal backend and mismatch-free
-//!   ISC configs at every shard count;
+//!   exceeds the band height, for both backends at every shard count,
+//!   **mismatch enabled**: position-stable assignment makes every band
+//!   array an exact window of the full-sensor array;
 //! * the coordinator pipeline emits identical frames whether the STCF
-//!   scores inline or on the shard pool (mismatch-free configs).
+//!   scores inline or on the shard pool.
 
 use tsisc::coordinator::{run_pipeline, PipelineConfig, RouterConfig};
 use tsisc::denoise::{
@@ -167,41 +168,44 @@ fn sharded_scoring_equals_serial_ideal_across_shard_counts() {
 }
 
 #[test]
-fn sharded_scoring_equals_serial_isc_mismatch_free() {
-    // With mismatch disabled every cell decays along the nominal curve,
-    // so band-local arrays are exact windows of the full-sensor array
-    // and sharded scoring must be bit-for-bit ≡ serial. (With mismatch
-    // enabled the per-shard maps differ by construction — the same
-    // caveat as the write router's per-shard seeds.)
+fn sharded_scoring_equals_serial_isc() {
+    // Position-stable mismatch assignment: band(+halo) arrays anchored
+    // at their global origin are exact windows of the full-sensor
+    // array, so sharded scoring is bit-for-bit ≡ serial for the default
+    // mismatch-enabled config — and, trivially, for `mismatch: None`.
     let res = Resolution::new(16, 16);
-    let cfg = IscConfig { mismatch: None, ..IscConfig::default() };
-    for polarity_sensitive in [false, true] {
-        let prm = StcfParams { polarity_sensitive, ..StcfParams::default() };
-        let cfg = IscConfig { polarity_sensitive, ..cfg.clone() };
-        let evs: Vec<LabeledEvent> = labeled(
-            &(0..400u64)
-                .map(|k| {
-                    Event::new(
-                        1 + k * 230,
-                        (k * 7 % 16) as u16,
-                        (k * 3 % 16) as u16,
-                        if k % 3 == 0 { Polarity::Off } else { Polarity::On },
-                    )
-                })
-                .collect::<Vec<_>>(),
-        );
-        let mut serial_b = StcfBackend::isc(res, cfg.clone(), prm.tau_tw_us);
-        let serial = run_stcf(&mut serial_b, &evs, &prm);
-        for shards in [2usize, 5, 8] {
-            let mut pool = StcfShardPool::new(res, shards, ShardBackend::Isc(cfg.clone()), prm);
-            let got = pool.run(&evs);
-            assert_eq!(got.scored, serial.scored, "ps={polarity_sensitive} shards={shards}");
-            assert_eq!(got.kept, serial.kept, "ps={polarity_sensitive} shards={shards}");
-            let tallies = pool.shutdown();
-            assert_eq!(
-                tallies.iter().map(|t| t.kept + t.dropped).sum::<u64>(),
-                evs.len() as u64
+    for base in [IscConfig::default(), IscConfig { mismatch: None, ..IscConfig::default() }] {
+        for polarity_sensitive in [false, true] {
+            let prm = StcfParams { polarity_sensitive, ..StcfParams::default() };
+            let cfg = IscConfig { polarity_sensitive, ..base.clone() };
+            let evs: Vec<LabeledEvent> = labeled(
+                &(0..400u64)
+                    .map(|k| {
+                        Event::new(
+                            1 + k * 230,
+                            (k * 7 % 16) as u16,
+                            (k * 3 % 16) as u16,
+                            if k % 3 == 0 { Polarity::Off } else { Polarity::On },
+                        )
+                    })
+                    .collect::<Vec<_>>(),
             );
+            let mm = base.mismatch.is_some();
+            let mut serial_b = StcfBackend::isc(res, cfg.clone(), prm.tau_tw_us);
+            let serial = run_stcf(&mut serial_b, &evs, &prm);
+            for shards in [2usize, 5, 8] {
+                let mut pool =
+                    StcfShardPool::new(res, shards, ShardBackend::Isc(cfg.clone()), prm);
+                let got = pool.run(&evs);
+                let ctx = format!("mm={mm} ps={polarity_sensitive} shards={shards}");
+                assert_eq!(got.scored, serial.scored, "{ctx}");
+                assert_eq!(got.kept, serial.kept, "{ctx}");
+                let tallies = pool.shutdown();
+                assert_eq!(
+                    tallies.iter().map(|t| t.kept + t.dropped).sum::<u64>(),
+                    evs.len() as u64
+                );
+            }
         }
     }
 }
@@ -236,8 +240,9 @@ fn radius_deeper_than_band_reaches_across_multiple_bands() {
 #[test]
 fn pipeline_frames_identical_inline_vs_sharded_denoise() {
     // End-to-end: same frames whether the STCF runs inline on the
-    // producer or fanned out over denoise shards (mismatch-free config
-    // so keep decisions are provably identical).
+    // producer or fanned out over denoise shards — with the default
+    // mismatch-enabled config, since position-stable assignment makes
+    // keep decisions layout-independent.
     let res = Resolution::new(32, 32);
     let evs: Vec<LabeledEvent> = labeled(
         &(0..1_500u64)
@@ -257,10 +262,7 @@ fn pipeline_frames_identical_inline_vs_sharded_denoise() {
             stcf: Some(StcfParams::default()),
             denoise_shards,
             batch_size: 200, // multiple flushes per window
-            router: RouterConfig {
-                isc: IscConfig { mismatch: None, ..IscConfig::default() },
-                ..RouterConfig::default()
-            },
+            router: RouterConfig { isc: IscConfig::default(), ..RouterConfig::default() },
             ..PipelineConfig::default()
         };
         let r = run_pipeline(evs.iter().copied(), res, 120_000, &cfg);
