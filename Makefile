@@ -1,31 +1,61 @@
 # Build / test / bench entry points. `make ci` is the tier-1 gate plus a
-# quick bench snapshot (BENCH_tsurface.json) so every PR leaves a perf
-# trajectory behind.
+# quick bench snapshot (BENCH_*.json) so every PR leaves a perf
+# trajectory behind. The deeper correctness gates — loom model checking,
+# Miri, ThreadSanitizer, the custom invariant lints — have their own
+# targets below and run as separate CI jobs.
 
 RUST_DIR := rust
 PYTHON := python3
 
-.PHONY: ci build test bench lint artifacts clean
+.PHONY: ci build test bench lint lint-invariants loom miri tsan artifacts clean
 
 ci:
 	./ci.sh
 
 build:
-	cd $(RUST_DIR) && cargo build --release
+	cargo build --release --workspace
 
 test:
-	cd $(RUST_DIR) && cargo test -q
+	cargo test -q --workspace
 
 # Style gate: formatting + clippy with warnings denied (mirrored by the
 # `lint` job in .github/workflows/ci.yml and invoked from ci.sh).
 lint:
-	cd $(RUST_DIR) && cargo fmt --check
-	cd $(RUST_DIR) && cargo clippy --all-targets -- -D warnings
+	cargo fmt --all --check
+	cargo clippy --workspace --all-targets -- -D warnings
 
-# Bench binaries use the in-repo harness (util::bench); bench_tsurface,
-# bench_router, bench_denoise and bench_serve additionally dump
-# BENCH_tsurface.json / BENCH_router.json / BENCH_denoise.json /
-# BENCH_serve.json next to the manifest.
+# Repo-specific invariants clippy cannot see (DecayLut hot-loop law,
+# bounded channels, SAFETY comments, pub docs in the concurrency stack,
+# origin_y band anchoring). See CONTRIBUTING.md and xtask/src/main.rs.
+lint-invariants:
+	cargo xtask lint-invariants
+
+# Exhaustive interleaving checks for the scheduler core and the bounded
+# channel (rust/tests/loom_sched.rs). loom is a cfg-gated dependency:
+# plain builds never compile it.
+loom:
+	cd $(RUST_DIR) && RUSTFLAGS="--cfg loom" cargo test --release --test loom_sched
+
+# Miri over the code that owns the crate's only unsafe block
+# (Grid::row_slabs_mut) and its scoped-thread consumers. Needs nightly:
+# rustup +nightly component add miri.
+miri:
+	cd $(RUST_DIR) && cargo +nightly miri test --lib util::grid util::parallel
+
+# ThreadSanitizer over the cross-thread equivalence suites (serve fleet
+# vs dedicated pipeline, sharded STCF vs sequential). Needs nightly and
+# a std built for the sanitizer (-Zbuild-std).
+tsan:
+	cd $(RUST_DIR) && RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+		cargo +nightly test -Zbuild-std --target x86_64-unknown-linux-gnu \
+		--release --test serve_equiv --test stcf_equiv
+
+# AOT-lower the JAX/Pallas kernels + models to HLO text artifacts for the
+# Rust PJRT runtime (no-op for pure-Rust development; the runtime tests
+# skip gracefully when artifacts are absent).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../$(RUST_DIR)/artifacts
+
 bench:
 	cd $(RUST_DIR) && cargo bench -- --quick
 	@for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json \
@@ -36,14 +66,8 @@ bench:
 		fi; \
 	done
 
-# AOT-lower the JAX/Pallas kernels + models to HLO text artifacts for the
-# Rust PJRT runtime (no-op for pure-Rust development; the runtime tests
-# skip gracefully when artifacts are absent).
-artifacts:
-	cd python && $(PYTHON) -m compile.aot --out-dir ../$(RUST_DIR)/artifacts
-
 clean:
-	cd $(RUST_DIR) && cargo clean
+	cargo clean
 	rm -f BENCH_tsurface.json $(RUST_DIR)/BENCH_tsurface.json \
 	      BENCH_router.json $(RUST_DIR)/BENCH_router.json \
 	      BENCH_denoise.json $(RUST_DIR)/BENCH_denoise.json \

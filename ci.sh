@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: release build + tests + quick bench snapshot.
+# Tier-1 CI gate: release build + tests + lint + quick bench snapshot.
 #
 # Emits BENCH_tsurface.json (ingest throughput, dense-vs-active readout,
 # the thread-count sweep with frames_per_sec and the dense-fallback α
@@ -8,6 +8,12 @@
 # sweep + denoise-shard scaling, events_per_sec) and BENCH_serve.json
 # (multi-tenant sessions × workers sweep, aggregate events_per_sec +
 # snapshot_p99_ms) at the repo root so successive PRs can be compared.
+# A missing or empty snapshot is a hard failure — a bench binary that
+# silently stopped emitting its JSON would otherwise erase the perf
+# trajectory without anyone noticing.
+#
+# Deeper gates (loom, miri, tsan) run as separate CI jobs; see the
+# Makefile targets of the same names.
 set -uo pipefail
 
 cd "$(dirname "$0")"
@@ -19,26 +25,21 @@ if ! command -v cargo >/dev/null 2>&1; then
 fi
 
 if [ ! -f rust/Cargo.toml ]; then
-    # The seed ships no manifest (deps `anyhow`/`xla` are unvendored), so
-    # tier-1 has been failing since PR 0 for reasons outside any one
-    # change. Report a loud SKIP instead of a permanently red gate; the
-    # moment a Cargo.toml lands (remember `[[bench]] harness = false`
-    # entries for rust/benches/*.rs, which define their own `fn main`),
-    # this script becomes the real build/test/bench gate with no further
-    # workflow edits.
-    echo "ci.sh: SKIP — rust/Cargo.toml does not exist yet (seed state)." >&2
-    echo "ci.sh: add the manifest to turn this gate on." >&2
-    exit 0
+    echo "ci.sh: FAIL — rust/Cargo.toml is missing (the workspace manifest is committed; a checkout without it is broken)." >&2
+    exit 1
 fi
 
 set -e
-echo "== cargo build --release =="
-(cd rust && cargo build --release)
+echo "== cargo build --release --workspace =="
+cargo build --release --workspace
 
-echo "== cargo test -q =="
-(cd rust && cargo test -q)
+echo "== cargo test -q --workspace =="
+cargo test -q --workspace
 
-echo "== lint (cargo fmt --check + clippy -D warnings) =="
+echo "== cargo xtask lint-invariants =="
+cargo run --quiet --package xtask -- lint-invariants
+
+echo "== lint (cargo fmt --all --check + clippy --workspace -D warnings) =="
 if cargo fmt --version >/dev/null 2>&1 && cargo clippy --version >/dev/null 2>&1; then
     make lint
 else
@@ -48,12 +49,15 @@ fi
 echo "== cargo bench (quick) =="
 (cd rust && cargo bench -- --quick)
 
+fail=0
 for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json BENCH_serve.json; do
-    if [ -f "rust/$snap" ]; then
+    if [ -s "rust/$snap" ]; then
         cp "rust/$snap" "$snap"
         echo "== bench snapshot: $snap =="
         cat "$snap"
     else
-        echo "ci.sh: warning — rust/$snap was not produced" >&2
+        echo "ci.sh: ERROR — rust/$snap is missing or empty (bench binary stopped emitting its snapshot)" >&2
+        fail=1
     fi
 done
+exit "$fail"

@@ -1,10 +1,20 @@
 //! PJRT artifact execution latency: the L1/L2 kernels and the train step
-//! as seen from the Rust hot path. Skips when artifacts are absent.
+//! as seen from the Rust hot path. Skips when artifacts are absent, and
+//! reduces to a skip stub when built without the `pjrt` feature.
 
+#[cfg(feature = "pjrt")]
 use tsisc::events::{Event, Polarity};
+#[cfg(feature = "pjrt")]
 use tsisc::runtime::{artifacts_available, default_artifact_dir, KernelTs, Runtime};
+#[cfg(feature = "pjrt")]
 use tsisc::util::bench::{bench, header};
 
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    println!("bench_runtime — SKIP: built without the `pjrt` feature");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     header("bench_runtime — AOT artifact execution (PJRT CPU)");
     if !artifacts_available() {

@@ -67,10 +67,12 @@ impl MicroBatcher {
         b
     }
 
+    /// Closed batches emitted so far.
     pub fn batches_emitted(&self) -> u64 {
         self.batches_emitted
     }
 
+    /// Events pushed so far.
     pub fn events_in(&self) -> u64 {
         self.events_in
     }

@@ -49,6 +49,10 @@
 //! bulk producers should call `Router::route_batch`; `Router::frame`
 //! gained an allocation-free `Router::frame_into` sibling.
 
+// Coordination code must surface failures as expects with context,
+// never bare unwraps (tests are exempt).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
+
 pub mod batcher;
 pub mod pipeline;
 pub mod router;

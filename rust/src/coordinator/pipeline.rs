@@ -93,6 +93,7 @@ pub struct DenoiseStats {
     pub per_shard: Vec<ShardTally>,
 }
 
+/// End-to-end accounting for one pipeline run.
 #[derive(Clone, Debug)]
 pub struct PipelineStats {
     pub events_in: u64,

@@ -17,8 +17,11 @@
 //! the shard's own previous band buffer, which the shard refreshes and
 //! returns, so a steady-state serving loop performs no per-frame buffer
 //! allocations (see [`Router::frame_into`]).
-//! std::thread + sync_channel (tokio is not available offline; bounded
-//! mpsc gives the same backpressure semantics deterministically).
+//! Threads + the bounded channel come from the loom-switchable
+//! [`crate::util::sync`] facade (tokio is not available offline;
+//! bounded mpsc gives the same backpressure semantics
+//! deterministically, and under `--cfg loom` the very same shard
+//! channel is model-checked).
 //!
 //! ## Dirty-band snapshots (PR 3)
 //!
@@ -61,8 +64,8 @@
 use crate::events::{Event, Resolution};
 use crate::isc::{IscArray, IscConfig};
 use crate::util::grid::Grid;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::thread::JoinHandle;
+use crate::util::sync::chan::{bounded, Sender};
+use crate::util::sync::thread::{self, JoinHandle};
 
 /// Router configuration.
 #[derive(Clone, Debug)]
@@ -94,7 +97,7 @@ enum ShardMsg {
     /// band provably cannot have changed, return the buffer untouched
     /// with `rendered: false` (an `Unchanged` reply). `cache_valid`
     /// promises `buf` still holds this shard's previous reply.
-    Snapshot { at_us: u64, buf: Grid<f64>, cache_valid: bool, reply: SyncSender<SnapReply> },
+    Snapshot { at_us: u64, buf: Grid<f64>, cache_valid: bool, reply: Sender<SnapReply> },
     Stop,
 }
 
@@ -226,8 +229,10 @@ impl BandWriter {
         // [`BandCache::empty_static`]).
         let unchanged = cached
             && !self.dirty
-            && (self.last_at == Some(at_us)
-                || (self.empty_static && at_us >= self.last_at.unwrap()));
+            && match self.last_at {
+                Some(last) => last == at_us || (self.empty_static && at_us >= last),
+                None => false,
+            };
         if !unchanged {
             if cached && self.dirty && self.last_at == Some(at_us) {
                 // Same query time: only rows written since the cached
@@ -270,7 +275,7 @@ pub struct RouterStats {
 
 /// The sharded router.
 pub struct Router {
-    senders: Vec<SyncSender<ShardMsg>>,
+    senders: Vec<Sender<ShardMsg>>,
     handles: Vec<JoinHandle<u64>>,
     res: Resolution,
     band_h: usize,
@@ -289,6 +294,8 @@ pub struct Router {
 }
 
 impl Router {
+    /// Start `cfg.n_shards` band worker threads over `res` (see
+    /// [`crate::util::parallel::band_layout`] for the effective count).
     pub fn new(res: Resolution, cfg: RouterConfig) -> Self {
         // Shared band math (`util::parallel::band_layout`): no shard owns
         // zero rows, and the STCF denoise shards cut identical bands.
@@ -296,8 +303,7 @@ impl Router {
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for shard in 0..n {
-            let (tx, rx): (SyncSender<ShardMsg>, Receiver<ShardMsg>) =
-                sync_channel(cfg.queue_depth.max(1));
+            let (tx, rx) = bounded::<ShardMsg>(cfg.queue_depth.max(1));
             let rows = band_h.min(res.height as usize - shard * band_h);
             let band_pixels = res.width as usize * rows;
             let isc_cfg = cfg.isc.clone();
@@ -309,7 +315,7 @@ impl Router {
                 use crate::util::parallel::{auto_chunks, available_threads};
                 auto_chunks(band_pixels).min((available_threads() / n).max(1))
             };
-            handles.push(std::thread::spawn(move || {
+            handles.push(thread::spawn(move || {
                 // The band-job core (shared with the serve scheduler,
                 // which drives the same struct from pooled workers).
                 let mut w = BandWriter::for_band(res, &isc_cfg, band_h, shard, render_chunks);
@@ -438,7 +444,7 @@ impl Router {
         let w = self.res.width as usize;
         out.ensure_shape(w, self.res.height as usize, 0.0);
         let n = self.senders.len();
-        let (tx, rx) = sync_channel(n);
+        let (tx, rx) = bounded::<SnapReply>(n);
         let mut in_flight = 0usize;
         for s in 0..n {
             let cache = &mut self.caches[s];
@@ -483,6 +489,7 @@ impl Router {
         }
     }
 
+    /// Events routed so far (staged or shipped).
     pub fn events_routed(&self) -> u64 {
         self.events_routed
     }
@@ -498,6 +505,7 @@ impl Router {
         self.bands_skipped_unchanged
     }
 
+    /// Effective shard count (≤ requested; see `band_layout`).
     pub fn n_shards(&self) -> usize {
         self.senders.len()
     }

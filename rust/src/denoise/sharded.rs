@@ -43,8 +43,8 @@ use crate::events::{Event, LabeledEvent, Resolution};
 use crate::isc::IscConfig;
 use crate::metrics::Scored;
 use crate::util::parallel::band_layout;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::thread::JoinHandle;
+use crate::util::sync::chan::{bounded, Receiver, Sender};
+use crate::util::sync::thread::{self, JoinHandle};
 
 /// How each denoise shard builds its band(+halo) backend.
 #[derive(Clone, Debug)]
@@ -205,7 +205,7 @@ struct Reply {
 /// through [`StcfShardPool::score_batch`] / [`StcfShardPool::filter_batch`],
 /// then [`StcfShardPool::shutdown`] for the tallies.
 pub struct StcfShardPool {
-    senders: Vec<SyncSender<Job>>,
+    senders: Vec<Sender<Job>>,
     handles: Vec<JoinHandle<ShardTally>>,
     reply_rx: Receiver<Reply>,
     res: Resolution,
@@ -226,14 +226,14 @@ impl StcfShardPool {
         let h = res.height as usize;
         let (band_h, n) = band_layout(h, n_shards);
         let radius = prm.radius as usize;
-        let (reply_tx, reply_rx) = sync_channel::<Reply>(n);
+        let (reply_tx, reply_rx) = bounded::<Reply>(n);
         let mut senders = Vec::with_capacity(n);
         let mut handles = Vec::with_capacity(n);
         for shard in 0..n {
-            let (tx, rx): (SyncSender<Job>, Receiver<Job>) = sync_channel(2);
+            let (tx, rx) = bounded::<Job>(2);
             let backend = backend.clone();
             let reply = reply_tx.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(thread::spawn(move || {
                 // Built on the worker so heavyweight setup (the ISC
                 // Monte-Carlo bank fit) also runs in parallel.
                 let mut scorer = BandScorer::for_band(res, &backend, prm, band_h, shard);

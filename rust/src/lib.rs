@@ -58,6 +58,7 @@ pub mod events;
 pub mod experiments;
 pub mod isc;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod recon;
 pub mod runtime;
 pub mod serve;

@@ -293,6 +293,16 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> i32 {
+    eprintln!(
+        "train: built without the `pjrt` feature — rebuild with \
+         `cargo build --features pjrt` (and run `make artifacts`)"
+    );
+    1
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> i32 {
     use tsisc::events::dataset::{generate, Family, GenOptions};
     use tsisc::isc::IscConfig;
@@ -351,15 +361,18 @@ fn cmd_train(args: &Args) -> i32 {
 }
 
 fn cmd_info() -> i32 {
-    use tsisc::runtime::{artifacts_available, default_artifact_dir, Runtime};
+    use tsisc::runtime::{artifacts_available, default_artifact_dir};
     println!("tsisc {} — 3DS-ISC reproduction", env!("CARGO_PKG_VERSION"));
     println!("artifact dir: {:?}", default_artifact_dir());
     println!("artifacts present: {}", artifacts_available());
+    #[cfg(feature = "pjrt")]
     if artifacts_available() {
-        match Runtime::new(default_artifact_dir()) {
+        match tsisc::runtime::Runtime::new(default_artifact_dir()) {
             Ok(rt) => println!("PJRT platform: {}", rt.platform()),
             Err(e) => println!("PJRT init failed: {e:#}"),
         }
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("PJRT platform: unavailable (built without the `pjrt` feature)");
     0
 }

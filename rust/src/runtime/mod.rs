@@ -1,11 +1,19 @@
 //! The PJRT runtime layer: artifact loading/execution ([`pjrt`]) and the
 //! kernel-backed time-surface state machine ([`surfaces`]). Python never
 //! runs here — artifacts were lowered once by `make artifacts`.
+//!
+//! Execution requires the `pjrt` cargo feature (pulls in the `xla`
+//! crate); without it only the artifact-location helpers below build, and
+//! artifact-backed experiments report themselves as skipped.
 
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(feature = "pjrt")]
 pub mod surfaces;
 
+#[cfg(feature = "pjrt")]
 pub use pjrt::{Executable, Runtime};
+#[cfg(feature = "pjrt")]
 pub use surfaces::KernelTs;
 
 /// Default artifact directory, resolvable from the repo root or target/.

@@ -69,6 +69,14 @@
 //! band array an exact window of the full-sensor array regardless of
 //! how sessions land on the fleet. `tests/serve_equiv.rs` asserts it
 //! across 1/4/16 concurrent sessions with mixed resolutions.
+//!
+//! The scheduling core itself (ready queue, at-most-once actor
+//! scheduling, hold gate) is the generic [`crate::util::actor`] pool,
+//! model-checked under loom — see `tests/loom_sched.rs`.
+
+// Serving code must surface failures as typed rejects or expects with
+// context, never bare unwraps (tests are exempt).
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 mod scheduler;
 pub mod session;

@@ -1,36 +1,33 @@
-//! The shared worker fleet: a fixed-size thread pool executing
-//! (session, band)-tagged jobs with per-band FIFO order and fair
-//! round-robin draining.
+//! The shared worker fleet: band semantics layered on the generic
+//! [`crate::util::actor::ActorPool`].
 //!
 //! Every band of every session is a [`BandActor`]: a job queue plus the
 //! band's state ([`crate::coordinator::router::BandWriter`] or
-//! [`crate::denoise::sharded::BandScorer`]). An actor sits in the
-//! pool's global ready queue **at most once** (the `scheduled` flag)
-//! and is processed by **at most one worker at a time**, so jobs on one
-//! band execute strictly in enqueue order — writes land before the
-//! snapshot that must observe them — while different bands (of the same
-//! or different sessions) run concurrently on however many workers the
-//! pool owns.
+//! [`crate::denoise::sharded::BandScorer`]). The scheduling invariants —
+//! each actor in the global ready queue at most once, strict per-band
+//! FIFO job order, one job per turn with round-robin re-queueing,
+//! hold-gated drain quiescence — live in the generic pool, where the
+//! loom models in `tests/loom_sched.rs` check them exhaustively. This
+//! module contributes only what is band-specific: the [`Job`] grammar,
+//! panic poisoning confined to one band, and the in-flight / open-band
+//! fleet gauges.
 //!
-//! Fairness: a worker takes an actor, runs **one** job, and re-queues
-//! the actor at the tail if more jobs remain. The ready queue therefore
-//! round-robins across every (session, band) with pending work — a hot
-//! camera flooding its own bands cannot starve the others; it only
-//! lengthens its own turnaround.
-//!
-//! Thread count is fixed at pool construction: sessions spawn no
-//! threads of their own (band renders run with `render_chunks = 1`), so
-//! the whole fleet is bounded by `workers`, not by session count.
+//! Jobs on one band execute strictly in enqueue order — writes land
+//! before the snapshot that must observe them — while different bands
+//! (of the same or different sessions) run concurrently on however many
+//! workers the pool owns. A hot camera flooding its own bands cannot
+//! starve the others; it only lengthens its own turnaround. Thread count
+//! is fixed at pool construction: sessions spawn no threads of their own
+//! (band renders run with `render_chunks = 1`), so the whole fleet is
+//! bounded by `workers`, not by session count.
 
 use crate::coordinator::router::{BandSnapshot, BandWriter};
 use crate::denoise::sharded::{BandScorer, ScoreItem, ShardTally};
 use crate::events::Event;
+use crate::util::actor::{Actor, ActorPool, Hold};
 use crate::util::grid::Grid;
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::SyncSender;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use crate::util::sync::chan::Sender;
+use crate::util::sync::{Arc, AtomicUsize, Ordering};
 
 /// Band-local state a job operates on (boxed: actors are long-lived,
 /// the enum is moved in and out of the actor on every job turn).
@@ -64,10 +61,12 @@ pub(crate) struct CloseDone {
 /// One queued unit of work, tagged by its (session, band) actor.
 pub(crate) enum Job {
     /// Apply a write batch (sensor-coordinate events) to the band array.
-    /// Fire-and-forget; counted against the session's in-flight bound.
+    /// Fire-and-forget; counted against the session's in-flight bound
+    /// (incremented by the session *before* enqueue, decremented by the
+    /// worker as the job completes).
     Write(Vec<Event>),
     /// Score a time-ordered item list causally and reply.
-    Score { items: Vec<ScoreItem>, reply: SyncSender<ScoreDone> },
+    Score { items: Vec<ScoreItem>, reply: Sender<ScoreDone> },
     /// Render (or certify unchanged) the band at `at_us` and reply with
     /// the recycled buffer — the dirty-band snapshot protocol, verbatim
     /// from the router.
@@ -76,48 +75,32 @@ pub(crate) enum Job {
         buf: Grid<f64>,
         cache_valid: bool,
         band: usize,
-        reply: SyncSender<SnapDone>,
+        reply: Sender<SnapDone>,
     },
     /// Drop the band state (freeing its arrays), report the final
     /// counters, and acknowledge.
-    Close { band: usize, reply: SyncSender<CloseDone> },
+    Close { band: usize, reply: Sender<CloseDone> },
 }
 
-/// One (session, band) actor: a FIFO of jobs plus the band state.
-pub(crate) struct BandActor {
-    inner: Mutex<ActorInner>,
+/// The per-actor slot handed to the job runner: the band state plus the
+/// two fleet gauges the runner maintains as jobs complete.
+pub(crate) struct BandSlot {
+    /// None after [`Job::Close`] ran or a job panicked (band is freed).
+    state: Option<BandState>,
     /// The owning session's in-flight write-batch gauge (admission
     /// control reads it; workers decrement it as write jobs complete).
     inflight: Arc<AtomicUsize>,
-    /// Fleet gauge of live band states (decremented by [`Job::Close`]).
+    /// Fleet gauge of live band states (decremented by [`Job::Close`]
+    /// and by panic poisoning).
     open_bands: Arc<AtomicUsize>,
 }
 
-struct ActorInner {
-    jobs: VecDeque<Job>,
-    /// True while the actor sits in the ready queue or on a worker.
-    scheduled: bool,
-    /// None after [`Job::Close`] ran (the band is freed).
-    state: Option<BandState>,
-}
+/// One (session, band) actor on the generic pool.
+pub(crate) type BandActor = Actor<BandSlot, Job>;
 
-struct ReadyQueue {
-    ready: VecDeque<Arc<BandActor>>,
-    /// Outstanding [`HoldGuard`]s: workers idle while > 0 (drain gate).
-    holds: usize,
-    shutdown: bool,
-}
-
-struct PoolShared {
-    queue: Mutex<ReadyQueue>,
-    cv: Condvar,
-    jobs_executed: AtomicU64,
-}
-
-/// The fixed worker fleet.
+/// The fixed worker fleet (a band-typed [`ActorPool`]).
 pub(crate) struct WorkerPool {
-    shared: Arc<PoolShared>,
-    handles: Vec<JoinHandle<()>>,
+    pool: ActorPool<BandSlot, Job>,
 }
 
 /// Pauses the worker fleet while alive (workers finish their current
@@ -125,37 +108,16 @@ pub(crate) struct WorkerPool {
 /// it resumes draining. Used to stage deterministic backpressure and
 /// for maintenance drains.
 pub struct HoldGuard {
-    shared: Arc<PoolShared>,
-}
-
-impl Drop for HoldGuard {
-    fn drop(&mut self) {
-        let mut q = self.shared.queue.lock().expect("pool lock");
-        q.holds -= 1;
-        if q.holds == 0 {
-            self.shared.cv.notify_all();
-        }
-    }
+    _hold: Hold<BandSlot, Job>,
 }
 
 impl WorkerPool {
     pub(crate) fn new(workers: usize) -> Self {
-        let shared = Arc::new(PoolShared {
-            queue: Mutex::new(ReadyQueue { ready: VecDeque::new(), holds: 0, shutdown: false }),
-            cv: Condvar::new(),
-            jobs_executed: AtomicU64::new(0),
-        });
-        let handles = (0..workers.max(1))
-            .map(|_| {
-                let shared = shared.clone();
-                std::thread::spawn(move || worker_loop(&shared))
-            })
-            .collect();
-        Self { shared, handles }
+        Self { pool: ActorPool::new(workers, execute) }
     }
 
     pub(crate) fn workers(&self) -> usize {
-        self.handles.len()
+        self.pool.workers()
     }
 
     /// Register a new band actor with the fleet gauges.
@@ -166,116 +128,35 @@ impl WorkerPool {
         open_bands: Arc<AtomicUsize>,
     ) -> Arc<BandActor> {
         open_bands.fetch_add(1, Ordering::SeqCst);
-        Arc::new(BandActor {
-            inner: Mutex::new(ActorInner {
-                jobs: VecDeque::new(),
-                scheduled: false,
-                state: Some(state),
-            }),
-            inflight,
-            open_bands,
-        })
+        self.pool.spawn_actor(BandSlot { state: Some(state), inflight, open_bands })
     }
 
     /// Enqueue `job` on `actor`'s FIFO; schedules the actor if idle.
     /// Never blocks on job execution — backpressure is the session
-    /// layer's admission check against the in-flight gauge.
+    /// layer's admission check against the in-flight gauge (which the
+    /// session bumps *before* enqueueing a [`Job::Write`]).
     pub(crate) fn enqueue(&self, actor: &Arc<BandActor>, job: Job) {
-        if matches!(job, Job::Write(_)) {
-            actor.inflight.fetch_add(1, Ordering::SeqCst);
-        }
-        let newly_scheduled = {
-            let mut inner = actor.inner.lock().expect("actor lock");
-            inner.jobs.push_back(job);
-            if inner.scheduled {
-                false
-            } else {
-                inner.scheduled = true;
-                true
-            }
-        };
-        if newly_scheduled {
-            let mut q = self.shared.queue.lock().expect("pool lock");
-            q.ready.push_back(actor.clone());
-            self.shared.cv.notify_one();
-        }
+        self.pool.enqueue(actor, job);
     }
 
     /// Jobs executed fleet-wide since construction.
     pub(crate) fn jobs_executed(&self) -> u64 {
-        self.shared.jobs_executed.load(Ordering::Relaxed)
+        self.pool.jobs_executed()
     }
 
     /// Actors currently waiting in the global ready queue.
     pub(crate) fn ready_depth(&self) -> usize {
-        self.shared.queue.lock().expect("pool lock").ready.len()
+        self.pool.ready_depth()
     }
 
     /// Pause draining until the guard drops (see [`HoldGuard`]).
     pub(crate) fn hold(&self) -> HoldGuard {
-        self.shared.queue.lock().expect("pool lock").holds += 1;
-        HoldGuard { shared: self.shared.clone() }
+        HoldGuard { _hold: self.pool.hold() }
     }
 
     /// Stop the fleet: workers drain every queued job, then exit.
-    pub(crate) fn shutdown(mut self) {
-        {
-            let mut q = self.shared.queue.lock().expect("pool lock");
-            q.shutdown = true;
-            self.shared.cv.notify_all();
-        }
-        for h in self.handles.drain(..) {
-            h.join().expect("join worker");
-        }
-    }
-}
-
-fn worker_loop(shared: &PoolShared) {
-    loop {
-        // Claim the next ready actor (or exit once shut down and dry).
-        // A hold gates new claims but never blocks shutdown drain.
-        let actor = {
-            let mut q = shared.queue.lock().expect("pool lock");
-            loop {
-                let gated = q.holds > 0 && !q.shutdown;
-                if !gated {
-                    if let Some(a) = q.ready.pop_front() {
-                        break a;
-                    }
-                    if q.shutdown {
-                        return;
-                    }
-                }
-                q = shared.cv.wait(q).expect("pool lock");
-            }
-        };
-        // Take one job plus the band state out of the actor, so enqueues
-        // from producer threads never block on job execution. The
-        // `scheduled` flag guarantees this worker owns the actor alone.
-        let (job, mut state) = {
-            let mut inner = actor.inner.lock().expect("actor lock");
-            let job = inner.jobs.pop_front().expect("scheduled actor has a job");
-            (job, inner.state.take())
-        };
-        execute(job, &mut state, &actor);
-        shared.jobs_executed.fetch_add(1, Ordering::Relaxed);
-        // Put the state back; one job per turn, re-queue at the tail if
-        // work remains (round-robin fairness across all bands).
-        let requeue = {
-            let mut inner = actor.inner.lock().expect("actor lock");
-            inner.state = state;
-            if inner.jobs.is_empty() {
-                inner.scheduled = false;
-                false
-            } else {
-                true
-            }
-        };
-        if requeue {
-            let mut q = shared.queue.lock().expect("pool lock");
-            q.ready.push_back(actor.clone());
-            shared.cv.notify_one();
-        }
+    pub(crate) fn shutdown(self) {
+        self.pool.shutdown();
     }
 }
 
@@ -286,41 +167,41 @@ fn worker_loop(shared: &PoolShared) {
 /// dedicated router's failure visibility (`expect("shard died")`) in
 /// queue form — the panic message still lands on stderr via the
 /// default hook.
-fn poison(state: &mut Option<BandState>, actor: &BandActor) {
-    if state.take().is_some() {
-        actor.open_bands.fetch_sub(1, Ordering::SeqCst);
+fn poison(slot: &mut BandSlot) {
+    if slot.state.take().is_some() {
+        slot.open_bands.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-fn execute(job: Job, state: &mut Option<BandState>, actor: &BandActor) {
+fn execute(job: Job, slot: &mut BandSlot) {
     use std::panic::{catch_unwind, AssertUnwindSafe};
     match job {
         Job::Write(mut batch) => {
-            if let Some(BandState::Writer(w)) = state {
+            if let Some(BandState::Writer(w)) = &mut slot.state {
                 if catch_unwind(AssertUnwindSafe(|| w.apply_batch(&mut batch))).is_err() {
-                    poison(state, actor);
+                    poison(slot);
                 }
             }
-            actor.inflight.fetch_sub(1, Ordering::SeqCst);
+            slot.inflight.fetch_sub(1, Ordering::SeqCst);
         }
         Job::Score { items, reply } => {
             let mut scores = Vec::new();
-            if let Some(BandState::Scorer(s)) = state {
+            if let Some(BandState::Scorer(s)) = &mut slot.state {
                 if catch_unwind(AssertUnwindSafe(|| s.process(&items, &mut scores))).is_err() {
-                    poison(state, actor);
+                    poison(slot);
                 }
             }
             let _ = reply.send(ScoreDone { scores });
         }
         Job::Snapshot { at_us, mut buf, cache_valid, band, reply } => {
             let mut out = BandSnapshot { rendered: false, empty_static: false };
-            if let Some(BandState::Writer(w)) = state {
+            if let Some(BandState::Writer(w)) = &mut slot.state {
                 let render = catch_unwind(AssertUnwindSafe(|| {
                     w.snapshot_into(&mut buf, at_us, cache_valid)
                 }));
                 match render {
                     Ok(o) => out = o,
-                    Err(_) => poison(state, actor),
+                    Err(_) => poison(slot),
                 }
             }
             let rendered = out.rendered;
@@ -328,19 +209,19 @@ fn execute(job: Job, state: &mut Option<BandState>, actor: &BandActor) {
             let _ = reply.send(SnapDone { band, buf, rendered, empty_static });
         }
         Job::Close { band, reply } => {
-            let (written, tally) = match state.take() {
+            let (written, tally) = match slot.state.take() {
                 Some(BandState::Writer(w)) => {
                     let n = w.events_written();
                     // Dropping `w` here frees the band's arrays — the
                     // fleet gauge reflects it before the ack lands.
                     drop(w);
-                    actor.open_bands.fetch_sub(1, Ordering::SeqCst);
+                    slot.open_bands.fetch_sub(1, Ordering::SeqCst);
                     (n, None)
                 }
                 Some(BandState::Scorer(s)) => {
                     let tally = s.tally().clone();
                     drop(s);
-                    actor.open_bands.fetch_sub(1, Ordering::SeqCst);
+                    slot.open_bands.fetch_sub(1, Ordering::SeqCst);
                     (0, Some(tally))
                 }
                 None => (0, None),

@@ -30,10 +30,9 @@ use crate::denoise::{support_count, StcfBackend, StcfParams};
 use crate::events::{Event, LabeledEvent, Resolution};
 use crate::util::grid::Grid;
 use crate::util::parallel::band_layout;
+use crate::util::sync::chan::bounded;
+use crate::util::sync::{Arc, AtomicUsize, Ordering};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::sync_channel;
-use std::sync::Arc;
 use std::time::Instant;
 
 /// Opaque session handle.
@@ -264,7 +263,7 @@ impl Session {
             &self.pre,
             &mut self.score_staging,
         );
-        let (tx, rx) = sync_channel::<ScoreDone>(n);
+        let (tx, rx) = bounded::<ScoreDone>(n);
         let mut in_flight = 0usize;
         for b in 0..n {
             if self.score_staging[b].is_empty() {
@@ -313,6 +312,9 @@ impl Session {
             }
             let batch = std::mem::take(&mut self.route_staging[s]);
             self.events_routed += batch.len() as u64;
+            // The in-flight gauge bumps before the job is visible to any
+            // worker, so admission control never undercounts.
+            self.inflight.fetch_add(1, Ordering::SeqCst);
             pool.enqueue(&self.write_actors[s], Job::Write(batch));
             self.batches_shipped += 1;
             self.band_dirty[s] = true;
@@ -330,7 +332,7 @@ impl Session {
         let w = self.cfg.res.width as usize;
         let mut out = Grid::new(w, self.cfg.res.height as usize, 0.0f64);
         let n = self.write_actors.len();
-        let (tx, rx) = sync_channel::<SnapDone>(n);
+        let (tx, rx) = bounded::<SnapDone>(n);
         let mut in_flight = 0usize;
         for s in 0..n {
             let cache = &mut self.caches[s];
@@ -410,6 +412,7 @@ pub struct SessionManager {
 }
 
 impl SessionManager {
+    /// Start a manager with a fresh fixed-size worker fleet.
     pub fn new(cfg: ServeConfig) -> Self {
         Self {
             pool: WorkerPool::new(cfg.workers),
@@ -592,7 +595,7 @@ impl SessionManager {
         let mut s =
             self.sessions.remove(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
         let n_actors = s.write_actors.len() + s.score_actors.len();
-        let (tx, rx) = sync_channel::<CloseDone>(n_actors);
+        let (tx, rx) = bounded::<CloseDone>(n_actors);
         for (b, actor) in s.write_actors.iter().enumerate() {
             self.pool.enqueue(actor, Job::Close { band: b, reply: tx.clone() });
         }

@@ -5,8 +5,10 @@
 //! event count, TORE…) → 32×32 inputs → the AOT `classifier_train`
 //! artifact executed in a loop by this Rust driver. Python never runs.
 
+#[cfg(feature = "pjrt")]
 pub mod driver;
 pub mod frames;
 
+#[cfg(feature = "pjrt")]
 pub use driver::{train_classifier, TrainConfig, TrainResult};
 pub use frames::{build_frames, FrameSet, SurfaceKind};

@@ -3,10 +3,13 @@
 //! `statrs`, and `proptest`), and the readout kernels shared by every
 //! decaying representation: the quantized decay LUT ([`decay`]), the
 //! per-row active-pixel tracker ([`active`]), the epoch-bucketed recency
-//! bitmask planes backing the STCF support fast path ([`bitplane`]) and
-//! the scoped-thread row parallelism helpers ([`parallel`]).
+//! bitmask planes backing the STCF support fast path ([`bitplane`]), the
+//! scoped-thread row parallelism helpers ([`parallel`]), the
+//! loom-switchable concurrency facade ([`sync`]) and the generic
+//! per-actor-FIFO worker pool behind the serve scheduler ([`actor`]).
 
 pub mod active;
+pub mod actor;
 pub mod bench;
 pub mod bitplane;
 pub mod check;
@@ -17,3 +20,4 @@ pub mod image;
 pub mod parallel;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -182,6 +182,50 @@ mod tests {
     }
 
     #[test]
+    fn zero_rows_yields_no_ranges() {
+        // A fully inactive frame (no weights at all) partitions to
+        // nothing — callers render no chunks rather than spawning
+        // threads over an empty cover.
+        assert!(balanced_row_ranges(&[], 4).is_empty());
+        assert!(balanced_row_ranges(&[], 1).is_empty());
+    }
+
+    #[test]
+    fn zero_chunks_clamps_to_one() {
+        let ranges = balanced_row_ranges(&[2, 2, 2], 0);
+        assert_eq!(ranges, vec![0..3]);
+    }
+
+    #[test]
+    fn one_row_many_chunks_degenerates_to_one_range() {
+        let ranges = balanced_row_ranges(&[42], 16);
+        assert_eq!(ranges, vec![0..1]);
+    }
+
+    #[test]
+    fn extreme_skew_never_produces_empty_ranges() {
+        // One enormous row at each end, nothing between: the prefix-cut
+        // targets all collapse onto the ends, which must not starve the
+        // middle chunks of their guaranteed row.
+        let mut w = vec![0usize; 10];
+        w[0] = 1_000_000;
+        w[9] = 1_000_000;
+        let ranges = balanced_row_ranges(&w, 5);
+        cover_ok(&ranges, 10);
+    }
+
+    #[test]
+    fn empty_range_list_renders_nothing() {
+        // The `balanced_row_ranges(&[], _)` cover: no chunks, renderer
+        // never runs, grid untouched.
+        let mut g = Grid::new(4, 3, 7i64);
+        for_each_row_chunk(&mut g, &[], |_range, _slab| {
+            panic!("no ranges — renderer must never run");
+        });
+        assert!(g.as_slice().iter().all(|&v| v == 7));
+    }
+
+    #[test]
     fn row_chunks_write_disjoint_slabs() {
         let mut g = Grid::new(4, 9, 0i64);
         let ranges = balanced_row_ranges(&[1; 9], 3);

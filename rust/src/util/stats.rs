@@ -32,9 +32,13 @@ pub fn cv_percent(xs: &[f64]) -> f64 {
     100.0 * stddev(xs) / m.abs()
 }
 
-/// p-th percentile (linear interpolation), p in [0, 100].
+/// p-th percentile (linear interpolation), p in [0, 100]. Empty input
+/// yields 0.0 so latency gauges over idle rings read as zero rather
+/// than panicking mid-serve.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    assert!(!xs.is_empty());
+    if xs.is_empty() {
+        return 0.0;
+    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pos = (p / 100.0) * (v.len() - 1) as f64;
@@ -177,6 +181,46 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 5.0);
         assert_eq!(percentile(&xs, 0.0), 0.0);
         assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn percentile_empty_ring_reads_zero() {
+        // An idle latency ring must gauge as 0, not panic (serve layer
+        // polls p50/p99 before the first batch completes).
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_sample_is_every_percentile() {
+        let xs = [7.25];
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), 7.25);
+        }
+    }
+
+    #[test]
+    fn p99_on_tiny_rings_interpolates_toward_max() {
+        // Two samples: p99 sits 99% of the way to the max.
+        let xs = [0.0, 100.0];
+        assert!((percentile(&xs, 99.0) - 99.0).abs() < 1e-12);
+        // Three samples: pos = 1.98 → between v[1] and v[2].
+        let xs = [10.0, 20.0, 30.0];
+        assert!((percentile(&xs, 99.0) - 29.8).abs() < 1e-12);
+        // p99 never exceeds the max on any tiny ring.
+        for n in 1..=8usize {
+            let v: Vec<f64> = (0..n).map(|i| i as f64).collect();
+            assert!(percentile(&v, 99.0) <= (n - 1) as f64);
+        }
+    }
+
+    #[test]
+    fn percentile_sorts_unsorted_input() {
+        let xs = [5.0, 1.0, 4.0, 2.0, 3.0];
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Loom-switchable concurrency primitives — the single import point for
+//! every lock, condvar, atomic, thread spawn and channel in the
+//! concurrency stack ([`crate::serve`], [`crate::coordinator::router`],
+//! [`crate::denoise::sharded`], [`crate::util::actor`]).
+//!
+//! Built normally, everything re-exports `std::sync` / `std::thread`
+//! verbatim — zero overhead, zero behavior change. Built with
+//! `RUSTFLAGS="--cfg loom"`, the same names resolve to
+//! [loom](https://docs.rs/loom)'s modeled primitives, so the loom models
+//! in `tests/loom_sched.rs` exhaustively explore thread interleavings of
+//! the **real** scheduler and channel code — not a re-implementation.
+//! That is what upgrades the repo's sharded ≡ serial equivalence story
+//! from "hand-reviewed" to "model-checked": the at-most-once-scheduled
+//! actor invariant, per-band FIFO order, drain quiescence and
+//! park/unpark wakeup correctness are all explored exhaustively under
+//! `--cfg loom` (see `make loom`).
+//!
+//! Repo law (enforced by `cargo xtask lint-invariants`): concurrency
+//! code imports these names from here, never from `std::sync` directly,
+//! and never constructs an **unbounded** queue — [`chan`] is bounded by
+//! construction, which is why backpressure propagates instead of
+//! buffering a hot producer unboundedly.
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Thread spawn/join, loom-switched like the rest of the facade.
+pub mod thread {
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, JoinHandle};
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, JoinHandle};
+}
+
+pub mod chan {
+    //! A bounded MPSC channel on the loom-switchable facade.
+    //!
+    //! Semantically a subset of `std::sync::mpsc::sync_channel`:
+    //! [`Sender::send`] blocks while the queue sits at capacity
+    //! (backpressure propagates to the producer) and errs once the
+    //! receiver is gone; [`Receiver::recv`] blocks while empty and errs
+    //! once every sender is gone; iteration ends on disconnect. The
+    //! whole concurrency stack uses this instead of `std::sync::mpsc`
+    //! so (a) the loom models exercise the exact channel the shards
+    //! run on, and (b) the bounded-queue law is structural — there is
+    //! no unbounded constructor to reach for.
+
+    use super::{Arc, Condvar, Mutex};
+    use std::collections::VecDeque;
+    use std::fmt;
+
+    /// `send` on a channel whose receiver was dropped; returns the
+    /// unsent value.
+    pub struct SendError<T>(pub T);
+
+    impl<T> fmt::Debug for SendError<T> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("SendError(receiver dropped)")
+        }
+    }
+
+    /// `recv` on an empty channel whose senders were all dropped.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub struct RecvError;
+
+    struct Inner<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        rx_alive: bool,
+    }
+
+    struct Shared<T> {
+        cap: usize,
+        inner: Mutex<Inner<T>>,
+        /// Signaled on push and on last-sender drop (wakes `recv`).
+        not_empty: Condvar,
+        /// Signaled on pop and on receiver drop (wakes blocked `send`).
+        not_full: Condvar,
+    }
+
+    /// The producing half (cloneable — MPSC).
+    pub struct Sender<T> {
+        shared: Arc<Shared<T>>,
+    }
+
+    /// The consuming half (single consumer).
+    pub struct Receiver<T> {
+        shared: Arc<Shared<T>>,
+    }
+
+    /// A bounded channel with room for `cap.max(1)` queued values.
+    pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+        let shared = Arc::new(Shared {
+            cap: cap.max(1),
+            inner: Mutex::new(Inner { queue: VecDeque::new(), senders: 1, rx_alive: true }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        });
+        (Sender { shared: shared.clone() }, Receiver { shared })
+    }
+
+    impl<T> Sender<T> {
+        /// Queue `value`, blocking while the channel is full. Errs (and
+        /// hands the value back) once the receiver is dropped — senders
+        /// blocked in `send` are woken and err too, so producers never
+        /// wedge on an abandoned channel.
+        pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+            let mut inner = self.shared.inner.lock().expect("chan lock");
+            loop {
+                if !inner.rx_alive {
+                    return Err(SendError(value));
+                }
+                if inner.queue.len() < self.shared.cap {
+                    break;
+                }
+                inner = self.shared.not_full.wait(inner).expect("chan lock");
+            }
+            inner.queue.push_back(value);
+            drop(inner);
+            self.shared.not_empty.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            let mut inner = self.shared.inner.lock().expect("chan lock");
+            inner.senders += 1;
+            drop(inner);
+            Sender { shared: self.shared.clone() }
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut inner = self.shared.inner.lock().expect("chan lock");
+            inner.senders -= 1;
+            let disconnected = inner.senders == 0;
+            drop(inner);
+            if disconnected {
+                // The receiver may be parked in `recv` waiting for a
+                // value that will never come.
+                self.shared.not_empty.notify_all();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Dequeue the next value, blocking while the channel is empty.
+        /// Errs once the channel is both empty and sender-less.
+        pub fn recv(&self) -> Result<T, RecvError> {
+            let mut inner = self.shared.inner.lock().expect("chan lock");
+            loop {
+                if let Some(v) = inner.queue.pop_front() {
+                    drop(inner);
+                    self.shared.not_full.notify_one();
+                    return Ok(v);
+                }
+                if inner.senders == 0 {
+                    return Err(RecvError);
+                }
+                inner = self.shared.not_empty.wait(inner).expect("chan lock");
+            }
+        }
+
+        /// Blocking iterator over received values; ends on disconnect.
+        pub fn iter(&self) -> Iter<'_, T> {
+            Iter { rx: self }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            let mut inner = self.shared.inner.lock().expect("chan lock");
+            inner.rx_alive = false;
+            drop(inner);
+            // Senders may be parked in `send` waiting for room.
+            self.shared.not_full.notify_all();
+        }
+    }
+
+    /// See [`Receiver::iter`].
+    pub struct Iter<'a, T> {
+        rx: &'a Receiver<T>,
+    }
+
+    impl<T> Iterator for Iter<'_, T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+
+    /// Owning blocking iterator (`for msg in rx`); ends on disconnect.
+    pub struct IntoIter<T> {
+        rx: Receiver<T>,
+    }
+
+    impl<T> Iterator for IntoIter<T> {
+        type Item = T;
+        fn next(&mut self) -> Option<T> {
+            self.rx.recv().ok()
+        }
+    }
+
+    impl<T> IntoIterator for Receiver<T> {
+        type Item = T;
+        type IntoIter = IntoIter<T>;
+        fn into_iter(self) -> IntoIter<T> {
+            IntoIter { rx: self }
+        }
+    }
+
+    impl<'a, T> IntoIterator for &'a Receiver<T> {
+        type Item = T;
+        type IntoIter = Iter<'a, T>;
+        fn into_iter(self) -> Iter<'a, T> {
+            self.iter()
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::chan;
+
+    #[test]
+    fn fifo_within_one_sender() {
+        let (tx, rx) = chan::bounded(8);
+        for k in 0..5 {
+            tx.send(k).expect("send");
+        }
+        drop(tx);
+        let got: Vec<i32> = rx.iter().collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn recv_errs_after_all_senders_drop() {
+        let (tx, rx) = chan::bounded::<u8>(2);
+        let tx2 = tx.clone();
+        drop(tx);
+        tx2.send(7).expect("send");
+        drop(tx2);
+        assert_eq!(rx.recv(), Ok(7));
+        assert_eq!(rx.recv(), Err(chan::RecvError));
+    }
+
+    #[test]
+    fn send_errs_after_receiver_drop() {
+        let (tx, rx) = chan::bounded(2);
+        drop(rx);
+        assert!(tx.send(1).is_err(), "send to a dropped receiver must err");
+    }
+
+    #[test]
+    fn capacity_blocks_until_consumed() {
+        let (tx, rx) = chan::bounded(1);
+        tx.send(1u64).expect("send");
+        // The second send must block until the consumer drains one slot;
+        // run it on a helper thread and unblock it from here.
+        let h = std::thread::spawn(move || tx.send(2).expect("send"));
+        assert_eq!(rx.recv(), Ok(1));
+        assert_eq!(rx.recv(), Ok(2));
+        h.join().expect("join");
+        assert_eq!(rx.recv(), Err(chan::RecvError));
+    }
+
+    #[test]
+    fn blocked_sender_wakes_on_receiver_drop() {
+        let (tx, rx) = chan::bounded(1);
+        tx.send(1u8).expect("send");
+        let h = std::thread::spawn(move || tx.send(2).is_err());
+        // Dropping the receiver must wake the parked sender with an error
+        // instead of wedging it forever.
+        drop(rx);
+        assert!(h.join().expect("join"), "parked sender must err after rx drop");
+    }
+
+    #[test]
+    fn many_producers_conserve_messages() {
+        let (tx, rx) = chan::bounded(4);
+        let handles: Vec<_> = (0..4u64)
+            .map(|p| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for k in 0..25u64 {
+                        tx.send(p * 100 + k).expect("send");
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let mut got: Vec<u64> = rx.iter().collect();
+        for h in handles {
+            h.join().expect("join");
+        }
+        assert_eq!(got.len(), 100);
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 100, "no message lost or duplicated");
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let (tx, rx) = chan::bounded(0);
+        tx.send(42).expect("send");
+        assert_eq!(rx.recv(), Ok(42));
+    }
+}

@@ -2,7 +2,10 @@
 //! produce a non-trivial report (table2/table3 need artifacts and are
 //! exercised when present).
 
-use tsisc::experiments::{find, Effort, ALL};
+use tsisc::experiments::{Effort, ALL};
+#[cfg(feature = "pjrt")]
+use tsisc::experiments::find;
+#[cfg(feature = "pjrt")]
 use tsisc::runtime::artifacts_available;
 
 #[test]
@@ -17,6 +20,7 @@ fn all_cheap_experiments_produce_reports() {
     }
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn table2_runs_when_artifacts_present() {
     if !artifacts_available() {
@@ -28,6 +32,7 @@ fn table2_runs_when_artifacts_present() {
     assert!(report.contains("3DS-ISC"));
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn table3_runs_when_artifacts_present() {
     if !artifacts_available() {

@@ -1,0 +1,191 @@
+//! Loom model checks for the scheduler core and the bounded channel.
+//!
+//! Built only under `RUSTFLAGS="--cfg loom"` (`make loom`), where the
+//! `util::sync` facade resolves to loom's modeled primitives and loom
+//! exhaustively explores the thread interleavings of each model. Because
+//! `util::actor::ActorPool` *is* the serve scheduler's core (the serve
+//! layer only adds the band job grammar on top), these models check the
+//! production queue logic, not a re-implementation:
+//!
+//! * an actor is processed by at most one worker at a time (the
+//!   at-most-once-scheduled invariant);
+//! * jobs on one actor execute strictly in enqueue order (per-band FIFO);
+//! * a held pool starts no job, and releasing the last hold drains
+//!   everything (drain quiescence, no lost hold-release wakeup);
+//! * `shutdown` drains queued jobs even while a hold is live;
+//! * an enqueue against a parked worker always wakes it (no lost
+//!   wakeup — loom's deadlock detection fails the model otherwise);
+//! * the bounded channel neither loses nor duplicates values, preserves
+//!   FIFO order, and never wedges a sender on a dropped receiver.
+//!
+//! Panic poisoning (a band job panicking must only kill its own band) is
+//! a serve-layer concern built on `catch_unwind`, which loom does not
+//! model — it is exercised by the non-loom scheduler/session tests.
+//!
+//! Models stay tiny (≤ 2 workers, ≤ 3 jobs) on purpose: loom's state
+//! space is exponential in threads × sync operations.
+
+#![cfg(loom)]
+
+use tsisc::util::actor::ActorPool;
+use tsisc::util::sync::chan;
+use tsisc::util::sync::{Arc, AtomicU64, AtomicUsize, Ordering};
+
+/// Two workers racing over one actor with two queued jobs: the runner
+/// asserts it is never concurrently active for the actor (at-most-once
+/// scheduled ⇒ at most one worker owns the actor), and that job ids
+/// arrive in enqueue order (per-actor FIFO) even when the two jobs are
+/// executed by different workers.
+#[test]
+fn actor_never_runs_concurrently_and_stays_fifo() {
+    loom::model(|| {
+        let active = Arc::new(AtomicUsize::new(0));
+        let last_seen = Arc::new(AtomicU64::new(0));
+        let (active2, last2) = (active.clone(), last_seen.clone());
+        let pool = ActorPool::new(2, move |job: u64, _slot: &mut ()| {
+            let was = active2.fetch_add(1, Ordering::SeqCst);
+            assert_eq!(was, 0, "two workers ran the same actor concurrently");
+            let prev = last2.swap(job, Ordering::SeqCst);
+            assert!(prev < job, "jobs reordered within one actor: {prev} then {job}");
+            active2.fetch_sub(1, Ordering::SeqCst);
+        });
+        let a = pool.spawn_actor(());
+        pool.enqueue(&a, 1);
+        pool.enqueue(&a, 2);
+        pool.shutdown();
+        assert_eq!(last_seen.load(Ordering::SeqCst), 2, "a job was lost");
+    });
+}
+
+/// A producer thread enqueues concurrently with the main thread: FIFO
+/// holds per actor regardless of which thread enqueued first (each
+/// thread's own jobs stay ordered; here each enqueues to its own actor
+/// so the global order is unconstrained but per-actor order is exact).
+#[test]
+fn concurrent_producers_keep_their_own_actor_fifo() {
+    loom::model(|| {
+        let last_a = Arc::new(AtomicU64::new(0));
+        let last_b = Arc::new(AtomicU64::new(100));
+        let (la, lb) = (last_a.clone(), last_b.clone());
+        // The pool object itself is shared with a plain std Arc: the
+        // refcount is not the synchronization under test (everything
+        // inside the pool is on loom primitives), and loom's join gives
+        // the needed happens-before for the final drop.
+        let pool = std::sync::Arc::new(ActorPool::new(1, move |job: u64, slot: &mut u8| {
+            let last = if *slot == 0 { &la } else { &lb };
+            let prev = last.swap(job, Ordering::SeqCst);
+            assert!(prev < job, "per-actor FIFO broken: {prev} then {job}");
+        }));
+        let a = pool.spawn_actor(0u8);
+        let b = pool.spawn_actor(1u8);
+        let (pool2, b2) = (pool.clone(), b.clone());
+        let producer = tsisc::util::sync::thread::spawn(move || {
+            pool2.enqueue(&b2, 101);
+            pool2.enqueue(&b2, 102);
+        });
+        pool.enqueue(&a, 1);
+        pool.enqueue(&a, 2);
+        producer.join().expect("join producer");
+        match std::sync::Arc::try_unwrap(pool) {
+            Ok(p) => p.shutdown(),
+            Err(_) => panic!("pool still shared"),
+        }
+        assert_eq!(last_a.load(Ordering::SeqCst), 2);
+        assert_eq!(last_b.load(Ordering::SeqCst), 102);
+    });
+}
+
+/// Drain quiescence: while a hold is live no job starts, whatever the
+/// interleaving; dropping the hold releases the drain and shutdown
+/// observes every job executed (hold release can never lose a wakeup).
+#[test]
+fn hold_quiesces_then_release_drains() {
+    loom::model(|| {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = ran.clone();
+        let pool = ActorPool::new(1, move |_job: u8, _slot: &mut ()| {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        let a = pool.spawn_actor(());
+        let hold = pool.hold();
+        pool.enqueue(&a, 1);
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "held pool started a job");
+        drop(hold);
+        pool.shutdown();
+        assert_eq!(ran.load(Ordering::SeqCst), 1, "release failed to drain");
+    });
+}
+
+/// Shutdown must drain queued jobs even while a hold is still alive —
+/// otherwise a crashed hold owner would wedge every close/drain reply.
+#[test]
+fn shutdown_drains_despite_live_hold() {
+    loom::model(|| {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let ran2 = ran.clone();
+        let pool = ActorPool::new(1, move |_job: u8, _slot: &mut ()| {
+            ran2.fetch_add(1, Ordering::SeqCst);
+        });
+        let a = pool.spawn_actor(());
+        let _hold = pool.hold();
+        pool.enqueue(&a, 1);
+        pool.shutdown();
+        assert_eq!(ran.load(Ordering::SeqCst), 1);
+    });
+}
+
+/// No lost wakeup on worker park: the worker may already be parked in
+/// the condvar when the producer enqueues; the job's reply must still
+/// arrive. A lost wakeup deadlocks `recv` and loom's deadlock detection
+/// fails the model.
+#[test]
+fn enqueue_always_wakes_a_parked_worker() {
+    loom::model(|| {
+        let (done_tx, done_rx) = chan::bounded::<u8>(1);
+        let pool = ActorPool::new(1, move |job: u8, _slot: &mut ()| {
+            done_tx.send(job).expect("reply");
+        });
+        let a = pool.spawn_actor(());
+        pool.enqueue(&a, 7);
+        assert_eq!(done_rx.recv(), Ok(7), "job never executed");
+        pool.shutdown();
+    });
+}
+
+/// The bounded channel conserves values and preserves order across a
+/// producer/consumer interleaving at capacity 1 (every send after the
+/// first must block until the consumer drains a slot).
+#[test]
+fn chan_conserves_and_orders_at_capacity_one() {
+    loom::model(|| {
+        let (tx, rx) = chan::bounded::<u8>(1);
+        let producer = tsisc::util::sync::thread::spawn(move || {
+            for k in 1..=3u8 {
+                tx.send(k).expect("send");
+            }
+        });
+        for k in 1..=3u8 {
+            assert_eq!(rx.recv(), Ok(k), "value lost or reordered");
+        }
+        assert_eq!(rx.recv(), Err(chan::RecvError), "disconnect not observed");
+        producer.join().expect("join");
+    });
+}
+
+/// Dropping the receiver must wake a sender parked on a full channel
+/// with an error — a wedged sender here is a wedged shard thread.
+#[test]
+fn chan_receiver_drop_frees_blocked_sender() {
+    loom::model(|| {
+        let (tx, rx) = chan::bounded::<u8>(1);
+        let producer = tsisc::util::sync::thread::spawn(move || {
+            // First send fills the slot (or errs if rx already dropped);
+            // the second must return — blocked-then-error or immediate
+            // error — never hang.
+            let _ = tx.send(1);
+            assert!(tx.send(2).is_err(), "send must err once rx is gone");
+        });
+        drop(rx);
+        producer.join().expect("join");
+    });
+}

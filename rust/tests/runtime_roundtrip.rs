@@ -3,6 +3,9 @@
 //! train artifacts step without degenerating.
 //!
 //! Requires `make artifacts`; tests skip loudly when artifacts are absent.
+//! The whole suite is compiled out without the `pjrt` feature.
+
+#![cfg(feature = "pjrt")]
 
 use tsisc::events::{Event, Polarity};
 use tsisc::runtime::{artifacts_available, default_artifact_dir, KernelTs, Runtime};

@@ -1,0 +1,641 @@
+//! `cargo xtask lint-invariants` — custom lints encoding repo law that
+//! clippy cannot see. One rule per invariant documented in
+//! CONTRIBUTING.md:
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `transcendental-in-hot-loop` | no `exp`/`ln`/`powf` inside `frame*` / `support_count*` functions — readout math goes through the quantized `DecayLut`, never `libm` (the PR-2 contract) |
+//! | `unbounded-channel` | no unbounded queue constructors anywhere — concurrency code uses the bounded `util::sync::chan` so backpressure propagates structurally |
+//! | `missing-safety-comment` | every `unsafe` carries a `// SAFETY:` comment on the same or one of the 3 preceding lines |
+//! | `undocumented-pub-item` | every pub fn/struct/enum/trait/type/const/static in `serve`/`coordinator`/`denoise` has a doc comment |
+//! | `unanchored-band-array` | band-scoped array construction anchors with `IscConfig::origin_y`; no raw `y - band_start` rebasing |
+//!
+//! The scanners are deliberately line-based over rustfmt-shaped source —
+//! dependency-free, so the suite builds in offline containers. Each rule
+//! is a pure function `(path, source) -> Vec<Violation>` (unit-tested on
+//! seeded violations below); `main` only walks `rust/src` and prints.
+//!
+//! Suppress a finding by putting `lint-invariants: allow(<rule>)` in a
+//! comment on the flagged line or the line directly above it.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// One lint finding.
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    /// 1-indexed.
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Drop the `// …` tail of a line (doc comments included). Naive on
+/// purpose: no string in this codebase embeds `//`, and a false strip
+/// inside a string could only hide a violation in dead text.
+fn strip_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// `lint-invariants: allow(<rule>)` on this line or the one above it.
+fn suppressed(lines: &[&str], idx: usize, rule: &str) -> bool {
+    let tag = format!("lint-invariants: allow({rule})");
+    lines[idx].contains(&tag) || (idx > 0 && lines[idx - 1].contains(&tag))
+}
+
+/// Locate the function whose header sits on `lines[start]` and return
+/// the line range of its body (header line through closing brace,
+/// inclusive), or None for a bodyless declaration. Rustfmt shape
+/// assumed: braces never hide inside strings on the same line as code
+/// this scanner cares about.
+fn fn_body_range(lines: &[&str], start: usize) -> Option<(usize, usize)> {
+    let mut depth: i64 = 0;
+    let mut started = false;
+    for (j, raw) in lines.iter().enumerate().skip(start) {
+        let code = strip_comment(raw);
+        // A declaration that ends before any `{` has no body.
+        if !started && code.contains(';') && !code.contains('{') {
+            return None;
+        }
+        for c in code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    started = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started && depth <= 0 {
+            return Some((start, j));
+        }
+    }
+    None
+}
+
+/// The name declared by `fn <name>` on this line, if any.
+fn fn_name(code: &str) -> Option<&str> {
+    let i = code.find("fn ")?;
+    // Reject identifiers ending in `fn` (e.g. `pub fnord`): `fn` must
+    // start the line or follow a non-ident character.
+    if i > 0 {
+        let prev = code.as_bytes()[i - 1];
+        if prev != b' ' && prev != b'(' {
+            return None;
+        }
+    }
+    let rest = &code[i + 3..];
+    let end = rest
+        .find(|c: char| !(c.is_alphanumeric() || c == '_'))
+        .unwrap_or(rest.len());
+    if end == 0 {
+        None
+    } else {
+        Some(&rest[..end])
+    }
+}
+
+const TRANSCENDENTALS: &[&str] = &[".exp(", ".exp2(", ".ln(", ".ln_1p(", ".powf("];
+
+/// DecayLut hot-loop law: `frame*` and `support_count*` functions are
+/// the readout hot paths — any per-pixel transcendental there is the
+/// O(H·W) `libm` cost the quantized decay LUT exists to remove.
+fn check_hot_loop_transcendentals(path: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        let code = strip_comment(lines[i]);
+        let hot = fn_name(code)
+            .map(|n| n.starts_with("frame") || n.starts_with("support_count"))
+            .unwrap_or(false);
+        if !hot {
+            i += 1;
+            continue;
+        }
+        let Some((lo, hi)) = fn_body_range(&lines, i) else {
+            i += 1;
+            continue;
+        };
+        for (j, raw) in lines.iter().enumerate().take(hi + 1).skip(lo) {
+            let body = strip_comment(raw);
+            for tok in TRANSCENDENTALS {
+                if body.contains(tok) && !suppressed(&lines, j, "transcendental-in-hot-loop") {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line: j + 1,
+                        rule: "transcendental-in-hot-loop",
+                        msg: format!(
+                            "`{tok}` inside hot readout fn — use the DecayLut, \
+                             or hoist the call out of the per-pixel path"
+                        ),
+                    });
+                }
+            }
+        }
+        i = hi + 1;
+    }
+    out
+}
+
+const UNBOUNDED: &[&str] =
+    &["std::sync::mpsc", "mpsc::channel(", "unbounded_channel", "::unbounded("];
+
+/// Bounded-queue law: every queue in the tree is bounded so backpressure
+/// propagates to producers instead of buffering a hot camera stream
+/// unboundedly. `util::sync::chan` is the one sanctioned channel.
+fn check_unbounded_channels(path: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        for tok in UNBOUNDED {
+            if code.contains(tok) && !suppressed(&lines, i, "unbounded-channel") {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: i + 1,
+                    rule: "unbounded-channel",
+                    msg: format!("`{tok}` — use the bounded `util::sync::chan` instead"),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Every `unsafe` carries a `// SAFETY:` comment on the same line or
+/// within the 3 preceding lines.
+fn check_safety_comments(path: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        let is_unsafe = code
+            .split(|c: char| !(c.is_alphanumeric() || c == '_'))
+            .any(|w| w == "unsafe");
+        if !is_unsafe {
+            continue;
+        }
+        let explained =
+            lines[i.saturating_sub(3)..=i].iter().any(|l| l.contains("SAFETY:"));
+        if !explained && !suppressed(&lines, i, "missing-safety-comment") {
+            out.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "missing-safety-comment",
+                msg: "`unsafe` without a `// SAFETY:` comment in the 3 lines above".to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// Directories whose pub API must be documented (the concurrency stack
+/// users actually build against).
+fn doc_scoped(path: &str) -> bool {
+    ["serve/", "coordinator/", "denoise/"].iter().any(|d| path.contains(d))
+}
+
+const PUB_ITEMS: &[&str] = &[
+    "pub fn ",
+    "pub unsafe fn ",
+    "pub struct ",
+    "pub enum ",
+    "pub trait ",
+    "pub type ",
+    "pub const ",
+    "pub static ",
+];
+
+/// Every pub item in `serve`/`coordinator`/`denoise` carries a doc
+/// comment (attributes may sit between the docs and the item). `pub use`
+/// re-exports, `pub mod` declarations (documented by their file's `//!`
+/// header), `pub(crate)` items, struct fields, and `mod tests` tails are
+/// out of scope.
+fn check_pub_docs(path: &str, src: &str) -> Vec<Violation> {
+    if !doc_scoped(path) {
+        return Vec::new();
+    }
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let t = raw.trim_start();
+        // Unit-test tails hold no public API.
+        if t.starts_with("mod tests") && t.ends_with('{') {
+            break;
+        }
+        if !PUB_ITEMS.iter().any(|p| t.starts_with(p)) {
+            continue;
+        }
+        let mut j = i;
+        let documented = loop {
+            if j == 0 {
+                break false;
+            }
+            j -= 1;
+            let above = lines[j].trim_start();
+            if above.starts_with("#[") {
+                continue; // attributes sit between docs and item
+            }
+            break above.starts_with("///");
+        };
+        if !documented && !suppressed(&lines, i, "undocumented-pub-item") {
+            out.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "undocumented-pub-item",
+                msg: format!("undocumented pub item: `{}`", t.trim_end().trim_end_matches('{')),
+            });
+        }
+    }
+    out
+}
+
+/// Array constructors a band-scoped function might call.
+const ARRAY_CTORS: &[&str] = &[
+    "IscArray::new(",
+    "Sae::new(",
+    "Sae::with_recency(",
+    "StcfBackend::isc(",
+    "StcfBackend::ideal_with_window(",
+];
+
+/// Band-math anchoring law: a function that constructs an array AND
+/// computes band row offsets (`* band_h`, `band_start`, `band_end`)
+/// must anchor through `IscConfig::origin_y` — that is what makes every
+/// band array an exact window of the full-sensor mismatch map, so
+/// sharding can never perturb values. Raw `y - band_start` rebasing is
+/// banned outright.
+fn check_band_anchoring(path: &str, src: &str) -> Vec<Violation> {
+    if !doc_scoped(path) {
+        return Vec::new();
+    }
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        if let Some(k) = code.find("- band_start") {
+            // Word boundary: don't fire on e.g. `- band_starts_here`.
+            let tail = &code[k + "- band_start".len()..];
+            let bounded = !tail.starts_with(|c: char| c.is_alphanumeric() || c == '_');
+            if bounded && !suppressed(&lines, i, "unanchored-band-array") {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: i + 1,
+                    rule: "unanchored-band-array",
+                    msg: "raw `… - band_start` rebasing — anchor the array with \
+                          `IscConfig::origin_y` instead"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    let mut i = 0;
+    while i < lines.len() {
+        let header = strip_comment(lines[i]);
+        let Some(name) = fn_name(header) else {
+            i += 1;
+            continue;
+        };
+        let Some((lo, hi)) = fn_body_range(&lines, i) else {
+            i += 1;
+            continue;
+        };
+        let body: String =
+            lines[lo..=hi].iter().map(|l| strip_comment(l)).collect::<Vec<_>>().join("\n");
+        let constructs = ARRAY_CTORS.iter().any(|c| body.contains(c));
+        let band_offsets = body.contains("* band_h")
+            || body.contains("band_start")
+            || body.contains("band_end");
+        if constructs
+            && band_offsets
+            && !body.contains("origin_y")
+            && !suppressed(&lines, i, "unanchored-band-array")
+        {
+            out.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "unanchored-band-array",
+                msg: format!(
+                    "fn `{name}` builds an array with band row offsets but never \
+                     sets `origin_y` — the band is not a window of the full-sensor map"
+                ),
+            });
+        }
+        i = hi + 1;
+    }
+    out
+}
+
+/// Run every rule over one file.
+fn check_file(path: &str, src: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    out.extend(check_hot_loop_transcendentals(path, src));
+    out.extend(check_unbounded_channels(path, src));
+    out.extend(check_safety_comments(path, src));
+    out.extend(check_pub_docs(path, src));
+    out.extend(check_band_anchoring(path, src));
+    out
+}
+
+/// All `.rs` files under `dir`, sorted for deterministic output.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rust_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// The crate source root: `<workspace>/rust/src`, found relative to this
+/// crate's manifest so the lint runs from any working directory.
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../rust/src")
+}
+
+fn run_lints(root: &Path) -> Result<Vec<Violation>, String> {
+    let mut files = Vec::new();
+    rust_files(root, &mut files).map_err(|e| format!("walking {}: {e}", root.display()))?;
+    if files.is_empty() {
+        return Err(format!("no .rs files under {}", root.display()));
+    }
+    let mut all = Vec::new();
+    for f in &files {
+        let src =
+            std::fs::read_to_string(f).map_err(|e| format!("reading {}: {e}", f.display()))?;
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .into_owned();
+        all.extend(check_file(&rel, &src));
+    }
+    Ok(all)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint-invariants") => {
+            let root = args.get(1).map(PathBuf::from).unwrap_or_else(default_root);
+            match run_lints(&root) {
+                Ok(v) if v.is_empty() => {
+                    println!("lint-invariants: OK ({})", root.display());
+                }
+                Ok(v) => {
+                    for violation in &v {
+                        eprintln!("{violation}");
+                    }
+                    eprintln!("lint-invariants: {} violation(s)", v.len());
+                    std::process::exit(1);
+                }
+                Err(e) => {
+                    eprintln!("lint-invariants: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint-invariants [src-root]");
+            std::process::exit(2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- transcendental-in-hot-loop ----
+
+    #[test]
+    fn catches_exp_in_frame_fn() {
+        let src = "
+fn frame_merged_into(out: &mut [f64], dt: f64) {
+    for v in out.iter_mut() {
+        *v = (-dt).exp();
+    }
+}
+";
+        let v = check_hot_loop_transcendentals("isc/mod.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "transcendental-in-hot-loop");
+        assert_eq!(v[0].line, 4);
+    }
+
+    #[test]
+    fn catches_powf_in_support_count() {
+        let src = "
+pub fn support_count_fast(x: f64) -> u32 {
+    (x.powf(2.0)) as u32
+}
+";
+        assert_eq!(check_hot_loop_transcendentals("denoise/stcf.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn cold_fns_may_use_transcendentals() {
+        // The LUT builder itself computes exp() once per level — legal.
+        let src = "
+fn build_lut(tau: f64) -> Vec<f64> {
+    (0..64).map(|k| (-(k as f64) / tau).exp()).collect()
+}
+";
+        assert!(check_hot_loop_transcendentals("util/decay.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_loop_suppression_comment_works() {
+        let src = "
+fn frame_debug_dump(x: f64) -> f64 {
+    // lint-invariants: allow(transcendental-in-hot-loop)
+    x.exp()
+}
+";
+        assert!(check_hot_loop_transcendentals("util/image.rs", src).is_empty());
+    }
+
+    // ---- unbounded-channel ----
+
+    #[test]
+    fn catches_std_mpsc_channel() {
+        let src = "let (tx, rx) = std::sync::mpsc::channel::<u32>();\n";
+        let v = check_unbounded_channels("coordinator/router.rs", src);
+        // `std::sync::mpsc` and `mpsc::channel(` both match the line.
+        assert!(!v.is_empty());
+        assert!(v.iter().all(|x| x.rule == "unbounded-channel"));
+    }
+
+    #[test]
+    fn mentions_in_comments_are_fine() {
+        let src = "// semantically a subset of std::sync::mpsc::sync_channel\n";
+        assert!(check_unbounded_channels("util/sync.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bounded_chan_is_fine() {
+        let src = "let (tx, rx) = crate::util::sync::chan::bounded::<Job>(2);\n";
+        assert!(check_unbounded_channels("denoise/sharded.rs", src).is_empty());
+    }
+
+    // ---- missing-safety-comment ----
+
+    #[test]
+    fn catches_unsafe_without_safety() {
+        let src = "
+fn peel(xs: &mut [u8]) -> &mut [u8] {
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr(), xs.len()) }
+}
+";
+        let v = check_safety_comments("util/grid.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "missing-safety-comment");
+    }
+
+    #[test]
+    fn safety_comment_satisfies_the_rule() {
+        let src = "
+fn peel(xs: &mut [u8]) -> &mut [u8] {
+    // SAFETY: same slice, same provenance, same length.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr(), xs.len()) }
+}
+";
+        assert!(check_safety_comments("util/grid.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_identifier_is_not_flagged() {
+        let src = "let unsafety_counter = 0;\n";
+        assert!(check_safety_comments("util/grid.rs", src).is_empty());
+    }
+
+    // ---- undocumented-pub-item ----
+
+    #[test]
+    fn catches_undocumented_pub_fn_in_serve() {
+        let src = "
+impl Pool {
+    pub fn workers(&self) -> usize {
+        self.n
+    }
+}
+";
+        let v = check_pub_docs("serve/scheduler.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "undocumented-pub-item");
+    }
+
+    #[test]
+    fn docs_plus_attributes_are_accepted() {
+        let src = "
+/// The fixed worker fleet.
+#[derive(Debug)]
+pub struct Pool {
+    n: usize,
+}
+";
+        assert!(check_pub_docs("serve/scheduler.rs", src).is_empty());
+    }
+
+    #[test]
+    fn pub_crate_and_other_dirs_are_out_of_scope() {
+        let src = "
+pub(crate) fn internal() {}
+";
+        assert!(check_pub_docs("serve/scheduler.rs", src).is_empty());
+        let undocumented = "
+pub fn helper() {}
+";
+        assert!(check_pub_docs("util/stats.rs", undocumented).is_empty());
+    }
+
+    #[test]
+    fn test_module_tail_is_skipped() {
+        let src = "
+/// Documented.
+pub fn fine() {}
+
+#[cfg(test)]
+mod tests {
+    pub fn helper_without_docs() {}
+}
+";
+        assert!(check_pub_docs("denoise/sharded.rs", src).is_empty());
+    }
+
+    // ---- unanchored-band-array ----
+
+    #[test]
+    fn catches_band_ctor_without_origin() {
+        let src = "
+fn for_band(res: Resolution, band_h: usize, shard: usize) -> IscArray {
+    let y0 = shard * band_h;
+    let rows = band_h.min(res.height as usize - y0);
+    IscArray::new(Resolution::new(res.width, rows as u16), cfg.clone())
+}
+";
+        let v = check_band_anchoring("coordinator/router.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "unanchored-band-array");
+    }
+
+    #[test]
+    fn origin_anchored_band_ctor_is_fine() {
+        let src = "
+fn for_band(res: Resolution, band_h: usize, shard: usize) -> IscArray {
+    let y0 = (shard * band_h) as u16;
+    let mut cfg = base.clone();
+    cfg.origin_y = base.origin_y + y0;
+    IscArray::new(band_res, cfg)
+}
+";
+        assert!(check_band_anchoring("coordinator/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn full_sensor_ctor_without_band_math_is_fine() {
+        let src = "
+fn isc(res: Resolution, cfg: IscConfig) -> StcfBackend {
+    StcfBackend::Isc(IscArray::new(res, cfg))
+}
+";
+        assert!(check_band_anchoring("denoise/stcf.rs", src).is_empty());
+    }
+
+    #[test]
+    fn catches_raw_band_start_rebasing() {
+        let src = "let yl = e.y as usize - band_start;\n";
+        let v = check_band_anchoring("denoise/sharded.rs", src);
+        assert_eq!(v.len(), 1);
+    }
+
+    // ---- whole-tree gate ----
+
+    #[test]
+    fn tree_is_clean() {
+        let root = default_root();
+        let v = run_lints(&root).expect("lint run");
+        assert!(
+            v.is_empty(),
+            "invariant violations in the tree:\n{}",
+            v.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
