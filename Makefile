@@ -26,7 +26,8 @@ lint:
 
 # Repo-specific invariants clippy cannot see (DecayLut hot-loop law,
 # bounded channels, SAFETY comments, pub docs in the concurrency stack,
-# origin_y band anchoring). See CONTRIBUTING.md and xtask/src/main.rs.
+# origin_y band anchoring, no eager full-resolution allocations in
+# serve/coordinator). See CONTRIBUTING.md and xtask/src/main.rs.
 lint-invariants:
 	cargo xtask lint-invariants
 
@@ -56,6 +57,9 @@ tsan:
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir ../$(RUST_DIR)/artifacts
 
+# Quick bench snapshots. BENCH_serve.json includes the idle-fleet
+# memory sweep (256 sessions at 1/10/100 % duty cycle:
+# resident_bytes_per_session + events_per_sec) that ci.sh hard-requires.
 bench:
 	cd $(RUST_DIR) && cargo bench -- --quick
 	@for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json \

@@ -2,11 +2,15 @@
 //! sweep (1/4/16 sessions × 2/4/8 workers) measuring **aggregate ingest
 //! throughput** (events/s across the whole fleet) and **snapshot p99**
 //! (on-demand frame latency under concurrent session load), plus one
-//! denoised-fleet configuration.
+//! denoised-fleet configuration and the **idle-fleet memory sweep**
+//! (256 sessions at 1 %/10 %/100 % duty cycle) reporting
+//! `resident_bytes_per_session` — the number that proves quiet
+//! sessions cost O(bands) structs under lazy band materialization, not
+//! O(H·W) arrays.
 //!
 //! Dumps `BENCH_serve.json` (via `util::bench::dump_json`) next to the
 //! manifest; CI uploads it alongside the tsurface/router/denoise
-//! snapshots.
+//! snapshots and hard-fails if the idle-fleet keys are missing.
 
 use std::time::Instant;
 use tsisc::coordinator::{PipelineConfig, RouterConfig};
@@ -93,6 +97,93 @@ fn bench_fleet(
     m.shutdown();
 }
 
+/// Idle-fleet memory sweep: open `sessions` sessions at a *large*
+/// sensor resolution, drive only a `duty_pct` fraction of them with the
+/// (64×64-bounded) workload, and report per-session resident bytes
+/// alongside fleet throughput. Quiet sessions never materialize a band
+/// array, so their footprint is the per-band `BandWriter` struct —
+/// independent of the 640×480 session resolution (O(m+n), not O(H·W)).
+fn bench_idle_fleet(
+    json: &mut Vec<JsonEntry>,
+    base: &[LabeledEvent],
+    span: u64,
+    sessions: usize,
+    duty_pct: usize,
+) {
+    let res = Resolution::new(640, 480); // events land in the 64×64 corner
+    let active = (sessions * duty_pct / 100).max(1);
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 4,
+        max_sessions: sessions,
+        max_inflight_batches: 1 << 20, // throughput run: never reject
+    });
+    let sids: Vec<_> = (0..sessions)
+        .map(|k| {
+            m.open(SessionConfig {
+                name: format!("idle-{k}"),
+                res,
+                t_end_us: 0,
+                pipeline: PipelineConfig {
+                    stcf: None,
+                    denoise_shards: 0,
+                    router: RouterConfig {
+                        isc: IscConfig { bank_size: 64, ..IscConfig::default() },
+                        ..RouterConfig::default()
+                    },
+                    ..PipelineConfig::default()
+                },
+            })
+            .expect("open idle session")
+        })
+        .collect();
+    let mut offset = 0u64;
+    let mut shifted: Vec<LabeledEvent> = base.to_vec();
+    let label = format!("idle fleet {sessions} sessions @ {duty_pct:>3}% duty");
+    let r = bench(&label, (base.len() * active) as f64, 30, 150, || {
+        offset += span;
+        for (dst, src) in shifted.iter_mut().zip(base) {
+            *dst = *src;
+            dst.ev.t += offset;
+        }
+        for chunk in shifted.chunks(2_048) {
+            for sid in &sids[..active] {
+                m.ingest_batch(*sid, chunk).expect("ingest");
+            }
+        }
+        // Snapshots drain the queued writes, so the resident gauges are
+        // settled when we read them below.
+        for sid in &sids[..active] {
+            std::hint::black_box(m.snapshot(*sid, offset + span).expect("snapshot"));
+        }
+    });
+    println!("{}", r.report());
+    let fleet = m.stats();
+    let per_session = fleet.resident_bytes as f64 / sessions as f64;
+    let quiet_bytes: usize = fleet
+        .sessions
+        .iter()
+        .filter(|s| sids[active..].iter().any(|sid| sid.raw() == s.id))
+        .map(|s| s.resident_bytes)
+        .sum();
+    let quiet_n = sessions - active;
+    let per_quiet =
+        if quiet_n > 0 { quiet_bytes as f64 / quiet_n as f64 } else { per_session };
+    println!(
+        "    resident: {:.1} KiB/session mean, {:.1} KiB per quiet session \
+         ({active} of {sessions} sessions active)",
+        per_session / 1024.0,
+        per_quiet / 1024.0,
+    );
+    let tput = r.throughput_per_sec();
+    let mut entry = JsonEntry::with(r, "sessions", sessions as f64);
+    entry.extra.push(("duty_pct", duty_pct as f64));
+    entry.extra.push(("events_per_sec", tput));
+    entry.extra.push(("resident_bytes_per_session", per_session));
+    entry.extra.push(("resident_bytes_per_quiet_session", per_quiet));
+    json.push(entry);
+    m.shutdown();
+}
+
 fn main() {
     let mut json: Vec<JsonEntry> = Vec::new();
     let res = Resolution::new(64, 64);
@@ -122,6 +213,12 @@ fn main() {
         Some(StcfParams::default()),
         "serve  4 sessions x 4 workers + stcf",
     );
+
+    // --- idle-fleet memory sweep (lazy band materialization) --------------
+    header("idle fleet: resident bytes per session vs duty cycle");
+    for &duty in &[1usize, 10, 100] {
+        bench_idle_fleet(&mut json, &base, span, 256, duty);
+    }
 
     dump_json(&json, "BENCH_serve.json");
 }

@@ -48,6 +48,21 @@
 //! causal (non-decreasing and ≥ the routed event times — the same
 //! contract as the activity-aware readout, see [`crate::util::active`]).
 //!
+//! ## Lazy band materialization (PR 7)
+//!
+//! A band allocates **no analog-array state until its first write**:
+//! [`BandWriter`] starts cold (config only), materializes its
+//! [`IscArray`] on the first non-empty batch, and **demotes back to
+//! cold** once a snapshot finds every written cell expired past the
+//! memory horizon ([`IscArray::fully_expired_at`]). Cold bands answer
+//! snapshots with a one-time zero fill that the dirty-band cache then
+//! composites for free, so a session whose activity touches a few bands
+//! holds O(active bands) resident bytes — not O(H·W) — and an idle
+//! session's memory decays back toward a small constant. Demotion is
+//! exact: a band only demotes when its frame is provably zero forever
+//! absent new writes, and the position-stable mismatch assignment makes
+//! a rematerialized array bit-for-bit identical to the one torn down.
+//!
 //! ## Band-job core (serve PR)
 //!
 //! The per-shard state machine — band array, dirty watermarks, the
@@ -134,7 +149,16 @@ struct BandCache {
 /// per-band write/render sequence a dedicated router would run, so
 /// session frames are bit-for-bit identical to a standalone pipeline.
 pub struct BandWriter {
-    array: IscArray,
+    /// The band's resolution (kept for cold-band zero fills and
+    /// rematerialization).
+    band_res: Resolution,
+    /// Band-anchored array config, kept so a demoted band can
+    /// rematerialize an identical array on its next write.
+    cfg: IscConfig,
+    /// The band's analog array — `None` while the band is **cold**:
+    /// never written, or demoted after every write expired past the
+    /// memory horizon. Cold bands hold no plane allocation at all.
+    array: Option<IscArray>,
     /// Global sensor row of the band's row 0.
     y0: u16,
     /// Row-chunk count for full band renders (1 = render inline on the
@@ -180,7 +204,11 @@ impl BandWriter {
         let mut cfg = isc.clone();
         cfg.origin_y = isc.origin_y + y0;
         Self {
-            array: IscArray::new(band_res, cfg),
+            band_res,
+            cfg,
+            // Cold until the first write: no plane allocation, no
+            // Monte-Carlo bank fit.
+            array: None,
             y0,
             render_chunks: render_chunks.max(1),
             last_at: None,
@@ -194,8 +222,12 @@ impl BandWriter {
     /// Apply one write batch. Events arrive in sensor coordinates and
     /// are shifted into the band in place; the dirty flag and row
     /// watermarks advance so the next snapshot can re-render only what
-    /// changed.
+    /// changed. A cold band materializes its array on the first
+    /// non-empty batch (the only place allocation happens).
     pub fn apply_batch(&mut self, batch: &mut [Event]) {
+        if batch.is_empty() {
+            return;
+        }
         for e in batch.iter_mut() {
             e.y -= self.y0;
             let yl = e.y as usize;
@@ -204,8 +236,10 @@ impl BandWriter {
                 Some((lo, hi)) => (lo.min(yl), hi.max(yl)),
             });
         }
-        self.dirty = self.dirty || !batch.is_empty();
-        self.array.write_batch(batch);
+        self.dirty = true;
+        self.array
+            .get_or_insert_with(|| IscArray::new(self.band_res, self.cfg.clone()))
+            .write_batch(batch);
         self.processed += batch.len() as u64;
     }
 
@@ -223,6 +257,24 @@ impl BandWriter {
         cache_valid: bool,
     ) -> BandSnapshot {
         let cached = cache_valid && self.last_at.is_some();
+        let Some(array) = self.array.as_mut() else {
+            // Cold band: identically zero at every causal query time. A
+            // valid cached reply from this writer is necessarily
+            // all-zero (bands only demote once empty-static), so a
+            // cached buffer composites as-is; otherwise one zero fill —
+            // no array, no render work either way.
+            let unchanged = cached && !self.dirty && self.empty_static;
+            if !unchanged {
+                let (w, h) = (self.band_res.width as usize, self.band_res.height as usize);
+                buf.ensure_shape(w, h, 0.0);
+                buf.as_mut_slice().fill(0.0);
+                self.empty_static = true;
+            }
+            self.last_at = Some(at_us);
+            self.dirty = false;
+            self.dirty_rows = None;
+            return BandSnapshot { rendered: !unchanged, empty_static: true };
+        };
         // Clean band: the cached render is still exact at the same query
         // time, or at any later one when it was all-zero with no pending
         // decay (every write already expired — see
@@ -238,12 +290,22 @@ impl BandWriter {
                 // Same query time: only rows written since the cached
                 // render can differ. O(dirty rows) via the watermarks.
                 let (lo, hi) = self.dirty_rows.unwrap_or((0, 0));
-                self.array.frame_merged_rows_into(buf, at_us, lo..hi + 1);
+                array.frame_merged_rows_into(buf, at_us, lo..hi + 1);
             } else {
-                self.array.frame_merged_into_chunks(buf, at_us, self.render_chunks);
+                array.frame_merged_into_chunks(buf, at_us, self.render_chunks);
             }
             let empty = buf.as_slice().iter().all(|&v| v == 0.0);
-            self.empty_static = empty && self.array.clock_us() <= at_us;
+            self.empty_static = empty && array.clock_us() <= at_us;
+        }
+        // Demote once every written cell is strictly past the memory
+        // horizon: the band reads zero forever absent new writes, and
+        // the position-stable assignment makes a rematerialized array
+        // bit-for-bit identical — so freeing the planes is observably
+        // free. (`fully_expired_at` is conservative at exactly the
+        // horizon, so a band may stay hot one extra snapshot.)
+        let demote = self.empty_static && array.fully_expired_at(at_us);
+        if demote {
+            self.array = None;
         }
         self.last_at = Some(at_us);
         self.dirty = false;
@@ -251,9 +313,23 @@ impl BandWriter {
         BandSnapshot { rendered: !unchanged, empty_static: self.empty_static }
     }
 
-    /// Events written into the band so far.
+    /// Events written into the band so far (across materializations —
+    /// the counter survives demotion).
     pub fn events_written(&self) -> u64 {
         self.processed
+    }
+
+    /// Whether the band currently holds a materialized analog array
+    /// (false while cold: never written, or demoted after full expiry).
+    pub fn is_materialized(&self) -> bool {
+        self.array.is_some()
+    }
+
+    /// Approximate resident bytes: the struct plus the materialized
+    /// band array, if any — a cold band costs only the struct itself,
+    /// independent of the sensor resolution.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.array.as_ref().map_or(0, IscArray::approx_bytes)
     }
 }
 
@@ -705,6 +781,53 @@ mod tests {
         // Bands 1..3 are empty-static; band 0 re-renders (decay advanced).
         assert_eq!(r.bands_skipped_unchanged() - skips0, 3);
         r.shutdown();
+    }
+
+    #[test]
+    fn cold_bands_hold_no_array_and_demote_after_expiry() {
+        let res = Resolution::new(8, 8);
+        let cfg = IscConfig::default();
+        // Band 1 of a band_h=2 partition: global rows 2..4.
+        let mut w = BandWriter::for_band(res, &cfg, 2, 1, 1);
+        assert!(!w.is_materialized(), "fresh band must be cold");
+        let cold_bytes = w.approx_bytes();
+        assert_eq!(cold_bytes, std::mem::size_of::<BandWriter>());
+
+        // Snapshot of a never-written band: zeros, no materialization.
+        let mut buf = Grid::new(1, 1, 0.0);
+        let s = w.snapshot_into(&mut buf, 1_000, false);
+        assert!(s.empty_static);
+        assert!(buf.as_slice().iter().all(|&v| v == 0.0));
+        assert!(!w.is_materialized(), "snapshot must not materialize");
+        // Composited from cache from now on: zero work, not rendered.
+        let s = w.snapshot_into(&mut buf, 2_000, true);
+        assert!(!s.rendered);
+
+        // First write materializes; the frame shows it.
+        let mut batch = vec![Event::new(2_000, 1, 2, Polarity::On)];
+        w.apply_batch(&mut batch);
+        assert!(w.is_materialized());
+        assert!(w.approx_bytes() > cold_bytes);
+        let s = w.snapshot_into(&mut buf, 2_000, true);
+        assert!(s.rendered && !s.empty_static);
+        assert!(buf.as_slice().iter().any(|&v| v > 0.0));
+
+        // Far past the memory horizon the frame empties and the band
+        // demotes back to cold — resident bytes decay to the constant.
+        let s = w.snapshot_into(&mut buf, 2_000 + 10_000_000, true);
+        assert!(s.rendered && s.empty_static);
+        assert!(!w.is_materialized(), "expired band must demote");
+        assert_eq!(w.approx_bytes(), cold_bytes);
+        assert_eq!(w.events_written(), 1, "counter survives demotion");
+
+        // Rematerialize on the next write: frames stay exact (the
+        // round-trip equivalence proper lives in tests/sparse_equiv.rs).
+        let mut batch = vec![Event::new(20_000_000, 3, 3, Polarity::On)];
+        w.apply_batch(&mut batch);
+        assert!(w.is_materialized());
+        let s = w.snapshot_into(&mut buf, 20_000_000, true);
+        assert!(s.rendered);
+        assert!(buf.as_slice().iter().any(|&v| v > 0.0));
     }
 
     #[test]

@@ -3,11 +3,12 @@
 //!
 //! ## Support-scan complexity (per scored event, patch (2r+1)²)
 //!
-//! | scan | per patch row | typical cost | where |
-//! |---|---|---|---|
-//! | naive patch scan | 2r+1 indexed point reads (2D index math + bounds checks each) | O((2r+1)²) always | [`support_count_naive`] — reference |
-//! | row-sliced | one contiguous stamp/param slice walk | O((2r+1)²) but bounds-free, cache-linear | [`support_count_rows`] |
-//! | bitmask-popcount | 1–2 window words × live epoch buckets (≤ 4) `u64` loads, then exact confirmation of set-bit runs only | O((2r+1) · buckets) word loads + O(recent) confirms — all-zero rows cost no stamp reads | [`support_count_bitmask`] via [`crate::util::bitplane::RecencyPlane`] |
+//! | scan | per patch row | typical cost | memory | where |
+//! |---|---|---|---|---|
+//! | naive patch scan | 2r+1 indexed point reads (2D index math + bounds checks each) | O((2r+1)²) always | O(H·W) dense surface | [`support_count_naive`] — reference |
+//! | row-sliced | one contiguous stamp/param slice walk | O((2r+1)²) but bounds-free, cache-linear | O(H·W) dense surface | [`support_count_rows`] |
+//! | bitmask-popcount | 1–2 window words × live epoch buckets (≤ 4) `u64` loads, then exact confirmation of set-bit runs only | O((2r+1) · buckets) word loads + O(recent) confirms — all-zero rows cost no stamp reads | O(H·W) + H·W/8 bits × buckets | [`support_count_bitmask`] via [`crate::util::bitplane::RecencyPlane`] |
+//! | hashed probe walk | 2r+1 set-associative probes | O((2r+1)²) hashed probes — no dense surface at all | **O(capacity)**, resolution-independent ([`StcfBackend::Cache`]) | [`crate::util::sparse::SparseRecencyStore`] — bit-for-bit ≡ dense while the probed neighborhood survives in-cache; evictions only ever *undercount* |
 //!
 //! [`support_count`] picks the bitmask tier whenever the backend's
 //! recency plane covers the query window and falls back to the

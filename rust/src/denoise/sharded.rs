@@ -190,6 +190,12 @@ impl BandScorer {
     pub fn tally(&self) -> &ShardTally {
         &self.tally
     }
+
+    /// Approximate resident bytes of the shard's backend surfaces —
+    /// one leaf of the serve layer's `resident_bytes` gauge.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.backend.approx_bytes()
+    }
 }
 
 enum Job {

@@ -24,6 +24,11 @@
 //! 3. **naive** ([`support_count_naive`]) — per-(dx, dy) point reads,
 //!    the reference.
 //!
+//! The sparse [`StcfBackend::Cache`] has no dense rows or bitmask plane
+//! to scan: every tier resolves to the per-pixel probe walk — O((2r+1)²)
+//! hashed probes against the O(m) [`crate::util::sparse`] store, with
+//! the eviction-undercount bound documented on the variant.
+//!
 //! The bitmask tier inherits the causality contract of the recency
 //! plane: counts are exact for queries at or ahead of the stream head
 //! (score-then-write over a time-sorted stream — precisely how
@@ -37,6 +42,7 @@ use crate::metrics::Scored;
 use crate::tsurface::sae::Sae;
 use crate::tsurface::EventSink;
 use crate::util::grid::patch_bounds;
+use crate::util::sparse::{pixel_key, SparseRecencyStore};
 
 /// STCF parameters.
 #[derive(Clone, Copy, Debug)]
@@ -65,6 +71,11 @@ impl Default for StcfParams {
     }
 }
 
+/// Default set associativity of the sparse cache backend: deep enough
+/// that a (2r+1)² patch of simultaneously-hot pixels rarely collides
+/// into one set, shallow enough that a probe stays a short linear scan.
+pub const CACHE_DEFAULT_WAYS: usize = 8;
+
 /// Which surface backs the support query.
 pub enum StcfBackend {
     /// Full-precision timestamps (the paper's "ideal" software curve).
@@ -82,6 +93,21 @@ pub enum StcfBackend {
     /// `cmp` is the compiled fixed-threshold comparator (integer-age test;
     /// see `IscArray::comparator`).
     Isc { array: IscArray, v_tw: f64, cmp: Comparator },
+    /// Set-associative sparse recency store
+    /// ([`crate::util::sparse::SparseRecencyStore`]): O(m) memory in the
+    /// number of cached entries instead of O(H·W), scoring each support
+    /// query with O((2r+1)²) hashed probes. Semantics mirror the
+    /// [`StcfBackend::Ideal`] timestamp test, so counts are **bit-for-bit
+    /// equal to the dense backends for every event whose (2r+1)²
+    /// neighborhood survives in-cache** (`tests/sparse_equiv.rs` proves
+    /// it; zero [`SparseRecencyStore::evictions`] certifies a whole
+    /// stream). Under capacity pressure the store evicts the **oldest**
+    /// entry of the victim's set, so a miss only ever hides activity at
+    /// least as old as everything the set retained — the support count
+    /// can undercount, never overcount, and only by events older than
+    /// the retained minimum (the cache-like filter's bounded-undercount
+    /// guarantee, Zhao et al. arXiv 2410.12423).
+    Cache { res: Resolution, store: SparseRecencyStore },
 }
 
 impl StcfBackend {
@@ -121,10 +147,25 @@ impl StcfBackend {
         StcfBackend::Isc { array, v_tw, cmp }
     }
 
+    /// Sparse cache backend holding at least `min_entries` recency
+    /// entries in sets of [`CACHE_DEFAULT_WAYS`] ways — O(m) memory
+    /// independent of `res` (the resolution is kept only for patch
+    /// clamping). See [`StcfBackend::Cache`] for the equivalence and
+    /// eviction-undercount guarantees.
+    pub fn cache(res: Resolution, min_entries: usize) -> Self {
+        Self::cache_with_ways(res, min_entries, CACHE_DEFAULT_WAYS)
+    }
+
+    /// [`StcfBackend::cache`] with an explicit set associativity.
+    pub fn cache_with_ways(res: Resolution, min_entries: usize, ways: usize) -> Self {
+        StcfBackend::Cache { res, store: SparseRecencyStore::new(min_entries, ways) }
+    }
+
     fn res(&self) -> Resolution {
         match self {
             StcfBackend::Ideal { planes, .. } => planes[0].resolution(),
             StcfBackend::Isc { array, .. } => array.resolution(),
+            StcfBackend::Cache { res, .. } => *res,
         }
     }
 
@@ -133,7 +174,30 @@ impl StcfBackend {
     pub fn ideal_planes(&self) -> usize {
         match self {
             StcfBackend::Ideal { planes, .. } => planes.len(),
-            StcfBackend::Isc { .. } => 0,
+            StcfBackend::Isc { .. } | StcfBackend::Cache { .. } => 0,
+        }
+    }
+
+    /// Entries displaced from the sparse store so far (cache backend;
+    /// 0 certifies every count so far was bit-for-bit ≡ dense). `None`
+    /// for the dense backends, which never evict.
+    pub fn cache_evictions(&self) -> Option<u64> {
+        match self {
+            StcfBackend::Cache { store, .. } => Some(store.evictions()),
+            _ => None,
+        }
+    }
+
+    /// Resident bytes of the backing surface — one leaf of the serve
+    /// layer's `resident_bytes` gauge. O(H·W) for the dense backends,
+    /// O(capacity) for the cache backend.
+    pub fn approx_bytes(&self) -> usize {
+        match self {
+            StcfBackend::Ideal { planes, .. } => {
+                planes.iter().map(|s| s.approx_bytes()).sum::<usize>()
+            }
+            StcfBackend::Isc { array, cmp, .. } => array.approx_bytes() + cmp.approx_bytes(),
+            StcfBackend::Cache { store, .. } => store.approx_bytes(),
         }
     }
 
@@ -152,6 +216,13 @@ impl StcfBackend {
                 }
             }
             StcfBackend::Isc { array, cmp, .. } => array.compare_with(cmp, x, y, p, t),
+            StcfBackend::Cache { store, .. } => {
+                let plane = if prm.polarity_sensitive { p.index() } else { 0 };
+                match store.last(pixel_key(plane as u8, x, y)) {
+                    Some(tw) => t >= tw && t - tw <= prm.tau_tw_us,
+                    None => false, // never written, or evicted (older than the set's retained minimum)
+                }
+            }
         }
     }
 
@@ -173,6 +244,10 @@ impl StcfBackend {
                 planes[idx].ingest(e);
             }
             StcfBackend::Isc { array, .. } => array.write(e),
+            StcfBackend::Cache { store, .. } => {
+                let plane = if prm.polarity_sensitive { e.p.index() } else { 0 };
+                store.mark(pixel_key(plane as u8, e.x, e.y), e.t);
+            }
         }
     }
 }
@@ -195,7 +270,8 @@ pub fn support_count(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 
 /// so the confirmed count is bit-for-bit the exact one.
 ///
 /// Returns `None` when the fast path does not apply (off-sensor event,
-/// no recency plane, or a query window the plane does not cover) — the
+/// no recency plane, a query window the plane does not cover, or the
+/// sparse cache backend, which has no bitmask plane by design) — the
 /// caller falls back to [`support_count_rows`].
 pub fn support_count_bitmask(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> Option<u32> {
     let res = backend.res();
@@ -247,6 +323,7 @@ pub fn support_count_bitmask(backend: &StcfBackend, e: &Event, prm: &StcfParams)
                 });
             }
         }
+        StcfBackend::Cache { .. } => return None, // probe tier only
     }
     if !prm.count_center && backend.supported(e.x, e.y, e.p, e.t, prm) {
         // Saturating: on a causal query a supported center always has its
@@ -264,12 +341,14 @@ pub fn support_count_bitmask(backend: &StcfBackend, e: &Event, prm: &StcfParams)
 /// no per-element 2D index math or bounds checks in the inner loop. The
 /// center pixel is included by the row scan and subtracted afterwards
 /// when `count_center` is off. Produces exactly the same counts as
-/// [`support_count_naive`].
+/// [`support_count_naive`]. The sparse cache backend has no contiguous
+/// rows to slice — it delegates to the per-pixel probe walk (that *is*
+/// its O(window)-probes cost model).
 pub fn support_count_rows(backend: &StcfBackend, e: &Event, prm: &StcfParams) -> u32 {
     let res = backend.res();
-    if !res.contains(e.x, e.y) {
-        // Stray off-sensor event: keep the reference scan's clamped
-        // count instead of slicing with inverted bounds.
+    if !res.contains(e.x, e.y) || matches!(backend, StcfBackend::Cache { .. }) {
+        // Stray off-sensor event (clamped bounds would invert), or the
+        // cache backend: both take the reference probe walk.
         return support_count_naive(backend, e, prm);
     }
     let r = prm.radius as usize;
@@ -292,6 +371,7 @@ pub fn support_count_rows(backend: &StcfBackend, e: &Event, prm: &StcfParams) ->
                 n += array.count_recent_in_row(cmp, e.p, y as u16, x0, x1, e.t);
             }
         }
+        StcfBackend::Cache { .. } => unreachable!("cache backend delegated to the probe walk"),
     }
     if !prm.count_center && backend.supported(e.x, e.y, e.p, e.t, prm) {
         n -= 1;
@@ -542,6 +622,76 @@ mod tests {
             assert_eq!(support_count(&b, &e, &prm), support_count_naive(&b, &e, &prm));
             b.ingest(&e, &prm);
         }
+    }
+
+    #[test]
+    fn cache_backend_matches_ideal_without_evictions() {
+        // Capacity comfortably above the distinct-pixel working set: the
+        // cache must track the ideal backend bit for bit on every tier
+        // dispatch, for both polarity modes.
+        let res = Resolution::new(16, 12);
+        let evs: Vec<Event> = (0..200u64)
+            .map(|k| {
+                Event::new(
+                    100 + k * 250,
+                    (k * 7 % 16) as u16,
+                    (k * 5 % 12) as u16,
+                    if k % 2 == 0 { Polarity::On } else { Polarity::Off },
+                )
+            })
+            .collect();
+        for polarity_sensitive in [false, true] {
+            for count_center in [false, true] {
+                let prm =
+                    StcfParams { polarity_sensitive, count_center, ..StcfParams::default() };
+                let mut ideal = StcfBackend::ideal(res);
+                let mut cache = StcfBackend::cache(res, 2 * res.pixels());
+                for e in &evs {
+                    assert_eq!(
+                        support_count(&cache, e, &prm),
+                        support_count(&ideal, e, &prm),
+                        "ps={polarity_sensitive} cc={count_center} e={e:?}"
+                    );
+                    assert_eq!(support_count_bitmask(&cache, e, &prm), None);
+                    ideal.ingest(e, &prm);
+                    cache.ingest(e, &prm);
+                }
+                assert_eq!(cache.cache_evictions(), Some(0), "working set must fit");
+                assert_eq!(ideal.cache_evictions(), None);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_backend_only_undercounts_under_pressure() {
+        // Tiny cache, big working set: counts may drop support (evicted
+        // entries) but must never invent it.
+        let res = Resolution::new(32, 32);
+        let prm = StcfParams::default();
+        let mut ideal = StcfBackend::ideal(res);
+        let mut cache = StcfBackend::cache_with_ways(res, 32, 2);
+        for k in 0..600u64 {
+            let e = Event::new(
+                100 + k * 40,
+                (k * 11 % 32) as u16,
+                (k * 17 % 32) as u16,
+                Polarity::On,
+            );
+            let (c, i) = (support_count(&cache, &e, &prm), support_count(&ideal, &e, &prm));
+            assert!(c <= i, "cache overcounted: {c} > {i} at {e:?}");
+            ideal.ingest(&e, &prm);
+            cache.ingest(&e, &prm);
+        }
+        assert!(cache.cache_evictions().is_some_and(|n| n > 0), "pressure must evict");
+    }
+
+    #[test]
+    fn cache_backend_memory_is_resolution_independent() {
+        let small = StcfBackend::cache(Resolution::new(16, 16), 1_024);
+        let large = StcfBackend::cache(Resolution::new(1280, 720), 1_024);
+        assert_eq!(small.approx_bytes(), large.approx_bytes());
+        let dense = StcfBackend::ideal(Resolution::new(1280, 720));
+        assert!(large.approx_bytes() < dense.approx_bytes() / 10);
     }
 
     #[test]

@@ -125,6 +125,15 @@ impl Plane {
     fn maybe_prune(&mut self, writes: usize, clock_us: u64, horizon_us: u64) {
         self.active.maybe_prune_expired(writes, &self.t_write, clock_us, horizon_us);
     }
+
+    /// Resident bytes of this plane (stamps + parameter indices +
+    /// active set + optional recency bitmask).
+    fn approx_bytes(&self) -> usize {
+        self.t_write.capacity() * std::mem::size_of::<u64>()
+            + self.param_idx.capacity() * std::mem::size_of::<u32>()
+            + self.active.approx_bytes()
+            + self.recency.as_ref().map_or(0, |rp| rp.approx_bytes())
+    }
 }
 
 /// One readout pass of the render plan: a plane, the list-vs-dense mode
@@ -178,6 +187,11 @@ impl Comparator {
     #[inline]
     pub fn max_dt_us(&self) -> u64 {
         self.dt_max_us.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Resident bytes (struct + per-bank-entry age bounds).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.dt_max_us.capacity() * std::mem::size_of::<u64>()
     }
 }
 
@@ -622,6 +636,42 @@ impl IscArray {
                 s[i] = v;
             }
         }
+    }
+
+    /// Resident bytes of this array: per-plane stamps, parameter
+    /// indices, active lists and recency bitmasks, plus the fitted bank
+    /// and the shared decay LUT. The per-plane terms are O(H·W) — the
+    /// cost lazy band materialization avoids paying for cold bands
+    /// (see `coordinator::router::BandWriter`).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.planes.iter().map(|p| p.approx_bytes()).sum::<usize>()
+            + self.bank.capacity() * std::mem::size_of::<DoubleExp>()
+            + self.lut.approx_bytes()
+    }
+
+    /// Are all planes' active sets empty *and* every write older than
+    /// the memory horizon at `t_us`? When true, every cell of this
+    /// array reads exactly 0 at any query time ≥ `t_us`, and (because
+    /// parameter assignment is the pure position hash
+    /// [`param_index_at`]) a freshly constructed array with the same
+    /// config is bit-for-bit indistinguishable from this one for all
+    /// future causal reads — the demotion test of lazy band
+    /// materialization.
+    pub fn fully_expired_at(&self, t_us: u64) -> bool {
+        if t_us < self.clock_us {
+            return false;
+        }
+        let horizon = self.lut.horizon_us();
+        let w = self.res.width as usize;
+        self.planes.iter().all(|p| {
+            (0..p.active.height()).all(|y| {
+                p.active
+                    .row(y)
+                    .iter()
+                    .all(|&x| t_us.saturating_sub(p.t_write[y * w + x as usize]) > horizon)
+            })
+        })
     }
 
     /// Force an immediate expiry scan of the active lists (normally they
@@ -1083,6 +1133,35 @@ mod tests {
         a.reset();
         let rp = a.recency_plane(Polarity::On).unwrap();
         assert_eq!(rp.popcount_window(4, 0, 15, 2_000), 0);
+    }
+
+    #[test]
+    fn fully_expired_tracks_horizon_and_fresh_array_is_equivalent() {
+        let cfg = IscConfig { polarity_sensitive: true, ..IscConfig::default() };
+        let mut a = IscArray::new(Resolution::new(8, 6), cfg.clone());
+        assert!(a.fully_expired_at(0), "unwritten array is trivially expired");
+        a.write(&Event::new(1_000, 2, 3, Polarity::Off));
+        let horizon = a.memory_horizon_us();
+        assert!(!a.fully_expired_at(1_000 + horizon), "conservative at exactly the horizon");
+        assert!(!a.fully_expired_at(500), "non-causal query must answer false");
+        assert!(a.fully_expired_at(1_001 + horizon));
+        // The demotion law: once fully expired, a fresh array with the
+        // same config serves identical causal frames.
+        let fresh = IscArray::new(Resolution::new(8, 6), cfg);
+        let t = 1_001 + horizon;
+        assert_eq!(a.frame_merged(t), fresh.frame_merged(t));
+    }
+
+    #[test]
+    fn approx_bytes_counts_the_planes() {
+        let a = small();
+        let b = IscArray::new(
+            Resolution::new(16, 12),
+            IscConfig { polarity_sensitive: true, ..IscConfig::default() },
+        );
+        let base = a.approx_bytes();
+        assert!(base > 16 * 12 * (8 + 4), "must cover stamps + param indices");
+        assert!(b.approx_bytes() > base, "two planes cost more than one");
     }
 
     #[test]

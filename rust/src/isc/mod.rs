@@ -10,15 +10,24 @@
 //! `available_parallelism`, gated to 1 below 32 k pixels), D = rows
 //! written since the last snapshot.
 //!
-//! | Path | Before | After |
-//! |---|---|---|
-//! | event write (`write`/`write_batch`) | O(1) | O(1) amortized (mark + lazy expiry) |
-//! | frame readout (`frame_into`/`frame_merged_into`) | O(H·W) LUT scan | zero-fill + O(A) sorted-run LUT gathers, O(A/P) wall-clock |
-//! | dense fallback (activity > α = 20 %) | n/a | O(H·W / P) contiguous row scans (beats the list walk past α) |
-//! | partial re-render (`frame_merged_rows_into`) | full frame | O(D·W) — the router's dirty-band snapshot unit |
-//! | STCF support query (`count_recent_in_row`) | (2r+1)² indexed reads | 2r+1 row slices, integer-age test |
-//! | STCF support query, bitmask tier (`recency_plane`) | 2r+1 row slices | 2r+1 masked `u64` word loads + exact confirms of set-bit runs only (see [`crate::denoise`]) |
-//! | exact point read (`read`/`compare`) | closed form | unchanged (reference) |
+//! | Path | Before | After | Memory |
+//! |---|---|---|---|
+//! | event write (`write`/`write_batch`) | O(1) | O(1) amortized (mark + lazy expiry) | O(H·W) stamps + params per plane, counted by [`IscArray::approx_bytes`] |
+//! | frame readout (`frame_into`/`frame_merged_into`) | O(H·W) LUT scan | zero-fill + O(A) sorted-run LUT gathers, O(A/P) wall-clock | active lists O(A); recency bitmask +H·W/8 bits per plane when enabled |
+//! | dense fallback (activity > α = 20 %) | n/a | O(H·W / P) contiguous row scans (beats the list walk past α) | no extra state |
+//! | partial re-render (`frame_merged_rows_into`) | full frame | O(D·W) — the router's dirty-band snapshot unit | band buffers recycled by the caller |
+//! | STCF support query (`count_recent_in_row`) | (2r+1)² indexed reads | 2r+1 row slices, integer-age test | dense plane; the O(capacity) alternative is [`crate::denoise::StcfBackend::Cache`] |
+//! | STCF support query, bitmask tier (`recency_plane`) | 2r+1 row slices | 2r+1 masked `u64` word loads + exact confirms of set-bit runs only (see [`crate::denoise`]) | H·W/8 bits × 4 epoch buckets |
+//! | exact point read (`read`/`compare`) | closed form | unchanged (reference) | no extra state |
+//!
+//! A band array that sits idle past the memory horizon is **fully
+//! expired** ([`IscArray::fully_expired_at`]): it reads zero forever
+//! absent new writes, and — with the position-stable assignment — a
+//! freshly constructed array is bit-for-bit indistinguishable from it
+//! for all future causal reads. The coordinator/serve layers use this
+//! to demote cold bands to an unmaterialized state (lazy band
+//! materialization), making per-session resident bytes
+//! activity-proportional.
 //!
 //! Chunked rendering is bit-for-bit identical for every chunk count
 //! (each output row is a pure function of immutable plane state —

@@ -268,13 +268,25 @@ fn cmd_serve(args: &Args) -> i32 {
         "jobs executed: {}  rejected batches: {}  events dropped by backpressure: {}",
         fleet.jobs_executed, fleet.rejected_batches, dropped_by_backpressure,
     );
+    println!(
+        "resident memory: {:.2} MiB across {} sessions ({:.1} KiB/session mean — \
+         activity-proportional under lazy band materialization)",
+        fleet.resident_bytes as f64 / (1024.0 * 1024.0),
+        fleet.open_sessions,
+        fleet.resident_bytes as f64 / fleet.open_sessions.max(1) as f64 / 1024.0,
+    );
     for (k, sid) in sids.iter().enumerate() {
+        let resident = fleet
+            .sessions
+            .iter()
+            .find(|s| s.id == sid.raw())
+            .map_or(0, |s| s.resident_bytes);
         let report = manager.close(*sid).expect("close");
         let st = &report.stats;
         let p = &report.pipeline;
         println!(
             "  {:<12} {:>4}x{:<4} rate {:<3} | {:>7} in, {:>7} written, {:>6} dropped | \
-             {} frames | p50 {:.2} ms p99 {:.2} ms | peak queue {}",
+             {} frames | p50 {:.2} ms p99 {:.2} ms | peak queue {} | {:.1} KiB resident",
             st.name,
             st.res.width,
             st.res.height,
@@ -286,6 +298,7 @@ fn cmd_serve(args: &Args) -> i32 {
             st.batch_latency_p50_ms,
             st.batch_latency_p99_ms,
             st.peak_queue_depth,
+            resident as f64 / 1024.0,
         );
     }
     let final_stats = manager.shutdown();

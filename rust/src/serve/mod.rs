@@ -45,17 +45,21 @@
 //! With S open sessions, B bands per session, W workers, n events per
 //! batch and (2r+1)² STCF patches:
 //!
-//! | Operation | Producer side | Fleet side | Scaling |
-//! |---|---|---|---|
-//! | `ingest_batch` (no STCF) | O(n) stage + O(touched bands) job enqueues | O(n) writes | independent of S |
-//! | `ingest_batch` (sharded STCF) | O(n·(1 + halo dup)) item staging + reply merge | O(n·(2r+1)²) scoring across ≤ min(B, W) workers | per-session latency grows ∝ active sessions (fair share), fleet throughput bounded by W |
-//! | window frame | O(B) skip checks + composite memcpy | O(dirty) render work (dirty-band protocol) | clean bands cost no job at all |
-//! | `open`/`close` | O(B) actor setup / teardown jobs | bank fit per band (open), frees arrays (close) | bands gauge drops on close |
-//! | admission check | O(1) atomic read | — | rejects instead of buffering |
+//! | Operation | Producer side | Fleet side | Scaling | Resident memory |
+//! |---|---|---|---|---|
+//! | `ingest_batch` (no STCF) | O(n) stage + O(touched bands) job enqueues | O(n) writes | independent of S | first write materializes a band (lazy) — state is O(written bands), not O(H·W) |
+//! | `ingest_batch` (sharded STCF) | O(n·(1 + halo dup)) item staging + reply merge | O(n·(2r+1)²) scoring across ≤ min(B, W) workers | per-session latency grows ∝ active sessions (fair share), fleet throughput bounded by W | dense scorer surfaces O(H·W); [`crate::denoise::StcfBackend::Cache`] holds O(capacity) entries instead |
+//! | window frame | O(B) skip checks + composite memcpy | O(dirty) render work (dirty-band protocol) | clean bands cost no job at all | band buffers recycled; bands expired past the memory horizon **demote back to cold** |
+//! | `open`/`close` | O(B) actor setup / teardown jobs | cold band structs (open — no plane allocation, no bank fit until first write), frees arrays (close) | bands gauge drops on close | open ≈ O(B) structs; idle sessions decay toward that constant |
+//! | admission check | O(1) atomic read | — | rejects instead of buffering | — |
 //!
 //! Worker threads are bounded by [`ServeConfig::workers`] — never by
 //! session count: band renders run with `render_chunks = 1` and
-//! sessions spawn nothing.
+//! sessions spawn nothing. Per-session and fleet `resident_bytes`
+//! gauges ([`SessionStats`]/[`ServeStats`]) keep the memory column
+//! honest: the fleet workers re-measure a band after every job, so the
+//! gauge tracks materialization, growth, demotion and close with no
+//! producer round-trips.
 //!
 //! ## Exactness
 //!

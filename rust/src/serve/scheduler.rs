@@ -36,6 +36,17 @@ pub(crate) enum BandState {
     Scorer(Box<BandScorer>),
 }
 
+impl BandState {
+    /// Approximate resident bytes of the band's state (lazy writer
+    /// bands report only their struct size while cold).
+    fn approx_bytes(&self) -> usize {
+        match self {
+            BandState::Writer(w) => w.approx_bytes(),
+            BandState::Scorer(s) => s.approx_bytes(),
+        }
+    }
+}
+
 /// Reply to [`Job::Score`].
 pub(crate) struct ScoreDone {
     pub scores: Vec<(u32, u32)>,
@@ -93,6 +104,25 @@ pub(crate) struct BandSlot {
     /// Fleet gauge of live band states (decremented by [`Job::Close`]
     /// and by panic poisoning).
     open_bands: Arc<AtomicUsize>,
+    /// The owning session's resident-bytes gauge: after every job the
+    /// runner re-measures the band state and applies the delta, so the
+    /// gauge tracks materialization, demotion, growth and teardown
+    /// without any producer-side round-trip.
+    resident: Arc<AtomicUsize>,
+    /// This band's last reported contribution to `resident`.
+    last_bytes: usize,
+}
+
+/// Re-measure the slot's band state and fold the delta into the
+/// session's resident-bytes gauge.
+fn sync_resident(slot: &mut BandSlot) {
+    let now = slot.state.as_ref().map_or(0, BandState::approx_bytes);
+    if now >= slot.last_bytes {
+        slot.resident.fetch_add(now - slot.last_bytes, Ordering::SeqCst);
+    } else {
+        slot.resident.fetch_sub(slot.last_bytes - now, Ordering::SeqCst);
+    }
+    slot.last_bytes = now;
 }
 
 /// One (session, band) actor on the generic pool.
@@ -120,15 +150,21 @@ impl WorkerPool {
         self.pool.workers()
     }
 
-    /// Register a new band actor with the fleet gauges.
+    /// Register a new band actor with the fleet gauges. The band's
+    /// initial footprint lands on the session's resident gauge
+    /// immediately (lazy writer bands contribute only their struct).
     pub(crate) fn spawn_actor(
         &self,
         state: BandState,
         inflight: Arc<AtomicUsize>,
         open_bands: Arc<AtomicUsize>,
+        resident: Arc<AtomicUsize>,
     ) -> Arc<BandActor> {
         open_bands.fetch_add(1, Ordering::SeqCst);
-        self.pool.spawn_actor(BandSlot { state: Some(state), inflight, open_bands })
+        let mut slot =
+            BandSlot { state: Some(state), inflight, open_bands, resident, last_bytes: 0 };
+        sync_resident(&mut slot);
+        self.pool.spawn_actor(slot)
     }
 
     /// Enqueue `job` on `actor`'s FIFO; schedules the actor if idle.
@@ -174,6 +210,15 @@ fn poison(slot: &mut BandSlot) {
 }
 
 fn execute(job: Job, slot: &mut BandSlot) {
+    execute_inner(job, slot);
+    // One re-measure per job keeps the session's resident gauge honest
+    // across materialization (first write), demotion (expiry snapshot),
+    // active-set growth, poisoning and close — all of which change the
+    // band's footprint on the worker side.
+    sync_resident(slot);
+}
+
+fn execute_inner(job: Job, slot: &mut BandSlot) {
     use std::panic::{catch_unwind, AssertUnwindSafe};
     match job {
         Job::Write(mut batch) => {

@@ -69,10 +69,14 @@ impl std::fmt::Display for Reject {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             Reject::TooManySessions { open, max } => {
-                write!(f, "session limit reached ({open}/{max})")
+                write!(f, "session limit reached: {open} open of fleet cap {max}")
             }
             Reject::Backpressure { queued, max } => {
-                write!(f, "backpressure: {queued}/{max} write batches in flight")
+                write!(
+                    f,
+                    "backpressure: {queued} of {max} allowed write batches in flight; \
+                     retry after the fleet drains"
+                )
             }
             Reject::UnknownSession(id) => write!(f, "unknown session s{id}"),
         }
@@ -156,6 +160,10 @@ struct Session {
     caches: Vec<BandCache>,
     band_dirty: Vec<bool>,
     inflight: Arc<AtomicUsize>,
+    /// Resident bytes of the session's band states, maintained by the
+    /// fleet's workers as jobs complete (materialization, growth,
+    /// demotion, close — see `scheduler::sync_resident`).
+    resident: Arc<AtomicUsize>,
     // Streaming state (the pipeline's producer loop, verbatim).
     pre: Vec<LabeledEvent>,
     kept: Vec<LabeledEvent>,
@@ -395,6 +403,7 @@ impl Session {
             rejected_batches: self.rejected_batches,
             batch_latency_p50_ms: p50,
             batch_latency_p99_ms: p99,
+            resident_bytes: self.resident.load(Ordering::SeqCst),
         }
     }
 }
@@ -438,6 +447,7 @@ impl SessionManager {
         let id = SessionId(self.next_id);
         self.next_id += 1;
         let inflight = Arc::new(AtomicUsize::new(0));
+        let resident = Arc::new(AtomicUsize::new(0));
         let height = cfg.res.height as usize;
         let (band_h, n_bands) = band_layout(height, cfg.pipeline.router.n_shards);
         let write_actors: Vec<Arc<BandActor>> = (0..n_bands)
@@ -449,6 +459,7 @@ impl SessionManager {
                     BandState::Writer(Box::new(writer)),
                     inflight.clone(),
                     self.open_bands.clone(),
+                    resident.clone(),
                 )
             })
             .collect();
@@ -469,6 +480,7 @@ impl SessionManager {
                     BandState::Scorer(Box::new(scorer)),
                     inflight.clone(),
                     self.open_bands.clone(),
+                    resident.clone(),
                 )
             })
             .collect();
@@ -504,6 +516,7 @@ impl SessionManager {
                 .collect(),
             band_dirty: vec![false; n_bands],
             inflight,
+            resident,
             pre: Vec::with_capacity(batch_size),
             kept: Vec::with_capacity(batch_size),
             scores: Vec::new(),
@@ -682,6 +695,7 @@ impl SessionManager {
                 + sessions.iter().map(|s| s.rejected_batches).sum::<u64>(),
             events_in: self.closed_events_in
                 + sessions.iter().map(|s| s.events_in).sum::<u64>(),
+            resident_bytes: sessions.iter().map(|s| s.resident_bytes).sum(),
             sessions,
         }
     }

@@ -45,6 +45,13 @@ pub struct SessionStats {
     pub batch_latency_p50_ms: f64,
     /// p99 of per-`ingest_batch` wall latency, milliseconds.
     pub batch_latency_p99_ms: f64,
+    /// Approximate resident bytes of the session's band states (writer
+    /// arrays + scorer surfaces), maintained by the fleet workers as
+    /// jobs complete. Activity-proportional under lazy materialization:
+    /// cold bands contribute a small constant, and an idle session's
+    /// bytes decay as its bands expire past the memory horizon and
+    /// demote.
+    pub resident_bytes: usize,
 }
 
 /// Final accounting of one closed session.
@@ -77,6 +84,10 @@ pub struct ServeStats {
     pub rejected_batches: u64,
     /// Events accepted fleet-wide (closed sessions included).
     pub events_in: u64,
+    /// Approximate resident bytes across every open session's band
+    /// states (the sum of the per-session gauges) — the number the
+    /// idle-fleet `bench_serve` sweep reports per session.
+    pub resident_bytes: usize,
     /// Per-open-session live stats.
     pub sessions: Vec<SessionStats>,
 }

@@ -100,6 +100,17 @@ impl Sae {
         n
     }
 
+    /// Resident bytes of this SAE (timestamp plane + active set +
+    /// optional recency plane) — one leaf of the serve layer's
+    /// `resident_bytes` gauge. O(H·W) by construction: the dense term
+    /// the sparse STCF backend ([`crate::util::sparse`]) avoids.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.t.capacity() * std::mem::size_of::<u64>()
+            + self.active.approx_bytes()
+            + self.recency.as_ref().map_or(0, |rp| rp.approx_bytes())
+    }
+
     /// Dense reference readout: the full-H·W scan `frame_into` is proven
     /// bit-for-bit equivalent to (see `tests/readout_equiv.rs`).
     pub fn frame_dense_into(&self, out: &mut Grid<f64>, _t_us: u64) {

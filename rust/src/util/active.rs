@@ -190,6 +190,17 @@ impl ActiveSet {
         self.len = len;
     }
 
+    /// Resident bytes (struct, per-row list capacities, membership
+    /// flags). The `listed` flag plane is O(H·W) by construction — the
+    /// dense term the sparse session-memory work accounts for honestly
+    /// (see [`crate::util::sparse`] for the O(m) alternative).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.rows.iter().map(|r| r.capacity() * std::mem::size_of::<u16>()).sum::<usize>()
+            + self.rows.capacity() * std::mem::size_of::<Vec<u16>>()
+            + self.listed.capacity()
+    }
+
     /// Forget every pixel (power-on reset).
     pub fn clear(&mut self) {
         for row in &mut self.rows {

@@ -102,6 +102,14 @@ impl RecencyPlane {
         self.buckets.iter().map(|b| b.len() * 8).sum()
     }
 
+    /// Resident bytes (struct + bitmask buckets) — the serve layer's
+    /// `resident_bytes` accounting convention shared by every plane type.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.buckets.capacity() * std::mem::size_of::<Vec<u64>>()
+            + self.memory_bytes()
+    }
+
     /// Record a write at `(x, y)` at time `t_us`, recycling the target
     /// epoch bucket first if it still holds an **older** epoch. A bucket
     /// tagged with a *newer* epoch (possible only when marks arrive out

@@ -97,6 +97,12 @@ impl DecayLut {
         self.bins
     }
 
+    /// Resident bytes (struct + sample table) — the serve layer's
+    /// `resident_bytes` accounting convention.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.table.capacity() * std::mem::size_of::<f32>()
+    }
+
     #[inline]
     pub fn step_us(&self) -> u64 {
         self.step_us

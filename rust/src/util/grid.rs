@@ -147,6 +147,13 @@ impl<T: Clone> Grid<T> {
         slabs
     }
 
+    /// Resident bytes of this grid (struct + element buffer, using the
+    /// buffer's capacity so an over-allocated frame buffer is counted
+    /// honestly) — one leaf of the serve layer's `resident_bytes` gauge.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.data.capacity() * std::mem::size_of::<T>()
+    }
+
     /// Raw row-major slice.
     pub fn as_slice(&self) -> &[T] {
         &self.data

@@ -4,9 +4,11 @@
 //! decaying representation: the quantized decay LUT ([`decay`]), the
 //! per-row active-pixel tracker ([`active`]), the epoch-bucketed recency
 //! bitmask planes backing the STCF support fast path ([`bitplane`]), the
-//! scoped-thread row parallelism helpers ([`parallel`]), the
-//! loom-switchable concurrency facade ([`sync`]) and the generic
-//! per-actor-FIFO worker pool behind the serve scheduler ([`actor`]).
+//! set-associative sparse recency store behind the O(m) cache STCF
+//! backend ([`sparse`]), the scoped-thread row parallelism helpers
+//! ([`parallel`]), the loom-switchable concurrency facade ([`sync`]) and
+//! the generic per-actor-FIFO worker pool behind the serve scheduler
+//! ([`actor`]).
 
 pub mod active;
 pub mod actor;
@@ -19,5 +21,6 @@ pub mod grid;
 pub mod image;
 pub mod parallel;
 pub mod rng;
+pub mod sparse;
 pub mod stats;
 pub mod sync;

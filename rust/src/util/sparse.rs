@@ -1,0 +1,250 @@
+//! Set-associative sparse recency store — O(m) session memory for
+//! spatiotemporal filters (ROADMAP open item 4).
+//!
+//! Every dense backend in this crate keys state by pixel index into an
+//! O(H·W) plane, even when only a handful of pixels have fired recently.
+//! Zhao et al.'s cache-like DVS denoise filter (arXiv 2410.12423) shows
+//! the state a spatiotemporal support test actually needs is bounded by
+//! recent *activity*, not sensor area. [`SparseRecencyStore`] is that
+//! store: a fixed budget of (key → last timestamp) entries organised as
+//! a power-of-two number of sets with a bounded number of ways per set,
+//! hashed by pixel key.
+//!
+//! ## Eviction guarantee (the bounded-undercount law)
+//!
+//! Within a set, insertion evicts the entry with the **minimum** stored
+//! timestamp — so an evicted entry is provably older than every entry
+//! retained in its set at eviction time. A reader that misses therefore
+//! only ever under-reads *older* activity: for any query window, a probe
+//! that would have matched the evicted entry is at least as old as the
+//! set's retained minimum was, which bounds the undercount of
+//! [`crate::denoise::support_count`] to events older than everything the
+//! cache kept. While the working set fits (no set overflows its ways),
+//! reads are bit-for-bit identical to the dense store — see
+//! `tests/sparse_equiv.rs`.
+//!
+//! Lookup and insert are O(ways) probes with one hash — the
+//! "O(window) probes" cost model of the cache STCF backend.
+
+/// Pack a (plane, x, y) pixel coordinate into a store key. `plane`
+/// distinguishes polarity surfaces (0 = single/ON, 1 = OFF), mirroring
+/// the dense backends' per-polarity planes.
+#[inline]
+pub fn pixel_key(plane: u8, x: u16, y: u16) -> u64 {
+    ((plane as u64) << 32) | ((y as u64) << 16) | x as u64
+}
+
+/// SplitMix64 finalizer: a full-avalanche 64-bit mix, the same family
+/// the ISC mismatch assignment uses ([`crate::isc::param_index_at`]).
+#[inline]
+fn hash64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// One cache slot: `t == 0` means empty (the crate-wide "never written"
+/// sentinel — writers store `t.max(1)`, exactly like the dense SAE).
+#[derive(Clone, Copy, Default)]
+struct Slot {
+    key: u64,
+    t: u64,
+}
+
+/// Bounded set-associative map from pixel key to last event timestamp.
+///
+/// Capacity is fixed at construction (`sets × ways` slots, sets rounded
+/// up to a power of two); memory never grows with sensor resolution or
+/// stream length. See the module docs for the eviction guarantee.
+pub struct SparseRecencyStore {
+    slots: Vec<Slot>,
+    set_mask: u64,
+    ways: usize,
+    len: usize,
+    evictions: u64,
+}
+
+impl SparseRecencyStore {
+    /// Store holding at least `min_entries` slots organised as sets of
+    /// `ways`. The set count rounds up to a power of two, so the real
+    /// capacity may exceed `min_entries` by up to 2×.
+    pub fn new(min_entries: usize, ways: usize) -> Self {
+        let ways = ways.max(1);
+        let sets = min_entries.div_ceil(ways).next_power_of_two().max(1);
+        Self {
+            slots: vec![Slot::default(); sets * ways],
+            set_mask: sets as u64 - 1,
+            ways,
+            len: 0,
+            evictions: 0,
+        }
+    }
+
+    #[inline]
+    fn set_base(&self, key: u64) -> usize {
+        ((hash64(key) & self.set_mask) as usize) * self.ways
+    }
+
+    /// Last recorded timestamp for `key`, or `None` on a miss (never
+    /// written, or written and since evicted).
+    #[inline]
+    pub fn last(&self, key: u64) -> Option<u64> {
+        let base = self.set_base(key);
+        self.slots[base..base + self.ways]
+            .iter()
+            .find(|s| s.t != 0 && s.key == key)
+            .map(|s| s.t)
+    }
+
+    /// Record an event at `key`. Overwrites in place on a hit (latest
+    /// write wins, like the dense SAE), fills an empty way otherwise,
+    /// and past that evicts the set's **oldest** entry — the bounded-
+    /// undercount guarantee in the module docs.
+    pub fn mark(&mut self, key: u64, t_us: u64) {
+        let t = t_us.max(1);
+        let base = self.set_base(key);
+        let set = &mut self.slots[base..base + self.ways];
+        if let Some(s) = set.iter_mut().find(|s| s.t != 0 && s.key == key) {
+            s.t = t;
+            return;
+        }
+        if let Some(s) = set.iter_mut().find(|s| s.t == 0) {
+            *s = Slot { key, t };
+            self.len += 1;
+            return;
+        }
+        let mut victim = 0;
+        for (i, s) in set.iter().enumerate().skip(1) {
+            if s.t < set[victim].t {
+                victim = i;
+            }
+        }
+        debug_assert!(set.iter().all(|s| s.t >= set[victim].t));
+        set[victim] = Slot { key, t };
+        self.evictions += 1;
+    }
+
+    /// Live entries.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no entry is live.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Total slots (sets × ways) — the fixed memory budget.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Ways per set.
+    #[inline]
+    pub fn ways(&self) -> usize {
+        self.ways
+    }
+
+    /// Entries displaced so far (0 ⇔ every read so far was bit-for-bit
+    /// equivalent to a dense store).
+    #[inline]
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Drop every entry; capacity is retained.
+    pub fn clear(&mut self) {
+        self.slots.fill(Slot::default());
+        self.len = 0;
+        self.evictions = 0;
+    }
+
+    /// Resident heap + struct bytes (exact for this type: the slot
+    /// vector never reallocates).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<Self>() + self.slots.len() * std::mem::size_of::<Slot>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_and_overwrite() {
+        let mut s = SparseRecencyStore::new(64, 4);
+        let k = pixel_key(0, 3, 7);
+        assert_eq!(s.last(k), None);
+        s.mark(k, 100);
+        assert_eq!(s.last(k), Some(100));
+        s.mark(k, 250);
+        assert_eq!(s.last(k), Some(250), "latest write wins in place");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.evictions(), 0);
+    }
+
+    #[test]
+    fn zero_timestamp_is_clamped_like_the_dense_sae() {
+        let mut s = SparseRecencyStore::new(16, 2);
+        s.mark(pixel_key(0, 0, 0), 0);
+        assert_eq!(s.last(pixel_key(0, 0, 0)), Some(1));
+    }
+
+    #[test]
+    fn plane_bit_separates_polarity_surfaces() {
+        let mut s = SparseRecencyStore::new(64, 4);
+        s.mark(pixel_key(0, 5, 5), 10);
+        s.mark(pixel_key(1, 5, 5), 20);
+        assert_eq!(s.last(pixel_key(0, 5, 5)), Some(10));
+        assert_eq!(s.last(pixel_key(1, 5, 5)), Some(20));
+    }
+
+    #[test]
+    fn eviction_removes_the_sets_oldest_entry() {
+        // 1 set × 2 ways: the third distinct key must evict, and the
+        // victim must be the older of the two residents.
+        let mut s = SparseRecencyStore::new(2, 2);
+        assert_eq!(s.capacity(), 2);
+        let (a, b, c) = (pixel_key(0, 1, 0), pixel_key(0, 2, 0), pixel_key(0, 3, 0));
+        s.mark(a, 100);
+        s.mark(b, 900);
+        s.mark(c, 500);
+        assert_eq!(s.evictions(), 1);
+        assert_eq!(s.last(a), None, "oldest entry (t=100) must be the victim");
+        assert_eq!(s.last(b), Some(900));
+        assert_eq!(s.last(c), Some(500));
+        // The retained minimum (500) exceeds the evicted stamp (100):
+        // the bounded-undercount law.
+    }
+
+    #[test]
+    fn capacity_is_fixed_and_len_bounded() {
+        let mut s = SparseRecencyStore::new(100, 4);
+        let cap = s.capacity();
+        assert!(cap >= 100 && cap.is_power_of_two() || (cap / 4).is_power_of_two());
+        let bytes = s.approx_bytes();
+        for k in 0..10_000u64 {
+            s.mark(pixel_key(0, (k % 640) as u16, (k / 640) as u16), 1 + k);
+        }
+        assert!(s.len() <= cap);
+        assert_eq!(s.approx_bytes(), bytes, "memory never grows");
+        assert!(s.evictions() > 0);
+    }
+
+    #[test]
+    fn clear_empties_but_keeps_capacity() {
+        let mut s = SparseRecencyStore::new(32, 4);
+        s.mark(pixel_key(0, 1, 1), 7);
+        assert!(!s.is_empty());
+        let cap = s.capacity();
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.capacity(), cap);
+        assert_eq!(s.last(pixel_key(0, 1, 1)), None);
+    }
+}

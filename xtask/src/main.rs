@@ -9,6 +9,7 @@
 //! | `missing-safety-comment` | every `unsafe` carries a `// SAFETY:` comment on the same or one of the 3 preceding lines |
 //! | `undocumented-pub-item` | every pub fn/struct/enum/trait/type/const/static in `serve`/`coordinator`/`denoise` has a doc comment |
 //! | `unanchored-band-array` | band-scoped array construction anchors with `IscConfig::origin_y`; no raw `y - band_start` rebasing |
+//! | `eager-alloc` | no full-resolution allocations (`vec!`/`Vec::with_capacity` sized by `w * h` / `width * height`) in `serve/`/`coordinator/` — band state materializes lazily on first write (PR 7); justified exceptions carry `lint-invariants: allow(eager-alloc)` |
 //!
 //! The scanners are deliberately line-based over rustfmt-shaped source —
 //! dependency-free, so the suite builds in offline containers. Each rule
@@ -338,6 +339,49 @@ fn check_band_anchoring(path: &str, src: &str) -> Vec<Violation> {
     out
 }
 
+/// Allocation call sites the eager-alloc rule inspects.
+const ALLOC_SITES: &[&str] = &["vec!", "Vec::with_capacity("];
+
+/// Lazy-materialization law (PR 7): `serve/` and `coordinator/` hold
+/// per-session state whose footprint must be activity-proportional, so
+/// a `vec!` / `Vec::with_capacity` sized by the sensor resolution
+/// (`w * h`, `width * height`) is an eager O(H·W) allocation that
+/// bypasses lazy band materialization. Full-resolution state goes
+/// through the materialization helpers (`IscArray::new` inside
+/// `BandWriter::apply_batch`, render buffers via `Grid::ensure_shape`);
+/// a justified exception carries `lint-invariants: allow(eager-alloc)`.
+fn check_eager_alloc(path: &str, src: &str) -> Vec<Violation> {
+    if !["serve/", "coordinator/"].iter().any(|d| path.contains(d)) {
+        return Vec::new();
+    }
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        if !ALLOC_SITES.iter().any(|s| code.contains(s)) {
+            continue;
+        }
+        // Whitespace-normalized so rustfmt line breaks inside the size
+        // expression don't matter for the single-line forms we target.
+        let flat = code.split_whitespace().collect::<Vec<_>>().join(" ");
+        let full_res = flat.contains("w * h")
+            || flat.contains("h * w")
+            || (flat.contains('*') && flat.contains("width") && flat.contains("height"));
+        if full_res && !suppressed(&lines, i, "eager-alloc") {
+            out.push(Violation {
+                file: path.to_string(),
+                line: i + 1,
+                rule: "eager-alloc",
+                msg: "full-resolution allocation in the session stack — materialize \
+                      lazily on first write (see BandWriter) or justify with \
+                      `lint-invariants: allow(eager-alloc)`"
+                    .to_string(),
+            });
+        }
+    }
+    out
+}
+
 /// Run every rule over one file.
 fn check_file(path: &str, src: &str) -> Vec<Violation> {
     let mut out = Vec::new();
@@ -346,6 +390,7 @@ fn check_file(path: &str, src: &str) -> Vec<Violation> {
     out.extend(check_safety_comments(path, src));
     out.extend(check_pub_docs(path, src));
     out.extend(check_band_anchoring(path, src));
+    out.extend(check_eager_alloc(path, src));
     out
 }
 
@@ -624,6 +669,53 @@ fn isc(res: Resolution, cfg: IscConfig) -> StcfBackend {
         let src = "let yl = e.y as usize - band_start;\n";
         let v = check_band_anchoring("denoise/sharded.rs", src);
         assert_eq!(v.len(), 1);
+    }
+
+    // ---- eager-alloc ----
+
+    #[test]
+    fn catches_full_resolution_vec_in_serve() {
+        let src = "
+fn open_session(res: Resolution) -> Vec<f64> {
+    vec![0.0; res.width as usize * res.height as usize]
+}
+";
+        let v = check_eager_alloc("serve/session.rs", src);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "eager-alloc");
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn catches_with_capacity_w_times_h_in_coordinator() {
+        let src = "let buf: Vec<f64> = Vec::with_capacity(w * h);\n";
+        assert_eq!(check_eager_alloc("coordinator/router.rs", src).len(), 1);
+    }
+
+    #[test]
+    fn batch_sized_allocs_are_fine() {
+        let src = "
+fn staging(batch_size: usize, n_bands: usize) -> Vec<Vec<Event>> {
+    let mut v = Vec::with_capacity(n_bands);
+    v.push(Vec::with_capacity(batch_size));
+    v
+}
+";
+        assert!(check_eager_alloc("coordinator/router.rs", src).is_empty());
+    }
+
+    #[test]
+    fn eager_alloc_scope_and_suppression() {
+        // Outside serve/ and coordinator/ the rule does not apply (the
+        // dense backends legitimately allocate O(H·W) surfaces).
+        let src = "let t = vec![0u64; width * height];\n";
+        assert!(check_eager_alloc("tsurface/sae.rs", src).is_empty());
+        // Inside, a justified exception is suppressible.
+        let allowed = "
+// lint-invariants: allow(eager-alloc)
+let composite = vec![0.0; res.width as usize * res.height as usize];
+";
+        assert!(check_eager_alloc("serve/session.rs", allowed).is_empty());
     }
 
     // ---- whole-tree gate ----
