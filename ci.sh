@@ -7,9 +7,10 @@
 # snapshot frames_per_sec), BENCH_denoise.json (support-scan tier
 # sweep + denoise-shard scaling, events_per_sec) and BENCH_serve.json
 # (multi-tenant sessions × workers sweep, aggregate events_per_sec +
-# snapshot_p99_ms, plus the idle-fleet memory sweep's
-# resident_bytes_per_session at 1/10/100 % duty) at the repo root so
-# successive PRs can be compared.
+# snapshot_p99_ms, the idle-fleet memory sweep's
+# resident_bytes_per_session at 1/10/100 % duty, and the wire-mode
+# loopback-TCP round trip's wire_to_snapshot_p99_us) at the repo root
+# so successive PRs can be compared.
 # A missing or empty snapshot is a hard failure — a bench binary that
 # silently stopped emitting its JSON would otherwise erase the perf
 # trajectory without anyone noticing.
@@ -63,12 +64,14 @@ for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json BENCH_serve
     fi
 done
 
-# The serve snapshot must carry the idle-fleet memory sweep: quiet
+# The serve snapshot must carry the idle-fleet memory sweep (quiet
 # sessions' resident bytes are the lazy-materialization regression
-# canary (same hard-fail policy as a missing snapshot).
-for key in resident_bytes_per_session duty_pct; do
+# canary) AND the wire-mode round trip (wire_to_snapshot_p99_us proves
+# the TCP front door was actually exercised end to end) — same
+# hard-fail policy as a missing snapshot.
+for key in resident_bytes_per_session duty_pct wire_to_snapshot_p99_us; do
     if [ -s rust/BENCH_serve.json ] && ! grep -q "\"$key\"" rust/BENCH_serve.json; then
-        echo "ci.sh: ERROR — rust/BENCH_serve.json lacks the idle-fleet sweep key \"$key\"" >&2
+        echo "ci.sh: ERROR — rust/BENCH_serve.json lacks required bench key \"$key\"" >&2
         fail=1
     fi
 done

@@ -12,13 +12,14 @@
 //! manifest; CI uploads it alongside the tsurface/router/denoise
 //! snapshots and hard-fails if the idle-fleet keys are missing.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 use tsisc::coordinator::{PipelineConfig, RouterConfig};
 use tsisc::denoise::StcfParams;
 use tsisc::events::scene::EdgeScene;
 use tsisc::events::v2e::{convert, DvsParams};
-use tsisc::events::{LabeledEvent, Resolution};
+use tsisc::events::{Event, LabeledEvent, Resolution};
 use tsisc::isc::IscConfig;
+use tsisc::serve::net::{ClientConfig, Hello, NetClient, NetConfig, NetServer};
 use tsisc::serve::{ServeConfig, SessionConfig, SessionManager};
 use tsisc::util::bench::{bench, dump_json, header, JsonEntry};
 use tsisc::util::stats::percentile;
@@ -184,6 +185,78 @@ fn bench_idle_fleet(
     m.shutdown();
 }
 
+/// Wire mode: the same workload shipped over loopback TCP through the
+/// `serve::net` front door — AER-encoded BATCH frames in, a timed
+/// SNAPSHOT_REQ round trip out. `wire_to_snapshot_p99_us` is the p99 of
+/// request-to-frame latency *including* framing, CRC, socket hops and
+/// the session flush — the end-to-end number a real camera client sees.
+fn bench_wire(json: &mut Vec<JsonEntry>, base: &[LabeledEvent], span: u64, res: Resolution) {
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetConfig {
+            serve: ServeConfig { workers: 4, max_sessions: 4, max_inflight_batches: 1 << 20 },
+            read_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(5),
+            error_budget: 8,
+            max_connections: 8,
+            max_frame_bytes: 64 << 20,
+            retry_after_ms: 1,
+        },
+    )
+    .expect("bind loopback bench server");
+    let mut client = NetClient::connect(server.local_addr(), ClientConfig::default())
+        .expect("connect bench client");
+    client
+        .hello(&Hello {
+            name: "bench-wire".into(),
+            width: res.width,
+            height: res.height,
+            t_end_us: 0, // no window clock: snapshots are timed explicitly
+            window_us: 50_000,
+            batch_size: 4_096,
+            n_shards: 4,
+            denoise_shards: 0,
+            stcf: false,
+        })
+        .expect("bench HELLO admitted");
+
+    let evs_base: Vec<Event> = base.iter().map(|l| l.ev).collect();
+    let mut shifted = evs_base.clone();
+    let mut offset = 0u64;
+    let mut snap_lat: Vec<f64> = Vec::new();
+    let r = bench("serve wire: 1 camera over loopback TCP", base.len() as f64, 20, 100, || {
+        offset += span;
+        for (dst, src) in shifted.iter_mut().zip(&evs_base) {
+            *dst = *src;
+            dst.t += offset;
+        }
+        for chunk in shifted.chunks(2_048) {
+            client.send_batch(chunk).expect("bench batch acked");
+        }
+        let t0 = Instant::now();
+        std::hint::black_box(client.snapshot(offset + span).expect("bench snapshot"));
+        snap_lat.push(t0.elapsed().as_secs_f64());
+    });
+    println!("{}", r.report());
+    let p99_us = percentile(&snap_lat, 99.0) * 1e6;
+    println!("    wire→snapshot p99 {p99_us:.1} µs over {} round trips", snap_lat.len());
+    let tput = r.throughput_per_sec();
+    let mut entry = JsonEntry::with(r, "sessions", 1.0);
+    entry.extra.push(("wire", 1.0));
+    entry.extra.push(("events_per_sec", tput));
+    entry.extra.push(("wire_to_snapshot_p99_us", p99_us));
+    json.push(entry);
+
+    client.bye().expect("bench BYE");
+    let stats = server.shutdown();
+    assert_eq!(
+        stats.net.drain_accounting_mismatches, 0,
+        "bench stream lost acked events: {:?}",
+        stats.net
+    );
+}
+
 fn main() {
     let mut json: Vec<JsonEntry> = Vec::new();
     let res = Resolution::new(64, 64);
@@ -219,6 +292,10 @@ fn main() {
     for &duty in &[1usize, 10, 100] {
         bench_idle_fleet(&mut json, &base, span, 256, duty);
     }
+
+    // --- wire mode (TCP front door, end-to-end) ---------------------------
+    header("serve wire: loopback TCP ingest + snapshot round trip");
+    bench_wire(&mut json, &base, span, res);
 
     dump_json(&json, "BENCH_serve.json");
 }

@@ -1,6 +1,7 @@
 //! Minimal command-line parsing (offline substitute for `clap`).
 //!
-//! Supports `program <subcommand> [positional...] [--flag] [--key value]`.
+//! Supports `program <subcommand> [positional...] [--flag] [--key value]
+//! [--key=value]`.
 
 use std::collections::HashMap;
 
@@ -36,7 +37,13 @@ impl Args {
         let mut iter = args.into_iter().peekable();
         while let Some(a) = iter.next() {
             if let Some(name) = a.strip_prefix("--") {
+                // `--key=value` binds inline (the value may itself start
+                // with a dash or contain further `=`s); otherwise
                 // `--key value` unless the next token is another flag/end.
+                if let Some((key, value)) = name.split_once('=') {
+                    out.flags.insert(key.to_string(), Some(value.to_string()));
+                    continue;
+                }
                 let value = match iter.peek() {
                     Some(v) if !is_flag_token(v) => Some(iter.next().unwrap()),
                     _ => None,
@@ -135,5 +142,21 @@ mod tests {
     fn bare_dash_is_a_value() {
         let a = parse("x --input -");
         assert_eq!(a.get("input"), Some("-"));
+    }
+
+    #[test]
+    fn equals_form_binds_inline() {
+        let a = parse("serve --listen=127.0.0.1:7400 --workers=8 --bias=-0.5 --empty= --x -v");
+        assert_eq!(a.get("listen"), Some("127.0.0.1:7400"));
+        assert_eq!(a.get_parsed("workers", 0usize), 8);
+        // Dash-leading and empty values bind too — `=` is unambiguous.
+        assert_eq!(a.get_parsed("bias", 0.0f64), -0.5);
+        assert_eq!(a.get("empty"), Some(""));
+        // Only the first `=` splits; the rest stays in the value.
+        let b = parse("x --kv=a=b");
+        assert_eq!(b.get("kv"), Some("a=b"));
+        // The equals form never swallows the next token.
+        assert!(a.flag("x"));
+        assert_eq!(a.get("x"), None);
     }
 }

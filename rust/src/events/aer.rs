@@ -4,10 +4,23 @@
 //! AER encoder, crosses a bus, and is decoded on the memory die (Fig. 3a).
 //! This module implements that interchange: a compact binary encoding with
 //! timestamp delta compression (the standard AER-DAT style trick), used by
-//! the coordinator's transport layer and by the architecture model to count
-//! toggled wire bits for the energy estimate.
+//! the coordinator's transport layer, the architecture model (toggled wire
+//! bits for the energy estimate), and the TCP front door in `serve::net`.
+//!
+//! The decoder is strict: a record must be complete, its coordinates must
+//! lie inside the declared geometry, and its varint Δt must be *canonical*
+//! (the unique shortest encoding). Overlong varints are how a corrupted or
+//! adversarial stream smuggles ambiguity past a delta decoder, so they are
+//! a typed error, not a tolerated alias. [`AerDecoder`] is the incremental
+//! form used on the wire path: bytes arrive in arbitrary read-sized chunks
+//! and a record split across chunks is carried in a bounded stash — never
+//! copied wholesale, never re-parsed from the start.
 
 use super::event::{Event, Polarity, Resolution};
+
+/// Longest possible record: a 10-byte varint Δt + 2×u16 coords + 1 polarity
+/// byte. The incremental decoder's partial-record stash never exceeds this.
+pub const MAX_RECORD_BYTES: usize = 15;
 
 /// Errors produced when decoding a corrupt AER byte stream.
 #[derive(Debug, PartialEq, Eq)]
@@ -18,6 +31,8 @@ pub enum AerError {
     OutOfRange { x: u16, y: u16 },
     /// Timestamp delta overflowed the accumulator.
     TimestampOverflow,
+    /// Varint Δt was not the canonical shortest encoding.
+    NonCanonical,
 }
 
 impl std::fmt::Display for AerError {
@@ -26,6 +41,7 @@ impl std::fmt::Display for AerError {
             AerError::Truncated => write!(f, "AER stream truncated mid-record"),
             AerError::OutOfRange { x, y } => write!(f, "AER coordinate ({x},{y}) out of range"),
             AerError::TimestampOverflow => write!(f, "AER timestamp accumulator overflow"),
+            AerError::NonCanonical => write!(f, "AER varint delta is not canonical (overlong)"),
         }
     }
 }
@@ -54,25 +70,149 @@ pub fn encode(events: &[Event]) -> Vec<u8> {
 /// Decode a byte stream produced by [`encode`], validating geometry.
 pub fn decode(bytes: &[u8], res: Resolution) -> Result<Vec<Event>, AerError> {
     let mut events = Vec::new();
-    let mut pos = 0usize;
-    let mut t = 0u64;
-    while pos < bytes.len() {
-        let (dt, used) = read_varint(&bytes[pos..]).ok_or(AerError::Truncated)?;
-        pos += used;
-        t = t.checked_add(dt).ok_or(AerError::TimestampOverflow)?;
-        if pos + 5 > bytes.len() {
-            return Err(AerError::Truncated);
-        }
-        let x = u16::from_le_bytes([bytes[pos], bytes[pos + 1]]);
-        let y = u16::from_le_bytes([bytes[pos + 2], bytes[pos + 3]]);
-        let p = if bytes[pos + 4] != 0 { Polarity::On } else { Polarity::Off };
-        pos += 5;
-        if !res.contains(x, y) {
-            return Err(AerError::OutOfRange { x, y });
-        }
-        events.push(Event { t, x, y, p });
-    }
+    decode_into(bytes, res, &mut events)?;
     Ok(events)
+}
+
+/// Decode into a caller-owned buffer so hot paths reuse allocations.
+///
+/// Appends to `out` (it is *not* cleared). On error, `out` holds the valid
+/// prefix of records decoded before the corruption — callers that want
+/// all-or-nothing semantics (like [`decode`]) discard it; the net ingest
+/// path uses the prefix property to account partially-decoded frames.
+pub fn decode_into(bytes: &[u8], res: Resolution, out: &mut Vec<Event>) -> Result<(), AerError> {
+    let mut dec = AerDecoder::new(res);
+    dec.push(bytes, out)?;
+    dec.finish()
+}
+
+/// Incremental, resumable AER decoder.
+///
+/// Feed byte chunks with [`push`](AerDecoder::push) as they arrive off a
+/// socket; complete records are appended to the output immediately and a
+/// record split across chunk boundaries is carried in a stash bounded by
+/// [`MAX_RECORD_BYTES`] — the next `push` completes it without re-parsing
+/// or buffering the whole frame. Call [`finish`](AerDecoder::finish) at
+/// end-of-stream to reject a dangling partial record, and
+/// [`reset`](AerDecoder::reset) to reuse the decoder for an independent
+/// stream (timestamps restart from zero).
+#[derive(Debug)]
+pub struct AerDecoder {
+    res: Resolution,
+    t: u64,
+    stash: [u8; MAX_RECORD_BYTES],
+    stash_len: usize,
+}
+
+impl AerDecoder {
+    /// New decoder for streams using the given geometry.
+    pub fn new(res: Resolution) -> Self {
+        Self { res, t: 0, stash: [0; MAX_RECORD_BYTES], stash_len: 0 }
+    }
+
+    /// Forget all stream state (timestamp accumulator and partial record).
+    pub fn reset(&mut self) {
+        self.t = 0;
+        self.stash_len = 0;
+    }
+
+    /// Bytes of a partial record carried over from the previous chunk.
+    pub fn pending(&self) -> usize {
+        self.stash_len
+    }
+
+    /// Decode one chunk, appending complete records to `out`.
+    ///
+    /// Returns the number of events appended. After any error the decoder
+    /// is reset; the bytes already appended to `out` remain valid (they
+    /// are the stream prefix that decoded cleanly before the corruption).
+    pub fn push(&mut self, mut bytes: &[u8], out: &mut Vec<Event>) -> Result<usize, AerError> {
+        let n0 = out.len();
+        // Complete a carried partial record first: copy just enough new
+        // bytes into the bounded stash to finish it.
+        while self.stash_len > 0 && !bytes.is_empty() {
+            let take = (MAX_RECORD_BYTES - self.stash_len).min(bytes.len());
+            self.stash[self.stash_len..self.stash_len + take].copy_from_slice(&bytes[..take]);
+            match parse_record(&self.stash[..self.stash_len + take], self.t, self.res) {
+                Err(e) => {
+                    self.reset();
+                    return Err(e);
+                }
+                Ok(Some((ev, used))) => {
+                    debug_assert!(used > self.stash_len);
+                    bytes = &bytes[used - self.stash_len..];
+                    self.stash_len = 0;
+                    self.t = ev.t;
+                    out.push(ev);
+                }
+                Ok(None) => {
+                    self.stash_len += take;
+                    if self.stash_len == MAX_RECORD_BYTES {
+                        // A record can never exceed MAX_RECORD_BYTES, so a
+                        // full stash that still won't parse is corrupt.
+                        self.reset();
+                        return Err(AerError::NonCanonical);
+                    }
+                    return Ok(out.len() - n0);
+                }
+            }
+        }
+        // Fast path: parse straight out of the caller's chunk, zero-copy.
+        loop {
+            match parse_record(bytes, self.t, self.res) {
+                Err(e) => {
+                    self.reset();
+                    return Err(e);
+                }
+                Ok(Some((ev, used))) => {
+                    self.t = ev.t;
+                    out.push(ev);
+                    bytes = &bytes[used..];
+                }
+                Ok(None) => break,
+            }
+        }
+        // Stash the bounded partial tail for the next chunk.
+        debug_assert!(bytes.len() < MAX_RECORD_BYTES);
+        self.stash[..bytes.len()].copy_from_slice(bytes);
+        self.stash_len = bytes.len();
+        Ok(out.len() - n0)
+    }
+
+    /// End-of-stream check: a dangling partial record is a truncation.
+    pub fn finish(&mut self) -> Result<(), AerError> {
+        if self.stash_len > 0 {
+            self.reset();
+            Err(AerError::Truncated)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Parse one record from the front of `buf`. `Ok(None)` means the buffer
+/// ends inside the record (incomplete, not corrupt); incompleteness is only
+/// ever reported for buffers shorter than [`MAX_RECORD_BYTES`].
+fn parse_record(
+    buf: &[u8],
+    t_acc: u64,
+    res: Resolution,
+) -> Result<Option<(Event, usize)>, AerError> {
+    let (dt, used) = match read_varint_canonical(buf)? {
+        Some(v) => v,
+        None => return Ok(None),
+    };
+    if buf.len() < used + 5 {
+        return Ok(None);
+    }
+    let t = t_acc.checked_add(dt).ok_or(AerError::TimestampOverflow)?;
+    let x = u16::from_le_bytes([buf[used], buf[used + 1]]);
+    let y = u16::from_le_bytes([buf[used + 2], buf[used + 3]]);
+    if !res.contains(x, y) {
+        return Err(AerError::OutOfRange { x, y });
+    }
+    let p = if buf[used + 4] != 0 { Polarity::On } else { Polarity::Off };
+    Ok(Some((Event { t, x, y, p }, used + 5)))
 }
 
 /// Number of address bits for one AER word at the given geometry — what the
@@ -97,20 +237,32 @@ fn write_varint(out: &mut Vec<u8>, mut v: u64) {
     }
 }
 
-fn read_varint(bytes: &[u8]) -> Option<(u64, usize)> {
+/// Read a canonical LEB128 varint. `Ok(None)` = buffer ends mid-varint.
+///
+/// Rejections: an overlong encoding (a multi-byte varint whose final byte
+/// is zero re-encodes shorter), a continuation past the 10th byte, and —
+/// fixing a latent bug in the old reader, which silently *dropped* the high
+/// bits of the 10th byte — any 10th byte carrying bits beyond 2^63.
+fn read_varint_canonical(bytes: &[u8]) -> Result<Option<(u64, usize)>, AerError> {
     let mut v = 0u64;
-    let mut shift = 0u32;
     for (i, &b) in bytes.iter().enumerate() {
-        if shift >= 64 {
-            return None;
+        if i == 9 {
+            if b & 0x80 != 0 {
+                return Err(AerError::NonCanonical);
+            }
+            if b > 1 {
+                return Err(AerError::TimestampOverflow);
+            }
         }
-        v |= ((b & 0x7f) as u64) << shift;
+        v |= ((b & 0x7f) as u64) << (7 * i as u32);
         if b & 0x80 == 0 {
-            return Some((v, i + 1));
+            if i > 0 && b == 0 {
+                return Err(AerError::NonCanonical);
+            }
+            return Ok(Some((v, i + 1)));
         }
-        shift += 7;
     }
-    None
+    Ok(None)
 }
 
 #[cfg(test)]
@@ -149,6 +301,111 @@ mod tests {
     }
 
     #[test]
+    fn decode_rejects_overlong_varint() {
+        // Δt = 0 encoded in two bytes (0x80 0x00) instead of one (0x00).
+        let bytes = [0x80, 0x00, 1, 0, 2, 0, 1];
+        assert_eq!(decode(&bytes, Resolution::QVGA), Err(AerError::NonCanonical));
+    }
+
+    #[test]
+    fn decode_rejects_varint_past_ten_bytes() {
+        // Eleven continuation bytes: rejected, never silently truncated.
+        let bytes = [0xff; 16];
+        assert_eq!(decode(&bytes, Resolution::QVGA), Err(AerError::NonCanonical));
+    }
+
+    #[test]
+    fn decode_rejects_tenth_byte_overflow_bits() {
+        // Nine continuation bytes then 0x02: bit 64, dropped by the old
+        // reader, now a typed overflow.
+        let mut bytes = vec![0x80u8; 9];
+        bytes.push(0x02);
+        bytes.extend_from_slice(&[1, 0, 2, 0, 1]);
+        assert_eq!(decode(&bytes, Resolution::QVGA), Err(AerError::TimestampOverflow));
+    }
+
+    #[test]
+    fn decode_accepts_full_width_delta() {
+        // u64::MAX is a legal (canonical, 10-byte) first delta.
+        let evs = vec![Event::new(u64::MAX, 3, 4, Polarity::Off)];
+        assert_eq!(decode(&encode(&evs), Resolution::QVGA).unwrap(), evs);
+    }
+
+    #[test]
+    fn decode_into_appends_and_reuses() {
+        let a = vec![Event::new(5, 1, 1, Polarity::On)];
+        let b = vec![Event::new(9, 2, 2, Polarity::Off)];
+        let mut out = Vec::new();
+        decode_into(&encode(&a), Resolution::QVGA, &mut out).unwrap();
+        decode_into(&encode(&b), Resolution::QVGA, &mut out).unwrap();
+        assert_eq!(out, vec![a[0], b[0]]);
+    }
+
+    #[test]
+    fn decode_into_keeps_valid_prefix_on_error() {
+        let evs = vec![
+            Event::new(10, 1, 2, Polarity::On),
+            Event::new(20, 3, 4, Polarity::Off),
+        ];
+        let mut bytes = encode(&evs);
+        bytes.pop(); // truncate inside the second record
+        let mut out = Vec::new();
+        assert_eq!(
+            decode_into(&bytes, Resolution::QVGA, &mut out),
+            Err(AerError::Truncated)
+        );
+        assert_eq!(out, vec![evs[0]]);
+    }
+
+    #[test]
+    fn incremental_decoder_matches_oneshot_at_every_split() {
+        let evs: Vec<Event> = (0..40)
+            .map(|i| {
+                Event::new(i as u64 * 1_000_003, (i % 64) as u16, (i % 48) as u16, Polarity::On)
+            })
+            .collect();
+        let bytes = encode(&evs);
+        for split in 0..=bytes.len() {
+            let mut dec = AerDecoder::new(Resolution::QVGA);
+            let mut out = Vec::new();
+            dec.push(&bytes[..split], &mut out).unwrap();
+            dec.push(&bytes[split..], &mut out).unwrap();
+            dec.finish().unwrap();
+            assert_eq!(out, evs, "split at {split}");
+        }
+    }
+
+    #[test]
+    fn incremental_decoder_byte_at_a_time() {
+        let evs = vec![
+            Event::new(0, 0, 0, Polarity::On),
+            Event::new(1 << 40, 319, 239, Polarity::Off),
+        ];
+        let bytes = encode(&evs);
+        let mut dec = AerDecoder::new(Resolution::QVGA);
+        let mut out = Vec::new();
+        for b in &bytes {
+            dec.push(std::slice::from_ref(b), &mut out).unwrap();
+            assert!(dec.pending() < MAX_RECORD_BYTES);
+        }
+        dec.finish().unwrap();
+        assert_eq!(out, evs);
+    }
+
+    #[test]
+    fn incremental_decoder_finish_flags_partial() {
+        let bytes = encode(&[Event::new(7, 1, 1, Polarity::On)]);
+        let mut dec = AerDecoder::new(Resolution::QVGA);
+        let mut out = Vec::new();
+        dec.push(&bytes[..bytes.len() - 1], &mut out).unwrap();
+        assert!(dec.pending() > 0);
+        assert_eq!(dec.finish(), Err(AerError::Truncated));
+        // finish() resets: the decoder is reusable afterwards.
+        dec.push(&bytes, &mut out).unwrap();
+        dec.finish().unwrap();
+    }
+
+    #[test]
     fn address_bits_qvga() {
         // 9 bits column (0..319) + 8 bits row (0..239) + 1 polarity = 18.
         assert_eq!(address_bits(Resolution::QVGA), 18);
@@ -157,10 +414,10 @@ mod tests {
 
     #[test]
     fn varint_boundaries() {
-        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX / 2] {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX / 2, u64::MAX] {
             let mut buf = Vec::new();
             write_varint(&mut buf, v);
-            let (back, used) = read_varint(&buf).unwrap();
+            let (back, used) = read_varint_canonical(&buf).unwrap().unwrap();
             assert_eq!(back, v);
             assert_eq!(used, buf.len());
         }
@@ -184,6 +441,31 @@ mod tests {
                 .collect();
             let back = decode(&encode(&evs), Resolution::QVGA).unwrap();
             assert_eq!(evs, back);
+        });
+    }
+
+    #[test]
+    fn prop_chunked_decode_matches_oneshot() {
+        check("aer chunked decode", 100, |g| {
+            let n = g.usize(1, 120);
+            let mut t = 0u64;
+            let evs: Vec<Event> = (0..n)
+                .map(|_| {
+                    t += g.u64(0, 1 << 20);
+                    Event::new(t, g.u64(0, 319) as u16, g.u64(0, 239) as u16, Polarity::On)
+                })
+                .collect();
+            let bytes = encode(&evs);
+            let mut dec = AerDecoder::new(Resolution::QVGA);
+            let mut out = Vec::new();
+            let mut pos = 0usize;
+            while pos < bytes.len() {
+                let end = (pos + g.usize(1, 17)).min(bytes.len());
+                dec.push(&bytes[pos..end], &mut out).unwrap();
+                pos = end;
+            }
+            dec.finish().unwrap();
+            assert_eq!(out, evs);
         });
     }
 }

@@ -77,15 +77,34 @@
 //! The scheduling core itself (ready queue, at-most-once actor
 //! scheduling, hold gate) is the generic [`crate::util::actor`] pool,
 //! model-checked under loom — see `tests/loom_sched.rs`.
+//!
+//! ## The network front door
+//!
+//! [`net`] puts this fleet behind a TCP listener — the AER bus of the
+//! paper's Fig. 3a stretched over a socket. Connection lifecycle maps
+//! 1:1 onto session lifecycle; every failure mode is a typed, counted
+//! rejection ([`NetStats`]), and a faulted connection's session is
+//! always drained through `drain`/`close`, never dropped:
+//!
+//! ```text
+//!   camera ──TCP──► listener ──► framer (len+crc frames,      ──► session jobs
+//!   clients        (accept cap:   incremental AER decode,          (ingest_batch /
+//!     ⋮             shed whole    deadlines, decode-error          snapshot /
+//!   faulty ──TCP──► conns first)  budget, seq dedup)               drain+close)
+//!                        │             │ ACK / NACK(code, retry-after) / FRAME
+//!                        ▼             ▼
+//!                     NetStats    back to the client (backoff + jitter on NACK)
+//! ```
 
 // Serving code must surface failures as typed rejects or expects with
 // context, never bare unwraps (tests are exempt).
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
+pub mod net;
 mod scheduler;
 pub mod session;
 pub mod stats;
 
 pub use scheduler::HoldGuard;
 pub use session::{Reject, ServeConfig, SessionConfig, SessionId, SessionManager};
-pub use stats::{ServeStats, SessionReport, SessionStats};
+pub use stats::{NetStats, ServeStats, SessionReport, SessionStats};

@@ -1,0 +1,591 @@
+//! Per-connection protocol engine: one thread, one camera, one session.
+//!
+//! Maps the connection lifecycle onto the [`SessionManager`] lifecycle —
+//! HELLO → `open`, BATCH → `ingest_batch`, SNAPSHOT_REQ → `snapshot`,
+//! BYE → `drain` + `close` — and makes every way a connection can go
+//! wrong a *typed, counted, bounded* event:
+//!
+//! * **Deadlines.** The frame header is awaited under the idle deadline,
+//!   payload bytes under the read deadline (both overall bounds via
+//!   [`DeadlineStream`]). A miss NACKs `DEADLINE` and tears down.
+//! * **Error budget.** Recoverable protocol faults (checksum mismatch,
+//!   `AerError`, unknown frame kind, seq gaps) each cost a strike; at
+//!   [`NetConfig::error_budget`] strikes the connection is NACKed
+//!   `BUDGET` and torn down. Unrecoverable faults (garbage header —
+//!   framing itself untrusted) tear down immediately.
+//! * **Drained, not dropped.** Teardown of a live session *always* runs
+//!   `drain` then `close`, so every event an ACK acknowledged reaches
+//!   the band writers; the final accounting is balance-checked and any
+//!   discrepancy counted in `NetStats::drain_accounting_mismatches`.
+//! * **Duplicates.** BATCH frames carry a client seq; a seq already
+//!   acknowledged is NACKed `DUPLICATE` and *not* re-ingested, so a
+//!   retry after a lost ACK cannot double-write events.
+//!
+//! BATCH payloads are consumed streaming: each socket chunk goes through
+//! the incremental [`AerDecoder`] and the running [`Crc32`] in one pass
+//! — a frame split across reads is never copied into a contiguous
+//! buffer, never re-parsed.
+
+use super::deadline::{DeadlineStream, PolledRead};
+use super::frame::{self, code, kind, Crc32, Header, Hello, Nack, HEADER_LEN};
+use super::server::{NetConfig, NetCounters};
+use crate::events::aer::{AerDecoder, AerError};
+use crate::events::{Event, LabeledEvent};
+use crate::serve::session::{SessionConfig, SessionId, SessionManager};
+use crate::util::grid::Grid;
+use crate::util::sync::{Arc, AtomicU64, AtomicUsize, Mutex, Ordering};
+use std::io;
+use std::net::TcpStream;
+
+/// The manager handle every connection thread shares.
+pub(crate) type SharedManager = Arc<Mutex<SessionManager>>;
+
+/// Everything a connection handler needs from the server.
+pub(crate) struct ConnCtx {
+    pub(crate) manager: SharedManager,
+    pub(crate) cfg: NetConfig,
+    pub(crate) counters: Arc<NetCounters>,
+    pub(crate) shutdown: Arc<AtomicUsize>,
+}
+
+/// Why the connection loop ended.
+enum ConnEnd {
+    /// Clean BYE handshake (session already drained + closed).
+    Bye,
+    /// HELLO refused by admission control (no session ever opened).
+    Refused,
+    /// Peer vanished (EOF / reset).
+    PeerGone,
+    /// A read/idle deadline expired.
+    Deadline,
+    /// The decode-error budget is exhausted.
+    Budget,
+    /// Unrecoverable framing fault (header can't be trusted to resync).
+    Fatal,
+    /// The server is shutting down.
+    Shutdown,
+    /// Unclassified socket error.
+    Io,
+}
+
+/// Size of the streaming read window for BATCH payloads.
+const CHUNK: usize = 4096;
+
+#[inline]
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Run one connection to completion. Never panics outward by design;
+/// the server still counts a panicking handler via its join results.
+pub(crate) fn handle(stream: TcpStream, ctx: ConnCtx) {
+    let dl = match DeadlineStream::new(stream, ctx.cfg.write_timeout) {
+        Ok(dl) => dl,
+        Err(_) => return,
+    };
+    let mut conn = Conn {
+        dl,
+        ctx,
+        session: None,
+        decoder: None,
+        strikes: 0,
+        evbuf: Vec::new(),
+        lebuf: Vec::new(),
+        payload_buf: Vec::new(),
+        send_buf: Vec::new(),
+        frame_buf: Vec::new(),
+    };
+    let end = conn.run();
+    conn.teardown(end);
+}
+
+/// Wire-session state for an admitted camera.
+struct OpenSession {
+    sid: SessionId,
+    /// Next unacknowledged BATCH seq (everything below is a duplicate).
+    expected_seq: u32,
+    /// Largest ingested event time — the causality floor for BATCH
+    /// ordering and SNAPSHOT_REQ times.
+    last_t: u64,
+}
+
+struct Conn {
+    dl: DeadlineStream,
+    ctx: ConnCtx,
+    session: Option<OpenSession>,
+    decoder: Option<AerDecoder>,
+    strikes: u32,
+    evbuf: Vec<Event>,
+    lebuf: Vec<LabeledEvent>,
+    /// Scratch for small whole payloads (HELLO, SNAPSHOT_REQ).
+    payload_buf: Vec<u8>,
+    /// Reusable frame serialization buffer.
+    send_buf: Vec<u8>,
+    /// Reusable reply-payload buffer.
+    frame_buf: Vec<u8>,
+}
+
+impl Conn {
+    fn run(&mut self) -> ConnEnd {
+        loop {
+            // Await the next header under the idle deadline, waking every
+            // 50 ms so server shutdown is noticed promptly; a header that
+            // started arriving is always finished (or deadlined), never
+            // abandoned mid-frame.
+            let mut hdr_bytes = [0u8; HEADER_LEN];
+            let shutdown_flag = &self.ctx.shutdown;
+            match self.dl.read_exact_polled(
+                &mut hdr_bytes,
+                self.ctx.cfg.idle_timeout,
+                std::time::Duration::from_millis(50),
+                || shutdown_flag.load(Ordering::SeqCst) != 0,
+            ) {
+                Ok(PolledRead::Filled) => {}
+                Ok(PolledRead::Stopped) => return ConnEnd::Shutdown,
+                Err(e) => return classify_io(&e),
+            }
+            let hdr = Header::parse(&hdr_bytes);
+            if hdr.len as usize > self.ctx.cfg.max_frame_bytes {
+                // An implausible length means we cannot trust the byte
+                // stream to contain a next frame boundary: fatal.
+                bump(&self.ctx.counters.bad_frames);
+                let _ = self.send_nack(code::BAD_FRAME, 0, 0, "oversized or garbage frame header");
+                return ConnEnd::Fatal;
+            }
+            let step = match hdr.kind {
+                kind::HELLO => self.on_hello(&hdr),
+                kind::BATCH => self.on_batch(&hdr),
+                kind::SNAPSHOT_REQ => self.on_snapshot(&hdr),
+                kind::BYE => return self.on_bye(),
+                _ => self.on_unknown(&hdr),
+            };
+            if let Err(end) = step {
+                return end;
+            }
+        }
+    }
+
+    // ---- frame handlers -------------------------------------------------
+
+    fn on_hello(&mut self, hdr: &Header) -> Result<(), ConnEnd> {
+        self.read_small_payload(hdr)?;
+        if !self.checksum_ok(hdr) {
+            return self.recoverable(code::BAD_CHECKSUM, 0, "HELLO checksum mismatch");
+        }
+        if self.session.is_some() {
+            bump(&self.ctx.counters.protocol_errors);
+            return self.recoverable(code::PROTOCOL, 0, "duplicate HELLO on an open session");
+        }
+        let hello = match Hello::decode(&self.payload_buf) {
+            Ok(h) => h,
+            Err(e) => {
+                bump(&self.ctx.counters.bad_frames);
+                return self.recoverable(code::BAD_FRAME, 0, &format!("bad HELLO payload: {e}"));
+            }
+        };
+        let res = hello.resolution();
+        let session_cfg = SessionConfig {
+            name: hello.name.clone(),
+            res,
+            t_end_us: hello.t_end_us,
+            pipeline: hello.pipeline_config(),
+        };
+        let opened = {
+            let mut mgr = self.lock_manager();
+            mgr.open(session_cfg)
+        };
+        match opened {
+            Ok(sid) => {
+                bump(&self.ctx.counters.sessions_opened);
+                self.decoder = Some(AerDecoder::new(res));
+                self.session = Some(OpenSession { sid, expected_seq: 0, last_t: 0 });
+                self.send_ack(0).map_err(|e| classify_io(&e))
+            }
+            Err(reject) => {
+                bump(&self.ctx.counters.hellos_rejected);
+                let _ = self.send_nack(
+                    reject.code(),
+                    self.ctx.cfg.retry_after_ms,
+                    0,
+                    &reject.to_string(),
+                );
+                Err(ConnEnd::Refused)
+            }
+        }
+    }
+
+    fn on_batch(&mut self, hdr: &Header) -> Result<(), ConnEnd> {
+        if hdr.len < 4 {
+            self.discard_payload(hdr.len as usize)?;
+            bump(&self.ctx.counters.bad_frames);
+            return self.recoverable(code::BAD_FRAME, 0, "BATCH payload shorter than its seq");
+        }
+        if self.session.is_none() {
+            self.discard_payload(hdr.len as usize)?;
+            bump(&self.ctx.counters.protocol_errors);
+            return self.recoverable(code::PROTOCOL, 0, "BATCH before HELLO");
+        }
+        let mut crc = Crc32::new();
+        let mut seq_bytes = [0u8; 4];
+        self.dl
+            .read_exact_within(&mut seq_bytes, self.ctx.cfg.read_timeout)
+            .map_err(|e| classify_io(&e))?;
+        crc.update(&seq_bytes);
+        let seq = u32::from_le_bytes(seq_bytes);
+        let body_len = hdr.len as usize - 4;
+        let expected_seq = self.session.as_ref().map(|s| s.expected_seq).unwrap_or(0);
+        if seq != expected_seq {
+            // Consume the body so framing stays in sync, then classify.
+            self.discard_payload(body_len)?;
+            return if seq < expected_seq {
+                // A retry of an already-acked batch (e.g. our ACK was
+                // lost): refuse idempotently, no strike, no re-ingest.
+                bump(&self.ctx.counters.duplicate_batches);
+                self.send_nack(code::DUPLICATE, 0, seq, "batch seq already acknowledged")
+                    .map_err(|e| classify_io(&e))
+            } else {
+                bump(&self.ctx.counters.protocol_errors);
+                self.recoverable(code::PROTOCOL, seq, "batch seq gap (batches lost?)")
+            };
+        }
+        // Stream the AER body: every chunk feeds the running CRC and the
+        // incremental decoder in one pass.
+        self.evbuf.clear();
+        let mut decode_err: Option<AerError> = None;
+        {
+            let decoder = self.decoder.as_mut().expect("decoder exists for open session");
+            decoder.reset();
+            let mut left = body_len;
+            let mut chunk = [0u8; CHUNK];
+            while left > 0 {
+                let take = left.min(CHUNK);
+                self.dl
+                    .read_exact_within(&mut chunk[..take], self.ctx.cfg.read_timeout)
+                    .map_err(|e| classify_io(&e))?;
+                crc.update(&chunk[..take]);
+                if decode_err.is_none() {
+                    if let Err(e) = decoder.push(&chunk[..take], &mut self.evbuf) {
+                        decode_err = Some(e);
+                    }
+                }
+                left -= take;
+            }
+            if decode_err.is_none() {
+                if let Err(e) = decoder.finish() {
+                    decode_err = Some(e);
+                }
+            }
+        }
+        if crc.finish() != hdr.crc {
+            bump(&self.ctx.counters.checksum_errors);
+            return self.recoverable(code::BAD_CHECKSUM, seq, "BATCH checksum mismatch");
+        }
+        if let Some(e) = decode_err {
+            bump(&self.ctx.counters.decode_errors);
+            return self.recoverable(code::DECODE, seq, &e.to_string());
+        }
+        let last_t = self.session.as_ref().map(|s| s.last_t).unwrap_or(0);
+        if self.evbuf.first().is_some_and(|e| e.t < last_t) {
+            bump(&self.ctx.counters.protocol_errors);
+            return self.recoverable(
+                code::OUT_OF_ORDER,
+                seq,
+                "batch timestamps precede the session stream",
+            );
+        }
+        self.lebuf.clear();
+        self.lebuf.extend(self.evbuf.iter().map(|&ev| LabeledEvent { ev, is_signal: true }));
+        let sid = self.session.as_ref().map(|s| s.sid).expect("session checked above");
+        let ingested = {
+            let mut mgr = self.lock_manager();
+            mgr.ingest_batch(sid, &self.lebuf)
+        };
+        match ingested {
+            Ok(frames) => {
+                for (at, g) in &frames {
+                    self.send_frame_reply(*at, g).map_err(|e| classify_io(&e))?;
+                }
+                if let Some(s) = self.session.as_mut() {
+                    s.expected_seq = expected_seq.wrapping_add(1);
+                    if let Some(last) = self.evbuf.last() {
+                        s.last_t = last.t;
+                    }
+                }
+                bump(&self.ctx.counters.batches_acked);
+                self.ctx
+                    .counters
+                    .events_ingested
+                    .fetch_add(self.evbuf.len() as u64, Ordering::Relaxed);
+                self.send_ack(seq).map_err(|e| classify_io(&e))
+            }
+            Err(reject) => {
+                // Backpressure: the batch was NOT ingested; the client
+                // retries the same seq after the hinted backoff. Not a
+                // strike — a correct client under load hits this path.
+                bump(&self.ctx.counters.backpressure_nacks);
+                self.send_nack(
+                    reject.code(),
+                    self.ctx.cfg.retry_after_ms,
+                    seq,
+                    &reject.to_string(),
+                )
+                .map_err(|e| classify_io(&e))
+            }
+        }
+    }
+
+    fn on_snapshot(&mut self, hdr: &Header) -> Result<(), ConnEnd> {
+        self.read_small_payload(hdr)?;
+        if !self.checksum_ok(hdr) {
+            return self.recoverable(code::BAD_CHECKSUM, 0, "SNAPSHOT_REQ checksum mismatch");
+        }
+        let (sid, last_t) = match self.session.as_ref() {
+            Some(s) => (s.sid, s.last_t),
+            None => {
+                bump(&self.ctx.counters.protocol_errors);
+                return self.recoverable(code::PROTOCOL, 0, "SNAPSHOT_REQ before HELLO");
+            }
+        };
+        if self.payload_buf.len() != 8 {
+            bump(&self.ctx.counters.bad_frames);
+            return self.recoverable(code::BAD_FRAME, 0, "SNAPSHOT_REQ payload must be 8 bytes");
+        }
+        let mut at = [0u8; 8];
+        at.copy_from_slice(&self.payload_buf);
+        let at_us = u64::from_le_bytes(at);
+        if at_us < last_t {
+            bump(&self.ctx.counters.protocol_errors);
+            return self.recoverable(
+                code::OUT_OF_ORDER,
+                0,
+                "snapshot time precedes ingested events (snapshots must be causal)",
+            );
+        }
+        let snap = {
+            let mut mgr = self.lock_manager();
+            mgr.snapshot(sid, at_us)
+        };
+        match snap {
+            Ok(g) => self.send_frame_reply(at_us, &g).map_err(|e| classify_io(&e)),
+            Err(reject) => {
+                bump(&self.ctx.counters.protocol_errors);
+                self.recoverable(reject.code(), 0, &reject.to_string())
+            }
+        }
+    }
+
+    fn on_bye(&mut self) -> ConnEnd {
+        let frames_total = match self.session.take() {
+            Some(sess) => {
+                let drained = {
+                    let mut mgr = self.lock_manager();
+                    mgr.drain(sess.sid)
+                };
+                if let Ok(frames) = &drained {
+                    for (at, g) in frames {
+                        if self.send_frame_reply(*at, g).is_err() {
+                            break;
+                        }
+                    }
+                }
+                let report = {
+                    let mut mgr = self.lock_manager();
+                    mgr.close(sess.sid)
+                };
+                match report {
+                    Ok(r) => {
+                        self.check_balance(&r.pipeline);
+                        r.pipeline.frames_emitted
+                    }
+                    Err(_) => 0,
+                }
+            }
+            None => 0,
+        };
+        bump(&self.ctx.counters.byes_completed);
+        self.frame_buf.clear();
+        self.frame_buf.extend_from_slice(&frames_total.to_le_bytes());
+        frame::encode_frame_into(&mut self.send_buf, kind::BYE_OK, &self.frame_buf);
+        let _ = self.send_raw();
+        ConnEnd::Bye
+    }
+
+    fn on_unknown(&mut self, hdr: &Header) -> Result<(), ConnEnd> {
+        // The length is plausible, so skip the payload and resync on the
+        // next header — one flipped kind bit must not kill the stream.
+        self.discard_payload(hdr.len as usize)?;
+        bump(&self.ctx.counters.bad_frames);
+        self.recoverable(code::BAD_FRAME, 0, "unknown frame kind")
+    }
+
+    // ---- teardown -------------------------------------------------------
+
+    /// Always leave the fleet consistent: a live session is drained then
+    /// closed no matter how the connection ended, and its accounting is
+    /// balance-checked (acked events must all have reached the writers).
+    fn teardown(&mut self, end: ConnEnd) {
+        match end {
+            ConnEnd::Bye | ConnEnd::Refused => {}
+            ConnEnd::Shutdown => {
+                // Server-initiated graceful end: drain, hand the client
+                // its tail frames and a BYE_OK, then close.
+                self.drain_close_session(true);
+            }
+            ConnEnd::Deadline => {
+                bump(&self.ctx.counters.deadline_disconnects);
+                let _ = self.send_nack(code::DEADLINE, 0, 0, "read deadline missed");
+                self.fault_drain();
+            }
+            ConnEnd::PeerGone | ConnEnd::Io => {
+                bump(&self.ctx.counters.abrupt_disconnects);
+                self.fault_drain();
+            }
+            ConnEnd::Budget => {
+                bump(&self.ctx.counters.budget_disconnects);
+                self.fault_drain();
+            }
+            ConnEnd::Fatal => {
+                self.fault_drain();
+            }
+        }
+        let _ = self.dl.shutdown_now();
+    }
+
+    /// Drain + close after a fault, counting the session as
+    /// drained-on-error (the "drained, not dropped" guarantee).
+    fn fault_drain(&mut self) {
+        if self.session.is_some() {
+            bump(&self.ctx.counters.sessions_drained_on_error);
+            self.drain_close_session(false);
+        }
+    }
+
+    fn drain_close_session(&mut self, send_tail: bool) {
+        let Some(sess) = self.session.take() else { return };
+        let drained = {
+            let mut mgr = self.lock_manager();
+            mgr.drain(sess.sid)
+        };
+        if send_tail {
+            if let Ok(frames) = &drained {
+                for (at, g) in frames {
+                    if self.send_frame_reply(*at, g).is_err() {
+                        break;
+                    }
+                }
+            }
+        }
+        let report = {
+            let mut mgr = self.lock_manager();
+            mgr.close(sess.sid)
+        };
+        if let Ok(r) = report {
+            self.check_balance(&r.pipeline);
+            if send_tail {
+                self.frame_buf.clear();
+                self.frame_buf.extend_from_slice(&r.pipeline.frames_emitted.to_le_bytes());
+                frame::encode_frame_into(&mut self.send_buf, kind::BYE_OK, &self.frame_buf);
+                let _ = self.send_raw();
+            }
+        }
+    }
+
+    fn check_balance(&self, p: &crate::coordinator::PipelineStats) {
+        if p.events_in != p.events_written + p.events_dropped_by_stcf {
+            bump(&self.ctx.counters.drain_accounting_mismatches);
+        }
+    }
+
+    // ---- plumbing -------------------------------------------------------
+
+    fn lock_manager(&self) -> crate::util::sync::MutexGuard<'_, SessionManager> {
+        self.ctx.manager.lock().expect("session manager lock poisoned")
+    }
+
+    /// A recoverable fault: NACK it, take a strike, and keep the
+    /// connection unless the budget is spent.
+    fn recoverable(&mut self, code_: u16, seq: u32, reason: &str) -> Result<(), ConnEnd> {
+        self.send_nack(code_, 0, seq, reason).map_err(|e| classify_io(&e))?;
+        self.strikes += 1;
+        if self.strikes >= self.ctx.cfg.error_budget {
+            let _ = self.send_nack(
+                code::BUDGET,
+                0,
+                seq,
+                &format!("error budget exhausted ({} strikes)", self.strikes),
+            );
+            return Err(ConnEnd::Budget);
+        }
+        Ok(())
+    }
+
+    fn read_small_payload(&mut self, hdr: &Header) -> Result<(), ConnEnd> {
+        self.payload_buf.resize(hdr.len as usize, 0);
+        self.dl
+            .read_exact_within(&mut self.payload_buf, self.ctx.cfg.read_timeout)
+            .map_err(|e| classify_io(&e))
+    }
+
+    fn checksum_ok(&mut self, hdr: &Header) -> bool {
+        let ok = frame::crc32(&self.payload_buf) == hdr.crc;
+        if !ok {
+            bump(&self.ctx.counters.checksum_errors);
+        }
+        ok
+    }
+
+    fn discard_payload(&mut self, mut len: usize) -> Result<(), ConnEnd> {
+        let mut chunk = [0u8; CHUNK];
+        while len > 0 {
+            let take = len.min(CHUNK);
+            self.dl
+                .read_exact_within(&mut chunk[..take], self.ctx.cfg.read_timeout)
+                .map_err(|e| classify_io(&e))?;
+            len -= take;
+        }
+        Ok(())
+    }
+
+    fn send_ack(&mut self, seq: u32) -> io::Result<()> {
+        self.frame_buf.clear();
+        self.frame_buf.extend_from_slice(&seq.to_le_bytes());
+        frame::encode_frame_into(&mut self.send_buf, kind::ACK, &self.frame_buf);
+        self.send_raw()
+    }
+
+    fn send_nack(
+        &mut self,
+        code_: u16,
+        retry_after_ms: u32,
+        seq: u32,
+        reason: &str,
+    ) -> io::Result<()> {
+        bump(&self.ctx.counters.nacks_sent);
+        let nack = Nack { code: code_, retry_after_ms, seq, reason: reason.to_string() };
+        nack.encode(&mut self.frame_buf);
+        frame::encode_frame_into(&mut self.send_buf, kind::NACK, &self.frame_buf);
+        self.send_raw()
+    }
+
+    fn send_frame_reply(&mut self, at_us: u64, g: &Grid<f64>) -> io::Result<()> {
+        bump(&self.ctx.counters.frames_sent);
+        frame::encode_frame_payload(&mut self.frame_buf, at_us, g);
+        frame::encode_frame_into(&mut self.send_buf, kind::FRAME, &self.frame_buf);
+        self.send_raw()
+    }
+
+    fn send_raw(&mut self) -> io::Result<()> {
+        self.dl.write_all_within(&self.send_buf)
+    }
+}
+
+fn classify_io(e: &io::Error) -> ConnEnd {
+    match e.kind() {
+        io::ErrorKind::TimedOut => ConnEnd::Deadline,
+        io::ErrorKind::UnexpectedEof
+        | io::ErrorKind::ConnectionReset
+        | io::ErrorKind::ConnectionAborted
+        | io::ErrorKind::BrokenPipe => ConnEnd::PeerGone,
+        _ => ConnEnd::Io,
+    }
+}

@@ -1,0 +1,298 @@
+//! Deadline-bounded socket I/O — the *only* place in `serve::net` that
+//! touches a raw stream.
+//!
+//! Every read and write in the front door happens under a configured
+//! timeout: [`DeadlineStream`] wraps a `TcpStream`, forces it blocking,
+//! installs `SO_RCVTIMEO`/`SO_SNDTIMEO`, and exposes
+//! [`read_exact_within`](DeadlineStream::read_exact_within) /
+//! [`write_all_within`](DeadlineStream::write_all_within), which enforce
+//! an *overall* per-call deadline (a peer trickling one byte per
+//! timeout-minus-ε cannot hold a connection open indefinitely — the
+//! classic slow-loris hole a bare per-`read` timeout leaves). The
+//! `net-deadline` invariant lint (`cargo xtask lint-invariants`) rejects
+//! any bare `.read_exact(` / `.write_all(` / … call elsewhere under
+//! `serve/net/`, so new code cannot reintroduce an unbounded wait.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+/// Floor for socket timeouts: `set_read_timeout(Some(0))` is an error
+/// and a sub-millisecond timeout is indistinguishable from busy-wait.
+const MIN_TIMEOUT: Duration = Duration::from_millis(1);
+
+/// How a [`DeadlineStream::read_exact_polled`] call ended short of an
+/// error: buffer filled, or the stop predicate fired before any byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolledRead {
+    /// The buffer was filled completely.
+    Filled,
+    /// `should_stop` returned true before the first byte arrived.
+    Stopped,
+}
+
+/// A `TcpStream` whose every operation carries a deadline.
+#[derive(Debug)]
+pub struct DeadlineStream {
+    stream: TcpStream,
+    write_timeout: Duration,
+    /// Last timeout installed via `SO_RCVTIMEO`, to skip redundant
+    /// setsockopt syscalls on the hot read path.
+    last_read_timeout: Option<Duration>,
+}
+
+impl DeadlineStream {
+    /// Wrap `stream`, forcing blocking mode and installing the write
+    /// timeout. Reads take their budget per call.
+    pub fn new(stream: TcpStream, write_timeout: Duration) -> io::Result<Self> {
+        let write_timeout = write_timeout.max(MIN_TIMEOUT);
+        stream.set_nonblocking(false)?;
+        stream.set_write_timeout(Some(write_timeout))?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream, write_timeout, last_read_timeout: None })
+    }
+
+    /// The peer's address.
+    pub fn peer_addr(&self) -> io::Result<SocketAddr> {
+        self.stream.peer_addr()
+    }
+
+    /// Fill `buf` completely, or fail within `timeout` overall.
+    ///
+    /// The remaining budget is re-installed as the socket timeout before
+    /// each underlying read, so total wall time is bounded by `timeout`
+    /// no matter how the peer paces its bytes. `TimedOut` means the
+    /// deadline expired; `UnexpectedEof` means the peer closed mid-buffer
+    /// (EOF before the first byte is also `UnexpectedEof` with an empty
+    /// `buf` position — callers distinguish idle-EOF by asking for the
+    /// header first).
+    pub fn read_exact_within(&mut self, buf: &mut [u8], timeout: Duration) -> io::Result<()> {
+        let deadline = Instant::now() + timeout.max(MIN_TIMEOUT);
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let now = Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| *d > Duration::ZERO)
+            else {
+                return Err(io::Error::new(io::ErrorKind::TimedOut, "read deadline expired"));
+            };
+            self.set_read_window(left.max(MIN_TIMEOUT))?;
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed the connection",
+                    ));
+                }
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Err(io::Error::new(io::ErrorKind::TimedOut, "read deadline expired"));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Like [`read_exact_within`](Self::read_exact_within), but wakes
+    /// every `tick` to consult `should_stop` — partial progress is kept
+    /// across ticks, so a frame header split over several wake-ups still
+    /// reassembles. Once the first byte has arrived the stop predicate
+    /// is ignored (the peer is mid-frame; the overall deadline still
+    /// bounds the wait). This is how connection handlers notice server
+    /// shutdown without abandoning a half-read frame.
+    pub fn read_exact_polled(
+        &mut self,
+        buf: &mut [u8],
+        timeout: Duration,
+        tick: Duration,
+        mut should_stop: impl FnMut() -> bool,
+    ) -> io::Result<PolledRead> {
+        let deadline = Instant::now() + timeout.max(MIN_TIMEOUT);
+        let tick = tick.max(MIN_TIMEOUT);
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let now = Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| *d > Duration::ZERO)
+            else {
+                return Err(io::Error::new(io::ErrorKind::TimedOut, "read deadline expired"));
+            };
+            self.set_read_window(left.min(tick).max(MIN_TIMEOUT))?;
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed the connection",
+                    ));
+                }
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    // One tick with no data: the predicate is consulted
+                    // only here, so bytes already buffered are never
+                    // abandoned in favor of stopping.
+                    if filled == 0 && should_stop() {
+                        return Ok(PolledRead::Stopped);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(PolledRead::Filled)
+    }
+
+    /// Write all of `buf` under the configured write timeout (installed
+    /// at construction; a stalled peer surfaces as `TimedOut`, never an
+    /// indefinite block).
+    pub fn write_all_within(&mut self, buf: &[u8]) -> io::Result<()> {
+        let deadline = Instant::now() + self.write_timeout;
+        let mut written = 0usize;
+        while written < buf.len() {
+            if Instant::now() >= deadline {
+                return Err(io::Error::new(io::ErrorKind::TimedOut, "write deadline expired"));
+            }
+            match self.stream.write(&buf[written..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer stopped accepting bytes",
+                    ));
+                }
+                Ok(n) => written += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Err(io::Error::new(io::ErrorKind::TimedOut, "write deadline expired"));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Half-close both directions — the fault injector's abrupt
+    /// disconnect, and the server's final word to a shed connection.
+    pub fn shutdown_now(&self) -> io::Result<()> {
+        self.stream.shutdown(Shutdown::Both)
+    }
+
+    fn set_read_window(&mut self, timeout: Duration) -> io::Result<()> {
+        // Re-arming SO_RCVTIMEO only when the remaining budget moved by
+        // ≥ 1/8 keeps the syscall off the per-chunk fast path.
+        if let Some(last) = self.last_read_timeout {
+            let delta = if last > timeout { last - timeout } else { timeout - last };
+            if delta * 8 < last {
+                return Ok(());
+            }
+        }
+        self.stream.set_read_timeout(Some(timeout))?;
+        self.last_read_timeout = Some(timeout);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn pair() -> (DeadlineStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = listener.local_addr().expect("local addr");
+        let client = TcpStream::connect(addr).expect("connect");
+        let (server, _) = listener.accept().expect("accept");
+        (DeadlineStream::new(server, Duration::from_millis(500)).expect("wrap"), client)
+    }
+
+    #[test]
+    fn read_times_out_on_silent_peer() {
+        let (mut dl, _client) = pair();
+        let mut buf = [0u8; 4];
+        let t0 = Instant::now();
+        let err = dl.read_exact_within(&mut buf, Duration::from_millis(60)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline must actually bound the wait");
+    }
+
+    #[test]
+    fn read_times_out_on_trickling_peer() {
+        // One byte up front, then silence: the overall deadline still
+        // fires even though the first read made progress.
+        let (mut dl, mut client) = pair();
+        client.write_all(&[1]).unwrap();
+        let mut buf = [0u8; 8];
+        let err = dl.read_exact_within(&mut buf, Duration::from_millis(80)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn read_reports_eof_as_unexpected_eof() {
+        let (mut dl, client) = pair();
+        drop(client);
+        let mut buf = [0u8; 4];
+        let err = dl.read_exact_within(&mut buf, Duration::from_millis(200)).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn polled_read_stops_fast_when_idle_but_finishes_a_started_header() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        // Idle stream + raised stop flag: returns Stopped well before the
+        // overall deadline.
+        let (mut dl, _client) = pair();
+        let mut buf = [0u8; 9];
+        let t0 = Instant::now();
+        let got = dl
+            .read_exact_polled(&mut buf, Duration::from_secs(30), Duration::from_millis(10), || {
+                true
+            })
+            .unwrap();
+        assert_eq!(got, PolledRead::Stopped);
+        assert!(t0.elapsed() < Duration::from_secs(5));
+
+        // Once bytes start flowing the predicate no longer aborts: the
+        // header reassembles even though the flag flips mid-read.
+        let (mut dl, mut client) = pair();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let t = std::thread::spawn(move || {
+            client.write_all(b"abcd").unwrap();
+            stop_t.store(true, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(30));
+            client.write_all(b"efghi").unwrap();
+        });
+        let mut buf = [0u8; 9];
+        let got = dl
+            .read_exact_polled(&mut buf, Duration::from_secs(5), Duration::from_millis(10), || {
+                stop.load(Ordering::SeqCst)
+            })
+            .unwrap();
+        assert_eq!(got, PolledRead::Filled);
+        assert_eq!(&buf, b"abcdefghi");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn split_reads_reassemble() {
+        let (mut dl, mut client) = pair();
+        let t = std::thread::spawn(move || {
+            client.write_all(b"abc").unwrap();
+            std::thread::sleep(Duration::from_millis(20));
+            client.write_all(b"defgh").unwrap();
+        });
+        let mut buf = [0u8; 8];
+        dl.read_exact_within(&mut buf, Duration::from_secs(2)).unwrap();
+        assert_eq!(&buf, b"abcdefgh");
+        t.join().unwrap();
+    }
+}

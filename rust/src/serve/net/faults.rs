@@ -1,0 +1,308 @@
+//! Seeded fault injection for the wire protocol — the chaos test's
+//! adversarial fleet.
+//!
+//! Every fault is deterministic given its seed: the injector draws
+//! offsets, bit positions and event payloads from a [`Pcg64`] stream
+//! keyed by `(seed, fault kind)`, so a failing chaos run replays
+//! exactly from its printed seed. Each [`FaultKind`] is aimed at a
+//! specific typed rejection bucket in
+//! [`NetStats`](crate::serve::NetStats):
+//!
+//! | fault | wire behaviour | expected server accounting |
+//! |---|---|---|
+//! | `Truncate` | frame cut mid-payload, then close | `abrupt_disconnects`, session drained |
+//! | `BitFlip` | payload bit flipped (past the seq prefix), repeated past the error budget | `checksum_errors`, `budget_disconnects` |
+//! | `Stall` | silence mid-payload longer than the read deadline | `deadline_disconnects` |
+//! | `Disconnect` | socket torn down between frames, no BYE | `abrupt_disconnects` |
+//! | `Duplicate` | an already-acked seq resent verbatim, then clean BYE | `duplicate_batches`, `byes_completed` |
+
+use super::deadline::DeadlineStream;
+use super::frame::{self, kind, Header, Hello, HEADER_LEN};
+use crate::events::{aer, Event, Polarity};
+use crate::util::rng::Pcg64;
+use std::io;
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// The ways a faulty camera misbehaves on the wire.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Send a prefix of a BATCH frame, then close the socket.
+    Truncate,
+    /// Flip one payload bit per BATCH until the error budget trips.
+    BitFlip,
+    /// Go silent mid-frame for longer than the server's read deadline.
+    Stall,
+    /// Vanish between frames without a BYE.
+    Disconnect,
+    /// Resend an already-acknowledged seq, then finish cleanly.
+    Duplicate,
+}
+
+impl FaultKind {
+    /// All kinds, for chaos fleets that want one camera per fault.
+    pub const ALL: [FaultKind; 5] = [
+        FaultKind::Truncate,
+        FaultKind::BitFlip,
+        FaultKind::Stall,
+        FaultKind::Disconnect,
+        FaultKind::Duplicate,
+    ];
+
+    fn stream_key(self) -> u64 {
+        match self {
+            FaultKind::Truncate => 0xfa01,
+            FaultKind::BitFlip => 0xfa02,
+            FaultKind::Stall => 0xfa03,
+            FaultKind::Disconnect => 0xfa04,
+            FaultKind::Duplicate => 0xfa05,
+        }
+    }
+}
+
+/// Deterministic corruption of encoded frames.
+pub struct FaultInjector {
+    kind: FaultKind,
+    rng: Pcg64,
+}
+
+impl FaultInjector {
+    /// Build an injector whose draws depend on `(seed, kind)` only.
+    pub fn new(kind: FaultKind, seed: u64) -> Self {
+        Self { kind, rng: Pcg64::with_stream(seed, kind.stream_key()) }
+    }
+
+    /// The fault this injector drives.
+    pub fn kind(&self) -> FaultKind {
+        self.kind
+    }
+
+    /// Flip one bit inside a BATCH frame's AER body — past the header
+    /// *and* the 4-byte seq prefix, so the damage is always caught by
+    /// the CRC check rather than misread as a seq gap.
+    pub fn flip_payload_bit(&mut self, frame_bytes: &mut [u8]) {
+        let lo = HEADER_LEN + 4;
+        debug_assert!(frame_bytes.len() > lo, "frame too short to corrupt safely");
+        let span = (frame_bytes.len() - lo) as u64;
+        let byte = lo + self.rng.below(span) as usize;
+        let bit = self.rng.below(8) as u8;
+        frame_bytes[byte] ^= 1 << bit;
+    }
+
+    /// A cut point strictly inside the payload (at least the header goes
+    /// out, at least one payload byte stays behind).
+    pub fn truncation_point(&mut self, frame_len: usize) -> usize {
+        debug_assert!(frame_len > HEADER_LEN + 1);
+        HEADER_LEN + 1 + self.rng.below((frame_len - HEADER_LEN - 1) as u64) as usize
+    }
+
+    /// Deterministic synthetic event batch: sorted times, in-bounds
+    /// coordinates for a `width`×`height` sensor.
+    pub fn gen_events(&mut self, t: &mut u64, n: usize, width: u16, height: u16) -> Vec<Event> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            *t += self.rng.range_u64(1, 40);
+            out.push(Event {
+                t: *t,
+                x: self.rng.below(width as u64) as u16,
+                y: self.rng.below(height as u64) as u16,
+                p: if self.rng.bool(0.5) { Polarity::On } else { Polarity::Off },
+            });
+        }
+        out
+    }
+}
+
+/// Sensor geometry the faulty cameras announce.
+const FAULT_W: u16 = 32;
+const FAULT_H: u16 = 32;
+/// Events per clean warm-up batch.
+const BATCH_N: usize = 48;
+/// How long the injector waits for any single reply.
+const REPLY_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Drive one faulty camera against a live server: clean HELLO, two
+/// clean batches, then the configured fault. `stall_ms` is how long the
+/// `Stall` fault holds the line (choose it above the server's read
+/// timeout). All socket errors are tolerated — a faulted connection is
+/// *expected* to die; the assertions live server-side in `NetStats`.
+pub fn run_faulty_camera(addr: SocketAddr, fault: FaultKind, seed: u64, stall_ms: u64) {
+    let _ = drive(addr, fault, seed, stall_ms);
+}
+
+fn drive(addr: SocketAddr, fault: FaultKind, seed: u64, stall_ms: u64) -> io::Result<()> {
+    let mut inj = FaultInjector::new(fault, seed);
+    let stream = TcpStream::connect(addr)?;
+    let mut dl = DeadlineStream::new(stream, REPLY_TIMEOUT)?;
+
+    // Clean HELLO: tiny sensor, huge window and t_end 0 so the session
+    // produces no periodic FRAME traffic to get tangled with the fault.
+    let hello = Hello {
+        name: format!("faulty-{fault:?}-{seed}"),
+        width: FAULT_W,
+        height: FAULT_H,
+        t_end_us: 0,
+        window_us: 1_000_000_000,
+        batch_size: 4_096,
+        n_shards: 1,
+        denoise_shards: 1,
+        stcf: false,
+    };
+    let mut payload = Vec::new();
+    hello.encode(&mut payload);
+    let mut buf = Vec::new();
+    frame::encode_frame_into(&mut buf, kind::HELLO, &payload);
+    dl.write_all_within(&buf)?;
+    match read_one(&mut dl)? {
+        kind::ACK => {}
+        // Shed or refused at admission — nothing more to inject.
+        _ => return Ok(()),
+    }
+
+    let mut t = 0u64;
+    let mut first_batch: Option<Vec<u8>> = None;
+    for seq in 0..2u32 {
+        let events = inj.gen_events(&mut t, BATCH_N, FAULT_W, FAULT_H);
+        encode_batch(&mut payload, &mut buf, seq, &events);
+        if seq == 0 {
+            first_batch = Some(buf.clone());
+        }
+        dl.write_all_within(&buf)?;
+        read_until_ack(&mut dl)?;
+    }
+
+    match fault {
+        FaultKind::Truncate => {
+            let events = inj.gen_events(&mut t, BATCH_N, FAULT_W, FAULT_H);
+            encode_batch(&mut payload, &mut buf, 2, &events);
+            let cut = inj.truncation_point(buf.len());
+            dl.write_all_within(&buf[..cut])?;
+            dl.shutdown_now()?;
+        }
+        FaultKind::BitFlip => {
+            // One flipped batch per strike until the budget NACK lands
+            // and the server hangs up (subsequent writes then fail, which
+            // is the success condition here).
+            for seq in 2..10u32 {
+                let events = inj.gen_events(&mut t, BATCH_N, FAULT_W, FAULT_H);
+                encode_batch(&mut payload, &mut buf, seq, &events);
+                inj.flip_payload_bit(&mut buf);
+                if dl.write_all_within(&buf).is_err() {
+                    break;
+                }
+                match read_one(&mut dl) {
+                    Ok(kind::NACK) => continue,
+                    Ok(_) => continue,
+                    Err(_) => break,
+                }
+            }
+        }
+        FaultKind::Stall => {
+            let events = inj.gen_events(&mut t, BATCH_N, FAULT_W, FAULT_H);
+            encode_batch(&mut payload, &mut buf, 2, &events);
+            let cut = inj.truncation_point(buf.len());
+            dl.write_all_within(&buf[..cut])?;
+            std::thread::sleep(Duration::from_millis(stall_ms));
+            dl.shutdown_now()?;
+        }
+        FaultKind::Disconnect => {
+            dl.shutdown_now()?;
+        }
+        FaultKind::Duplicate => {
+            let dup = first_batch.take().unwrap_or_default();
+            dl.write_all_within(&dup)?;
+            // Expect the DUPLICATE nack, then leave cleanly.
+            let _ = read_one(&mut dl)?;
+            frame::encode_frame_into(&mut buf, kind::BYE, &[]);
+            dl.write_all_within(&buf)?;
+            read_until(&mut dl, kind::BYE_OK)?;
+        }
+    }
+    Ok(())
+}
+
+/// Frame a BATCH: 4-byte seq prefix + AER body.
+fn encode_batch(payload: &mut Vec<u8>, out: &mut Vec<u8>, seq: u32, events: &[Event]) {
+    payload.clear();
+    payload.extend_from_slice(&seq.to_le_bytes());
+    payload.extend_from_slice(&aer::encode(events));
+    frame::encode_frame_into(out, kind::BATCH, payload);
+}
+
+/// Read one reply frame (header + payload), returning its kind.
+fn read_one(dl: &mut DeadlineStream) -> io::Result<u8> {
+    let mut hdr_bytes = [0u8; HEADER_LEN];
+    dl.read_exact_within(&mut hdr_bytes, REPLY_TIMEOUT)?;
+    let hdr = Header::parse(&hdr_bytes);
+    let mut payload = vec![0u8; hdr.len as usize];
+    dl.read_exact_within(&mut payload, REPLY_TIMEOUT)?;
+    Ok(hdr.kind)
+}
+
+/// Swallow replies (FRAMEs, NACKs) until an ACK arrives.
+fn read_until_ack(dl: &mut DeadlineStream) -> io::Result<()> {
+    read_until(dl, kind::ACK)
+}
+
+/// Swallow replies until a frame of `want` arrives (bounded, so a
+/// misbehaving server cannot wedge the injector).
+fn read_until(dl: &mut DeadlineStream, want: u8) -> io::Result<()> {
+    for _ in 0..64 {
+        if read_one(dl)? == want {
+            return Ok(());
+        }
+    }
+    Err(io::Error::new(io::ErrorKind::InvalidData, "expected reply never arrived"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injector_is_deterministic_per_seed_and_kind() {
+        let mk = |kind, seed| {
+            let mut inj = FaultInjector::new(kind, seed);
+            let mut t = 0;
+            let evs = inj.gen_events(&mut t, 16, FAULT_W, FAULT_H);
+            let mut frame_bytes = vec![0u8; 256];
+            inj.flip_payload_bit(&mut frame_bytes);
+            let cut = inj.truncation_point(256);
+            (evs, frame_bytes, cut)
+        };
+        assert_eq!(mk(FaultKind::BitFlip, 7), mk(FaultKind::BitFlip, 7));
+        // Different kinds draw from different streams even at one seed.
+        assert_ne!(mk(FaultKind::BitFlip, 7).0, mk(FaultKind::Truncate, 7).0);
+    }
+
+    #[test]
+    fn bit_flip_lands_past_the_seq_prefix() {
+        let mut inj = FaultInjector::new(FaultKind::BitFlip, 3);
+        for _ in 0..200 {
+            let mut frame_bytes = vec![0u8; HEADER_LEN + 4 + 32];
+            inj.flip_payload_bit(&mut frame_bytes);
+            let changed = frame_bytes.iter().position(|&b| b != 0).expect("one bit flipped");
+            assert!(changed >= HEADER_LEN + 4, "flip at {changed} could masquerade as a seq gap");
+        }
+    }
+
+    #[test]
+    fn truncation_point_is_strictly_inside_the_payload() {
+        let mut inj = FaultInjector::new(FaultKind::Truncate, 11);
+        for _ in 0..200 {
+            let cut = inj.truncation_point(100);
+            assert!(cut > HEADER_LEN && cut < 100);
+        }
+    }
+
+    #[test]
+    fn gen_events_are_sorted_and_in_bounds() {
+        let mut inj = FaultInjector::new(FaultKind::Stall, 5);
+        let mut t = 0;
+        let evs = inj.gen_events(&mut t, 500, FAULT_W, FAULT_H);
+        for w in evs.windows(2) {
+            assert!(w[0].t <= w[1].t);
+        }
+        assert!(evs.iter().all(|e| e.x < FAULT_W && e.y < FAULT_H));
+    }
+}

@@ -1,0 +1,525 @@
+//! Wire protocol: length-prefixed, checksummed frames.
+//!
+//! Every message on the socket is one frame — a fixed 9-byte header
+//! (`kind: u8 | payload_len: u32 LE | crc32(payload): u32 LE`) followed
+//! by the payload. The CRC makes *any* payload corruption land as a
+//! typed [`code::BAD_CHECKSUM`] rejection even when the corrupted bytes
+//! would still parse (a flipped coordinate bit is a valid coordinate);
+//! the length prefix lets the server skip an unknown frame and resync.
+//! The full frame table lives in the [`super`] module docs.
+//!
+//! BATCH payloads are `u32 seq` + AER records ([`crate::events::aer`],
+//! timestamps absolute per frame — each BATCH encodes from Δ-base 0), so
+//! the server can deduplicate client retries and decode incrementally
+//! straight off the socket.
+
+use crate::events::Resolution;
+use crate::util::grid::Grid;
+
+/// Frame header size on the wire: kind + payload length + payload CRC.
+pub const HEADER_LEN: usize = 9;
+
+/// Frame kinds. Client→server kinds have the top bit clear,
+/// server→client kinds have it set.
+pub mod kind {
+    /// Client→server: open a session (payload: [`super::Hello`]).
+    pub const HELLO: u8 = 0x01;
+    /// Client→server: one event batch (`u32 seq` + AER records).
+    pub const BATCH: u8 = 0x02;
+    /// Client→server: on-demand frame request (`u64 at_us`).
+    pub const SNAPSHOT_REQ: u8 = 0x03;
+    /// Client→server: end of stream; drain and close my session.
+    pub const BYE: u8 = 0x04;
+    /// Server→client: request `u32 seq` succeeded.
+    pub const ACK: u8 = 0x81;
+    /// Server→client: typed rejection (payload: [`super::Nack`]).
+    pub const NACK: u8 = 0x82;
+    /// Server→client: one rendered frame (`u64 at_us | u16 w | u16 h |
+    /// w·h f64 LE pixels` — lossless, for bit-for-bit equivalence).
+    pub const FRAME: u8 = 0x83;
+    /// Server→client: BYE honored (`u64 frames_emitted` lifetime total).
+    pub const BYE_OK: u8 = 0x84;
+}
+
+/// Stable NACK codes. 1–9 mirror [`crate::serve::Reject::code`] (session
+/// admission); 10+ are net-layer rejections. Wire-stable: never
+/// renumber, only append.
+pub mod code {
+    /// [`crate::serve::Reject::TooManySessions`].
+    pub const TOO_MANY_SESSIONS: u16 = 1;
+    /// [`crate::serve::Reject::Backpressure`] — retry-after hint attached.
+    pub const BACKPRESSURE: u16 = 2;
+    /// [`crate::serve::Reject::UnknownSession`].
+    pub const UNKNOWN_SESSION: u16 = 3;
+    /// Malformed or oversized frame header.
+    pub const BAD_FRAME: u16 = 10;
+    /// Payload CRC mismatch.
+    pub const BAD_CHECKSUM: u16 = 11;
+    /// BATCH payload failed AER decoding (typed `AerError`).
+    pub const DECODE: u16 = 12;
+    /// Protocol-order violation (BATCH before HELLO, seq gap, …).
+    pub const PROTOCOL: u16 = 13;
+    /// Duplicate BATCH (seq already acknowledged); not re-ingested.
+    pub const DUPLICATE: u16 = 14;
+    /// A read/idle deadline expired; the connection is being dropped.
+    pub const DEADLINE: u16 = 15;
+    /// Listener at its connection cap — shed before HELLO.
+    pub const SHED: u16 = 16;
+    /// Decode-error budget exhausted; the connection is being dropped.
+    pub const BUDGET: u16 = 17;
+    /// BATCH timestamps went backwards relative to the session stream.
+    pub const OUT_OF_ORDER: u16 = 18;
+}
+
+/// Errors raised while parsing a frame *payload* (the header and CRC
+/// were already validated).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Payload shorter than its fixed fields require.
+    Short,
+    /// A string field was not valid UTF-8.
+    BadUtf8,
+    /// Fields are internally inconsistent (e.g. pixel count ≠ w·h).
+    Inconsistent,
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Short => write!(f, "frame payload too short"),
+            WireError::BadUtf8 => write!(f, "frame string field is not UTF-8"),
+            WireError::Inconsistent => write!(f, "frame payload fields inconsistent"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Parsed frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    /// Frame kind byte (see [`kind`]).
+    pub kind: u8,
+    /// Payload length in bytes.
+    pub len: u32,
+    /// CRC-32 (IEEE) of the payload.
+    pub crc: u32,
+}
+
+impl Header {
+    /// Parse the 9 wire bytes.
+    pub fn parse(b: &[u8; HEADER_LEN]) -> Header {
+        Header {
+            kind: b[0],
+            len: u32::from_le_bytes([b[1], b[2], b[3], b[4]]),
+            crc: u32::from_le_bytes([b[5], b[6], b[7], b[8]]),
+        }
+    }
+}
+
+/// Serialize one frame (header + payload) into `out`, clearing it first
+/// — callers keep one send buffer per connection, so the hot path does
+/// no per-frame allocation once warm.
+pub fn encode_frame_into(out: &mut Vec<u8>, kind: u8, payload: &[u8]) {
+    out.clear();
+    out.push(kind);
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+}
+
+// CRC-32/ISO-HDLC (the zlib/Ethernet polynomial), nibble-table variant:
+// 16 entries keep the table in a cache line while still processing four
+// bits per step.
+const CRC_TABLE: [u32; 16] = [
+    0x0000_0000, 0x1db7_1064, 0x3b6e_20c8, 0x26d9_30ac,
+    0x76dc_4190, 0x6b6b_51f4, 0x4db2_6158, 0x5005_713c,
+    0xedb8_8320, 0xf00f_9344, 0xd6d6_a3e8, 0xcb61_b38c,
+    0x9b64_c2b0, 0x86d3_d2d4, 0xa00a_e278, 0xbdbd_f21c,
+];
+
+/// One-shot CRC-32 (IEEE reflected polynomial) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// Streaming CRC-32, so the server can checksum a BATCH payload chunk by
+/// chunk while the incremental AER decoder consumes the same chunks —
+/// the payload is never materialized whole.
+#[derive(Debug, Clone)]
+pub struct Crc32(u32);
+
+impl Crc32 {
+    /// Fresh accumulator.
+    pub fn new() -> Self {
+        Crc32(!0)
+    }
+
+    /// Fold `bytes` into the accumulator.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.0;
+        for &b in bytes {
+            c = (c >> 4) ^ CRC_TABLE[((c ^ b as u32) & 0xf) as usize];
+            c = (c >> 4) ^ CRC_TABLE[((c ^ (b as u32 >> 4)) & 0xf) as usize];
+        }
+        self.0 = c;
+    }
+
+    /// Final CRC value.
+    pub fn finish(&self) -> u32 {
+        !self.0
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// HELLO payload: everything the server needs to build a
+/// [`crate::serve::SessionConfig`]. The pipeline mapping lives in
+/// [`Hello::pipeline_config`] and is shared by the server and the
+/// equivalence tests, so "what the wire opens" and "what the test
+/// compares against" can never drift apart.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    /// Session display name.
+    pub name: String,
+    /// Sensor geometry.
+    pub width: u16,
+    /// Sensor geometry.
+    pub height: u16,
+    /// Stream end time (window frames emitted through this).
+    pub t_end_us: u64,
+    /// Window period, µs.
+    pub window_us: u64,
+    /// Producer staging batch size.
+    pub batch_size: u32,
+    /// Router write shards.
+    pub n_shards: u32,
+    /// STCF shard count (0 = inline) — meaningful only with `stcf`.
+    pub denoise_shards: u32,
+    /// Enable the STCF denoise stage with default parameters.
+    pub stcf: bool,
+}
+
+impl Hello {
+    /// Serialize into `out` (cleared first).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.height.to_le_bytes());
+        out.extend_from_slice(&self.t_end_us.to_le_bytes());
+        out.extend_from_slice(&self.window_us.to_le_bytes());
+        out.extend_from_slice(&self.batch_size.to_le_bytes());
+        out.extend_from_slice(&self.n_shards.to_le_bytes());
+        out.extend_from_slice(&self.denoise_shards.to_le_bytes());
+        out.push(self.stcf as u8);
+        out.extend_from_slice(self.name.as_bytes());
+    }
+
+    /// Parse a HELLO payload.
+    pub fn decode(p: &[u8]) -> Result<Hello, WireError> {
+        let mut r = Reader::new(p);
+        let width = r.u16()?;
+        let height = r.u16()?;
+        let t_end_us = r.u64()?;
+        let window_us = r.u64()?;
+        let batch_size = r.u32()?;
+        let n_shards = r.u32()?;
+        let denoise_shards = r.u32()?;
+        let stcf = r.u8()? != 0;
+        let name = std::str::from_utf8(r.rest()).map_err(|_| WireError::BadUtf8)?.to_string();
+        if width == 0 || height == 0 || window_us == 0 {
+            return Err(WireError::Inconsistent);
+        }
+        Ok(Hello {
+            name,
+            width,
+            height,
+            t_end_us,
+            window_us,
+            batch_size,
+            n_shards,
+            denoise_shards,
+            stcf,
+        })
+    }
+
+    /// Sensor geometry as a [`Resolution`].
+    pub fn resolution(&self) -> Resolution {
+        Resolution::new(self.width, self.height)
+    }
+
+    /// The pipeline shape this HELLO opens — the *single* mapping used
+    /// by both the server (to build the session) and the chaos test (to
+    /// build the `pipeline::run` reference).
+    pub fn pipeline_config(&self) -> crate::coordinator::PipelineConfig {
+        crate::coordinator::PipelineConfig {
+            window_us: self.window_us,
+            stcf: self.stcf.then(crate::denoise::StcfParams::default),
+            denoise_shards: self.denoise_shards as usize,
+            batch_size: (self.batch_size as usize).max(1),
+            router: crate::coordinator::RouterConfig {
+                n_shards: (self.n_shards as usize).max(1),
+                ..Default::default()
+            },
+        }
+    }
+}
+
+/// NACK payload: a typed, coded rejection plus an operator-readable
+/// reason (the `Display` of the underlying `Reject`/`AerError`, numbers
+/// and all).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Nack {
+    /// Stable rejection code (see [`code`]).
+    pub code: u16,
+    /// Backoff floor for retryable rejections (0 = not retryable or no
+    /// hint).
+    pub retry_after_ms: u32,
+    /// The request seq this NACK answers (0 when not seq-addressed).
+    pub seq: u32,
+    /// Human-readable cause.
+    pub reason: String,
+}
+
+impl Nack {
+    /// Serialize into `out` (cleared first).
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&self.code.to_le_bytes());
+        out.extend_from_slice(&self.retry_after_ms.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(self.reason.as_bytes());
+    }
+
+    /// Parse a NACK payload.
+    pub fn decode(p: &[u8]) -> Result<Nack, WireError> {
+        let mut r = Reader::new(p);
+        let code = r.u16()?;
+        let retry_after_ms = r.u32()?;
+        let seq = r.u32()?;
+        let reason = std::str::from_utf8(r.rest()).map_err(|_| WireError::BadUtf8)?.to_string();
+        Ok(Nack { code, retry_after_ms, seq, reason })
+    }
+}
+
+/// Serialize a FRAME payload (`at_us | w | h | pixels`) into `out`
+/// (cleared first). f64 bits go over verbatim — the wire is lossless so
+/// clean sessions stay bit-for-bit ≡ the in-process pipeline.
+pub fn encode_frame_payload(out: &mut Vec<u8>, at_us: u64, frame: &Grid<f64>) {
+    out.clear();
+    out.extend_from_slice(&at_us.to_le_bytes());
+    out.extend_from_slice(&(frame.width() as u16).to_le_bytes());
+    out.extend_from_slice(&(frame.height() as u16).to_le_bytes());
+    for v in frame.as_slice() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Parse a FRAME payload back into `(at_us, frame)`.
+pub fn decode_frame_payload(p: &[u8]) -> Result<(u64, Grid<f64>), WireError> {
+    let mut r = Reader::new(p);
+    let at_us = r.u64()?;
+    let w = r.u16()? as usize;
+    let h = r.u16()? as usize;
+    let rest = r.rest();
+    if rest.len() != w * h * 8 {
+        return Err(WireError::Inconsistent);
+    }
+    let data: Vec<f64> = rest
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect();
+    Ok((at_us, Grid::from_vec(w, h, data)))
+}
+
+/// Little-endian field reader over a payload slice.
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Reader { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.pos + n > self.b.len() {
+            return Err(WireError::Short);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.b[self.pos..];
+        self.pos = self.b.len();
+        s
+    }
+}
+
+/// Read a `u32` request seq off the front of a BATCH payload.
+pub fn batch_seq(p: &[u8]) -> Result<u32, WireError> {
+    Reader::new(p).u32()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::Reject;
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // The universal CRC-32/ISO-HDLC check value.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_streaming_equals_oneshot() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        for split in [0usize, 1, 7, 500, 999, 1000] {
+            let mut c = Crc32::new();
+            c.update(&data[..split]);
+            c.update(&data[split..]);
+            assert_eq!(c.finish(), crc32(&data));
+        }
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let payload = b"hello";
+        let mut buf = Vec::new();
+        encode_frame_into(&mut buf, kind::BATCH, payload);
+        assert_eq!(buf.len(), HEADER_LEN + payload.len());
+        let mut hdr = [0u8; HEADER_LEN];
+        hdr.copy_from_slice(&buf[..HEADER_LEN]);
+        let h = Header::parse(&hdr);
+        assert_eq!(h.kind, kind::BATCH);
+        assert_eq!(h.len as usize, payload.len());
+        assert_eq!(h.crc, crc32(payload));
+    }
+
+    #[test]
+    fn hello_roundtrip() {
+        let hello = Hello {
+            name: "cam-θ".into(),
+            width: 320,
+            height: 240,
+            t_end_us: 1_000_000,
+            window_us: 50_000,
+            batch_size: 256,
+            n_shards: 4,
+            denoise_shards: 2,
+            stcf: true,
+        };
+        let mut buf = Vec::new();
+        hello.encode(&mut buf);
+        assert_eq!(Hello::decode(&buf).unwrap(), hello);
+        let cfg = hello.pipeline_config();
+        assert_eq!(cfg.window_us, 50_000);
+        assert!(cfg.stcf.is_some());
+        assert_eq!(cfg.denoise_shards, 2);
+        assert_eq!(cfg.router.n_shards, 4);
+    }
+
+    #[test]
+    fn hello_rejects_degenerate_geometry() {
+        let mut h = Hello {
+            name: String::new(),
+            width: 0,
+            height: 4,
+            t_end_us: 0,
+            window_us: 1,
+            batch_size: 1,
+            n_shards: 1,
+            denoise_shards: 0,
+            stcf: false,
+        };
+        let mut buf = Vec::new();
+        h.encode(&mut buf);
+        assert_eq!(Hello::decode(&buf), Err(WireError::Inconsistent));
+        h.width = 4;
+        h.encode(&mut buf);
+        assert!(Hello::decode(&buf).is_ok());
+    }
+
+    #[test]
+    fn nack_roundtrips_reject_codes_and_numbers() {
+        // Satellite: code → Reject → Display survives the wire intact,
+        // including the depth/cap numbers PR 7 put in the messages.
+        let rejects = [
+            Reject::TooManySessions { open: 9, max: 16 },
+            Reject::Backpressure { queued: 64, max: 64 },
+            Reject::UnknownSession(5),
+        ];
+        for reject in rejects {
+            let nack =
+                Nack { code: reject.code(), retry_after_ms: 3, seq: 7, reason: reject.to_string() };
+            let mut buf = Vec::new();
+            nack.encode(&mut buf);
+            let back = Nack::decode(&buf).unwrap();
+            assert_eq!(back, nack);
+            assert_eq!(back.code, reject.code());
+            assert_eq!(back.reason, reject.to_string());
+        }
+        // The numbers really are in the reasons.
+        let n = Nack {
+            code: Reject::Backpressure { queued: 64, max: 64 }.code(),
+            retry_after_ms: 0,
+            seq: 0,
+            reason: Reject::Backpressure { queued: 64, max: 64 }.to_string(),
+        };
+        assert_eq!(n.code, code::BACKPRESSURE);
+        assert!(n.reason.contains("64 of 64"));
+    }
+
+    #[test]
+    fn wire_frame_payload_roundtrip_is_lossless() {
+        let mut g = Grid::new(3, 2, 0.0f64);
+        for (i, v) in g.as_mut_slice().iter_mut().enumerate() {
+            *v = (i as f64) * 0.731 + f64::EPSILON;
+        }
+        let mut buf = Vec::new();
+        encode_frame_payload(&mut buf, 123_456, &g);
+        let (at, back) = decode_frame_payload(&buf).unwrap();
+        assert_eq!(at, 123_456);
+        assert_eq!(back, g);
+        // Truncated pixel data is Inconsistent, not a panic.
+        assert_eq!(decode_frame_payload(&buf[..buf.len() - 1]), Err(WireError::Inconsistent));
+    }
+
+    #[test]
+    fn batch_seq_reads_prefix() {
+        let mut p = 77u32.to_le_bytes().to_vec();
+        p.extend_from_slice(&[1, 2, 3]);
+        assert_eq!(batch_seq(&p).unwrap(), 77);
+        assert_eq!(batch_seq(&p[..3]), Err(WireError::Short));
+    }
+}

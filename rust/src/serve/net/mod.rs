@@ -1,0 +1,61 @@
+//! TCP ingest front-end: the paper's AER bus stretched over a socket.
+//!
+//! A camera connects, announces itself, streams AER batches, and the
+//! server maps that connection lifecycle 1:1 onto the
+//! [`SessionManager`](crate::serve::SessionManager) lifecycle:
+//!
+//! ```text
+//!   connect ──► HELLO ──► open          BATCH ──► ingest_batch
+//!   SNAPSHOT_REQ ──► snapshot           BYE / any fault ──► drain + close
+//! ```
+//!
+//! ## Wire format
+//!
+//! Every frame is `kind (u8) | len (u32 LE) | crc32 (u32 LE) | payload`,
+//! where `len` counts payload bytes and the CRC (CRC-32/ISO-HDLC)
+//! covers the payload only. Client→server kinds sit below `0x80`,
+//! server→client kinds at or above it:
+//!
+//! | kind | dir | payload |
+//! |---|---|---|
+//! | `HELLO` `0x01` | → | `w u16 \| h u16 \| t_end u64 \| window u64 \| batch u32 \| n_shards u32 \| denoise u32 \| stcf u8 \| name utf8` |
+//! | `BATCH` `0x02` | → | `seq u32 \| AER records` ([`crate::events::aer`]: varint Δt, `x u16`, `y u16`, `p u8`; Δ-base resets to 0 per frame, so each BATCH carries absolute times) |
+//! | `SNAPSHOT_REQ` `0x03` | → | `at_us u64` |
+//! | `BYE` `0x04` | → | empty |
+//! | `ACK` `0x81` | ← | `seq u32` (HELLO is acked with seq 0) |
+//! | `NACK` `0x82` | ← | `code u16 \| retry_after_ms u32 \| seq u32 \| reason utf8` |
+//! | `FRAME` `0x83` | ← | `at_us u64 \| w u16 \| h u16 \| w·h f64 LE` (bit-lossless) |
+//! | `BYE_OK` `0x84` | ← | `frames_emitted u64` |
+//!
+//! NACK codes 1–3 are [`Reject::code`](crate::serve::Reject::code)
+//! values straight from admission control; codes ≥ 10 are net-layer
+//! faults ([`frame::code`]). BATCH payloads are decoded *incrementally*
+//! ([`crate::events::aer::AerDecoder`]): a frame split across socket
+//! reads feeds the running CRC and decoder chunk by chunk — never
+//! copied into a contiguous buffer, never re-parsed.
+//!
+//! ## Robustness contract
+//!
+//! * Every read and write is deadline-bounded ([`deadline`]); the
+//!   `net-deadline` xtask lint keeps it that way.
+//! * Recoverable faults cost a strike against a per-connection error
+//!   budget; the budget trips into a `BUDGET` NACK and teardown.
+//! * Overload sheds whole connections (accept cap, `TooManySessions` at
+//!   HELLO) before degrading any admitted session.
+//! * Teardown — graceful or not — always `drain`s then `close`s a live
+//!   session, so every acked batch reaches the band writers. The chaos
+//!   test (`tests/net_chaos.rs`, seeded via `TSISC_CHAOS_SEED`) holds a
+//!   mixed clean+faulty fleet to exactly this contract, and
+//!   [`NetStats`](crate::serve::NetStats) counts every fault by type.
+
+mod client;
+mod conn;
+mod deadline;
+pub mod faults;
+pub mod frame;
+mod server;
+
+pub use client::{ClientConfig, NetClient, NetError};
+pub use deadline::{DeadlineStream, PolledRead};
+pub use frame::Hello;
+pub use server::{NetConfig, NetServer};

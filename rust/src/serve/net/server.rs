@@ -1,0 +1,282 @@
+//! The TCP listener: accept, shed, spawn, and drain-on-shutdown.
+//!
+//! Graceful degradation is strictly outside-in: when the fleet is busy
+//! the listener sheds *whole connections* at accept time (a `SHED` NACK
+//! before the client even says HELLO) and session admission refuses
+//! HELLOs with `TooManySessions` — admitted sessions are never degraded
+//! to make room. [`NetServer::shutdown`] reverses the order: stop
+//! accepting, signal every live handler, and let each drain its session
+//! through `drain`/`close` so no acknowledged batch is ever lost.
+
+use super::conn::{self, ConnCtx, SharedManager};
+use super::deadline::DeadlineStream;
+use super::frame::{self, code, kind, Nack};
+use crate::serve::session::{ServeConfig, SessionManager};
+use crate::serve::stats::{NetStats, ServeStats};
+use crate::util::sync::thread::{spawn, JoinHandle};
+use crate::util::sync::{Arc, AtomicU64, AtomicUsize, Mutex, Ordering};
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::time::Duration;
+
+/// Front-door configuration (wraps the fleet's [`ServeConfig`]).
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// The fleet the listener fronts.
+    pub serve: ServeConfig,
+    /// Overall deadline for one payload read window. A peer that stalls
+    /// mid-frame longer than this is disconnected (and drained).
+    pub read_timeout: Duration,
+    /// Deadline for the *next frame header* to arrive — how long a
+    /// connection may sit idle between frames.
+    pub idle_timeout: Duration,
+    /// Deadline for socket writes (a reply-ignoring peer cannot wedge a
+    /// handler thread).
+    pub write_timeout: Duration,
+    /// Recoverable protocol faults tolerated per connection before a
+    /// `BUDGET` NACK and teardown.
+    pub error_budget: u32,
+    /// Connection cap: accepts past this are shed whole (before HELLO).
+    pub max_connections: usize,
+    /// Largest acceptable frame payload; bigger headers are treated as
+    /// garbage (unrecoverable).
+    pub max_frame_bytes: usize,
+    /// Retry-after hint attached to backpressure/admission NACKs, ms.
+    pub retry_after_ms: u32,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            serve: ServeConfig::default(),
+            read_timeout: Duration::from_secs(2),
+            idle_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(2),
+            error_budget: 3,
+            max_connections: 64,
+            max_frame_bytes: 16 << 20,
+            retry_after_ms: 2,
+        }
+    }
+}
+
+/// Live counters shared by the listener and every connection handler.
+/// Snapshot with [`NetCounters::snapshot`]; field meanings mirror
+/// [`NetStats`] one-to-one.
+#[derive(Default)]
+pub(crate) struct NetCounters {
+    pub(crate) connections_accepted: AtomicU64,
+    pub(crate) connections_shed: AtomicU64,
+    pub(crate) hellos_rejected: AtomicU64,
+    pub(crate) sessions_opened: AtomicU64,
+    pub(crate) batches_acked: AtomicU64,
+    pub(crate) events_ingested: AtomicU64,
+    pub(crate) frames_sent: AtomicU64,
+    pub(crate) nacks_sent: AtomicU64,
+    pub(crate) bad_frames: AtomicU64,
+    pub(crate) checksum_errors: AtomicU64,
+    pub(crate) decode_errors: AtomicU64,
+    pub(crate) protocol_errors: AtomicU64,
+    pub(crate) duplicate_batches: AtomicU64,
+    pub(crate) backpressure_nacks: AtomicU64,
+    pub(crate) deadline_disconnects: AtomicU64,
+    pub(crate) budget_disconnects: AtomicU64,
+    pub(crate) abrupt_disconnects: AtomicU64,
+    pub(crate) sessions_drained_on_error: AtomicU64,
+    pub(crate) drain_accounting_mismatches: AtomicU64,
+    pub(crate) handler_panics: AtomicU64,
+    pub(crate) byes_completed: AtomicU64,
+}
+
+impl NetCounters {
+    pub(crate) fn snapshot(&self) -> NetStats {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        NetStats {
+            connections_accepted: g(&self.connections_accepted),
+            connections_shed: g(&self.connections_shed),
+            hellos_rejected: g(&self.hellos_rejected),
+            sessions_opened: g(&self.sessions_opened),
+            batches_acked: g(&self.batches_acked),
+            events_ingested: g(&self.events_ingested),
+            frames_sent: g(&self.frames_sent),
+            nacks_sent: g(&self.nacks_sent),
+            bad_frames: g(&self.bad_frames),
+            checksum_errors: g(&self.checksum_errors),
+            decode_errors: g(&self.decode_errors),
+            protocol_errors: g(&self.protocol_errors),
+            duplicate_batches: g(&self.duplicate_batches),
+            backpressure_nacks: g(&self.backpressure_nacks),
+            deadline_disconnects: g(&self.deadline_disconnects),
+            budget_disconnects: g(&self.budget_disconnects),
+            abrupt_disconnects: g(&self.abrupt_disconnects),
+            sessions_drained_on_error: g(&self.sessions_drained_on_error),
+            drain_accounting_mismatches: g(&self.drain_accounting_mismatches),
+            handler_panics: g(&self.handler_panics),
+            byes_completed: g(&self.byes_completed),
+        }
+    }
+}
+
+/// A running TCP front door over one [`SessionManager`] fleet.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    manager: SharedManager,
+    counters: Arc<NetCounters>,
+    shutdown: Arc<AtomicUsize>,
+    accept_handle: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback port)
+    /// and start accepting connections over a fresh fleet.
+    pub fn bind(addr: &str, cfg: NetConfig) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        // The accept loop polls so a shutdown flag can stop it; handlers
+        // use blocking reads with deadlines.
+        listener.set_nonblocking(true)?;
+        let manager: SharedManager =
+            Arc::new(Mutex::new(SessionManager::new(cfg.serve.clone())));
+        let counters = Arc::new(NetCounters::default());
+        let shutdown = Arc::new(AtomicUsize::new(0));
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let live = Arc::new(AtomicUsize::new(0));
+
+        let accept_handle = {
+            let manager = manager.clone();
+            let counters = counters.clone();
+            let shutdown = shutdown.clone();
+            let handlers = handlers.clone();
+            spawn(move || {
+                accept_loop(listener, cfg, manager, counters, shutdown, handlers, live)
+            })
+        };
+        Ok(NetServer {
+            local_addr,
+            manager,
+            counters,
+            shutdown,
+            accept_handle: Some(accept_handle),
+            handlers,
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports for loopback tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Fleet statistics with the net counters filled in.
+    pub fn stats(&self) -> ServeStats {
+        let mut stats =
+            self.manager.lock().expect("session manager lock poisoned").stats();
+        stats.net = self.counters.snapshot();
+        stats
+    }
+
+    /// Graceful shutdown: stop accepting, signal every handler, wait for
+    /// each to drain + close its session, then shut the fleet down.
+    /// Returns the final statistics (net counters included).
+    pub fn shutdown(mut self) -> ServeStats {
+        self.shutdown.store(1, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            if h.join().is_err() {
+                self.counters.handler_panics.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let handlers = {
+            let mut guard = self.handlers.lock().expect("handler list lock poisoned");
+            std::mem::take(&mut *guard)
+        };
+        for h in handlers {
+            if h.join().is_err() {
+                self.counters.handler_panics.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // Every handler has drained its own session; anything left (a
+        // refused or panicked handler's session) is closed by the fleet
+        // shutdown. All Arc clones live in the joined threads, so the
+        // unwrap succeeds; the fallback degrades to a live snapshot.
+        let mut stats = match Arc::try_unwrap(self.manager) {
+            Ok(m) => m.into_inner().expect("session manager lock poisoned").shutdown(),
+            Err(arc) => arc.lock().expect("session manager lock poisoned").stats(),
+        };
+        stats.net = self.counters.snapshot();
+        stats
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn accept_loop(
+    listener: TcpListener,
+    cfg: NetConfig,
+    manager: SharedManager,
+    counters: Arc<NetCounters>,
+    shutdown: Arc<AtomicUsize>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    live: Arc<AtomicUsize>,
+) {
+    loop {
+        if shutdown.load(Ordering::SeqCst) != 0 {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if live.load(Ordering::SeqCst) >= cfg.max_connections {
+                    counters.connections_shed.fetch_add(1, Ordering::Relaxed);
+                    counters.nacks_sent.fetch_add(1, Ordering::Relaxed);
+                    shed(stream, &cfg);
+                    continue;
+                }
+                counters.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                live.fetch_add(1, Ordering::SeqCst);
+                let ctx = ConnCtx {
+                    manager: manager.clone(),
+                    cfg: cfg.clone(),
+                    counters: counters.clone(),
+                    shutdown: shutdown.clone(),
+                };
+                let live = live.clone();
+                let handle = spawn(move || {
+                    let _guard = LiveGuard(live);
+                    conn::handle(stream, ctx);
+                });
+                handlers.lock().expect("handler list lock poisoned").push(handle);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+}
+
+/// Decrements the live-connection gauge even if the handler panics.
+struct LiveGuard(Arc<AtomicUsize>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Shed a connection before HELLO: best-effort `SHED` NACK, then close.
+/// Whole-connection shedding is the overload policy — admitted sessions
+/// keep their service level; newcomers are turned away at the door.
+fn shed(stream: std::net::TcpStream, cfg: &NetConfig) {
+    let Ok(mut dl) = DeadlineStream::new(stream, cfg.write_timeout) else { return };
+    let nack = Nack {
+        code: code::SHED,
+        retry_after_ms: cfg.retry_after_ms,
+        seq: 0,
+        reason: format!("listener at connection cap {}; retry later", cfg.max_connections),
+    };
+    let mut payload = Vec::new();
+    nack.encode(&mut payload);
+    let mut buf = Vec::new();
+    frame::encode_frame_into(&mut buf, kind::NACK, &payload);
+    let _ = dl.write_all_within(&buf);
+    let _ = dl.shutdown_now();
+}

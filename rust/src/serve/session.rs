@@ -65,6 +65,21 @@ pub enum Reject {
     UnknownSession(u64),
 }
 
+impl Reject {
+    /// Stable wire code for this rejection, carried verbatim in the net
+    /// front door's NACK frames (`serve::net`). These values are part of
+    /// the wire protocol: never renumber, only append. Codes ≥ 10 are
+    /// reserved for net-layer (framing/deadline) rejections — see
+    /// `serve::net::frame::code`.
+    pub fn code(&self) -> u16 {
+        match self {
+            Reject::TooManySessions { .. } => 1,
+            Reject::Backpressure { .. } => 2,
+            Reject::UnknownSession(_) => 3,
+        }
+    }
+}
+
 impl std::fmt::Display for Reject {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -82,6 +97,8 @@ impl std::fmt::Display for Reject {
         }
     }
 }
+
+impl std::error::Error for Reject {}
 
 /// Fleet configuration.
 #[derive(Clone, Debug)]
@@ -600,13 +617,19 @@ impl SessionManager {
         Ok(frames)
     }
 
-    /// Close a session: waits for its queued jobs, frees its bands on
-    /// the fleet, and returns the final accounting (a full
-    /// `PipelineStats` among it). Staged-but-unflushed events are
-    /// discarded — `drain` first for pipeline-identical totals.
+    /// Close a session: flushes its staged events, waits for its queued
+    /// jobs, frees its bands on the fleet, and returns the final
+    /// accounting (a full `PipelineStats` among it). Every event an
+    /// `ingest_batch` call acknowledged is written before the final
+    /// per-band counts are read: the flush ships staged events as write
+    /// jobs and the `Close` jobs queue *behind* them on each band's FIFO
+    /// mailbox, so in-flight writes are never silently discarded. (The
+    /// remaining window frames through `t_end_us` are still only emitted
+    /// by `drain` — call it first when the caller wants the frame tail.)
     pub fn close(&mut self, sid: SessionId) -> Result<SessionReport, Reject> {
         let mut s =
             self.sessions.remove(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        s.flush(&self.pool);
         let n_actors = s.write_actors.len() + s.score_actors.len();
         let (tx, rx) = bounded::<CloseDone>(n_actors);
         for (b, actor) in s.write_actors.iter().enumerate() {
@@ -681,11 +704,14 @@ impl SessionManager {
         self.pool.hold()
     }
 
-    /// Fleet-wide statistics snapshot.
+    /// Fleet-wide statistics snapshot. `net` is zeroed here — the fleet
+    /// doesn't know about sockets; `serve::net::NetServer::stats` fills
+    /// it for wire-driven fleets.
     pub fn stats(&self) -> ServeStats {
         let sessions: Vec<SessionStats> =
             self.sessions.values().map(Session::live_stats).collect();
         ServeStats {
+            net: Default::default(),
             workers: self.pool.workers(),
             open_sessions: sessions.len(),
             open_bands: self.open_bands(),
@@ -819,6 +845,43 @@ mod tests {
         let report = m.close(sid).unwrap();
         assert_eq!(report.stats.rejected_batches, rejected);
         assert_eq!(report.pipeline.events_in, report.pipeline.events_written);
+        m.shutdown();
+    }
+
+    #[test]
+    fn reject_is_a_coded_error_with_numbered_reasons() {
+        let cases = [
+            (Reject::TooManySessions { open: 7, max: 8 }, 1u16, ["7", "8"]),
+            (Reject::Backpressure { queued: 5, max: 6 }, 2, ["5", "6"]),
+            (Reject::UnknownSession(42), 3, ["42", "s42"]),
+        ];
+        for (reject, code, needles) in cases {
+            assert_eq!(reject.code(), code);
+            let msg = reject.to_string();
+            for n in needles {
+                assert!(msg.contains(n), "Display {msg:?} must carry {n:?}");
+            }
+            // Usable as a boxed error (satellite: impl std::error::Error).
+            let boxed: Box<dyn std::error::Error> = Box::new(reject);
+            assert_eq!(boxed.to_string(), msg);
+        }
+    }
+
+    #[test]
+    fn close_flushes_staged_and_queued_batches() {
+        // Regression: a session closed with events still staged in the
+        // producer batcher AND write jobs still queued on the fleet must
+        // account every acked event as written, not silently drop them.
+        let mut m = SessionManager::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+        let res = Resolution::new(8, 8);
+        let mut cfg = session_cfg(res, 10_000_000);
+        cfg.pipeline.batch_size = 7; // 64 events: 9 flushed jobs + 1 staged
+        cfg.pipeline.window_us = 100_000_000; // no window crossing
+        let sid = m.open(cfg).unwrap();
+        m.ingest_batch(sid, &stream(64, res)).unwrap();
+        let report = m.close(sid).unwrap();
+        assert_eq!(report.pipeline.events_in, 64);
+        assert_eq!(report.pipeline.events_written, 64, "close must flush the staged tail");
         m.shutdown();
     }
 

@@ -90,6 +90,65 @@ pub struct ServeStats {
     pub resident_bytes: usize,
     /// Per-open-session live stats.
     pub sessions: Vec<SessionStats>,
+    /// Network front-door counters (all zero when the fleet is driven
+    /// in-process; filled by `serve::net::NetServer::stats`).
+    pub net: NetStats,
+}
+
+/// Counters of the TCP front door (`serve::net`): every accepted,
+/// shed, rejected or faulted interaction, by type. The chaos harness
+/// (`tests/net_chaos.rs`) asserts each injected fault lands in exactly
+/// one of these buckets — nothing a client can send is unaccounted.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted by the listener.
+    pub connections_accepted: u64,
+    /// Connections shed at accept time (listener at its connection cap)
+    /// — whole-connection degradation before any admitted session slows.
+    pub connections_shed: u64,
+    /// HELLOs refused by session admission (`TooManySessions`, …).
+    pub hellos_rejected: u64,
+    /// Sessions opened over the wire.
+    pub sessions_opened: u64,
+    /// BATCH frames ingested and acknowledged.
+    pub batches_acked: u64,
+    /// Events ingested over the wire (post-decode, pre-STCF).
+    pub events_ingested: u64,
+    /// Window/snapshot FRAME replies sent.
+    pub frames_sent: u64,
+    /// NACK frames sent, all causes.
+    pub nacks_sent: u64,
+    /// Frames refused for a malformed or oversized header.
+    pub bad_frames: u64,
+    /// Frames refused for a payload checksum mismatch.
+    pub checksum_errors: u64,
+    /// BATCH payloads refused with a typed `AerError`.
+    pub decode_errors: u64,
+    /// Protocol-order violations (BATCH before HELLO, seq gaps, …).
+    pub protocol_errors: u64,
+    /// Duplicate BATCH frames (seq already acknowledged) — detected,
+    /// NACKed, and *not* re-ingested.
+    pub duplicate_batches: u64,
+    /// Backpressure NACKs (retry-after hint attached).
+    pub backpressure_nacks: u64,
+    /// Connections dropped for missing a read/idle deadline.
+    pub deadline_disconnects: u64,
+    /// Connections dropped after exhausting the decode-error budget.
+    pub budget_disconnects: u64,
+    /// Peers that vanished mid-conversation (EOF / reset).
+    pub abrupt_disconnects: u64,
+    /// Faulted or vanished sessions that were drained-then-closed (never
+    /// dropped): their acked events all reached the band writers.
+    pub sessions_drained_on_error: u64,
+    /// Drained sessions whose final accounting did not balance
+    /// (events_in ≠ written + dropped-by-STCF). Always 0; a nonzero
+    /// value means an acked batch was lost.
+    pub drain_accounting_mismatches: u64,
+    /// Connection-handler threads that panicked (always 0; asserted by
+    /// the chaos harness).
+    pub handler_panics: u64,
+    /// Sessions ended by a clean BYE handshake.
+    pub byes_completed: u64,
 }
 
 /// (p50, p99) of a latency sample set in milliseconds; zeros when empty.

@@ -1,0 +1,261 @@
+//! Chaos test for the TCP front door (`tsisc::serve::net`).
+//!
+//! One live server, a mixed fleet: clean cameras streaming real batches
+//! over loopback TCP while one faulty camera per [`FaultKind`] attacks
+//! the wire (truncation, bit flips, mid-frame stalls, abrupt
+//! disconnects, duplicate frames). The contract under fire:
+//!
+//! * no panics anywhere (a panicking handler shows up in
+//!   `NetStats::handler_panics` — asserted zero);
+//! * every fault lands in its typed `NetStats` bucket;
+//! * faulty sessions are **drained, not dropped** — their accounting
+//!   balances (`drain_accounting_mismatches == 0`) and no session leaks
+//!   past teardown;
+//! * clean sessions stay **bit-for-bit identical** to a standalone
+//!   `pipeline::run` of the same stream and config, faults or no faults.
+//!
+//! Deterministic given its seed: set `TSISC_CHAOS_SEED=<u64>` to replay
+//! a failing run (the seed is printed on entry).
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use tsisc::coordinator::run_pipeline;
+use tsisc::events::{Event, LabeledEvent, Polarity, Resolution};
+use tsisc::serve::net::faults::{run_faulty_camera, FaultKind};
+use tsisc::serve::net::{ClientConfig, Hello, NetClient, NetConfig, NetServer};
+use tsisc::serve::ServeConfig;
+use tsisc::util::grid::Grid;
+
+/// Seed for the whole run; override with `TSISC_CHAOS_SEED` to replay.
+/// Accepts decimal or `0x…` hex (underscores allowed in either).
+fn chaos_seed() -> u64 {
+    std::env::var("TSISC_CHAOS_SEED")
+        .ok()
+        .and_then(|raw| {
+            let s = raw.trim().replace('_', "");
+            match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => s.parse().ok(),
+            }
+        })
+        .unwrap_or(0xC4A0_5EED)
+}
+
+/// Server shape under test: small fleet, tight read deadline (so the
+/// stall fault trips quickly), three-strike error budget, and a small
+/// in-flight cap so clean cameras exercise backpressure retries too.
+fn chaos_config() -> NetConfig {
+    NetConfig {
+        serve: ServeConfig { workers: 3, max_sessions: 16, max_inflight_batches: 4 },
+        read_timeout: Duration::from_millis(150),
+        idle_timeout: Duration::from_secs(5),
+        write_timeout: Duration::from_secs(2),
+        error_budget: 3,
+        max_connections: 32,
+        max_frame_bytes: 16 << 20,
+        retry_after_ms: 1,
+    }
+}
+
+/// Stall length for the mid-frame stall fault — comfortably past the
+/// server's 150 ms read deadline.
+const STALL_MS: u64 = 600;
+const T_END_US: u64 = 130_000;
+
+/// Per-camera HELLO: mixed geometries and pipeline shapes (with and
+/// without STCF, varied shard/batch choices) so the equivalence check
+/// covers more than one code path.
+fn clean_hello(k: usize) -> Hello {
+    Hello {
+        name: format!("clean-{k}"),
+        width: [24u16, 32, 16][k % 3],
+        height: [18u16, 24, 16][k % 3],
+        t_end_us: T_END_US,
+        window_us: 50_000,
+        batch_size: [64u32, 97, 4_096][k % 3],
+        n_shards: 1 + (k as u32 % 3),
+        denoise_shards: [0u32, 2, 3][k % 3],
+        stcf: k % 3 != 0,
+    }
+}
+
+/// Deterministic time-sorted stream covering the sensor.
+fn stream(w: u16, h: u16, n: u64, step_us: u64, salt: u64) -> Vec<Event> {
+    (0..n)
+        .map(|k| {
+            Event::new(
+                1 + k * step_us,
+                ((k * 7 + salt) % w as u64) as u16,
+                ((k * 5 + salt * 3) % h as u64) as u16,
+                if (k + salt) % 3 == 0 { Polarity::Off } else { Polarity::On },
+            )
+        })
+        .collect()
+}
+
+/// Drive one clean camera over the wire and return what the server sent
+/// back: `(window frames, server frame total)`.
+fn run_clean_camera(addr: SocketAddr, k: usize, seed: u64) -> (Vec<(u64, Grid<f64>)>, u64) {
+    let hello = clean_hello(k);
+    let events = stream(hello.width, hello.height, 400, 300, seed.wrapping_add(k as u64) % 97);
+    let mut client = NetClient::connect(
+        addr,
+        ClientConfig {
+            max_retries: 40,
+            backoff_cap_ms: 20,
+            seed: seed ^ k as u64,
+            ..ClientConfig::default()
+        },
+    )
+    .expect("clean camera connects");
+    client.hello(&hello).expect("clean HELLO is admitted");
+    for chunk in events.chunks(37) {
+        client.send_batch(chunk).expect("clean batch is acked");
+    }
+    // Causal on-demand probe at the stream head: must succeed and must
+    // not perturb the window-frame sequence (checked bit-for-bit below).
+    let probe_at = events.last().expect("stream nonempty").t;
+    let (at, probe) = client.snapshot(probe_at).expect("causal snapshot succeeds");
+    assert_eq!(at, probe_at);
+    assert_eq!(probe.width(), hello.width as usize);
+    assert_eq!(probe.height(), hello.height as usize);
+    client.bye().expect("clean BYE completes")
+}
+
+#[test]
+fn chaos_mixed_fleet_holds_the_contract() {
+    let seed = chaos_seed();
+    println!("TSISC_CHAOS_SEED={seed}");
+    let server = NetServer::bind("127.0.0.1:0", chaos_config()).expect("bind loopback");
+    let addr = server.local_addr();
+
+    let clean: Vec<_> = (0..3)
+        .map(|k| std::thread::spawn(move || run_clean_camera(addr, k, seed)))
+        .collect();
+    let faulty: Vec<_> = FaultKind::ALL
+        .iter()
+        .enumerate()
+        .map(|(i, &fault)| {
+            std::thread::spawn(move || {
+                run_faulty_camera(addr, fault, seed.wrapping_add(i as u64), STALL_MS)
+            })
+        })
+        .collect();
+
+    let mut wire_results = Vec::new();
+    for (k, handle) in clean.into_iter().enumerate() {
+        wire_results.push((k, handle.join().expect("clean camera thread must not panic")));
+    }
+    for handle in faulty {
+        handle.join().expect("faulty camera thread must not panic");
+    }
+    let stats = server.shutdown();
+
+    // Clean sessions: bit-for-bit ≡ a standalone pipeline::run of the
+    // same stream under the config the HELLO mapped to.
+    for (k, (frames, total)) in wire_results {
+        let hello = clean_hello(k);
+        let events = stream(hello.width, hello.height, 400, 300, seed.wrapping_add(k as u64) % 97);
+        let res = Resolution::new(hello.width, hello.height);
+        let labeled = events.iter().map(|&ev| LabeledEvent { ev, is_signal: true });
+        let reference = run_pipeline(labeled, res, T_END_US, &hello.pipeline_config());
+        assert_eq!(
+            frames, reference.frames,
+            "clean camera {k}: wire frames diverged from pipeline::run"
+        );
+        assert_eq!(total, reference.stats.frames_emitted, "clean camera {k} frame total");
+        assert_eq!(frames.len() as u64, total, "clean camera {k} received ≠ emitted");
+    }
+
+    // Every fault kind landed in its typed bucket.
+    let n = &stats.net;
+    assert!(n.duplicate_batches >= 1, "duplicate fault uncounted: {n:?}");
+    assert!(n.deadline_disconnects >= 1, "stall fault uncounted: {n:?}");
+    assert!(n.abrupt_disconnects >= 2, "truncate+disconnect faults uncounted: {n:?}");
+    assert!(n.checksum_errors >= 3, "bit-flip faults uncounted: {n:?}");
+    assert!(n.budget_disconnects >= 1, "error budget never tripped: {n:?}");
+    assert!(n.nacks_sent >= 5, "faults must be NACKed where a peer is still listening: {n:?}");
+
+    // Drained, not dropped: every faulted session was drained through
+    // close, its accounting balanced, and nothing leaked.
+    assert!(n.sessions_drained_on_error >= 4, "faulted sessions must drain: {n:?}");
+    assert_eq!(n.drain_accounting_mismatches, 0, "acked events went missing: {n:?}");
+    assert_eq!(n.handler_panics, 0, "a connection handler panicked: {n:?}");
+    assert_eq!(stats.open_sessions, 0, "sessions leaked past teardown");
+
+    // Bookkeeping sanity: 8 cameras connected, 4 BYEs completed (three
+    // clean + the duplicate-fault camera), every admitted HELLO opened.
+    assert_eq!(n.connections_accepted, 8, "{n:?}");
+    assert_eq!(n.sessions_opened, 8, "{n:?}");
+    assert!(n.byes_completed >= 4, "{n:?}");
+    assert!(n.batches_acked >= 3 * 11 + 5 * 2, "clean batches must all ack: {n:?}");
+}
+
+#[test]
+fn overload_sheds_whole_connections_before_degrading_sessions() {
+    let cfg = NetConfig {
+        max_connections: 1,
+        ..chaos_config()
+    };
+    let server = NetServer::bind("127.0.0.1:0", cfg).expect("bind loopback");
+    let addr = server.local_addr();
+
+    // First connection occupies the only slot.
+    let mut first = NetClient::connect(addr, ClientConfig::default()).expect("first connects");
+    first.hello(&clean_hello(0)).expect("first HELLO admitted");
+
+    // Subsequent connections are shed whole: a SHED NACK at the door,
+    // before HELLO — the admitted session's service level is untouched.
+    let mut shed_seen = 0;
+    for _ in 0..5 {
+        let mut extra = match NetClient::connect(addr, ClientConfig::default()) {
+            Ok(c) => c,
+            Err(_) => continue, // raced the accept loop; connect refused is fine
+        };
+        match extra.hello(&clean_hello(1)) {
+            Err(tsisc::serve::net::NetError::Nacked { code, .. }) => {
+                assert_eq!(code, tsisc::serve::net::frame::code::SHED, "shed must use SHED");
+                shed_seen += 1;
+            }
+            Err(_) => {} // connection dropped before the NACK arrived
+            Ok(()) => panic!("over-cap connection was admitted"),
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(shed_seen >= 1, "no connection was shed with a typed NACK");
+
+    // The admitted session still works end to end.
+    let events = stream(24, 18, 100, 300, 1);
+    for chunk in events.chunks(37) {
+        first.send_batch(chunk).expect("admitted session keeps its service level");
+    }
+    let (_frames, _total) = first.bye().expect("admitted session closes cleanly");
+
+    let stats = server.shutdown();
+    assert!(stats.net.connections_shed >= 1, "{:?}", stats.net);
+    assert_eq!(stats.net.sessions_opened, 1, "{:?}", stats.net);
+    assert_eq!(stats.net.drain_accounting_mismatches, 0);
+}
+
+#[test]
+fn server_shutdown_drains_live_sessions_without_losing_acked_batches() {
+    let server = NetServer::bind("127.0.0.1:0", chaos_config()).expect("bind loopback");
+    let addr = server.local_addr();
+
+    // A camera sends acked batches and then goes quiet WITHOUT a BYE;
+    // server shutdown must drain its session, not drop it.
+    let hello = clean_hello(0);
+    let events = stream(hello.width, hello.height, 200, 300, 7);
+    let mut client = NetClient::connect(addr, ClientConfig::default()).expect("connect");
+    client.hello(&hello).expect("admitted");
+    for chunk in events.chunks(50) {
+        client.send_batch(chunk).expect("acked");
+    }
+
+    let stats = server.shutdown();
+    assert_eq!(stats.net.drain_accounting_mismatches, 0, "{:?}", stats.net);
+    assert_eq!(stats.open_sessions, 0);
+    assert_eq!(stats.net.events_ingested, 200, "{:?}", stats.net);
+    assert_eq!(stats.net.handler_panics, 0);
+}

@@ -41,6 +41,132 @@ fn prop_aer_roundtrip_any_stream() {
     });
 }
 
+/// Byte length of one AER record: canonical varint Δt + x u16 + y u16 +
+/// polarity u8 (mirrors the encoder, used to find record boundaries).
+fn aer_record_len(delta: u64) -> usize {
+    let mut v = delta;
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n + 5
+}
+
+#[test]
+fn prop_mutated_aer_never_panics_and_fails_typed() {
+    // Robustness contract of the decoder against arbitrary corruption:
+    // a mutated stream either decodes to *some* valid stream (a flipped
+    // coordinate bit is still a coordinate — in-bounds, time-sorted) or
+    // returns a typed `AerError`; it never panics and never yields an
+    // out-of-range event. Records wholly before the first mutated byte
+    // always decode identically, and the incremental decoder agrees
+    // with the one-shot path byte for byte.
+    check("aer mutation robustness", 300, |g| {
+        let res = Resolution::new(48, 36);
+        let evs: Vec<Event> = {
+            let n = g.usize(1, 120);
+            let mut t = 0u64;
+            (0..n)
+                .map(|_| {
+                    t += g.u64(0, 3_000);
+                    Event::new(
+                        t,
+                        g.u64(0, 47) as u16,
+                        g.u64(0, 35) as u16,
+                        if g.bool(0.5) { Polarity::On } else { Polarity::Off },
+                    )
+                })
+                .collect()
+        };
+        let bytes = aer::encode(&evs);
+
+        // Corrupt: 1–4 bit flips / byte stomps, possibly a truncation.
+        let mut mutated = bytes.clone();
+        let mut first_mut = mutated.len();
+        for _ in 0..g.usize(1, 4) {
+            if mutated.is_empty() {
+                break;
+            }
+            match g.usize(0, 2) {
+                0 => {
+                    let i = g.usize(0, mutated.len() - 1);
+                    mutated[i] ^= 1 << g.usize(0, 7);
+                    first_mut = first_mut.min(i);
+                }
+                1 => {
+                    let i = g.usize(0, mutated.len() - 1);
+                    mutated[i] = g.u64(0, 255) as u8;
+                    first_mut = first_mut.min(i);
+                }
+                _ => {
+                    let cut = g.usize(0, mutated.len());
+                    mutated.truncate(cut);
+                    first_mut = first_mut.min(cut);
+                }
+            }
+        }
+
+        // One-shot and prefix-preserving decode paths.
+        let oneshot = aer::decode(&mutated, res);
+        let mut prefix = Vec::new();
+        let prefix_err = aer::decode_into(&mutated, res, &mut prefix).err();
+
+        // Whatever happened, the produced events are valid: in-bounds
+        // and time-sorted — corruption is *typed*, never silent garbage.
+        assert!(prefix
+            .iter()
+            .all(|e| (e.x as u32) < res.width && (e.y as u32) < res.height));
+        assert!(prefix.windows(2).all(|w| w[0].t <= w[1].t));
+        match (&oneshot, &prefix_err) {
+            (Ok(full), None) => assert_eq!(full, &prefix),
+            (Err(a), Some(b)) => assert_eq!(a, b, "decode and decode_into disagree on the error"),
+            other => panic!("decode / decode_into disagree on success: {other:?}"),
+        }
+
+        // Records wholly before the first mutated byte decode exactly.
+        let mut intact = 0usize;
+        let mut end = 0usize;
+        let mut last_t = 0u64;
+        for e in &evs {
+            end += aer_record_len(e.t - last_t);
+            last_t = e.t;
+            if end > first_mut {
+                break;
+            }
+            intact += 1;
+        }
+        assert!(
+            prefix.len() >= intact,
+            "lost intact records: decoded {} of {intact} pre-mutation events",
+            prefix.len()
+        );
+        assert_eq!(&prefix[..intact], &evs[..intact], "pre-mutation records changed");
+
+        // The incremental decoder, fed arbitrary chunk splits of the
+        // same corrupted bytes, reaches the same events and same error.
+        let mut inc = aer::AerDecoder::new(res);
+        let mut inc_out = Vec::new();
+        let mut inc_err = None;
+        let mut pos = 0usize;
+        while pos < mutated.len() {
+            let take = g.usize(1, 37).min(mutated.len() - pos);
+            match inc.push(&mutated[pos..pos + take], &mut inc_out) {
+                Ok(_) => pos += take,
+                Err(e) => {
+                    inc_err = Some(e);
+                    break;
+                }
+            }
+        }
+        if inc_err.is_none() {
+            inc_err = inc.finish().err();
+        }
+        assert_eq!(inc_out, prefix, "incremental prefix diverged from one-shot");
+        assert_eq!(inc_err, prefix_err, "incremental error diverged from one-shot");
+    });
+}
+
 #[test]
 fn prop_merge_sorted_is_sorted_and_complete() {
     check("merge sorted", 100, |g| {

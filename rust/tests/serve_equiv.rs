@@ -240,6 +240,70 @@ fn close_frees_bands_and_invalidates_the_id() {
 }
 
 #[test]
+fn close_with_staged_and_queued_batches_loses_nothing() {
+    // Regression: `close` used to tear a session down without flushing
+    // its staging batcher, silently discarding events that had already
+    // been acknowledged to the caller. Close must behave like an
+    // implicit flush: every ingested event reaches the band writers
+    // before the final report is cut.
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 2,
+        max_sessions: 4,
+        max_inflight_batches: 64,
+    });
+    let res = Resolution::new(16, 16);
+
+    // Session A: a huge batch size keeps everything *staged* (no write
+    // batch ever shipped before close).
+    let mut staged_cfg = pipeline_cfg(0); // no STCF
+    staged_cfg.batch_size = 4_096;
+    staged_cfg.window_us = 1 << 40; // no window boundary forces a flush
+    let a = m
+        .open(SessionConfig {
+            name: "staged".into(),
+            res,
+            t_end_us: 1 << 41,
+            pipeline: staged_cfg,
+        })
+        .unwrap();
+
+    // Session B: a tiny batch size ships many write batches that may
+    // still be *queued* on the fleet when close arrives.
+    let mut queued_cfg = pipeline_cfg(0);
+    queued_cfg.batch_size = 7;
+    queued_cfg.window_us = 1 << 40;
+    let b = m
+        .open(SessionConfig {
+            name: "queued".into(),
+            res,
+            t_end_us: 1 << 41,
+            pipeline: queued_cfg,
+        })
+        .unwrap();
+
+    m.ingest_batch(a, &stream(res, 333, 200, 9)).unwrap();
+    m.ingest_batch(b, &stream(res, 320, 200, 4)).unwrap();
+
+    // No drain, no snapshot: close straight away.
+    for (sid, n, label) in [(a, 333u64, "staged"), (b, 320u64, "queued")] {
+        let report = m.close(sid).unwrap();
+        assert_eq!(report.pipeline.events_in, n, "{label}");
+        assert_eq!(
+            report.pipeline.events_written, n,
+            "{label}: close discarded in-flight work"
+        );
+        assert_eq!(report.pipeline.events_dropped_by_stcf, 0, "{label}");
+        // The accounting balance the net layer's drain check relies on.
+        assert_eq!(
+            report.pipeline.events_in,
+            report.pipeline.events_written + report.pipeline.events_dropped_by_stcf,
+            "{label}"
+        );
+    }
+    m.shutdown();
+}
+
+#[test]
 fn causal_on_demand_snapshots_do_not_perturb_window_frames() {
     let res = Resolution::new(24, 18);
     let events = stream(res, 300, 350, 5);

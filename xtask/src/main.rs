@@ -10,6 +10,7 @@
 //! | `undocumented-pub-item` | every pub fn/struct/enum/trait/type/const/static in `serve`/`coordinator`/`denoise` has a doc comment |
 //! | `unanchored-band-array` | band-scoped array construction anchors with `IscConfig::origin_y`; no raw `y - band_start` rebasing |
 //! | `eager-alloc` | no full-resolution allocations (`vec!`/`Vec::with_capacity` sized by `w * h` / `width * height`) in `serve/`/`coordinator/` — band state materializes lazily on first write (PR 7); justified exceptions carry `lint-invariants: allow(eager-alloc)` |
+//! | `net-deadline` | no bare `.read(`/`.read_exact(`/`.write(`/`.write_all(`/… in `serve/net/` outside `deadline.rs` — socket I/O goes through `DeadlineStream`'s configured-timeout wrappers so no handler blocks unboundedly (PR 8) |
 //!
 //! The scanners are deliberately line-based over rustfmt-shaped source —
 //! dependency-free, so the suite builds in offline containers. Each rule
@@ -382,6 +383,51 @@ fn check_eager_alloc(path: &str, src: &str) -> Vec<Violation> {
     out
 }
 
+/// Raw stream calls the net-deadline rule rejects outside the wrapper.
+/// Paren-inclusive on purpose: `.read_exact(` does not match the
+/// sanctioned `.read_exact_within(`, and likewise for writes.
+const RAW_IO_SITES: &[&str] = &[
+    ".read(",
+    ".read_exact(",
+    ".read_to_end(",
+    ".read_to_string(",
+    ".write(",
+    ".write_all(",
+];
+
+/// Deadline law (PR 8): every socket read/write in `serve/net/` goes
+/// through `DeadlineStream`'s configured-timeout wrappers
+/// (`read_exact_within` / `read_exact_polled` / `write_all_within`) so
+/// no connection handler can block unboundedly on a slow or hostile
+/// peer. Only `deadline.rs` itself — the wrapper — touches the raw
+/// stream. A bare `.read(` / `.write_all(` / … anywhere else under
+/// `serve/net/` is a slow-loris hole.
+fn check_net_deadline(path: &str, src: &str) -> Vec<Violation> {
+    if !path.contains("serve/net/") || path.ends_with("deadline.rs") {
+        return Vec::new();
+    }
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        let Some(site) = RAW_IO_SITES.iter().find(|s| code.contains(*s)) else { continue };
+        if suppressed(&lines, i, "net-deadline") {
+            continue;
+        }
+        out.push(Violation {
+            file: path.to_string(),
+            line: i + 1,
+            rule: "net-deadline",
+            msg: format!(
+                "bare `{site}` in serve/net — socket I/O must go through \
+                 DeadlineStream's timeout wrappers (read_exact_within / \
+                 read_exact_polled / write_all_within) or move into deadline.rs"
+            ),
+        });
+    }
+    out
+}
+
 /// Run every rule over one file.
 fn check_file(path: &str, src: &str) -> Vec<Violation> {
     let mut out = Vec::new();
@@ -391,6 +437,7 @@ fn check_file(path: &str, src: &str) -> Vec<Violation> {
     out.extend(check_pub_docs(path, src));
     out.extend(check_band_anchoring(path, src));
     out.extend(check_eager_alloc(path, src));
+    out.extend(check_net_deadline(path, src));
     out
 }
 
@@ -716,6 +763,53 @@ fn staging(batch_size: usize, n_bands: usize) -> Vec<Vec<Event>> {
 let composite = vec![0.0; res.width as usize * res.height as usize];
 ";
         assert!(check_eager_alloc("serve/session.rs", allowed).is_empty());
+    }
+
+    // ---- net-deadline ----
+
+    #[test]
+    fn catches_bare_reads_and_writes_in_serve_net() {
+        let src = "
+fn pump(stream: &mut TcpStream, buf: &mut [u8]) {
+    stream.read_exact(buf).unwrap();
+    stream.write_all(buf).unwrap();
+    let _ = stream.read(buf);
+}
+";
+        let v = check_net_deadline("serve/net/conn.rs", src);
+        assert_eq!(v.len(), 3, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == "net-deadline"));
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn timeout_wrappers_do_not_trip_net_deadline() {
+        // The sanctioned calls share prefixes with the banned tokens —
+        // the paren-inclusive match must not confuse them.
+        let src = "
+fn pump(dl: &mut DeadlineStream, buf: &mut [u8]) -> io::Result<()> {
+    dl.read_exact_within(buf, TIMEOUT)?;
+    dl.read_exact_polled(buf, TIMEOUT, TICK, || false)?;
+    dl.write_all_within(buf)
+}
+";
+        assert!(check_net_deadline("serve/net/conn.rs", src).is_empty());
+    }
+
+    #[test]
+    fn net_deadline_scope_and_suppression() {
+        let src = "let n = stream.read(&mut buf)?;\n";
+        // deadline.rs is the wrapper — the one place raw I/O is legal.
+        assert!(check_net_deadline("serve/net/deadline.rs", src).is_empty());
+        // Outside serve/net/ the rule does not apply.
+        assert!(check_net_deadline("serve/session.rs", src).is_empty());
+        assert!(check_net_deadline("events/aer.rs", src).is_empty());
+        // Inside, a justified exception is suppressible.
+        let allowed = "
+// lint-invariants: allow(net-deadline)
+let n = stream.read(&mut buf)?;
+";
+        assert!(check_net_deadline("serve/net/server.rs", allowed).is_empty());
     }
 
     // ---- whole-tree gate ----
