@@ -66,10 +66,12 @@ done
 
 # The serve snapshot must carry the idle-fleet memory sweep (quiet
 # sessions' resident bytes are the lazy-materialization regression
-# canary) AND the wire-mode round trip (wire_to_snapshot_p99_us proves
-# the TCP front door was actually exercised end to end) — same
-# hard-fail policy as a missing snapshot.
-for key in resident_bytes_per_session duty_pct wire_to_snapshot_p99_us; do
+# canary), the wire-mode round trip (wire_to_snapshot_p99_us proves
+# the TCP front door was actually exercised end to end), AND the chaos
+# sweep (clean_session_p99_under_faults_us proves panic isolation was
+# measured with faulty tenants in the fleet) — same hard-fail policy
+# as a missing snapshot.
+for key in resident_bytes_per_session duty_pct wire_to_snapshot_p99_us clean_session_p99_under_faults_us; do
     if [ -s rust/BENCH_serve.json ] && ! grep -q "\"$key\"" rust/BENCH_serve.json; then
         echo "ci.sh: ERROR — rust/BENCH_serve.json lacks required bench key \"$key\"" >&2
         fail=1

@@ -6,11 +6,15 @@
 //! (256 sessions at 1 %/10 %/100 % duty cycle) reporting
 //! `resident_bytes_per_session` — the number that proves quiet
 //! sessions cost O(bands) structs under lazy band materialization, not
-//! O(H·W) arrays.
+//! O(H·W) arrays — and the **chaos sweep** (0 %/1 %/10 % of sessions
+//! armed with seeded job-panic plans) reporting
+//! `clean_session_p99_under_faults_us`, the bystander latency price of
+//! panic isolation.
 //!
 //! Dumps `BENCH_serve.json` (via `util::bench::dump_json`) next to the
 //! manifest; CI uploads it alongside the tsurface/router/denoise
-//! snapshots and hard-fails if the idle-fleet keys are missing.
+//! snapshots and hard-fails if the idle-fleet or chaos keys are
+//! missing.
 
 use std::time::{Duration, Instant};
 use tsisc::coordinator::{PipelineConfig, RouterConfig};
@@ -20,7 +24,7 @@ use tsisc::events::v2e::{convert, DvsParams};
 use tsisc::events::{Event, LabeledEvent, Resolution};
 use tsisc::isc::IscConfig;
 use tsisc::serve::net::{ClientConfig, Hello, NetClient, NetConfig, NetServer};
-use tsisc::serve::{ServeConfig, SessionConfig, SessionManager};
+use tsisc::serve::{SchedFaultKind, SchedFaultPlan, ServeConfig, SessionConfig, SessionManager};
 use tsisc::util::bench::{bench, dump_json, header, JsonEntry};
 use tsisc::util::stats::percentile;
 
@@ -40,6 +44,7 @@ fn bench_fleet(
         workers,
         max_sessions: sessions,
         max_inflight_batches: 1 << 20, // throughput run: never reject
+        ..ServeConfig::default()
     });
     let sids: Vec<_> = (0..sessions)
         .map(|k| {
@@ -117,6 +122,7 @@ fn bench_idle_fleet(
         workers: 4,
         max_sessions: sessions,
         max_inflight_batches: 1 << 20, // throughput run: never reject
+        ..ServeConfig::default()
     });
     let sids: Vec<_> = (0..sessions)
         .map(|k| {
@@ -185,6 +191,102 @@ fn bench_idle_fleet(
     m.shutdown();
 }
 
+/// Chaos sweep: `faulty_pct`% of a 100-session fleet carries an armed
+/// `JobPanic` plan (seeded, fires once, quarantines that session); the
+/// metric is the **clean** sessions' snapshot p99 — the latency price
+/// bystanders pay for sharing a fleet with crashing tenants. Panic
+/// isolation at the job-body boundary means the price should be noise:
+/// no worker dies, no queue wedges, quarantined sessions go quiet.
+fn bench_chaos_fleet(
+    json: &mut Vec<JsonEntry>,
+    base: &[LabeledEvent],
+    span: u64,
+    res: Resolution,
+    faulty_pct: usize,
+) {
+    let sessions = 100usize;
+    let n_faulty = sessions * faulty_pct / 100;
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 4,
+        max_sessions: sessions,
+        max_inflight_batches: 1 << 20, // throughput run: never reject
+        ..ServeConfig::default()
+    });
+    let session_cfg = |k: usize| SessionConfig {
+        name: format!("chaos-{k}"),
+        res,
+        t_end_us: 0, // no window clock: snapshots are timed explicitly
+        pipeline: PipelineConfig {
+            stcf: None,
+            denoise_shards: 0,
+            router: RouterConfig {
+                isc: IscConfig { bank_size: 64, ..IscConfig::default() },
+                ..RouterConfig::default()
+            },
+            ..PipelineConfig::default()
+        },
+    };
+    let mut clean_sids = Vec::new();
+    let mut faulty_sids = Vec::new();
+    for k in 0..sessions {
+        if k < n_faulty {
+            let plan = SchedFaultPlan::from_seed(SchedFaultKind::JobPanic, 0xC4A0_5EED ^ k as u64);
+            faulty_sids.push(m.open_with_fault(session_cfg(k), Some(plan)).expect("open faulty"));
+        } else {
+            clean_sids.push(m.open(session_cfg(k)).expect("open clean"));
+        }
+    }
+    let mut offset = 0u64;
+    let mut shifted: Vec<LabeledEvent> = base.to_vec();
+    let mut snap_lat: Vec<f64> = Vec::new();
+    let label = format!("chaos fleet {sessions} sessions @ {faulty_pct:>2}% faulty");
+    let r = bench(&label, (base.len() * clean_sids.len()) as f64, 20, 100, || {
+        offset += span;
+        for (dst, src) in shifted.iter_mut().zip(base) {
+            *dst = *src;
+            dst.ev.t += offset;
+        }
+        for chunk in shifted.chunks(2_048) {
+            for sid in &clean_sids {
+                m.ingest_batch(*sid, chunk).expect("clean ingest never rejected");
+            }
+            // Faulty sessions keep sending until quarantine silences
+            // them — the rejection path is part of the measured load.
+            for sid in &faulty_sids {
+                let _ = m.ingest_batch(*sid, chunk);
+            }
+        }
+        for sid in &clean_sids {
+            let t0 = Instant::now();
+            std::hint::black_box(m.snapshot(*sid, offset + span).expect("clean snapshot"));
+            snap_lat.push(t0.elapsed().as_secs_f64());
+        }
+    });
+    println!("{}", r.report());
+    let p99_us = percentile(&snap_lat, 99.0) * 1e6;
+    // Sync point: a checkpoint rides every band FIFO behind the armed
+    // jobs, so once it returns, every injected panic has fired and been
+    // counted (quarantined bands just export nothing).
+    for sid in &faulty_sids {
+        let _ = m.checkpoint(*sid);
+    }
+    let sup = m.stats().supervisor;
+    println!(
+        "    clean snapshot p99 {p99_us:.1} µs with {} quarantined / {} panics caught / \
+         {} respawns",
+        sup.quarantines, sup.worker_panics, sup.worker_respawns,
+    );
+    assert_eq!(sup.quarantines, n_faulty as u64, "every armed plan quarantines its session");
+    assert_eq!(sup.worker_respawns, 0, "caught panics must not kill workers");
+    let tput = r.throughput_per_sec();
+    let mut entry = JsonEntry::with(r, "sessions", sessions as f64);
+    entry.extra.push(("faulty_pct", faulty_pct as f64));
+    entry.extra.push(("events_per_sec", tput));
+    entry.extra.push(("clean_session_p99_under_faults_us", p99_us));
+    json.push(entry);
+    m.shutdown();
+}
+
 /// Wire mode: the same workload shipped over loopback TCP through the
 /// `serve::net` front door — AER-encoded BATCH frames in, a timed
 /// SNAPSHOT_REQ round trip out. `wire_to_snapshot_p99_us` is the p99 of
@@ -194,7 +296,12 @@ fn bench_wire(json: &mut Vec<JsonEntry>, base: &[LabeledEvent], span: u64, res: 
     let server = NetServer::bind(
         "127.0.0.1:0",
         NetConfig {
-            serve: ServeConfig { workers: 4, max_sessions: 4, max_inflight_batches: 1 << 20 },
+            serve: ServeConfig {
+                workers: 4,
+                max_sessions: 4,
+                max_inflight_batches: 1 << 20,
+                ..ServeConfig::default()
+            },
             read_timeout: Duration::from_secs(5),
             idle_timeout: Duration::from_secs(30),
             write_timeout: Duration::from_secs(5),
@@ -291,6 +398,12 @@ fn main() {
     header("idle fleet: resident bytes per session vs duty cycle");
     for &duty in &[1usize, 10, 100] {
         bench_idle_fleet(&mut json, &base, span, 256, duty);
+    }
+
+    // --- chaos sweep (panic isolation overhead on bystanders) -------------
+    header("serve fleet under chaos: clean-session p99 vs faulty share");
+    for &faulty_pct in &[0usize, 1, 10] {
+        bench_chaos_fleet(&mut json, &base, span, res, faulty_pct);
     }
 
     // --- wire mode (TCP front door, end-to-end) ---------------------------

@@ -27,7 +27,7 @@
 use super::router::{Router, RouterConfig, RouterStats};
 use crate::denoise::sharded::{ShardBackend, ShardTally, StcfShardPool};
 use crate::denoise::{support_count, StcfBackend, StcfParams};
-use crate::events::{Event, LabeledEvent, Resolution};
+use crate::events::{ClockPolicy, Event, LabeledEvent, Resolution};
 use crate::util::grid::Grid;
 use std::time::Instant;
 
@@ -48,6 +48,12 @@ pub struct PipelineConfig {
     /// Events staged between flushes — the ingest batch size and the
     /// pipeline's only stream buffering.
     pub batch_size: usize,
+    /// What to do with events whose timestamps run backwards (below the
+    /// stream watermark): clamp them up to the watermark (default) or
+    /// reject them outright. Either way the count lands in
+    /// [`PipelineStats::events_nonmonotonic`] — a non-monotonic source
+    /// is never silently fed to the decay math.
+    pub clock_policy: ClockPolicy,
     pub router: RouterConfig,
 }
 
@@ -58,6 +64,7 @@ impl Default for PipelineConfig {
             stcf: None,
             denoise_shards: 4,
             batch_size: 4_096,
+            clock_policy: ClockPolicy::default(),
             router: RouterConfig::default(),
         }
     }
@@ -99,6 +106,11 @@ pub struct PipelineStats {
     pub events_in: u64,
     pub events_written: u64,
     pub events_dropped_by_stcf: u64,
+    /// Events that arrived with a timestamp below the stream watermark
+    /// and were clamped or rejected per [`PipelineConfig::clock_policy`].
+    /// (Rejected events are excluded from `events_in`, so the
+    /// in = written + dropped balance always holds.)
+    pub events_nonmonotonic: u64,
     pub frames_emitted: u64,
     /// High-water mark of the staging batch — bounded by `batch_size`,
     /// which is the pipeline's no-full-stream-copy guarantee.
@@ -225,9 +237,23 @@ where
     let mut next_frame = cfg.window_us;
     let mut events_in = 0u64;
     let mut dropped = 0u64;
+    let mut nonmonotonic = 0u64;
+    let mut last_t = 0u64;
     let mut peak_batch_len = 0usize;
 
     for le in events {
+        let mut le = le;
+        if le.ev.t < last_t {
+            // Backwards clock (duplicates pass: `<`, not `<=`). Reject
+            // skips the event before `events_in`, keeping the
+            // in = written + dropped balance intact.
+            nonmonotonic += 1;
+            match cfg.clock_policy {
+                ClockPolicy::Clamp => le.ev.t = last_t,
+                ClockPolicy::Reject => continue,
+            }
+        }
+        last_t = le.ev.t;
         events_in += 1;
         // Snapshot every window boundary the stream has passed; staged
         // events are flushed through denoise + routing first, so each
@@ -280,6 +306,7 @@ where
         events_in,
         events_written,
         events_dropped_by_stcf: dropped,
+        events_nonmonotonic: nonmonotonic,
         frames_emitted: frames.len() as u64,
         peak_batch_len,
         wall_seconds: wall_s,
@@ -475,6 +502,35 @@ mod tests {
             st.bands_skipped_unchanged > 0,
             "clean bands must be skipped: {st:?}"
         );
+    }
+
+    #[test]
+    fn clamp_policy_ingests_backwards_events_at_the_watermark() {
+        let res = Resolution::new(8, 8);
+        let mk = |t| LabeledEvent { ev: Event::new(t, 1, 1, Polarity::On), is_signal: true };
+        // 1000, 500 (backwards), 1000 (duplicate — passes), 2000.
+        let evs = vec![mk(1_000), mk(500), mk(1_000), mk(2_000)];
+        let cfg = PipelineConfig::default();
+        assert_eq!(cfg.clock_policy, crate::events::ClockPolicy::Clamp);
+        let r = run(evs.iter().copied(), res, 50_000, &cfg);
+        assert_eq!(r.stats.events_in, 4, "clamped events are ingested");
+        assert_eq!(r.stats.events_written, 4);
+        assert_eq!(r.stats.events_nonmonotonic, 1, "only the strict decrease counts");
+    }
+
+    #[test]
+    fn reject_policy_drops_backwards_events_before_accounting() {
+        let res = Resolution::new(8, 8);
+        let mk = |t| LabeledEvent { ev: Event::new(t, 1, 1, Polarity::On), is_signal: true };
+        let evs = vec![mk(1_000), mk(500), mk(1_000), mk(2_000)];
+        let cfg = PipelineConfig {
+            clock_policy: crate::events::ClockPolicy::Reject,
+            ..PipelineConfig::default()
+        };
+        let r = run(evs.iter().copied(), res, 50_000, &cfg);
+        assert_eq!(r.stats.events_in, 3, "rejected event never enters the accounting");
+        assert_eq!(r.stats.events_written, 3);
+        assert_eq!(r.stats.events_nonmonotonic, 1);
     }
 
     #[test]

@@ -76,7 +76,7 @@
 //! unsharded array for **every** shard layout, mismatch included (the
 //! PR 4 per-shard-seed caveat is gone).
 
-use crate::events::{Event, Resolution};
+use crate::events::{Event, Polarity, Resolution};
 use crate::isc::{IscArray, IscConfig};
 use crate::util::grid::Grid;
 use crate::util::sync::chan::{bounded, Sender};
@@ -330,6 +330,50 @@ impl BandWriter {
     /// independent of the sensor resolution.
     pub fn approx_bytes(&self) -> usize {
         std::mem::size_of::<Self>() + self.array.as_ref().map_or(0, IscArray::approx_bytes)
+    }
+
+    /// Export the band's restorable state for a `serve::supervise`
+    /// checkpoint: appends every written stamp in **band-local**
+    /// coordinates (`plane` 0 = OFF / polarity-insensitive, 1 = ON) and
+    /// returns the events-processed counter. A cold band appends
+    /// nothing — its state is exactly the counter.
+    pub fn export_state(&self, stamps: &mut Vec<(u8, u16, u16, u64)>) -> u64 {
+        if let Some(array) = &self.array {
+            array.for_each_stamp(|pi, x, y, t| stamps.push((pi as u8, x, y, t)));
+        }
+        self.processed
+    }
+
+    /// Rebuild the band from an [`BandWriter::export_state`] checkpoint:
+    /// replay the stamps (sorted ascending by time here, so the clock
+    /// and recency planes see a monotone stream) into a freshly
+    /// materialized array and restore the processed counter. The
+    /// restored writer holds no cached-reply state (`last_at` cleared),
+    /// so its first snapshot performs one full render; the rendered
+    /// values are bit-for-bit identical to the never-crashed writer at
+    /// every causal query time (position-stable parameter assignment +
+    /// stamp-complete array state).
+    pub fn restore_state(&mut self, processed: u64, stamps: &[(u8, u16, u16, u64)]) {
+        self.array = None;
+        self.last_at = None;
+        self.dirty = false;
+        self.dirty_rows = None;
+        self.empty_static = false;
+        self.processed = processed;
+        if stamps.is_empty() {
+            return;
+        }
+        let mut batch: Vec<Event> = stamps
+            .iter()
+            .map(|&(plane, x, y, t)| {
+                let p = if plane == 1 { Polarity::On } else { Polarity::Off };
+                Event::new(t, x, y, p)
+            })
+            .collect();
+        batch.sort_unstable_by_key(|e| e.t);
+        self.array
+            .get_or_insert_with(|| IscArray::new(self.band_res, self.cfg.clone()))
+            .write_batch(&batch);
     }
 }
 

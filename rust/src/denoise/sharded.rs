@@ -196,6 +196,31 @@ impl BandScorer {
     pub fn approx_bytes(&self) -> usize {
         std::mem::size_of::<Self>() + self.backend.approx_bytes()
     }
+
+    /// Export the scorer's restorable state for a `serve::supervise`
+    /// checkpoint: appends every backend stamp in **region-local**
+    /// coordinates (band + halo; `plane` 0 = OFF / polarity-insensitive,
+    /// 1 = ON) and returns a copy of the outcome tallies.
+    pub fn export_state(&self, stamps: &mut Vec<(u8, u16, u16, u64)>) -> ShardTally {
+        self.backend.for_each_stamp(|plane, x, y, t| stamps.push((plane, x, y, t)));
+        self.tally.clone()
+    }
+
+    /// Rebuild the scorer from an [`BandScorer::export_state`]
+    /// checkpoint: replay the stamps (sorted ascending by time here, so
+    /// the backend's clock and recency planes see a monotone stream)
+    /// into the backend of a freshly constructed scorer and restore the
+    /// tallies. Every subsequent [`support_count`] answer — and so every
+    /// keep/drop decision — is bit-for-bit identical to the
+    /// never-crashed scorer's.
+    pub fn restore_state(&mut self, tally: ShardTally, stamps: &[(u8, u16, u16, u64)]) {
+        let mut ordered: Vec<(u8, u16, u16, u64)> = stamps.to_vec();
+        ordered.sort_unstable_by_key(|&(_, _, _, t)| t);
+        for (plane, x, y, t) in ordered {
+            self.backend.restore_stamp(plane, x, y, t);
+        }
+        self.tally = tally;
+    }
 }
 
 enum Job {

@@ -250,6 +250,53 @@ impl StcfBackend {
             }
         }
     }
+
+    /// Visit every stamp held by the backing surface as
+    /// `f(plane, x, y, t)` — the checkpoint export walk of
+    /// `serve::supervise`. `plane` is the storage plane index (0 =
+    /// polarity-insensitive / OFF, 1 = ON). Feeding the tuples back
+    /// through [`StcfBackend::restore_stamp`] in ascending-`t` order on
+    /// a freshly constructed backend of the same shape reproduces every
+    /// [`support_count`] answer.
+    pub fn for_each_stamp(&self, mut f: impl FnMut(u8, u16, u16, u64)) {
+        match self {
+            StcfBackend::Ideal { planes, .. } => {
+                for (pi, s) in planes.iter().enumerate() {
+                    s.for_each_stamp(|x, y, t| f(pi as u8, x, y, t));
+                }
+            }
+            StcfBackend::Isc { array, .. } => {
+                array.for_each_stamp(|pi, x, y, t| f(pi as u8, x, y, t));
+            }
+            StcfBackend::Cache { store, .. } => store.for_each_entry(|key, t| {
+                let plane = (key >> 32) as u8;
+                let y = ((key >> 16) & 0xFFFF) as u16;
+                let x = (key & 0xFFFF) as u16;
+                f(plane, x, y, t);
+            }),
+        }
+    }
+
+    /// Replay one stamp exported by [`StcfBackend::for_each_stamp`]:
+    /// plane 1 replays as an ON write (allocating the lazy ON plane
+    /// where the backend has one), every other plane as OFF. Stamps are
+    /// already `max(1)`-clamped on the original write, so replay in
+    /// ascending-`t` order is a fixed point of the export.
+    pub fn restore_stamp(&mut self, plane: u8, x: u16, y: u16, t: u64) {
+        let p = if plane == 1 { Polarity::On } else { Polarity::Off };
+        match self {
+            StcfBackend::Ideal { planes, window_us } => {
+                let idx = plane as usize;
+                while planes.len() <= idx {
+                    let res = planes[0].resolution();
+                    planes.push(Sae::with_recency(res, *window_us));
+                }
+                planes[idx].ingest(&Event::new(t, x, y, p));
+            }
+            StcfBackend::Isc { array, .. } => array.write(&Event::new(t, x, y, p)),
+            StcfBackend::Cache { store, .. } => store.mark(pixel_key(plane, x, y), t),
+        }
+    }
 }
 
 /// Support count for event `e` (center optional via `count_center`):

@@ -40,6 +40,24 @@ impl Polarity {
     }
 }
 
+/// What an ingest stage does with an event whose timestamp runs
+/// *backwards* (below the stream's watermark — the highest timestamp
+/// seen so far). Real AER links reorder under load and host clocks
+/// step; every ingest boundary (pipeline run, serve session, replay
+/// interleave) applies one of these policies explicitly instead of
+/// silently corrupting the time-surface decay math. Equal timestamps
+/// are never affected — only strictly decreasing ones.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ClockPolicy {
+    /// Raise the event's timestamp to the watermark and ingest it
+    /// (order preserved, relative timing within the glitch lost). The
+    /// default: keeps every event and keeps time monotone.
+    #[default]
+    Clamp,
+    /// Drop the event entirely (counted, never ingested).
+    Reject,
+}
+
 /// One Address-Event-Representation event.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Event {

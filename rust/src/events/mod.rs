@@ -16,4 +16,4 @@ pub mod scene;
 pub mod stream;
 pub mod v2e;
 
-pub use event::{Event, LabeledEvent, Polarity, Resolution};
+pub use event::{ClockPolicy, Event, LabeledEvent, Polarity, Resolution};

@@ -15,7 +15,7 @@
 //! `bench_serve` feed to concurrent sessions.
 
 use super::aer;
-use super::event::{Event, LabeledEvent, Polarity, Resolution};
+use super::event::{ClockPolicy, Event, LabeledEvent, Polarity, Resolution};
 use std::io::{Read, Write};
 use std::path::Path;
 
@@ -213,17 +213,49 @@ pub fn scale_time(t: u64, rate: f64) -> u64 {
 /// Deterministically interleave labeled streams into one replay-ordered
 /// feed: a lazy k-way merge by (scaled timestamp, stream index), so
 /// equal-time events always replay in stream-index order and the merge
-/// is reproducible run-to-run and platform-to-platform. Each input must
-/// be time-sorted; the output preserves every stream as an in-order
-/// subsequence.
+/// is reproducible run-to-run and platform-to-platform. The output
+/// preserves every stream as an in-order subsequence.
+///
+/// Inputs are *expected* time-sorted, but a stream whose clock runs
+/// backwards (recording glitch, merge bug) is handled explicitly
+/// rather than breaking the merge order: this constructor applies
+/// [`ClockPolicy::Clamp`] — see [`interleave_with_policy`] to choose,
+/// and [`MultiReplay::nonmonotonic`] to observe how often it fired.
 pub fn interleave(streams: &[StreamSpec]) -> MultiReplay<'_> {
-    MultiReplay { streams, heads: vec![0; streams.len()] }
+    interleave_with_policy(streams, ClockPolicy::Clamp)
 }
 
-/// Iterator returned by [`interleave`].
+/// [`interleave`] with an explicit non-monotonic-timestamp policy:
+/// `Clamp` raises a backwards event to its stream's replay watermark
+/// (keeping the global merge nondecreasing), `Reject` drops it. Equal
+/// timestamps (duplicates) always pass. Every clamped or dropped event
+/// is counted in [`MultiReplay::nonmonotonic`].
+pub fn interleave_with_policy(streams: &[StreamSpec], policy: ClockPolicy) -> MultiReplay<'_> {
+    MultiReplay {
+        streams,
+        heads: vec![0; streams.len()],
+        last_t: vec![0; streams.len()],
+        policy,
+        nonmonotonic: 0,
+    }
+}
+
+/// Iterator returned by [`interleave`] / [`interleave_with_policy`].
 pub struct MultiReplay<'a> {
     streams: &'a [StreamSpec],
     heads: Vec<usize>,
+    /// Per-stream replay-clock watermark (highest emitted time).
+    last_t: Vec<u64>,
+    policy: ClockPolicy,
+    nonmonotonic: u64,
+}
+
+impl MultiReplay<'_> {
+    /// Events so far whose scaled timestamp ran backwards within their
+    /// own stream and were clamped or rejected per the policy.
+    pub fn nonmonotonic(&self) -> u64 {
+        self.nonmonotonic
+    }
 }
 
 impl Iterator for MultiReplay<'_> {
@@ -233,9 +265,25 @@ impl Iterator for MultiReplay<'_> {
         // Linear head scan: stream counts are small (a camera fleet,
         // not a data center), so this beats heap bookkeeping.
         let mut best: Option<(u64, usize)> = None;
-        for (s, spec) in self.streams.iter().enumerate() {
-            if let Some(le) = spec.events.get(self.heads[s]) {
+        for s in 0..self.streams.len() {
+            let spec = &self.streams[s];
+            let head_t = loop {
+                let Some(le) = spec.events.get(self.heads[s]) else { break None };
                 let t = scale_time(le.ev.t, spec.rate);
+                if t < self.last_t[s] {
+                    // Backwards within its stream (duplicates pass: `<`).
+                    match self.policy {
+                        ClockPolicy::Clamp => break Some(self.last_t[s]),
+                        ClockPolicy::Reject => {
+                            self.nonmonotonic += 1;
+                            self.heads[s] += 1;
+                            continue;
+                        }
+                    }
+                }
+                break Some(t);
+            };
+            if let Some(t) = head_t {
                 // Strict < keeps the lowest stream index on time ties.
                 match best {
                     Some((bt, _)) if t >= bt => {}
@@ -245,7 +293,13 @@ impl Iterator for MultiReplay<'_> {
         }
         let (t, s) = best?;
         let mut le = self.streams[s].events[self.heads[s]];
+        if scale_time(le.ev.t, self.streams[s].rate) < self.last_t[s] {
+            // Count the clamp only on emission, so re-scans of a pending
+            // head don't inflate the counter.
+            self.nonmonotonic += 1;
+        }
         self.heads[s] += 1;
+        self.last_t[s] = t;
         le.ev.t = t;
         Some(TaggedEvent { stream: s, le })
     }
@@ -352,6 +406,38 @@ mod tests {
         assert!(a.windows(2).all(|w| w[0].le.ev.t <= w[1].le.ev.t));
         // Empty input terminates immediately.
         assert_eq!(interleave(&[]).count(), 0);
+    }
+
+    #[test]
+    fn interleave_clamps_backwards_timestamps_by_default() {
+        // Stream a glitches backwards (30 → 12 → 35); stream b is clean.
+        let streams = [spec("a", 1.0, &[10, 30, 12, 35]), spec("b", 1.0, &[20])];
+        let mut it = interleave(&streams);
+        let got: Vec<(usize, u64)> = it.by_ref().map(|te| (te.stream, te.le.ev.t)).collect();
+        // 12 is clamped up to 30; the merge stays globally nondecreasing
+        // and every event survives.
+        assert_eq!(got, vec![(0, 10), (1, 20), (0, 30), (0, 30), (0, 35)]);
+        assert_eq!(it.nonmonotonic(), 1);
+    }
+
+    #[test]
+    fn interleave_reject_policy_drops_backwards_timestamps() {
+        let streams = [spec("a", 1.0, &[10, 30, 12, 35]), spec("b", 1.0, &[20])];
+        let mut it = interleave_with_policy(&streams, ClockPolicy::Reject);
+        let got: Vec<(usize, u64)> = it.by_ref().map(|te| (te.stream, te.le.ev.t)).collect();
+        assert_eq!(got, vec![(0, 10), (1, 20), (0, 30), (0, 35)]);
+        assert_eq!(it.nonmonotonic(), 1);
+    }
+
+    #[test]
+    fn interleave_duplicate_timestamps_pass_under_both_policies() {
+        for policy in [ClockPolicy::Clamp, ClockPolicy::Reject] {
+            let streams = [spec("a", 1.0, &[10, 10, 10])];
+            let mut it = interleave_with_policy(&streams, policy);
+            let got: Vec<u64> = it.by_ref().map(|te| te.le.ev.t).collect();
+            assert_eq!(got, vec![10, 10, 10], "{policy:?}");
+            assert_eq!(it.nonmonotonic(), 0, "duplicates are not backwards ({policy:?})");
+        }
     }
 
     #[test]

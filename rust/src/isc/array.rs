@@ -273,6 +273,26 @@ impl IscArray {
         self.clock_us
     }
 
+    /// Visit every written stamp as `f(plane, x, y, t_write)` — the
+    /// checkpoint export walk of `serve::supervise`. Stamps are the
+    /// complete restorable state of the array: replaying them as
+    /// synthetic events in ascending-`t` order through
+    /// [`IscArray::write_batch`] on a freshly built array rebuilds the
+    /// clock (= the max stamp under monotone ingest), the active sets
+    /// and the recency planes, and the parameter bank is
+    /// position-stable ([`param_index_at`]), so the restored array
+    /// renders bit-for-bit identically at every causal query time.
+    pub fn for_each_stamp(&self, mut f: impl FnMut(usize, u16, u16, u64)) {
+        let w = self.res.width as usize;
+        for (pi, plane) in self.planes.iter().enumerate() {
+            for (i, &t) in plane.t_write.iter().enumerate() {
+                if t != 0 {
+                    f(pi, (i % w) as u16, (i / w) as u16, t);
+                }
+            }
+        }
+    }
+
     /// Pixels currently listed as active on plane `p` (diagnostics).
     pub fn active_pixels(&self, p: Polarity) -> usize {
         self.planes[self.plane_for(p)].active.len()

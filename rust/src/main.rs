@@ -170,6 +170,7 @@ fn cmd_serve(args: &Args) -> i32 {
         workers: args.get_parsed("workers", ServeConfig::default().workers),
         max_sessions: n_sessions.max(ServeConfig::default().max_sessions),
         max_inflight_batches: args.get_parsed("max-inflight", 64usize),
+        ..ServeConfig::default()
     };
 
     // Mixed fleet workload: per session a different scene family,
@@ -340,6 +341,7 @@ fn cmd_serve_listen(addr: &str, args: &Args) -> i32 {
             max_inflight_batches: args
                 .get_parsed("max-inflight", serve_defaults.max_inflight_batches)
                 .max(1),
+            ..ServeConfig::default()
         },
         read_timeout: Duration::from_millis(
             args.get_parsed("read-timeout-ms", defaults.read_timeout.as_millis() as u64),

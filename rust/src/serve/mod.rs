@@ -40,6 +40,40 @@
 //! queued before it; the round-robin ready queue gives fairness — a hot
 //! camera only lengthens its own queue, never another session's turn.
 //!
+//! ## Supervision
+//!
+//! Every job body runs under a panic boundary on the worker
+//! ([`crate::util::sync::catch_boundary`]); a caught panic files a
+//! typed [`SessionFault`] and **quarantines** only the owning session —
+//! the worker, the pool and every other session keep running, and a
+//! worker that dies anyway is respawned by a supervisor thread under a
+//! restart budget ([`SupervisionConfig`]):
+//!
+//! ```text
+//!                       ┌ supervisor thread (respawn budget N per window,
+//!                       │  exhausted → fleet `degraded` flag)
+//!                       ▼
+//!   workers ──job──► catch_boundary ──panic──► FaultBoard(session) ──► quarantined:
+//!      │                                        │                      ingest/snapshot/
+//!      │ ok                                     │ band freed           drain reject;
+//!      ▼                                        ▼                      close/checkpoint
+//!   reply as usual                     SupervisorStats buckets         still work
+//! ```
+//!
+//! [`SessionManager::checkpoint`] serializes a session's full band
+//! state into a CRC-guarded versioned blob;
+//! [`SessionManager::restore_in_place`] (or
+//! [`SessionManager::restore`], migrating to a fresh session) replays
+//! it bit-for-bit and lifts the quarantine. Under overload
+//! ([`SupervisorConfig`] pressure thresholds over ready-queue depth ×
+//! resident bytes) on-demand snapshots degrade through typed tiers
+//! ([`DegradeTier`]): defer provably event-free cold bands → serve
+//! stale dirty-band caches (STALE-flagged on the wire) → shed new
+//! sessions. Window frames are never degraded; exactness holds at every
+//! tier. The chaos harness (`tests/fleet_chaos.rs`, seeded via
+//! `TSISC_CHAOS_SEED`) injects panics, stalls and checkpoint corruption
+//! at the scheduler fault points and holds the fleet to all of it.
+//!
 //! ## Per-batch complexity vs fleet size
 //!
 //! With S open sessions, B bands per session, W workers, n events per
@@ -104,7 +138,13 @@ pub mod net;
 mod scheduler;
 pub mod session;
 pub mod stats;
+pub mod supervise;
 
+pub use crate::util::actor::SupervisionConfig;
 pub use scheduler::HoldGuard;
-pub use session::{Reject, ServeConfig, SessionConfig, SessionId, SessionManager};
-pub use stats::{NetStats, ServeStats, SessionReport, SessionStats};
+pub use session::{Reject, RestoreError, ServeConfig, SessionConfig, SessionId, SessionManager};
+pub use stats::{NetStats, ServeStats, SessionReport, SessionStats, SupervisorStats};
+pub use supervise::{
+    CheckpointError, DegradeTier, FaultJobKind, SchedFaultKind, SchedFaultPlan, SessionFault,
+    SupervisorConfig,
+};

@@ -193,16 +193,27 @@ impl NetClient {
     }
 
     /// Request an on-demand time-surface snapshot at `at_us` (must not
-    /// precede already-sent events).
+    /// precede already-sent events). Discards the FRAME flags; use
+    /// [`NetClient::snapshot_with_status`] to observe the overload
+    /// staleness marker.
     pub fn snapshot(&mut self, at_us: u64) -> Result<(u64, Grid<f64>), NetError> {
+        self.snapshot_with_status(at_us).map(|(at, g, _)| (at, g))
+    }
+
+    /// [`NetClient::snapshot`] plus the server's staleness marker: true
+    /// when overload degradation served at least one band from a stale
+    /// cache ([`frame::flag::STALE`] on the wire).
+    pub fn snapshot_with_status(
+        &mut self,
+        at_us: u64,
+    ) -> Result<(u64, Grid<f64>, bool), NetError> {
         self.payload_buf.clear();
         self.payload_buf.extend_from_slice(&at_us.to_le_bytes());
         self.send(kind::SNAPSHOT_REQ)?;
         match self.read_reply()? {
-            kind::FRAME => {
-                frame::decode_frame_payload(&self.reply_buf)
-                    .map_err(|e| NetError::Protocol(format!("bad FRAME payload: {e}")))
-            }
+            kind::FRAME => frame::decode_frame_payload(&self.reply_buf)
+                .map(|(at, g, flags)| (at, g, flags & frame::flag::STALE != 0))
+                .map_err(|e| NetError::Protocol(format!("bad FRAME payload: {e}"))),
             kind::NACK => Err(self.take_nack()),
             k => {
                 Err(NetError::Protocol(format!("unexpected reply kind {k:#x} to SNAPSHOT_REQ")))
@@ -282,8 +293,9 @@ impl NetClient {
     }
 
     /// Decode the FRAME sitting in `reply_buf` into the frame log.
+    /// Window frames are never degraded, so the flags are ignored here.
     fn collect_frame(&mut self) -> Result<(), NetError> {
-        let (at, g) = frame::decode_frame_payload(&self.reply_buf)
+        let (at, g, _flags) = frame::decode_frame_payload(&self.reply_buf)
             .map_err(|e| NetError::Protocol(format!("bad FRAME payload: {e}")))?;
         self.frames.push((at, g));
         Ok(())

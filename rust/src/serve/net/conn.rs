@@ -303,7 +303,7 @@ impl Conn {
         match ingested {
             Ok(frames) => {
                 for (at, g) in &frames {
-                    self.send_frame_reply(*at, g).map_err(|e| classify_io(&e))?;
+                    self.send_frame_reply(*at, g, 0).map_err(|e| classify_io(&e))?;
                 }
                 if let Some(s) = self.session.as_mut() {
                     s.expected_seq = expected_seq.wrapping_add(1);
@@ -363,10 +363,13 @@ impl Conn {
         }
         let snap = {
             let mut mgr = self.lock_manager();
-            mgr.snapshot(sid, at_us)
+            mgr.snapshot_with_status(sid, at_us)
         };
         match snap {
-            Ok(g) => self.send_frame_reply(at_us, &g).map_err(|e| classify_io(&e)),
+            Ok((g, stale)) => {
+                let flags = if stale { frame::flag::STALE } else { 0 };
+                self.send_frame_reply(at_us, &g, flags).map_err(|e| classify_io(&e))
+            }
             Err(reject) => {
                 bump(&self.ctx.counters.protocol_errors);
                 self.recoverable(reject.code(), 0, &reject.to_string())
@@ -383,7 +386,7 @@ impl Conn {
                 };
                 if let Ok(frames) = &drained {
                     for (at, g) in frames {
-                        if self.send_frame_reply(*at, g).is_err() {
+                        if self.send_frame_reply(*at, g, 0).is_err() {
                             break;
                         }
                     }
@@ -469,7 +472,7 @@ impl Conn {
         if send_tail {
             if let Ok(frames) = &drained {
                 for (at, g) in frames {
-                    if self.send_frame_reply(*at, g).is_err() {
+                    if self.send_frame_reply(*at, g, 0).is_err() {
                         break;
                     }
                 }
@@ -567,9 +570,11 @@ impl Conn {
         self.send_raw()
     }
 
-    fn send_frame_reply(&mut self, at_us: u64, g: &Grid<f64>) -> io::Result<()> {
+    /// Send one FRAME. `flags` carries the [`frame::flag`] bits (window
+    /// frames always pass 0 — they are never degraded).
+    fn send_frame_reply(&mut self, at_us: u64, g: &Grid<f64>, flags: u8) -> io::Result<()> {
         bump(&self.ctx.counters.frames_sent);
-        frame::encode_frame_payload(&mut self.frame_buf, at_us, g);
+        frame::encode_frame_payload(&mut self.frame_buf, at_us, g, flags);
         frame::encode_frame_into(&mut self.send_buf, kind::FRAME, &self.frame_buf);
         self.send_raw()
     }

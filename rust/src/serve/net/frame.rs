@@ -35,7 +35,8 @@ pub mod kind {
     /// Server→client: typed rejection (payload: [`super::Nack`]).
     pub const NACK: u8 = 0x82;
     /// Server→client: one rendered frame (`u64 at_us | u16 w | u16 h |
-    /// w·h f64 LE pixels` — lossless, for bit-for-bit equivalence).
+    /// u8 flags | w·h f64 LE pixels` — lossless, for bit-for-bit
+    /// equivalence; see [`super::flag`] for the flags bits).
     pub const FRAME: u8 = 0x83;
     /// Server→client: BYE honored (`u64 frames_emitted` lifetime total).
     pub const BYE_OK: u8 = 0x84;
@@ -67,8 +68,22 @@ pub mod code {
     pub const SHED: u16 = 16;
     /// Decode-error budget exhausted; the connection is being dropped.
     pub const BUDGET: u16 = 17;
+    /// [`crate::serve::Reject::Overloaded`] — fleet at the shed tier.
+    pub const OVERLOADED: u16 = 4;
+    /// [`crate::serve::Reject::Quarantined`] — session faulted; restore
+    /// from a checkpoint to resume.
+    pub const QUARANTINED: u16 = 5;
     /// BATCH timestamps went backwards relative to the session stream.
     pub const OUT_OF_ORDER: u16 = 18;
+}
+
+/// FRAME flag bits (the `u8 flags` field of a FRAME payload).
+pub mod flag {
+    /// At least one band of this frame was served from a stale cache
+    /// under overload degradation (`DegradeTier::ServeStale`) instead of
+    /// being rendered at `at_us`. Consumers choosing exactness over
+    /// latency should re-request once the fleet pressure drops.
+    pub const STALE: u8 = 0x01;
 }
 
 /// Errors raised while parsing a frame *payload* (the header and CRC
@@ -263,6 +278,7 @@ impl Hello {
             stcf: self.stcf.then(crate::denoise::StcfParams::default),
             denoise_shards: self.denoise_shards as usize,
             batch_size: (self.batch_size as usize).max(1),
+            clock_policy: crate::events::ClockPolicy::default(),
             router: crate::coordinator::RouterConfig {
                 n_shards: (self.n_shards as usize).max(1),
                 ..Default::default()
@@ -308,25 +324,29 @@ impl Nack {
     }
 }
 
-/// Serialize a FRAME payload (`at_us | w | h | pixels`) into `out`
-/// (cleared first). f64 bits go over verbatim — the wire is lossless so
-/// clean sessions stay bit-for-bit ≡ the in-process pipeline.
-pub fn encode_frame_payload(out: &mut Vec<u8>, at_us: u64, frame: &Grid<f64>) {
+/// Serialize a FRAME payload (`at_us | w | h | flags | pixels`) into
+/// `out` (cleared first). f64 bits go over verbatim — the wire is
+/// lossless so clean sessions stay bit-for-bit ≡ the in-process
+/// pipeline. `flags` carries the [`flag`] bits (window frames and
+/// un-degraded snapshots send 0).
+pub fn encode_frame_payload(out: &mut Vec<u8>, at_us: u64, frame: &Grid<f64>, flags: u8) {
     out.clear();
     out.extend_from_slice(&at_us.to_le_bytes());
     out.extend_from_slice(&(frame.width() as u16).to_le_bytes());
     out.extend_from_slice(&(frame.height() as u16).to_le_bytes());
+    out.push(flags);
     for v in frame.as_slice() {
         out.extend_from_slice(&v.to_le_bytes());
     }
 }
 
-/// Parse a FRAME payload back into `(at_us, frame)`.
-pub fn decode_frame_payload(p: &[u8]) -> Result<(u64, Grid<f64>), WireError> {
+/// Parse a FRAME payload back into `(at_us, frame, flags)`.
+pub fn decode_frame_payload(p: &[u8]) -> Result<(u64, Grid<f64>, u8), WireError> {
     let mut r = Reader::new(p);
     let at_us = r.u64()?;
     let w = r.u16()? as usize;
     let h = r.u16()? as usize;
+    let flags = r.u8()?;
     let rest = r.rest();
     if rest.len() != w * h * 8 {
         return Err(WireError::Inconsistent);
@@ -335,7 +355,7 @@ pub fn decode_frame_payload(p: &[u8]) -> Result<(u64, Grid<f64>), WireError> {
         .chunks_exact(8)
         .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
         .collect();
-    Ok((at_us, Grid::from_vec(w, h, data)))
+    Ok((at_us, Grid::from_vec(w, h, data), flags))
 }
 
 /// Little-endian field reader over a payload slice.
@@ -507,12 +527,18 @@ mod tests {
             *v = (i as f64) * 0.731 + f64::EPSILON;
         }
         let mut buf = Vec::new();
-        encode_frame_payload(&mut buf, 123_456, &g);
-        let (at, back) = decode_frame_payload(&buf).unwrap();
+        encode_frame_payload(&mut buf, 123_456, &g, 0);
+        let (at, back, flags) = decode_frame_payload(&buf).unwrap();
         assert_eq!(at, 123_456);
         assert_eq!(back, g);
+        assert_eq!(flags, 0);
         // Truncated pixel data is Inconsistent, not a panic.
         assert_eq!(decode_frame_payload(&buf[..buf.len() - 1]), Err(WireError::Inconsistent));
+        // The staleness marker survives the wire.
+        encode_frame_payload(&mut buf, 9, &g, flag::STALE);
+        let (_, stale_back, stale_flags) = decode_frame_payload(&buf).unwrap();
+        assert_eq!(stale_back, g);
+        assert_eq!(stale_flags, flag::STALE);
     }
 
     #[test]

@@ -24,12 +24,13 @@
 //! | `BYE` `0x04` | → | empty |
 //! | `ACK` `0x81` | ← | `seq u32` (HELLO is acked with seq 0) |
 //! | `NACK` `0x82` | ← | `code u16 \| retry_after_ms u32 \| seq u32 \| reason utf8` |
-//! | `FRAME` `0x83` | ← | `at_us u64 \| w u16 \| h u16 \| w·h f64 LE` (bit-lossless) |
+//! | `FRAME` `0x83` | ← | `at_us u64 \| w u16 \| h u16 \| flags u8 \| w·h f64 LE` (bit-lossless; [`frame::flag::STALE`] marks a degraded snapshot) |
 //! | `BYE_OK` `0x84` | ← | `frames_emitted u64` |
 //!
-//! NACK codes 1–3 are [`Reject::code`](crate::serve::Reject::code)
-//! values straight from admission control; codes ≥ 10 are net-layer
-//! faults ([`frame::code`]). BATCH payloads are decoded *incrementally*
+//! NACK codes 1–9 are [`Reject::code`](crate::serve::Reject::code)
+//! values straight from admission control (1–3 classic admission, 4
+//! overloaded-shed, 5 quarantined); codes ≥ 10 are net-layer faults
+//! ([`frame::code`]). BATCH payloads are decoded *incrementally*
 //! ([`crate::events::aer::AerDecoder`]): a frame split across socket
 //! reads feeds the running CRC and decoder chunk by chunk — never
 //! copied into a contiguous buffer, never re-parsed.

@@ -6,11 +6,25 @@
 //! [`crate::denoise::sharded::BandScorer`]). The scheduling invariants —
 //! each actor in the global ready queue at most once, strict per-band
 //! FIFO job order, one job per turn with round-robin re-queueing,
-//! hold-gated drain quiescence — live in the generic pool, where the
-//! loom models in `tests/loom_sched.rs` check them exhaustively. This
-//! module contributes only what is band-specific: the [`Job`] grammar,
-//! panic poisoning confined to one band, and the in-flight / open-band
-//! fleet gauges.
+//! hold-gated drain quiescence, worker respawn with at-most-once
+//! death handoff — live in the generic pool, where the loom models in
+//! `tests/loom_sched.rs` check them exhaustively. This module
+//! contributes only what is band-specific: the [`Job`] grammar, panic
+//! *quarantine* confined to one session, checkpoint export/restore
+//! jobs, and the in-flight / open-band fleet gauges.
+//!
+//! ## Supervision boundary
+//!
+//! Every job body runs under [`crate::util::sync::catch_boundary`]. A
+//! panic inside a band operation drops that band's state and files a
+//! typed [`SessionFault`] on the owning session's [`FaultBoard`] — the
+//! session is quarantined, the worker thread survives, and every other
+//! session keeps its exactness guarantees. The job bodies themselves
+//! are panic-free by construction (`cargo xtask lint-invariants` rule
+//! `panic-boundary` bans `unwrap`/`expect`/`panic!`/bare indexing in
+//! them); the only sanctioned panic site on this path is the injected
+//! [`ArmedFault::before_job`], which exists to prove the boundary
+//! works.
 //!
 //! Jobs on one band execute strictly in enqueue order — writes land
 //! before the snapshot that must observe them — while different bands
@@ -24,10 +38,13 @@
 use crate::coordinator::router::{BandSnapshot, BandWriter};
 use crate::denoise::sharded::{BandScorer, ScoreItem, ShardTally};
 use crate::events::Event;
-use crate::util::actor::{Actor, ActorPool, Hold};
+use crate::serve::supervise::{
+    ArmedFault, BandCheckpoint, FaultBoard, FaultJobKind, SessionFault, SupervisorCounters,
+};
+use crate::util::actor::{Actor, ActorPool, Hold, SupervisionConfig};
 use crate::util::grid::Grid;
 use crate::util::sync::chan::Sender;
-use crate::util::sync::{Arc, AtomicUsize, Ordering};
+use crate::util::sync::{catch_boundary, Arc, AtomicUsize, Ordering};
 
 /// Band-local state a job operates on (boxed: actors are long-lived,
 /// the enum is moved in and out of the actor on every job turn).
@@ -69,6 +86,19 @@ pub(crate) struct CloseDone {
     pub tally: Option<ShardTally>,
 }
 
+/// Reply to [`Job::Checkpoint`]: the exported band state, or None when
+/// the band is already freed/quarantined (the checkpoint then simply
+/// omits it).
+pub(crate) struct CheckpointDone {
+    pub band: usize,
+    pub state: Option<BandCheckpoint>,
+}
+
+/// Reply to [`Job::Restore`].
+pub(crate) struct RestoreDone {
+    pub band: usize,
+}
+
 /// One queued unit of work, tagged by its (session, band) actor.
 pub(crate) enum Job {
     /// Apply a write batch (sensor-coordinate events) to the band array.
@@ -80,29 +110,44 @@ pub(crate) enum Job {
     Score { items: Vec<ScoreItem>, reply: Sender<ScoreDone> },
     /// Render (or certify unchanged) the band at `at_us` and reply with
     /// the recycled buffer — the dirty-band snapshot protocol, verbatim
-    /// from the router.
+    /// from the router. Carries its enqueue instant so the worker can
+    /// count soft-deadline misses (`deadline_us == 0` disables).
     Snapshot {
         at_us: u64,
         buf: Grid<f64>,
         cache_valid: bool,
         band: usize,
+        enqueued: std::time::Instant,
+        deadline_us: u64,
         reply: Sender<SnapDone>,
     },
+    /// Export the band's state for a session checkpoint and reply.
+    /// Runs on the band's own FIFO, so it observes exactly the writes
+    /// enqueued before it — a consistent cut without stopping the fleet.
+    Checkpoint { band: usize, reply: Sender<CheckpointDone> },
+    /// Install a rebuilt band state (restore-in-place or migrate). The
+    /// state was reconstructed on the session thread; installing via the
+    /// band FIFO keeps the open-band/resident gauges worker-maintained
+    /// and serializes against any jobs still draining on the old state.
+    Restore { state: Box<BandState>, band: usize, reply: Sender<RestoreDone> },
     /// Drop the band state (freeing its arrays), report the final
     /// counters, and acknowledge.
     Close { band: usize, reply: Sender<CloseDone> },
 }
 
 /// The per-actor slot handed to the job runner: the band state plus the
-/// two fleet gauges the runner maintains as jobs complete.
+/// fleet gauges and supervision hooks the runner maintains as jobs
+/// complete.
 pub(crate) struct BandSlot {
     /// None after [`Job::Close`] ran or a job panicked (band is freed).
     state: Option<BandState>,
+    /// Band index, for fault attribution.
+    band: u16,
     /// The owning session's in-flight write-batch gauge (admission
     /// control reads it; workers decrement it as write jobs complete).
     inflight: Arc<AtomicUsize>,
     /// Fleet gauge of live band states (decremented by [`Job::Close`]
-    /// and by panic poisoning).
+    /// and by quarantine).
     open_bands: Arc<AtomicUsize>,
     /// The owning session's resident-bytes gauge: after every job the
     /// runner re-measures the band state and applies the delta, so the
@@ -111,6 +156,26 @@ pub(crate) struct BandSlot {
     resident: Arc<AtomicUsize>,
     /// This band's last reported contribution to `resident`.
     last_bytes: usize,
+    /// The owning session's quarantine board.
+    faults: Arc<FaultBoard>,
+    /// Fleet supervision counters.
+    counters: Arc<SupervisorCounters>,
+    /// Chaos-injection plan armed on this session (None in production).
+    armed: Option<Arc<ArmedFault>>,
+}
+
+/// Everything needed to register one band actor — bundled so
+/// [`WorkerPool::spawn_actor`] stays a one-argument call as the
+/// supervision hooks grow.
+pub(crate) struct BandSeed {
+    pub state: BandState,
+    pub band: u16,
+    pub inflight: Arc<AtomicUsize>,
+    pub open_bands: Arc<AtomicUsize>,
+    pub resident: Arc<AtomicUsize>,
+    pub faults: Arc<FaultBoard>,
+    pub counters: Arc<SupervisorCounters>,
+    pub armed: Option<Arc<ArmedFault>>,
 }
 
 /// Re-measure the slot's band state and fold the delta into the
@@ -128,7 +193,9 @@ fn sync_resident(slot: &mut BandSlot) {
 /// One (session, band) actor on the generic pool.
 pub(crate) type BandActor = Actor<BandSlot, Job>;
 
-/// The fixed worker fleet (a band-typed [`ActorPool`]).
+/// The fixed worker fleet (a band-typed [`ActorPool`] with worker
+/// supervision: a dead worker thread is respawned under the restart
+/// budget, and budget exhaustion flags the fleet degraded).
 pub(crate) struct WorkerPool {
     pool: ActorPool<BandSlot, Job>,
 }
@@ -142,8 +209,8 @@ pub struct HoldGuard {
 }
 
 impl WorkerPool {
-    pub(crate) fn new(workers: usize) -> Self {
-        Self { pool: ActorPool::new(workers, execute) }
+    pub(crate) fn new(workers: usize, supervision: SupervisionConfig) -> Self {
+        Self { pool: ActorPool::with_supervision(workers, supervision, execute) }
     }
 
     pub(crate) fn workers(&self) -> usize {
@@ -153,16 +220,19 @@ impl WorkerPool {
     /// Register a new band actor with the fleet gauges. The band's
     /// initial footprint lands on the session's resident gauge
     /// immediately (lazy writer bands contribute only their struct).
-    pub(crate) fn spawn_actor(
-        &self,
-        state: BandState,
-        inflight: Arc<AtomicUsize>,
-        open_bands: Arc<AtomicUsize>,
-        resident: Arc<AtomicUsize>,
-    ) -> Arc<BandActor> {
-        open_bands.fetch_add(1, Ordering::SeqCst);
-        let mut slot =
-            BandSlot { state: Some(state), inflight, open_bands, resident, last_bytes: 0 };
+    pub(crate) fn spawn_actor(&self, seed: BandSeed) -> Arc<BandActor> {
+        seed.open_bands.fetch_add(1, Ordering::SeqCst);
+        let mut slot = BandSlot {
+            state: Some(seed.state),
+            band: seed.band,
+            inflight: seed.inflight,
+            open_bands: seed.open_bands,
+            resident: seed.resident,
+            last_bytes: 0,
+            faults: seed.faults,
+            counters: seed.counters,
+            armed: seed.armed,
+        };
         sync_resident(&mut slot);
         self.pool.spawn_actor(slot)
     }
@@ -178,6 +248,22 @@ impl WorkerPool {
     /// Jobs executed fleet-wide since construction.
     pub(crate) fn jobs_executed(&self) -> u64 {
         self.pool.jobs_executed()
+    }
+
+    /// Panics that escaped a job body to the worker loop (normally 0 —
+    /// job bodies carry their own boundary).
+    pub(crate) fn jobs_panicked(&self) -> u64 {
+        self.pool.jobs_panicked()
+    }
+
+    /// Worker threads respawned by the pool supervisor.
+    pub(crate) fn worker_respawns(&self) -> u64 {
+        self.pool.worker_respawns()
+    }
+
+    /// True once the respawn budget was exhausted inside its window.
+    pub(crate) fn degraded(&self) -> bool {
+        self.pool.degraded()
     }
 
     /// Actors currently waiting in the global ready queue.
@@ -196,16 +282,22 @@ impl WorkerPool {
     }
 }
 
-/// Drop a band's state after a job panicked on it. The band is dead,
-/// but the actor keeps draining: later jobs take the stateless paths
-/// below (no-op + reply), so a waiting `snapshot`/`drain`/`close`
-/// completes instead of wedging the whole session. This mirrors the
-/// dedicated router's failure visibility (`expect("shard died")`) in
-/// queue form — the panic message still lands on stderr via the
-/// default hook.
-fn poison(slot: &mut BandSlot) {
+/// Quarantine the slot's session after a caught job panic: drop the
+/// band's state (the band is dead, but the actor keeps draining — later
+/// jobs take the stateless paths, so a waiting `snapshot`/`drain`/
+/// `close` completes instead of wedging the session) and file a typed
+/// [`SessionFault`] so the front door refuses further traffic until a
+/// restore. The panic message still lands on stderr via the default
+/// hook; the fault detail carries it to the operator.
+fn quarantine(slot: &mut BandSlot, job: FaultJobKind, detail: String) {
     if slot.state.take().is_some() {
         slot.open_bands.fetch_sub(1, Ordering::SeqCst);
+    }
+    slot.counters.job_panics.fetch_add(1, Ordering::Relaxed);
+    let prior_faults = slot.faults.file(SessionFault { band: slot.band, job, detail });
+    if prior_faults == 0 {
+        // Count sessions entering quarantine, not individual faults.
+        slot.counters.quarantines.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -213,45 +305,117 @@ fn execute(job: Job, slot: &mut BandSlot) {
     execute_inner(job, slot);
     // One re-measure per job keeps the session's resident gauge honest
     // across materialization (first write), demotion (expiry snapshot),
-    // active-set growth, poisoning and close — all of which change the
+    // active-set growth, quarantine and close — all of which change the
     // band's footprint on the worker side.
     sync_resident(slot);
 }
 
+/// Export the band's state as a checkpoint record (runs inside the
+/// supervision boundary).
+fn export_band(state: &BandState, band: u16) -> BandCheckpoint {
+    match state {
+        BandState::Writer(w) => {
+            let mut stamps = Vec::new();
+            let processed = w.export_state(&mut stamps);
+            BandCheckpoint::Writer { band, processed, stamps }
+        }
+        BandState::Scorer(s) => {
+            let mut stamps = Vec::new();
+            let tally = s.export_state(&mut stamps);
+            BandCheckpoint::Scorer { band, tally, stamps }
+        }
+    }
+}
+
 fn execute_inner(job: Job, slot: &mut BandSlot) {
-    use std::panic::{catch_unwind, AssertUnwindSafe};
     match job {
         Job::Write(mut batch) => {
+            let mut failed = None;
             if let Some(BandState::Writer(w)) = &mut slot.state {
-                if catch_unwind(AssertUnwindSafe(|| w.apply_batch(&mut batch))).is_err() {
-                    poison(slot);
+                let armed = slot.armed.clone();
+                let counters = Arc::clone(&slot.counters);
+                if let Err(msg) = catch_boundary(|| {
+                    if let Some(f) = &armed {
+                        f.before_job(&counters);
+                    }
+                    w.apply_batch(&mut batch);
+                }) {
+                    failed = Some(msg);
                 }
+            }
+            if let Some(msg) = failed {
+                quarantine(slot, FaultJobKind::Write, msg);
             }
             slot.inflight.fetch_sub(1, Ordering::SeqCst);
         }
         Job::Score { items, reply } => {
             let mut scores = Vec::new();
+            let mut failed = None;
             if let Some(BandState::Scorer(s)) = &mut slot.state {
-                if catch_unwind(AssertUnwindSafe(|| s.process(&items, &mut scores))).is_err() {
-                    poison(slot);
+                let armed = slot.armed.clone();
+                let counters = Arc::clone(&slot.counters);
+                if let Err(msg) = catch_boundary(|| {
+                    if let Some(f) = &armed {
+                        f.before_job(&counters);
+                    }
+                    s.process(&items, &mut scores);
+                }) {
+                    failed = Some(msg);
                 }
+            }
+            if let Some(msg) = failed {
+                quarantine(slot, FaultJobKind::Score, msg);
             }
             let _ = reply.send(ScoreDone { scores });
         }
-        Job::Snapshot { at_us, mut buf, cache_valid, band, reply } => {
+        Job::Snapshot { at_us, mut buf, cache_valid, band, enqueued, deadline_us, reply } => {
             let mut out = BandSnapshot { rendered: false, empty_static: false };
+            let mut failed = None;
             if let Some(BandState::Writer(w)) = &mut slot.state {
-                let render = catch_unwind(AssertUnwindSafe(|| {
+                let armed = slot.armed.clone();
+                let counters = Arc::clone(&slot.counters);
+                match catch_boundary(|| {
+                    if let Some(f) = &armed {
+                        f.before_job(&counters);
+                    }
                     w.snapshot_into(&mut buf, at_us, cache_valid)
-                }));
-                match render {
+                }) {
                     Ok(o) => out = o,
-                    Err(_) => poison(slot),
+                    Err(msg) => failed = Some(msg),
                 }
+            }
+            if let Some(msg) = failed {
+                quarantine(slot, FaultJobKind::Snapshot, msg);
+            }
+            if deadline_us > 0 && enqueued.elapsed().as_micros() as u64 > deadline_us {
+                slot.counters.deadline_misses.fetch_add(1, Ordering::Relaxed);
             }
             let rendered = out.rendered;
             let empty_static = out.empty_static;
             let _ = reply.send(SnapDone { band, buf, rendered, empty_static });
+        }
+        Job::Checkpoint { band, reply } => {
+            let mut exported = None;
+            let mut failed = None;
+            if let Some(state) = &slot.state {
+                let band_ix = slot.band;
+                match catch_boundary(|| export_band(state, band_ix)) {
+                    Ok(ck) => exported = Some(ck),
+                    Err(msg) => failed = Some(msg),
+                }
+            }
+            if let Some(msg) = failed {
+                quarantine(slot, FaultJobKind::Checkpoint, msg);
+            }
+            let _ = reply.send(CheckpointDone { band, state: exported });
+        }
+        Job::Restore { state, band, reply } => {
+            // Installing counts the band open again if quarantine or
+            // close had freed it; replacing live state keeps the gauge.
+            if slot.state.replace(*state).is_none() {
+                slot.open_bands.fetch_add(1, Ordering::SeqCst);
+            }
+            let _ = reply.send(RestoreDone { band });
         }
         Job::Close { band, reply } => {
             let (written, tally) = match slot.state.take() {

@@ -11,29 +11,55 @@
 //! — verified in `tests/serve_equiv.rs` across 1/4/16 concurrent
 //! sessions with mismatch-enabled ISC backends.
 //!
-//! Admission control: `open` rejects past [`ServeConfig::max_sessions`];
-//! `ingest_batch` rejects (with [`Reject::Backpressure`]) while the
-//! session's in-flight write batches sit at
-//! [`ServeConfig::max_inflight_batches`] — queues stay bounded instead
-//! of buffering a hot camera unboundedly. Within the bound, a batch is
-//! accepted in full; the per-call overshoot is at most one write job
-//! per touched band per internal flush.
+//! Admission control: `open` rejects past [`ServeConfig::max_sessions`]
+//! (and sheds under overload pressure, see below); `ingest_batch`
+//! rejects (with [`Reject::Backpressure`]) while the session's in-flight
+//! write batches sit at [`ServeConfig::max_inflight_batches`] — queues
+//! stay bounded instead of buffering a hot camera unboundedly. Within
+//! the bound, a batch is accepted in full; the per-call overshoot is at
+//! most one write job per touched band per internal flush.
+//!
+//! ## Supervision (see [`super::supervise`])
+//!
+//! A job panic on the fleet quarantines the owning session: its bands
+//! are freed, a typed [`SessionFault`] is filed, and every ingest /
+//! snapshot / drain refuses with [`Reject::Quarantined`] until
+//! [`SessionManager::restore_in_place`] replays a checkpoint. Healthy
+//! sessions are unaffected — their exactness guarantees hold through a
+//! neighbor's crash. [`SessionManager::checkpoint`] serializes a
+//! session's full band state (CRC-guarded, versioned); a restored
+//! session renders bit-for-bit identically to one that never crashed.
+//! Under overload ([`SupervisorConfig`] pressure thresholds) on-demand
+//! snapshots degrade through typed tiers — defer provably event-free
+//! cold bands, serve stale dirty-band caches (flagged), shed new
+//! sessions — while window frames stay exact at every tier.
 
 use super::scheduler::{
-    BandActor, BandState, CloseDone, HoldGuard, Job, ScoreDone, SnapDone, WorkerPool,
+    BandActor, BandSeed, BandState, CheckpointDone, CloseDone, HoldGuard, Job, RestoreDone,
+    ScoreDone, SnapDone, WorkerPool,
 };
 use super::stats::{latency_percentiles_ms, ServeStats, SessionReport, SessionStats};
+use super::supervise::{
+    config_fingerprint, decode_checkpoint, encode_checkpoint, pressure, ArmedFault,
+    BandCheckpoint, CheckpointError, DegradeTier, FaultBoard, SchedFaultPlan, SessionCheckpoint,
+    SessionFault, SupervisorConfig, SupervisorCounters,
+};
 use crate::coordinator::router::BandWriter;
 use crate::coordinator::{DenoiseStats, PipelineConfig, PipelineStats, RouterStats, StageWall};
 use crate::denoise::sharded::{stage_items, BandScorer, ScoreItem, ShardBackend, ShardTally};
 use crate::denoise::{support_count, StcfBackend, StcfParams};
-use crate::events::{Event, LabeledEvent, Resolution};
+use crate::events::{ClockPolicy, Event, LabeledEvent, Resolution};
 use crate::util::grid::Grid;
 use crate::util::parallel::band_layout;
 use crate::util::sync::chan::bounded;
 use crate::util::sync::{Arc, AtomicUsize, Ordering};
 use std::collections::BTreeMap;
 use std::time::Instant;
+
+/// Combined band index the inline STCF stage checkpoints under (it is
+/// producer-side state, not a band actor, but rides in the same
+/// [`BandCheckpoint::Scorer`] record).
+const INLINE_BAND: u16 = u16::MAX;
 
 /// Opaque session handle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -63,6 +89,22 @@ pub enum Reject {
     Backpressure { queued: usize, max: usize },
     /// Unknown (or already closed) session id.
     UnknownSession(u64),
+    /// `open` shed under fleet overload (degradation tier
+    /// [`DegradeTier::Shed`] — see [`SupervisorConfig::shed_pressure`]).
+    Overloaded {
+        /// The fleet [`pressure`] reading that tripped the shed tier.
+        pressure: u64,
+    },
+    /// The session is quarantined after a job panic; ingest/snapshot/
+    /// drain refuse until a successful
+    /// [`SessionManager::restore_in_place`]. (`close` still works — a
+    /// faulted session never wedges its teardown.)
+    Quarantined {
+        /// The quarantined session's raw id.
+        id: u64,
+        /// Faults filed on its board so far.
+        faults: u64,
+    },
 }
 
 impl Reject {
@@ -76,6 +118,8 @@ impl Reject {
             Reject::TooManySessions { .. } => 1,
             Reject::Backpressure { .. } => 2,
             Reject::UnknownSession(_) => 3,
+            Reject::Overloaded { .. } => 4,
+            Reject::Quarantined { .. } => 5,
         }
     }
 }
@@ -94,11 +138,56 @@ impl std::fmt::Display for Reject {
                 )
             }
             Reject::UnknownSession(id) => write!(f, "unknown session s{id}"),
+            Reject::Overloaded { pressure } => {
+                write!(f, "overloaded: fleet pressure {pressure} at the shed tier; retry later")
+            }
+            Reject::Quarantined { id, faults } => {
+                write!(
+                    f,
+                    "session s{id} quarantined after {faults} fault(s); \
+                     restore from a checkpoint to resume"
+                )
+            }
         }
     }
 }
 
 impl std::error::Error for Reject {}
+
+/// Why a checkpoint restore failed: either the manager refused the
+/// request (unknown session, admission) or the blob itself did
+/// (corruption, version, config mismatch) — the blob errors are typed so
+/// corruption is always *detected*, never applied.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RestoreError {
+    /// Admission-side refusal.
+    Reject(Reject),
+    /// Blob-side refusal.
+    Checkpoint(CheckpointError),
+}
+
+impl std::fmt::Display for RestoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RestoreError::Reject(r) => write!(f, "restore refused: {r}"),
+            RestoreError::Checkpoint(e) => write!(f, "restore refused: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RestoreError {}
+
+impl From<Reject> for RestoreError {
+    fn from(r: Reject) -> Self {
+        RestoreError::Reject(r)
+    }
+}
+
+impl From<CheckpointError> for RestoreError {
+    fn from(e: CheckpointError) -> Self {
+        RestoreError::Checkpoint(e)
+    }
+}
 
 /// Fleet configuration.
 #[derive(Clone, Debug)]
@@ -110,6 +199,11 @@ pub struct ServeConfig {
     /// Per-session bound on queued write batches — the backpressure
     /// knob: `ingest_batch` rejects instead of buffering past it.
     pub max_inflight_batches: usize,
+    /// Supervision policy: worker respawn budget, snapshot soft
+    /// deadline, degradation-tier pressure thresholds. The default
+    /// never degrades and never misses its (5 s) deadline in practice,
+    /// so existing deployments are unaffected unless they opt in.
+    pub supervisor: SupervisorConfig,
 }
 
 impl Default for ServeConfig {
@@ -118,6 +212,7 @@ impl Default for ServeConfig {
             workers: crate::util::parallel::available_threads(),
             max_sessions: 64,
             max_inflight_batches: 64,
+            supervisor: SupervisorConfig::default(),
         }
     }
 }
@@ -181,6 +276,14 @@ struct Session {
     /// fleet's workers as jobs complete (materialization, growth,
     /// demotion, close — see `scheduler::sync_resident`).
     resident: Arc<AtomicUsize>,
+    /// Quarantine board the fleet workers file caught panics on.
+    faults: Arc<FaultBoard>,
+    /// Chaos-injection plan armed at open (None in production).
+    armed: Option<Arc<ArmedFault>>,
+    /// Fleet supervision counters (shared with the manager and workers).
+    counters: Arc<SupervisorCounters>,
+    /// Soft snapshot deadline (µs), from the supervisor config.
+    deadline_us: u64,
     // Streaming state (the pipeline's producer loop, verbatim).
     pre: Vec<LabeledEvent>,
     kept: Vec<LabeledEvent>,
@@ -188,10 +291,15 @@ struct Session {
     score_staging: Vec<Vec<ScoreItem>>,
     route_staging: Vec<Vec<Event>>,
     next_frame: u64,
+    /// Clock-policy watermark: the highest event time ingested so far.
+    last_t: u64,
     // Counters.
     events_in: u64,
     events_routed: u64,
     dropped: u64,
+    /// Events arriving with `t` below the session watermark (clamped or
+    /// rejected per [`ClockPolicy`]).
+    nonmonotonic: u64,
     peak_batch_len: usize,
     batches_shipped: u64,
     snapshots_served: u64,
@@ -211,8 +319,8 @@ struct Session {
 const LATENCY_SAMPLES: usize = 16_384;
 
 impl Session {
-    /// The pipeline producer loop body for one event (staging + window
-    /// clock), emitting window frames into `frames`.
+    /// The pipeline producer loop body for one event (clock policy,
+    /// staging + window clock), emitting window frames into `frames`.
     fn push(&mut self, pool: &WorkerPool, le: LabeledEvent, frames: &mut Vec<(u64, Grid<f64>)>) {
         debug_assert!(
             self.cfg.res.contains(le.ev.x, le.ev.y),
@@ -221,12 +329,26 @@ impl Session {
             self.cfg.res.width,
             self.cfg.res.height
         );
+        let mut le = le;
+        if le.ev.t < self.last_t {
+            // Backwards clock (duplicate timestamps pass: `<`, not `<=`).
+            self.nonmonotonic += 1;
+            match self.cfg.pipeline.clock_policy {
+                ClockPolicy::Clamp => le.ev.t = self.last_t,
+                // Rejected before `events_in` so accounting still
+                // balances: events_in == written + dropped-by-STCF.
+                ClockPolicy::Reject => return,
+            }
+        }
+        self.last_t = le.ev.t;
         self.events_in += 1;
         let window = self.cfg.pipeline.window_us;
         while le.ev.t > self.next_frame && self.next_frame <= self.cfg.t_end_us {
             self.flush(pool);
             let at = self.next_frame;
-            let frame = self.snapshot_frame(pool, at);
+            // Window frames are never degraded: exactness holds at every
+            // overload tier.
+            let (frame, _) = self.snapshot_frame(pool, at, DegradeTier::Nominal);
             self.frames_emitted += 1;
             frames.push((at, frame));
             self.next_frame += window;
@@ -351,7 +473,19 @@ impl Session {
     /// dirty-band protocol over the fleet: provably-clean bands
     /// composite from the session cache with no job at all, the rest
     /// snapshot behind their pending writes in band-FIFO order.
-    fn snapshot_frame(&mut self, pool: &WorkerPool, at_us: u64) -> Grid<f64> {
+    ///
+    /// `tier` applies the overload degradation ladder (on-demand
+    /// snapshots only; window frames always pass `Nominal`): at
+    /// [`DegradeTier::DeferCold`]+ provably event-free cold bands are
+    /// served as zero fill without a job (lossless); at
+    /// [`DegradeTier::ServeStale`]+ dirty bands with a previous render
+    /// serve that cache unrendered and the returned `stale` flag is set.
+    fn snapshot_frame(
+        &mut self,
+        pool: &WorkerPool,
+        at_us: u64,
+        tier: DegradeTier,
+    ) -> (Grid<f64>, bool) {
         let t0 = Instant::now();
         self.snapshots_served += 1;
         let w = self.cfg.res.width as usize;
@@ -359,6 +493,7 @@ impl Session {
         let n = self.write_actors.len();
         let (tx, rx) = bounded::<SnapDone>(n);
         let mut in_flight = 0usize;
+        let mut stale = false;
         for s in 0..n {
             let cache = &mut self.caches[s];
             let skip = cache.valid
@@ -369,12 +504,28 @@ impl Session {
                 self.bands_skipped_unchanged += 1;
                 continue;
             }
+            if tier >= DegradeTier::DeferCold && !cache.valid && !self.band_dirty[s] {
+                // Never materialized and no writes in flight: the band
+                // is provably event-free, so its render is all zeros —
+                // exactly the composite base. Deferring it is lossless.
+                self.counters.deferred_cold_snapshots.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if tier >= DegradeTier::ServeStale && cache.valid && self.band_dirty[s] {
+                // Serve the last render instead of queueing behind the
+                // pending writes; the frame is marked stale. The band
+                // stays dirty so a later (or Nominal) snapshot renders.
+                stale = true;
+                continue;
+            }
             let buf = cache.buf.take().expect("band buffer in flight");
             let job = Job::Snapshot {
                 at_us,
                 buf,
                 cache_valid: cache.valid,
                 band: s,
+                enqueued: Instant::now(),
+                deadline_us: self.deadline_us,
                 reply: tx.clone(),
             };
             pool.enqueue(&self.write_actors[s], job);
@@ -398,8 +549,47 @@ impl Session {
             let y0 = s * self.band_h;
             slice[y0 * w..y0 * w + band.len()].copy_from_slice(band.as_slice());
         }
+        if stale {
+            self.counters.stale_frames_served.fetch_add(1, Ordering::Relaxed);
+        }
         self.stage_wall.snapshot_seconds += t0.elapsed().as_secs_f64();
-        out
+        (out, stale)
+    }
+
+    /// The session counter block a checkpoint carries. Order is this
+    /// module's contract with itself ([`Session::apply_counters`] is the
+    /// inverse); unknown trailing entries are ignored on restore so the
+    /// block can grow compatibly.
+    fn counter_block(&self) -> Vec<u64> {
+        vec![
+            self.events_in,
+            self.events_routed,
+            self.dropped,
+            self.frames_emitted,
+            self.batches_shipped,
+            self.snapshots_served,
+            self.bands_skipped_unchanged,
+            self.peak_batch_len as u64,
+            self.rejected_batches,
+            self.last_t,
+            self.nonmonotonic,
+        ]
+    }
+
+    /// Inverse of [`Session::counter_block`]; missing entries restore 0.
+    fn apply_counters(&mut self, counters: &[u64]) {
+        let g = |i: usize| counters.get(i).copied().unwrap_or(0);
+        self.events_in = g(0);
+        self.events_routed = g(1);
+        self.dropped = g(2);
+        self.frames_emitted = g(3);
+        self.batches_shipped = g(4);
+        self.snapshots_served = g(5);
+        self.bands_skipped_unchanged = g(6);
+        self.peak_batch_len = g(7) as usize;
+        self.rejected_batches = g(8);
+        self.last_t = g(9);
+        self.nonmonotonic = g(10);
     }
 
     fn live_stats(&self) -> SessionStats {
@@ -423,6 +613,14 @@ impl Session {
             resident_bytes: self.resident.load(Ordering::SeqCst),
         }
     }
+
+    /// Refuse with [`Reject::Quarantined`] once any fault is filed.
+    fn quarantine_gate(&self) -> Result<(), Reject> {
+        if self.faults.is_quarantined() {
+            return Err(Reject::Quarantined { id: self.id.raw(), faults: self.faults.count() });
+        }
+        Ok(())
+    }
 }
 
 /// The multi-tenant session manager (see the module docs).
@@ -432,20 +630,25 @@ pub struct SessionManager {
     sessions: BTreeMap<u64, Session>,
     next_id: u64,
     open_bands: Arc<AtomicUsize>,
+    /// Fleet supervision counters (shared with every session and every
+    /// worker slot).
+    counters: Arc<SupervisorCounters>,
     /// Rejections + events of already-closed sessions (fleet totals).
     closed_rejected: u64,
     closed_events_in: u64,
 }
 
 impl SessionManager {
-    /// Start a manager with a fresh fixed-size worker fleet.
+    /// Start a manager with a fresh fixed-size worker fleet (supervised:
+    /// a dead worker respawns under the configured restart budget).
     pub fn new(cfg: ServeConfig) -> Self {
         Self {
-            pool: WorkerPool::new(cfg.workers),
+            pool: WorkerPool::new(cfg.workers, cfg.supervisor.supervision),
             cfg,
             sessions: BTreeMap::new(),
             next_id: 0,
             open_bands: Arc::new(AtomicUsize::new(0)),
+            counters: Arc::new(SupervisorCounters::new()),
             closed_rejected: 0,
             closed_events_in: 0,
         }
@@ -453,18 +656,39 @@ impl SessionManager {
 
     /// Open a session: builds its band writers (and scorer bands when
     /// the STCF is sharded) as fleet actors. Rejects at the session
-    /// ceiling.
+    /// ceiling, and sheds ([`Reject::Overloaded`]) when fleet pressure
+    /// reaches [`SupervisorConfig::shed_pressure`].
     pub fn open(&mut self, cfg: SessionConfig) -> Result<SessionId, Reject> {
+        self.open_with_fault(cfg, None)
+    }
+
+    /// [`SessionManager::open`] with a scheduler fault plan armed on the
+    /// new session (chaos harness — see [`SchedFaultPlan`]). The plan
+    /// fires at most once, on the session's `fire_on_job`-th job, and
+    /// every firing is counted in the supervisor stats before it
+    /// manifests.
+    pub fn open_with_fault(
+        &mut self,
+        cfg: SessionConfig,
+        plan: Option<SchedFaultPlan>,
+    ) -> Result<SessionId, Reject> {
         if self.sessions.len() >= self.cfg.max_sessions {
             return Err(Reject::TooManySessions {
                 open: self.sessions.len(),
                 max: self.cfg.max_sessions,
             });
         }
+        let p = pressure(self.pool.ready_depth(), self.total_resident());
+        if self.cfg.supervisor.tier_for(p) >= DegradeTier::Shed {
+            self.counters.sessions_shed_overloaded.fetch_add(1, Ordering::Relaxed);
+            return Err(Reject::Overloaded { pressure: p });
+        }
         let id = SessionId(self.next_id);
         self.next_id += 1;
         let inflight = Arc::new(AtomicUsize::new(0));
         let resident = Arc::new(AtomicUsize::new(0));
+        let faults = Arc::new(FaultBoard::new());
+        let armed = plan.map(|pl| Arc::new(ArmedFault::new(pl)));
         let height = cfg.res.height as usize;
         let (band_h, n_bands) = band_layout(height, cfg.pipeline.router.n_shards);
         let write_actors: Vec<Arc<BandActor>> = (0..n_bands)
@@ -472,12 +696,16 @@ impl SessionManager {
                 // render_chunks = 1: the fleet's workers are the
                 // parallelism; band renders must not spawn threads.
                 let writer = BandWriter::for_band(cfg.res, &cfg.pipeline.router.isc, band_h, s, 1);
-                self.pool.spawn_actor(
-                    BandState::Writer(Box::new(writer)),
-                    inflight.clone(),
-                    self.open_bands.clone(),
-                    resident.clone(),
-                )
+                self.pool.spawn_actor(BandSeed {
+                    state: BandState::Writer(Box::new(writer)),
+                    band: s as u16,
+                    inflight: inflight.clone(),
+                    open_bands: self.open_bands.clone(),
+                    resident: resident.clone(),
+                    faults: faults.clone(),
+                    counters: self.counters.clone(),
+                    armed: armed.clone(),
+                })
             })
             .collect();
         let sharded = cfg.pipeline.stcf.is_some() && cfg.pipeline.denoise_shards > 0;
@@ -493,12 +721,17 @@ impl SessionManager {
                 let prm = cfg.pipeline.stcf.expect("sharded stage needs stcf");
                 let backend = ShardBackend::Isc(cfg.pipeline.router.isc.clone());
                 let scorer = BandScorer::for_band(cfg.res, &backend, prm, score_band_h, s);
-                self.pool.spawn_actor(
-                    BandState::Scorer(Box::new(scorer)),
-                    inflight.clone(),
-                    self.open_bands.clone(),
-                    resident.clone(),
-                )
+                self.pool.spawn_actor(BandSeed {
+                    state: BandState::Scorer(Box::new(scorer)),
+                    // Combined band index: scorers follow the writers.
+                    band: (n_bands + s) as u16,
+                    inflight: inflight.clone(),
+                    open_bands: self.open_bands.clone(),
+                    resident: resident.clone(),
+                    faults: faults.clone(),
+                    counters: self.counters.clone(),
+                    armed: armed.clone(),
+                })
             })
             .collect();
         let inline = match (&cfg.pipeline.stcf, sharded) {
@@ -534,15 +767,21 @@ impl SessionManager {
             band_dirty: vec![false; n_bands],
             inflight,
             resident,
+            faults,
+            armed,
+            counters: self.counters.clone(),
+            deadline_us: self.cfg.supervisor.snapshot_deadline_us,
             pre: Vec::with_capacity(batch_size),
             kept: Vec::with_capacity(batch_size),
             scores: Vec::new(),
             score_staging: (0..n_score).map(|_| Vec::new()).collect(),
             route_staging: (0..n_bands).map(|_| Vec::new()).collect(),
             next_frame,
+            last_t: 0,
             events_in: 0,
             events_routed: 0,
             dropped: 0,
+            nonmonotonic: 0,
             peak_batch_len: 0,
             batches_shipped: 0,
             snapshots_served: 0,
@@ -562,13 +801,18 @@ impl SessionManager {
 
     /// Ingest a time-sorted labeled batch, returning any window frames
     /// the stream crossed. Rejected in full (nothing ingested) while the
-    /// session's queued write batches sit at the in-flight bound.
+    /// session's queued write batches sit at the in-flight bound, or
+    /// while the session is quarantined.
     pub fn ingest_batch(
         &mut self,
         sid: SessionId,
         events: &[LabeledEvent],
     ) -> Result<Vec<(u64, Grid<f64>)>, Reject> {
         let s = self.sessions.get_mut(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        if let Err(r) = s.quarantine_gate() {
+            s.rejected_batches += 1;
+            return Err(r);
+        }
         let queued = s.inflight.load(Ordering::SeqCst);
         if queued >= self.cfg.max_inflight_batches {
             s.rejected_batches += 1;
@@ -595,9 +839,23 @@ impl SessionManager {
     /// snapshot in the stack; causal on-demand snapshots never perturb
     /// the window frames.
     pub fn snapshot(&mut self, sid: SessionId, at_us: u64) -> Result<Grid<f64>, Reject> {
+        self.snapshot_with_status(sid, at_us).map(|(frame, _)| frame)
+    }
+
+    /// [`SessionManager::snapshot`] plus the staleness flag: `true` when
+    /// overload degradation ([`DegradeTier::ServeStale`]) served at
+    /// least one dirty band from its last render instead of rendering.
+    /// The net front door forwards the flag on the FRAME wire.
+    pub fn snapshot_with_status(
+        &mut self,
+        sid: SessionId,
+        at_us: u64,
+    ) -> Result<(Grid<f64>, bool), Reject> {
+        let tier = self.current_tier();
         let s = self.sessions.get_mut(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        s.quarantine_gate()?;
         s.flush(&self.pool);
-        Ok(s.snapshot_frame(&self.pool, at_us))
+        Ok(s.snapshot_frame(&self.pool, at_us, tier))
     }
 
     /// Flush staged events and emit every remaining window frame through
@@ -605,16 +863,214 @@ impl SessionManager {
     /// `drain` frames together are exactly `pipeline::run`'s frame list.
     pub fn drain(&mut self, sid: SessionId) -> Result<Vec<(u64, Grid<f64>)>, Reject> {
         let s = self.sessions.get_mut(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        s.quarantine_gate()?;
         s.flush(&self.pool);
         let mut frames = Vec::new();
         while s.next_frame <= s.cfg.t_end_us {
             let at = s.next_frame;
-            let frame = s.snapshot_frame(&self.pool, at);
+            let (frame, _) = s.snapshot_frame(&self.pool, at, DegradeTier::Nominal);
             s.frames_emitted += 1;
             frames.push((at, frame));
             s.next_frame += s.cfg.pipeline.window_us;
         }
         Ok(frames)
+    }
+
+    /// Serialize the session's full state — band stamps, STCF backend,
+    /// window clock, counters — into a compact versioned CRC-guarded
+    /// blob. Staged events are flushed first (decision-identical: causal
+    /// scoring means message boundaries never change band state), so the
+    /// checkpoint captures every acknowledged event. The fan-out rides
+    /// each band's own FIFO behind its pending writes: a consistent cut
+    /// without stopping the fleet.
+    pub fn checkpoint(&mut self, sid: SessionId) -> Result<Vec<u8>, Reject> {
+        let s = self.sessions.get_mut(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        s.flush(&self.pool);
+        let n_bands = s.write_actors.len();
+        let n_actors = n_bands + s.score_actors.len();
+        let (tx, rx) = bounded::<CheckpointDone>(n_actors.max(1));
+        for (b, actor) in s.write_actors.iter().enumerate() {
+            self.pool.enqueue(actor, Job::Checkpoint { band: b, reply: tx.clone() });
+        }
+        for (b, actor) in s.score_actors.iter().enumerate() {
+            self.pool.enqueue(actor, Job::Checkpoint { band: n_bands + b, reply: tx.clone() });
+        }
+        drop(tx);
+        // Quarantined (stateless) bands reply None and are omitted; the
+        // restore treats a missing band as empty.
+        let mut bands: Vec<BandCheckpoint> =
+            rx.iter().take(n_actors).filter_map(|done| done.state).collect();
+        if let Some(st) = &s.inline {
+            let mut stamps = Vec::new();
+            st.backend.for_each_stamp(|plane, x, y, t| stamps.push((plane, x, y, t)));
+            bands.push(BandCheckpoint::Scorer {
+                band: INLINE_BAND,
+                tally: st.tally.clone(),
+                stamps,
+            });
+        }
+        bands.sort_by_key(BandCheckpoint::band);
+        let ck = SessionCheckpoint {
+            fingerprint: config_fingerprint(&s.cfg.pipeline, s.cfg.res, s.cfg.t_end_us),
+            next_frame: s.next_frame,
+            counters: s.counter_block(),
+            bands,
+        };
+        let mut bytes = encode_checkpoint(&ck);
+        if let Some(armed) = &s.armed {
+            // Chaos hook: at most one seeded bit flip, which the restore
+            // CRC guard must *detect* (tests/fleet_chaos.rs).
+            armed.corrupt_checkpoint(&mut bytes, &s.counters);
+        }
+        self.counters.checkpoints_taken.fetch_add(1, Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    /// Restore a session **in place** from a checkpoint it (or a
+    /// config-identical twin) produced: rebuilds every band state from
+    /// the blob's stamps, rewinds the window clock and counters to the
+    /// checkpoint cut, and lifts the quarantine. After a successful
+    /// restore the session renders bit-for-bit as if it had never
+    /// crashed (position-stable stamp replay — see
+    /// [`super::supervise`]).
+    pub fn restore_in_place(&mut self, sid: SessionId, bytes: &[u8]) -> Result<(), RestoreError> {
+        let ck = self.decode_guarded(bytes)?;
+        let s = self
+            .sessions
+            .get_mut(&sid.raw())
+            .ok_or(RestoreError::Reject(Reject::UnknownSession(sid.raw())))?;
+        let expected = config_fingerprint(&s.cfg.pipeline, s.cfg.res, s.cfg.t_end_us);
+        if ck.fingerprint != expected {
+            return Err(RestoreError::Checkpoint(CheckpointError::ConfigMismatch {
+                expected,
+                found: ck.fingerprint,
+            }));
+        }
+        Self::apply_checkpoint(&self.pool, s, &ck);
+        s.faults.clear();
+        self.counters.restores_completed.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Restore a checkpoint into a **new** session (migration): opens a
+    /// session with `cfg` (which must fingerprint-match the blob) and
+    /// applies the checkpointed state to it.
+    pub fn restore(&mut self, cfg: SessionConfig, bytes: &[u8]) -> Result<SessionId, RestoreError> {
+        let ck = self.decode_guarded(bytes)?;
+        let expected = config_fingerprint(&cfg.pipeline, cfg.res, cfg.t_end_us);
+        if ck.fingerprint != expected {
+            return Err(RestoreError::Checkpoint(CheckpointError::ConfigMismatch {
+                expected,
+                found: ck.fingerprint,
+            }));
+        }
+        let sid = self.open(cfg).map_err(RestoreError::Reject)?;
+        if let Some(s) = self.sessions.get_mut(&sid.raw()) {
+            Self::apply_checkpoint(&self.pool, s, &ck);
+        }
+        self.counters.restores_completed.fetch_add(1, Ordering::Relaxed);
+        Ok(sid)
+    }
+
+    /// Decode + CRC-verify a checkpoint, counting detected corruption.
+    fn decode_guarded(&self, bytes: &[u8]) -> Result<SessionCheckpoint, RestoreError> {
+        decode_checkpoint(bytes).map_err(|e| {
+            if e == CheckpointError::CrcMismatch {
+                self.counters.checkpoint_corruptions_detected.fetch_add(1, Ordering::Relaxed);
+            }
+            RestoreError::Checkpoint(e)
+        })
+    }
+
+    /// Rebuild every band state from the checkpoint on the caller
+    /// thread, install each via its band FIFO ([`Job::Restore`] — which
+    /// also revives quarantined bands), rebuild the inline STCF stage,
+    /// and rewind the producer-side streaming state to the cut.
+    fn apply_checkpoint(pool: &WorkerPool, s: &mut Session, ck: &SessionCheckpoint) {
+        let n_bands = s.write_actors.len();
+        let n_score = s.score_actors.len();
+        let mut writer_ck: Vec<Option<&BandCheckpoint>> = vec![None; n_bands];
+        let mut scorer_ck: Vec<Option<&BandCheckpoint>> = vec![None; n_score];
+        let mut inline_ck: Option<&BandCheckpoint> = None;
+        for b in &ck.bands {
+            let band = b.band() as usize;
+            if b.band() == INLINE_BAND {
+                inline_ck = Some(b);
+            } else if band < n_bands {
+                writer_ck[band] = Some(b);
+            } else if band < n_bands + n_score {
+                scorer_ck[band - n_bands] = Some(b);
+            }
+        }
+        let (tx, rx) = bounded::<RestoreDone>((n_bands + n_score).max(1));
+        for (b, actor) in s.write_actors.iter().enumerate() {
+            let mut writer =
+                BandWriter::for_band(s.cfg.res, &s.cfg.pipeline.router.isc, s.band_h, b, 1);
+            if let Some(BandCheckpoint::Writer { processed, stamps, .. }) = writer_ck[b] {
+                writer.restore_state(*processed, stamps);
+            }
+            let state = Box::new(BandState::Writer(Box::new(writer)));
+            pool.enqueue(actor, Job::Restore { state, band: b, reply: tx.clone() });
+        }
+        for (b, actor) in s.score_actors.iter().enumerate() {
+            let prm = s.cfg.pipeline.stcf.expect("sharded stage needs stcf");
+            let backend = ShardBackend::Isc(s.cfg.pipeline.router.isc.clone());
+            let mut scorer = BandScorer::for_band(s.cfg.res, &backend, prm, s.score_band_h, b);
+            if let Some(BandCheckpoint::Scorer { tally, stamps, .. }) = scorer_ck[b] {
+                scorer.restore_state(tally.clone(), stamps);
+            }
+            let state = Box::new(BandState::Scorer(Box::new(scorer)));
+            pool.enqueue(actor, Job::Restore { state, band: n_bands + b, reply: tx.clone() });
+        }
+        drop(tx);
+        for _ in rx.iter().take(n_bands + n_score) {}
+        if let Some(st) = &mut s.inline {
+            let mut backend =
+                StcfBackend::isc(s.cfg.res, s.cfg.pipeline.router.isc.clone(), st.prm.tau_tw_us);
+            let mut tally = ShardTally::default();
+            if let Some(BandCheckpoint::Scorer { tally: t, stamps, .. }) = inline_ck {
+                // Replay in ascending stamp time: recency bitmask order
+                // matters for bit-exactness (same law as restore_state).
+                let mut ordered = stamps.clone();
+                ordered.sort_unstable_by_key(|&(_, _, _, t)| t);
+                for (plane, x, y, tt) in ordered {
+                    backend.restore_stamp(plane, x, y, tt);
+                }
+                tally = t.clone();
+            }
+            st.backend = backend;
+            st.tally = tally;
+        }
+        // Rewind the producer-side streaming state to the cut: staged
+        // events after the checkpoint are discarded (the caller re-sends
+        // from its own journal), caches invalidate (buffers kept for
+        // reuse), and every band renders fully on the next frame.
+        s.pre.clear();
+        s.kept.clear();
+        s.scores.clear();
+        for v in &mut s.score_staging {
+            v.clear();
+        }
+        for v in &mut s.route_staging {
+            v.clear();
+        }
+        s.next_frame = ck.next_frame;
+        s.apply_counters(&ck.counters);
+        for cache in &mut s.caches {
+            cache.valid = false;
+            cache.empty_static = false;
+            cache.at_us = 0;
+        }
+        for d in &mut s.band_dirty {
+            *d = true;
+        }
+    }
+
+    /// The faults filed on a session's quarantine board (empty while
+    /// healthy).
+    pub fn session_faults(&self, sid: SessionId) -> Result<Vec<SessionFault>, Reject> {
+        let s = self.sessions.get(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
+        Ok(s.faults.faults())
     }
 
     /// Close a session: flushes its staged events, waits for its queued
@@ -626,6 +1082,8 @@ impl SessionManager {
     /// mailbox, so in-flight writes are never silently discarded. (The
     /// remaining window frames through `t_end_us` are still only emitted
     /// by `drain` — call it first when the caller wants the frame tail.)
+    /// Quarantined sessions close too — teardown never wedges — though
+    /// their accounting reflects whatever bands survived the fault.
     pub fn close(&mut self, sid: SessionId) -> Result<SessionReport, Reject> {
         let mut s =
             self.sessions.remove(&sid.raw()).ok_or(Reject::UnknownSession(sid.raw()))?;
@@ -666,6 +1124,7 @@ impl SessionManager {
             events_in: s.events_in,
             events_written: per_shard.iter().sum(),
             events_dropped_by_stcf: s.dropped,
+            events_nonmonotonic: s.nonmonotonic,
             frames_emitted: s.frames_emitted,
             peak_batch_len: s.peak_batch_len,
             wall_seconds: wall,
@@ -696,6 +1155,18 @@ impl SessionManager {
         self.sessions.len()
     }
 
+    /// Approximate resident bytes across every open session.
+    fn total_resident(&self) -> usize {
+        self.sessions.values().map(|s| s.resident.load(Ordering::SeqCst)).sum()
+    }
+
+    /// The fleet's active degradation tier right now (pressure = ready
+    /// queue depth × resident footprint, mapped through the supervisor
+    /// thresholds).
+    pub fn current_tier(&self) -> DegradeTier {
+        self.cfg.supervisor.tier_for(pressure(self.pool.ready_depth(), self.total_resident()))
+    }
+
     /// Pause the worker fleet until the guard drops (maintenance drains,
     /// deterministic backpressure tests). While held, write jobs queue
     /// but nothing executes — so `snapshot`/`drain`/`close` and sharded
@@ -712,6 +1183,11 @@ impl SessionManager {
             self.sessions.values().map(Session::live_stats).collect();
         ServeStats {
             net: Default::default(),
+            supervisor: self.counters.snapshot(
+                self.pool.jobs_panicked(),
+                self.pool.worker_respawns(),
+                self.pool.degraded(),
+            ),
             workers: self.pool.workers(),
             open_sessions: sessions.len(),
             open_bands: self.open_bands(),
@@ -743,6 +1219,7 @@ impl SessionManager {
 mod tests {
     use super::*;
     use crate::events::Polarity;
+    use crate::serve::supervise::SchedFaultKind;
 
     fn stream(n: u64, res: Resolution) -> Vec<LabeledEvent> {
         (0..n)
@@ -765,6 +1242,13 @@ mod tests {
             t_end_us,
             pipeline: PipelineConfig::default(),
         }
+    }
+
+    fn frames_eq(a: &[(u64, Grid<f64>)], b: &[(u64, Grid<f64>)]) -> bool {
+        a.len() == b.len()
+            && a.iter()
+                .zip(b)
+                .all(|((ta, ga), (tb, gb))| ta == tb && ga.as_slice() == gb.as_slice())
     }
 
     #[test]
@@ -811,6 +1295,7 @@ mod tests {
             workers: 2,
             max_sessions: 4,
             max_inflight_batches: 3,
+            ..ServeConfig::default()
         });
         let res = Resolution::new(8, 8);
         let mut cfg = session_cfg(res, 10_000_000);
@@ -854,6 +1339,8 @@ mod tests {
             (Reject::TooManySessions { open: 7, max: 8 }, 1u16, ["7", "8"]),
             (Reject::Backpressure { queued: 5, max: 6 }, 2, ["5", "6"]),
             (Reject::UnknownSession(42), 3, ["42", "s42"]),
+            (Reject::Overloaded { pressure: 97 }, 4, ["97", "overloaded"]),
+            (Reject::Quarantined { id: 9, faults: 2 }, 5, ["s9", "2 fault"]),
         ];
         for (reject, code, needles) in cases {
             assert_eq!(reject.code(), code);
@@ -916,5 +1403,250 @@ mod tests {
         let final_stats = m.shutdown();
         assert_eq!(final_stats.open_sessions, 0);
         assert_eq!(final_stats.open_bands, 0);
+    }
+
+    #[test]
+    fn restore_in_place_resumes_bit_for_bit() {
+        // Prefix → checkpoint → suffix (discarded) → restore → suffix
+        // again: the replayed run's frames must equal a never-interrupted
+        // reference, bit for bit, across no-STCF, inline-STCF and
+        // sharded-STCF session shapes.
+        let res = Resolution::new(16, 16);
+        let shapes: [(Option<StcfParams>, usize); 3] = [
+            (None, 4),
+            (Some(StcfParams::default()), 0),
+            (Some(StcfParams::default()), 2),
+        ];
+        for (stcf, shards) in shapes {
+            let mut m =
+                SessionManager::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+            let mut cfg = session_cfg(res, 100_000);
+            cfg.pipeline.stcf = stcf;
+            cfg.pipeline.denoise_shards = shards;
+            cfg.pipeline.batch_size = 16;
+            let evs = stream(100, res);
+            let (head, tail) = evs.split_at(60);
+
+            let sid_ref = m.open(cfg.clone()).unwrap();
+            let mut want = m.ingest_batch(sid_ref, &evs).unwrap();
+            want.extend(m.drain(sid_ref).unwrap());
+            let want_report = m.close(sid_ref).unwrap();
+
+            let sid = m.open(cfg).unwrap();
+            let mut got = m.ingest_batch(sid, head).unwrap();
+            let blob = m.checkpoint(sid).unwrap();
+            // First pass past the cut, then rewind and replay it.
+            let _ = m.ingest_batch(sid, tail).unwrap();
+            m.restore_in_place(sid, &blob).unwrap();
+            got.extend(m.ingest_batch(sid, tail).unwrap());
+            got.extend(m.drain(sid).unwrap());
+            assert!(
+                frames_eq(&want, &got),
+                "restored frames diverged (stcf={stcf:?}, shards={shards})"
+            );
+            let report = m.close(sid).unwrap();
+            assert_eq!(report.pipeline.events_in, want_report.pipeline.events_in);
+            assert_eq!(report.pipeline.events_written, want_report.pipeline.events_written);
+            assert_eq!(
+                report.pipeline.events_dropped_by_stcf,
+                want_report.pipeline.events_dropped_by_stcf
+            );
+            let st = m.shutdown();
+            assert_eq!(st.supervisor.checkpoints_taken, 1);
+            assert_eq!(st.supervisor.restores_completed, 1);
+        }
+    }
+
+    #[test]
+    fn restore_migrates_into_a_new_session() {
+        let res = Resolution::new(16, 16);
+        let mut m = SessionManager::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+        let cfg = session_cfg(res, 100_000);
+        let evs = stream(100, res);
+        let (head, tail) = evs.split_at(50);
+
+        let sid_ref = m.open(cfg.clone()).unwrap();
+        let mut want = m.ingest_batch(sid_ref, &evs).unwrap();
+        want.extend(m.drain(sid_ref).unwrap());
+        m.close(sid_ref).unwrap();
+
+        let sid_a = m.open(cfg.clone()).unwrap();
+        let mut got = m.ingest_batch(sid_a, head).unwrap();
+        let blob = m.checkpoint(sid_a).unwrap();
+        m.close(sid_a).unwrap();
+
+        let sid_b = m.restore(cfg.clone(), &blob).unwrap();
+        assert_ne!(sid_a, sid_b);
+        got.extend(m.ingest_batch(sid_b, tail).unwrap());
+        got.extend(m.drain(sid_b).unwrap());
+        assert!(frames_eq(&want, &got), "migrated session diverged");
+
+        // Config mismatch is a typed refusal, not a silent misrestore.
+        let mut other = cfg;
+        other.pipeline.window_us += 1;
+        match m.restore(other, &blob) {
+            Err(RestoreError::Checkpoint(CheckpointError::ConfigMismatch { .. })) => {}
+            r => panic!("expected ConfigMismatch, got {r:?}"),
+        }
+        m.shutdown();
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_detected_and_counted() {
+        let res = Resolution::new(8, 8);
+        let mut m = SessionManager::new(ServeConfig { workers: 1, ..ServeConfig::default() });
+        let sid = m.open(session_cfg(res, 10_000_000)).unwrap();
+        m.ingest_batch(sid, &stream(30, res)).unwrap();
+        let mut blob = m.checkpoint(sid).unwrap();
+        blob[10] ^= 0x40;
+        match m.restore_in_place(sid, &blob) {
+            Err(RestoreError::Checkpoint(CheckpointError::CrcMismatch)) => {}
+            r => panic!("expected CrcMismatch, got {r:?}"),
+        }
+        let st = m.shutdown();
+        assert_eq!(st.supervisor.checkpoint_corruptions_detected, 1);
+        assert_eq!(st.supervisor.restores_completed, 0);
+    }
+
+    #[test]
+    fn injected_panic_quarantines_session_and_restore_lifts_it() {
+        let res = Resolution::new(8, 8);
+        let mut m = SessionManager::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+        let mut cfg = session_cfg(res, 10_000_000);
+        cfg.pipeline.window_us = 100_000_000; // no window crossing
+        let plan = SchedFaultPlan {
+            kind: SchedFaultKind::JobPanic,
+            fire_on_job: 1,
+            stall_ms: 0,
+            corrupt_salt: 0,
+        };
+        let sid = m.open_with_fault(cfg, Some(plan)).unwrap();
+        // Checkpoint before the fault (checkpoint jobs don't tick the
+        // armed ordinal, so this cannot fire it).
+        let blob = m.checkpoint(sid).unwrap();
+        m.ingest_batch(sid, &stream(20, res)).unwrap();
+        // Snapshot flushes the staged batch; the first write job panics
+        // on the worker, and the snapshot jobs queued behind it on the
+        // band FIFOs synchronize: by the time the frame returns, the
+        // quarantine is filed.
+        let _ = m.snapshot(sid, 50_000).unwrap();
+        match m.ingest_batch(sid, &stream(1, res)) {
+            Err(Reject::Quarantined { id, faults }) => {
+                assert_eq!(id, sid.raw());
+                assert!(faults >= 1);
+            }
+            r => panic!("expected Quarantined, got {r:?}"),
+        }
+        assert!(matches!(m.snapshot(sid, 60_000), Err(Reject::Quarantined { .. })));
+        assert!(matches!(m.drain(sid), Err(Reject::Quarantined { .. })));
+        let faults = m.session_faults(sid).unwrap();
+        assert!(!faults.is_empty());
+        assert!(faults[0].detail.contains("injected fault"));
+        let st = m.stats();
+        assert_eq!(st.supervisor.quarantines, 1);
+        assert_eq!(st.supervisor.injected_panics, 1);
+        assert!(st.supervisor.worker_panics >= 1);
+        // Restore lifts the quarantine; the session serves again.
+        m.restore_in_place(sid, &blob).unwrap();
+        m.ingest_batch(sid, &stream(20, res)).unwrap();
+        let report = m.close(sid).unwrap();
+        assert_eq!(report.pipeline.events_in, 20);
+        m.shutdown();
+    }
+
+    #[test]
+    fn clamp_policy_raises_backwards_timestamps_and_counts_them() {
+        let res = Resolution::new(8, 8);
+        let mut m = SessionManager::new(ServeConfig { workers: 1, ..ServeConfig::default() });
+        let mut cfg = session_cfg(res, 10_000_000);
+        cfg.pipeline.window_us = 100_000_000;
+        assert_eq!(cfg.pipeline.clock_policy, ClockPolicy::Clamp, "Clamp is the default");
+        let sid = m.open(cfg).unwrap();
+        let mk = |t| LabeledEvent { ev: Event::new(t, 1, 1, Polarity::On), is_signal: true };
+        // 1000, 500 (backwards → clamped to 1000), 1000 (duplicate:
+        // passes untouched), 2000.
+        m.ingest_batch(sid, &[mk(1_000), mk(500), mk(1_000), mk(2_000)]).unwrap();
+        let report = m.close(sid).unwrap();
+        assert_eq!(report.pipeline.events_in, 4, "clamped events are ingested");
+        assert_eq!(report.pipeline.events_written, 4);
+        assert_eq!(report.pipeline.events_nonmonotonic, 1);
+        m.shutdown();
+    }
+
+    #[test]
+    fn reject_policy_drops_backwards_timestamps_entirely() {
+        let res = Resolution::new(8, 8);
+        let mut m = SessionManager::new(ServeConfig { workers: 1, ..ServeConfig::default() });
+        let mut cfg = session_cfg(res, 10_000_000);
+        cfg.pipeline.window_us = 100_000_000;
+        cfg.pipeline.clock_policy = ClockPolicy::Reject;
+        let sid = m.open(cfg).unwrap();
+        let mk = |t| LabeledEvent { ev: Event::new(t, 1, 1, Polarity::On), is_signal: true };
+        m.ingest_batch(sid, &[mk(1_000), mk(500), mk(1_000), mk(2_000)]).unwrap();
+        let report = m.close(sid).unwrap();
+        // The backwards event is dropped *before* events_in, so the
+        // accounting balance (in == written + dropped) still holds.
+        assert_eq!(report.pipeline.events_in, 3);
+        assert_eq!(report.pipeline.events_written, 3);
+        assert_eq!(report.pipeline.events_nonmonotonic, 1);
+        m.shutdown();
+    }
+
+    #[test]
+    fn degradation_defers_cold_bands_and_serves_stale() {
+        let res = Resolution::new(16, 16);
+        let mut sc = ServeConfig { workers: 1, ..ServeConfig::default() };
+        // Pressure 0 already reaches ServeStale (which includes
+        // DeferCold); window frames must stay exact regardless.
+        sc.supervisor.defer_cold_pressure = 0;
+        sc.supervisor.serve_stale_pressure = 0;
+        let mut m = SessionManager::new(sc);
+        let mut cfg = session_cfg(res, 10_000_000);
+        cfg.pipeline.window_us = 100_000_000;
+        let sid = m.open(cfg).unwrap();
+        assert_eq!(m.current_tier(), DegradeTier::ServeStale);
+        // All bands cold: every render deferred, zero frame, not stale.
+        let (f0, stale0) = m.snapshot_with_status(sid, 1_000).unwrap();
+        assert!(!stale0);
+        assert!(f0.as_slice().iter().all(|&v| v == 0.0));
+        let n_bands = m.stats().open_bands as u64;
+        assert_eq!(m.stats().supervisor.deferred_cold_snapshots, n_bands);
+        // Dirty + never-rendered bands still render (only *cold* defers).
+        let evs: Vec<LabeledEvent> = (0..8)
+            .map(|k| LabeledEvent {
+                ev: Event::new(2_000 + k, k as u16, 0, Polarity::On),
+                is_signal: true,
+            })
+            .collect();
+        m.ingest_batch(sid, &evs).unwrap();
+        let (f1, stale1) = m.snapshot_with_status(sid, 3_000).unwrap();
+        assert!(!stale1, "invalid+dirty bands render, they cannot serve stale");
+        assert!(f1.as_slice().iter().any(|&v| v != 0.0));
+        // Dirty + previously-rendered: served stale from the old cache.
+        let evs2: Vec<LabeledEvent> = (0..8)
+            .map(|k| LabeledEvent {
+                ev: Event::new(4_000 + k, k as u16, 1, Polarity::On),
+                is_signal: true,
+            })
+            .collect();
+        m.ingest_batch(sid, &evs2).unwrap();
+        let (f2, stale2) = m.snapshot_with_status(sid, 5_000).unwrap();
+        assert!(stale2, "valid+dirty band must serve its cache under ServeStale");
+        assert_eq!(f2.as_slice(), f1.as_slice(), "stale frame is the previous render");
+        assert_eq!(m.stats().supervisor.stale_frames_served, 1);
+        m.shutdown();
+    }
+
+    #[test]
+    fn shed_tier_rejects_new_sessions() {
+        let mut sc = ServeConfig { workers: 1, ..ServeConfig::default() };
+        sc.supervisor.shed_pressure = 0;
+        let mut m = SessionManager::new(sc);
+        match m.open(session_cfg(Resolution::new(8, 8), 1_000)) {
+            Err(Reject::Overloaded { .. }) => {}
+            r => panic!("expected Overloaded, got {r:?}"),
+        }
+        let st = m.shutdown();
+        assert_eq!(st.supervisor.sessions_shed_overloaded, 1);
     }
 }

@@ -93,6 +93,54 @@ pub struct ServeStats {
     /// Network front-door counters (all zero when the fleet is driven
     /// in-process; filled by `serve::net::NetServer::stats`).
     pub net: NetStats,
+    /// Supervision counters: quarantines, respawns, degradation tiers,
+    /// checkpoints (see [`crate::serve::supervise`]).
+    pub supervisor: SupervisorStats,
+}
+
+/// Counters of the fleet supervision layer (`serve::supervise`): panic
+/// isolation, worker respawns, overload degradation tiers, and
+/// checkpoint/restore traffic. The chaos harness (`tests/fleet_chaos.rs`)
+/// asserts every injected scheduler fault lands in exactly one of these
+/// buckets — nothing a faulty job can do goes unaccounted.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SupervisorStats {
+    /// Sessions quarantined after a job panic (the panic was caught at
+    /// the supervision boundary; the worker and the rest of the fleet
+    /// kept running).
+    pub quarantines: u64,
+    /// Jobs whose body panicked (caught by `catch_boundary`; each one
+    /// quarantines its session, never poisons the pool).
+    pub worker_panics: u64,
+    /// Worker threads respawned by the supervisor after a death.
+    pub worker_respawns: u64,
+    /// True once the respawn budget was exhausted inside its window —
+    /// the fleet keeps serving on the surviving workers but is flagged.
+    pub fleet_degraded: bool,
+    /// Snapshot jobs that completed after their soft deadline.
+    pub deadline_misses: u64,
+    /// Degradation tier 1: provably event-free cold bands served as
+    /// zero fill instead of being scheduled (lossless).
+    pub deferred_cold_snapshots: u64,
+    /// Degradation tier 2: dirty bands served from their last rendered
+    /// cache, with the staleness marker set on the FRAME.
+    pub stale_frames_served: u64,
+    /// Degradation tier 3: new sessions shed at open under overload.
+    pub sessions_shed_overloaded: u64,
+    /// Checkpoints encoded (`SessionManager::checkpoint`).
+    pub checkpoints_taken: u64,
+    /// Restores refused by the CRC/fingerprint guard — corruption was
+    /// *detected*, never silently applied.
+    pub checkpoint_corruptions_detected: u64,
+    /// Restores applied (in place or migrated).
+    pub restores_completed: u64,
+    /// Faults injected by an armed [`crate::serve::supervise::SchedFaultPlan`]:
+    /// job panics.
+    pub injected_panics: u64,
+    /// Injected job stalls (deadline pressure).
+    pub injected_stalls: u64,
+    /// Injected checkpoint corruptions (must all be *detected*).
+    pub injected_checkpoint_corruptions: u64,
 }
 
 /// Counters of the TCP front door (`serve::net`): every accepted,

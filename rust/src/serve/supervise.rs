@@ -1,0 +1,985 @@
+//! Fleet supervision: panic isolation, session quarantine,
+//! checkpoint/restore, and deadline-aware overload degradation.
+//!
+//! The serve fleet runs arbitrary session workloads on shared worker
+//! threads; this module is the blast-radius containment around them.
+//! Four mechanisms, each with its own typed accounting in
+//! [`crate::serve::SupervisorStats`]:
+//!
+//! 1. **Panic isolation** — every scheduler job body runs under
+//!    [`crate::util::sync::catch_boundary`]. A panic quarantines *that
+//!    session* (a typed [`SessionFault`] lands on its [`FaultBoard`])
+//!    instead of poisoning the pool; the worker thread survives, and if
+//!    it ever does die the `util::actor` supervisor respawns it under a
+//!    [`crate::util::actor::RestartBudget`].
+//! 2. **Checkpoint/restore** — [`encode_checkpoint`] /
+//!    [`decode_checkpoint`] serialize per-band session state (writer
+//!    stamps + scorer backend stamps + tallies) into a compact,
+//!    versioned, CRC-guarded blob. Stamps replay through the
+//!    position-stable mismatch assignment
+//!    ([`crate::isc::param_index_at`]), so a restored band renders
+//!    bit-for-bit identically to one that never crashed.
+//! 3. **Deadline-aware degradation** — [`SupervisorConfig`] maps a
+//!    fleet [`pressure`] signal (queue depth × resident footprint) to a
+//!    [`DegradeTier`]: defer provably event-free cold-band renders,
+//!    then serve stale dirty-band caches (marked on the FRAME wire),
+//!    then shed new sessions.
+//! 4. **Fault injection** — [`SchedFaultPlan`] extends the seeded
+//!    injector pattern of [`crate::serve::net::faults`] to
+//!    scheduler-level fault points (panic / stall / checkpoint
+//!    corruption), driving `tests/fleet_chaos.rs`.
+
+use crate::coordinator::PipelineConfig;
+use crate::denoise::ShardTally;
+use crate::events::Resolution;
+use crate::serve::net::frame::crc32;
+use crate::serve::stats::SupervisorStats;
+use crate::util::rng::Pcg64;
+use crate::util::sync::{AtomicU64, Mutex, Ordering};
+
+pub use crate::util::actor::SupervisionConfig;
+
+// ---------------------------------------------------------------------------
+// Quarantine: typed session faults
+// ---------------------------------------------------------------------------
+
+/// Which scheduler job kind a fault occurred in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultJobKind {
+    /// A write batch headed for a band writer.
+    Write,
+    /// A shard-scoring job on a scorer band.
+    Score,
+    /// An on-demand or window frame render.
+    Snapshot,
+    /// Final band close/accounting.
+    Close,
+    /// Band state export for a checkpoint.
+    Checkpoint,
+    /// Band state install during a restore.
+    Restore,
+}
+
+impl FaultJobKind {
+    /// Stable lowercase label (used in fault details and NACK reasons).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultJobKind::Write => "write",
+            FaultJobKind::Score => "score",
+            FaultJobKind::Snapshot => "snapshot",
+            FaultJobKind::Close => "close",
+            FaultJobKind::Checkpoint => "checkpoint",
+            FaultJobKind::Restore => "restore",
+        }
+    }
+}
+
+/// One caught job panic, attributed to the session that owned the job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionFault {
+    /// Band index the job was bound to.
+    pub band: u16,
+    /// Job kind that panicked.
+    pub job: FaultJobKind,
+    /// Panic payload summary (from `catch_boundary`).
+    pub detail: String,
+}
+
+impl std::fmt::Display for SessionFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} job panicked on band {}: {}", self.job.name(), self.band, self.detail)
+    }
+}
+
+/// Per-session quarantine flag plus the faults that raised it.
+///
+/// Workers [`file`](FaultBoard::file) faults as they catch panics; the
+/// session front door checks [`is_quarantined`](FaultBoard::is_quarantined)
+/// on every ingest/snapshot and refuses with
+/// `Reject::Quarantined` until a restore [`clear`](FaultBoard::clear)s
+/// the board. The count is an atomic so the hot ingest path never takes
+/// the fault-list lock.
+#[derive(Debug, Default)]
+pub struct FaultBoard {
+    count: AtomicU64,
+    faults: Mutex<Vec<SessionFault>>,
+}
+
+impl FaultBoard {
+    /// Empty board (healthy session).
+    pub fn new() -> Self {
+        FaultBoard { count: AtomicU64::new(0), faults: Mutex::new(Vec::new()) }
+    }
+
+    /// Record a fault and quarantine the session. Returns the number of
+    /// faults filed *before* this one (0 ⇔ this fault is the quarantine
+    /// transition), so callers can count sessions rather than faults.
+    pub fn file(&self, fault: SessionFault) -> u64 {
+        self.faults.lock().expect("fault board lock").push(fault);
+        self.count.fetch_add(1, Ordering::AcqRel)
+    }
+
+    /// Faults filed since the last [`clear`](FaultBoard::clear).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Acquire)
+    }
+
+    /// True once any fault is filed.
+    pub fn is_quarantined(&self) -> bool {
+        self.count() > 0
+    }
+
+    /// Snapshot the filed faults (most recent last).
+    pub fn faults(&self) -> Vec<SessionFault> {
+        self.faults.lock().expect("fault board lock").clone()
+    }
+
+    /// Lift the quarantine (a successful restore replaces the state the
+    /// faults referred to).
+    pub fn clear(&self) {
+        self.faults.lock().expect("fault board lock").clear();
+        self.count.store(0, Ordering::Release);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler-level fault injection (chaos harness)
+// ---------------------------------------------------------------------------
+
+/// Scheduler fault classes the chaos harness can inject. Mirrors the
+/// wire-level [`crate::serve::net::faults::FaultKind`] pattern: each
+/// kind owns a PCG stream so plans are independent *and* reproducible
+/// per `(seed, kind)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedFaultKind {
+    /// Panic inside a job body (must quarantine, never poison).
+    JobPanic,
+    /// Stall a job past the soft deadline (must count a miss, not hang
+    /// the fleet).
+    JobStall,
+    /// Flip one bit of an encoded checkpoint (must be *detected* by the
+    /// CRC guard, never silently restored).
+    CheckpointCorrupt,
+}
+
+impl SchedFaultKind {
+    /// All injectable kinds, for exhaustive chaos sweeps.
+    pub const ALL: [SchedFaultKind; 3] =
+        [SchedFaultKind::JobPanic, SchedFaultKind::JobStall, SchedFaultKind::CheckpointCorrupt];
+
+    /// Dedicated PCG stream per kind (0xfb.. block; the net injector
+    /// owns 0xfa..) so per-kind plans never correlate.
+    pub fn stream_key(self) -> u64 {
+        match self {
+            SchedFaultKind::JobPanic => 0xfb01,
+            SchedFaultKind::JobStall => 0xfb02,
+            SchedFaultKind::CheckpointCorrupt => 0xfb03,
+        }
+    }
+}
+
+/// A concrete, seed-derived plan for one injected fault: *which* job
+/// ordinal it fires on and how (reproducible from `(kind, seed)` — the
+/// chaos test prints the seed so any failure replays exactly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SchedFaultPlan {
+    /// Fault class.
+    pub kind: SchedFaultKind,
+    /// 1-based job ordinal (per session) the fault fires on.
+    pub fire_on_job: u64,
+    /// Stall length for [`SchedFaultKind::JobStall`], milliseconds.
+    pub stall_ms: u64,
+    /// Salt for the corruption bit position
+    /// ([`SchedFaultKind::CheckpointCorrupt`]).
+    pub corrupt_salt: u64,
+}
+
+impl SchedFaultPlan {
+    /// Derive a plan from `(kind, seed)` on the kind's own PCG stream.
+    pub fn from_seed(kind: SchedFaultKind, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, kind.stream_key());
+        SchedFaultPlan {
+            kind,
+            fire_on_job: rng.range_u64(1, 5),
+            stall_ms: rng.range_u64(2, 15),
+            corrupt_salt: rng.next_u64(),
+        }
+    }
+}
+
+/// An installed fault plan, armed on one session. Fires **at most
+/// once**; every firing is counted in [`SupervisorCounters`] before the
+/// fault manifests, so the chaos harness can equate injected count with
+/// observed typed outcomes.
+#[derive(Debug)]
+pub struct ArmedFault {
+    plan: SchedFaultPlan,
+    jobs_seen: AtomicU64,
+    fired: AtomicU64,
+}
+
+impl ArmedFault {
+    /// Arm a plan.
+    pub fn new(plan: SchedFaultPlan) -> Self {
+        ArmedFault { plan, jobs_seen: AtomicU64::new(0), fired: AtomicU64::new(0) }
+    }
+
+    /// The armed plan.
+    pub fn plan(&self) -> SchedFaultPlan {
+        self.plan
+    }
+
+    /// True once the fault has manifested.
+    pub fn has_fired(&self) -> bool {
+        self.fired.load(Ordering::Acquire) != 0
+    }
+
+    /// Scheduler hook, called before each job body **inside** the
+    /// supervision boundary. [`SchedFaultKind::JobPanic`] plans panic
+    /// here on purpose — this is the one sanctioned panic site on the
+    /// worker path, which is why the `panic-boundary` lint bans `panic!`
+    /// from the scheduler job bodies themselves.
+    pub fn before_job(&self, counters: &SupervisorCounters) {
+        if self.plan.kind == SchedFaultKind::CheckpointCorrupt {
+            return;
+        }
+        let n = self.jobs_seen.fetch_add(1, Ordering::AcqRel) + 1;
+        if n != self.plan.fire_on_job || self.fired.swap(1, Ordering::AcqRel) != 0 {
+            return;
+        }
+        match self.plan.kind {
+            SchedFaultKind::JobPanic => {
+                counters.injected_panics.fetch_add(1, Ordering::Relaxed);
+                panic!("injected fault: job panic on job #{n}");
+            }
+            SchedFaultKind::JobStall => {
+                counters.injected_stalls.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(std::time::Duration::from_millis(self.plan.stall_ms));
+            }
+            SchedFaultKind::CheckpointCorrupt => {}
+        }
+    }
+
+    /// Checkpoint hook: flip one seeded bit of `bytes`. Returns whether
+    /// a corruption was applied (at most once per armed fault). The
+    /// decoder's CRC guard must turn every applied corruption into a
+    /// typed [`CheckpointError::CrcMismatch`].
+    pub fn corrupt_checkpoint(&self, bytes: &mut [u8], counters: &SupervisorCounters) -> bool {
+        if self.plan.kind != SchedFaultKind::CheckpointCorrupt || bytes.is_empty() {
+            return false;
+        }
+        if self.fired.swap(1, Ordering::AcqRel) != 0 {
+            return false;
+        }
+        let mut rng = Pcg64::with_stream(self.plan.corrupt_salt, self.plan.kind.stream_key());
+        let i = rng.below(bytes.len() as u64) as usize;
+        let bit = rng.below(8) as u32;
+        bytes[i] ^= 1u8 << bit;
+        counters.injected_checkpoint_corruptions.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Supervision counters and config
+// ---------------------------------------------------------------------------
+
+/// Shared atomic counters behind [`SupervisorStats`]. One instance per
+/// [`crate::serve::SessionManager`], updated lock-free from workers and
+/// the session front door.
+#[derive(Debug)]
+pub struct SupervisorCounters {
+    pub(crate) quarantines: AtomicU64,
+    pub(crate) job_panics: AtomicU64,
+    pub(crate) deadline_misses: AtomicU64,
+    pub(crate) deferred_cold_snapshots: AtomicU64,
+    pub(crate) stale_frames_served: AtomicU64,
+    pub(crate) sessions_shed_overloaded: AtomicU64,
+    pub(crate) checkpoints_taken: AtomicU64,
+    pub(crate) checkpoint_corruptions_detected: AtomicU64,
+    pub(crate) restores_completed: AtomicU64,
+    pub(crate) injected_panics: AtomicU64,
+    pub(crate) injected_stalls: AtomicU64,
+    pub(crate) injected_checkpoint_corruptions: AtomicU64,
+}
+
+impl SupervisorCounters {
+    /// All-zero counters. (Explicit rather than `derive(Default)`: the
+    /// loom atomics behind `util::sync` don't implement `Default`.)
+    pub fn new() -> Self {
+        SupervisorCounters {
+            quarantines: AtomicU64::new(0),
+            job_panics: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+            deferred_cold_snapshots: AtomicU64::new(0),
+            stale_frames_served: AtomicU64::new(0),
+            sessions_shed_overloaded: AtomicU64::new(0),
+            checkpoints_taken: AtomicU64::new(0),
+            checkpoint_corruptions_detected: AtomicU64::new(0),
+            restores_completed: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_stalls: AtomicU64::new(0),
+            injected_checkpoint_corruptions: AtomicU64::new(0),
+        }
+    }
+
+    /// Materialize the stats struct, merging in the pool-owned numbers.
+    /// `escaped_panics` counts panics that got past the job-body
+    /// boundary to the worker loop (scheduler bugs — normally 0); the
+    /// job-body catches themselves are tracked here and summed in.
+    pub fn snapshot(
+        &self,
+        escaped_panics: u64,
+        worker_respawns: u64,
+        fleet_degraded: bool,
+    ) -> SupervisorStats {
+        SupervisorStats {
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            worker_panics: escaped_panics + self.job_panics.load(Ordering::Relaxed),
+            worker_respawns,
+            fleet_degraded,
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            deferred_cold_snapshots: self.deferred_cold_snapshots.load(Ordering::Relaxed),
+            stale_frames_served: self.stale_frames_served.load(Ordering::Relaxed),
+            sessions_shed_overloaded: self.sessions_shed_overloaded.load(Ordering::Relaxed),
+            checkpoints_taken: self.checkpoints_taken.load(Ordering::Relaxed),
+            checkpoint_corruptions_detected: self
+                .checkpoint_corruptions_detected
+                .load(Ordering::Relaxed),
+            restores_completed: self.restores_completed.load(Ordering::Relaxed),
+            injected_panics: self.injected_panics.load(Ordering::Relaxed),
+            injected_stalls: self.injected_stalls.load(Ordering::Relaxed),
+            injected_checkpoint_corruptions: self
+                .injected_checkpoint_corruptions
+                .load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for SupervisorCounters {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Overload tiers, in escalation order. Each tier includes every tier
+/// below it (ordering is meaningful: `tier >= ServeStale` ⇒ stale
+/// service is permitted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeTier {
+    /// No degradation: every snapshot renders exactly.
+    Nominal,
+    /// Defer cold-band renders: provably event-free bands are served as
+    /// zero fill without scheduling a job (lossless — an event-free
+    /// band renders to zeros anyway).
+    DeferCold,
+    /// Serve dirty bands from their last rendered cache, marking the
+    /// FRAME stale instead of queueing renders the fleet can't absorb.
+    ServeStale,
+    /// Shed new sessions at open (`Reject::Overloaded`).
+    Shed,
+}
+
+/// Fleet supervision policy: worker respawn budget, snapshot soft
+/// deadline, and the pressure thresholds of each [`DegradeTier`].
+///
+/// Defaults never degrade (`u64::MAX` thresholds) so existing exactness
+/// tests and benches are unaffected unless a deployment opts in.
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// Worker respawn budget (see [`SupervisionConfig`]).
+    pub supervision: SupervisionConfig,
+    /// Soft per-snapshot deadline, µs; jobs finishing later count a
+    /// [`SupervisorStats::deadline_misses`]. Never aborts work.
+    pub snapshot_deadline_us: u64,
+    /// Pressure at or above which cold-band renders are deferred.
+    pub defer_cold_pressure: u64,
+    /// Pressure at or above which dirty bands serve stale caches.
+    pub serve_stale_pressure: u64,
+    /// Pressure at or above which new sessions are shed.
+    pub shed_pressure: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            supervision: SupervisionConfig::default(),
+            snapshot_deadline_us: 5_000_000,
+            defer_cold_pressure: u64::MAX,
+            serve_stale_pressure: u64::MAX,
+            shed_pressure: u64::MAX,
+        }
+    }
+}
+
+impl SupervisorConfig {
+    /// Map a [`pressure`] reading to the active degradation tier.
+    pub fn tier_for(&self, pressure: u64) -> DegradeTier {
+        if pressure >= self.shed_pressure {
+            DegradeTier::Shed
+        } else if pressure >= self.serve_stale_pressure {
+            DegradeTier::ServeStale
+        } else if pressure >= self.defer_cold_pressure {
+            DegradeTier::DeferCold
+        } else {
+            DegradeTier::Nominal
+        }
+    }
+}
+
+/// Fleet pressure signal: ready-queue depth scaled by the resident
+/// footprint in MiB (+1 so depth alone still registers). Monotone in
+/// both inputs; unitless.
+pub fn pressure(ready_depth: usize, resident_bytes: usize) -> u64 {
+    (ready_depth as u64).saturating_mul(1 + (resident_bytes >> 20) as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint codec
+// ---------------------------------------------------------------------------
+
+/// Checkpoint magic bytes.
+pub const CHECKPOINT_MAGIC: [u8; 8] = *b"TSISCCKP";
+/// Checkpoint format version. Bump on any layout change; the decoder
+/// refuses unknown versions with a typed error instead of misparsing.
+pub const CHECKPOINT_VERSION: u16 = 1;
+
+/// One band's serialized state. Stamps are `(plane, x, y, t_write)` in
+/// band-local coordinates — exactly what
+/// `BandWriter::export_state` / `BandScorer::export_state` walk and what
+/// their `restore_state` replays through the position-stable mismatch
+/// assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BandCheckpoint {
+    /// A write band: event count + array stamps.
+    Writer {
+        /// Band index.
+        band: u16,
+        /// Events processed (accounting restored verbatim).
+        processed: u64,
+        /// Nonzero `t_write` stamps.
+        stamps: Vec<(u8, u16, u16, u64)>,
+    },
+    /// A scorer band: denoise tally + backend stamps (band + halo).
+    Scorer {
+        /// Band index.
+        band: u16,
+        /// Keep/drop accounting restored verbatim.
+        tally: ShardTally,
+        /// Nonzero backend stamps.
+        stamps: Vec<(u8, u16, u16, u64)>,
+    },
+}
+
+impl BandCheckpoint {
+    /// Band index this checkpoint belongs to.
+    pub fn band(&self) -> u16 {
+        match self {
+            BandCheckpoint::Writer { band, .. } | BandCheckpoint::Scorer { band, .. } => *band,
+        }
+    }
+}
+
+/// A whole session's serialized state: a config fingerprint guard, the
+/// session window clock and counter block, and every band.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionCheckpoint {
+    /// [`config_fingerprint`] of the session the checkpoint came from.
+    /// Restore refuses a mismatch — replaying stamps into a differently
+    /// shaped pipeline would silently produce wrong frames.
+    pub fingerprint: u64,
+    /// Session window clock (`next_frame`).
+    pub next_frame: u64,
+    /// Opaque session counter block (order owned by `serve::session`).
+    pub counters: Vec<u64>,
+    /// Per-band states.
+    pub bands: Vec<BandCheckpoint>,
+}
+
+/// Typed checkpoint decode/verify failures. Every way a blob can be
+/// wrong is a variant — corruption is *detected*, never applied.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// Blob shorter than the fixed header + trailer.
+    TooShort,
+    /// Magic bytes are not `TSISCCKP`.
+    BadMagic,
+    /// Unknown format version.
+    BadVersion(u16),
+    /// Trailing CRC-32 does not match the body.
+    CrcMismatch,
+    /// Body ended mid-field.
+    Truncated,
+    /// Unknown band-kind tag.
+    BadBandKind(u8),
+    /// Fingerprint does not match the restoring session's config.
+    ConfigMismatch {
+        /// Fingerprint the restoring session computed.
+        expected: u64,
+        /// Fingerprint stored in the checkpoint.
+        found: u64,
+    },
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::TooShort => write!(f, "checkpoint too short for header + CRC"),
+            CheckpointError::BadMagic => write!(f, "checkpoint magic mismatch"),
+            CheckpointError::BadVersion(v) => write!(f, "unknown checkpoint version {v}"),
+            CheckpointError::CrcMismatch => write!(f, "checkpoint CRC mismatch (corrupt blob)"),
+            CheckpointError::Truncated => write!(f, "checkpoint body truncated mid-field"),
+            CheckpointError::BadBandKind(k) => write!(f, "unknown band checkpoint kind {k}"),
+            CheckpointError::ConfigMismatch { expected, found } => write!(
+                f,
+                "checkpoint config fingerprint {found:#018x} does not match session {expected:#018x}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+/// FNV-1a fingerprint of the session shape (pipeline config + geometry
+/// + end time). Two sessions share a fingerprint iff their checkpoints
+/// are interchangeable.
+pub fn config_fingerprint(cfg: &PipelineConfig, res: Resolution, t_end_us: u64) -> u64 {
+    let canon = format!("{cfg:?}|{res:?}|{t_end_us}");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in canon.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn push_stamps(out: &mut Vec<u8>, stamps: &[(u8, u16, u16, u64)]) {
+    out.extend_from_slice(&(stamps.len() as u32).to_le_bytes());
+    for &(plane, x, y, t) in stamps {
+        out.push(plane);
+        out.extend_from_slice(&x.to_le_bytes());
+        out.extend_from_slice(&y.to_le_bytes());
+        out.extend_from_slice(&t.to_le_bytes());
+    }
+}
+
+/// Serialize a [`SessionCheckpoint`]: magic, version, fingerprint,
+/// clock, counters, bands, then a trailing CRC-32 over everything
+/// before it (same polynomial as the wire frames —
+/// [`crate::serve::net::frame::crc32`]).
+pub fn encode_checkpoint(ck: &SessionCheckpoint) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&CHECKPOINT_MAGIC);
+    out.extend_from_slice(&CHECKPOINT_VERSION.to_le_bytes());
+    out.extend_from_slice(&ck.fingerprint.to_le_bytes());
+    out.extend_from_slice(&ck.next_frame.to_le_bytes());
+    out.extend_from_slice(&(ck.counters.len() as u16).to_le_bytes());
+    for c in &ck.counters {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out.extend_from_slice(&(ck.bands.len() as u16).to_le_bytes());
+    for b in &ck.bands {
+        match b {
+            BandCheckpoint::Writer { band, processed, stamps } => {
+                out.push(0);
+                out.extend_from_slice(&band.to_le_bytes());
+                out.extend_from_slice(&processed.to_le_bytes());
+                push_stamps(&mut out, stamps);
+            }
+            BandCheckpoint::Scorer { band, tally, stamps } => {
+                out.push(1);
+                out.extend_from_slice(&band.to_le_bytes());
+                for v in [tally.scored, tally.kept, tally.dropped, tally.halo_ingests] {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+                push_stamps(&mut out, stamps);
+            }
+        }
+    }
+    let crc = crc32(&out);
+    out.extend_from_slice(&crc.to_le_bytes());
+    out
+}
+
+/// Panic-free little-endian cursor over a checkpoint body.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.pos + n > self.b.len() {
+            return Err(CheckpointError::Truncated);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, CheckpointError> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn stamps(&mut self) -> Result<Vec<(u8, u16, u16, u64)>, CheckpointError> {
+        let n = self.u32()? as usize;
+        // Each stamp is 13 encoded bytes; bound before allocating so a
+        // corrupt length can't balloon memory (the CRC already passed,
+        // but defense in depth is free here).
+        if n * 13 > self.b.len() - self.pos {
+            return Err(CheckpointError::Truncated);
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            let plane = self.u8()?;
+            let x = self.u16()?;
+            let y = self.u16()?;
+            let t = self.u64()?;
+            v.push((plane, x, y, t));
+        }
+        Ok(v)
+    }
+}
+
+/// Parse and CRC-verify a checkpoint blob. Succeeds only on a blob
+/// [`encode_checkpoint`] produced, bit-for-bit; any corruption lands in
+/// a typed [`CheckpointError`].
+pub fn decode_checkpoint(bytes: &[u8]) -> Result<SessionCheckpoint, CheckpointError> {
+    // magic(8) + version(2) + fingerprint(8) + clock(8) + counter
+    // count(2) + band count(2) + crc(4)
+    if bytes.len() < 34 {
+        return Err(CheckpointError::TooShort);
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+    if crc32(body) != stored {
+        return Err(CheckpointError::CrcMismatch);
+    }
+    let mut r = Rd { b: body, pos: 0 };
+    if r.take(8)? != CHECKPOINT_MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let version = r.u16()?;
+    if version != CHECKPOINT_VERSION {
+        return Err(CheckpointError::BadVersion(version));
+    }
+    let fingerprint = r.u64()?;
+    let next_frame = r.u64()?;
+    let n_counters = r.u16()? as usize;
+    let mut counters = Vec::with_capacity(n_counters);
+    for _ in 0..n_counters {
+        counters.push(r.u64()?);
+    }
+    let n_bands = r.u16()? as usize;
+    let mut bands = Vec::with_capacity(n_bands);
+    for _ in 0..n_bands {
+        let kind = r.u8()?;
+        let band = r.u16()?;
+        match kind {
+            0 => {
+                let processed = r.u64()?;
+                let stamps = r.stamps()?;
+                bands.push(BandCheckpoint::Writer { band, processed, stamps });
+            }
+            1 => {
+                let tally = ShardTally {
+                    scored: r.u64()?,
+                    kept: r.u64()?,
+                    dropped: r.u64()?,
+                    halo_ingests: r.u64()?,
+                };
+                let stamps = r.stamps()?;
+                bands.push(BandCheckpoint::Scorer { band, tally, stamps });
+            }
+            k => return Err(CheckpointError::BadBandKind(k)),
+        }
+    }
+    if r.pos != body.len() {
+        // Trailing garbage would have broken the CRC, but a hand-built
+        // blob could pad consistently; refuse it anyway.
+        return Err(CheckpointError::Truncated);
+    }
+    Ok(SessionCheckpoint { fingerprint, next_frame, counters, bands })
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint() -> SessionCheckpoint {
+        SessionCheckpoint {
+            fingerprint: 0xdead_beef_cafe_f00d,
+            next_frame: 150_000,
+            counters: vec![7, 0, 42, u64::MAX, 3],
+            bands: vec![
+                BandCheckpoint::Writer {
+                    band: 0,
+                    processed: 11,
+                    stamps: vec![(0, 3, 1, 100), (1, 5, 2, 250)],
+                },
+                BandCheckpoint::Writer { band: 1, processed: 0, stamps: vec![] },
+                BandCheckpoint::Scorer {
+                    band: 2,
+                    tally: ShardTally { scored: 9, kept: 6, dropped: 3, halo_ingests: 2 },
+                    stamps: vec![(0, 0, 0, 1), (1, 319, 239, 999_999)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_exact() {
+        let ck = sample_checkpoint();
+        let bytes = encode_checkpoint(&ck);
+        assert_eq!(decode_checkpoint(&bytes).expect("roundtrip"), ck);
+    }
+
+    #[test]
+    fn every_single_bit_flip_is_detected() {
+        // The round-trip law's dual: no single-bit corruption anywhere
+        // in the blob decodes successfully (CRC catches body flips, and
+        // CRC-field flips mismatch the body).
+        let bytes = encode_checkpoint(&sample_checkpoint());
+        for i in 0..bytes.len() {
+            for bit in 0..8 {
+                let mut bad = bytes.clone();
+                bad[i] ^= 1 << bit;
+                assert!(
+                    decode_checkpoint(&bad).is_err(),
+                    "flip of byte {i} bit {bit} went undetected"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn typed_errors_for_magic_version_and_truncation() {
+        let ck = sample_checkpoint();
+        let good = encode_checkpoint(&ck);
+
+        assert_eq!(decode_checkpoint(&[1, 2, 3]), Err(CheckpointError::TooShort));
+
+        // Re-CRC after tampering so the specific typed error (not
+        // CrcMismatch) is reachable.
+        let recrc = |mut body: Vec<u8>| {
+            body.truncate(body.len() - 4);
+            let crc = crc32(&body);
+            body.extend_from_slice(&crc.to_le_bytes());
+            body
+        };
+
+        let mut bad_magic = good.clone();
+        bad_magic[0] = b'X';
+        assert_eq!(decode_checkpoint(&recrc(bad_magic)), Err(CheckpointError::BadMagic));
+
+        let mut bad_version = good.clone();
+        bad_version[8] = 99;
+        assert_eq!(decode_checkpoint(&recrc(bad_version)), Err(CheckpointError::BadVersion(99)));
+
+        // Truncate mid-body and re-CRC: Truncated, not CrcMismatch.
+        let mut cut = good.clone();
+        cut.truncate(good.len() - 20);
+        let cut = recrc(cut);
+        assert_eq!(decode_checkpoint(&cut), Err(CheckpointError::Truncated));
+    }
+
+    #[test]
+    fn fingerprint_separates_configs_and_is_stable() {
+        let res = Resolution::new(64, 48);
+        let a = PipelineConfig::default();
+        let mut b = PipelineConfig::default();
+        b.window_us += 1;
+        assert_eq!(config_fingerprint(&a, res, 1000), config_fingerprint(&a, res, 1000));
+        assert_ne!(config_fingerprint(&a, res, 1000), config_fingerprint(&b, res, 1000));
+        assert_ne!(config_fingerprint(&a, res, 1000), config_fingerprint(&a, res, 2000));
+        assert_ne!(
+            config_fingerprint(&a, res, 1000),
+            config_fingerprint(&a, Resolution::new(48, 64), 1000)
+        );
+    }
+
+    #[test]
+    fn fault_plans_are_deterministic_per_seed_and_kind() {
+        // Mirrors `net::faults::injector_is_deterministic_per_seed_and_kind`.
+        for kind in SchedFaultKind::ALL {
+            let a = SchedFaultPlan::from_seed(kind, 0xC4A0_5EED);
+            let b = SchedFaultPlan::from_seed(kind, 0xC4A0_5EED);
+            assert_eq!(a, b, "same (seed, kind) must replay the same plan");
+            let c = SchedFaultPlan::from_seed(kind, 0xC4A0_5EEE);
+            assert!(a.fire_on_job >= 1, "ordinals are 1-based");
+            // Different seeds may rarely collide on one field, but the
+            // whole plan (incl. 64-bit salt) must differ.
+            assert_ne!(a, c, "different seeds must differ");
+        }
+        // Distinct kinds draw from distinct streams.
+        let p = SchedFaultPlan::from_seed(SchedFaultKind::JobPanic, 7);
+        let s = SchedFaultPlan::from_seed(SchedFaultKind::JobStall, 7);
+        assert_ne!(p.corrupt_salt, s.corrupt_salt);
+    }
+
+    #[test]
+    fn armed_panic_fires_exactly_once_on_its_ordinal() {
+        let plan = SchedFaultPlan {
+            kind: SchedFaultKind::JobPanic,
+            fire_on_job: 3,
+            stall_ms: 0,
+            corrupt_salt: 0,
+        };
+        let armed = ArmedFault::new(plan);
+        let counters = SupervisorCounters::new();
+        for n in 1..=5u64 {
+            let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                armed.before_job(&counters)
+            }))
+            .is_err();
+            assert_eq!(hit, n == 3, "job #{n}");
+        }
+        assert!(armed.has_fired());
+        assert_eq!(counters.snapshot(0, 0, false).injected_panics, 1);
+    }
+
+    #[test]
+    fn armed_stall_counts_once_and_never_panics() {
+        let plan = SchedFaultPlan {
+            kind: SchedFaultKind::JobStall,
+            fire_on_job: 1,
+            stall_ms: 1,
+            corrupt_salt: 0,
+        };
+        let armed = ArmedFault::new(plan);
+        let counters = SupervisorCounters::new();
+        for _ in 0..4 {
+            armed.before_job(&counters);
+        }
+        assert_eq!(counters.snapshot(0, 0, false).injected_stalls, 1);
+    }
+
+    #[test]
+    fn corruption_flips_one_bit_and_decode_detects_it() {
+        let plan = SchedFaultPlan::from_seed(SchedFaultKind::CheckpointCorrupt, 42);
+        let armed = ArmedFault::new(plan);
+        let counters = SupervisorCounters::new();
+        // before_job is inert for corruption plans.
+        armed.before_job(&counters);
+        assert!(!armed.has_fired());
+
+        let good = encode_checkpoint(&sample_checkpoint());
+        let mut bad = good.clone();
+        assert!(armed.corrupt_checkpoint(&mut bad, &counters));
+        let diff: u32 =
+            good.iter().zip(&bad).map(|(a, b)| (a ^ b).count_ones()).sum();
+        assert_eq!(diff, 1, "exactly one bit flipped");
+        assert_eq!(decode_checkpoint(&bad), Err(CheckpointError::CrcMismatch));
+        // At most once.
+        let mut again = good.clone();
+        assert!(!armed.corrupt_checkpoint(&mut again, &counters));
+        assert_eq!(again, good);
+        assert_eq!(counters.snapshot(0, 0, false).injected_checkpoint_corruptions, 1);
+    }
+
+    #[test]
+    fn fault_board_files_counts_and_clears() {
+        let board = FaultBoard::new();
+        assert!(!board.is_quarantined());
+        board.file(SessionFault {
+            band: 2,
+            job: FaultJobKind::Write,
+            detail: "injected".into(),
+        });
+        board.file(SessionFault {
+            band: 3,
+            job: FaultJobKind::Snapshot,
+            detail: "boom".into(),
+        });
+        assert!(board.is_quarantined());
+        assert_eq!(board.count(), 2);
+        let faults = board.faults();
+        assert_eq!(faults.len(), 2);
+        assert_eq!(faults[0].job, FaultJobKind::Write);
+        assert!(faults[1].to_string().contains("snapshot job panicked on band 3"));
+        board.clear();
+        assert!(!board.is_quarantined());
+        assert!(board.faults().is_empty());
+    }
+
+    #[test]
+    fn degrade_tiers_escalate_with_pressure() {
+        let cfg = SupervisorConfig {
+            defer_cold_pressure: 10,
+            serve_stale_pressure: 100,
+            shed_pressure: 1000,
+            ..SupervisorConfig::default()
+        };
+        assert_eq!(cfg.tier_for(0), DegradeTier::Nominal);
+        assert_eq!(cfg.tier_for(9), DegradeTier::Nominal);
+        assert_eq!(cfg.tier_for(10), DegradeTier::DeferCold);
+        assert_eq!(cfg.tier_for(100), DegradeTier::ServeStale);
+        assert_eq!(cfg.tier_for(5000), DegradeTier::Shed);
+        assert!(DegradeTier::Shed > DegradeTier::ServeStale);
+        assert!(DegradeTier::ServeStale > DegradeTier::DeferCold);
+        assert!(DegradeTier::DeferCold > DegradeTier::Nominal);
+        // Defaults never degrade.
+        let dflt = SupervisorConfig::default();
+        assert_eq!(dflt.tier_for(u64::MAX - 1), DegradeTier::Nominal);
+    }
+
+    #[test]
+    fn pressure_is_monotone_and_overflow_safe() {
+        assert_eq!(pressure(0, 0), 0);
+        assert_eq!(pressure(4, 0), 4);
+        assert_eq!(pressure(4, 3 << 20), 16);
+        assert!(pressure(7, 1 << 30) > pressure(7, 1 << 20));
+        let _ = pressure(usize::MAX, usize::MAX); // saturates, no panic
+    }
+
+    #[test]
+    fn counters_snapshot_maps_every_field() {
+        let c = SupervisorCounters::new();
+        c.quarantines.fetch_add(1, Ordering::Relaxed);
+        c.deadline_misses.fetch_add(2, Ordering::Relaxed);
+        c.deferred_cold_snapshots.fetch_add(3, Ordering::Relaxed);
+        c.stale_frames_served.fetch_add(4, Ordering::Relaxed);
+        c.sessions_shed_overloaded.fetch_add(5, Ordering::Relaxed);
+        c.checkpoints_taken.fetch_add(6, Ordering::Relaxed);
+        c.checkpoint_corruptions_detected.fetch_add(7, Ordering::Relaxed);
+        c.restores_completed.fetch_add(8, Ordering::Relaxed);
+        c.injected_panics.fetch_add(9, Ordering::Relaxed);
+        c.injected_stalls.fetch_add(10, Ordering::Relaxed);
+        c.injected_checkpoint_corruptions.fetch_add(11, Ordering::Relaxed);
+        let s = c.snapshot(20, 21, true);
+        assert_eq!(
+            s,
+            SupervisorStats {
+                quarantines: 1,
+                worker_panics: 20,
+                worker_respawns: 21,
+                fleet_degraded: true,
+                deadline_misses: 2,
+                deferred_cold_snapshots: 3,
+                stale_frames_served: 4,
+                sessions_shed_overloaded: 5,
+                checkpoints_taken: 6,
+                checkpoint_corruptions_detected: 7,
+                restores_completed: 8,
+                injected_panics: 9,
+                injected_stalls: 10,
+                injected_checkpoint_corruptions: 11,
+            }
+        );
+    }
+}

@@ -111,6 +111,21 @@ impl Sae {
             + self.recency.as_ref().map_or(0, |rp| rp.approx_bytes())
     }
 
+    /// Visit every written stamp as `f(x, y, t)` in row-major order —
+    /// the checkpoint export walk of `serve::supervise`. Replaying the
+    /// stamps as synthetic events through [`EventSink::ingest`] in
+    /// ascending-`t` order rebuilds the timestamp plane, the active set
+    /// and the recency bitmask exactly (stamps are already `max(1)`-
+    /// clamped on write, so replay is a fixed point).
+    pub fn for_each_stamp(&self, mut f: impl FnMut(u16, u16, u64)) {
+        let w = self.res.width as usize;
+        for (i, &t) in self.t.iter().enumerate() {
+            if t != 0 {
+                f((i % w) as u16, (i / w) as u16, t);
+            }
+        }
+    }
+
     /// Dense reference readout: the full-H·W scan `frame_into` is proven
     /// bit-for-bit equivalent to (see `tests/readout_equiv.rs`).
     pub fn frame_dense_into(&self, out: &mut Grid<f64>, _t_us: u64) {

@@ -28,8 +28,27 @@
 //!
 //! The runner executes with the actor's slot checked out of the actor
 //! lock, so producers enqueue without ever blocking on job execution.
+//!
+//! ## Panic isolation and supervision
+//!
+//! Every runner invocation goes through
+//! [`catch_boundary`](crate::util::sync::catch_boundary): a panicking
+//! job is counted ([`ActorPool::jobs_panicked`]) and the worker puts
+//! the slot back, clears or requeues the `scheduled` flag, and keeps
+//! serving — a panic can never leak the slot or wedge the actor's
+//! FIFO (the historical failure mode: a lost `scheduled` flag starved
+//! that actor forever and `shutdown` then panicked on the dead
+//! worker's join handle). Workers that die anyway (a panic outside
+//! the boundary, e.g. pool-lock poisoning) file a report on the
+//! [`DeathBoard`] via an armed drop guard; a pool built with
+//! [`ActorPool::with_supervision`] runs a supervisor thread that
+//! respawns dead workers within a [`RestartBudget`] and raises the
+//! fleet-level [`ActorPool::degraded`] flag once the budget is spent.
+//! The board also accepts external reports, which is how the respawn
+//! path stays testable in a world where the boundary makes organic
+//! worker death nearly impossible.
 
-use crate::util::sync::{thread, Arc, AtomicU64, Condvar, Mutex, Ordering};
+use crate::util::sync::{catch_boundary, thread, Arc, AtomicU64, Condvar, Mutex, Ordering};
 use std::collections::VecDeque;
 
 /// One actor: a FIFO of jobs plus a slot of actor-local state handed to
@@ -59,13 +78,138 @@ struct PoolShared<S, J> {
     queue: Mutex<ReadyQueue<S, J>>,
     cv: Condvar,
     jobs_executed: AtomicU64,
+    jobs_panicked: AtomicU64,
     runner: Box<Runner<S, J>>,
+}
+
+/// Where dying workers (and external observers) report worker deaths,
+/// and where the supervisor thread waits for them.
+///
+/// A tiny MPSC hand-off on the loom-switchable facade: `report` never
+/// blocks, `wait_next` parks until a death or `close`. Each reported
+/// death is consumed by exactly one `wait_next` (at-most-once respawn
+/// per death), and `close` wakes every parked waiter — both properties
+/// are model-checked in `tests/loom_sched.rs`.
+pub struct DeathBoard {
+    inner: Mutex<DeathBoardInner>,
+    cv: Condvar,
+}
+
+struct DeathBoardInner {
+    deaths: VecDeque<usize>,
+    closed: bool,
+}
+
+impl DeathBoard {
+    /// An empty, open board.
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(DeathBoardInner { deaths: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// File worker `id`'s death. Never blocks; wakes one waiter.
+    pub fn report(&self, id: usize) {
+        let mut inner = self.inner.lock().expect("death board lock");
+        inner.deaths.push_back(id);
+        drop(inner);
+        self.cv.notify_one();
+    }
+
+    /// Block until a death is available (consuming it) or the board is
+    /// closed (`None`). Each death is handed to exactly one caller.
+    pub fn wait_next(&self) -> Option<usize> {
+        let mut inner = self.inner.lock().expect("death board lock");
+        loop {
+            if let Some(id) = inner.deaths.pop_front() {
+                return Some(id);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).expect("death board lock");
+        }
+    }
+
+    /// Close the board: pending deaths remain consumable, new waiters
+    /// return `None` once drained. Wakes every parked waiter.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().expect("death board lock");
+        inner.closed = true;
+        drop(inner);
+        self.cv.notify_all();
+    }
+}
+
+impl Default for DeathBoard {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Pure sliding-window restart budget: at most `max_respawns` allowed
+/// per `window_us` of caller-supplied time. Taking "now" as a parameter
+/// keeps it unit-testable and free of clocks.
+pub struct RestartBudget {
+    max_respawns: u32,
+    window_us: u64,
+    grants: VecDeque<u64>,
+}
+
+impl RestartBudget {
+    /// Budget of `max_respawns` grants per sliding `window_us`.
+    pub fn new(max_respawns: u32, window_us: u64) -> Self {
+        Self { max_respawns, window_us, grants: VecDeque::new() }
+    }
+
+    /// Whether a respawn at `now_us` fits the budget; a `true` return
+    /// consumes one grant.
+    pub fn allow(&mut self, now_us: u64) -> bool {
+        while let Some(&front) = self.grants.front() {
+            if now_us.saturating_sub(front) >= self.window_us {
+                self.grants.pop_front();
+            } else {
+                break;
+            }
+        }
+        if (self.grants.len() as u32) < self.max_respawns {
+            self.grants.push_back(now_us);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Supervisor policy for [`ActorPool::with_supervision`].
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisionConfig {
+    /// Worker respawns allowed per sliding window before the pool
+    /// degrades.
+    pub max_respawns: u32,
+    /// The sliding budget window, microseconds of wall time.
+    pub window_us: u64,
+}
+
+impl Default for SupervisionConfig {
+    fn default() -> Self {
+        Self { max_respawns: 4, window_us: 60_000_000 }
+    }
+}
+
+struct Supervision {
+    board: Arc<DeathBoard>,
+    degraded: Arc<AtomicU64>,
+    respawns: Arc<AtomicU64>,
+    handle: Option<thread::JoinHandle<()>>,
 }
 
 /// The fixed worker fleet. See the module docs for the invariants.
 pub struct ActorPool<S, J> {
     shared: Arc<PoolShared<S, J>>,
     handles: Vec<thread::JoinHandle<()>>,
+    supervision: Option<Supervision>,
 }
 
 /// Pauses the pool while alive: workers finish their current job, then
@@ -96,15 +240,61 @@ impl<S: Send + 'static, J: Send + 'static> ActorPool<S, J> {
             queue: Mutex::new(ReadyQueue { ready: VecDeque::new(), holds: 0, shutdown: false }),
             cv: Condvar::new(),
             jobs_executed: AtomicU64::new(0),
+            jobs_panicked: AtomicU64::new(0),
             runner: Box::new(runner),
         });
         let handles = (0..workers.max(1))
             .map(|_| {
                 let shared = shared.clone();
-                thread::spawn(move || worker_loop(&shared))
+                thread::spawn(move || worker_loop(&shared, None))
             })
             .collect();
-        Self { shared, handles }
+        Self { shared, handles, supervision: None }
+    }
+
+    /// Like [`ActorPool::new`], plus a supervisor thread: workers carry
+    /// an armed death guard that files on the pool's [`DeathBoard`] if
+    /// they die outside the panic boundary; the supervisor consumes
+    /// each report, respawns a replacement within `cfg`'s restart
+    /// budget, and sets the [`ActorPool::degraded`] flag once the
+    /// budget is exhausted. Supervision is opt-in so loom models of the
+    /// bare pool keep their small state space.
+    pub fn with_supervision<F>(workers: usize, cfg: SupervisionConfig, runner: F) -> Self
+    where
+        F: Fn(J, &mut S) + Send + Sync + 'static,
+    {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(ReadyQueue { ready: VecDeque::new(), holds: 0, shutdown: false }),
+            cv: Condvar::new(),
+            jobs_executed: AtomicU64::new(0),
+            jobs_panicked: AtomicU64::new(0),
+            runner: Box::new(runner),
+        });
+        let board = Arc::new(DeathBoard::new());
+        let handles: Vec<_> = (0..workers.max(1))
+            .map(|id| {
+                let shared = shared.clone();
+                let board = board.clone();
+                thread::spawn(move || worker_loop(&shared, Some((board, id))))
+            })
+            .collect();
+        let degraded = Arc::new(AtomicU64::new(0));
+        let respawns = Arc::new(AtomicU64::new(0));
+        let handle = {
+            let shared = shared.clone();
+            let board = board.clone();
+            let degraded = degraded.clone();
+            let respawns = respawns.clone();
+            let next_id = handles.len();
+            thread::spawn(move || {
+                supervisor_loop(&shared, &board, cfg, &degraded, &respawns, next_id)
+            })
+        };
+        Self {
+            shared,
+            handles,
+            supervision: Some(Supervision { board, degraded, respawns, handle: Some(handle) }),
+        }
     }
 
     /// Worker-thread count (fixed at construction).
@@ -150,6 +340,31 @@ impl<S: Send + 'static, J: Send + 'static> ActorPool<S, J> {
         self.shared.jobs_executed.load(Ordering::Relaxed)
     }
 
+    /// Jobs whose runner panicked (caught at the supervision boundary;
+    /// the worker survived and the actor stayed schedulable).
+    pub fn jobs_panicked(&self) -> u64 {
+        self.shared.jobs_panicked.load(Ordering::Relaxed)
+    }
+
+    /// Workers respawned by the supervisor (0 without supervision).
+    pub fn worker_respawns(&self) -> u64 {
+        self.supervision.as_ref().map_or(0, |s| s.respawns.load(Ordering::Relaxed))
+    }
+
+    /// True once the supervisor exhausted its restart budget — the
+    /// fleet is running with fewer workers than configured.
+    pub fn degraded(&self) -> bool {
+        self.supervision.as_ref().is_some_and(|s| s.degraded.load(Ordering::Relaxed) != 0)
+    }
+
+    /// The supervised pool's death board (None without supervision).
+    /// External observers (tests, a higher layer that watched a worker
+    /// wedge) may file reports here; each report triggers at most one
+    /// respawn.
+    pub fn death_board(&self) -> Option<Arc<DeathBoard>> {
+        self.supervision.as_ref().map(|s| s.board.clone())
+    }
+
     /// Actors currently waiting in the global ready queue.
     pub fn ready_depth(&self) -> usize {
         self.shared.queue.lock().expect("pool lock").ready.len()
@@ -162,7 +377,9 @@ impl<S: Send + 'static, J: Send + 'static> ActorPool<S, J> {
     }
 
     /// Stop the pool: workers drain every queued job (holds included),
-    /// then exit.
+    /// then exit. Tolerates dead workers — a worker that died mid-life
+    /// was already reported and (under supervision) replaced; its join
+    /// error must not poison the teardown of the survivors.
     pub fn shutdown(mut self) {
         {
             let mut q = self.shared.queue.lock().expect("pool lock");
@@ -170,12 +387,37 @@ impl<S: Send + 'static, J: Send + 'static> ActorPool<S, J> {
         }
         self.shared.cv.notify_all();
         for h in self.handles.drain(..) {
-            h.join().expect("join worker");
+            let _ = h.join();
+        }
+        if let Some(mut sup) = self.supervision.take() {
+            sup.board.close();
+            if let Some(h) = sup.handle.take() {
+                let _ = h.join();
+            }
         }
     }
 }
 
-fn worker_loop<S, J>(shared: &PoolShared<S, J>) {
+/// Armed drop guard: a worker that unwinds out of its loop (a panic
+/// *outside* the runner boundary — e.g. lock poisoning) files its death
+/// before the thread ends. Disarmed on normal shutdown exit.
+struct DeathGuard {
+    board: Option<(Arc<DeathBoard>, usize)>,
+    armed: bool,
+}
+
+impl Drop for DeathGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            if let Some((board, id)) = self.board.as_ref() {
+                board.report(*id);
+            }
+        }
+    }
+}
+
+fn worker_loop<S, J>(shared: &PoolShared<S, J>, death: Option<(Arc<DeathBoard>, usize)>) {
+    let mut guard = DeathGuard { board: death, armed: true };
     loop {
         // Claim the next ready actor (or exit once shut down and dry).
         // A hold gates new claims but never blocks shutdown drain.
@@ -188,6 +430,7 @@ fn worker_loop<S, J>(shared: &PoolShared<S, J>) {
                         break a;
                     }
                     if q.shutdown {
+                        guard.armed = false;
                         return;
                     }
                 }
@@ -203,7 +446,14 @@ fn worker_loop<S, J>(shared: &PoolShared<S, J>) {
             let slot = inner.slot.take().expect("scheduled actor has its slot");
             (job, slot)
         };
-        (shared.runner)(job, &mut slot);
+        // The supervision boundary: a panicking job is counted and
+        // contained; `slot` is only borrowed by the closure, so it
+        // survives the unwind and the put-back below runs on both
+        // paths — the actor can never lose its slot or wedge its
+        // `scheduled` flag to a panic.
+        if catch_boundary(|| (shared.runner)(job, &mut slot)).is_err() {
+            shared.jobs_panicked.fetch_add(1, Ordering::Relaxed);
+        }
         shared.jobs_executed.fetch_add(1, Ordering::Relaxed);
         // Put the slot back; one job per turn, re-queue at the tail if
         // work remains (round-robin fairness across all actors).
@@ -223,6 +473,43 @@ fn worker_loop<S, J>(shared: &PoolShared<S, J>) {
             drop(q);
             shared.cv.notify_one();
         }
+    }
+}
+
+/// Consume death reports until the board closes: respawn within the
+/// budget (the replacement carries its own death guard, so a respawned
+/// worker dying re-enters the same path), degrade once it is spent.
+/// Respawned handles are joined here, after the board closes — by then
+/// the pool's shutdown flag is set, so they exit promptly.
+fn supervisor_loop<S, J>(
+    shared: &Arc<PoolShared<S, J>>,
+    board: &Arc<DeathBoard>,
+    cfg: SupervisionConfig,
+    degraded: &Arc<AtomicU64>,
+    respawns: &Arc<AtomicU64>,
+    mut next_id: usize,
+) where
+    S: Send + 'static,
+    J: Send + 'static,
+{
+    let epoch = std::time::Instant::now();
+    let mut budget = RestartBudget::new(cfg.max_respawns, cfg.window_us);
+    let mut spawned: Vec<thread::JoinHandle<()>> = Vec::new();
+    while let Some(_dead_id) = board.wait_next() {
+        let now_us = epoch.elapsed().as_micros() as u64;
+        if budget.allow(now_us) {
+            let shared = shared.clone();
+            let b = board.clone();
+            let id = next_id;
+            next_id += 1;
+            spawned.push(thread::spawn(move || worker_loop(&shared, Some((b, id)))));
+            respawns.fetch_add(1, Ordering::Relaxed);
+        } else {
+            degraded.store(1, Ordering::Relaxed);
+        }
+    }
+    for h in spawned {
+        let _ = h.join();
     }
 }
 
@@ -319,6 +606,101 @@ mod tests {
         gate_tx.send(()).expect("gate");
         gate_tx.send(()).expect("gate");
         pool.shutdown();
+    }
+
+    /// Regression (fleet supervision PR): a job panicking mid-run used
+    /// to unwind past the slot put-back — the slot was lost, the
+    /// actor's `scheduled` flag stayed set forever (silently starving
+    /// the band), and `shutdown` then panicked joining the dead
+    /// worker. With the boundary in place the worker survives, the
+    /// slot is preserved, later jobs on the same actor still run, and
+    /// shutdown completes cleanly.
+    #[test]
+    fn panicking_job_cannot_wedge_actor_or_lose_slot() {
+        let log = Arc::new(StdMutex::new(Vec::new()));
+        let l = log.clone();
+        let pool = ActorPool::new(1, move |job: u32, slot: &mut u32| {
+            if job == 1 {
+                panic!("forced mid-job abort");
+            }
+            *slot += 1;
+            l.lock().expect("log lock").push((*slot, job));
+        });
+        let a = pool.spawn_actor(0u32);
+        pool.enqueue(&a, 0);
+        pool.enqueue(&a, 1); // panics
+        pool.enqueue(&a, 2); // must still run — FIFO flag must not wedge
+        pool.enqueue(&a, 3);
+        for _ in 0..2_000 {
+            if pool.jobs_executed() == 4 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.jobs_executed(), 4, "jobs after the panic never ran");
+        assert_eq!(pool.jobs_panicked(), 1);
+        pool.shutdown(); // must not panic on a dead worker's handle
+        let got: Vec<(u32, u32)> = log.lock().expect("log lock").clone();
+        // Slot survived the unwind: increments continue from 1, and the
+        // panicking job left no partial increment.
+        assert_eq!(got, vec![(1, 0), (2, 2), (3, 3)]);
+    }
+
+    #[test]
+    fn supervised_pool_respawns_within_budget_then_degrades() {
+        let pool: ActorPool<(), u32> = ActorPool::with_supervision(
+            2,
+            SupervisionConfig { max_respawns: 2, window_us: 60_000_000 },
+            |_job, _slot| {},
+        );
+        let board = pool.death_board().expect("supervised pool has a board");
+        // Two reported deaths fit the budget; the third exceeds it.
+        board.report(0);
+        board.report(1);
+        board.report(7);
+        for _ in 0..2_000 {
+            if pool.worker_respawns() == 2 && pool.degraded() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(pool.worker_respawns(), 2, "each death respawns at most once");
+        assert!(pool.degraded(), "spent budget must raise the degraded flag");
+        // The pool still serves jobs end to end.
+        let a = pool.spawn_actor(());
+        for k in 0..10 {
+            pool.enqueue(&a, k);
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn restart_budget_is_a_sliding_window() {
+        let mut b = RestartBudget::new(2, 1_000);
+        assert!(b.allow(0));
+        assert!(b.allow(10));
+        assert!(!b.allow(20), "third respawn inside the window must be denied");
+        // Once the first grant ages out of the window, capacity returns.
+        assert!(b.allow(1_005));
+        assert!(!b.allow(1_006), "grant at t=10 still inside [6, 1006)");
+        assert!(b.allow(1_500));
+    }
+
+    #[test]
+    fn death_board_close_wakes_waiter_and_drains_pending() {
+        let board = Arc::new(DeathBoard::new());
+        board.report(3);
+        board.close();
+        // Pending deaths stay consumable after close; then None.
+        assert_eq!(board.wait_next(), Some(3));
+        assert_eq!(board.wait_next(), None);
+        // A parked waiter is woken by close.
+        let b2 = Arc::new(DeathBoard::new());
+        let b3 = b2.clone();
+        let h = std::thread::spawn(move || b3.wait_next());
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        b2.close();
+        assert_eq!(h.join().expect("join"), None);
     }
 
     #[test]

@@ -156,6 +156,21 @@ impl SparseRecencyStore {
         self.evictions
     }
 
+    /// Visit every resident entry as `f(key, last_write_us)` in slot
+    /// order — the checkpoint export walk of `serve::supervise`.
+    /// [`pixel_key`] is invertible (`plane = key >> 32`,
+    /// `y = (key >> 16) & 0xFFFF`, `x = key & 0xFFFF`), and re-`mark`ing
+    /// the visited entries on an identically shaped store reproduces
+    /// every [`SparseRecencyStore::last`] answer (victim selection is by
+    /// minimum stamp, so slot order within a set is not observable).
+    pub fn for_each_entry(&self, mut f: impl FnMut(u64, u64)) {
+        for s in &self.slots {
+            if s.t != 0 {
+                f(s.key, s.t);
+            }
+        }
+    }
+
     /// Drop every entry; capacity is retained.
     pub fn clear(&mut self) {
         self.slots.fill(Slot::default());

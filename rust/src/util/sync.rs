@@ -39,6 +39,42 @@ pub mod thread {
     pub use std::thread::{spawn, JoinHandle};
 }
 
+/// The supervision boundary: run `f`, converting a panic into
+/// `Err(message)` instead of unwinding into pool/queue bookkeeping.
+///
+/// This is the loom-compatible face of `std::panic::catch_unwind` —
+/// loom does not model unwinding, so under `--cfg loom` the closure
+/// runs bare and the boundary is a transparent `Ok`. That keeps the
+/// loom models driving the *real* worker-loop code (claim, run,
+/// put-back, requeue) while the panic-isolation property itself is
+/// exercised by the non-loom scheduler and chaos tests.
+#[cfg(not(loom))]
+pub fn catch_boundary<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => Err(panic_message(&payload)),
+    }
+}
+
+/// See the non-loom `catch_boundary`: under loom the closure runs bare
+/// (loom cannot model unwinding), so the boundary is transparent.
+#[cfg(loom)]
+pub fn catch_boundary<T>(f: impl FnOnce() -> T) -> Result<T, String> {
+    Ok(f())
+}
+
+/// Best-effort human-readable message out of a panic payload.
+#[cfg(not(loom))]
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 pub mod chan {
     //! A bounded MPSC channel on the loom-switchable facade.
     //!

@@ -1,0 +1,373 @@
+//! Fleet chaos: seeded in-process fault injection at the scheduler
+//! fault points (`tsisc::serve::supervise`), holding the whole fleet to
+//! the supervision contract:
+//!
+//! * clean sessions sharing the fleet with faulty ones stay
+//!   **bit-for-bit** equal to a standalone `pipeline::run` of the same
+//!   stream — fault isolation never costs exactness;
+//! * every injected fault lands in exactly one typed
+//!   `SupervisorStats` bucket: injected panics ⇔ quarantined sessions,
+//!   injected stalls never quarantine, injected checkpoint corruptions
+//!   ⇔ CRC detections;
+//! * a quarantined session restored from a checkpoint replays its
+//!   stream to exact equality with a never-crashed run, and its fault
+//!   board is cleared;
+//! * the fleet never deadlocks: every API call returns, teardown
+//!   drains, and a watchdog aborts the process if it ever wedges.
+//!
+//! The whole run derives from one seed (printed on entry; override with
+//! `TSISC_CHAOS_SEED`, decimal or `0x…` hex) so any failure replays
+//! exactly.
+
+use std::time::Duration;
+
+use tsisc::coordinator::{run_pipeline, PipelineConfig, RouterConfig};
+use tsisc::denoise::StcfParams;
+use tsisc::events::{Event, LabeledEvent, Polarity, Resolution};
+use tsisc::isc::IscConfig;
+use tsisc::serve::{
+    CheckpointError, Reject, RestoreError, SchedFaultKind, SchedFaultPlan, ServeConfig,
+    SessionConfig, SessionId, SessionManager,
+};
+use tsisc::util::grid::Grid;
+
+/// Seed for the whole run; override with `TSISC_CHAOS_SEED` to replay.
+/// Accepts decimal or `0x…` hex (underscores allowed in either).
+fn chaos_seed() -> u64 {
+    std::env::var("TSISC_CHAOS_SEED")
+        .ok()
+        .and_then(|raw| {
+            let s = raw.trim().replace('_', "");
+            match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                None => s.parse().ok(),
+            }
+        })
+        .unwrap_or(0xC4A0_5EED)
+}
+
+/// The no-deadlock property, enforced: if the fleet ever wedges, abort
+/// the test binary with a diagnosis instead of hanging CI forever.
+fn arm_watchdog(secs: u64) {
+    std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_secs(secs));
+        eprintln!("fleet_chaos watchdog: fleet deadlocked (> {secs}s); aborting");
+        std::process::exit(101);
+    });
+}
+
+/// Deterministic time-sorted stream covering every row of `res`.
+fn stream(res: Resolution, n: u64, salt: u64) -> Vec<LabeledEvent> {
+    (0..n)
+        .map(|k| LabeledEvent {
+            ev: Event::new(
+                1 + k * 300,
+                ((k * 7 + salt) % res.width as u64) as u16,
+                ((k * 5 + salt * 3) % res.height as u64) as u16,
+                if (k + salt) % 3 == 0 { Polarity::Off } else { Polarity::On },
+            ),
+            is_signal: true,
+        })
+        .collect()
+}
+
+/// Shape for the faulty sessions: small staging (many early write
+/// flushes, so a 1-based `fire_on_job` ≤ 4 always has a job to land
+/// on) and 4 bands so one band's fault leaves live neighbors.
+fn chaos_pipeline() -> PipelineConfig {
+    PipelineConfig {
+        stcf: None,
+        denoise_shards: 0,
+        batch_size: 32,
+        router: RouterConfig {
+            n_shards: 4,
+            isc: IscConfig { bank_size: 48, ..IscConfig::default() },
+            ..RouterConfig::default()
+        },
+        ..PipelineConfig::default()
+    }
+}
+
+/// Clean-bystander shape `k`: varied STCF stages (none / sharded /
+/// sharded-default), band counts and batch sizes, all mismatch-enabled.
+fn clean_pipeline(k: usize) -> PipelineConfig {
+    let stcf = match k {
+        0 => None,
+        1 => Some(StcfParams { threshold: 1, ..StcfParams::default() }),
+        _ => Some(StcfParams::default()),
+    };
+    PipelineConfig {
+        stcf,
+        denoise_shards: [0usize, 2, 3][k % 3],
+        batch_size: [64usize, 97, 4_096][k % 3],
+        router: RouterConfig {
+            n_shards: 1 + k % 4,
+            isc: IscConfig { bank_size: 48, ..IscConfig::default() },
+            ..RouterConfig::default()
+        },
+        ..PipelineConfig::default()
+    }
+}
+
+struct Feed {
+    sid: SessionId,
+    res: Resolution,
+    pipeline: PipelineConfig,
+    events: Vec<LabeledEvent>,
+    head: usize,
+    frames: Vec<(u64, Grid<f64>)>,
+    quarantined: bool,
+}
+
+/// K faulty + M clean sessions on one fleet: two sessions per fault
+/// kind (seed-derived plans over `SchedFaultKind::ALL`) interleaved
+/// with three clean bystanders, fed round-robin in uneven chunks.
+#[test]
+fn seeded_fault_fleet_isolates_faults_and_keeps_clean_sessions_exact() {
+    let seed = chaos_seed();
+    println!("fleet_chaos seed: {seed:#x} (set TSISC_CHAOS_SEED to replay)");
+    arm_watchdog(240);
+    let t_end = 130_000u64; // 50 ms windows ⇒ frames at 50 ms and 100 ms
+
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 3,
+        max_sessions: 32,
+        max_inflight_batches: 1 << 20,
+        ..ServeConfig::default()
+    });
+
+    // Faulty sessions: indices 2k, 2k+1 carry SchedFaultKind::ALL[k].
+    let mut feeds: Vec<Feed> = Vec::new();
+    let mut birth_blobs: Vec<Option<Vec<u8>>> = Vec::new();
+    for (i, kind) in SchedFaultKind::ALL.iter().flat_map(|&k| [k, k]).enumerate() {
+        let plan = SchedFaultPlan::from_seed(kind, seed.wrapping_add(i as u64));
+        let res = Resolution::new(16, 16);
+        let pipeline = chaos_pipeline();
+        let sid = m
+            .open_with_fault(
+                SessionConfig {
+                    name: format!("faulty-{i}"),
+                    res,
+                    t_end_us: t_end,
+                    pipeline: pipeline.clone(),
+                },
+                Some(plan),
+            )
+            .expect("open faulty session");
+        // Birth checkpoint before any ingest: checkpoint jobs never
+        // tick the armed-fault ordinal, so this is safe for panic and
+        // stall plans — but a CheckpointCorrupt plan would burn its
+        // (at-most-once) corruption here, so those skip it.
+        birth_blobs.push(if kind == SchedFaultKind::CheckpointCorrupt {
+            None
+        } else {
+            Some(m.checkpoint(sid).expect("birth checkpoint"))
+        });
+        feeds.push(Feed {
+            sid,
+            res,
+            pipeline,
+            events: stream(res, 300, 1_000 + i as u64),
+            head: 0,
+            frames: Vec::new(),
+            quarantined: false,
+        });
+    }
+    let n_faulty = feeds.len();
+
+    // Clean bystanders with varied shapes (incl. sharded STCF).
+    for k in 0..3usize {
+        let res = [Resolution::new(24, 18), Resolution::new(16, 16), Resolution::new(32, 24)][k];
+        let pipeline = clean_pipeline(k);
+        let sid = m
+            .open(SessionConfig {
+                name: format!("clean-{k}"),
+                res,
+                t_end_us: t_end,
+                pipeline: pipeline.clone(),
+            })
+            .expect("open clean session");
+        birth_blobs.push(None);
+        feeds.push(Feed {
+            sid,
+            res,
+            pipeline,
+            events: stream(res, 400, k as u64),
+            head: 0,
+            frames: Vec::new(),
+            quarantined: false,
+        });
+    }
+
+    // Round-robin feed in chunks of 37 (coprime to every batch size).
+    // A panic session may flip to Quarantined mid-feed — that is the
+    // contract, and feeding simply stops there; any other rejection is
+    // a fleet bug.
+    loop {
+        let mut progressed = false;
+        for f in feeds.iter_mut() {
+            if f.quarantined || f.head >= f.events.len() {
+                continue;
+            }
+            let hi = (f.head + 37).min(f.events.len());
+            match m.ingest_batch(f.sid, &f.events[f.head..hi]) {
+                Ok(new) => {
+                    f.frames.extend(new);
+                    f.head = hi;
+                }
+                Err(Reject::Quarantined { .. }) => f.quarantined = true,
+                Err(e) => panic!("unexpected rejection under chaos: {e}"),
+            }
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+
+    // Stall, corrupt and clean sessions drain and match pipeline::run
+    // bit-for-bit; only the two panic sessions may be quarantined.
+    for (i, f) in feeds.iter_mut().enumerate() {
+        let is_panic = i < 2;
+        if is_panic {
+            continue;
+        }
+        assert!(!f.quarantined, "session {i} quarantined without an injected panic");
+        f.frames.extend(m.drain(f.sid).expect("drain non-panic session"));
+        let reference = run_pipeline(f.events.iter().copied(), f.res, t_end, &f.pipeline);
+        assert_eq!(
+            f.frames, reference.frames,
+            "session {i} diverged from pipeline::run under chaos"
+        );
+    }
+
+    // Panic sessions: force a sync point so the gate observes the filed
+    // fault, assert the typed quarantine, then restore from the birth
+    // checkpoint and replay the whole stream to exact equality.
+    for i in 0..2 {
+        let (sid, res, events, pipeline) =
+            (feeds[i].sid, feeds[i].res, feeds[i].events.clone(), feeds[i].pipeline.clone());
+        let _ = m.drain(sid); // sync: waits on every band's FIFO (or already rejects)
+        match m.ingest_batch(sid, &events[..1]) {
+            Err(Reject::Quarantined { .. }) => {}
+            r => panic!("panic session {i} must be quarantined, got {r:?}"),
+        }
+        let faults = m.session_faults(sid).expect("quarantined faults are listable");
+        assert!(!faults.is_empty(), "quarantined session {i} lists no fault");
+        assert!(
+            faults[0].detail.contains("injected fault"),
+            "fault detail lost the panic payload: {}",
+            faults[0].detail
+        );
+
+        let birth = birth_blobs[i].as_ref().expect("panic sessions took a birth checkpoint");
+        m.restore_in_place(sid, birth).expect("restore quarantined session");
+        assert!(
+            m.session_faults(sid).expect("faults listable").is_empty(),
+            "restore must clear the fault board"
+        );
+        let mut frames = m.ingest_batch(sid, &events).expect("re-ingest after restore");
+        frames.extend(m.drain(sid).expect("drain after restore"));
+        let reference = run_pipeline(events.iter().copied(), res, t_end, &pipeline);
+        assert_eq!(
+            frames, reference.frames,
+            "restored session {i} diverged from a never-crashed run"
+        );
+        let report = m.close(sid).expect("close restored session");
+        assert_eq!(report.pipeline.events_in, reference.stats.events_in);
+    }
+
+    // Corrupt sessions: the armed fault flips one seeded bit of the
+    // first checkpoint taken; the CRC guard must reject it as a typed
+    // CrcMismatch (never a silent restore), after which a fresh
+    // checkpoint (the fault fires at most once) restores cleanly.
+    for i in 4..6 {
+        let sid = feeds[i].sid;
+        let blob = m.checkpoint(sid).expect("checkpoint corrupt session");
+        match m.restore_in_place(sid, &blob) {
+            Err(RestoreError::Checkpoint(CheckpointError::CrcMismatch)) => {}
+            r => panic!("corrupted checkpoint must fail the CRC guard, got {r:?}"),
+        }
+        let clean_blob = m.checkpoint(sid).expect("second checkpoint");
+        m.restore_in_place(sid, &clean_blob).expect("clean blob restores");
+        m.close(sid).expect("close corrupt-plan session");
+    }
+    for i in (2..4).chain(n_faulty..feeds.len()) {
+        m.close(feeds[i].sid).expect("close session");
+    }
+
+    // Every injected fault sits in exactly one typed bucket, and the
+    // fleet itself stayed healthy: panics were caught at the job-body
+    // boundary (no worker death, no respawn, no degraded flag).
+    let st = m.shutdown();
+    let sup = &st.supervisor;
+    assert_eq!(sup.injected_panics, 2, "both panic plans must fire");
+    assert_eq!(sup.quarantines, 2, "injected panics ⇔ quarantined sessions");
+    assert_eq!(sup.worker_panics, 2, "each injected panic is caught exactly once");
+    assert_eq!(sup.injected_stalls, 2, "both stall plans must fire");
+    assert_eq!(sup.injected_checkpoint_corruptions, 2, "both corruption plans must fire");
+    assert_eq!(
+        sup.checkpoint_corruptions_detected, sup.injected_checkpoint_corruptions,
+        "every injected corruption must be CRC-detected"
+    );
+    assert_eq!(sup.restores_completed, 4, "2 panic restores + 2 clean-blob restores");
+    assert_eq!(sup.checkpoints_taken, 8, "4 birth + 2 corrupted + 2 clean");
+    assert_eq!(sup.worker_respawns, 0, "caught panics must not kill workers");
+    assert!(!sup.fleet_degraded, "restart budget untouched ⇒ never degraded");
+    assert_eq!(sup.sessions_shed_overloaded, 0);
+    assert_eq!(st.open_sessions, 0, "every session closed");
+}
+
+/// A stalled job ahead of a snapshot blows the (here: 1 µs) soft
+/// deadline: the miss is counted, nothing quarantines, and the frames
+/// stay bit-for-bit exact — stalls degrade latency, never results.
+#[test]
+fn stalled_snapshot_counts_a_deadline_miss_without_quarantine() {
+    arm_watchdog(240);
+    let mut sc = ServeConfig {
+        workers: 1,
+        max_sessions: 2,
+        max_inflight_batches: 1 << 10,
+        ..ServeConfig::default()
+    };
+    sc.supervisor.snapshot_deadline_us = 1;
+    let mut m = SessionManager::new(sc);
+    let res = Resolution::new(16, 16);
+    let plan = SchedFaultPlan {
+        kind: SchedFaultKind::JobStall,
+        fire_on_job: 1,
+        stall_ms: 5,
+        corrupt_salt: 0,
+    };
+    let sid = m
+        .open_with_fault(
+            SessionConfig {
+                name: "stall".into(),
+                res,
+                t_end_us: 10_000_000,
+                pipeline: chaos_pipeline(),
+            },
+            Some(plan),
+        )
+        .expect("open stalled session");
+
+    // The first job is an on-demand snapshot: the armed stall sleeps
+    // 5 ms inside it, so its enqueue→completion latency must miss the
+    // 1 µs deadline deterministically.
+    let cold = m.snapshot(sid, 1_000).expect("snapshot under stall");
+    assert_eq!(cold.as_slice().iter().copied().sum::<f64>(), 0.0, "cold snapshot is all zeros");
+
+    let events = stream(res, 64, 7);
+    let mut frames = m.ingest_batch(sid, &events).expect("ingest");
+    frames.extend(m.drain(sid).expect("drain"));
+    let reference = run_pipeline(events.iter().copied(), res, 10_000_000, &chaos_pipeline());
+    assert_eq!(frames, reference.frames, "stall changed results, not just latency");
+
+    let st = m.shutdown();
+    assert_eq!(st.supervisor.injected_stalls, 1);
+    assert_eq!(st.supervisor.quarantines, 0, "a stall must never quarantine");
+    assert!(
+        st.supervisor.deadline_misses >= 1,
+        "a 5 ms stall inside a 1 µs-deadline snapshot must count a miss"
+    );
+}

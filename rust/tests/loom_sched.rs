@@ -16,18 +16,29 @@
 //! * an enqueue against a parked worker always wakes it (no lost
 //!   wakeup — loom's deadlock detection fails the model otherwise);
 //! * the bounded channel neither loses nor duplicates values, preserves
-//!   FIFO order, and never wedges a sender on a dropped receiver.
+//!   FIFO order, and never wedges a sender on a dropped receiver;
+//! * a worker death reported to the [`DeathBoard`] is consumed by
+//!   exactly one `wait_next` caller (at-most-once respawn per death),
+//!   never lost, and `close` wakes every parked waiter — the supervisor
+//!   thread can neither double-respawn nor hang at shutdown;
+//! * two workers filing faults against one session observe exactly one
+//!   quarantine *transition* on the [`FaultBoard`] (prior count 0), so
+//!   the fleet counts quarantined sessions, not faults.
 //!
-//! Panic poisoning (a band job panicking must only kill its own band) is
-//! a serve-layer concern built on `catch_unwind`, which loom does not
-//! model — it is exercised by the non-loom scheduler/session tests.
+//! Panic *containment* itself runs through the
+//! `util::sync::catch_boundary` facade, whose loom variant executes the
+//! closure inline (loom does not model unwinding); the panic paths are
+//! exercised by the non-loom scheduler/session/chaos tests. What loom
+//! checks here is the supervision hand-off *around* a death — the
+//! `DeathBoard` and `FaultBoard` models below.
 //!
 //! Models stay tiny (≤ 2 workers, ≤ 3 jobs) on purpose: loom's state
 //! space is exponential in threads × sync operations.
 
 #![cfg(loom)]
 
-use tsisc::util::actor::ActorPool;
+use tsisc::serve::supervise::{FaultBoard, FaultJobKind, SessionFault};
+use tsisc::util::actor::{ActorPool, DeathBoard};
 use tsisc::util::sync::chan;
 use tsisc::util::sync::{Arc, AtomicU64, AtomicUsize, Ordering};
 
@@ -149,6 +160,67 @@ fn enqueue_always_wakes_a_parked_worker() {
         pool.enqueue(&a, 7);
         assert_eq!(done_rx.recv(), Ok(7), "job never executed");
         pool.shutdown();
+    });
+}
+
+/// Worker-death handoff: a single reported death is consumed by exactly
+/// one `wait_next` caller (at-most-once respawn per death), whatever the
+/// interleaving of the report, the close, and two racing consumers. Both
+/// consumers seeing `Some` would mean a double respawn; both seeing
+/// `None` would mean a lost death. A lost *wakeup* parks a consumer
+/// forever and loom's deadlock detection fails the model.
+#[test]
+fn death_board_delivers_each_death_exactly_once() {
+    loom::model(|| {
+        let board = Arc::new(DeathBoard::new());
+        let b = board.clone();
+        let waiter = tsisc::util::sync::thread::spawn(move || b.wait_next());
+        board.report(7);
+        // Close keeps the already-reported death consumable; whichever
+        // consumer misses it must observe the close as `None`.
+        board.close();
+        let mine = board.wait_next();
+        let theirs = waiter.join().expect("join waiter");
+        match (mine, theirs) {
+            (Some(7), None) | (None, Some(7)) => {}
+            other => panic!("death mis-delivered: {other:?}"),
+        }
+    });
+}
+
+/// `close` must wake a parked `wait_next` with `None` — otherwise the
+/// supervisor thread would never exit at pool shutdown.
+#[test]
+fn death_board_close_wakes_parked_waiter() {
+    loom::model(|| {
+        let board = Arc::new(DeathBoard::new());
+        let b = board.clone();
+        let waiter = tsisc::util::sync::thread::spawn(move || b.wait_next());
+        board.close();
+        assert_eq!(waiter.join().expect("join waiter"), None);
+    });
+}
+
+/// Quarantine handoff: two workers filing faults against the same
+/// session concurrently observe exactly one quarantine *transition*
+/// (`file` returning a prior count of 0), so `SupervisorStats` counts
+/// quarantined sessions rather than faults, and both faults land on the
+/// board.
+#[test]
+fn fault_board_has_exactly_one_quarantine_transition() {
+    loom::model(|| {
+        let board = Arc::new(FaultBoard::new());
+        let b = board.clone();
+        let filer = tsisc::util::sync::thread::spawn(move || {
+            b.file(SessionFault { band: 0, job: FaultJobKind::Write, detail: String::new() })
+        });
+        let prior_main =
+            board.file(SessionFault { band: 1, job: FaultJobKind::Score, detail: String::new() });
+        let prior_filer = filer.join().expect("join filer");
+        let transitions = u64::from(prior_main == 0) + u64::from(prior_filer == 0);
+        assert_eq!(transitions, 1, "quarantine transition must fire exactly once");
+        assert_eq!(board.count(), 2, "a filed fault was lost");
+        assert!(board.is_quarantined());
     });
 }
 

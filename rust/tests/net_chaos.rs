@@ -47,7 +47,12 @@ fn chaos_seed() -> u64 {
 /// in-flight cap so clean cameras exercise backpressure retries too.
 fn chaos_config() -> NetConfig {
     NetConfig {
-        serve: ServeConfig { workers: 3, max_sessions: 16, max_inflight_batches: 4 },
+        serve: ServeConfig {
+            workers: 3,
+            max_sessions: 16,
+            max_inflight_batches: 4,
+            ..ServeConfig::default()
+        },
         read_timeout: Duration::from_millis(150),
         idle_timeout: Duration::from_secs(5),
         write_timeout: Duration::from_secs(2),

@@ -68,6 +68,7 @@ fn session_frames_equal_standalone_pipeline_bitforbit() {
             workers: 3,
             max_sessions: 32,
             max_inflight_batches: 4_096,
+            ..ServeConfig::default()
         });
         let specs: Vec<(Resolution, Vec<LabeledEvent>, PipelineConfig)> = (0..n_sessions)
             .map(|k| {
@@ -165,6 +166,7 @@ fn backpressure_rejects_instead_of_buffering() {
         workers: 1,
         max_sessions: 2,
         max_inflight_batches: 2,
+        ..ServeConfig::default()
     });
     let res = Resolution::new(8, 8);
     let mut cfg = pipeline_cfg(0); // no STCF: ingest never waits on jobs
@@ -213,6 +215,7 @@ fn close_frees_bands_and_invalidates_the_id() {
         workers: 2,
         max_sessions: 4,
         max_inflight_batches: 64,
+        ..ServeConfig::default()
     });
     let res = Resolution::new(16, 16);
     let mk = |k: usize| SessionConfig {
@@ -250,6 +253,7 @@ fn close_with_staged_and_queued_batches_loses_nothing() {
         workers: 2,
         max_sessions: 4,
         max_inflight_batches: 64,
+        ..ServeConfig::default()
     });
     let res = Resolution::new(16, 16);
 
@@ -315,6 +319,7 @@ fn causal_on_demand_snapshots_do_not_perturb_window_frames() {
         workers: 2,
         max_sessions: 2,
         max_inflight_batches: 1_024,
+        ..ServeConfig::default()
     });
     let sid = m
         .open(SessionConfig {

@@ -252,6 +252,7 @@ fn idle_session_resident_bytes_are_resolution_independent() {
         workers: 2,
         max_sessions: 4,
         max_inflight_batches: 64,
+        ..ServeConfig::default()
     });
     let open = |m: &mut SessionManager, res: Resolution| {
         m.open(SessionConfig {
@@ -278,6 +279,7 @@ fn session_resident_bytes_decay_back_to_cold_after_expiry() {
         workers: 2,
         max_sessions: 2,
         max_inflight_batches: 64,
+        ..ServeConfig::default()
     });
     let res = Resolution::new(32, 32);
     let sid = m

@@ -11,6 +11,7 @@
 //! | `unanchored-band-array` | band-scoped array construction anchors with `IscConfig::origin_y`; no raw `y - band_start` rebasing |
 //! | `eager-alloc` | no full-resolution allocations (`vec!`/`Vec::with_capacity` sized by `w * h` / `width * height`) in `serve/`/`coordinator/` — band state materializes lazily on first write (PR 7); justified exceptions carry `lint-invariants: allow(eager-alloc)` |
 //! | `net-deadline` | no bare `.read(`/`.read_exact(`/`.write(`/`.write_all(`/… in `serve/net/` outside `deadline.rs` — socket I/O goes through `DeadlineStream`'s configured-timeout wrappers so no handler blocks unboundedly (PR 8) |
+//! | `panic-boundary` | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/bare index expressions on the scheduler job path (`execute*`/`quarantine`/`export_band*`/`sync_resident` in `serve/scheduler.rs`) — a panic there is a session quarantine at best and a worker death at worst, so job bodies stay panic-free by construction; code inside a `catch_boundary(…)` wrapper is exempt (the supervision boundary contains it), as is a justified `lint-invariants: allow(panic-boundary)` (PR 9) |
 //!
 //! The scanners are deliberately line-based over rustfmt-shaped source —
 //! dependency-free, so the suite builds in offline containers. Each rule
@@ -428,6 +429,122 @@ fn check_net_deadline(path: &str, src: &str) -> Vec<Violation> {
     out
 }
 
+/// Panic sites the panic-boundary rule bans on the job path.
+const PANIC_SITES: &[&str] = &[".unwrap(", ".expect(", "panic!(", "unreachable!(", "todo!("];
+
+/// Job-path function prefixes in `serve/scheduler.rs`: everything a
+/// worker thread runs between dequeue and reply.
+const JOB_PATH_FNS: &[&str] = &["execute", "quarantine", "export_band", "sync_resident"];
+
+/// A bare index expression (`ident[`, `)[`, `][`) on this line — the
+/// implicit-panic site `.get()` exists to avoid. Macro brackets
+/// (`vec![`), attribute brackets (`#[`) and type/array brackets
+/// (preceded by space or `(`) do not match: the opening bracket must
+/// directly follow an identifier character or a closing `)`/`]`.
+fn bare_index_site(code: &str) -> bool {
+    let b = code.as_bytes();
+    (1..b.len()).any(|k| {
+        b[k] == b'['
+            && (b[k - 1].is_ascii_alphanumeric()
+                || b[k - 1] == b'_'
+                || b[k - 1] == b')'
+                || b[k - 1] == b']')
+    })
+}
+
+/// Panic-boundary law (PR 9): the scheduler job path must be panic-free
+/// by construction — a panic there quarantines a session at best and
+/// kills a worker at worst, so `unwrap`/`expect`/`panic!`/
+/// `unreachable!`/`todo!` and bare index expressions are banned inside
+/// the job-path functions of `serve/scheduler.rs`. Lines inside a
+/// `catch_boundary(…)` call are exempt: that *is* the supervision
+/// boundary, and a panic there is contained into a typed
+/// `SessionFault`. Justified exceptions carry
+/// `lint-invariants: allow(panic-boundary)`.
+fn check_panic_boundary(path: &str, src: &str) -> Vec<Violation> {
+    if !path.ends_with("serve/scheduler.rs") {
+        return Vec::new();
+    }
+    let lines: Vec<&str> = src.lines().collect();
+
+    // Lines covered by a catch_boundary(...) call, tracked by paren
+    // balance from the call site to its closing parenthesis.
+    let mut covered = vec![false; lines.len()];
+    for i in 0..lines.len() {
+        let Some(k) = strip_comment(lines[i]).find("catch_boundary(") else { continue };
+        let mut depth = 0i64;
+        let mut off = k;
+        let mut j = i;
+        'scan: while j < lines.len() {
+            for c in strip_comment(lines[j])[off..].chars() {
+                match c {
+                    '(' => depth += 1,
+                    ')' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            covered[j] = true;
+                            break 'scan;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            covered[j] = true;
+            j += 1;
+            off = 0;
+        }
+    }
+
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        let job_fn = fn_name(strip_comment(lines[i]))
+            .map(|n| JOB_PATH_FNS.iter().any(|p| n.starts_with(p)))
+            .unwrap_or(false);
+        if !job_fn {
+            i += 1;
+            continue;
+        }
+        let Some((lo, hi)) = fn_body_range(&lines, i) else {
+            i += 1;
+            continue;
+        };
+        for j in lo..=hi {
+            if covered[j] || suppressed(&lines, j, "panic-boundary") {
+                continue;
+            }
+            let code = strip_comment(lines[j]);
+            for tok in PANIC_SITES {
+                if code.contains(tok) {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line: j + 1,
+                        rule: "panic-boundary",
+                        msg: format!(
+                            "`{tok}` on the scheduler job path — job bodies are \
+                             panic-free by construction (quarantine via typed \
+                             faults); wrap in catch_boundary or justify with \
+                             `lint-invariants: allow(panic-boundary)`"
+                        ),
+                    });
+                }
+            }
+            if bare_index_site(code) {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: j + 1,
+                    rule: "panic-boundary",
+                    msg: "bare index expression on the scheduler job path — use \
+                          `.get(..)` and quarantine on miss instead of panicking"
+                        .to_string(),
+                });
+            }
+        }
+        i = hi + 1;
+    }
+    out
+}
+
 /// Run every rule over one file.
 fn check_file(path: &str, src: &str) -> Vec<Violation> {
     let mut out = Vec::new();
@@ -438,6 +555,7 @@ fn check_file(path: &str, src: &str) -> Vec<Violation> {
     out.extend(check_band_anchoring(path, src));
     out.extend(check_eager_alloc(path, src));
     out.extend(check_net_deadline(path, src));
+    out.extend(check_panic_boundary(path, src));
     out
 }
 
@@ -810,6 +928,82 @@ fn pump(dl: &mut DeadlineStream, buf: &mut [u8]) -> io::Result<()> {
 let n = stream.read(&mut buf)?;
 ";
         assert!(check_net_deadline("serve/net/server.rs", allowed).is_empty());
+    }
+
+    // ---- panic-boundary ----
+
+    #[test]
+    fn catches_unwrap_and_panic_in_job_body() {
+        let src = "
+fn execute_inner(job: Job, slot: &mut BandSlot) {
+    let v = slot.state.take().unwrap();
+    panic!(\"boom\");
+}
+";
+        let v = check_panic_boundary("serve/scheduler.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == "panic-boundary"));
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn catches_bare_indexing_but_not_macros_or_attributes() {
+        let src = "
+fn execute(job: Job, slot: &mut BandSlot) {
+    let x = slot.bands[3];
+}
+";
+        assert_eq!(check_panic_boundary("serve/scheduler.rs", src).len(), 1);
+        let fine = "
+fn execute(job: Job, slot: &mut BandSlot) {
+    #[allow(dead_code)]
+    let v = vec![0u8; 4];
+    let y = slot.bands.get(3);
+}
+";
+        assert!(check_panic_boundary("serve/scheduler.rs", fine).is_empty(), "macro/attr brackets");
+    }
+
+    #[test]
+    fn catch_boundary_wrapped_code_is_exempt() {
+        let src = "
+fn execute_inner(job: Job, slot: &mut BandSlot) {
+    if let Err(msg) = catch_boundary(|| {
+        let v = items[0];
+        w.apply_batch(&mut batch).expect(\"apply\");
+    }) {
+        failed = Some(msg);
+    }
+}
+";
+        assert!(check_panic_boundary("serve/scheduler.rs", src).is_empty());
+    }
+
+    #[test]
+    fn panic_boundary_scope_and_suppression() {
+        // Producer-side functions in scheduler.rs are out of scope —
+        // expects with context are legal off the worker path.
+        let src = "
+fn spawn_actor(&self, seed: BandSeed) -> Arc<BandActor> {
+    self.inner.lock().expect(\"pool lock\").spawn()
+}
+";
+        assert!(check_panic_boundary("serve/scheduler.rs", src).is_empty());
+        // Other files are out of scope entirely.
+        let job = "
+fn execute(job: Job) {
+    job.reply.send(0).unwrap();
+}
+";
+        assert!(check_panic_boundary("serve/session.rs", job).is_empty());
+        // Inside, a justified exception is suppressible.
+        let allowed = "
+fn execute(job: Job, slot: &mut BandSlot) {
+    // lint-invariants: allow(panic-boundary)
+    let v = slot.state.take().unwrap();
+}
+";
+        assert!(check_panic_boundary("serve/scheduler.rs", allowed).is_empty());
     }
 
     // ---- whole-tree gate ----
