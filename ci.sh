@@ -7,10 +7,12 @@
 # snapshot frames_per_sec), BENCH_denoise.json (support-scan tier
 # sweep + denoise-shard scaling, events_per_sec) and BENCH_serve.json
 # (multi-tenant sessions × workers sweep, aggregate events_per_sec +
-# snapshot_p99_ms, the idle-fleet memory sweep's
+# snapshot_p99_us, the per-stage telemetry p99s off the fleet's
+# observability plane, the idle-fleet memory sweep's
 # resident_bytes_per_session at 1/10/100 % duty, and the wire-mode
 # loopback-TCP round trip's wire_to_snapshot_p99_us) at the repo root
-# so successive PRs can be compared.
+# so successive PRs can be compared — `cargo xtask bench-compare
+# OLD.json NEW.json` diffs two snapshots and fails on >20% drift.
 # A missing or empty snapshot is a hard failure — a bench binary that
 # silently stopped emitting its JSON would otherwise erase the perf
 # trajectory without anyone noticing.
@@ -52,6 +54,18 @@ fi
 echo "== cargo bench (quick) =="
 (cd rust && cargo bench -- --quick)
 
+# Advisory perf-trajectory diff: the repo root still holds the previous
+# run's serve snapshot at this point (the copy below overwrites it), so
+# compare old vs new before copying. Never fails CI (perf noise on
+# shared runners), but the report lands in the log so drift is visible
+# PR over PR.
+if [ -s BENCH_serve.json ] && [ -s rust/BENCH_serve.json ] \
+   && ! cmp -s BENCH_serve.json rust/BENCH_serve.json; then
+    echo "== cargo xtask bench-compare (advisory, vs previous snapshot) =="
+    cargo run --quiet --package xtask -- bench-compare BENCH_serve.json rust/BENCH_serve.json \
+        || echo "ci.sh: bench-compare reported drift (advisory only)" >&2
+fi
+
 fail=0
 for snap in BENCH_tsurface.json BENCH_router.json BENCH_denoise.json BENCH_serve.json; do
     if [ -s "rust/$snap" ]; then
@@ -67,11 +81,14 @@ done
 # The serve snapshot must carry the idle-fleet memory sweep (quiet
 # sessions' resident bytes are the lazy-materialization regression
 # canary), the wire-mode round trip (wire_to_snapshot_p99_us proves
-# the TCP front door was actually exercised end to end), AND the chaos
+# the TCP front door was actually exercised end to end), the chaos
 # sweep (clean_session_p99_under_faults_us proves panic isolation was
-# measured with faulty tenants in the fleet) — same hard-fail policy
-# as a missing snapshot.
-for key in resident_bytes_per_session duty_pct wire_to_snapshot_p99_us clean_session_p99_under_faults_us; do
+# measured with faulty tenants in the fleet), AND the per-stage
+# telemetry p99s (stage_* + queue_wait prove the observability plane
+# was live through the whole bench) — same hard-fail policy as a
+# missing snapshot.
+for key in resident_bytes_per_session duty_pct wire_to_snapshot_p99_us clean_session_p99_under_faults_us \
+           stage_decode_p99_us stage_score_p99_us stage_route_p99_us stage_render_p99_us queue_wait_p99_us; do
     if [ -s rust/BENCH_serve.json ] && ! grep -q "\"$key\"" rust/BENCH_serve.json; then
         echo "ci.sh: ERROR — rust/BENCH_serve.json lacks required bench key \"$key\"" >&2
         fail=1

@@ -13,8 +13,10 @@
 //!
 //! Dumps `BENCH_serve.json` (via `util::bench::dump_json`) next to the
 //! manifest; CI uploads it alongside the tsurface/router/denoise
-//! snapshots and hard-fails if the idle-fleet or chaos keys are
-//! missing.
+//! snapshots and hard-fails if the idle-fleet, chaos, or per-stage
+//! telemetry keys (`stage_{decode,score,route,render}_p99_us`,
+//! `queue_wait_p99_us` — read off the fleet's observability plane)
+//! are missing. Two runs diff with `cargo xtask bench-compare`.
 
 use std::time::{Duration, Instant};
 use tsisc::coordinator::{PipelineConfig, RouterConfig};
@@ -92,13 +94,21 @@ fn bench_fleet(
         }
     });
     println!("{}", r.report());
-    let p99_ms = percentile(&snap_lat, 99.0) * 1e3;
-    println!("    snapshot p99 {p99_ms:.3} ms over {} frames", snap_lat.len());
+    let p99_us = percentile(&snap_lat, 99.0) * 1e6;
+    println!("    snapshot p99 {p99_us:.1} µs over {} frames", snap_lat.len());
     let tput = r.throughput_per_sec();
     let mut entry = JsonEntry::with(r, "sessions", sessions as f64);
     entry.extra.push(("workers", workers as f64));
     entry.extra.push(("events_per_sec", tput));
-    entry.extra.push(("snapshot_p99_ms", p99_ms));
+    entry.extra.push(("snapshot_p99_us", p99_us));
+    // Per-stage p99s from the fleet's telemetry plane (bucket-upper
+    // resolution; zeros under `telemetry-off`, but the keys — which CI
+    // hard-requires — stay present).
+    let obs = m.obs();
+    entry.extra.push(("queue_wait_p99_us", obs.queue_wait.percentile(99.0) as f64));
+    entry.extra.push(("stage_score_p99_us", obs.stage_score.percentile(99.0) as f64));
+    entry.extra.push(("stage_route_p99_us", obs.stage_route.percentile(99.0) as f64));
+    entry.extra.push(("stage_render_p99_us", obs.stage_render.percentile(99.0) as f64));
     json.push(entry);
     m.shutdown();
 }
@@ -353,6 +363,10 @@ fn bench_wire(json: &mut Vec<JsonEntry>, base: &[LabeledEvent], span: u64, res: 
     entry.extra.push(("wire", 1.0));
     entry.extra.push(("events_per_sec", tput));
     entry.extra.push(("wire_to_snapshot_p99_us", p99_us));
+    // The decode stage only exists on the wire path (AER frames off the
+    // socket), so its p99 is exported here rather than in bench_fleet.
+    let obs = server.obs();
+    entry.extra.push(("stage_decode_p99_us", obs.stage_decode.percentile(99.0) as f64));
     json.push(entry);
 
     client.bye().expect("bench BYE");

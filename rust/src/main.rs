@@ -11,6 +11,8 @@
 //!                             print the net summary on shutdown
 //!   camera --connect ADDR     stream one synthetic camera over TCP to a
 //!                             running `serve --listen` front door
+//!   top --connect ADDR        scrape a running front door's telemetry
+//!                             (wire STATS) and print the fleet summary
 //!   train [--family F]        train the classifier on a synthetic dataset
 //!                             through the AOT artifacts (needs `make artifacts`)
 //!   info                      runtime/platform diagnostics
@@ -25,6 +27,7 @@ fn main() {
         Some("pipeline") => cmd_pipeline(&args),
         Some("serve") => cmd_serve(&args),
         Some("camera") => cmd_camera(&args),
+        Some("top") => cmd_top(&args),
         Some("train") => cmd_train(&args),
         Some("info") => cmd_info(),
         _ => {
@@ -50,6 +53,8 @@ USAGE:
   tsisc serve --listen HOST:PORT [--duration S] [--workers N]
               [--max-sessions M] [--max-connections C] [--max-inflight B]
               [--read-timeout-ms T] [--idle-timeout-ms T] [--error-budget N]
+              [--metrics HOST:PORT] [--json-stats PATH] [--json-every S]
+  tsisc top --connect HOST:PORT [--raw]
   tsisc camera --connect HOST:PORT [--duration S] [--width W] [--height H]
                [--window-ms T] [--stcf] [--shards K] [--denoise-shards K]
                [--batch-size N] [--chunk N] [--name S] [--seed N]
@@ -302,7 +307,7 @@ fn cmd_serve(args: &Args) -> i32 {
         let p = &report.pipeline;
         println!(
             "  {:<12} {:>4}x{:<4} rate {:<3} | {:>7} in, {:>7} written, {:>6} dropped | \
-             {} frames | p50 {:.2} ms p99 {:.2} ms | peak queue {} | {:.1} KiB resident",
+             {} frames | ack p50 {:.0} µs p99 {:.0} µs | peak queue {} | {:.1} KiB resident",
             st.name,
             st.res.width,
             st.res.height,
@@ -311,8 +316,8 @@ fn cmd_serve(args: &Args) -> i32 {
             p.events_written,
             p.events_dropped_by_stcf,
             frames[k],
-            st.batch_latency_p50_ms,
-            st.batch_latency_p99_ms,
+            st.ingest_ack_p50_us,
+            st.ingest_ack_p99_us,
             st.peak_queue_depth,
             resident as f64 / 1024.0,
         );
@@ -366,7 +371,36 @@ fn cmd_serve_listen(addr: &str, args: &Args) -> i32 {
         server.local_addr(),
         server.local_addr(),
     );
-    std::thread::sleep(Duration::from_secs_f64(dur));
+    // Export surfaces: --metrics serves the fleet scrape over HTTP;
+    // --json-stats writes a periodic JSON snapshot (bench-JSON shape,
+    // diffable with `cargo run -p xtask -- bench-compare`).
+    let metrics = match args.get("metrics") {
+        Some(maddr) => match server.spawn_metrics(maddr) {
+            Ok(m) => {
+                eprintln!("metrics scrape at http://{}/", m.local_addr());
+                Some(m)
+            }
+            Err(e) => {
+                eprintln!("serve: metrics bind {maddr}: {e}");
+                return 1;
+            }
+        },
+        None => None,
+    };
+    let mut json = args.get("json-stats").map(|path| {
+        tsisc::serve::ObsJsonWriter::new(path, args.get_parsed("json-every", 5u64).max(1))
+    });
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs_f64() < dur {
+        std::thread::sleep(Duration::from_millis(200));
+        if let Some(w) = json.as_mut() {
+            server.tick_json(w);
+        }
+    }
+    if let Some(w) = json.as_mut() {
+        server.tick_json(w);
+    }
+    drop(metrics);
     eprintln!("duration elapsed — draining live sessions ...");
     let stats = server.shutdown();
     print_net_summary(&stats);
@@ -478,6 +512,149 @@ fn cmd_camera(args: &Args) -> i32 {
             eprintln!("camera: {e}");
             1
         }
+    }
+}
+
+/// `tsisc top`: one wire `STATS` scrape of a running front door,
+/// rendered as a fleet summary — per-stage p50/p99, worker utilization,
+/// degrade tier, then a per-session table. `--raw` dumps the
+/// Prometheus-style text untouched (what `--metrics` serves over HTTP).
+fn cmd_top(args: &Args) -> i32 {
+    use tsisc::serve::net::{ClientConfig, NetClient};
+
+    let Some(addr) = args.get("connect") else {
+        eprintln!("top: missing --connect HOST:PORT");
+        return 2;
+    };
+    let text = match NetClient::connect(addr, ClientConfig::default())
+        .and_then(|mut c| c.stats())
+    {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("top: {addr}: {e}");
+            return 1;
+        }
+    };
+    if args.flag("raw") {
+        print!("{text}");
+        return 0;
+    }
+    let scrape = Scrape::parse(&text);
+    print_top(&scrape);
+    0
+}
+
+/// A parsed scrape: `name{labels} value` lines keyed verbatim (comment
+/// lines skipped). Shared by `tsisc top`'s summary and table renderers.
+struct Scrape {
+    values: std::collections::BTreeMap<String, f64>,
+}
+
+impl Scrape {
+    fn parse(text: &str) -> Self {
+        let mut values = std::collections::BTreeMap::new();
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((key, val)) = line.rsplit_once(' ') {
+                if let Ok(v) = val.parse::<f64>() {
+                    values.insert(key.to_string(), v);
+                }
+            }
+        }
+        Scrape { values }
+    }
+
+    fn get(&self, key: &str) -> f64 {
+        self.values.get(key).copied().unwrap_or(0.0)
+    }
+
+    /// p50/p99 of a histogram by bare name, optional session label.
+    fn quantiles(&self, name: &str, session: Option<&str>) -> (f64, f64) {
+        let labels = session.map_or(String::new(), |s| format!(",session=\"{s}\""));
+        (
+            self.get(&format!("{name}{{quantile=\"0.5\"{labels}}}")),
+            self.get(&format!("{name}{{quantile=\"0.99\"{labels}}}")),
+        )
+    }
+
+    /// Session names, recovered from the per-session labeled lines.
+    fn sessions(&self) -> Vec<String> {
+        self.values
+            .keys()
+            .filter_map(|k| {
+                k.strip_prefix("session_events_in_total{session=\"")
+                    .and_then(|rest| rest.strip_suffix("\"}"))
+                    .map(str::to_string)
+            })
+            .collect()
+    }
+}
+
+fn print_top(s: &Scrape) {
+    let tier = match s.get("degrade_tier_total") as u8 {
+        0 => "nominal",
+        1 => "defer-cold",
+        2 => "serve-stale",
+        _ => "shed",
+    };
+    println!(
+        "fleet: {} sessions on {} workers | uptime {:.1} s | busy {:.1}% | \
+         degrade {tier} | resident {:.2} MiB",
+        s.get("open_sessions_total"),
+        s.get("workers_total"),
+        s.get("uptime_us") / 1e6,
+        s.get("worker_busy_ratio") * 100.0,
+        s.get("resident_bytes") / (1024.0 * 1024.0),
+    );
+    println!(
+        "jobs executed {} | events in {} | rejected batches {} | ready depth {} | \
+         quarantines {}",
+        s.get("jobs_executed_total"),
+        s.get("events_in_total"),
+        s.get("rejected_batches_total"),
+        s.get("ready_depth_total"),
+        s.get("quarantines_total"),
+    );
+    println!("stage p50/p99 µs:");
+    for (label, name) in [
+        ("decode", "stage_decode_us"),
+        ("score", "stage_score_us"),
+        ("route", "stage_route_us"),
+        ("render", "stage_render_us"),
+        ("composite", "stage_composite_us"),
+        ("queue wait", "queue_wait_us"),
+        ("ingest ack", "ingest_ack_us"),
+        ("batch e2e", "batch_e2e_us"),
+    ] {
+        let (p50, p99) = s.quantiles(name, None);
+        println!("  {label:<10} {p50:>8.0} / {p99:<8.0}");
+    }
+    let sessions = s.sessions();
+    if sessions.is_empty() {
+        return;
+    }
+    println!(
+        "{:<16} {:>10} {:>10} {:>8}  {:>15}  {:>15}  {:>10}",
+        "session", "in", "routed", "dropped", "queue p50/p99", "e2e p50/p99", "resident"
+    );
+    for name in &sessions {
+        let block = format!("{{session=\"{name}\"}}");
+        let (qw50, qw99) = s.quantiles("session_queue_wait_us", Some(name));
+        let (e50, e99) = s.quantiles("session_batch_e2e_us", Some(name));
+        println!(
+            "{:<16} {:>10} {:>10} {:>8}  {:>7.0}/{:<7.0}  {:>7.0}/{:<7.0}  {:>8.1}Ki",
+            name,
+            s.get(&format!("session_events_in_total{block}")),
+            s.get(&format!("session_events_routed_total{block}")),
+            s.get(&format!("session_events_dropped_by_stcf_total{block}")),
+            qw50,
+            qw99,
+            e50,
+            e99,
+            s.get(&format!("session_resident_bytes{block}")) / 1024.0,
+        );
     }
 }
 

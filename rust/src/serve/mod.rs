@@ -129,18 +129,42 @@
 //!                        ▼             ▼
 //!                     NetStats    back to the client (backoff + jitter on NACK)
 //! ```
+//!
+//! ## The telemetry plane
+//!
+//! [`obs`] is the measurement layer over all of the above (built on
+//! [`crate::util::telemetry`]): every scheduler job records queue-wait
+//! vs service time into per-session **and** fleet log2 histograms (µs),
+//! each pipeline stage (decode → score → route → render → composite)
+//! gets a span, a bounded per-session flight recorder captures the last
+//! jobs before a quarantine (dumped into [`SessionFault::recent`]), and
+//! one Prometheus-style scrape body is served from three surfaces:
+//!
+//! ```text
+//!   job done ──► SessionObs ──double-record──► FleetObs(Registry)
+//!                  │ flight ring                 │ render_fleet_text
+//!                  ▼                             ├──► STATS_REQ/STATS (wire)
+//!   quarantine ──► SessionFault.recent           ├──► --metrics ADDR (HTTP)
+//!                                                └──► ObsJsonWriter (bench JSON)
+//! ```
+//!
+//! Histograms/spans/flight recorder compile out under `telemetry-off`;
+//! counters stay (they double as functional state). Frames are
+//! bit-for-bit identical either way (`tests/telemetry_equiv.rs`).
 
 // Serving code must surface failures as typed rejects or expects with
 // context, never bare unwraps (tests are exempt).
 #![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 pub mod net;
+pub mod obs;
 mod scheduler;
 pub mod session;
 pub mod stats;
 pub mod supervise;
 
 pub use crate::util::actor::SupervisionConfig;
+pub use obs::{FleetObs, FlightSample, MetricsServer, ObsJsonWriter, SessionObs};
 pub use scheduler::HoldGuard;
 pub use session::{Reject, RestoreError, ServeConfig, SessionConfig, SessionId, SessionManager};
 pub use stats::{NetStats, ServeStats, SessionReport, SessionStats, SupervisorStats};

@@ -248,6 +248,20 @@ impl NetClient {
         }
     }
 
+    /// One metrics scrape: send STATS_REQ, return the Prometheus-style
+    /// text body. Works before HELLO — `tsisc top` connects, scrapes,
+    /// and disconnects without ever opening a session.
+    pub fn stats(&mut self) -> Result<String, NetError> {
+        self.payload_buf.clear();
+        self.send(kind::STATS_REQ)?;
+        match self.read_reply()? {
+            kind::STATS => String::from_utf8(self.reply_buf.clone())
+                .map_err(|_| NetError::Protocol("STATS payload is not UTF-8".into())),
+            kind::NACK => Err(self.take_nack()),
+            k => Err(NetError::Protocol(format!("unexpected reply kind {k:#x} to STATS_REQ"))),
+        }
+    }
+
     /// Window frames received so far (in emission order).
     pub fn frames(&self) -> &[(u64, Grid<f64>)] {
         &self.frames

@@ -31,11 +31,14 @@ use super::frame::{self, code, kind, Crc32, Header, Hello, Nack, HEADER_LEN};
 use super::server::{NetConfig, NetCounters};
 use crate::events::aer::{AerDecoder, AerError};
 use crate::events::{Event, LabeledEvent};
+use crate::serve::obs::{elapsed_us, FleetObs};
 use crate::serve::session::{SessionConfig, SessionId, SessionManager};
 use crate::util::grid::Grid;
-use crate::util::sync::{Arc, AtomicU64, AtomicUsize, Mutex, Ordering};
+use crate::util::sync::{Arc, AtomicUsize, Mutex, Ordering};
+use crate::util::telemetry::Counter;
 use std::io;
 use std::net::TcpStream;
+use std::time::Instant;
 
 /// The manager handle every connection thread shares.
 pub(crate) type SharedManager = Arc<Mutex<SessionManager>>;
@@ -45,6 +48,9 @@ pub(crate) struct ConnCtx {
     pub(crate) manager: SharedManager,
     pub(crate) cfg: NetConfig,
     pub(crate) counters: Arc<NetCounters>,
+    /// Fleet observability root — handlers record the decode stage here
+    /// without taking the manager lock.
+    pub(crate) obs: Arc<FleetObs>,
     pub(crate) shutdown: Arc<AtomicUsize>,
 }
 
@@ -72,8 +78,8 @@ enum ConnEnd {
 const CHUNK: usize = 4096;
 
 #[inline]
-fn bump(c: &AtomicU64) {
-    c.fetch_add(1, Ordering::Relaxed);
+fn bump(c: &Counter) {
+    c.inc();
 }
 
 /// Run one connection to completion. Never panics outward by design;
@@ -156,6 +162,7 @@ impl Conn {
                 kind::HELLO => self.on_hello(&hdr),
                 kind::BATCH => self.on_batch(&hdr),
                 kind::SNAPSHOT_REQ => self.on_snapshot(&hdr),
+                kind::STATS_REQ => self.on_stats(&hdr),
                 kind::BYE => return self.on_bye(),
                 _ => self.on_unknown(&hdr),
             };
@@ -249,7 +256,10 @@ impl Conn {
             };
         }
         // Stream the AER body: every chunk feeds the running CRC and the
-        // incremental decoder in one pass.
+        // incremental decoder in one pass. The whole streaming window is
+        // the decode stage span (includes the socket reads — that is the
+        // real cost of getting a batch off the wire into events).
+        let t_decode = Instant::now();
         self.evbuf.clear();
         let mut decode_err: Option<AerError> = None;
         {
@@ -276,6 +286,7 @@ impl Conn {
                 }
             }
         }
+        self.ctx.obs.stage_decode.record(elapsed_us(t_decode));
         if crc.finish() != hdr.crc {
             bump(&self.ctx.counters.checksum_errors);
             return self.recoverable(code::BAD_CHECKSUM, seq, "BATCH checksum mismatch");
@@ -312,10 +323,7 @@ impl Conn {
                     }
                 }
                 bump(&self.ctx.counters.batches_acked);
-                self.ctx
-                    .counters
-                    .events_ingested
-                    .fetch_add(self.evbuf.len() as u64, Ordering::Relaxed);
+                self.ctx.counters.events_ingested.add(self.evbuf.len() as u64);
                 self.send_ack(seq).map_err(|e| classify_io(&e))
             }
             Err(reject) => {
@@ -375,6 +383,24 @@ impl Conn {
                 self.recoverable(reject.code(), 0, &reject.to_string())
             }
         }
+    }
+
+    /// STATS_REQ → one Prometheus-style scrape as a `STATS` frame.
+    /// Deliberately allowed before HELLO: operators scrape the fleet
+    /// without opening a session (or holding one open).
+    fn on_stats(&mut self, hdr: &Header) -> Result<(), ConnEnd> {
+        self.read_small_payload(hdr)?;
+        if !self.checksum_ok(hdr) {
+            return self.recoverable(code::BAD_CHECKSUM, 0, "STATS_REQ checksum mismatch");
+        }
+        let text = {
+            let mgr = self.lock_manager();
+            mgr.metrics_text()
+        };
+        self.frame_buf.clear();
+        self.frame_buf.extend_from_slice(text.as_bytes());
+        frame::encode_frame_into(&mut self.send_buf, kind::STATS, &self.frame_buf);
+        self.send_raw().map_err(|e| classify_io(&e))
     }
 
     fn on_bye(&mut self) -> ConnEnd {

@@ -30,6 +30,10 @@ pub mod kind {
     pub const SNAPSHOT_REQ: u8 = 0x03;
     /// Client→server: end of stream; drain and close my session.
     pub const BYE: u8 = 0x04;
+    /// Client→server: one metrics scrape, please (empty payload).
+    /// Allowed before HELLO — operators scrape without opening a
+    /// session.
+    pub const STATS_REQ: u8 = 0x05;
     /// Server→client: request `u32 seq` succeeded.
     pub const ACK: u8 = 0x81;
     /// Server→client: typed rejection (payload: [`super::Nack`]).
@@ -40,6 +44,10 @@ pub mod kind {
     pub const FRAME: u8 = 0x83;
     /// Server→client: BYE honored (`u64 frames_emitted` lifetime total).
     pub const BYE_OK: u8 = 0x84;
+    /// Server→client: one Prometheus-style text scrape (UTF-8 payload —
+    /// the same body `--metrics` serves over HTTP), answering
+    /// [`STATS_REQ`].
+    pub const STATS: u8 = 0x85;
 }
 
 /// Stable NACK codes. 1–9 mirror [`crate::serve::Reject::code`] (session

@@ -22,10 +22,12 @@
 //! | `BATCH` `0x02` | → | `seq u32 \| AER records` ([`crate::events::aer`]: varint Δt, `x u16`, `y u16`, `p u8`; Δ-base resets to 0 per frame, so each BATCH carries absolute times) |
 //! | `SNAPSHOT_REQ` `0x03` | → | `at_us u64` |
 //! | `BYE` `0x04` | → | empty |
+//! | `STATS_REQ` `0x05` | → | empty (allowed before HELLO — operators scrape sessionless) |
 //! | `ACK` `0x81` | ← | `seq u32` (HELLO is acked with seq 0) |
 //! | `NACK` `0x82` | ← | `code u16 \| retry_after_ms u32 \| seq u32 \| reason utf8` |
 //! | `FRAME` `0x83` | ← | `at_us u64 \| w u16 \| h u16 \| flags u8 \| w·h f64 LE` (bit-lossless; [`frame::flag::STALE`] marks a degraded snapshot) |
 //! | `BYE_OK` `0x84` | ← | `frames_emitted u64` |
+//! | `STATS` `0x85` | ← | Prometheus-style text scrape, UTF-8 (the same body `--metrics` serves over HTTP — see [`crate::serve::obs`]) |
 //!
 //! NACK codes 1–9 are [`Reject::code`](crate::serve::Reject::code)
 //! values straight from admission control (1–3 classic admission, 4

@@ -11,10 +11,12 @@
 use super::conn::{self, ConnCtx, SharedManager};
 use super::deadline::DeadlineStream;
 use super::frame::{self, code, kind, Nack};
+use crate::serve::obs::{FleetObs, MetricsServer, ObsJsonWriter};
 use crate::serve::session::{ServeConfig, SessionManager};
 use crate::serve::stats::{NetStats, ServeStats};
 use crate::util::sync::thread::{spawn, JoinHandle};
-use crate::util::sync::{Arc, AtomicU64, AtomicUsize, Mutex, Ordering};
+use crate::util::sync::{Arc, AtomicUsize, Mutex, Ordering};
+use crate::util::telemetry::{Counter, Registry};
 use std::io;
 use std::net::{SocketAddr, TcpListener};
 use std::time::Duration;
@@ -62,35 +64,64 @@ impl Default for NetConfig {
 
 /// Live counters shared by the listener and every connection handler.
 /// Snapshot with [`NetCounters::snapshot`]; field meanings mirror
-/// [`NetStats`] one-to-one.
-#[derive(Default)]
+/// [`NetStats`] one-to-one. Registered on the fleet's metric registry
+/// (as `net_*_total`) so one scrape covers the front door too; the
+/// counters stay functional state (error budgets, chaos accounting)
+/// and are never compiled out.
 pub(crate) struct NetCounters {
-    pub(crate) connections_accepted: AtomicU64,
-    pub(crate) connections_shed: AtomicU64,
-    pub(crate) hellos_rejected: AtomicU64,
-    pub(crate) sessions_opened: AtomicU64,
-    pub(crate) batches_acked: AtomicU64,
-    pub(crate) events_ingested: AtomicU64,
-    pub(crate) frames_sent: AtomicU64,
-    pub(crate) nacks_sent: AtomicU64,
-    pub(crate) bad_frames: AtomicU64,
-    pub(crate) checksum_errors: AtomicU64,
-    pub(crate) decode_errors: AtomicU64,
-    pub(crate) protocol_errors: AtomicU64,
-    pub(crate) duplicate_batches: AtomicU64,
-    pub(crate) backpressure_nacks: AtomicU64,
-    pub(crate) deadline_disconnects: AtomicU64,
-    pub(crate) budget_disconnects: AtomicU64,
-    pub(crate) abrupt_disconnects: AtomicU64,
-    pub(crate) sessions_drained_on_error: AtomicU64,
-    pub(crate) drain_accounting_mismatches: AtomicU64,
-    pub(crate) handler_panics: AtomicU64,
-    pub(crate) byes_completed: AtomicU64,
+    pub(crate) connections_accepted: Arc<Counter>,
+    pub(crate) connections_shed: Arc<Counter>,
+    pub(crate) hellos_rejected: Arc<Counter>,
+    pub(crate) sessions_opened: Arc<Counter>,
+    pub(crate) batches_acked: Arc<Counter>,
+    pub(crate) events_ingested: Arc<Counter>,
+    pub(crate) frames_sent: Arc<Counter>,
+    pub(crate) nacks_sent: Arc<Counter>,
+    pub(crate) bad_frames: Arc<Counter>,
+    pub(crate) checksum_errors: Arc<Counter>,
+    pub(crate) decode_errors: Arc<Counter>,
+    pub(crate) protocol_errors: Arc<Counter>,
+    pub(crate) duplicate_batches: Arc<Counter>,
+    pub(crate) backpressure_nacks: Arc<Counter>,
+    pub(crate) deadline_disconnects: Arc<Counter>,
+    pub(crate) budget_disconnects: Arc<Counter>,
+    pub(crate) abrupt_disconnects: Arc<Counter>,
+    pub(crate) sessions_drained_on_error: Arc<Counter>,
+    pub(crate) drain_accounting_mismatches: Arc<Counter>,
+    pub(crate) handler_panics: Arc<Counter>,
+    pub(crate) byes_completed: Arc<Counter>,
 }
 
 impl NetCounters {
+    /// Register every front-door counter on `reg` (idempotent by name).
+    pub(crate) fn registered(reg: &Registry) -> Self {
+        Self {
+            connections_accepted: reg.counter("net_connections_accepted_total"),
+            connections_shed: reg.counter("net_connections_shed_total"),
+            hellos_rejected: reg.counter("net_hellos_rejected_total"),
+            sessions_opened: reg.counter("net_sessions_opened_total"),
+            batches_acked: reg.counter("net_batches_acked_total"),
+            events_ingested: reg.counter("net_events_ingested_total"),
+            frames_sent: reg.counter("net_frames_sent_total"),
+            nacks_sent: reg.counter("net_nacks_sent_total"),
+            bad_frames: reg.counter("net_bad_frames_total"),
+            checksum_errors: reg.counter("net_checksum_errors_total"),
+            decode_errors: reg.counter("net_decode_errors_total"),
+            protocol_errors: reg.counter("net_protocol_errors_total"),
+            duplicate_batches: reg.counter("net_duplicate_batches_total"),
+            backpressure_nacks: reg.counter("net_backpressure_nacks_total"),
+            deadline_disconnects: reg.counter("net_deadline_disconnects_total"),
+            budget_disconnects: reg.counter("net_budget_disconnects_total"),
+            abrupt_disconnects: reg.counter("net_abrupt_disconnects_total"),
+            sessions_drained_on_error: reg.counter("net_sessions_drained_on_error_total"),
+            drain_accounting_mismatches: reg.counter("net_drain_accounting_mismatches_total"),
+            handler_panics: reg.counter("net_handler_panics_total"),
+            byes_completed: reg.counter("net_byes_completed_total"),
+        }
+    }
+
     pub(crate) fn snapshot(&self) -> NetStats {
-        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let g = |c: &Counter| c.get();
         NetStats {
             connections_accepted: g(&self.connections_accepted),
             connections_shed: g(&self.connections_shed),
@@ -136,9 +167,12 @@ impl NetServer {
         // The accept loop polls so a shutdown flag can stop it; handlers
         // use blocking reads with deadlines.
         listener.set_nonblocking(true)?;
-        let manager: SharedManager =
-            Arc::new(Mutex::new(SessionManager::new(cfg.serve.clone())));
-        let counters = Arc::new(NetCounters::default());
+        let sm = SessionManager::new(cfg.serve.clone());
+        // Front-door counters live on the fleet's registry so one
+        // scrape covers the whole stack.
+        let counters = Arc::new(NetCounters::registered(&sm.obs().registry));
+        let obs = sm.obs().clone();
+        let manager: SharedManager = Arc::new(Mutex::new(sm));
         let shutdown = Arc::new(AtomicUsize::new(0));
         let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let live = Arc::new(AtomicUsize::new(0));
@@ -149,7 +183,7 @@ impl NetServer {
             let shutdown = shutdown.clone();
             let handlers = handlers.clone();
             spawn(move || {
-                accept_loop(listener, cfg, manager, counters, shutdown, handlers, live)
+                accept_loop(listener, cfg, manager, obs, counters, shutdown, handlers, live)
             })
         };
         Ok(NetServer {
@@ -175,6 +209,40 @@ impl NetServer {
         stats
     }
 
+    /// The fleet scrape body (Prometheus-style text) — the same string
+    /// the wire `STATS` reply carries. Net counters are included: they
+    /// are registered on the fleet's registry at bind.
+    pub fn metrics_text(&self) -> String {
+        self.manager.lock().expect("session manager lock poisoned").metrics_text()
+    }
+
+    /// Serve the fleet scrape over HTTP at `addr` (`tsisc serve
+    /// --metrics ADDR`). The returned [`MetricsServer`] stops serving
+    /// when dropped; scrapes lock the manager only long enough to
+    /// render.
+    pub fn spawn_metrics(&self, addr: &str) -> io::Result<MetricsServer> {
+        let manager = self.manager.clone();
+        MetricsServer::spawn(addr, move || {
+            manager.lock().expect("session manager lock poisoned").metrics_text()
+        })
+    }
+
+    /// The fleet's observability plane (stage histograms + the metric
+    /// registry the scrape renders from).
+    pub fn obs(&self) -> Arc<FleetObs> {
+        self.manager.lock().expect("session manager lock poisoned").obs().clone()
+    }
+
+    /// Tick the periodic JSON snapshot writer (`tsisc serve
+    /// --json-stats PATH`) against the live fleet; returns whether a
+    /// snapshot was actually written this tick.
+    pub fn tick_json(&self, writer: &mut ObsJsonWriter) -> bool {
+        let stats = self.stats();
+        let obs =
+            self.manager.lock().expect("session manager lock poisoned").obs().clone();
+        writer.maybe_write(&obs, &stats)
+    }
+
     /// Graceful shutdown: stop accepting, signal every handler, wait for
     /// each to drain + close its session, then shut the fleet down.
     /// Returns the final statistics (net counters included).
@@ -182,7 +250,7 @@ impl NetServer {
         self.shutdown.store(1, Ordering::SeqCst);
         if let Some(h) = self.accept_handle.take() {
             if h.join().is_err() {
-                self.counters.handler_panics.fetch_add(1, Ordering::Relaxed);
+                self.counters.handler_panics.inc();
             }
         }
         let handlers = {
@@ -191,7 +259,7 @@ impl NetServer {
         };
         for h in handlers {
             if h.join().is_err() {
-                self.counters.handler_panics.fetch_add(1, Ordering::Relaxed);
+                self.counters.handler_panics.inc();
             }
         }
         // Every handler has drained its own session; anything left (a
@@ -212,6 +280,7 @@ fn accept_loop(
     listener: TcpListener,
     cfg: NetConfig,
     manager: SharedManager,
+    obs: Arc<FleetObs>,
     counters: Arc<NetCounters>,
     shutdown: Arc<AtomicUsize>,
     handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
@@ -224,17 +293,18 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 if live.load(Ordering::SeqCst) >= cfg.max_connections {
-                    counters.connections_shed.fetch_add(1, Ordering::Relaxed);
-                    counters.nacks_sent.fetch_add(1, Ordering::Relaxed);
+                    counters.connections_shed.inc();
+                    counters.nacks_sent.inc();
                     shed(stream, &cfg);
                     continue;
                 }
-                counters.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                counters.connections_accepted.inc();
                 live.fetch_add(1, Ordering::SeqCst);
                 let ctx = ConnCtx {
                     manager: manager.clone(),
                     cfg: cfg.clone(),
                     counters: counters.clone(),
+                    obs: obs.clone(),
                     shutdown: shutdown.clone(),
                 };
                 let live = live.clone();

@@ -1,0 +1,751 @@
+//! The fleet's observability plane: per-session stage tracing, the
+//! quarantine flight recorder, and every export surface.
+//!
+//! Built on [`crate::util::telemetry`] (counters/gauges/histograms +
+//! [`Registry`]); this module adds the serve-specific structure:
+//!
+//! * [`SessionObs`] — one per session, shared `Arc` between the session
+//!   front half and its band actors on the worker pool. Holds the
+//!   per-stage latency histograms (µs, log2 buckets) and the bounded
+//!   [`FlightRecorder`]. Every sample double-records into the matching
+//!   fleet-level histogram on [`FleetObs`], so fleet aggregates survive
+//!   session close and need no merge walk at scrape time.
+//! * [`FleetObs`] — one per `SessionManager`: the metric [`Registry`]
+//!   (supervisor + net counters register here) plus the fleet-level
+//!   stage histograms and the serving start time behind
+//!   `worker_busy_ratio`.
+//! * [`render_fleet_text`] — the Prometheus-style text body served by
+//!   both export surfaces: the `STATS_REQ`/`STATS` wire message and the
+//!   [`MetricsServer`] behind `tsisc serve --metrics ADDR`.
+//! * [`ObsJsonWriter`] — the periodic JSON snapshot writer reusing
+//!   `util::bench::dump_json`, so fleet snapshots land in the same
+//!   `{"benchmarks": [...]}` shape CI already parses.
+//!
+//! ## The two batch-latency metrics
+//!
+//! The fleet reports batch latency twice, on purpose:
+//!
+//! * **`ingest_ack_us`** — producer-side wall time of one
+//!   `ingest_batch` call: clock/admission checks, STCF staging and job
+//!   *enqueue*. This is what a wire client experiences as time-to-ACK.
+//!   It does **not** include queue wait or band-writer service — a
+//!   backlogged fleet still ACKs quickly.
+//! * **`batch_e2e_us`** — end-to-end: enqueue → band writer finished
+//!   applying the batch (`queue_wait_us` + write service). This is the
+//!   number that grows under load, and the one capacity planning reads.
+//!
+//! The historical `SessionStats.batch_latency_p50_ms/_p99_ms` measured
+//! ingest-ack only; its µs-backed successors keep that meaning (see
+//! `serve::stats`).
+//!
+//! Everything purely observational here — histograms, spans, the flight
+//! recorder — compiles to a no-op under the `telemetry-off` feature;
+//! frames are bit-for-bit identical either way
+//! (`tests/telemetry_equiv.rs`).
+
+use super::stats::ServeStats;
+use super::supervise::FaultJobKind;
+use crate::util::sync::{Arc, Mutex};
+use crate::util::telemetry::{render_histogram, Histogram, Registry};
+use std::time::Instant;
+
+/// Elapsed wall time since `t0` in microseconds — the repo's one
+/// duration unit (saturating; `u64` µs spans ~585k years).
+#[inline]
+pub fn elapsed_us(t0: Instant) -> u64 {
+    t0.elapsed().as_micros() as u64
+}
+
+/// RAII stage span: records its lifetime into a histogram (µs) on drop.
+/// Under `telemetry-off` it is a zero-sized no-op — not even the clock
+/// is read.
+#[cfg(not(feature = "telemetry-off"))]
+pub struct Span<'a> {
+    h: &'a Histogram,
+    t0: Instant,
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+impl<'a> Span<'a> {
+    #[inline]
+    pub fn enter(h: &'a Histogram) -> Self {
+        Self { h, t0: Instant::now() }
+    }
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        self.h.record(elapsed_us(self.t0));
+    }
+}
+
+/// The `telemetry-off` span: zero-sized, no clock read, no record.
+#[cfg(feature = "telemetry-off")]
+pub struct Span<'a>(std::marker::PhantomData<&'a ()>);
+
+#[cfg(feature = "telemetry-off")]
+impl<'a> Span<'a> {
+    #[inline]
+    pub fn enter(_h: &'a Histogram) -> Self {
+        Span(std::marker::PhantomData)
+    }
+}
+
+/// One flight-recorder record: a completed scheduler job with its
+/// queue-wait and service time. This is what a quarantined session's
+/// `SessionFault::recent` carries — the last [`FLIGHT_CAPACITY`] jobs
+/// before the panic, oldest first.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlightSample {
+    /// Per-session monotone sequence number (1-based).
+    pub seq: u64,
+    /// Band the job ran on.
+    pub band: u16,
+    /// Job kind, in the supervision taxonomy.
+    pub job: FaultJobKind,
+    /// Time spent in the ready queue before a worker picked it up (µs).
+    pub queue_wait_us: u64,
+    /// Time spent executing (µs).
+    pub service_us: u64,
+}
+
+/// Bound of the per-session flight-recorder ring. Sized so a
+/// `SessionFault` dump stays a screenful while still covering the
+/// handful of batches that precede a typical panic.
+pub const FLIGHT_CAPACITY: usize = 64;
+
+/// A bounded ring of the session's most recent job records. Recording
+/// takes a short per-session lock (never the registry's, never another
+/// session's); the ring is preallocated once, so the hot path does not
+/// allocate. Under `telemetry-off` this is a zero-sized no-op and
+/// `tail()` is always empty.
+#[cfg(not(feature = "telemetry-off"))]
+#[derive(Debug, Default)]
+pub struct FlightRecorder {
+    inner: Mutex<FlightRing>,
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+#[derive(Debug, Default)]
+struct FlightRing {
+    seq: u64,
+    ring: Vec<FlightSample>,
+    /// Overwrite cursor once the ring is full.
+    head: usize,
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+impl FlightRecorder {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(FlightRing {
+                seq: 0,
+                ring: Vec::with_capacity(FLIGHT_CAPACITY),
+                head: 0,
+            }),
+        }
+    }
+
+    /// Append one job record, evicting the oldest past [`FLIGHT_CAPACITY`].
+    pub fn record(&self, band: u16, job: FaultJobKind, queue_wait_us: u64, service_us: u64) {
+        let mut g = self.inner.lock().expect("flight recorder lock");
+        g.seq += 1;
+        let sample = FlightSample { seq: g.seq, band, job, queue_wait_us, service_us };
+        if g.ring.len() < FLIGHT_CAPACITY {
+            g.ring.push(sample);
+        } else {
+            let head = g.head;
+            g.ring[head] = sample;
+            g.head = (head + 1) % FLIGHT_CAPACITY;
+        }
+    }
+
+    /// Snapshot of the ring, oldest → newest. At most
+    /// [`FLIGHT_CAPACITY`] records, always.
+    pub fn tail(&self) -> Vec<FlightSample> {
+        let g = self.inner.lock().expect("flight recorder lock");
+        let mut out = Vec::with_capacity(g.ring.len());
+        if g.ring.len() < FLIGHT_CAPACITY {
+            out.extend_from_slice(&g.ring);
+        } else {
+            out.extend_from_slice(&g.ring[g.head..]);
+            out.extend_from_slice(&g.ring[..g.head]);
+        }
+        out
+    }
+}
+
+/// The `telemetry-off` flight recorder: zero-sized, records nothing.
+#[cfg(feature = "telemetry-off")]
+#[derive(Debug, Default)]
+pub struct FlightRecorder;
+
+#[cfg(feature = "telemetry-off")]
+impl FlightRecorder {
+    pub fn new() -> Self {
+        FlightRecorder
+    }
+
+    #[inline]
+    pub fn record(&self, _band: u16, _job: FaultJobKind, _queue_wait_us: u64, _service_us: u64) {}
+
+    pub fn tail(&self) -> Vec<FlightSample> {
+        Vec::new()
+    }
+}
+
+/// Fleet-level observability root: the metric [`Registry`] every serve
+/// counter registers into, the fleet-wide stage histograms, and the
+/// serving start time. One per `SessionManager`, shared by `Arc`.
+pub struct FleetObs {
+    /// Named registry: supervisor counters, net counters, and the fleet
+    /// histograms below all live here, so one [`Registry::render`]
+    /// covers every registered metric.
+    pub registry: Registry,
+    /// Queue wait of every scheduler job (enqueue → a worker dequeues).
+    pub queue_wait: Arc<Histogram>,
+    /// Wire BATCH payload decode (connection-scoped; sessions driven
+    /// in-process never touch a decode stage, so this one has no
+    /// per-session twin).
+    pub stage_decode: Arc<Histogram>,
+    /// STCF score job service time.
+    pub stage_score: Arc<Histogram>,
+    /// Band-write (route/apply) job service time.
+    pub stage_route: Arc<Histogram>,
+    /// Snapshot render job service time.
+    pub stage_render: Arc<Histogram>,
+    /// Frame composite (band gather on the session thread).
+    pub stage_composite: Arc<Histogram>,
+    /// Producer-side `ingest_batch` wall time (time-to-ACK; module docs).
+    pub ingest_ack: Arc<Histogram>,
+    /// End-to-end batch latency: enqueue → band writer applied it.
+    pub batch_e2e: Arc<Histogram>,
+    started: Instant,
+}
+
+impl FleetObs {
+    pub fn new() -> Self {
+        let registry = Registry::new();
+        let queue_wait = registry.histogram("queue_wait_us");
+        let stage_decode = registry.histogram("stage_decode_us");
+        let stage_score = registry.histogram("stage_score_us");
+        let stage_route = registry.histogram("stage_route_us");
+        let stage_render = registry.histogram("stage_render_us");
+        let stage_composite = registry.histogram("stage_composite_us");
+        let ingest_ack = registry.histogram("ingest_ack_us");
+        let batch_e2e = registry.histogram("batch_e2e_us");
+        Self {
+            registry,
+            queue_wait,
+            stage_decode,
+            stage_score,
+            stage_route,
+            stage_render,
+            stage_composite,
+            ingest_ack,
+            batch_e2e,
+            started: Instant::now(),
+        }
+    }
+
+    /// Wall time since the manager was built (µs, ≥ 1 so ratios are
+    /// division-safe).
+    pub fn uptime_us(&self) -> u64 {
+        elapsed_us(self.started).max(1)
+    }
+
+    /// Fraction of the worker pool's wall-clock capacity spent in job
+    /// service since start: Σ service-time sums ÷ (workers × uptime).
+    /// An approximation — checkpoint/restore/close service is not staged
+    /// — and 0 under `telemetry-off` (histogram sums read 0).
+    pub fn worker_busy_ratio(&self, workers: usize) -> f64 {
+        if workers == 0 {
+            return 0.0;
+        }
+        let busy_us = self.stage_score.sum() + self.stage_route.sum() + self.stage_render.sum();
+        (busy_us as f64 / (workers as f64 * self.uptime_us() as f64)).min(1.0)
+    }
+}
+
+impl Default for FleetObs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Per-session observability: stage histograms plus the flight
+/// recorder. Shared `Arc` between the session front half (ingest-ack,
+/// composite) and its band slots on the worker pool (queue wait, job
+/// service). Every sample double-records into the fleet twin so the
+/// fleet view needs no merge at scrape time and outlives the session.
+pub struct SessionObs {
+    fleet: Arc<FleetObs>,
+    pub queue_wait: Histogram,
+    pub stage_score: Histogram,
+    pub stage_route: Histogram,
+    pub stage_render: Histogram,
+    pub stage_composite: Histogram,
+    pub ingest_ack: Histogram,
+    pub batch_e2e: Histogram,
+    pub flight: FlightRecorder,
+}
+
+impl SessionObs {
+    pub fn new(fleet: Arc<FleetObs>) -> Self {
+        Self {
+            fleet,
+            queue_wait: Histogram::new(),
+            stage_score: Histogram::new(),
+            stage_route: Histogram::new(),
+            stage_render: Histogram::new(),
+            stage_composite: Histogram::new(),
+            ingest_ack: Histogram::new(),
+            batch_e2e: Histogram::new(),
+            flight: FlightRecorder::new(),
+        }
+    }
+
+    /// The fleet root this session double-records into.
+    pub fn fleet(&self) -> &Arc<FleetObs> {
+        &self.fleet
+    }
+
+    /// Record one completed scheduler job: flight-record it, count its
+    /// queue wait, and file its service time under the job's stage
+    /// (write → route, score → score, snapshot → render; the
+    /// lifecycle jobs have no stage histogram and only flight-record).
+    /// A completed write job also closes the end-to-end batch span:
+    /// `batch_e2e_us = queue_wait + service`.
+    pub fn record_job(&self, band: u16, job: FaultJobKind, queue_wait_us: u64, service_us: u64) {
+        self.flight.record(band, job, queue_wait_us, service_us);
+        self.queue_wait.record(queue_wait_us);
+        self.fleet.queue_wait.record(queue_wait_us);
+        match job {
+            FaultJobKind::Write => {
+                self.stage_route.record(service_us);
+                self.fleet.stage_route.record(service_us);
+                let e2e = queue_wait_us.saturating_add(service_us);
+                self.batch_e2e.record(e2e);
+                self.fleet.batch_e2e.record(e2e);
+            }
+            FaultJobKind::Score => {
+                self.stage_score.record(service_us);
+                self.fleet.stage_score.record(service_us);
+            }
+            FaultJobKind::Snapshot => {
+                self.stage_render.record(service_us);
+                self.fleet.stage_render.record(service_us);
+            }
+            FaultJobKind::Checkpoint | FaultJobKind::Restore | FaultJobKind::Close => {}
+        }
+    }
+
+    /// Record one frame-composite span (µs).
+    pub fn record_composite(&self, us: u64) {
+        self.stage_composite.record(us);
+        self.fleet.stage_composite.record(us);
+    }
+
+    /// Record one producer-side `ingest_batch` wall time (µs).
+    pub fn record_ingest_ack(&self, us: u64) {
+        self.ingest_ack.record(us);
+        self.fleet.ingest_ack.record(us);
+    }
+}
+
+fn push_gauge(out: &mut String, name: &str, v: u64) {
+    out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+}
+
+/// Render the full fleet scrape body: scrape-time gauges derived from
+/// [`ServeStats`], everything in the registry (fleet histograms +
+/// supervisor/net counters), then per-session labeled sections. This is
+/// the one text both export surfaces serve (wire `STATS` and
+/// `--metrics` HTTP).
+pub fn render_fleet_text(
+    fleet: &FleetObs,
+    stats: &ServeStats,
+    degrade_tier: u8,
+    sessions: &[(String, Arc<SessionObs>)],
+) -> String {
+    let mut out = String::new();
+    // Scrape-time fleet gauges (levels sampled from the manager, not
+    // registered: they are owned by functional state elsewhere).
+    push_gauge(&mut out, "uptime_us", fleet.uptime_us());
+    push_gauge(&mut out, "workers_total", stats.workers as u64);
+    push_gauge(&mut out, "open_sessions_total", stats.open_sessions as u64);
+    push_gauge(&mut out, "open_bands_total", stats.open_bands as u64);
+    push_gauge(&mut out, "ready_depth_total", stats.ready_depth as u64);
+    push_gauge(&mut out, "jobs_executed_total", stats.jobs_executed);
+    push_gauge(&mut out, "events_in_total", stats.events_in);
+    push_gauge(&mut out, "rejected_batches_total", stats.rejected_batches);
+    push_gauge(&mut out, "resident_bytes", stats.resident_bytes as u64);
+    push_gauge(&mut out, "degrade_tier_total", degrade_tier as u64);
+    out.push_str(&format!(
+        "# TYPE worker_busy_ratio gauge\nworker_busy_ratio {:.6}\n",
+        fleet.worker_busy_ratio(stats.workers)
+    ));
+    // Every registered metric: fleet stage histograms, supervisor and
+    // net counters.
+    out.push_str(&fleet.registry.render());
+    // Per-session sections, labeled by session name.
+    for s in &stats.sessions {
+        let labels = format!(",session=\"{}\"", s.name);
+        let block = format!("{{session=\"{}\"}}", s.name);
+        out.push_str(&format!("session_events_in_total{block} {}\n", s.events_in));
+        out.push_str(&format!("session_events_routed_total{block} {}\n", s.events_routed));
+        out.push_str(&format!(
+            "session_events_dropped_by_stcf_total{block} {}\n",
+            s.events_dropped_by_stcf
+        ));
+        out.push_str(&format!("session_snapshots_served_total{block} {}\n", s.snapshots_served));
+        out.push_str(&format!("session_resident_bytes{block} {}\n", s.resident_bytes));
+        if let Some((_, obs)) = sessions.iter().find(|(name, _)| *name == s.name) {
+            render_histogram(&mut out, "session_queue_wait_us", &labels, &obs.queue_wait);
+            render_histogram(&mut out, "session_stage_score_us", &labels, &obs.stage_score);
+            render_histogram(&mut out, "session_stage_route_us", &labels, &obs.stage_route);
+            render_histogram(&mut out, "session_stage_render_us", &labels, &obs.stage_render);
+            render_histogram(
+                &mut out,
+                "session_stage_composite_us",
+                &labels,
+                &obs.stage_composite,
+            );
+            render_histogram(&mut out, "session_ingest_ack_us", &labels, &obs.ingest_ack);
+            render_histogram(&mut out, "session_batch_e2e_us", &labels, &obs.batch_e2e);
+        }
+    }
+    out
+}
+
+/// Periodic JSON snapshot writer: serializes the fleet's headline
+/// numbers through `util::bench::dump_json`, so operational snapshots
+/// share the `{"benchmarks": [...]}` shape (and tooling) of the bench
+/// artifacts. Keys are the fixed set below — `bench-compare` can diff
+/// two snapshots the same way it diffs two bench runs.
+pub struct ObsJsonWriter {
+    path: String,
+    every_us: u64,
+    last: Option<Instant>,
+}
+
+impl ObsJsonWriter {
+    pub fn new(path: &str, every_secs: u64) -> Self {
+        Self { path: path.to_string(), every_us: every_secs.saturating_mul(1_000_000), last: None }
+    }
+
+    /// Write a snapshot if the interval elapsed (or none was written
+    /// yet). Returns whether a write happened.
+    pub fn maybe_write(&mut self, fleet: &FleetObs, stats: &ServeStats) -> bool {
+        let due = match self.last {
+            None => true,
+            Some(t0) => elapsed_us(t0) >= self.every_us,
+        };
+        if due {
+            self.write_now(fleet, stats);
+            self.last = Some(Instant::now());
+        }
+        due
+    }
+
+    /// Write one snapshot unconditionally.
+    pub fn write_now(&self, fleet: &FleetObs, stats: &ServeStats) {
+        let result = crate::util::bench::BenchResult {
+            name: "serve_obs_snapshot".to_string(),
+            iters: 1,
+            mean_ns: fleet.uptime_us() as f64 * 1e3,
+            stddev_ns: 0.0,
+            min_ns: fleet.uptime_us() as f64 * 1e3,
+            items_per_iter: stats.events_in as f64,
+        };
+        let entry = crate::util::bench::JsonEntry {
+            result,
+            extra: vec![
+                ("events_in_total", stats.events_in as f64),
+                ("jobs_executed_total", stats.jobs_executed as f64),
+                ("open_sessions_total", stats.open_sessions as f64),
+                ("resident_bytes", stats.resident_bytes as f64),
+                ("queue_wait_p99_us", fleet.queue_wait.percentile(99.0) as f64),
+                ("stage_decode_p99_us", fleet.stage_decode.percentile(99.0) as f64),
+                ("stage_score_p99_us", fleet.stage_score.percentile(99.0) as f64),
+                ("stage_route_p99_us", fleet.stage_route.percentile(99.0) as f64),
+                ("stage_render_p99_us", fleet.stage_render.percentile(99.0) as f64),
+                ("stage_composite_p99_us", fleet.stage_composite.percentile(99.0) as f64),
+                ("ingest_ack_p99_us", fleet.ingest_ack.percentile(99.0) as f64),
+                ("batch_e2e_p99_us", fleet.batch_e2e.percentile(99.0) as f64),
+                ("worker_busy_ratio", fleet.worker_busy_ratio(stats.workers)),
+            ],
+        };
+        crate::util::bench::dump_json(&[entry], &self.path);
+    }
+}
+
+/// A minimal HTTP/1.1 exposition endpoint for `tsisc serve --metrics
+/// ADDR`: every request gets a fresh scrape body from the `source`
+/// closure, regardless of method or path. Runs on one OS thread with a
+/// nonblocking accept loop so [`MetricsServer::stop`] can interrupt it.
+/// Deliberately uses `std` primitives directly (this is plain OS I/O,
+/// never loom-modeled, and lives outside `serve/net/`'s
+/// deadline-stream discipline — scrapes are read-once/write-once with
+/// socket timeouts).
+pub struct MetricsServer {
+    local_addr: std::net::SocketAddr,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0`) and serve scrapes of `source()`
+    /// until stopped.
+    pub fn spawn<F>(addr: &str, source: F) -> std::io::Result<Self>
+    where
+        F: Fn() -> String + Send + 'static,
+    {
+        let listener = std::net::TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop2 = std::sync::Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("tsisc-metrics".to_string())
+            .spawn(move || accept_scrapes(listener, stop2, source))?;
+        Ok(Self { local_addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports for tests).
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the serving thread.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_scrapes<F: Fn() -> String>(
+    listener: std::net::TcpListener,
+    stop: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    source: F,
+) {
+    while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = serve_scrape(stream, &source);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn serve_scrape<F: Fn() -> String>(
+    mut stream: std::net::TcpStream,
+    source: &F,
+) -> std::io::Result<()> {
+    use std::io::{Read, Write};
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(2)))?;
+    // Best-effort drain of the request head; the body served does not
+    // depend on method or path, so one read is enough for any scraper.
+    let mut req = [0u8; 1024];
+    let _ = stream.read(&mut req);
+    let body = source();
+    let head = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::serve::stats::{NetStats, SupervisorStats};
+
+    fn empty_serve_stats() -> ServeStats {
+        ServeStats {
+            workers: 2,
+            open_sessions: 0,
+            open_bands: 0,
+            jobs_executed: 7,
+            ready_depth: 0,
+            rejected_batches: 0,
+            events_in: 11,
+            resident_bytes: 4096,
+            sessions: Vec::new(),
+            net: NetStats::default(),
+            supervisor: SupervisorStats::default(),
+        }
+    }
+
+    #[test]
+    fn flight_recorder_is_bounded_and_ordered() {
+        let fr = FlightRecorder::new();
+        for i in 0..(FLIGHT_CAPACITY as u64 + 10) {
+            fr.record(3, FaultJobKind::Write, i, i * 2);
+        }
+        let tail = fr.tail();
+        if cfg!(feature = "telemetry-off") {
+            assert!(tail.is_empty());
+            return;
+        }
+        assert_eq!(tail.len(), FLIGHT_CAPACITY, "ring never exceeds its bound");
+        // Oldest → newest, consecutive seq, ending at the last record.
+        for w in tail.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1);
+        }
+        assert_eq!(tail.last().unwrap().seq, FLIGHT_CAPACITY as u64 + 10);
+        assert_eq!(tail.last().unwrap().queue_wait_us, FLIGHT_CAPACITY as u64 + 9);
+    }
+
+    #[test]
+    fn session_obs_double_records_into_fleet() {
+        let fleet = Arc::new(FleetObs::new());
+        let a = SessionObs::new(Arc::clone(&fleet));
+        let b = SessionObs::new(Arc::clone(&fleet));
+        a.record_job(0, FaultJobKind::Write, 10, 90);
+        b.record_job(1, FaultJobKind::Score, 5, 20);
+        a.record_job(2, FaultJobKind::Snapshot, 1, 300);
+        a.record_ingest_ack(42);
+        a.record_composite(17);
+        if cfg!(feature = "telemetry-off") {
+            assert_eq!(fleet.queue_wait.count(), 0);
+            return;
+        }
+        assert_eq!(fleet.queue_wait.count(), 3, "both sessions feed the fleet twin");
+        assert_eq!(a.queue_wait.count(), 2);
+        assert_eq!(b.queue_wait.count(), 1);
+        assert_eq!(fleet.stage_route.count(), 1);
+        assert_eq!(fleet.stage_score.count(), 1);
+        assert_eq!(fleet.stage_render.count(), 1);
+        assert_eq!(fleet.batch_e2e.sum(), 100, "e2e = queue wait + service");
+        assert_eq!(fleet.ingest_ack.sum(), 42);
+        assert_eq!(fleet.stage_composite.sum(), 17);
+        assert_eq!(a.flight.tail().len(), 2, "only a's jobs in a's flight ring");
+    }
+
+    #[test]
+    fn lifecycle_jobs_flight_record_without_stage_histograms() {
+        let fleet = Arc::new(FleetObs::new());
+        let s = SessionObs::new(Arc::clone(&fleet));
+        s.record_job(0, FaultJobKind::Checkpoint, 4, 8);
+        s.record_job(0, FaultJobKind::Close, 2, 1);
+        if cfg!(feature = "telemetry-off") {
+            return;
+        }
+        assert_eq!(s.flight.tail().len(), 2);
+        assert_eq!(s.queue_wait.count(), 2);
+        assert_eq!(s.stage_route.count() + s.stage_score.count() + s.stage_render.count(), 0);
+    }
+
+    #[test]
+    fn fleet_text_carries_gauges_registry_and_session_sections() {
+        let fleet = Arc::new(FleetObs::new());
+        let obs = Arc::new(SessionObs::new(Arc::clone(&fleet)));
+        obs.record_job(0, FaultJobKind::Write, 10, 90);
+        let mut stats = empty_serve_stats();
+        stats.open_sessions = 1;
+        stats.sessions.push(crate::serve::stats::SessionStats {
+            id: 0,
+            name: "cam0".to_string(),
+            res: crate::events::Resolution { width: 8, height: 8 },
+            events_in: 5,
+            events_routed: 4,
+            events_dropped_by_stcf: 1,
+            frames_emitted: 0,
+            snapshots_served: 2,
+            bands_skipped_unchanged: 0,
+            batches_shipped: 1,
+            queue_depth: 0,
+            peak_queue_depth: 1,
+            rejected_batches: 0,
+            ingest_ack_p50_us: 100.0,
+            ingest_ack_p99_us: 200.0,
+            batch_e2e_p50_us: 0.0,
+            batch_e2e_p99_us: 0.0,
+            resident_bytes: 128,
+        });
+        let text = render_fleet_text(&fleet, &stats, 1, &[("cam0".to_string(), obs)]);
+        assert!(text.contains("workers_total 2"));
+        assert!(text.contains("degrade_tier_total 1"));
+        assert!(text.contains("worker_busy_ratio "));
+        assert!(text.contains("# TYPE queue_wait_us summary"));
+        assert!(text.contains("session_events_in_total{session=\"cam0\"} 5"));
+        assert!(text.contains("session_queue_wait_us{quantile=\"0.5\",session=\"cam0\"}"));
+        // Every non-comment line is `name[{labels}] value`, and every
+        // metric name obeys the repo name law.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let name = line.split(['{', ' ']).next().unwrap();
+            let stem = name
+                .strip_suffix("_count")
+                .or_else(|| name.strip_suffix("_sum"))
+                .unwrap_or(name);
+            assert!(
+                crate::util::telemetry::valid_metric_name(stem),
+                "exported name breaks the law: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn json_snapshot_writer_emits_stage_keys() {
+        let fleet = FleetObs::new();
+        fleet.stage_render.record(500);
+        let path = std::env::temp_dir().join("tsisc_obs_snapshot_test.json");
+        let path = path.to_str().unwrap();
+        let mut w = ObsJsonWriter::new(path, 3600);
+        assert!(w.maybe_write(&fleet, &empty_serve_stats()), "first write is immediate");
+        assert!(!w.maybe_write(&fleet, &empty_serve_stats()), "interval not yet elapsed");
+        let s = std::fs::read_to_string(path).unwrap();
+        for key in [
+            "queue_wait_p99_us",
+            "stage_decode_p99_us",
+            "stage_score_p99_us",
+            "stage_route_p99_us",
+            "stage_render_p99_us",
+            "batch_e2e_p99_us",
+            "worker_busy_ratio",
+        ] {
+            assert!(s.contains(key), "snapshot missing {key}");
+        }
+        if !cfg!(feature = "telemetry-off") {
+            assert!(s.contains("\"stage_render_p99_us\": 511.0"), "bucket upper of 500: {s}");
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn metrics_server_serves_one_scrape() {
+        use std::io::{Read, Write};
+        let srv = MetricsServer::spawn("127.0.0.1:0", || "fleet_up_total 1\n".to_string())
+            .expect("bind ephemeral");
+        let mut c = std::net::TcpStream::connect(srv.local_addr()).expect("connect");
+        c.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        c.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        c.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK\r\n"), "{resp}");
+        assert!(resp.contains("text/plain"));
+        assert!(resp.ends_with("fleet_up_total 1\n"), "{resp}");
+        srv.stop();
+    }
+}

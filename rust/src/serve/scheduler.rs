@@ -11,7 +11,10 @@
 //! `tests/loom_sched.rs` check them exhaustively. This module
 //! contributes only what is band-specific: the [`Job`] grammar, panic
 //! *quarantine* confined to one session, checkpoint export/restore
-//! jobs, and the in-flight / open-band fleet gauges.
+//! jobs, the in-flight / open-band fleet gauges, and the telemetry
+//! tap: every job is enqueued as a [`TimedJob`] so the worker records
+//! queue-wait vs service time per stage into the session's
+//! [`SessionObs`] (and its flight recorder) as the job completes.
 //!
 //! ## Supervision boundary
 //!
@@ -38,6 +41,7 @@
 use crate::coordinator::router::{BandSnapshot, BandWriter};
 use crate::denoise::sharded::{BandScorer, ScoreItem, ShardTally};
 use crate::events::Event;
+use crate::serve::obs::{elapsed_us, SessionObs};
 use crate::serve::supervise::{
     ArmedFault, BandCheckpoint, FaultBoard, FaultJobKind, SessionFault, SupervisorCounters,
 };
@@ -135,6 +139,32 @@ pub(crate) enum Job {
     Close { band: usize, reply: Sender<CloseDone> },
 }
 
+impl Job {
+    /// The job's kind in the supervision/observability taxonomy.
+    fn kind(&self) -> FaultJobKind {
+        match self {
+            Job::Write(_) => FaultJobKind::Write,
+            Job::Score { .. } => FaultJobKind::Score,
+            Job::Snapshot { .. } => FaultJobKind::Snapshot,
+            Job::Checkpoint { .. } => FaultJobKind::Checkpoint,
+            Job::Restore { .. } => FaultJobKind::Restore,
+            Job::Close { .. } => FaultJobKind::Close,
+        }
+    }
+}
+
+/// Every queued job wrapped with its enqueue instant, so the worker can
+/// split observed latency into queue wait (enqueue → dequeue) and
+/// service time (the `execute_inner` body) — the two numbers the
+/// telemetry plane files per stage and the flight recorder keeps per
+/// job. The instant is captured unconditionally (one clock read; the
+/// `telemetry-off` guarantee is about observable frames, not about
+/// skipping a register-sized timestamp).
+pub(crate) struct TimedJob {
+    enqueued: std::time::Instant,
+    job: Job,
+}
+
 /// The per-actor slot handed to the job runner: the band state plus the
 /// fleet gauges and supervision hooks the runner maintains as jobs
 /// complete.
@@ -160,6 +190,9 @@ pub(crate) struct BandSlot {
     faults: Arc<FaultBoard>,
     /// Fleet supervision counters.
     counters: Arc<SupervisorCounters>,
+    /// The owning session's observability handle: stage histograms +
+    /// flight recorder (shared with the session front half).
+    obs: Arc<SessionObs>,
     /// Chaos-injection plan armed on this session (None in production).
     armed: Option<Arc<ArmedFault>>,
 }
@@ -175,6 +208,7 @@ pub(crate) struct BandSeed {
     pub resident: Arc<AtomicUsize>,
     pub faults: Arc<FaultBoard>,
     pub counters: Arc<SupervisorCounters>,
+    pub obs: Arc<SessionObs>,
     pub armed: Option<Arc<ArmedFault>>,
 }
 
@@ -191,13 +225,13 @@ fn sync_resident(slot: &mut BandSlot) {
 }
 
 /// One (session, band) actor on the generic pool.
-pub(crate) type BandActor = Actor<BandSlot, Job>;
+pub(crate) type BandActor = Actor<BandSlot, TimedJob>;
 
 /// The fixed worker fleet (a band-typed [`ActorPool`] with worker
 /// supervision: a dead worker thread is respawned under the restart
 /// budget, and budget exhaustion flags the fleet degraded).
 pub(crate) struct WorkerPool {
-    pool: ActorPool<BandSlot, Job>,
+    pool: ActorPool<BandSlot, TimedJob>,
 }
 
 /// Pauses the worker fleet while alive (workers finish their current
@@ -205,7 +239,7 @@ pub(crate) struct WorkerPool {
 /// it resumes draining. Used to stage deterministic backpressure and
 /// for maintenance drains.
 pub struct HoldGuard {
-    _hold: Hold<BandSlot, Job>,
+    _hold: Hold<BandSlot, TimedJob>,
 }
 
 impl WorkerPool {
@@ -231,6 +265,7 @@ impl WorkerPool {
             last_bytes: 0,
             faults: seed.faults,
             counters: seed.counters,
+            obs: seed.obs,
             armed: seed.armed,
         };
         sync_resident(&mut slot);
@@ -242,7 +277,7 @@ impl WorkerPool {
     /// layer's admission check against the in-flight gauge (which the
     /// session bumps *before* enqueueing a [`Job::Write`]).
     pub(crate) fn enqueue(&self, actor: &Arc<BandActor>, job: Job) {
-        self.pool.enqueue(actor, job);
+        self.pool.enqueue(actor, TimedJob { enqueued: std::time::Instant::now(), job });
     }
 
     /// Jobs executed fleet-wide since construction.
@@ -293,16 +328,27 @@ fn quarantine(slot: &mut BandSlot, job: FaultJobKind, detail: String) {
     if slot.state.take().is_some() {
         slot.open_bands.fetch_sub(1, Ordering::SeqCst);
     }
-    slot.counters.job_panics.fetch_add(1, Ordering::Relaxed);
-    let prior_faults = slot.faults.file(SessionFault { band: slot.band, job, detail });
+    slot.counters.job_panics.inc();
+    // Dump the session's flight-recorder tail into the fault so the
+    // jobs leading up to the panic are preserved post-mortem (the
+    // panicking job itself never completed, so it is not in the ring).
+    let recent = slot.obs.flight.tail();
+    let prior_faults = slot.faults.file(SessionFault { band: slot.band, job, detail, recent });
     if prior_faults == 0 {
         // Count sessions entering quarantine, not individual faults.
-        slot.counters.quarantines.fetch_add(1, Ordering::Relaxed);
+        slot.counters.quarantines.inc();
     }
 }
 
-fn execute(job: Job, slot: &mut BandSlot) {
-    execute_inner(job, slot);
+fn execute(tj: TimedJob, slot: &mut BandSlot) {
+    let queue_wait_us = elapsed_us(tj.enqueued);
+    let kind = tj.job.kind();
+    let t0 = std::time::Instant::now();
+    execute_inner(tj.job, slot);
+    let service_us = elapsed_us(t0);
+    // File the completed job with the telemetry plane: queue wait +
+    // per-stage service histograms (session and fleet) + flight ring.
+    slot.obs.record_job(slot.band, kind, queue_wait_us, service_us);
     // One re-measure per job keeps the session's resident gauge honest
     // across materialization (first write), demotion (expiry snapshot),
     // active-set growth, quarantine and close — all of which change the
@@ -388,7 +434,7 @@ fn execute_inner(job: Job, slot: &mut BandSlot) {
                 quarantine(slot, FaultJobKind::Snapshot, msg);
             }
             if deadline_us > 0 && enqueued.elapsed().as_micros() as u64 > deadline_us {
-                slot.counters.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                slot.counters.deadline_misses.inc();
             }
             let rendered = out.rendered;
             let empty_static = out.empty_static;

@@ -34,11 +34,12 @@
 //! cold bands, serve stale dirty-band caches (flagged), shed new
 //! sessions — while window frames stay exact at every tier.
 
+use super::obs::{elapsed_us, render_fleet_text, FleetObs, SessionObs};
 use super::scheduler::{
     BandActor, BandSeed, BandState, CheckpointDone, CloseDone, HoldGuard, Job, RestoreDone,
     ScoreDone, SnapDone, WorkerPool,
 };
-use super::stats::{latency_percentiles_ms, ServeStats, SessionReport, SessionStats};
+use super::stats::{latency_percentiles_us, ServeStats, SessionReport, SessionStats};
 use super::supervise::{
     config_fingerprint, decode_checkpoint, encode_checkpoint, pressure, ArmedFault,
     BandCheckpoint, CheckpointError, DegradeTier, FaultBoard, SchedFaultPlan, SessionCheckpoint,
@@ -284,6 +285,10 @@ struct Session {
     counters: Arc<SupervisorCounters>,
     /// Soft snapshot deadline (µs), from the supervisor config.
     deadline_us: u64,
+    /// Per-session observability: stage histograms, flight recorder —
+    /// double-recording into the manager's [`FleetObs`]. Shared with the
+    /// session's band actors, which tap every job at execute time.
+    obs: Arc<SessionObs>,
     // Streaming state (the pipeline's producer loop, verbatim).
     pre: Vec<LabeledEvent>,
     kept: Vec<LabeledEvent>,
@@ -508,7 +513,7 @@ impl Session {
                 // Never materialized and no writes in flight: the band
                 // is provably event-free, so its render is all zeros —
                 // exactly the composite base. Deferring it is lossless.
-                self.counters.deferred_cold_snapshots.fetch_add(1, Ordering::Relaxed);
+                self.counters.deferred_cold_snapshots.inc();
                 continue;
             }
             if tier >= DegradeTier::ServeStale && cache.valid && self.band_dirty[s] {
@@ -543,14 +548,16 @@ impl Session {
             cache.empty_static = r.empty_static;
             self.band_dirty[r.band] = false;
         }
+        let tc = Instant::now();
         let slice = out.as_mut_slice();
         for (s, cache) in self.caches.iter().enumerate() {
             let band = cache.buf.as_ref().expect("band buffer returned");
             let y0 = s * self.band_h;
             slice[y0 * w..y0 * w + band.len()].copy_from_slice(band.as_slice());
         }
+        self.obs.record_composite(elapsed_us(tc));
         if stale {
-            self.counters.stale_frames_served.fetch_add(1, Ordering::Relaxed);
+            self.counters.stale_frames_served.inc();
         }
         self.stage_wall.snapshot_seconds += t0.elapsed().as_secs_f64();
         (out, stale)
@@ -593,7 +600,7 @@ impl Session {
     }
 
     fn live_stats(&self) -> SessionStats {
-        let (p50, p99) = latency_percentiles_ms(&self.batch_latency_s);
+        let (p50, p99) = latency_percentiles_us(&self.batch_latency_s);
         SessionStats {
             id: self.id.raw(),
             name: self.cfg.name.clone(),
@@ -608,8 +615,10 @@ impl Session {
             queue_depth: self.inflight.load(Ordering::SeqCst),
             peak_queue_depth: self.peak_queue_depth,
             rejected_batches: self.rejected_batches,
-            batch_latency_p50_ms: p50,
-            batch_latency_p99_ms: p99,
+            ingest_ack_p50_us: p50,
+            ingest_ack_p99_us: p99,
+            batch_e2e_p50_us: self.obs.batch_e2e.percentile(50.0) as f64,
+            batch_e2e_p99_us: self.obs.batch_e2e.percentile(99.0) as f64,
             resident_bytes: self.resident.load(Ordering::SeqCst),
         }
     }
@@ -631,8 +640,13 @@ pub struct SessionManager {
     next_id: u64,
     open_bands: Arc<AtomicUsize>,
     /// Fleet supervision counters (shared with every session and every
-    /// worker slot).
+    /// worker slot). Registered on `obs.registry` so a scrape renders
+    /// them without a snapshot round-trip.
     counters: Arc<SupervisorCounters>,
+    /// Fleet observability: the metric registry plus fleet-level stage
+    /// histograms every session double-records into (so the aggregates
+    /// survive session close).
+    obs: Arc<FleetObs>,
     /// Rejections + events of already-closed sessions (fleet totals).
     closed_rejected: u64,
     closed_events_in: u64,
@@ -642,13 +656,15 @@ impl SessionManager {
     /// Start a manager with a fresh fixed-size worker fleet (supervised:
     /// a dead worker respawns under the configured restart budget).
     pub fn new(cfg: ServeConfig) -> Self {
+        let obs = Arc::new(FleetObs::new());
         Self {
             pool: WorkerPool::new(cfg.workers, cfg.supervisor.supervision),
             cfg,
             sessions: BTreeMap::new(),
             next_id: 0,
             open_bands: Arc::new(AtomicUsize::new(0)),
-            counters: Arc::new(SupervisorCounters::new()),
+            counters: Arc::new(SupervisorCounters::registered(&obs.registry)),
+            obs,
             closed_rejected: 0,
             closed_events_in: 0,
         }
@@ -680,11 +696,12 @@ impl SessionManager {
         }
         let p = pressure(self.pool.ready_depth(), self.total_resident());
         if self.cfg.supervisor.tier_for(p) >= DegradeTier::Shed {
-            self.counters.sessions_shed_overloaded.fetch_add(1, Ordering::Relaxed);
+            self.counters.sessions_shed_overloaded.inc();
             return Err(Reject::Overloaded { pressure: p });
         }
         let id = SessionId(self.next_id);
         self.next_id += 1;
+        let obs = Arc::new(SessionObs::new(Arc::clone(&self.obs)));
         let inflight = Arc::new(AtomicUsize::new(0));
         let resident = Arc::new(AtomicUsize::new(0));
         let faults = Arc::new(FaultBoard::new());
@@ -705,6 +722,7 @@ impl SessionManager {
                     faults: faults.clone(),
                     counters: self.counters.clone(),
                     armed: armed.clone(),
+                    obs: obs.clone(),
                 })
             })
             .collect();
@@ -731,6 +749,7 @@ impl SessionManager {
                     faults: faults.clone(),
                     counters: self.counters.clone(),
                     armed: armed.clone(),
+                    obs: obs.clone(),
                 })
             })
             .collect();
@@ -771,6 +790,7 @@ impl SessionManager {
             armed,
             counters: self.counters.clone(),
             deadline_us: self.cfg.supervisor.snapshot_deadline_us,
+            obs,
             pre: Vec::with_capacity(batch_size),
             kept: Vec::with_capacity(batch_size),
             scores: Vec::new(),
@@ -830,6 +850,7 @@ impl SessionManager {
             s.batch_latency_s[s.latency_cursor] = dt;
             s.latency_cursor = (s.latency_cursor + 1) % LATENCY_SAMPLES;
         }
+        s.obs.record_ingest_ack((dt * 1e6) as u64);
         Ok(frames)
     }
 
@@ -922,7 +943,7 @@ impl SessionManager {
             // CRC guard must *detect* (tests/fleet_chaos.rs).
             armed.corrupt_checkpoint(&mut bytes, &s.counters);
         }
-        self.counters.checkpoints_taken.fetch_add(1, Ordering::Relaxed);
+        self.counters.checkpoints_taken.inc();
         Ok(bytes)
     }
 
@@ -948,7 +969,7 @@ impl SessionManager {
         }
         Self::apply_checkpoint(&self.pool, s, &ck);
         s.faults.clear();
-        self.counters.restores_completed.fetch_add(1, Ordering::Relaxed);
+        self.counters.restores_completed.inc();
         Ok(())
     }
 
@@ -968,7 +989,7 @@ impl SessionManager {
         if let Some(s) = self.sessions.get_mut(&sid.raw()) {
             Self::apply_checkpoint(&self.pool, s, &ck);
         }
-        self.counters.restores_completed.fetch_add(1, Ordering::Relaxed);
+        self.counters.restores_completed.inc();
         Ok(sid)
     }
 
@@ -976,7 +997,7 @@ impl SessionManager {
     fn decode_guarded(&self, bytes: &[u8]) -> Result<SessionCheckpoint, RestoreError> {
         decode_checkpoint(bytes).map_err(|e| {
             if e == CheckpointError::CrcMismatch {
-                self.counters.checkpoint_corruptions_detected.fetch_add(1, Ordering::Relaxed);
+                self.counters.checkpoint_corruptions_detected.inc();
             }
             RestoreError::Checkpoint(e)
         })
@@ -1200,6 +1221,35 @@ impl SessionManager {
             resident_bytes: sessions.iter().map(|s| s.resident_bytes).sum(),
             sessions,
         }
+    }
+
+    /// The fleet observability handle: metric registry + fleet-level
+    /// stage histograms (see [`FleetObs`]). Callers that own long-lived
+    /// references (metrics servers, JSON snapshot writers) clone the
+    /// `Arc`.
+    pub fn obs(&self) -> &Arc<FleetObs> {
+        &self.obs
+    }
+
+    /// One Prometheus-style text scrape of everything the fleet knows:
+    /// every registered counter (supervisor + any net front door
+    /// registered on this fleet's registry), the fleet gauges and stage
+    /// histograms, and per-session labeled counters + histograms. This
+    /// is the body both the `STATS` wire reply and the `--metrics` HTTP
+    /// endpoint serve.
+    pub fn metrics_text(&self) -> String {
+        let tier = match self.current_tier() {
+            DegradeTier::Nominal => 0u8,
+            DegradeTier::DeferCold => 1,
+            DegradeTier::ServeStale => 2,
+            DegradeTier::Shed => 3,
+        };
+        let pairs: Vec<(String, Arc<SessionObs>)> = self
+            .sessions
+            .values()
+            .map(|s| (s.cfg.name.clone(), s.obs.clone()))
+            .collect();
+        render_fleet_text(&self.obs, &self.stats(), tier, &pairs)
     }
 
     /// Close every remaining session and stop the worker fleet,

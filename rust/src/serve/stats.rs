@@ -40,11 +40,23 @@ pub struct SessionStats {
     pub peak_queue_depth: usize,
     /// `ingest_batch` calls rejected by admission control.
     pub rejected_batches: u64,
-    /// p50 of per-`ingest_batch` wall latency, milliseconds (0 when no
-    /// batch completed yet).
-    pub batch_latency_p50_ms: f64,
-    /// p99 of per-`ingest_batch` wall latency, milliseconds.
-    pub batch_latency_p99_ms: f64,
+    /// p50 of producer-side `ingest_batch` wall latency
+    /// (**time-to-ACK**: staging + enqueue, *not* queue wait or band
+    /// service — see `serve::obs` module docs), microseconds; 0 when no
+    /// batch completed yet. This is the µs-backed successor of the old
+    /// `batch_latency_p50_ms` field, same measurement.
+    pub ingest_ack_p50_us: f64,
+    /// p99 of producer-side `ingest_batch` wall latency, microseconds.
+    pub ingest_ack_p99_us: f64,
+    /// p50 of **end-to-end** batch latency (enqueue → band writer
+    /// applied the batch, i.e. queue wait + write service),
+    /// microseconds. Bucket-quantized: read from the session's
+    /// `batch_e2e_us` log2 histogram, so values are bucket upper
+    /// bounds; 0 under `telemetry-off`.
+    pub batch_e2e_p50_us: f64,
+    /// p99 of end-to-end batch latency, microseconds (see
+    /// [`SessionStats::batch_e2e_p50_us`]).
+    pub batch_e2e_p99_us: f64,
     /// Approximate resident bytes of the session's band states (writer
     /// arrays + scorer surfaces), maintained by the fleet workers as
     /// jobs complete. Activity-proportional under lazy materialization:
@@ -52,6 +64,22 @@ pub struct SessionStats {
     /// bytes decay as its bands expire past the memory horizon and
     /// demote.
     pub resident_bytes: usize,
+}
+
+impl SessionStats {
+    /// The pre-µs-unification name and unit of
+    /// [`SessionStats::ingest_ack_p50_us`].
+    #[deprecated(note = "units unified to µs repo-wide; read ingest_ack_p50_us")]
+    pub fn batch_latency_p50_ms(&self) -> f64 {
+        self.ingest_ack_p50_us / 1e3
+    }
+
+    /// The pre-µs-unification name and unit of
+    /// [`SessionStats::ingest_ack_p99_us`].
+    #[deprecated(note = "units unified to µs repo-wide; read ingest_ack_p99_us")]
+    pub fn batch_latency_p99_ms(&self) -> f64 {
+        self.ingest_ack_p99_us / 1e3
+    }
 }
 
 /// Final accounting of one closed session.
@@ -199,12 +227,13 @@ pub struct NetStats {
     pub byes_completed: u64,
 }
 
-/// (p50, p99) of a latency sample set in milliseconds; zeros when empty.
-pub(crate) fn latency_percentiles_ms(samples_s: &[f64]) -> (f64, f64) {
+/// (p50, p99) of a latency sample set, seconds in → **microseconds**
+/// out (the repo's one duration unit); zeros when empty.
+pub(crate) fn latency_percentiles_us(samples_s: &[f64]) -> (f64, f64) {
     if samples_s.is_empty() {
         return (0.0, 0.0);
     }
-    (percentile(samples_s, 50.0) * 1e3, percentile(samples_s, 99.0) * 1e3)
+    (percentile(samples_s, 50.0) * 1e6, percentile(samples_s, 99.0) * 1e6)
 }
 
 #[cfg(test)]
@@ -212,10 +241,38 @@ mod tests {
     use super::*;
 
     #[test]
-    fn latency_percentiles_handle_empty_and_scale_to_ms() {
-        assert_eq!(latency_percentiles_ms(&[]), (0.0, 0.0));
-        let (p50, p99) = latency_percentiles_ms(&[0.001, 0.002, 0.003]);
-        assert!((p50 - 2.0).abs() < 1e-9, "p50={p50}");
-        assert!(p99 > 2.9 && p99 <= 3.0, "p99={p99}");
+    fn latency_percentiles_handle_empty_and_scale_to_us() {
+        assert_eq!(latency_percentiles_us(&[]), (0.0, 0.0));
+        let (p50, p99) = latency_percentiles_us(&[0.001, 0.002, 0.003]);
+        assert!((p50 - 2_000.0).abs() < 1e-6, "p50={p50}");
+        assert!(p99 > 2_900.0 && p99 <= 3_000.0, "p99={p99}");
+    }
+
+    #[test]
+    fn deprecated_ms_accessors_rescale_the_us_fields() {
+        let s = SessionStats {
+            id: 0,
+            name: String::new(),
+            res: crate::events::Resolution { width: 1, height: 1 },
+            events_in: 0,
+            events_routed: 0,
+            events_dropped_by_stcf: 0,
+            frames_emitted: 0,
+            snapshots_served: 0,
+            bands_skipped_unchanged: 0,
+            batches_shipped: 0,
+            queue_depth: 0,
+            peak_queue_depth: 0,
+            rejected_batches: 0,
+            ingest_ack_p50_us: 1_500.0,
+            ingest_ack_p99_us: 4_000.0,
+            batch_e2e_p50_us: 0.0,
+            batch_e2e_p99_us: 0.0,
+            resident_bytes: 0,
+        };
+        #[allow(deprecated)]
+        let (p50_ms, p99_ms) = (s.batch_latency_p50_ms(), s.batch_latency_p99_ms());
+        assert!((p50_ms - 1.5).abs() < 1e-12);
+        assert!((p99_ms - 4.0).abs() < 1e-12);
     }
 }

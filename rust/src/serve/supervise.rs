@@ -33,9 +33,11 @@ use crate::coordinator::PipelineConfig;
 use crate::denoise::ShardTally;
 use crate::events::Resolution;
 use crate::serve::net::frame::crc32;
+use crate::serve::obs::FlightSample;
 use crate::serve::stats::SupervisorStats;
 use crate::util::rng::Pcg64;
-use crate::util::sync::{AtomicU64, Mutex, Ordering};
+use crate::util::sync::{Arc, AtomicU64, Mutex, Ordering};
+use crate::util::telemetry::{Counter, Registry};
 
 pub use crate::util::actor::SupervisionConfig;
 
@@ -83,6 +85,13 @@ pub struct SessionFault {
     pub job: FaultJobKind,
     /// Panic payload summary (from `catch_boundary`).
     pub detail: String,
+    /// The faulting band's flight-recorder tail at quarantine time —
+    /// the last completed jobs (oldest first, the panicking job
+    /// excluded since it never completed), each with queue-wait and
+    /// service time, so a panic is diagnosable post-mortem. Empty under
+    /// `telemetry-off` (the recorder compiles out) and for faults filed
+    /// outside the scheduler.
+    pub recent: Vec<FlightSample>,
 }
 
 impl std::fmt::Display for SessionFault {
@@ -249,11 +258,11 @@ impl ArmedFault {
         }
         match self.plan.kind {
             SchedFaultKind::JobPanic => {
-                counters.injected_panics.fetch_add(1, Ordering::Relaxed);
+                counters.injected_panics.inc();
                 panic!("injected fault: job panic on job #{n}");
             }
             SchedFaultKind::JobStall => {
-                counters.injected_stalls.fetch_add(1, Ordering::Relaxed);
+                counters.injected_stalls.inc();
                 std::thread::sleep(std::time::Duration::from_millis(self.plan.stall_ms));
             }
             SchedFaultKind::CheckpointCorrupt => {}
@@ -275,7 +284,7 @@ impl ArmedFault {
         let i = rng.below(bytes.len() as u64) as usize;
         let bit = rng.below(8) as u32;
         bytes[i] ^= 1u8 << bit;
-        counters.injected_checkpoint_corruptions.fetch_add(1, Ordering::Relaxed);
+        counters.injected_checkpoint_corruptions.inc();
         true
     }
 }
@@ -286,41 +295,53 @@ impl ArmedFault {
 
 /// Shared atomic counters behind [`SupervisorStats`]. One instance per
 /// [`crate::serve::SessionManager`], updated lock-free from workers and
-/// the session front door.
+/// the session front door. Since the telemetry migration these are
+/// [`crate::util::telemetry::Counter`] handles — the *same* counters a
+/// scrape renders — so supervision accounting and the observability
+/// plane can never disagree.
 #[derive(Debug)]
 pub struct SupervisorCounters {
-    pub(crate) quarantines: AtomicU64,
-    pub(crate) job_panics: AtomicU64,
-    pub(crate) deadline_misses: AtomicU64,
-    pub(crate) deferred_cold_snapshots: AtomicU64,
-    pub(crate) stale_frames_served: AtomicU64,
-    pub(crate) sessions_shed_overloaded: AtomicU64,
-    pub(crate) checkpoints_taken: AtomicU64,
-    pub(crate) checkpoint_corruptions_detected: AtomicU64,
-    pub(crate) restores_completed: AtomicU64,
-    pub(crate) injected_panics: AtomicU64,
-    pub(crate) injected_stalls: AtomicU64,
-    pub(crate) injected_checkpoint_corruptions: AtomicU64,
+    pub(crate) quarantines: Arc<Counter>,
+    pub(crate) job_panics: Arc<Counter>,
+    pub(crate) deadline_misses: Arc<Counter>,
+    pub(crate) deferred_cold_snapshots: Arc<Counter>,
+    pub(crate) stale_frames_served: Arc<Counter>,
+    pub(crate) sessions_shed_overloaded: Arc<Counter>,
+    pub(crate) checkpoints_taken: Arc<Counter>,
+    pub(crate) checkpoint_corruptions_detected: Arc<Counter>,
+    pub(crate) restores_completed: Arc<Counter>,
+    pub(crate) injected_panics: Arc<Counter>,
+    pub(crate) injected_stalls: Arc<Counter>,
+    pub(crate) injected_checkpoint_corruptions: Arc<Counter>,
 }
 
 impl SupervisorCounters {
-    /// All-zero counters. (Explicit rather than `derive(Default)`: the
-    /// loom atomics behind `util::sync` don't implement `Default`.)
-    pub fn new() -> Self {
+    /// All-zero counters registered in `reg` under their exported
+    /// names, so [`crate::util::telemetry::Registry::render`] covers
+    /// supervision for free.
+    pub fn registered(reg: &Registry) -> Self {
         SupervisorCounters {
-            quarantines: AtomicU64::new(0),
-            job_panics: AtomicU64::new(0),
-            deadline_misses: AtomicU64::new(0),
-            deferred_cold_snapshots: AtomicU64::new(0),
-            stale_frames_served: AtomicU64::new(0),
-            sessions_shed_overloaded: AtomicU64::new(0),
-            checkpoints_taken: AtomicU64::new(0),
-            checkpoint_corruptions_detected: AtomicU64::new(0),
-            restores_completed: AtomicU64::new(0),
-            injected_panics: AtomicU64::new(0),
-            injected_stalls: AtomicU64::new(0),
-            injected_checkpoint_corruptions: AtomicU64::new(0),
+            quarantines: reg.counter("quarantines_total"),
+            job_panics: reg.counter("job_panics_total"),
+            deadline_misses: reg.counter("deadline_misses_total"),
+            deferred_cold_snapshots: reg.counter("deferred_cold_snapshots_total"),
+            stale_frames_served: reg.counter("stale_frames_served_total"),
+            sessions_shed_overloaded: reg.counter("sessions_shed_overloaded_total"),
+            checkpoints_taken: reg.counter("checkpoints_taken_total"),
+            checkpoint_corruptions_detected: reg.counter("checkpoint_corruptions_detected_total"),
+            restores_completed: reg.counter("restores_completed_total"),
+            injected_panics: reg.counter("injected_panics_total"),
+            injected_stalls: reg.counter("injected_stalls_total"),
+            injected_checkpoint_corruptions: reg
+                .counter("injected_checkpoint_corruptions_total"),
         }
+    }
+
+    /// All-zero counters bound to no scrape surface (tests and
+    /// standalone tools; the registry the handles came from is
+    /// dropped — counters keep working, they just aren't rendered).
+    pub fn new() -> Self {
+        Self::registered(&Registry::new())
     }
 
     /// Materialize the stats struct, merging in the pool-owned numbers.
@@ -334,24 +355,20 @@ impl SupervisorCounters {
         fleet_degraded: bool,
     ) -> SupervisorStats {
         SupervisorStats {
-            quarantines: self.quarantines.load(Ordering::Relaxed),
-            worker_panics: escaped_panics + self.job_panics.load(Ordering::Relaxed),
+            quarantines: self.quarantines.get(),
+            worker_panics: escaped_panics + self.job_panics.get(),
             worker_respawns,
             fleet_degraded,
-            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
-            deferred_cold_snapshots: self.deferred_cold_snapshots.load(Ordering::Relaxed),
-            stale_frames_served: self.stale_frames_served.load(Ordering::Relaxed),
-            sessions_shed_overloaded: self.sessions_shed_overloaded.load(Ordering::Relaxed),
-            checkpoints_taken: self.checkpoints_taken.load(Ordering::Relaxed),
-            checkpoint_corruptions_detected: self
-                .checkpoint_corruptions_detected
-                .load(Ordering::Relaxed),
-            restores_completed: self.restores_completed.load(Ordering::Relaxed),
-            injected_panics: self.injected_panics.load(Ordering::Relaxed),
-            injected_stalls: self.injected_stalls.load(Ordering::Relaxed),
-            injected_checkpoint_corruptions: self
-                .injected_checkpoint_corruptions
-                .load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.get(),
+            deferred_cold_snapshots: self.deferred_cold_snapshots.get(),
+            stale_frames_served: self.stale_frames_served.get(),
+            sessions_shed_overloaded: self.sessions_shed_overloaded.get(),
+            checkpoints_taken: self.checkpoints_taken.get(),
+            checkpoint_corruptions_detected: self.checkpoint_corruptions_detected.get(),
+            restores_completed: self.restores_completed.get(),
+            injected_panics: self.injected_panics.get(),
+            injected_stalls: self.injected_stalls.get(),
+            injected_checkpoint_corruptions: self.injected_checkpoint_corruptions.get(),
         }
     }
 }
@@ -900,11 +917,19 @@ mod tests {
             band: 2,
             job: FaultJobKind::Write,
             detail: "injected".into(),
+            recent: Vec::new(),
         });
         board.file(SessionFault {
             band: 3,
             job: FaultJobKind::Snapshot,
             detail: "boom".into(),
+            recent: vec![FlightSample {
+                seq: 1,
+                band: 3,
+                job: FaultJobKind::Write,
+                queue_wait_us: 5,
+                service_us: 9,
+            }],
         });
         assert!(board.is_quarantined());
         assert_eq!(board.count(), 2);
@@ -950,17 +975,17 @@ mod tests {
     #[test]
     fn counters_snapshot_maps_every_field() {
         let c = SupervisorCounters::new();
-        c.quarantines.fetch_add(1, Ordering::Relaxed);
-        c.deadline_misses.fetch_add(2, Ordering::Relaxed);
-        c.deferred_cold_snapshots.fetch_add(3, Ordering::Relaxed);
-        c.stale_frames_served.fetch_add(4, Ordering::Relaxed);
-        c.sessions_shed_overloaded.fetch_add(5, Ordering::Relaxed);
-        c.checkpoints_taken.fetch_add(6, Ordering::Relaxed);
-        c.checkpoint_corruptions_detected.fetch_add(7, Ordering::Relaxed);
-        c.restores_completed.fetch_add(8, Ordering::Relaxed);
-        c.injected_panics.fetch_add(9, Ordering::Relaxed);
-        c.injected_stalls.fetch_add(10, Ordering::Relaxed);
-        c.injected_checkpoint_corruptions.fetch_add(11, Ordering::Relaxed);
+        c.quarantines.add(1);
+        c.deadline_misses.add(2);
+        c.deferred_cold_snapshots.add(3);
+        c.stale_frames_served.add(4);
+        c.sessions_shed_overloaded.add(5);
+        c.checkpoints_taken.add(6);
+        c.checkpoint_corruptions_detected.add(7);
+        c.restores_completed.add(8);
+        c.injected_panics.add(9);
+        c.injected_stalls.add(10);
+        c.injected_checkpoint_corruptions.add(11);
         let s = c.snapshot(20, 21, true);
         assert_eq!(
             s,
@@ -981,5 +1006,17 @@ mod tests {
                 injected_checkpoint_corruptions: 11,
             }
         );
+    }
+
+    #[test]
+    fn registered_counters_render_through_the_registry() {
+        let reg = Registry::new();
+        let c = SupervisorCounters::registered(&reg);
+        c.quarantines.inc();
+        c.checkpoints_taken.add(3);
+        let text = reg.render();
+        assert!(text.contains("quarantines_total 1"));
+        assert!(text.contains("checkpoints_taken_total 3"));
+        assert!(text.contains("injected_stalls_total 0"), "zero counters still render");
     }
 }

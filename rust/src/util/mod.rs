@@ -6,9 +6,10 @@
 //! bitmask planes backing the STCF support fast path ([`bitplane`]), the
 //! set-associative sparse recency store behind the O(m) cache STCF
 //! backend ([`sparse`]), the scoped-thread row parallelism helpers
-//! ([`parallel`]), the loom-switchable concurrency facade ([`sync`]) and
+//! ([`parallel`]), the loom-switchable concurrency facade ([`sync`]),
 //! the generic per-actor-FIFO worker pool behind the serve scheduler
-//! ([`actor`]).
+//! ([`actor`]) and the lock-light metrics registry behind the fleet's
+//! observability plane ([`telemetry`]).
 
 pub mod active;
 pub mod actor;
@@ -24,3 +25,4 @@ pub mod rng;
 pub mod sparse;
 pub mod stats;
 pub mod sync;
+pub mod telemetry;

@@ -1,0 +1,502 @@
+//! Lock-light metrics: typed atomic counters/gauges, fixed log2-bucket
+//! latency histograms, and a named [`Registry`] with Prometheus-style
+//! text exposition.
+//!
+//! This is the measurement substrate the serve fleet reads and exports
+//! (`serve::obs`). Design laws:
+//!
+//! * **Loom-safe.** Every primitive goes through the [`super::sync`]
+//!   facade, so telemetry inside loom-modeled code compiles under
+//!   `--cfg loom` like everything else in the concurrency stack.
+//! * **Zero allocation on the hot path.** [`Counter::inc`],
+//!   [`Gauge::set`] and [`Histogram::record`] are a handful of relaxed
+//!   atomic ops on pre-sized storage; strings and `Vec`s only appear at
+//!   registration and render time.
+//! * **Counters and gauges are always real.** Several "metrics" double
+//!   as functional state (admission control reads queue depth, the
+//!   degrade ladder reads resident bytes, drain accounting balances
+//!   event counts), so compiling them out would change behavior.
+//!   Only the purely observational parts — [`Histogram`] and the
+//!   flight recorder in `serve::obs` — compile to proven-zero-cost
+//!   no-ops under the `telemetry-off` feature.
+//! * **Mergeable.** Histograms with fixed log2 buckets merge by bucket
+//!   addition, which is associative and loses nothing beyond the bucket
+//!   quantization each sample already paid — so per-band, per-session
+//!   and fleet views are all the same type.
+//!
+//! Metric names are part of the operational interface and follow the
+//! repo law checked by `cargo xtask lint-invariants` (`telemetry-naming`):
+//! `^[a-z0-9_]+(_total|_us|_bytes|_ratio)$` — see [`valid_metric_name`].
+//! All durations are **microseconds** (`_us`), repo-wide.
+
+use super::sync::{Arc, AtomicU64, Mutex, Ordering};
+
+/// A monotonically increasing event count (`_total` metrics).
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self { v: AtomicU64::new(0) }
+    }
+
+    /// Count one event.
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` events.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current count.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time level (`_bytes`, depth-style metrics): settable,
+/// unlike a [`Counter`].
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self { v: AtomicU64::new(0) }
+    }
+
+    /// Set the level.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Number of log2 buckets a [`Histogram`] carries. Bucket 0 holds the
+/// value 0; bucket `i` (1 ≤ i < 31) holds `[2^(i-1), 2^i - 1]`; the
+/// last bucket holds everything ≥ 2^30. In microseconds that spans
+/// sub-µs to ~18 minutes — every latency the fleet can plausibly see.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Upper bound of bucket `i` — the value percentile queries report for
+/// samples landing in it (conservative: never under-reports).
+#[inline]
+pub fn bucket_upper(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        _ if i >= HIST_BUCKETS - 1 => u64::MAX,
+        _ => (1u64 << i) - 1,
+    }
+}
+
+/// The log2 bucket a value lands in.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+/// A fixed log2-bucket latency histogram (microsecond samples by
+/// convention). Recording is a few relaxed atomic adds — no locks, no
+/// allocation; merging is bucket-wise addition (associative). Under the
+/// `telemetry-off` feature this type is a zero-sized no-op whose
+/// zero cost is proven by `size_of` in the tests.
+#[cfg(not(feature = "telemetry-off"))]
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample (µs).
+    #[inline]
+    pub fn record(&self, v_us: u64) {
+        self.buckets[bucket_index(v_us)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v_us, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples (µs).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Fold `other`'s samples into `self` (bucket-wise addition —
+    /// associative and commutative, so per-band → per-session → fleet
+    /// aggregation order never matters).
+    pub fn merge(&self, other: &Histogram) {
+        for (b, o) in self.buckets.iter().zip(&other.buckets) {
+            b.fetch_add(o.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Nearest-rank percentile (`p` in (0, 100]), reported as the upper
+    /// bound of the bucket the rank falls in — bucket-exact: equal to
+    /// `bucket_upper(bucket_index(v))` of the true sorted-reference
+    /// percentile value `v` (asserted in `tests/telemetry_equiv.rs`).
+    /// 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0 * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for i in 0..HIST_BUCKETS {
+            seen += self.buckets[i].load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    /// Raw bucket counts (snapshot; for exposition and tests).
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+/// The `telemetry-off` no-op sink: zero-sized, every method compiles to
+/// nothing. Counters and gauges stay real (they are functional state —
+/// see the module docs); only the purely observational histogram
+/// drops out.
+#[cfg(feature = "telemetry-off")]
+#[derive(Debug, Default)]
+pub struct Histogram;
+
+#[cfg(feature = "telemetry-off")]
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram
+    }
+
+    #[inline]
+    pub fn record(&self, _v_us: u64) {}
+
+    pub fn count(&self) -> u64 {
+        0
+    }
+
+    pub fn sum(&self) -> u64 {
+        0
+    }
+
+    pub fn merge(&self, _other: &Histogram) {}
+
+    pub fn percentile(&self, _p: f64) -> u64 {
+        0
+    }
+
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        [0; HIST_BUCKETS]
+    }
+}
+
+/// The repo's metric-name law (also enforced mechanically by the
+/// `telemetry-naming` xtask lint over registration sites):
+/// `^[a-z0-9_]+(_total|_us|_bytes|_ratio)$` — lowercase snake_case with
+/// a unit/kind suffix, so every exported name is self-describing
+/// (counters `_total`, durations `_us`, sizes `_bytes`, fractions
+/// `_ratio`).
+pub fn valid_metric_name(name: &str) -> bool {
+    let chars_ok =
+        name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+    let suffix_ok = ["_total", "_us", "_bytes", "_ratio"]
+        .iter()
+        .any(|s| name.len() > s.len() && name.ends_with(s));
+    !name.is_empty() && chars_ok && suffix_ok
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named metric registry: registration is idempotent per name (the
+/// second `counter("x_total")` returns the first's handle), names obey
+/// [`valid_metric_name`] (checked at registration), and [`Registry::render`]
+/// emits the whole contents as Prometheus-style text. Registration
+/// takes a short lock; reads and writes of the handed-out metrics are
+/// lock-free.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Vec<(String, Metric)>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(Vec::new()) }
+    }
+
+    fn slot<T, F: FnOnce() -> Metric, G: Fn(&Metric) -> Option<Arc<T>>>(
+        &self,
+        name: &str,
+        make: F,
+        cast: G,
+    ) -> Arc<T> {
+        debug_assert!(valid_metric_name(name), "bad metric name {name:?}");
+        let mut inner = self.inner.lock().expect("registry lock");
+        if let Some((_, m)) = inner.iter().find(|(n, _)| n == name) {
+            if let Some(h) = cast(m) {
+                return h;
+            }
+            // Same name registered as a different type: a programming
+            // error; hand back a fresh unregistered handle rather than
+            // panicking in serving code.
+            debug_assert!(false, "metric {name:?} re-registered as a different type");
+        }
+        let metric = make();
+        let handle = cast(&metric).expect("freshly made metric casts to its own type");
+        inner.push((name.to_string(), metric));
+        handle
+    }
+
+    /// Register (or fetch) the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        self.slot(
+            name,
+            || Metric::Counter(Arc::new(Counter::new())),
+            |m| match m {
+                Metric::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Register (or fetch) the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        self.slot(
+            name,
+            || Metric::Gauge(Arc::new(Gauge::new())),
+            |m| match m {
+                Metric::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Register (or fetch) the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        self.slot(
+            name,
+            || Metric::Histogram(Arc::new(Histogram::new())),
+            |m| match m {
+                Metric::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Registered metric names, in registration order.
+    pub fn names(&self) -> Vec<String> {
+        self.inner.lock().expect("registry lock").iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    /// Render every registered metric as Prometheus-style text
+    /// exposition: counters and gauges one line each, histograms as
+    /// quantile summaries (`{quantile="0.5"|"0.99"}` + `_count` +
+    /// `_sum`). This is the body both export surfaces (the `STATS` wire
+    /// reply and `tsisc serve --metrics`) serve.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let inner = self.inner.lock().expect("registry lock");
+        for (name, metric) in inner.iter() {
+            match metric {
+                Metric::Counter(c) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+                }
+                Metric::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+                }
+                Metric::Histogram(h) => {
+                    render_histogram(&mut out, name, "", h);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Append one histogram's summary exposition (`labels` is either empty
+/// or a rendered `{key="value"}` block, used by `serve::obs` for
+/// per-session lines).
+pub fn render_histogram(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    out.push_str(&format!("# TYPE {name} summary\n"));
+    out.push_str(&format!("{name}{{quantile=\"0.5\"{labels}}} {}\n", h.percentile(50.0)));
+    out.push_str(&format!("{name}{{quantile=\"0.99\"{labels}}} {}\n", h.percentile(99.0)));
+    let labels_block =
+        if labels.is_empty() { String::new() } else { format!("{{{}}}", &labels[1..]) };
+    out.push_str(&format!("{name}_count{labels_block} {}\n", h.count()));
+    out.push_str(&format!("{name}_sum{labels_block} {}\n", h.sum()));
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_are_plain_atomics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(42);
+        assert_eq!(g.get(), 42);
+        g.set(7);
+        assert_eq!(g.get(), 7);
+    }
+
+    #[test]
+    fn bucket_index_and_upper_are_consistent() {
+        // Every value lands in a bucket whose bounds contain it.
+        for v in [0u64, 1, 2, 3, 4, 7, 8, 1023, 1024, 1_000_000, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_upper(i), "v={v} i={i}");
+            if i > 0 {
+                assert!(v > bucket_upper(i - 1), "v={v} i={i}");
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(2), 3);
+    }
+
+    #[cfg(not(feature = "telemetry-off"))]
+    #[test]
+    fn histogram_records_and_reports_bucket_uppers() {
+        let h = Histogram::new();
+        for v in [10u64, 20, 30, 1000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1060);
+        // p50 of [10,20,30,1000]: nearest-rank = 2nd sample (20) →
+        // bucket [16,31] upper 31.
+        assert_eq!(h.percentile(50.0), 31);
+        // p99 → 4th sample (1000) → bucket [512,1023] upper 1023.
+        assert_eq!(h.percentile(99.0), 1023);
+        assert_eq!(Histogram::new().percentile(99.0), 0, "empty histogram reads 0");
+    }
+
+    #[cfg(not(feature = "telemetry-off"))]
+    #[test]
+    fn histogram_merge_adds_buckets() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record(5);
+        b.record(500);
+        b.record(7);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.sum(), 512);
+        let direct = Histogram::new();
+        for v in [5u64, 500, 7] {
+            direct.record(v);
+        }
+        assert_eq!(a.bucket_counts(), direct.bucket_counts());
+    }
+
+    #[cfg(feature = "telemetry-off")]
+    #[test]
+    fn telemetry_off_histogram_is_zero_sized_and_silent() {
+        // The no-op sink's zero cost, proven: no storage at all.
+        assert_eq!(std::mem::size_of::<Histogram>(), 0);
+        let h = Histogram::new();
+        h.record(123);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0);
+    }
+
+    #[test]
+    fn metric_name_law() {
+        for ok in ["events_in_total", "queue_wait_us", "resident_bytes", "worker_busy_ratio"] {
+            assert!(valid_metric_name(ok), "{ok}");
+        }
+        for bad in [
+            "",
+            "_total",              // empty stem
+            "EventsIn_total",      // case
+            "events-in_total",     // dash
+            "events_in",           // no suffix
+            "latency_ms",          // wrong unit: µs is the repo law
+        ] {
+            assert!(!valid_metric_name(bad), "{bad}");
+        }
+    }
+
+    #[test]
+    fn registry_is_idempotent_and_renders_everything() {
+        let r = Registry::new();
+        let c1 = r.counter("jobs_total");
+        let c2 = r.counter("jobs_total");
+        c1.inc();
+        c2.inc();
+        assert_eq!(c1.get(), 2, "same name must return the same counter");
+        r.gauge("resident_bytes").set(4096);
+        let h = r.histogram("queue_wait_us");
+        h.record(100);
+        let text = r.render();
+        assert!(text.contains("jobs_total 2"));
+        assert!(text.contains("resident_bytes 4096"));
+        assert!(text.contains("# TYPE queue_wait_us summary"));
+        assert!(text.contains("queue_wait_us_count 1") || cfg!(feature = "telemetry-off"));
+        assert_eq!(r.names().len(), 3);
+    }
+
+    #[test]
+    fn labeled_histogram_lines_render() {
+        let h = Histogram::new();
+        h.record(3);
+        let mut out = String::new();
+        render_histogram(&mut out, "stage_render_us", ",session=\"s0\"", &h);
+        assert!(out.contains("stage_render_us{quantile=\"0.5\",session=\"s0\"}"));
+        assert!(out.contains("stage_render_us_count{session=\"s0\"}"));
+    }
+}

@@ -212,10 +212,19 @@ fn fault_board_has_exactly_one_quarantine_transition() {
         let board = Arc::new(FaultBoard::new());
         let b = board.clone();
         let filer = tsisc::util::sync::thread::spawn(move || {
-            b.file(SessionFault { band: 0, job: FaultJobKind::Write, detail: String::new() })
+            b.file(SessionFault {
+                band: 0,
+                job: FaultJobKind::Write,
+                detail: String::new(),
+                recent: Vec::new(),
+            })
         });
-        let prior_main =
-            board.file(SessionFault { band: 1, job: FaultJobKind::Score, detail: String::new() });
+        let prior_main = board.file(SessionFault {
+            band: 1,
+            job: FaultJobKind::Score,
+            detail: String::new(),
+            recent: Vec::new(),
+        });
         let prior_filer = filer.join().expect("join filer");
         let transitions = u64::from(prior_main == 0) + u64::from(prior_filer == 0);
         assert_eq!(transitions, 1, "quarantine transition must fire exactly once");

@@ -1,0 +1,425 @@
+//! Telemetry-plane contracts (PR 10):
+//!
+//! * **Conservation laws** under concurrent fleet load: every event a
+//!   session admits is either routed to a band writer or dropped by
+//!   STCF (`events_in == events_routed + events_dropped_by_stcf`), and
+//!   the same balance is what the scrape text exports — the numbers an
+//!   operator reads are the numbers the fleet actually moved;
+//! * **one scrape covers everything**: a single `metrics_text()` body
+//!   carries every registered counter/gauge/histogram (supervisor,
+//!   net names excluded — no front door here), the per-stage p50/p99
+//!   quantile lines, queue-wait, and the per-session labeled sections;
+//! * **histogram laws**: merge is associative (bucket-wise addition)
+//!   and percentile queries are bucket-exact against a sorted
+//!   reference — `percentile(p) == bucket_upper(bucket_index(v_true))`;
+//! * **flight recorder bound**: the per-session ring never exceeds
+//!   [`FLIGHT_CAPACITY`](tsisc::serve::obs) samples and a quarantined
+//!   session's [`SessionFault`] carries the tail;
+//! * **`telemetry-off` equivalence**: this file compiles and passes
+//!   under both feature configurations, and the frame-equality test
+//!   asserts fleet output ≡ the standalone `run_pipeline` reference in
+//!   whichever configuration is active — so a telemetry-on and a
+//!   telemetry-off build provably serve bit-for-bit identical frames
+//!   (both equal the same reference).
+
+use tsisc::coordinator::{run_pipeline, PipelineConfig, RouterConfig};
+use tsisc::denoise::StcfParams;
+use tsisc::events::{Event, LabeledEvent, Polarity, Resolution};
+use tsisc::isc::IscConfig;
+use tsisc::serve::{
+    FaultJobKind, FleetObs, SchedFaultKind, SchedFaultPlan, ServeConfig, SessionConfig,
+    SessionManager, SessionObs,
+};
+#[cfg(not(feature = "telemetry-off"))]
+use tsisc::util::telemetry::{bucket_index, bucket_upper, Histogram};
+
+/// Deterministic time-sorted stream covering every row of `res`.
+fn stream(res: Resolution, n: u64, step_us: u64, salt: u64) -> Vec<LabeledEvent> {
+    (0..n)
+        .map(|k| LabeledEvent {
+            ev: Event::new(
+                1 + k * step_us,
+                ((k * 7 + salt) % res.width as u64) as u16,
+                ((k * 5 + salt * 3) % res.height as u64) as u16,
+                if (k + salt) % 3 == 0 { Polarity::Off } else { Polarity::On },
+            ),
+            is_signal: true,
+        })
+        .collect()
+}
+
+fn pipeline_cfg(stcf: bool) -> PipelineConfig {
+    PipelineConfig {
+        stcf: stcf.then(|| StcfParams { threshold: 1, ..StcfParams::default() }),
+        denoise_shards: if stcf { 2 } else { 0 },
+        batch_size: 64,
+        router: RouterConfig {
+            n_shards: 3,
+            isc: IscConfig { bank_size: 48, ..IscConfig::default() },
+            ..RouterConfig::default()
+        },
+        ..PipelineConfig::default()
+    }
+}
+
+/// Pull `name{labels…} value` out of a scrape body (first match).
+fn scrape_value(text: &str, key: &str) -> Option<f64> {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .find(|l| l.starts_with(key))
+        .and_then(|l| l.rsplit_once(' '))
+        .and_then(|(_, v)| v.parse().ok())
+}
+
+#[test]
+fn conservation_laws_hold_under_concurrent_load() {
+    let res = Resolution::new(24, 18);
+    let t_end = 120_000u64;
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 4,
+        max_sessions: 8,
+        max_inflight_batches: 4_096,
+        ..ServeConfig::default()
+    });
+    // Mixed fleet: STCF sessions drop events, plain sessions route all.
+    let sids: Vec<_> = (0..6)
+        .map(|k| {
+            m.open(SessionConfig {
+                name: format!("law-{k}"),
+                res,
+                t_end_us: t_end,
+                pipeline: pipeline_cfg(k % 2 == 1),
+            })
+            .expect("open")
+        })
+        .collect();
+    let streams: Vec<Vec<LabeledEvent>> =
+        (0..6).map(|k| stream(res, 500, 230, k as u64)).collect();
+    // Interleave uneven chunks so the worker pool runs every session's
+    // jobs concurrently while the laws are accumulating.
+    let mut heads = vec![0usize; 6];
+    loop {
+        let mut progressed = false;
+        for (s, events) in streams.iter().enumerate() {
+            let lo = heads[s];
+            if lo >= events.len() {
+                continue;
+            }
+            let hi = (lo + 41).min(events.len());
+            m.ingest_batch(sids[s], &events[lo..hi]).expect("ingest");
+            heads[s] = hi;
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+    for sid in &sids {
+        m.drain(*sid).expect("drain");
+    }
+
+    // Law 1, struct-level: per session and summed across the fleet.
+    let stats = m.stats();
+    let mut fleet_in = 0u64;
+    for s in &stats.sessions {
+        assert_eq!(
+            s.events_in,
+            s.events_routed + s.events_dropped_by_stcf,
+            "conservation broken for {}: {s:?}",
+            s.name
+        );
+        fleet_in += s.events_in;
+    }
+    assert_eq!(stats.events_in, fleet_in, "fleet events_in != sum of sessions");
+    assert_eq!(fleet_in, 6 * 500, "every generated event was admitted");
+
+    // Law 2, scrape-level: the exported text carries the same balance —
+    // counters are always real, so this holds under `telemetry-off` too.
+    let text = m.metrics_text();
+    for s in &stats.sessions {
+        let get = |metric: &str| {
+            scrape_value(&text, &format!("{metric}{{session=\"{}\"}}", s.name))
+                .unwrap_or_else(|| panic!("scrape lacks {metric} for {}", s.name))
+        };
+        let (ein, routed, dropped) = (
+            get("session_events_in_total"),
+            get("session_events_routed_total"),
+            get("session_events_dropped_by_stcf_total"),
+        );
+        assert_eq!(ein as u64, s.events_in, "{}", s.name);
+        assert_eq!(ein, routed + dropped, "scrape conservation for {}", s.name);
+    }
+    assert_eq!(
+        scrape_value(&text, "events_in_total ").expect("fleet gauge") as u64,
+        fleet_in
+    );
+    m.shutdown();
+}
+
+#[test]
+fn one_scrape_covers_every_registered_metric_and_stage_quantiles() {
+    let res = Resolution::new(16, 16);
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 2,
+        max_sessions: 2,
+        max_inflight_batches: 256,
+        ..ServeConfig::default()
+    });
+    let sid = m
+        .open(SessionConfig {
+            name: "scraped".into(),
+            res,
+            t_end_us: 100_000,
+            pipeline: pipeline_cfg(true),
+        })
+        .expect("open");
+    m.ingest_batch(sid, &stream(res, 300, 300, 3)).expect("ingest");
+    m.drain(sid).expect("drain");
+    // drain rendered through t_end; an equal-time on-demand snapshot is
+    // causal (non-decreasing) and exercises the render/composite spans.
+    m.snapshot(sid, 100_000).expect("snapshot");
+
+    let text = m.metrics_text();
+    // Every name in the registry appears — fleet stage histograms plus
+    // the supervisor counters registered at manager construction.
+    for name in m.obs().registry.names() {
+        assert!(text.contains(&name), "scrape lacks registered metric `{name}`");
+    }
+    for must in [
+        "quarantines_total",
+        "job_panics_total",
+        "checkpoints_taken_total",
+        "uptime_us",
+        "workers_total",
+        "open_sessions_total",
+        "resident_bytes",
+        "degrade_tier_total",
+        "worker_busy_ratio",
+    ] {
+        assert!(text.contains(must), "scrape lacks `{must}`");
+    }
+    // Per-stage p50/p99 + queue-wait quantile lines (the acceptance
+    // criterion: one scrape returns them all).
+    for h in [
+        "queue_wait_us",
+        "stage_decode_us",
+        "stage_score_us",
+        "stage_route_us",
+        "stage_render_us",
+        "stage_composite_us",
+        "ingest_ack_us",
+        "batch_e2e_us",
+    ] {
+        for q in ["0.5", "0.99"] {
+            assert!(
+                text.contains(&format!("{h}{{quantile=\"{q}\"}}")),
+                "scrape lacks {h} p{q}"
+            );
+        }
+    }
+    // Per-session labeled section.
+    assert!(text.contains("session_events_in_total{session=\"scraped\"}"));
+    assert!(text.contains("session_queue_wait_us{quantile=\"0.99\",session=\"scraped\"}"));
+    // Under telemetry-on the drained writes must have landed in the
+    // stage histograms; under telemetry-off the lines render as zeros.
+    if cfg!(not(feature = "telemetry-off")) {
+        assert!(
+            scrape_value(&text, "queue_wait_us_count").expect("count line") > 0.0,
+            "no jobs recorded queue wait"
+        );
+        assert!(
+            scrape_value(&text, "stage_route_us_count").expect("count line") > 0.0,
+            "no write jobs recorded route service time"
+        );
+    }
+    m.close(sid).expect("close");
+    m.shutdown();
+}
+
+#[cfg(not(feature = "telemetry-off"))]
+#[test]
+fn histogram_merge_is_associative_and_bucket_exact() {
+    // Deterministic pseudo-random samples spanning many buckets.
+    let mut x = 0x2545_F491_4F6C_DD1Du64;
+    let mut next = move || {
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        x % 3_000_000 // 0 µs .. 3 s
+    };
+    let parts: Vec<Vec<u64>> =
+        (0..3).map(|_| (0..500).map(|_| next()).collect()).collect();
+
+    // Associativity: (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c), bucket for bucket.
+    let fill = |vals: &[u64]| {
+        let h = Histogram::new();
+        for &v in vals {
+            h.record(v);
+        }
+        h
+    };
+    let left = fill(&parts[0]);
+    left.merge(&fill(&parts[1]));
+    left.merge(&fill(&parts[2]));
+    let bc = fill(&parts[1]);
+    bc.merge(&fill(&parts[2]));
+    let right = fill(&parts[0]);
+    right.merge(&bc);
+    assert_eq!(left.bucket_counts(), right.bucket_counts());
+    assert_eq!(left.count(), right.count());
+    assert_eq!(left.sum(), right.sum());
+
+    // Bucket-exactness vs the sorted reference: nearest-rank value v
+    // at each percentile maps to exactly bucket_upper(bucket_index(v)).
+    let mut sorted: Vec<u64> = parts.iter().flatten().copied().collect();
+    sorted.sort_unstable();
+    let n = sorted.len() as f64;
+    for p in [1.0, 10.0, 50.0, 90.0, 99.0, 100.0] {
+        let rank = ((p / 100.0 * n).ceil() as usize).clamp(1, sorted.len());
+        let v_true = sorted[rank - 1];
+        assert_eq!(
+            left.percentile(p),
+            bucket_upper(bucket_index(v_true)),
+            "p{p}: true value {v_true}"
+        );
+    }
+    // Sum/count survive exactly (they are not bucketized).
+    assert_eq!(left.sum(), sorted.iter().sum::<u64>());
+    assert_eq!(left.count(), sorted.len() as u64);
+}
+
+#[test]
+fn flight_recorder_ring_never_exceeds_its_bound() {
+    let obs = SessionObs::new(std::sync::Arc::new(FleetObs::new()));
+    for k in 0..500u64 {
+        obs.record_job(3, FaultJobKind::Write, k, k * 2);
+    }
+    let tail = obs.flight.tail();
+    if cfg!(feature = "telemetry-off") {
+        assert!(tail.is_empty(), "telemetry-off flight recorder must be silent");
+    } else {
+        assert_eq!(tail.len(), 64, "ring holds exactly its bound once saturated");
+        // Oldest → newest, contiguous sequence numbers, newest last.
+        for w in tail.windows(2) {
+            assert_eq!(w[1].seq, w[0].seq + 1, "tail out of order");
+        }
+        // seq is 1-based: 500 records ⇒ the newest sample is #500, and
+        // it carries the last loop iteration's queue wait (k = 499).
+        assert_eq!(tail.last().expect("nonempty").seq, 500);
+        assert_eq!(tail.last().expect("nonempty").queue_wait_us, 499);
+    }
+}
+
+#[test]
+fn quarantined_session_fault_carries_the_flight_tail() {
+    let res = Resolution::new(8, 8);
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 2,
+        max_sessions: 2,
+        max_inflight_batches: 256,
+        ..ServeConfig::default()
+    });
+    // One band (serial FIFO) + batch_size 8 ⇒ each 8-event ingest is
+    // exactly one write job, in order. Fire the panic on job 4: jobs
+    // 1–3 complete and flight-record first, deterministically.
+    let cfg = PipelineConfig {
+        stcf: None,
+        denoise_shards: 0,
+        batch_size: 8,
+        window_us: 1 << 40, // no window clock ⇒ no interleaved renders
+        router: RouterConfig {
+            n_shards: 1,
+            isc: IscConfig { bank_size: 48, ..IscConfig::default() },
+            ..RouterConfig::default()
+        },
+        ..PipelineConfig::default()
+    };
+    let plan = SchedFaultPlan {
+        kind: SchedFaultKind::JobPanic,
+        fire_on_job: 4,
+        stall_ms: 0,
+        corrupt_salt: 0,
+    };
+    let sid = m
+        .open_with_fault(
+            SessionConfig {
+                name: "doomed".into(),
+                res,
+                t_end_us: 1 << 41,
+                pipeline: cfg,
+            },
+            Some(plan),
+        )
+        .expect("open armed session");
+    let evs = stream(res, 8, 10, 0);
+    for _ in 0..4 {
+        // Later calls may already see Reject::Quarantined — fine.
+        let _ = m.ingest_batch(sid, &evs);
+    }
+    // Sync point: a checkpoint rides the band FIFO behind the armed
+    // jobs, so once it returns the panic has fired and been filed.
+    let _ = m.checkpoint(sid);
+    assert_eq!(m.stats().supervisor.quarantines, 1, "armed plan must quarantine");
+    let faults = m.session_faults(sid).expect("faults listable");
+    assert!(!faults.is_empty());
+    let recent = &faults[0].recent;
+    if cfg!(feature = "telemetry-off") {
+        assert!(recent.is_empty(), "telemetry-off faults carry no flight tail");
+    } else {
+        assert_eq!(recent.len(), 3, "jobs 1-3 precede the job-4 panic: {recent:?}");
+        assert!(recent.iter().all(|s| s.job == FaultJobKind::Write));
+        for w in recent.windows(2) {
+            assert!(w[1].seq > w[0].seq, "tail out of order: {recent:?}");
+        }
+    }
+    m.shutdown();
+}
+
+#[test]
+fn fleet_frames_match_reference_under_active_telemetry_config() {
+    // The bit-for-bit guarantee across feature builds, by transitivity:
+    // telemetry-on frames == run_pipeline reference (this test, default
+    // build) and telemetry-off frames == the same reference (this test,
+    // `--features telemetry-off` build) ⇒ on == off. The reference
+    // itself has no telemetry plane at all.
+    let t_end = 110_000u64;
+    let mut m = SessionManager::new(ServeConfig {
+        workers: 3,
+        max_sessions: 4,
+        max_inflight_batches: 1_024,
+        ..ServeConfig::default()
+    });
+    for (k, stcf) in [(0usize, false), (1, true)] {
+        let res = Resolution::new(24, 18);
+        let events = stream(res, 400, 260, k as u64);
+        let cfg = pipeline_cfg(stcf);
+        let sid = m
+            .open(SessionConfig {
+                name: format!("equiv-{k}"),
+                res,
+                t_end_us: t_end,
+                pipeline: cfg.clone(),
+            })
+            .expect("open");
+        let mut frames = Vec::new();
+        for chunk in events.chunks(53) {
+            frames.extend(m.ingest_batch(sid, chunk).expect("ingest"));
+        }
+        frames.extend(m.drain(sid).expect("drain"));
+        let reference = run_pipeline(events.iter().copied(), res, t_end, &cfg);
+        assert_eq!(
+            frames, reference.frames,
+            "session {k} frames diverged from the pipeline reference \
+             (telemetry-off={})",
+            cfg!(feature = "telemetry-off"),
+        );
+        let report = m.close(sid).expect("close");
+        assert_eq!(report.pipeline.events_in, reference.stats.events_in);
+        assert_eq!(report.pipeline.events_written, reference.stats.events_written);
+        assert_eq!(
+            report.pipeline.events_dropped_by_stcf,
+            reference.stats.events_dropped_by_stcf
+        );
+    }
+    m.shutdown();
+}

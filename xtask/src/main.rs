@@ -1,6 +1,14 @@
-//! `cargo xtask lint-invariants` — custom lints encoding repo law that
-//! clippy cannot see. One rule per invariant documented in
-//! CONTRIBUTING.md:
+//! Repo tooling, dependency-free:
+//!
+//! * `cargo xtask lint-invariants [src-root]` — custom lints encoding
+//!   repo law that clippy cannot see (table below).
+//! * `cargo xtask bench-compare OLD.json NEW.json [tolerance-pct]` —
+//!   diff two bench/obs JSON artifacts (`util::bench::dump_json` shape)
+//!   and fail on a >20% (default) regression: latency/size keys
+//!   (`mean_ns`, `*_us`, `*_bytes`) must not rise past tolerance,
+//!   throughput keys (`meps`, `*_per_sec`) must not fall past it.
+//!
+//! One lint rule per invariant documented in CONTRIBUTING.md:
 //!
 //! | rule | invariant |
 //! |---|---|
@@ -12,6 +20,7 @@
 //! | `eager-alloc` | no full-resolution allocations (`vec!`/`Vec::with_capacity` sized by `w * h` / `width * height`) in `serve/`/`coordinator/` — band state materializes lazily on first write (PR 7); justified exceptions carry `lint-invariants: allow(eager-alloc)` |
 //! | `net-deadline` | no bare `.read(`/`.read_exact(`/`.write(`/`.write_all(`/… in `serve/net/` outside `deadline.rs` — socket I/O goes through `DeadlineStream`'s configured-timeout wrappers so no handler blocks unboundedly (PR 8) |
 //! | `panic-boundary` | no `unwrap`/`expect`/`panic!`/`unreachable!`/`todo!`/bare index expressions on the scheduler job path (`execute*`/`quarantine`/`export_band*`/`sync_resident` in `serve/scheduler.rs`) — a panic there is a session quarantine at best and a worker death at worst, so job bodies stay panic-free by construction; code inside a `catch_boundary(…)` wrapper is exempt (the supervision boundary contains it), as is a justified `lint-invariants: allow(panic-boundary)` (PR 9) |
+//! | `telemetry-naming` | every metric name at a registration/render call site (`.counter("…")` / `.gauge("…")` / `.histogram("…")` / `push_gauge(…)` / `render_histogram(…)`) matches the name law `^[a-z0-9_]+(_total\|_us\|_bytes\|_ratio)$`, and `serve/`/`coordinator/` never `println!` — stdout is not a telemetry surface; numbers exit through the registry's scrape/export surfaces (PR 10) |
 //!
 //! The scanners are deliberately line-based over rustfmt-shaped source —
 //! dependency-free, so the suite builds in offline containers. Each rule
@@ -545,6 +554,81 @@ fn check_panic_boundary(path: &str, src: &str) -> Vec<Violation> {
     out
 }
 
+/// The metric-name law (PR 10), duplicated from `util::telemetry` so
+/// the linter stays dependency-free: lowercase snake_case with a
+/// unit/kind suffix, `^[a-z0-9_]+(_total|_us|_bytes|_ratio)$`.
+fn valid_metric_name(name: &str) -> bool {
+    let chars_ok =
+        name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+    let suffix_ok = ["_total", "_us", "_bytes", "_ratio"]
+        .iter()
+        .any(|s| name.len() > s.len() && name.ends_with(s));
+    chars_ok && suffix_ok
+}
+
+/// Call sites whose first string-literal argument is a metric name.
+const METRIC_NAME_SITES: &[&str] =
+    &[".counter(", ".gauge(", ".histogram(", "push_gauge(", "render_histogram("];
+
+/// The first `"…"` string literal after byte offset `from`, if any
+/// (metric names never embed quotes or escapes).
+fn first_str_literal(code: &str, from: usize) -> Option<&str> {
+    let rest = &code[from..];
+    let a = rest.find('"')?;
+    let b = rest[a + 1..].find('"')?;
+    Some(&rest[a + 1..a + 1 + b])
+}
+
+/// Telemetry-naming law (PR 10): every metric name handed to a registry
+/// registration or render helper matches the name law, so one scrape is
+/// uniformly machine-parseable; and `serve/`/`coordinator/` never write
+/// to stdout directly — a number worth printing is a metric, and
+/// metrics exit through the scrape/export surfaces. `eprintln!` stays
+/// legal (operator diagnostics, not a telemetry surface). Dynamic names
+/// (no literal on the line) are out of scope — the registry's
+/// debug_assert covers them at runtime.
+fn check_telemetry_naming(path: &str, src: &str) -> Vec<Violation> {
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        for site in METRIC_NAME_SITES {
+            let Some(k) = code.find(site) else { continue };
+            let Some(name) = first_str_literal(code, k + site.len()) else { continue };
+            if !valid_metric_name(name) && !suppressed(&lines, i, "telemetry-naming") {
+                out.push(Violation {
+                    file: path.to_string(),
+                    line: i + 1,
+                    rule: "telemetry-naming",
+                    msg: format!(
+                        "metric name `{name}` breaks the name law \
+                         `^[a-z0-9_]+(_total|_us|_bytes|_ratio)$` — lowercase \
+                         snake_case with a unit/kind suffix"
+                    ),
+                });
+            }
+        }
+        if ["serve/", "coordinator/"].iter().any(|d| path.contains(d)) {
+            if let Some(k) = code.find("println!") {
+                let b = code.as_bytes();
+                let bare = k == 0 || !(b[k - 1].is_ascii_alphanumeric() || b[k - 1] == b'_');
+                if bare && !suppressed(&lines, i, "telemetry-naming") {
+                    out.push(Violation {
+                        file: path.to_string(),
+                        line: i + 1,
+                        rule: "telemetry-naming",
+                        msg: "bare `println!` in the session stack — stdout is not a \
+                              telemetry surface; register a metric (util::telemetry) \
+                              or use eprintln! for operator diagnostics"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
 /// Run every rule over one file.
 fn check_file(path: &str, src: &str) -> Vec<Violation> {
     let mut out = Vec::new();
@@ -556,6 +640,7 @@ fn check_file(path: &str, src: &str) -> Vec<Violation> {
     out.extend(check_eager_alloc(path, src));
     out.extend(check_net_deadline(path, src));
     out.extend(check_panic_boundary(path, src));
+    out.extend(check_telemetry_naming(path, src));
     out
 }
 
@@ -600,9 +685,204 @@ fn run_lints(root: &Path) -> Result<Vec<Violation>, String> {
     Ok(all)
 }
 
+/// One row of a bench JSON artifact (`util::bench::dump_json` shape):
+/// the benchmark name plus every numeric field.
+#[derive(Debug)]
+struct BenchRow {
+    name: String,
+    values: Vec<(String, f64)>,
+}
+
+/// Parse a `{"benchmarks": [...]}` artifact without a JSON dependency.
+/// The shape is fixed (`dump_json` writes it, this tool diffs it), so
+/// the parser handles exactly that: one flat object per benchmark,
+/// string or numeric values, no nesting, no escaped quotes.
+fn parse_bench_json(src: &str) -> Result<Vec<BenchRow>, String> {
+    let start = src
+        .find("\"benchmarks\"")
+        .ok_or_else(|| "missing \"benchmarks\" key".to_string())?;
+    let rest = &src[start..];
+    let mut rows = Vec::new();
+    let mut depth = 0i64;
+    let mut obj_start = None;
+    for (i, c) in rest.char_indices() {
+        match c {
+            '{' => {
+                depth += 1;
+                if depth == 1 {
+                    obj_start = Some(i);
+                }
+            }
+            '}' => {
+                if depth == 1 {
+                    let s = obj_start.take().ok_or("unbalanced benchmark object")?;
+                    rows.push(parse_bench_obj(&rest[s..=i])?);
+                }
+                depth -= 1;
+            }
+            ']' if depth == 0 => break,
+            _ => {}
+        }
+    }
+    Ok(rows)
+}
+
+/// Parse one flat `{"key": value, ...}` benchmark object.
+fn parse_bench_obj(obj: &str) -> Result<BenchRow, String> {
+    let mut name = None;
+    let mut values = Vec::new();
+    let b = obj.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'"' {
+            i += 1;
+            continue;
+        }
+        let kend = obj[i + 1..]
+            .find('"')
+            .map(|k| i + 1 + k)
+            .ok_or("unterminated key string")?;
+        let key = obj[i + 1..kend].to_string();
+        i = kend + 1;
+        while i < b.len() && b[i] != b':' {
+            i += 1;
+        }
+        i += 1;
+        while i < b.len() && b[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i < b.len() && b[i] == b'"' {
+            let vend = obj[i + 1..]
+                .find('"')
+                .map(|k| i + 1 + k)
+                .ok_or("unterminated value string")?;
+            if key == "name" {
+                name = Some(obj[i + 1..vend].to_string());
+            }
+            i = vend + 1;
+        } else {
+            let vstart = i;
+            while i < b.len() && b[i] != b',' && b[i] != b'}' {
+                i += 1;
+            }
+            if let Ok(v) = obj[vstart..i].trim().parse::<f64>() {
+                values.push((key, v));
+            }
+        }
+    }
+    let name = name.ok_or_else(|| format!("benchmark object without a \"name\": {obj}"))?;
+    Ok(BenchRow { name, values })
+}
+
+/// Regression direction for a bench key: `Some(true)` = higher is
+/// worse (latency, size), `Some(false)` = lower is worse (throughput),
+/// `None` = informational only (iteration counts, knobs, noise terms).
+fn higher_is_worse(key: &str) -> Option<bool> {
+    match key {
+        "mean_ns" | "min_ns" => Some(true),
+        "meps" => Some(false),
+        "iters" | "stddev_ns" | "items_per_iter" => None,
+        k if k.ends_with("_ns") || k.ends_with("_us") || k.ends_with("_bytes") => Some(true),
+        k if k.ends_with("_per_sec") || k.ends_with("_meps") => Some(false),
+        _ => None,
+    }
+}
+
+/// Diff two parsed bench artifacts: one report line per compared key,
+/// plus the subset that regressed past `tol` (fractional, e.g. `0.20`).
+/// Benchmarks present on only one side are reported but never fail —
+/// the suite is allowed to grow and shrink; the gate is on drift.
+fn bench_compare(old: &[BenchRow], new: &[BenchRow], tol: f64) -> (Vec<String>, Vec<String>) {
+    let mut report = Vec::new();
+    let mut regressions = Vec::new();
+    for n in new {
+        let Some(o) = old.iter().find(|r| r.name == n.name) else {
+            report.push(format!("{}: new benchmark (no baseline)", n.name));
+            continue;
+        };
+        for (key, nv) in &n.values {
+            let Some(worse_if_higher) = higher_is_worse(key) else { continue };
+            let Some((_, ov)) = o.values.iter().find(|(k, _)| k == key) else { continue };
+            // A zero/negative baseline has no scale to regress against.
+            if *ov <= 0.0 {
+                continue;
+            }
+            let ratio = nv / ov;
+            let regressed =
+                if worse_if_higher { ratio > 1.0 + tol } else { ratio < 1.0 - tol };
+            let line = format!(
+                "{} {}: {:.3} -> {:.3} ({:+.1}%)",
+                n.name,
+                key,
+                ov,
+                nv,
+                (ratio - 1.0) * 100.0
+            );
+            if regressed {
+                regressions.push(line.clone());
+            }
+            report.push(line);
+        }
+    }
+    for o in old {
+        if !new.iter().any(|r| r.name == o.name) {
+            report.push(format!("{}: benchmark missing from new run", o.name));
+        }
+    }
+    (report, regressions)
+}
+
+fn run_bench_compare(old_path: &str, new_path: &str, tol_pct: f64) -> Result<bool, String> {
+    let read = |p: &str| {
+        std::fs::read_to_string(p).map_err(|e| format!("reading {p}: {e}"))
+    };
+    let old = parse_bench_json(&read(old_path)?)
+        .map_err(|e| format!("parsing {old_path}: {e}"))?;
+    let new = parse_bench_json(&read(new_path)?)
+        .map_err(|e| format!("parsing {new_path}: {e}"))?;
+    let (report, regressions) = bench_compare(&old, &new, tol_pct / 100.0);
+    for line in &report {
+        println!("{line}");
+    }
+    if regressions.is_empty() {
+        println!("bench-compare: OK ({} line(s) within {tol_pct}%)", report.len());
+        Ok(true)
+    } else {
+        eprintln!("bench-compare: {} regression(s) past {tol_pct}%:", regressions.len());
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        Ok(false)
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
+        Some("bench-compare") => {
+            let (Some(old_path), Some(new_path)) = (args.get(1), args.get(2)) else {
+                eprintln!("usage: cargo xtask bench-compare OLD.json NEW.json [tolerance-pct]");
+                std::process::exit(2);
+            };
+            let tol_pct = match args.get(3) {
+                Some(s) => match s.parse::<f64>() {
+                    Ok(v) if v > 0.0 => v,
+                    _ => {
+                        eprintln!("bench-compare: bad tolerance `{s}` (want a positive %)");
+                        std::process::exit(2);
+                    }
+                },
+                None => 20.0,
+            };
+            match run_bench_compare(old_path, new_path, tol_pct) {
+                Ok(true) => {}
+                Ok(false) => std::process::exit(1),
+                Err(e) => {
+                    eprintln!("bench-compare: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
         Some("lint-invariants") => {
             let root = args.get(1).map(PathBuf::from).unwrap_or_else(default_root);
             match run_lints(&root) {
@@ -623,7 +903,10 @@ fn main() {
             }
         }
         _ => {
-            eprintln!("usage: cargo xtask lint-invariants [src-root]");
+            eprintln!(
+                "usage: cargo xtask <lint-invariants [src-root] | \
+                 bench-compare OLD.json NEW.json [tolerance-pct]>"
+            );
             std::process::exit(2);
         }
     }
@@ -1004,6 +1287,107 @@ fn execute(job: Job, slot: &mut BandSlot) {
 }
 ";
         assert!(check_panic_boundary("serve/scheduler.rs", allowed).is_empty());
+    }
+
+    // ---- telemetry-naming ----
+
+    #[test]
+    fn catches_bad_metric_names_at_registration() {
+        let src = "
+let c = reg.counter(\"badName\");
+let h = reg.histogram(\"queue_wait\");
+";
+        let v = check_telemetry_naming("serve/obs.rs", src);
+        assert_eq!(v.len(), 2, "{v:?}");
+        assert!(v.iter().all(|x| x.rule == "telemetry-naming"));
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn lawful_and_dynamic_metric_names_pass() {
+        let src = "
+let c = reg.counter(\"events_in_total\");
+let h = registry.histogram(\"stage_route_us\");
+push_gauge(&mut out, \"resident_bytes\", v);
+render_histogram(&mut out, \"session_queue_wait_us\", &labels, &h);
+let dynamic = reg.counter(name);
+";
+        assert!(check_telemetry_naming("serve/obs.rs", src).is_empty());
+    }
+
+    #[test]
+    fn catches_bare_println_in_session_stack() {
+        let src = "println!(\"jobs: {}\", n);\n";
+        assert_eq!(check_telemetry_naming("serve/session.rs", src).len(), 1);
+        assert_eq!(check_telemetry_naming("coordinator/pipeline.rs", src).len(), 1);
+        // eprintln! is operator diagnostics, not a telemetry surface.
+        assert!(check_telemetry_naming("serve/session.rs", "eprintln!(\"x\");\n").is_empty());
+        // Outside the session stack stdout is fine (bench harness, CLI).
+        assert!(check_telemetry_naming("util/bench.rs", src).is_empty());
+    }
+
+    #[test]
+    fn telemetry_naming_suppression_works() {
+        let allowed = "
+// lint-invariants: allow(telemetry-naming)
+let c = reg.counter(\"WeirdLegacyName\");
+";
+        assert!(check_telemetry_naming("serve/obs.rs", allowed).is_empty());
+    }
+
+    // ---- bench-compare ----
+
+    const OLD_JSON: &str = r#"{
+  "benchmarks": [
+    {"name": "serve_fleet", "mean_ns": 1000.0, "meps": 8.0, "queue_wait_p99_us": 50.0, "iters": 10},
+    {"name": "wire", "mean_ns": 2000.0, "meps": 4.0}
+  ]
+}"#;
+
+    #[test]
+    fn parses_the_dump_json_shape() {
+        let rows = parse_bench_json(OLD_JSON).expect("parse");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "serve_fleet");
+        assert!(rows[0]
+            .values
+            .iter()
+            .any(|(k, v)| k == "queue_wait_p99_us" && *v == 50.0));
+        assert!(rows[1].values.iter().any(|(k, v)| k == "meps" && *v == 4.0));
+    }
+
+    #[test]
+    fn flags_latency_and_throughput_regressions() {
+        let new = r#"{"benchmarks": [
+  {"name": "serve_fleet", "mean_ns": 1300.0, "meps": 8.1, "queue_wait_p99_us": 49.0, "iters": 10},
+  {"name": "wire", "mean_ns": 2100.0, "meps": 3.0}
+]}"#;
+        let (report, regressions) = bench_compare(
+            &parse_bench_json(OLD_JSON).unwrap(),
+            &parse_bench_json(new).unwrap(),
+            0.20,
+        );
+        // mean_ns 1000→1300 (+30%) and meps 4.0→3.0 (−25%) regress;
+        // everything else sits inside the 20% band.
+        assert_eq!(regressions.len(), 2, "{regressions:?}");
+        assert!(regressions[0].contains("serve_fleet mean_ns"));
+        assert!(regressions[1].contains("wire meps"));
+        assert!(report.len() >= regressions.len());
+    }
+
+    #[test]
+    fn within_tolerance_informational_and_missing_rows_pass() {
+        let new = r#"{"benchmarks": [
+  {"name": "serve_fleet", "mean_ns": 1100.0, "meps": 7.0, "queue_wait_p99_us": 55.0, "iters": 99999}
+]}"#;
+        let (report, regressions) = bench_compare(
+            &parse_bench_json(OLD_JSON).unwrap(),
+            &parse_bench_json(new).unwrap(),
+            0.20,
+        );
+        assert!(regressions.is_empty(), "{regressions:?}");
+        // A benchmark dropped from the new run is reported, not failed.
+        assert!(report.iter().any(|l| l.contains("wire: benchmark missing")));
     }
 
     // ---- whole-tree gate ----
